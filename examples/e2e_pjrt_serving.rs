@@ -1,0 +1,136 @@
+//! END-TO-END THREE-LAYER DRIVER — proves all layers compose on a real
+//! workload:
+//!
+//!   L1 Pallas COO-SpMV kernel  →  L2 JAX PPR step  →  `make artifacts`
+//!   (HLO text)  →  L3 rust: PJRT load/compile  →  serving coordinator
+//!   with dynamic batching  →  batched recommendation queries  →
+//!   latency/throughput report + numeric cross-check vs the native
+//!   bit-accurate engine.
+//!
+//! Requires `make artifacts` (skips politely otherwise).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_pjrt_serving
+//! ```
+
+use ppr_spmv::config::RunConfig;
+use ppr_spmv::coordinator::engine::{PjrtEngineAdapter, ThreadBoundEngine};
+use ppr_spmv::coordinator::{PprEngine, Server, ServerConfig};
+use ppr_spmv::graph::generators;
+use ppr_spmv::ppr::PreparedGraph;
+use ppr_spmv::runtime::{Manifest, PjrtPprEngine, Runtime};
+use ppr_spmv::util::{rng::Xoshiro256, Stopwatch};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("artifacts/manifest.txt missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let manifest = Manifest::load(&dir).expect("manifest parses");
+    let spec = manifest.find("26b").expect("26b artifact").clone();
+    println!(
+        "artifact: {} (V={} E={} κ={} Q1.{})",
+        spec.file, spec.vertices, spec.edges, spec.kappa, spec.frac_bits
+    );
+
+    // a product-graph exactly matching the artifact's static |V|
+    let graph = generators::holme_kim(spec.vertices, 3, 0.4, 0xE2E);
+    let pg = Arc::new(PreparedGraph::new(&graph, 8));
+    println!(
+        "graph: |V|={} |E|={} → {} stream slots (artifact capacity {})",
+        graph.num_vertices,
+        graph.num_edges(),
+        pg.sched.num_slots(),
+        spec.edges
+    );
+
+    let cfg = RunConfig {
+        kappa: spec.kappa,
+        iterations: 10,
+        alpha: manifest.alpha,
+        ..Default::default()
+    };
+
+    // L3: PJRT engines are thread-affine → pin each to its own thread
+    let workers = 2;
+    let engines: Vec<Box<dyn PprEngine>> = (0..workers)
+        .map(|_| {
+            let dir = dir.clone();
+            let spec = spec.clone();
+            let pg = pg.clone();
+            let cfg = cfg.clone();
+            let nv = graph.num_vertices;
+            Box::new(
+                ThreadBoundEngine::spawn(move || {
+                    let rt = Runtime::cpu()?;
+                    println!("  worker PJRT client up ({})", rt.platform());
+                    let engine = PjrtPprEngine::load_spec(&rt, Path::new(&dir), &spec, &pg)?;
+                    Ok(Box::new(PjrtEngineAdapter::new(engine, &cfg, nv)) as Box<_>)
+                })
+                .expect("engine thread"),
+            ) as Box<dyn PprEngine>
+        })
+        .collect();
+
+    let server = Server::start(
+        engines,
+        ServerConfig { batch_timeout: Duration::from_millis(10), default_top_n: 10 },
+    );
+    println!("serving via PJRT with {workers} workers, κ={} dynamic batching\n", spec.kappa);
+
+    // real small workload: 64 batched recommendation queries
+    let dangling = graph.dangling();
+    let candidates: Vec<u32> =
+        (0..graph.num_vertices as u32).filter(|&v| !dangling[v as usize]).collect();
+    let mut rng = Xoshiro256::seeded(1);
+    let sw = Stopwatch::start();
+    let receivers: Vec<_> = (0..64)
+        .map(|_| {
+            let v = candidates[rng.next_index(candidates.len())];
+            (v, server.submit(v, 10))
+        })
+        .collect();
+    let mut responses = Vec::new();
+    for (v, rx) in receivers {
+        let resp = rx.recv().expect("server alive").expect("query succeeds");
+        assert_eq!(resp.ranking[0].vertex, v, "personalization vertex ranks first");
+        responses.push(resp);
+    }
+    let secs = sw.seconds();
+    let snap = server.stats().snapshot();
+    println!("completed {} queries in {:.3}s = {:.1} req/s", responses.len(), secs, 64.0 / secs);
+    println!(
+        "latency p50/p95/p99 = {:.1}/{:.1}/{:.1} ms | batches {} | mean fill {:.2}",
+        snap.latency_p50_ms, snap.latency_p95_ms, snap.latency_p99_ms, snap.batches,
+        snap.mean_batch_fill
+    );
+
+    // numeric cross-check: the PJRT path must agree with the native
+    // bit-accurate engine on a fresh query's full top-10
+    let probe = candidates[0];
+    let pjrt_resp = server.query(probe, 10).expect("probe query");
+    let d = ppr_spmv::spmv::datapath::FixedPath::paper(spec.frac_bits + 1);
+    let mut native = ppr_spmv::ppr::BatchedPpr::new(d, pg, spec.kappa, manifest.alpha);
+    let batch = ppr_spmv::ppr::batch_requests(&[probe], spec.kappa).remove(0);
+    let out = native.run(
+        &batch,
+        &ppr_spmv::ppr::PprConfig {
+            alpha: manifest.alpha,
+            max_iterations: 10,
+            convergence_threshold: None,
+        },
+    );
+    let native_scores: Vec<f64> =
+        out.lane(0, spec.kappa).iter().map(|&w| d.fmt.to_f64(w)).collect();
+    let native_top = ppr_spmv::metrics::top_n_indices_f64(&native_scores, 10);
+    let pjrt_top: Vec<usize> = pjrt_resp.ranking.iter().map(|r| r.vertex as usize).collect();
+    assert_eq!(pjrt_top, native_top, "PJRT and native engines must agree bit-exactly");
+    println!("\ncross-check vs native engine: top-10 identical ✓  ({pjrt_top:?})");
+
+    server.shutdown();
+    println!("e2e OK — all three layers compose");
+}

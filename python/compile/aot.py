@@ -1,0 +1,90 @@
+"""AOT compile path: lower the L2 PPR step to HLO **text** artifacts the
+Rust runtime loads via the PJRT C API.
+
+HLO text — not ``lowered.compile()`` output nor a serialized
+HloModuleProto — is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids that the published xla crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (normally via ``make artifacts``):
+
+    python -m compile.aot --out-dir ../artifacts \
+        [--vertices 2048] [--edges 16384] [--kappa 8] [--alpha 0.85]
+
+Writes one ``ppr_step_<label>_v<V>_e<E>_k<K>.hlo.txt`` per precision in
+{20b, 22b, 24b, 26b, f32} plus a ``manifest.txt`` index (one line per
+artifact: label path vertices edges kappa frac_bits dtype).
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+PRECISIONS = ["20b", "22b", "24b", "26b", "f32"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(precision: str, vertices: int, edges: int, kappa: int,
+               alpha: float, block_e: int, aggregation: str = "scatter") -> str:
+    fn, args = model.make_step(precision, vertices, edges, kappa,
+                               alpha=alpha, block_e=block_e, aggregation=aggregation)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--vertices", type=int, default=2048)
+    ap.add_argument("--edges", type=int, default=16384,
+                    help="padded edge-stream length (multiple of block-e)")
+    ap.add_argument("--kappa", type=int, default=8)
+    ap.add_argument("--alpha", type=float, default=0.85)
+    ap.add_argument("--block-e", type=int, default=256)
+    ap.add_argument("--precisions", nargs="*", default=PRECISIONS)
+    ap.add_argument("--aggregation", default="scatter", choices=["scatter", "onehot"],
+                    help="scatter: CPU-PJRT-efficient (default); onehot: MXU-shaped")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+    for prec in args.precisions:
+        name = f"ppr_step_{prec}_v{args.vertices}_e{args.edges}_k{args.kappa}"
+        path = os.path.join(args.out_dir, name + ".hlo.txt")
+        text = lower_step(prec, args.vertices, args.edges, args.kappa,
+                          args.alpha, args.block_e, args.aggregation)
+        with open(path, "w") as f:
+            f.write(text)
+        frac_bits = 0 if prec == "f32" else int(prec.rstrip("b")) - 1
+        dtype = "f32" if prec == "f32" else "s64"
+        manifest_lines.append(
+            f"{prec} {name}.hlo.txt {args.vertices} {args.edges} "
+            f"{args.kappa} {frac_bits} {dtype}"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write(f"# ppr_step artifacts: label file vertices edges kappa frac_bits dtype\n")
+        f.write(f"alpha {args.alpha}\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

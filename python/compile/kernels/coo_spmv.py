@@ -1,0 +1,146 @@
+"""L1 — the paper's streaming COO SpMV hot loop as a Pallas kernel.
+
+TPU adaptation of the FPGA design (DESIGN.md §Hardware-Adaptation):
+
+- The PPR matrices stay **VMEM-resident** (BlockSpec index_map pinned to
+  block 0 for the whole grid) — the URAM of the paper.
+- The COO stream is tiled HBM→VMEM in packets of ``block_e`` edges via the
+  grid — the paper's 256-bit DRAM bursts.
+- The B aggregator cores' comparison network ``(x[0]+b1) == x[b2]`` is
+  exactly a one-hot product, so aggregation becomes a **one-hot matmul**
+  (V×B) @ (B×κ) that maps onto the MXU systolic array.
+- Fixed-point arithmetic is bit-accurate vs. the Rust engine: int
+  storage, wide products, arithmetic-shift-right truncation (the paper's
+  truncate-toward-zero quantizer; all PPR values are non-negative).
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that the Rust runtime
+loads and runs (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _aggregate(o_ref, x, dp, *, num_vertices: int, aggregation: str):
+    """Stage 3+4: combine the packet's per-edge contributions into the
+    VMEM-resident output, by destination vertex.
+
+    - ``"onehot"`` — the TPU/MXU-shaped form: the paper's B×B comparator
+      network ``(x[0]+b1) == x[b2]`` *is* a one-hot product, so the
+      aggregation becomes a (V×B)·(B×K) matmul that maps onto the MXU
+      systolic array. Preferred on real TPU hardware.
+    - ``"scatter"`` — index-add form: O(B·K) work instead of O(V·B·K).
+      ~100× faster under interpret-mode/CPU-PJRT execution (the serving
+      path of this repo) and bit-identical; artifacts default to it.
+    """
+    if aggregation == "onehot":
+        iota = jax.lax.broadcasted_iota(jnp.int32, (num_vertices, x.shape[0]), 0)
+        onehot = (iota == x[None, :]).astype(dp.dtype)  # (V, B)
+        o_ref[...] += onehot @ dp
+    elif aggregation == "scatter":
+        o_ref[...] = o_ref[...].at[x, :].add(dp)
+    else:
+        raise ValueError(f"unknown aggregation {aggregation!r}")
+
+
+def _fixed_kernel(x_ref, y_ref, val_ref, p_ref, o_ref, *, frac_bits: int,
+                  num_vertices: int, aggregation: str):
+    """One grid step: process one packet of edges, accumulate into o_ref."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (B,)  destination ids
+    y = y_ref[...]  # (B,)  source ids
+    val = val_ref[...]  # (B,)  fixed-point words
+    p = p_ref[...]  # (V, K) fixed-point words
+
+    # Stage 2 (scatter): dp[j, k] = (val[j] * P[y[j], k]) >> frac
+    # — per-product truncation, exactly the hardware dp_buffer.
+    gathered = p[y, :]  # (B, K)
+    dp = jax.lax.shift_right_logical(val[:, None] * gathered, frac_bits)
+
+    _aggregate(o_ref, x, dp, num_vertices=num_vertices, aggregation=aggregation)
+
+
+def _float_kernel(x_ref, y_ref, val_ref, p_ref, o_ref, *, num_vertices: int,
+                  aggregation: str):
+    """F32 variant of the same pipeline (the paper's baseline design)."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    y = y_ref[...]
+    val = val_ref[...]
+    p = p_ref[...]
+    dp = val[:, None] * p[y, :]
+    _aggregate(o_ref, x, dp, num_vertices=num_vertices, aggregation=aggregation)
+
+
+def coo_spmv_fixed(x, y, val, p, *, frac_bits: int, block_e: int = 256,
+                   aggregation: str = "scatter"):
+    """Fixed-point streaming SpMV: ``out[v,k] = Σ_e trunc(val_e · p[y_e,k])``.
+
+    Args:
+      x: (E,) int32 destination ids, destination-sorted, E % block_e == 0
+      y: (E,) int32 source ids
+      val: (E,) int64 fixed-point transition probabilities (Q1.frac_bits)
+      p: (V, K) int64 fixed-point PPR matrix
+      frac_bits: fractional bits of the format
+      block_e: edges per packet (grid step)
+
+    Returns:
+      (V, K) int64 fixed-point result.
+    """
+    e = x.shape[0]
+    v, k = p.shape
+    assert e % block_e == 0, f"edge stream length {e} must be padded to {block_e}"
+    grid = (e // block_e,)
+    kernel = functools.partial(_fixed_kernel, frac_bits=frac_bits, num_vertices=v,
+                               aggregation=aggregation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((v, k), lambda i: (0, 0)),  # VMEM-resident P_t
+        ],
+        out_specs=pl.BlockSpec((v, k), lambda i: (0, 0)),  # VMEM-resident P_{t+1}
+        out_shape=jax.ShapeDtypeStruct((v, k), p.dtype),
+        interpret=True,
+    )(x, y, val, p)
+
+
+def coo_spmv_float(x, y, val, p, *, block_e: int = 256, aggregation: str = "scatter"):
+    """F32 streaming SpMV with the same packet structure."""
+    e = x.shape[0]
+    v, k = p.shape
+    assert e % block_e == 0
+    grid = (e // block_e,)
+    kernel = functools.partial(_float_kernel, num_vertices=v, aggregation=aggregation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((v, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((v, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, k), p.dtype),
+        interpret=True,
+    )(x, y, val, p)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels: same arithmetic, no pipeline
+structure. The pytest suite asserts the kernels match these bit-exactly
+(fixed) / to f32 tolerance (float)."""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def coo_spmv_fixed_ref(x, y, val, p, *, frac_bits: int):
+    """Segment-sum of per-edge truncated products (bit-exact oracle)."""
+    dp = jax.lax.shift_right_logical(val[:, None].astype(jnp.int64) * p[y, :], frac_bits)
+    return jnp.zeros_like(p).at[x].add(dp)
+
+
+def coo_spmv_float_ref(x, y, val, p):
+    """f32 oracle."""
+    dp = val[:, None] * p[y, :]
+    return jnp.zeros_like(p).at[x].add(dp)
+
+
+def quantize(x, frac_bits: int):
+    """Truncate-toward-zero quantizer (the paper's policy) to int64 words."""
+    scaled = jnp.floor(jnp.asarray(x, jnp.float64) * (1 << frac_bits))
+    return jnp.clip(scaled, 0, None).astype(jnp.int64)
+
+
+def quantize_scalar(x: float, frac_bits: int) -> int:
+    """Python-level quantizer for trace-time constants (α and friends):
+    jnp ops are staged inside jit traces, so synthesis constants must be
+    computed with plain Python arithmetic."""
+    import math
+
+    return max(0, int(math.floor(float(x) * (1 << frac_bits))))
+
+
+def dequantize(w, frac_bits: int):
+    """Fixed words back to f64 values."""
+    return jnp.asarray(w, jnp.float64) / (1 << frac_bits)
+
+
+def ppr_step_fixed_ref(x, y, val, p, dangling, pers, *, frac_bits: int, alpha: float):
+    """One full PPR iteration (Eq. 1) in fixed point, oracle form."""
+    v = p.shape[0]
+    alpha_w = quantize(alpha, frac_bits)
+    one_minus_alpha_w = quantize(1.0 - alpha, frac_bits)
+    alpha_over_v_w = quantize(alpha / v, frac_bits)
+    dangling_sum = (dangling[:, None] * p).sum(axis=0)  # (K,)
+    scaling = jax.lax.shift_right_logical(alpha_over_v_w * dangling_sum, frac_bits)
+    spmv = coo_spmv_fixed_ref(x, y, val, p, frac_bits=frac_bits)
+    damped = jax.lax.shift_right_logical(alpha_w * spmv, frac_bits)
+    return damped + scaling[None, :] + pers * one_minus_alpha_w
+
+
+def ppr_step_float_ref(x, y, val, p, dangling, pers, *, alpha: float):
+    """One full PPR iteration in f32, oracle form."""
+    v = p.shape[0]
+    dangling_sum = (dangling[:, None] * p).sum(axis=0)
+    scaling = jnp.float32(alpha / v) * dangling_sum
+    spmv = coo_spmv_float_ref(x, y, val, p)
+    return jnp.float32(alpha) * spmv + scaling[None, :] + pers * jnp.float32(1.0 - alpha)

@@ -1,0 +1,93 @@
+"""L2 — one full Personalized PageRank iteration (Eq. 1 of the paper) in
+JAX, calling the L1 Pallas kernel for the SpMV term. This is the compute
+graph that `aot.py` lowers to HLO text; the Rust coordinator drives the
+iteration loop (so convergence / early-exit policy stays in L3, and the
+HLO stays small and fusible).
+
+Fixed-point variants are bit-accurate against the Rust engine
+(`rust/src/ppr/batched.rs`): int64 words, per-product truncation in the
+SpMV, one truncation per α-damping and per scaling multiply.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import coo_spmv
+from .kernels.ref import quantize_scalar
+
+jax.config.update("jax_enable_x64", True)
+
+
+def ppr_step_fixed(x, y, val, p, dangling, pers, *, frac_bits: int, alpha: float,
+                   block_e: int = 256, aggregation: str = "scatter"):
+    """One fixed-point PPR iteration.
+
+    Args:
+      x, y: (E,) int32 destination/source ids (destination-sorted stream)
+      val: (E,) int64 fixed words of 1/outdeg(y)
+      p: (V, K) int64 current PPR matrix
+      dangling: (V,) int64 0/1 dangling bitmap
+      pers: (V, K) int64 0/1 personalization indicator V̄
+      frac_bits: fractional bits of the Q1.f format
+      alpha: damping factor (quantized at trace time — a synthesis constant)
+
+    Returns:
+      (V, K) int64 next PPR matrix.
+    """
+    v = p.shape[0]
+    alpha_w = quantize_scalar(alpha, frac_bits)
+    one_minus_alpha_w = quantize_scalar(1.0 - alpha, frac_bits)
+    alpha_over_v_w = quantize_scalar(alpha / v, frac_bits)
+
+    # scaling vector: (α/|V|)·(d̄·P) per lane (Alg. 1 line 6)
+    dangling_sum = (dangling[:, None] * p).sum(axis=0)  # (K,)
+    scaling = jax.lax.shift_right_logical(alpha_over_v_w * dangling_sum, frac_bits)
+
+    # SpMV on the streaming kernel (Alg. 2)
+    spmv = coo_spmv.coo_spmv_fixed(x, y, val, p, frac_bits=frac_bits, block_e=block_e,
+                                   aggregation=aggregation)
+
+    # P ← α·spmv + scaling + (1−α)·V̄
+    damped = jax.lax.shift_right_logical(alpha_w * spmv, frac_bits)
+    return damped + scaling[None, :] + pers * one_minus_alpha_w
+
+
+def ppr_step_float(x, y, val, p, dangling, pers, *, alpha: float, block_e: int = 256,
+                   aggregation: str = "scatter"):
+    """One f32 PPR iteration (the paper's F32 FPGA architecture)."""
+    v = p.shape[0]
+    dangling_sum = (dangling[:, None] * p).sum(axis=0)
+    scaling = jnp.float32(alpha / v) * dangling_sum
+    spmv = coo_spmv.coo_spmv_float(x, y, val, p, block_e=block_e, aggregation=aggregation)
+    return jnp.float32(alpha) * spmv + scaling[None, :] + pers * jnp.float32(1.0 - alpha)
+
+
+def make_step(precision: str, num_vertices: int, num_edges: int, kappa: int,
+              alpha: float = 0.85, block_e: int = 256, aggregation: str = "scatter"):
+    """Build (fn, example_args) for a given precision label ('20b'..'26b'
+    or 'f32') and static shapes, ready for `jax.jit(fn).lower(*args)`."""
+    if num_edges % block_e != 0:
+        raise ValueError(f"num_edges={num_edges} must be a multiple of block_e={block_e}")
+    i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    if precision == "f32":
+        f32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float32)
+        fn = functools.partial(ppr_step_float, alpha=alpha, block_e=block_e,
+                               aggregation=aggregation)
+        args = (
+            i32((num_edges,)), i32((num_edges,)), f32((num_edges,)),
+            f32((num_vertices, kappa)), f32((num_vertices,)),
+            f32((num_vertices, kappa)),
+        )
+    else:
+        bits = int(precision.rstrip("b"))
+        i64 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int64)
+        fn = functools.partial(ppr_step_fixed, frac_bits=bits - 1, alpha=alpha,
+                               block_e=block_e, aggregation=aggregation)
+        args = (
+            i32((num_edges,)), i32((num_edges,)), i64((num_edges,)),
+            i64((num_vertices, kappa)), i64((num_vertices,)),
+            i64((num_vertices, kappa)),
+        )
+    return fn, args

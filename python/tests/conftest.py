@@ -1,0 +1,43 @@
+"""Shared fixtures: deterministic COO test graphs shaped like the
+transition matrices the Rust layer produces (destination-sorted, values
+1/outdeg, zero-padded streams)."""
+
+import numpy as np
+import pytest
+
+
+def make_graph(v: int, e: int, seed: int, block_e: int):
+    """Random simple directed graph as a padded, destination-sorted COO
+    transition stream. Returns (x, y, val_f64, dangling, edges) with the
+    stream padded to a multiple of block_e by zero-valued entries."""
+    rng = np.random.default_rng(seed)
+    edges = set()
+    guard = 0
+    while len(edges) < e and guard < 50 * e:
+        guard += 1
+        s = int(rng.integers(0, v))
+        d = int(rng.integers(0, v))
+        if s != d:
+            edges.add((s, d))
+    edges = sorted(edges)
+    outdeg = np.zeros(v, dtype=np.int64)
+    for s, _ in edges:
+        outdeg[s] += 1
+    entries = sorted((d, s) for s, d in edges)  # sort by destination
+    x = np.array([d for d, _ in entries], dtype=np.int32)
+    y = np.array([s for _, s in entries], dtype=np.int32)
+    val = np.array([1.0 / outdeg[s] for _, s in entries], dtype=np.float64)
+    dangling = (outdeg == 0).astype(np.int64)
+    # pad stream
+    pad = (-len(x)) % block_e
+    if pad:
+        last = x[-1] if len(x) else 0
+        x = np.concatenate([x, np.full(pad, last, np.int32)])
+        y = np.concatenate([y, np.zeros(pad, np.int32)])
+        val = np.concatenate([val, np.zeros(pad, np.float64)])
+    return x, y, val, dangling, edges
+
+
+@pytest.fixture
+def small_graph():
+    return make_graph(64, 400, seed=7, block_e=64)

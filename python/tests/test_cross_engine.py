@@ -1,0 +1,74 @@
+"""Cross-engine bit-exactness fixtures.
+
+Runs the JAX/Pallas fixed-point PPR for several iterations on a small
+deterministic graph and writes the graph + expected raw words to
+``artifacts/fixtures/``. The Rust integration test
+(`rust/tests/cross_engine.rs`) loads the same graph, runs the native
+`BatchedPpr` engine with identical parameters, and asserts **bit-identical**
+scores — the strongest possible evidence that the L1 kernel and the L3
+native engine implement the same datapath.
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+from .conftest import make_graph
+
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "fixtures")
+V, K, ITERS, ALPHA, BLOCK = 96, 4, 6, 0.85, 64
+PERS = [3, 17, 42, 80]
+BITS = [20, 22, 24, 26]
+SEED = 20260710
+
+
+def run_fixed_ppr(x, y, val, dangling, frac):
+    valq = jnp.array(ref.quantize(val, frac))
+    pers = np.zeros((V, K), np.int64)
+    pers[PERS, np.arange(K)] = 1
+    p = jnp.array(pers * (1 << frac))
+    for _ in range(ITERS):
+        p = model.ppr_step_fixed(jnp.array(x), jnp.array(y), valq, p,
+                                 jnp.array(dangling), jnp.array(pers),
+                                 frac_bits=frac, alpha=ALPHA, block_e=BLOCK)
+    return np.array(p)
+
+
+def test_write_cross_engine_fixtures():
+    os.makedirs(FIXTURE_DIR, exist_ok=True)
+    x, y, val, dangling, edges = make_graph(V, 500, seed=SEED, block_e=BLOCK)
+
+    # graph as an edge list with explicit |V| (the Rust test constructs
+    # Graph::new(V, edges) directly, preserving vertex ids verbatim)
+    with open(os.path.join(FIXTURE_DIR, "graph.txt"), "w") as f:
+        f.write(f"# cross-engine fixture\n# vertices {V}\n")
+        for s, d in edges:
+            f.write(f"{s}\t{d}\n")
+
+    # run parameters
+    with open(os.path.join(FIXTURE_DIR, "params.txt"), "w") as f:
+        f.write(f"vertices {V}\nkappa {K}\niterations {ITERS}\nalpha {ALPHA}\n")
+        f.write("personalization " + " ".join(map(str, PERS)) + "\n")
+        f.write("bits " + " ".join(map(str, BITS)) + "\n")
+
+    for bits in BITS:
+        scores = run_fixed_ppr(x, y, val, dangling, frac=bits - 1)
+        path = os.path.join(FIXTURE_DIR, f"expected_{bits}b.txt")
+        with open(path, "w") as f:
+            f.write(f"# raw Q1.{bits-1} words, rows=vertices, cols=lanes\n")
+            for v in range(V):
+                f.write(" ".join(str(int(w)) for w in scores[v]) + "\n")
+        # sanity: personalization vertices hold the largest lane scores
+        for lane, pv in enumerate(PERS):
+            assert scores[:, lane].argmax() == pv
+
+
+def test_fixtures_are_deterministic():
+    # generating twice produces identical streams (seeded)
+    a = make_graph(V, 500, seed=SEED, block_e=BLOCK)
+    b = make_graph(V, 500, seed=SEED, block_e=BLOCK)
+    for xa, xb in zip(a[:4], b[:4]):
+        np.testing.assert_array_equal(xa, xb)

@@ -1,0 +1,125 @@
+"""L1 correctness: the Pallas streaming kernel vs. the pure-jnp oracle.
+Fixed-point must match **bit-exactly** (integer arithmetic); float to f32
+tolerance. Hypothesis sweeps shapes, widths and graph structure."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import coo_spmv, ref
+from .conftest import make_graph
+
+
+def quantize_np(a, frac):
+    return np.clip(np.floor(np.asarray(a, np.float64) * (1 << frac)), 0, None).astype(np.int64)
+
+
+def run_fixed(x, y, val_f, p_f, frac, block_e):
+    val = jnp.array(quantize_np(val_f, frac))
+    p = jnp.array(quantize_np(p_f, frac))
+    out_k = coo_spmv.coo_spmv_fixed(jnp.array(x), jnp.array(y), val, p,
+                                    frac_bits=frac, block_e=block_e)
+    out_r = ref.coo_spmv_fixed_ref(jnp.array(x), jnp.array(y), val, p, frac_bits=frac)
+    return np.array(out_k), np.array(out_r)
+
+
+def test_fixed_kernel_bit_exact(small_graph):
+    x, y, val, _, _ = small_graph
+    rng = np.random.default_rng(1)
+    p = rng.random((64, 4))
+    got, want = run_fixed(x, y, val, p, frac=25, block_e=64)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_float_kernel_close(small_graph):
+    x, y, val, _, _ = small_graph
+    rng = np.random.default_rng(2)
+    p = jnp.array(rng.random((64, 4)), jnp.float32)
+    v32 = jnp.array(val, jnp.float32)
+    out_k = coo_spmv.coo_spmv_float(jnp.array(x), jnp.array(y), v32, p, block_e=64)
+    out_r = ref.coo_spmv_float_ref(jnp.array(x), jnp.array(y), v32, p)
+    np.testing.assert_allclose(np.array(out_k), np.array(out_r), rtol=1e-5, atol=1e-6)
+
+
+def test_zero_value_padding_contributes_nothing():
+    # a stream that is entirely padding must produce zeros
+    x = np.zeros(128, np.int32)
+    y = np.zeros(128, np.int32)
+    val = np.zeros(128, np.float64)
+    p = np.full((16, 2), 0.5)
+    got, want = run_fixed(x, y, val, p, frac=19, block_e=64)
+    assert (got == 0).all() and (want == 0).all()
+
+
+def test_single_block_grid():
+    x, y, val, _, _ = make_graph(32, 100, seed=3, block_e=256)
+    rng = np.random.default_rng(4)
+    got, want = run_fixed(x, y, val, rng.random((32, 1)), frac=21, block_e=256)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    v=st.integers(8, 96),
+    e=st.integers(16, 300),
+    k=st.integers(1, 8),
+    frac=st.integers(15, 25),
+    seed=st.integers(0, 2**31),
+    block_e=st.sampled_from([32, 64, 128]),
+)
+def test_fixed_kernel_property(v, e, k, frac, seed, block_e):
+    x, y, val, _, _ = make_graph(v, e, seed=seed, block_e=block_e)
+    rng = np.random.default_rng(seed ^ 0xABCD)
+    p = rng.random((v, k))
+    got, want = run_fixed(x, y, val, p, frac=frac, block_e=block_e)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    v=st.integers(8, 64),
+    e=st.integers(16, 200),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_float_kernel_property(v, e, k, seed):
+    x, y, val, _, _ = make_graph(v, e, seed=seed, block_e=64)
+    rng = np.random.default_rng(seed ^ 0x1234)
+    p = jnp.array(rng.random((v, k)), jnp.float32)
+    v32 = jnp.array(val, jnp.float32)
+    out_k = coo_spmv.coo_spmv_float(jnp.array(x), jnp.array(y), v32, p, block_e=64)
+    out_r = ref.coo_spmv_float_ref(jnp.array(x), jnp.array(y), v32, p)
+    np.testing.assert_allclose(np.array(out_k), np.array(out_r), rtol=1e-5, atol=1e-6)
+
+
+def test_unpadded_stream_rejected():
+    with pytest.raises(AssertionError):
+        coo_spmv.coo_spmv_fixed(
+            jnp.zeros(100, jnp.int32), jnp.zeros(100, jnp.int32),
+            jnp.zeros(100, jnp.int64), jnp.zeros((8, 2), jnp.int64),
+            frac_bits=19, block_e=64,
+        )
+
+
+def test_onehot_and_scatter_aggregation_identical():
+    # the MXU-shaped one-hot matmul and the CPU-efficient scatter form
+    # must agree bit-exactly (they sum the same integer contributions)
+    x, y, val, _, _ = make_graph(48, 300, seed=21, block_e=64)
+    rng = np.random.default_rng(22)
+    p = jnp.array(quantize_np(rng.random((48, 3)), 23))
+    v = jnp.array(quantize_np(val, 23))
+    a = coo_spmv.coo_spmv_fixed(jnp.array(x), jnp.array(y), v, p, frac_bits=23,
+                                block_e=64, aggregation="onehot")
+    b = coo_spmv.coo_spmv_fixed(jnp.array(x), jnp.array(y), v, p, frac_bits=23,
+                                block_e=64, aggregation="scatter")
+    np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_bad_aggregation_rejected():
+    x, y, val, _, _ = make_graph(16, 60, seed=23, block_e=64)
+    with pytest.raises(ValueError):
+        coo_spmv.coo_spmv_fixed(
+            jnp.array(x), jnp.array(y), jnp.array(quantize_np(val, 19)),
+            jnp.zeros((16, 2), jnp.int64), frac_bits=19, block_e=64,
+            aggregation="bogus")

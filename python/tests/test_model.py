@@ -1,0 +1,101 @@
+"""L2 correctness: the full PPR step (Eq. 1) against its oracle, plus
+semantic properties (mass conservation, personalization dominance at
+convergence)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from .conftest import make_graph
+
+
+def setup_state(v, k, seed, frac=None):
+    rng = np.random.default_rng(seed)
+    pers_idx = rng.choice(v, size=k, replace=False)
+    pers = np.zeros((v, k), np.int64)
+    pers[pers_idx, np.arange(k)] = 1
+    p0 = np.array(pers)
+    if frac is not None:
+        p0 = p0 * (1 << frac)  # score 1.0 on personalization vertices
+    return pers_idx, pers, p0
+
+
+def test_fixed_step_matches_oracle(small_graph):
+    x, y, val, dangling, _ = small_graph
+    frac = 25
+    _, pers, p0 = setup_state(64, 4, seed=5, frac=frac)
+    valq = jnp.array(ref.quantize(val, frac))
+    args = (jnp.array(x), jnp.array(y), valq, jnp.array(p0),
+            jnp.array(dangling), jnp.array(pers))
+    got = model.ppr_step_fixed(*args, frac_bits=frac, alpha=0.85, block_e=64)
+    want = ref.ppr_step_fixed_ref(*args, frac_bits=frac, alpha=0.85)
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_float_step_matches_oracle(small_graph):
+    x, y, val, dangling, _ = small_graph
+    _, pers, p0 = setup_state(64, 4, seed=6)
+    args = (jnp.array(x), jnp.array(y), jnp.array(val, jnp.float32),
+            jnp.array(p0, jnp.float32), jnp.array(dangling, jnp.float32),
+            jnp.array(pers, jnp.float32))
+    got = model.ppr_step_float(*args, alpha=0.85, block_e=64)
+    want = ref.ppr_step_float_ref(*args, alpha=0.85)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-6)
+
+
+def test_float_iterations_conserve_mass(small_graph):
+    x, y, val, dangling, _ = small_graph
+    _, pers, p0 = setup_state(64, 4, seed=8)
+    p = jnp.array(p0, jnp.float32)
+    args = (jnp.array(x), jnp.array(y), jnp.array(val, jnp.float32))
+    for _ in range(10):
+        p = model.ppr_step_float(*args, p, jnp.array(dangling, jnp.float32),
+                                 jnp.array(pers, jnp.float32), alpha=0.85, block_e=64)
+    total = np.array(p).sum(axis=0)
+    np.testing.assert_allclose(total, np.ones(4), rtol=1e-3)
+
+
+def test_fixed_truncation_only_loses_mass(small_graph):
+    # truncation never rounds up: fixed scores are ≤ the float scores
+    x, y, val, dangling, _ = small_graph
+    frac = 19
+    _, pers, p0 = setup_state(64, 2, seed=9, frac=frac)
+    valq = jnp.array(ref.quantize(val, frac))
+    p = jnp.array(p0)
+    for _ in range(5):
+        p = model.ppr_step_fixed(jnp.array(x), jnp.array(y), valq, p,
+                                 jnp.array(dangling), jnp.array(pers[:, :2]),
+                                 frac_bits=frac, alpha=0.85, block_e=64)
+    fixed_total = np.array(p).sum(axis=0) / (1 << frac)
+    assert (fixed_total <= 1.0 + 1e-9).all()
+    assert (fixed_total > 0.8).all()  # but not collapsing
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    v=st.integers(16, 80),
+    e=st.integers(40, 240),
+    k=st.integers(1, 6),
+    frac=st.integers(17, 25),
+    seed=st.integers(0, 2**31),
+)
+def test_fixed_step_property(v, e, k, frac, seed):
+    x, y, val, dangling, _ = make_graph(v, e, seed=seed, block_e=64)
+    _, pers, p0 = setup_state(v, k, seed=seed ^ 0x55, frac=frac)
+    valq = jnp.array(ref.quantize(val, frac))
+    args = (jnp.array(x), jnp.array(y), valq, jnp.array(p0),
+            jnp.array(dangling), jnp.array(pers))
+    got = model.ppr_step_fixed(*args, frac_bits=frac, alpha=0.85, block_e=64)
+    want = ref.ppr_step_fixed_ref(*args, frac_bits=frac, alpha=0.85)
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_make_step_shapes():
+    fn, args = model.make_step("26b", 256, 512, 8, block_e=256)
+    assert args[0].shape == (512,)
+    assert args[3].shape == (256, 8)
+    assert args[3].dtype == jnp.int64
+    fn, args = model.make_step("f32", 256, 512, 8, block_e=256)
+    assert args[3].dtype == jnp.float32

@@ -1,0 +1,14 @@
+//! `cargo bench --bench energy_efficiency [-- --full]`
+//! Regenerates the \u{a7}5.2 energy analysis: Performance/Watt of the FPGA
+//! designs vs the 230 W CPU baseline (paper: 16.5-42x, geomean 28.2x;
+//! fixed ~5x over the F32 design; F32 design 2.5-5x over CPU).
+
+use ppr_spmv::bench_harness::{energy, ExpOptions};
+use ppr_spmv::util::Stopwatch;
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    let sw = Stopwatch::start();
+    energy::run(&opts);
+    println!("[energy completed in {:.2}s]", sw.seconds());
+}

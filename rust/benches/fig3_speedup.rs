@@ -1,0 +1,15 @@
+//! `cargo bench --bench fig3_speedup [-- --full]`
+//! Regenerates Fig. 3: measured CPU baseline vs modelled FPGA times per
+//! bit-width and graph. Shape targets (paper): fixed-point FPGA beats the
+//! CPU by up to ~6.5x on 1e6-edge graphs / 6.8x on Amazon; the F32 FPGA
+//! design is several times slower than fixed point.
+
+use ppr_spmv::bench_harness::{fig3_speedup, ExpOptions};
+use ppr_spmv::util::Stopwatch;
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    let sw = Stopwatch::start();
+    fig3_speedup::run(&opts);
+    println!("[fig3 completed in {:.2}s]", sw.seconds());
+}

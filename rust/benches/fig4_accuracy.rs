@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig4_accuracy [-- --full]`
+//! Regenerates Fig. 4: #errors / edit distance / NDCG at top-10/20/50 vs
+//! bit-width on the 2e6-edge graphs, against the converged f64 oracle.
+
+use ppr_spmv::bench_harness::{fig4_accuracy, ExpOptions};
+use ppr_spmv::util::Stopwatch;
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    let sw = Stopwatch::start();
+    fig4_accuracy::run(&opts);
+    println!("[fig4 completed in {:.2}s]", sw.seconds());
+}

@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig5_aggregated [-- --full]`
+//! Regenerates Fig. 5: MAE, Precision@10/20/50 and Kendall's tau
+//! aggregated over all 8 graphs, per bit-width.
+
+use ppr_spmv::bench_harness::{fig5_aggregated, ExpOptions};
+use ppr_spmv::util::Stopwatch;
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    let sw = Stopwatch::start();
+    fig5_aggregated::run(&opts);
+    println!("[fig5 completed in {:.2}s]", sw.seconds());
+}

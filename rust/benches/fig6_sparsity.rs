@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig6_sparsity [-- --full]`
+//! Regenerates Fig. 6: top-50 precision vs sparsity (ER sweep) and vs
+//! iteration count, per bit-width.
+
+use ppr_spmv::bench_harness::{fig6_sparsity, ExpOptions};
+use ppr_spmv::util::Stopwatch;
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    let sw = Stopwatch::start();
+    fig6_sparsity::run(&opts);
+    println!("[fig6 completed in {:.2}s]", sw.seconds());
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig7_convergence [-- --full]`
+//! Regenerates Fig. 7: per-iteration update norms fixed vs float, the
+//! iterations-to-1e-6 threshold and the exact-freeze iteration (the
+//! mechanism behind the paper's truncated fixed-point lines).
+
+use ppr_spmv::bench_harness::{fig7_convergence, ExpOptions};
+use ppr_spmv::util::Stopwatch;
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    let sw = Stopwatch::start();
+    fig7_convergence::run(&opts);
+    println!("[fig7 completed in {:.2}s]", sw.seconds());
+}

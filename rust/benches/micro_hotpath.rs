@@ -1,0 +1,201 @@
+//! `cargo bench --bench micro_hotpath [-- --full]`
+//! Micro-benchmarks and design-choice ablations over the hot paths:
+//!
+//! - streaming COO SpMV vs scalar COO vs CSR (the paper's §3 layout
+//!   argument) at several packet widths B
+//! - κ scaling of the batched PPR engine (edges read once per batch)
+//! - truncation vs round-to-nearest quantization (the paper's rejected
+//!   policy), measuring both speed and numerical behaviour
+//! - packet-schedule construction cost + padding overhead by distribution
+//! - PJRT step executable latency (when artifacts are present)
+
+use ppr_spmv::fixed::{FixedFormat, RoundingMode};
+use ppr_spmv::graph::{CooMatrix, CsrMatrix, DatasetSpec};
+use ppr_spmv::ppr::{BatchedPpr, PprConfig, PreparedGraph};
+use ppr_spmv::spmv::datapath::FixedPath;
+use ppr_spmv::spmv::{csr_kernel, reference, PacketSchedule, StreamingSpmv};
+use ppr_spmv::util::report::Table;
+use ppr_spmv::util::timing::bench;
+use std::sync::Arc;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { 2 } else { 16 };
+    let spec = DatasetSpec::table1_suite(scale).into_iter().find(|s| s.name == "HK-100k").unwrap();
+    let ds = spec.build();
+    let coo = CooMatrix::from_graph(&ds.graph);
+    let n = ds.graph.num_vertices;
+    let e = ds.graph.num_edges();
+    println!("workload: HK graph |V|={n} |E|={e}\n");
+
+    spmv_kernels(&coo, n, e);
+    kappa_scaling(&ds.graph);
+    rounding_ablation(&coo, n);
+    schedule_costs(scale);
+    pjrt_step_latency();
+}
+
+/// SpMV kernel comparison: edges/s per layout and packet width.
+fn spmv_kernels(coo: &CooMatrix, n: usize, e: usize) {
+    let mut t = Table::new("SpMV kernels (26b fixed, κ=8)", &["kernel", "median ms", "Medges/s"]);
+    let d = FixedPath::paper(26);
+    let kappa = 8;
+    let p: Vec<u64> = (0..n * kappa).map(|i| d.fmt.quantize(1.0 / (1.0 + i as f64))).collect();
+    let mut out = vec![0u64; n * kappa];
+
+    for b in [4usize, 8, 16, 32] {
+        let sched = PacketSchedule::build(coo, b);
+        let vals = sched.quantized_values(&d.fmt);
+        let mut engine = StreamingSpmv::new(d, b, kappa);
+        let s = bench(2, 8, || engine.run(&sched, &vals, &p, &mut out));
+        t.row(&[
+            format!("streaming B={b} (pad {:.1}%)", sched.padding_overhead() * 100.0),
+            format!("{:.2}", s.median * 1e3),
+            format!("{:.1}", e as f64 * kappa as f64 / s.median / 1e6),
+        ]);
+    }
+
+    {
+        let sched = PacketSchedule::build(coo, 8);
+        let vals = sched.quantized_values(&d.fmt);
+        let s = bench(2, 8, || ppr_spmv::spmv::fast_spmv(&d, &sched, &vals, kappa, &p, &mut out));
+        t.row(&[
+            "fast kernel (engine hot path)".into(),
+            format!("{:.2}", s.median * 1e3),
+            format!("{:.1}", e as f64 * kappa as f64 / s.median / 1e6),
+        ]);
+    }
+
+    let s = bench(1, 5, || reference::coo_spmv_fixed(coo, &d.fmt, kappa, &p));
+    t.row(&[
+        "scalar COO oracle".into(),
+        format!("{:.2}", s.median * 1e3),
+        format!("{:.1}", e as f64 * kappa as f64 / s.median / 1e6),
+    ]);
+
+    let csr = CsrMatrix::from_coo(coo);
+    let pf: Vec<f32> = p.iter().map(|&w| d.fmt.to_f64(w) as f32).collect();
+    let mut outf = vec![0f32; n * kappa];
+    let s = bench(2, 8, || csr_kernel::csr_spmv_f32(&csr, kappa, &pf, &mut outf));
+    t.row(&[
+        "CSR f32 serial".into(),
+        format!("{:.2}", s.median * 1e3),
+        format!("{:.1}", e as f64 * kappa as f64 / s.median / 1e6),
+    ]);
+    let threads = ppr_spmv::ppr::cpu_baseline::default_threads();
+    let s = bench(2, 8, || csr_kernel::csr_spmv_f32_parallel(&csr, kappa, &pf, &mut outf, threads));
+    t.row(&[
+        format!("CSR f32 {} threads", threads),
+        format!("{:.2}", s.median * 1e3),
+        format!("{:.1}", e as f64 * kappa as f64 / s.median / 1e6),
+    ]);
+    t.emit(None);
+}
+
+/// κ ablation: one pass over the edges serves κ requests.
+fn kappa_scaling(g: &ppr_spmv::graph::Graph) {
+    let mut t = Table::new(
+        "κ-batched PPR engine (26b, 10 iterations): requests/s vs κ",
+        &["kappa", "batch ms", "requests/s"],
+    );
+    let pg = Arc::new(PreparedGraph::new(g, 8));
+    let cfg = PprConfig::paper_timed();
+    for kappa in [1usize, 2, 4, 8, 16] {
+        let mut engine = BatchedPpr::new(FixedPath::paper(26), pg.clone(), kappa, 0.85);
+        let pers: Vec<u32> = (1..=kappa as u32).collect();
+        let s = bench(1, 5, || engine.run(&pers, &cfg));
+        t.row(&[
+            kappa.to_string(),
+            format!("{:.1}", s.median * 1e3),
+            format!("{:.1}", kappa as f64 / s.median),
+        ]);
+    }
+    t.emit(None);
+}
+
+/// The paper's quantization-policy ablation: truncation (shipped) vs
+/// round-to-nearest (rejected for instability). Measures speed and the
+/// fixed-point mass drift over iterations.
+fn rounding_ablation(coo: &CooMatrix, n: usize) {
+    let mut t = Table::new(
+        "quantization policy ablation (22b, 20 iterations)",
+        &["policy", "ms/iter", "final mass (lane 0)", "note"],
+    );
+    for (mode, name) in
+        [(RoundingMode::Truncate, "truncate (paper)"), (RoundingMode::Nearest, "round-nearest")]
+    {
+        let fmt = FixedFormat::new(1, 21, mode);
+        let d = FixedPath { fmt };
+        let pg = Arc::new(PreparedGraph::from_coo(coo, 8));
+        let mut engine = BatchedPpr::new(d, pg, 4, 0.85);
+        let pers: Vec<u32> = vec![1, 2, 3, 4];
+        let cfg = PprConfig { max_iterations: 20, ..Default::default() };
+        let s = bench(1, 3, || engine.run(&pers, &cfg));
+        let out = engine.run(&pers, &cfg);
+        let mass: f64 = out.lane(0, 4).iter().map(|&w| fmt.to_f64(w)).sum();
+        let note = if mass > 1.0 + 1e-9 {
+            "mass inflation → instability risk"
+        } else {
+            "mass bounded ≤ 1"
+        };
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}", s.median * 1e3 / 20.0),
+            format!("{mass:.6}"),
+            note.to_string(),
+        ]);
+        let _ = n;
+    }
+    t.emit(None);
+}
+
+/// Packet-schedule construction: cost and padding by distribution.
+fn schedule_costs(scale: usize) {
+    let mut t = Table::new(
+        "packet-schedule build (B=8): preprocessing cost per graph",
+        &["graph", "build ms", "packets", "padding"],
+    );
+    for spec in DatasetSpec::table1_suite(scale) {
+        let ds = spec.build();
+        let coo = CooMatrix::from_graph(&ds.graph);
+        let s = bench(1, 3, || PacketSchedule::build(&coo, 8));
+        let sched = PacketSchedule::build(&coo, 8);
+        t.row(&[
+            spec.name.to_string(),
+            format!("{:.2}", s.median * 1e3),
+            sched.num_packets().to_string(),
+            format!("{:.2}%", sched.padding_overhead() * 100.0),
+        ]);
+    }
+    t.emit(None);
+}
+
+/// PJRT step-executable latency (three-layer serving hot path).
+fn pjrt_step_latency() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("[pjrt step latency skipped: run `make artifacts`]\n");
+        return;
+    }
+    let manifest = ppr_spmv::runtime::Manifest::load(dir).unwrap();
+    let mut t = Table::new(
+        "PJRT step executable (per PPR iteration, whole κ batch)",
+        &["artifact", "median ms", "p95 ms"],
+    );
+    for label in ["26b", "f32"] {
+        let Some(spec) = manifest.find(label) else { continue };
+        let g = ppr_spmv::graph::generators::holme_kim(spec.vertices, 3, 0.4, 0xBE);
+        let pg = PreparedGraph::new(&g, 8);
+        let rt = ppr_spmv::runtime::Runtime::cpu().unwrap();
+        let engine = ppr_spmv::runtime::PjrtPprEngine::load_spec(&rt, dir, spec, &pg).unwrap();
+        let pers: Vec<u32> = (1..=spec.kappa as u32).collect();
+        let cfg = PprConfig { alpha: manifest.alpha, max_iterations: 1, convergence_threshold: None };
+        let s = bench(2, 8, || engine.run(&pers, &cfg).unwrap());
+        t.row(&[
+            spec.file.clone(),
+            format!("{:.1}", s.median * 1e3),
+            format!("{:.1}", s.max * 1e3),
+        ]);
+    }
+    t.emit(None);
+}

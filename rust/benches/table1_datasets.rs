@@ -1,0 +1,12 @@
+//! `cargo bench --bench table1_datasets [-- --full|--scale N]`
+//! Regenerates Table 1 (datasets) and times dataset construction.
+
+use ppr_spmv::bench_harness::{table1_datasets, ExpOptions};
+use ppr_spmv::util::Stopwatch;
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    let sw = Stopwatch::start();
+    table1_datasets::run(&opts);
+    println!("[table1 completed in {:.2}s]", sw.seconds());
+}

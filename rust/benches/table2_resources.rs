@@ -1,0 +1,12 @@
+//! `cargo bench --bench table2_resources`
+//! Regenerates Table 2 (resources / clock / power) plus the κ-sweep and
+//! PPR-buffer ablations discussed in §5.1.
+
+use ppr_spmv::bench_harness::{table2_resources, ExpOptions};
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    table2_resources::run(&opts);
+    table2_resources::run_kappa_sweep(&opts);
+    table2_resources::run_buffer_sweep(&opts);
+}

@@ -1,0 +1,76 @@
+//! §5.2 — energy efficiency: Performance/Watt of the FPGA designs vs the
+//! CPU baseline. Paper findings: 16.5×–42× vs CPU (geomean 28.2×); the
+//! fixed-point design is ~5× more energy-efficient than the F32 FPGA
+//! design, which itself beats the CPU by 2.5×–5× (geomean 4.3×).
+
+use super::fig3_speedup::time_graph;
+use super::{geomean, ExpOptions};
+use crate::fixed::Precision;
+use crate::fpga::{power, FpgaConfig};
+use crate::graph::DatasetSpec;
+use crate::util::report::Table;
+
+/// Board power of a design point sized for a graph.
+fn fpga_power(precision: Precision, num_vertices: usize) -> f64 {
+    FpgaConfig::sized_for(precision, num_vertices).synthesize().expect("fits").power_w
+}
+
+/// The energy-efficiency experiment.
+pub fn run(opts: &ExpOptions) -> Table {
+    let mut t = Table::new(
+        &format!("§5.2 — Performance/Watt vs CPU ({})", opts.descriptor()),
+        &["graph", "26b vs CPU", "20b vs CPU", "F32-FPGA vs CPU", "26b vs F32-FPGA"],
+    );
+    let mut gains26 = Vec::new();
+    let mut gains_f32 = Vec::new();
+    for spec in DatasetSpec::table1_suite(opts.scale) {
+        let gt = time_graph(&spec, opts);
+        let v = spec.num_vertices;
+        let time_of = |p: Precision| -> f64 {
+            gt.fpga_seconds.iter().find(|(q, _)| *q == p).map(|(_, s)| *s).unwrap()
+        };
+        let gain_vs_cpu = |p: Precision| {
+            power::perf_per_watt_gain(
+                time_of(p),
+                fpga_power(p, v),
+                gt.cpu_seconds,
+                power::CPU_POWER_W,
+            )
+        };
+        let g26 = gain_vs_cpu(Precision::Fixed(26));
+        let g20 = gain_vs_cpu(Precision::Fixed(20));
+        let gf = gain_vs_cpu(Precision::Float32);
+        gains26.push(g26);
+        gains_f32.push(gf);
+        t.row(&[
+            gt.name.clone(),
+            format!("{g26:.1}x"),
+            format!("{g20:.1}x"),
+            format!("{gf:.1}x"),
+            format!("{:.1}x", g26 / gf),
+        ]);
+    }
+    t.row(&[
+        "geomean".to_string(),
+        format!("{:.1}x", geomean(&gains26)),
+        "-".to_string(),
+        format!("{:.1}x", geomean(&gains_f32)),
+        format!("{:.1}x", geomean(&gains26) / geomean(&gains_f32)),
+    ]);
+    t.emit(opts.csv_path("energy").as_deref());
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_beats_float_beats_nothing() {
+        // relative efficiency ordering is host-independent
+        let p26 = fpga_power(Precision::Fixed(26), 10_000);
+        let pf = fpga_power(Precision::Float32, 10_000);
+        assert!(p26 < pf, "fixed design draws less power");
+        assert!(p26 < power::CPU_POWER_W / 4.0);
+    }
+}

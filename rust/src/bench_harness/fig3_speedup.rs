@@ -1,0 +1,104 @@
+//! Fig. 3 — speedup of the FPGA design over the CPU baseline for each
+//! bit-width and graph, plus the fixed-vs-float-FPGA ratio.
+//!
+//! The CPU side is **measured** (the multi-threaded f32 baseline on this
+//! host); the FPGA side is **modelled** (pipeline cycle model × clock
+//! model — see DESIGN.md §1). The paper reports up to 6.47× on the 10⁶-
+//! edge synthetic graphs, 6.8× on Amazon, and a ~6× gap between the
+//! fixed-point and floating-point FPGA designs; those *shapes* are the
+//! reproduction target, not the absolute host-dependent numbers.
+
+use super::{ExpOptions, PreparedDataset};
+use crate::fixed::Precision;
+use crate::fpga::pipeline::{PipelineModel, Workload};
+use crate::fpga::FpgaConfig;
+use crate::graph::{CsrMatrix, DatasetSpec};
+use crate::ppr::cpu_baseline;
+use crate::util::report::Table;
+
+/// Measured + modelled times for one graph.
+#[derive(Debug, Clone)]
+pub struct GraphTimes {
+    /// Graph name.
+    pub name: String,
+    /// Measured CPU baseline seconds for the whole workload.
+    pub cpu_seconds: f64,
+    /// Modelled FPGA seconds per precision, paper sweep order.
+    pub fpga_seconds: Vec<(Precision, f64)>,
+}
+
+/// Estimate FPGA workload seconds for a prepared dataset at a precision.
+pub fn fpga_seconds(pd: &PreparedDataset, precision: Precision, opts: &ExpOptions) -> f64 {
+    let v = pd.dataset.graph.num_vertices;
+    let cfg = FpgaConfig::sized_for(precision, v);
+    let model = PipelineModel::new(cfg).expect("design fits");
+    let w = Workload {
+        requests: opts.requests,
+        iterations: opts.iterations,
+        num_vertices: v,
+        num_packets: pd.prepared.sched.num_packets(),
+    };
+    model.estimate(&w).seconds
+}
+
+/// Run CPU + FPGA-model timings for one dataset.
+pub fn time_graph(spec: &DatasetSpec, opts: &ExpOptions) -> GraphTimes {
+    let pd = super::prepare(spec, opts);
+    let csr = CsrMatrix::from_coo(&pd.coo);
+    let threads = cpu_baseline::default_threads();
+    let cpu = cpu_baseline::run_workload(
+        &csr,
+        &pd.requests,
+        crate::PAPER_ALPHA as f32,
+        opts.iterations,
+        threads,
+    );
+    let fpga_seconds =
+        Precision::paper_sweep().into_iter().map(|p| (p, fpga_seconds(&pd, p, opts))).collect();
+    GraphTimes { name: spec.name.to_string(), cpu_seconds: cpu.seconds, fpga_seconds }
+}
+
+/// The full Fig. 3 experiment.
+pub fn run(opts: &ExpOptions) -> Table {
+    let mut t = Table::new(
+        &format!("Fig. 3 — FPGA speedup vs CPU baseline ({})", opts.descriptor()),
+        &["graph", "CPU s", "F32 ↑", "26b ↑", "24b ↑", "22b ↑", "20b ↑", "26b vs F32-FPGA"],
+    );
+    for spec in DatasetSpec::table1_suite(opts.scale) {
+        let gt = time_graph(&spec, opts);
+        let get = |p: Precision| -> f64 {
+            gt.fpga_seconds.iter().find(|(q, _)| *q == p).map(|(_, s)| *s).unwrap()
+        };
+        let speedup = |p: Precision| gt.cpu_seconds / get(p);
+        t.row(&[
+            gt.name.clone(),
+            format!("{:.3}", gt.cpu_seconds),
+            format!("{:.2}x", speedup(Precision::Float32)),
+            format!("{:.2}x", speedup(Precision::Fixed(26))),
+            format!("{:.2}x", speedup(Precision::Fixed(24))),
+            format!("{:.2}x", speedup(Precision::Fixed(22))),
+            format!("{:.2}x", speedup(Precision::Fixed(20))),
+            format!("{:.2}x", get(Precision::Float32) / get(Precision::Fixed(26))),
+        ]);
+    }
+    t.emit(opts.csv_path("fig3").as_deref());
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_fpga_beats_float_fpga_everywhere() {
+        let opts = ExpOptions { scale: 100, requests: 8, csv_dir: None, ..Default::default() };
+        let spec = &DatasetSpec::table1_suite(opts.scale)[0];
+        let gt = time_graph(spec, &opts);
+        let f32_s = gt.fpga_seconds.iter().find(|(p, _)| *p == Precision::Float32).unwrap().1;
+        let b26_s = gt.fpga_seconds.iter().find(|(p, _)| *p == Precision::Fixed(26)).unwrap().1;
+        let b20_s = gt.fpga_seconds.iter().find(|(p, _)| *p == Precision::Fixed(20)).unwrap().1;
+        assert!(f32_s > b26_s, "float design must be slower");
+        assert!(b26_s >= b20_s, "lower width clocks faster");
+        assert!(gt.cpu_seconds > 0.0);
+    }
+}

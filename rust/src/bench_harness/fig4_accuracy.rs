@@ -1,0 +1,81 @@
+//! Fig. 4 — accuracy vs bit-width on the 2·10⁶-edge graphs: number of
+//! errors, edit distance and NDCG at top-10/20/50, fixed-point after 10
+//! iterations vs the converged f64 ground truth (the paper's "CPU at
+//! convergence" oracle).
+
+use super::{ExpOptions, PreparedDataset};
+use crate::fixed::Precision;
+use crate::graph::DatasetSpec;
+use crate::metrics::{accuracy_report, mae, ReportAccumulator};
+use crate::util::report::Table;
+
+/// Cutoffs the paper plots.
+pub const CUTOFFS: [usize; 3] = [10, 20, 50];
+
+/// Accuracy of one precision on one prepared dataset, averaged over the
+/// workload: one [`ReportAccumulator`] per cutoff.
+pub fn accuracy_for(
+    pd: &PreparedDataset,
+    truth: &[Vec<f64>],
+    precision: Precision,
+    iterations: usize,
+) -> Vec<ReportAccumulator> {
+    let scores = super::run_engine_scores(pd, precision, iterations);
+    let mut accs: Vec<ReportAccumulator> =
+        CUTOFFS.iter().map(|&n| ReportAccumulator::new(n)).collect();
+    for (pred, gt) in scores.iter().zip(truth) {
+        let m = mae(pred, gt);
+        for (ci, &n) in CUTOFFS.iter().enumerate() {
+            let rep = accuracy_report(pred, gt, n);
+            accs[ci].add(&rep, m);
+        }
+    }
+    accs
+}
+
+/// The full Fig. 4 experiment over the 2M-edge suite.
+pub fn run(opts: &ExpOptions) -> Table {
+    let mut t = Table::new(
+        &format!("Fig. 4 — accuracy vs bit-width, 2e6-edge graphs ({})", opts.descriptor()),
+        &["graph", "precision", "N", "errors", "edit dist", "NDCG"],
+    );
+    for spec in DatasetSpec::fig4_suite(opts.scale) {
+        let pd = super::prepare(&spec, opts);
+        let truth = super::ground_truth_scores(&pd);
+        for p in Precision::paper_sweep() {
+            let accs = accuracy_for(&pd, &truth, p, opts.iterations);
+            for (ci, acc) in accs.iter().enumerate() {
+                let (errors, edit, ndcg, _, _, _) = acc.means();
+                t.row(&[
+                    spec.name.to_string(),
+                    p.label(),
+                    format!("top-{}", CUTOFFS[ci]),
+                    format!("{errors:.1}"),
+                    format!("{edit:.1}"),
+                    format!("{:.2}%", ndcg * 100.0),
+                ]);
+            }
+        }
+    }
+    t.emit(opts.csv_path("fig4").as_deref());
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_improves_with_bits() {
+        let opts = ExpOptions { scale: 50, requests: 8, csv_dir: None, ..Default::default() };
+        let spec = &DatasetSpec::fig4_suite(opts.scale)[2]; // HK: densest communities
+        let pd = super::super::prepare(spec, &opts);
+        let truth = super::super::ground_truth_scores(&pd);
+        let acc20 = accuracy_for(&pd, &truth, Precision::Fixed(20), opts.iterations);
+        let acc26 = accuracy_for(&pd, &truth, Precision::Fixed(26), opts.iterations);
+        let (_, _, ndcg20, _, _, _) = acc20[2].means();
+        let (_, _, ndcg26, _, _, _) = acc26[2].means();
+        assert!(ndcg26 >= ndcg20, "more bits must not hurt NDCG: {ndcg26} vs {ndcg20}");
+        assert!(ndcg26 > 0.9, "26b should be near-perfect, got {ndcg26}");
+    }
+}

@@ -1,0 +1,65 @@
+//! Fig. 5 — aggregated accuracy metrics over all 8 graphs: MAE,
+//! Precision@N and Kendall's τ per bit-width ("just 20 bits are enough to
+//! retrieve 90% of the best top-50 items").
+
+use super::fig4_accuracy::{accuracy_for, CUTOFFS};
+use super::ExpOptions;
+use crate::fixed::Precision;
+use crate::graph::DatasetSpec;
+use crate::metrics::ReportAccumulator;
+use crate::util::report::Table;
+
+/// Aggregate accuracy across the whole Table 1 suite for each precision.
+pub fn run(opts: &ExpOptions) -> Table {
+    let mut t = Table::new(
+        &format!("Fig. 5 — aggregated accuracy, all graphs ({})", opts.descriptor()),
+        &["precision", "MAE", "prec@10", "prec@20", "prec@50", "tau@10", "tau@20", "tau@50"],
+    );
+    // accumulate across graphs: one accumulator per (precision, cutoff)
+    let precisions = Precision::paper_sweep();
+    let mut accs: Vec<Vec<ReportAccumulator>> = precisions
+        .iter()
+        .map(|_| CUTOFFS.iter().map(|&n| ReportAccumulator::new(n)).collect())
+        .collect();
+
+    for spec in DatasetSpec::table1_suite(opts.scale) {
+        let pd = super::prepare(&spec, opts);
+        let truth = super::ground_truth_scores(&pd);
+        for (pi, &p) in precisions.iter().enumerate() {
+            let per_graph = accuracy_for(&pd, &truth, p, opts.iterations);
+            for (ci, a) in per_graph.into_iter().enumerate() {
+                accs[pi][ci].merge(&a);
+            }
+        }
+    }
+
+    for (pi, p) in precisions.iter().enumerate() {
+        let means: Vec<_> = accs[pi].iter().map(|a| a.means()).collect();
+        // MAE is cutoff-independent; take it from the first accumulator
+        let mae = means[0].5;
+        t.row(&[
+            p.label(),
+            format!("{mae:.2e}"),
+            format!("{:.1}%", means[0].3 * 100.0),
+            format!("{:.1}%", means[1].3 * 100.0),
+            format!("{:.1}%", means[2].3 * 100.0),
+            format!("{:.3}", means[0].4),
+            format!("{:.3}", means[1].4),
+            format!("{:.3}", means[2].4),
+        ]);
+    }
+    t.emit(opts.csv_path("fig5").as_deref());
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregated_table_has_five_rows() {
+        let opts = ExpOptions { scale: 400, requests: 4, csv_dir: None, ..Default::default() };
+        let t = run(&opts);
+        assert_eq!(t.len(), 5);
+    }
+}

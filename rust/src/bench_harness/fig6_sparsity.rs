@@ -1,0 +1,100 @@
+//! Fig. 6 — sensitivity of accuracy to sparsity and iteration count:
+//! top-50 precision on Erdős–Rényi graphs across a sparsity sweep (left
+//! panel) and across iteration counts (right panel), per bit-width.
+//! Paper finding: "sparsity does not affect accuracy, except for very low
+//! bit-width, and 10 iterations are enough for convergence".
+
+use super::{ExpOptions, PreparedDataset};
+use crate::fixed::Precision;
+use crate::graph::{DatasetSpec, Distribution};
+use crate::metrics::{precision_at, top_n_indices_f64};
+use crate::util::report::Table;
+
+/// Average out-degrees swept. At the paper's |V| = 10⁵ these correspond
+/// to sparsities 2e-5 … 5e-4 (|E|/|V|² = degree/|V|); sweeping degree
+/// keeps the sweep meaningful at reduced scales too.
+pub const DEGREES: [f64; 4] = [2.0, 5.0, 10.0, 50.0];
+
+/// Iteration counts swept in the right panel.
+pub const ITER_SWEEP: [usize; 5] = [2, 5, 10, 15, 20];
+
+fn top50_precision(pd: &PreparedDataset, truth: &[Vec<f64>], p: Precision, iters: usize) -> f64 {
+    let scores = super::run_engine_scores(pd, p, iters);
+    let mut acc = 0.0;
+    for (pred, gt) in scores.iter().zip(truth) {
+        let tp = top_n_indices_f64(pred, 50);
+        let tt = top_n_indices_f64(gt, 50);
+        acc += precision_at(&tp, &tt);
+    }
+    acc / scores.len() as f64
+}
+
+/// Left panel: precision@50 vs sparsity.
+pub fn run_sparsity(opts: &ExpOptions) -> Table {
+    let mut t = Table::new(
+        &format!("Fig. 6a — top-50 precision vs sparsity (ER, {})", opts.descriptor()),
+        &["sparsity", "20b", "22b", "24b", "26b", "F32"],
+    );
+    let n = (100_000 / opts.scale).max(512);
+    for (si, &deg) in DEGREES.iter().enumerate() {
+        let e = (deg * n as f64) as usize;
+        let spec = DatasetSpec {
+            name: "ER-sweep",
+            distribution: Distribution::ErdosRenyi,
+            num_vertices: n,
+            num_edges: e,
+            seed: 0xF160 + si as u64,
+        };
+        let pd = super::prepare(&spec, opts);
+        let truth = super::ground_truth_scores(&pd);
+        let mut row = vec![format!("{:.1e}", pd.dataset.graph.sparsity())];
+        for p in Precision::paper_sweep() {
+            row.push(format!("{:.1}%", top50_precision(&pd, &truth, p, opts.iterations) * 100.0));
+        }
+        t.row(&row);
+    }
+    t.emit(opts.csv_path("fig6_sparsity").as_deref());
+    t
+}
+
+/// Right panel: precision@50 vs iteration count.
+pub fn run_iterations(opts: &ExpOptions) -> Table {
+    let mut t = Table::new(
+        &format!("Fig. 6b — top-50 precision vs iterations (ER, {})", opts.descriptor()),
+        &["iterations", "20b", "22b", "24b", "26b", "F32"],
+    );
+    let spec = &DatasetSpec::table1_suite(opts.scale)[0]; // ER-100k
+    let pd = super::prepare(spec, opts);
+    let truth = super::ground_truth_scores(&pd);
+    for &iters in &ITER_SWEEP {
+        let mut row = vec![iters.to_string()];
+        for p in Precision::paper_sweep() {
+            row.push(format!("{:.1}%", top50_precision(&pd, &truth, p, iters) * 100.0));
+        }
+        t.row(&row);
+    }
+    t.emit(opts.csv_path("fig6_iterations").as_deref());
+    t
+}
+
+/// Both panels.
+pub fn run(opts: &ExpOptions) -> (Table, Table) {
+    (run_sparsity(opts), run_iterations(opts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iteration_sweep_improves_then_saturates() {
+        let opts = ExpOptions { scale: 200, requests: 6, csv_dir: None, ..Default::default() };
+        let spec = &DatasetSpec::table1_suite(opts.scale)[0];
+        let pd = super::super::prepare(spec, &opts);
+        let truth = super::super::ground_truth_scores(&pd);
+        let p2 = top50_precision(&pd, &truth, Precision::Fixed(26), 2);
+        let p15 = top50_precision(&pd, &truth, Precision::Fixed(26), 15);
+        assert!(p15 >= p2, "more iterations must not hurt: {p15} vs {p2}");
+        assert!(p15 > 0.8, "26b@15 iters should be accurate, got {p15}");
+    }
+}

@@ -1,0 +1,205 @@
+//! Experiment drivers regenerating every table and figure of the paper's
+//! evaluation (§5). Each submodule is one experiment; the `cargo bench`
+//! targets under `rust/benches/` and the `ppr-spmv experiment` CLI
+//! subcommand both dispatch here.
+//!
+//! Scaling: the paper's graphs have 1–2·10⁶ edges and the workload is 100
+//! personalization vertices. A full-scale run takes minutes; benches
+//! default to `scale = 8` (⅛-size graphs, 24 requests), which preserves
+//! every trend. Pass `--full` (or env `PPR_FULL=1`) for paper-scale, or
+//! `--scale N --requests M` to pick a point.
+
+pub mod energy;
+pub mod fig3_speedup;
+pub mod fig4_accuracy;
+pub mod fig5_aggregated;
+pub mod fig6_sparsity;
+pub mod fig7_convergence;
+pub mod table1_datasets;
+pub mod table2_resources;
+
+use crate::fixed::Precision;
+use crate::graph::{CooMatrix, Dataset, VertexId};
+use crate::ppr::{BatchedPpr, PprConfig, PreparedGraph};
+use crate::spmv::datapath::{FixedPath, FloatPath};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Common experiment options.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// Divide the paper's graph sizes by this factor (1 = paper scale).
+    pub scale: usize,
+    /// Personalization requests per graph (paper: 100).
+    pub requests: usize,
+    /// PPR iterations for timed/accuracy runs (paper: 10).
+    pub iterations: usize,
+    /// Where to drop CSVs (None = stdout only).
+    pub csv_dir: Option<PathBuf>,
+    /// Seed for workload sampling.
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self {
+            scale: 8,
+            requests: 24,
+            iterations: crate::PAPER_ITERATIONS,
+            csv_dir: Some(PathBuf::from("target/experiments")),
+            seed: 0xBEEF,
+        }
+    }
+}
+
+impl ExpOptions {
+    /// Paper-scale options.
+    pub fn full() -> Self {
+        Self { scale: 1, requests: crate::PAPER_WORKLOAD_VERTICES, ..Default::default() }
+    }
+
+    /// Parse from process args (used by the bench binaries):
+    /// `--full`, `--scale N`, `--requests N`, `--iterations N`,
+    /// `--seed N`, `--no-csv`. Also honours `PPR_FULL=1`.
+    pub fn from_args() -> Self {
+        let args: Vec<String> = std::env::args().collect();
+        let mut opts = if std::env::var("PPR_FULL").map(|v| v == "1").unwrap_or(false)
+            || args.iter().any(|a| a == "--full")
+        {
+            Self::full()
+        } else {
+            Self::default()
+        };
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            let mut grab = |field: &mut usize| {
+                if let Some(v) = it.peek().and_then(|s| s.parse::<usize>().ok()) {
+                    *field = v;
+                    it.next();
+                }
+            };
+            match a.as_str() {
+                "--scale" => grab(&mut opts.scale),
+                "--requests" => grab(&mut opts.requests),
+                "--iterations" => grab(&mut opts.iterations),
+                "--seed" => {
+                    if let Some(v) = it.peek().and_then(|s| s.parse::<u64>().ok()) {
+                        opts.seed = v;
+                        it.next();
+                    }
+                }
+                "--no-csv" => opts.csv_dir = None,
+                _ => {}
+            }
+        }
+        opts
+    }
+
+    /// CSV path for a named experiment (if CSV output is enabled).
+    pub fn csv_path(&self, name: &str) -> Option<PathBuf> {
+        self.csv_dir.as_ref().map(|d| d.join(format!("{name}.csv")))
+    }
+
+    /// Short run descriptor for report headers.
+    pub fn descriptor(&self) -> String {
+        format!(
+            "scale=1/{} requests={} iterations={} seed={:#x}",
+            self.scale, self.requests, self.iterations, self.seed
+        )
+    }
+}
+
+/// A dataset prepared for experiments: graph + COO + packet schedule.
+pub struct PreparedDataset {
+    /// The dataset (spec + graph).
+    pub dataset: Dataset,
+    /// COO transition matrix.
+    pub coo: CooMatrix,
+    /// Prepared schedule (B = 8, the paper's packet width).
+    pub prepared: Arc<PreparedGraph>,
+    /// The sampled personalization workload.
+    pub requests: Vec<VertexId>,
+}
+
+/// Build a dataset and its derived state for an experiment.
+pub fn prepare(spec: &crate::graph::DatasetSpec, opts: &ExpOptions) -> PreparedDataset {
+    let dataset = spec.build();
+    let coo = CooMatrix::from_graph(&dataset.graph);
+    let prepared = Arc::new(PreparedGraph::from_coo(&coo, crate::PAPER_B));
+    let requests = dataset.sample_personalization(opts.requests, opts.seed);
+    PreparedDataset { dataset, coo, prepared, requests }
+}
+
+/// Run the reduced-precision (or F32-FPGA) engine for a workload and
+/// return dequantized score vectors per request.
+pub fn run_engine_scores(
+    pd: &PreparedDataset,
+    precision: Precision,
+    iterations: usize,
+) -> Vec<Vec<f64>> {
+    let cfg = PprConfig { max_iterations: iterations, ..Default::default() };
+    match precision {
+        Precision::Fixed(w) => {
+            let d = FixedPath::paper(w);
+            let mut engine =
+                BatchedPpr::new(d, pd.prepared.clone(), crate::PAPER_KAPPA, crate::PAPER_ALPHA);
+            engine
+                .run_requests(&pd.requests, &cfg)
+                .into_iter()
+                .map(|lane| lane.iter().map(|&w_| d.fmt.to_f64(w_)).collect())
+                .collect()
+        }
+        Precision::Float32 => {
+            let mut engine = BatchedPpr::new(
+                FloatPath,
+                pd.prepared.clone(),
+                crate::PAPER_KAPPA,
+                crate::PAPER_ALPHA,
+            );
+            engine
+                .run_requests(&pd.requests, &cfg)
+                .into_iter()
+                .map(|lane| lane.iter().map(|&w_| w_ as f64).collect())
+                .collect()
+        }
+    }
+}
+
+/// Ground-truth scores (f64, converged) for a workload.
+pub fn ground_truth_scores(pd: &PreparedDataset) -> Vec<Vec<f64>> {
+    crate::ppr::reference::ground_truth_batch(&pd.coo, &pd.requests)
+}
+
+/// Geometric mean.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[5.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn options_full_is_paper_scale() {
+        let o = ExpOptions::full();
+        assert_eq!(o.scale, 1);
+        assert_eq!(o.requests, 100);
+    }
+
+    #[test]
+    fn prepare_small_dataset() {
+        let spec = &crate::graph::DatasetSpec::table1_suite(200)[0];
+        let opts = ExpOptions { requests: 4, ..Default::default() };
+        let pd = prepare(spec, &opts);
+        assert_eq!(pd.requests.len(), 4);
+        assert_eq!(pd.coo.num_edges(), spec.num_edges);
+        assert!(pd.prepared.sched.validate().is_ok());
+    }
+}

@@ -1,0 +1,55 @@
+//! Table 1 — the evaluation datasets: |V|, |E| and sparsity for the six
+//! synthetic graphs and the two real-world stand-ins, alongside the
+//! paper's published values.
+
+use super::ExpOptions;
+use crate::graph::DatasetSpec;
+use crate::util::report::Table;
+
+/// Published Table 1 rows (name → (|V|, |E|, sparsity)).
+pub const PAPER_ROWS: [(&str, usize, usize, f64); 8] = [
+    ("ER-100k", 100_000, 1_002_178, 1.0e-4),
+    ("ER-200k", 200_000, 1_999_249, 4.9e-5),
+    ("WS-100k", 100_000, 1_000_000, 1.0e-4),
+    ("WS-200k", 200_000, 2_000_000, 5.0e-5),
+    ("HK-100k", 100_000, 999_845, 0.99e-4),
+    ("HK-200k", 200_000, 1_999_825, 4.9e-5),
+    ("AMZN", 128_000, 443_378, 2.7e-5),
+    ("TWTR", 81_306, 1_572_670, 2.3e-4),
+];
+
+/// Run the experiment: build the whole suite and print measured vs paper.
+pub fn run(opts: &ExpOptions) -> Table {
+    let mut t = Table::new(
+        &format!("Table 1 — graph datasets ({})", opts.descriptor()),
+        &["graph", "|V|", "|E|", "sparsity", "dangling", "max outdeg", "paper |V|", "paper |E|"],
+    );
+    for (spec, paper) in DatasetSpec::table1_suite(opts.scale).iter().zip(PAPER_ROWS) {
+        let ds = spec.build();
+        let g = &ds.graph;
+        t.row(&[
+            spec.name.to_string(),
+            g.num_vertices.to_string(),
+            g.num_edges().to_string(),
+            format!("{:.2e}", g.sparsity()),
+            g.num_dangling().to_string(),
+            g.max_out_degree().to_string(),
+            paper.1.to_string(),
+            paper.2.to_string(),
+        ]);
+    }
+    t.emit(opts.csv_path("table1").as_deref());
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_eight_rows() {
+        let opts = ExpOptions { scale: 400, csv_dir: None, requests: 1, ..Default::default() };
+        let t = run(&opts);
+        assert_eq!(t.len(), 8);
+    }
+}

@@ -1,0 +1,116 @@
+//! Table 2 — resource usage, clock and power of the synthesized design
+//! points on the simulated U200, alongside the paper's published row, plus
+//! the κ-sweep and buffer-size ablations §5.1 discusses in prose.
+
+use super::ExpOptions;
+use crate::fixed::Precision;
+use crate::fpga::FpgaConfig;
+use crate::util::report::Table;
+
+/// Published Table 2 (κ=8): (label, bram, dsp, ff, lut, uram, MHz, W).
+pub const PAPER_ROWS: [(&str, f64, f64, f64, f64, f64, f64, f64); 3] = [
+    ("20b", 0.14, 0.03, 0.04, 0.26, 0.20, 220.0, 34.0),
+    ("26b", 0.14, 0.03, 0.04, 0.38, 0.20, 200.0, 35.0),
+    ("F32", 0.14, 0.48, 0.35, 0.89, 0.26, 115.0, 40.0),
+];
+
+/// The main Table 2 reproduction (all five design points).
+pub fn run(opts: &ExpOptions) -> Table {
+    let mut t = Table::new(
+        "Table 2 — resource usage / clock / power (κ=8, 100k-vertex buffers)",
+        &["design", "BRAM", "DSP", "FF", "LUT", "URAM", "clock MHz", "power W", "paper MHz", "paper W"],
+    );
+    for p in Precision::paper_sweep() {
+        let rep = FpgaConfig::paper(p).synthesize().expect("paper design must fit");
+        let paper = PAPER_ROWS.iter().find(|(l, ..)| *l == p.label() || (*l == "F32" && p == Precision::Float32));
+        let (pmhz, pw) = paper.map(|r| (format!("{:.0}", r.6), format!("{:.0}", r.7)))
+            .unwrap_or_else(|| ("-".into(), "-".into()));
+        t.row(&[
+            p.label(),
+            pct(rep.resources.bram),
+            pct(rep.resources.dsp),
+            pct(rep.resources.ff),
+            pct(rep.resources.lut),
+            pct(rep.resources.uram),
+            format!("{:.0}", rep.clock_mhz),
+            format!("{:.1}", rep.power_w),
+            pmhz,
+            pw,
+        ]);
+    }
+    t.emit(opts.csv_path("table2").as_deref());
+    t
+}
+
+/// κ ablation: clock and URAM vs lanes (§5.1: "up to 350 MHz with lower
+/// number of concurrent PPR vertices"; "URAM usage grows linearly").
+pub fn run_kappa_sweep(opts: &ExpOptions) -> Table {
+    let mut t = Table::new(
+        "Table 2 ablation — κ sweep (26b, 100k vertices)",
+        &["kappa", "clock MHz", "URAM", "LUT", "power W"],
+    );
+    for kappa in [1usize, 2, 4, 8, 16] {
+        let cfg = FpgaConfig { kappa, ..FpgaConfig::paper(Precision::Fixed(26)) };
+        let rep = cfg.synthesize().expect("fits");
+        t.row(&[
+            kappa.to_string(),
+            format!("{:.0}", rep.clock_mhz),
+            pct(rep.resources.uram),
+            pct(rep.resources.lut),
+            format!("{:.1}", rep.power_w),
+        ]);
+    }
+    t.emit(opts.csv_path("table2_kappa").as_deref());
+    t
+}
+
+/// Buffer-size ablation (§5.1: "doubling the size of the PPR buffers
+/// lowers the clock speed by around 35–40%").
+pub fn run_buffer_sweep(opts: &ExpOptions) -> Table {
+    let mut t = Table::new(
+        "Table 2 ablation — PPR buffer size (26b, κ=8)",
+        &["max vertices", "URAM", "clock MHz", "clock vs 100k"],
+    );
+    let base = FpgaConfig::sized_for(Precision::Fixed(26), 100_000).synthesize().unwrap();
+    for v in [50_000usize, 100_000, 200_000, 400_000, 800_000] {
+        match FpgaConfig::sized_for(Precision::Fixed(26), v).synthesize() {
+            Ok(rep) => {
+                t.row(&[
+                    v.to_string(),
+                    pct(rep.resources.uram),
+                    format!("{:.0}", rep.clock_mhz),
+                    format!("{:.2}x", rep.clock_mhz / base.clock_mhz),
+                ]);
+            }
+            Err(e) => {
+                t.row(&[v.to_string(), "-".into(), "-".into(), format!("does not fit: {e}")]);
+            }
+        }
+    }
+    t.emit(opts.csv_path("table2_buffers").as_deref());
+    t
+}
+
+fn pct(x: f64) -> String {
+    format!("{:.0}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> ExpOptions {
+        ExpOptions { csv_dir: None, ..Default::default() }
+    }
+
+    #[test]
+    fn main_table_has_five_designs() {
+        assert_eq!(run(&opts()).len(), 5);
+    }
+
+    #[test]
+    fn ablations_run() {
+        assert_eq!(run_kappa_sweep(&opts()).len(), 5);
+        assert_eq!(run_buffer_sweep(&opts()).len(), 5);
+    }
+}

@@ -1,0 +1,386 @@
+//! Command-line interface (hand-rolled: the vendored crate set has no
+//! clap). Subcommands:
+//!
+//! - `experiment <id>` — regenerate a paper table/figure (table1, table2,
+//!   fig3..fig7, energy, all)
+//! - `serve` — start the serving engine on a dataset and drive a demo
+//!   workload, printing latency/throughput stats
+//! - `query` — one-shot PPR query
+//! - `generate` — materialize a Table 1 dataset to an edge-list file
+//! - `artifacts` — inspect the AOT artifact manifest
+//! - `synthesize` — print the simulated synthesis report for a design
+
+use crate::bench_harness as bh;
+use crate::config::RunConfig;
+use crate::coordinator::{NativeEngine, PprEngine, Server, ServerConfig};
+use crate::fixed::Precision;
+use crate::graph::{loader, DatasetSpec};
+use crate::ppr::PreparedGraph;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Parsed command-line arguments: positionals + `--key value` / `--flag`.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments (subcommand first).
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    pub options: std::collections::HashMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: std::collections::HashSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.options.insert(key.to_string(), it.next().unwrap());
+                    }
+                    _ => {
+                        out.flags.insert(key.to_string());
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Option lookup with typed parse.
+    pub fn get<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.options.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Option or default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+/// Build a RunConfig from common CLI options (`--precision`, `--kappa`,
+/// `--iterations`, `--alpha`, `--config <file>`).
+pub fn run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.options.get("config") {
+        Some(path) => RunConfig::load(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(p) = args.options.get("precision") {
+        cfg.precision = Precision::parse(p).ok_or_else(|| anyhow!("bad --precision {p}"))?;
+    }
+    if let Some(k) = args.get::<usize>("kappa") {
+        cfg.kappa = k;
+    }
+    if let Some(i) = args.get::<usize>("iterations") {
+        cfg.iterations = i;
+    }
+    if let Some(a) = args.get::<f64>("alpha") {
+        cfg.alpha = a;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Load a graph: `--graph <table1-name>` (generated) or `--graph-file
+/// <path>` (SNAP edge list). Scale applies to generated specs.
+pub fn load_graph(args: &Args) -> Result<crate::graph::Graph> {
+    if let Some(path) = args.options.get("graph-file") {
+        return loader::read_edge_list(std::path::Path::new(path));
+    }
+    let name = args.options.get("graph").map(String::as_str).unwrap_or("ER-100k");
+    let scale = args.get_or::<usize>("scale", 8);
+    let spec = DatasetSpec::table1_suite(scale)
+        .into_iter()
+        .find(|s| s.name.eq_ignore_ascii_case(name))
+        .ok_or_else(|| anyhow!("unknown dataset {name} (see `experiment table1`)"))?;
+    Ok(spec.build().graph)
+}
+
+fn exp_options(args: &Args) -> bh::ExpOptions {
+    let mut opts =
+        if args.flags.contains("full") { bh::ExpOptions::full() } else { bh::ExpOptions::default() };
+    if let Some(s) = args.get::<usize>("scale") {
+        opts.scale = s;
+    }
+    if let Some(r) = args.get::<usize>("requests") {
+        opts.requests = r;
+    }
+    if let Some(i) = args.get::<usize>("iterations") {
+        opts.iterations = i;
+    }
+    if let Some(s) = args.get::<u64>("seed") {
+        opts.seed = s;
+    }
+    if args.flags.contains("no-csv") {
+        opts.csv_dir = None;
+    }
+    opts
+}
+
+/// Entry point: dispatch a parsed argv.
+pub fn dispatch(args: Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("experiment") => cmd_experiment(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("query") => cmd_query(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("synthesize") => cmd_synthesize(&args),
+        Some(other) => bail!("unknown subcommand {other}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+ppr-spmv — reduced-precision streaming SpMV for Personalized PageRank
+USAGE:
+  ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|all>
+            [--full] [--scale N] [--requests N] [--iterations N] [--no-csv]
+  ppr-spmv serve  [--graph NAME|--graph-file PATH] [--precision 26b]
+            [--kappa 8] [--iterations 10] [--workers N] [--demo-requests N]
+  ppr-spmv query  --vertex V [--graph NAME|--graph-file PATH] [--top 10]
+  ppr-spmv generate --graph NAME --out PATH [--scale N]
+  ppr-spmv artifacts [--dir artifacts]
+  ppr-spmv synthesize [--precision 26b] [--kappa 8] [--vertices 100000]";
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let opts = exp_options(args);
+    println!("# experiment {which} [{}]\n", opts.descriptor());
+    match which {
+        "table1" => {
+            bh::table1_datasets::run(&opts);
+        }
+        "table2" => {
+            bh::table2_resources::run(&opts);
+            bh::table2_resources::run_kappa_sweep(&opts);
+            bh::table2_resources::run_buffer_sweep(&opts);
+        }
+        "fig3" => {
+            bh::fig3_speedup::run(&opts);
+        }
+        "fig4" => {
+            bh::fig4_accuracy::run(&opts);
+        }
+        "fig5" => {
+            bh::fig5_aggregated::run(&opts);
+        }
+        "fig6" => {
+            bh::fig6_sparsity::run(&opts);
+        }
+        "fig7" => {
+            bh::fig7_convergence::run(&opts);
+        }
+        "energy" => {
+            bh::energy::run(&opts);
+        }
+        "all" => {
+            bh::table1_datasets::run(&opts);
+            bh::table2_resources::run(&opts);
+            bh::table2_resources::run_kappa_sweep(&opts);
+            bh::table2_resources::run_buffer_sweep(&opts);
+            bh::fig3_speedup::run(&opts);
+            bh::fig4_accuracy::run(&opts);
+            bh::fig5_aggregated::run(&opts);
+            bh::fig6_sparsity::run(&opts);
+            bh::fig7_convergence::run(&opts);
+            bh::energy::run(&opts);
+        }
+        other => bail!("unknown experiment {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let graph = load_graph(args)?;
+    let workers = args.get_or::<usize>("workers", 2);
+    let demo_requests = args.get_or::<usize>("demo-requests", 64);
+    println!(
+        "serving |V|={} |E|={} with {} × {} workers",
+        graph.num_vertices,
+        graph.num_edges(),
+        workers,
+        cfg.precision
+    );
+    let pg = Arc::new(PreparedGraph::new(&graph, cfg.b));
+    let engines: Vec<Box<dyn PprEngine>> = (0..workers)
+        .map(|_| Box::new(NativeEngine::new(pg.clone(), cfg.clone())) as Box<dyn PprEngine>)
+        .collect();
+    let server = Server::start(
+        engines,
+        ServerConfig {
+            batch_timeout: std::time::Duration::from_millis(cfg.batch_timeout_ms),
+            default_top_n: cfg.top_n,
+        },
+    );
+    // demo workload: random queries from non-dangling vertices
+    let mut rng = crate::util::rng::Xoshiro256::seeded(1);
+    let dangling = graph.dangling();
+    let candidates: Vec<u32> =
+        (0..graph.num_vertices as u32).filter(|&v| !dangling[v as usize]).collect();
+    let sw = crate::util::Stopwatch::start();
+    let receivers: Vec<_> = (0..demo_requests)
+        .map(|_| server.submit(candidates[rng.next_index(candidates.len())], cfg.top_n))
+        .collect();
+    let mut ok = 0usize;
+    for rx in receivers {
+        if rx.recv().context("response channel")?.is_ok() {
+            ok += 1;
+        }
+    }
+    let elapsed = sw.seconds();
+    let snap = server.stats().snapshot();
+    println!(
+        "completed {ok}/{demo_requests} requests in {elapsed:.3}s ({:.1} req/s)",
+        ok as f64 / elapsed
+    );
+    println!(
+        "latency p50={:.2}ms p95={:.2}ms p99={:.2}ms | queue p50={:.2}ms | batches={} mean fill={:.2}",
+        snap.latency_p50_ms,
+        snap.latency_p95_ms,
+        snap.latency_p99_ms,
+        snap.queue_p50_ms,
+        snap.batches,
+        snap.mean_batch_fill,
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let graph = load_graph(args)?;
+    let vertex = args.get::<u32>("vertex").context("--vertex required")?;
+    let top = args.get_or::<usize>("top", 10);
+    anyhow::ensure!((vertex as usize) < graph.num_vertices, "vertex out of range");
+    let pg = Arc::new(PreparedGraph::new(&graph, cfg.b));
+    let engine: Box<dyn PprEngine> = Box::new(NativeEngine::new(pg, cfg.clone()));
+    let server = Server::start(vec![engine], ServerConfig::default());
+    let resp = server.query(vertex, top).map_err(|e| anyhow!(e))?;
+    println!("top-{top} for vertex {vertex} ({} iterations):", resp.iterations);
+    for (rank, rv) in resp.ranking.iter().enumerate() {
+        println!("  {:>3}. vertex {:>8}  score {:.6}", rank + 1, rv.vertex, rv.score);
+    }
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let name = args.options.get("graph").context("--graph required")?;
+    let out = args.options.get("out").context("--out required")?;
+    let scale = args.get_or::<usize>("scale", 1);
+    let spec = DatasetSpec::table1_suite(scale)
+        .into_iter()
+        .find(|s| s.name.eq_ignore_ascii_case(name))
+        .ok_or_else(|| anyhow!("unknown dataset {name}"))?;
+    let ds = spec.build();
+    loader::write_edge_list(&ds.graph, std::path::Path::new(out))?;
+    println!(
+        "wrote {} (|V|={} |E|={} sparsity={:.2e})",
+        out,
+        ds.graph.num_vertices,
+        ds.graph.num_edges(),
+        ds.graph.sparsity()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.options.get("dir").map(String::as_str).unwrap_or("artifacts"));
+    let manifest = crate::runtime::Manifest::load(&dir)?;
+    println!("artifacts in {} (alpha={}):", dir.display(), manifest.alpha);
+    for a in &manifest.artifacts {
+        println!(
+            "  {:<5} V={:<7} E={:<8} κ={:<3} frac={:<3} {} ({})",
+            a.label, a.vertices, a.edges, a.kappa, a.frac_bits, a.dtype, a.file
+        );
+    }
+    Ok(())
+}
+
+fn cmd_synthesize(args: &Args) -> Result<()> {
+    let precision = args
+        .options
+        .get("precision")
+        .map(|p| Precision::parse(p).ok_or_else(|| anyhow!("bad precision {p}")))
+        .transpose()?
+        .unwrap_or(Precision::Fixed(26));
+    let kappa = args.get_or::<usize>("kappa", crate::PAPER_KAPPA);
+    let vertices = args.get_or::<usize>("vertices", 100_000);
+    let cfg = crate::fpga::FpgaConfig {
+        precision,
+        kappa,
+        b: args.get_or::<usize>("b", crate::PAPER_B),
+        max_vertices: vertices,
+    };
+    match cfg.synthesize() {
+        Ok(rep) => {
+            println!("design {precision} κ={kappa} B={} buffers for |V|≤{vertices}:", cfg.b);
+            println!(
+                "  BRAM {:.0}%  DSP {:.0}%  FF {:.0}%  LUT {:.0}%  URAM {:.0}% ({} blocks)",
+                rep.resources.bram * 100.0,
+                rep.resources.dsp * 100.0,
+                rep.resources.ff * 100.0,
+                rep.resources.lut * 100.0,
+                rep.resources.uram * 100.0,
+                rep.resources.uram_blocks,
+            );
+            println!("  clock {:.0} MHz   power {:.1} W", rep.clock_mhz, rep.power_w);
+        }
+        Err(e) => println!("does not fit: {e}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parse_positional_options_flags() {
+        let a = args("experiment fig3 --scale 4 --no-csv");
+        assert_eq!(a.positional, vec!["experiment", "fig3"]);
+        assert_eq!(a.get::<usize>("scale"), Some(4));
+        assert!(a.flags.contains("no-csv"));
+    }
+
+    #[test]
+    fn run_config_from_args() {
+        let a = args("serve --precision 20b --kappa 16");
+        let cfg = run_config(&a).unwrap();
+        assert_eq!(cfg.precision, Precision::Fixed(20));
+        assert_eq!(cfg.kappa, 16);
+    }
+
+    #[test]
+    fn bad_precision_rejected() {
+        let a = args("serve --precision 99x");
+        assert!(run_config(&a).is_err());
+    }
+
+    #[test]
+    fn load_graph_by_name() {
+        let a = args("query --graph AMZN --scale 400");
+        let g = load_graph(&a).unwrap();
+        assert_eq!(g.num_vertices, 128_000 / 400);
+    }
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(dispatch(args("bogus")).is_err());
+    }
+}

@@ -1,0 +1,318 @@
+//! Configuration system: a minimal TOML-subset parser (the vendored crate
+//! set has no `serde`/`toml`; see DESIGN.md §1) plus the typed run
+//! configuration consumed by the CLI, coordinator and benches.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (`"..."`), integer, float, boolean and flat array values, `#` comments.
+
+use crate::fixed::Precision;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Flat array of scalars.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Result<Value> {
+        let t = raw.trim();
+        if let Some(stripped) = t.strip_prefix('"') {
+            let inner = stripped.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string: {t}"))?;
+            return Ok(Value::Str(inner.to_string()));
+        }
+        if t == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if t == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Some(stripped) = t.strip_prefix('[') {
+            let inner = stripped.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array: {t}"))?;
+            let items: Result<Vec<Value>> = inner
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(Value::parse)
+                .collect();
+            return Ok(Value::Array(items?));
+        }
+        if let Ok(i) = t.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = t.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        bail!("cannot parse value: {t}")
+    }
+
+    /// As integer (accepting exact floats).
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            Value::Float(f) if f.fract() == 0.0 => Ok(*f as i64),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    /// As float (accepting integers).
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    /// As string.
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    /// As boolean.
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// A parsed config document: `section.key → value` (top-level keys live in
+/// the "" section).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ConfigDoc {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl ConfigDoc {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            // strip the first '#' that sits outside a quoted string (an
+            // even number of quotes precede it)
+            let line = match raw
+                .char_indices()
+                .find(|&(i, c)| c == '#' && raw[..i].matches('"').count() % 2 == 0)
+            {
+                Some((pos, _)) => &raw[..pos],
+                None => raw,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(stripped) = line.strip_prefix('[') {
+                let name = stripped
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: bad section header", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let value = Value::parse(v).with_context(|| format!("line {}", lineno + 1))?;
+            doc.entries.insert((section.clone(), k.trim().to_string()), value);
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no entries parsed.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Typed run configuration for the serving engine and experiments.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Numeric precision of the engine.
+    pub precision: Precision,
+    /// κ batch lanes.
+    pub kappa: usize,
+    /// Packet width B.
+    pub b: usize,
+    /// Damping factor α.
+    pub alpha: f64,
+    /// PPR iterations.
+    pub iterations: usize,
+    /// Optional convergence threshold (early exit).
+    pub convergence_threshold: Option<f64>,
+    /// Batching timeout for the coordinator (milliseconds).
+    pub batch_timeout_ms: u64,
+    /// Top-N results returned per request.
+    pub top_n: usize,
+    /// Artifacts directory for PJRT execution.
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            precision: Precision::Fixed(26),
+            kappa: crate::PAPER_KAPPA,
+            b: crate::PAPER_B,
+            alpha: crate::PAPER_ALPHA,
+            iterations: crate::PAPER_ITERATIONS,
+            convergence_threshold: None,
+            batch_timeout_ms: 5,
+            top_n: 10,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from a parsed document (section `[engine]`), falling back to
+    /// defaults for missing keys.
+    pub fn from_doc(doc: &ConfigDoc) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        if let Some(v) = doc.get("engine", "precision") {
+            cfg.precision = Precision::parse(v.as_str()?)
+                .ok_or_else(|| anyhow!("bad precision {v:?}"))?;
+        }
+        if let Some(v) = doc.get("engine", "kappa") {
+            cfg.kappa = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("engine", "b") {
+            cfg.b = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("engine", "alpha") {
+            cfg.alpha = v.as_float()?;
+        }
+        if let Some(v) = doc.get("engine", "iterations") {
+            cfg.iterations = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("engine", "convergence_threshold") {
+            cfg.convergence_threshold = Some(v.as_float()?);
+        }
+        if let Some(v) = doc.get("server", "batch_timeout_ms") {
+            cfg.batch_timeout_ms = v.as_int()? as u64;
+        }
+        if let Some(v) = doc.get("server", "top_n") {
+            cfg.top_n = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("server", "artifacts_dir") {
+            cfg.artifacts_dir = v.as_str()?.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a TOML-subset file.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_doc(&ConfigDoc::load(path)?)
+    }
+
+    /// Check parameter sanity.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..1.0).contains(&self.alpha) {
+            bail!("alpha must be in [0,1), got {}", self.alpha);
+        }
+        if self.kappa == 0 || self.kappa > 64 {
+            bail!("kappa must be in 1..=64, got {}", self.kappa);
+        }
+        if self.b == 0 || !self.b.is_power_of_two() {
+            bail!("b must be a power of two, got {}", self.b);
+        }
+        if self.iterations == 0 {
+            bail!("iterations must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = ConfigDoc::parse(
+            r#"
+            # run configuration
+            [engine]
+            precision = "26b"
+            kappa = 8
+            alpha = 0.85
+            iterations = 10
+            [server]
+            batch_timeout_ms = 5
+            top_n = 10
+            names = ["a", "b"]
+            flag = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("engine", "kappa").unwrap().as_int().unwrap(), 8);
+        assert_eq!(doc.get("engine", "alpha").unwrap().as_float().unwrap(), 0.85);
+        assert!(doc.get("server", "flag").unwrap().as_bool().unwrap());
+        match doc.get("server", "names").unwrap() {
+            Value::Array(a) => assert_eq!(a.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn run_config_from_doc() {
+        let doc = ConfigDoc::parse("[engine]\nprecision = \"20b\"\nkappa = 16\n").unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.precision, Precision::Fixed(20));
+        assert_eq!(cfg.kappa, 16);
+        assert_eq!(cfg.alpha, 0.85); // default preserved
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let mut cfg = RunConfig::default();
+        cfg.alpha = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.b = 6;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.kappa = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn parse_errors_are_located() {
+        let err = ConfigDoc::parse("[engine\nkappa = 1").unwrap_err();
+        assert!(err.to_string().contains("line 1"));
+        let err = ConfigDoc::parse("justakey").unwrap_err();
+        assert!(err.to_string().contains("key = value"));
+    }
+}

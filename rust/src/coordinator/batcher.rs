@@ -1,0 +1,159 @@
+//! Dynamic batcher: accumulate requests until the accelerator's κ lanes
+//! are full, or a timeout expires with at least one request pending — the
+//! classic latency/throughput knob of serving systems, and the host-side
+//! realization of the paper's "batch multiple user requests" design.
+
+use super::request::PprRequest;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Thread-safe batching queue.
+pub struct DynamicBatcher {
+    kappa: usize,
+    timeout: Duration,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+struct Inner {
+    queue: VecDeque<PprRequest>,
+    closed: bool,
+}
+
+impl DynamicBatcher {
+    /// Create a batcher for κ-lane batches with the given flush timeout.
+    pub fn new(kappa: usize, timeout: Duration) -> Self {
+        assert!(kappa >= 1);
+        Self {
+            kappa,
+            timeout,
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request. Returns `false` if the batcher is closed.
+    pub fn submit(&self, req: PprRequest) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return false;
+        }
+        inner.queue.push_back(req);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Blocking: wait for the next batch. Returns up to κ requests —
+    /// exactly κ when the queue is hot, fewer when the flush timeout
+    /// expires first. Returns `None` when closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<PprRequest>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            // wait for the first request (or closure)
+            while inner.queue.is_empty() {
+                if inner.closed {
+                    return None;
+                }
+                inner = self.cv.wait(inner).unwrap();
+            }
+            // first request in hand: wait up to `timeout` for a full batch
+            let deadline = Instant::now() + self.timeout;
+            while inner.queue.len() < self.kappa && !inner.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _res) = self.cv.wait_timeout(inner, deadline - now).unwrap();
+                inner = guard;
+            }
+            if inner.queue.is_empty() {
+                continue; // raced with another worker
+            }
+            let take = inner.queue.len().min(self.kappa);
+            return Some(inner.queue.drain(..take).collect());
+        }
+    }
+
+    /// Close the batcher: pending requests still drain, new submissions
+    /// are rejected, workers wake up.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Queue depth (diagnostics).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// The κ this batcher fills toward.
+    pub fn kappa(&self) -> usize {
+        self.kappa
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> PprRequest {
+        PprRequest::new(id, id as u32, 10)
+    }
+
+    #[test]
+    fn full_batch_returned_immediately() {
+        let b = DynamicBatcher::new(4, Duration::from_secs(10));
+        for i in 0..4 {
+            assert!(b.submit(req(i)));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0);
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let b = DynamicBatcher::new(8, Duration::from_millis(20));
+        b.submit(req(1));
+        let start = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(start.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn close_wakes_waiters() {
+        let b = Arc::new(DynamicBatcher::new(4, Duration::from_secs(10)));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(h.join().unwrap().is_none());
+        assert!(!b.submit(req(9)), "closed batcher rejects submissions");
+    }
+
+    #[test]
+    fn close_drains_pending() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        b.submit(req(1));
+        b.submit(req(2));
+        b.close();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn oversubmission_splits_batches() {
+        let b = DynamicBatcher::new(2, Duration::from_millis(5));
+        for i in 0..5 {
+            b.submit(req(i));
+        }
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert_eq!(b.depth(), 0);
+    }
+}

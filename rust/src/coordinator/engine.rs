@@ -1,0 +1,312 @@
+//! Accelerator abstraction for the serving path.
+//!
+//! [`PprEngine`] is the trait the server's workers drive; implementations:
+//!
+//! - [`NativeEngine`] — the bit-accurate Rust fixed-point/float engine
+//!   (paper-scale, no artifact needed);
+//! - [`crate::runtime::PjrtPprEngine`] via [`PjrtEngineAdapter`] — the
+//!   three-layer path executing the AOT JAX/Pallas artifacts.
+
+use crate::config::RunConfig;
+use crate::fixed::Precision;
+use crate::graph::VertexId;
+use crate::ppr::{BatchedPpr, PprConfig, PreparedGraph};
+use crate::spmv::datapath::{FixedPath, FloatPath};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Which backend a server uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Native Rust engine (bit-accurate model of the FPGA datapath).
+    Native,
+    /// PJRT execution of the AOT JAX/Pallas artifacts.
+    Pjrt,
+}
+
+/// A batch-capable PPR accelerator: runs exactly κ personalization
+/// vertices per call and returns dense dequantized scores per lane.
+pub trait PprEngine: Send {
+    /// κ lanes per batch.
+    fn kappa(&self) -> usize;
+    /// Number of vertices scores are produced for.
+    fn num_vertices(&self) -> usize;
+    /// Run one batch; returns (lane-major scores `[lane][vertex]`,
+    /// iterations executed).
+    fn run_batch(&mut self, personalization: &[VertexId]) -> Result<(Vec<Vec<f64>>, usize)>;
+    /// Engine description for logs.
+    fn describe(&self) -> String;
+}
+
+/// Like [`PprEngine`] but without the `Send` bound — PJRT handles hold
+/// `Rc`s and raw pointers, so they must stay on the thread that created
+/// them. Wrap with [`ThreadBoundEngine`] to serve from worker pools.
+pub trait LocalPprEngine {
+    /// κ lanes per batch.
+    fn kappa(&self) -> usize;
+    /// Number of vertices scores are produced for.
+    fn num_vertices(&self) -> usize;
+    /// Run one batch.
+    fn run_batch(&mut self, personalization: &[VertexId]) -> Result<(Vec<Vec<f64>>, usize)>;
+    /// Engine description for logs.
+    fn describe(&self) -> String;
+}
+
+/// Native engine: a persistent [`BatchedPpr`] over the configured
+/// precision (value stream quantized once at construction, like loading
+/// the graph onto the accelerator once — §4.2).
+pub struct NativeEngine {
+    inner: NativeInner,
+    num_vertices: usize,
+    cfg: RunConfig,
+    ppr_cfg: PprConfig,
+}
+
+enum NativeInner {
+    Fixed(BatchedPpr<FixedPath>),
+    Float(BatchedPpr<FloatPath>),
+}
+
+impl NativeEngine {
+    /// Bind to a prepared graph.
+    pub fn new(graph: Arc<PreparedGraph>, cfg: RunConfig) -> Self {
+        let ppr_cfg = PprConfig {
+            alpha: cfg.alpha,
+            max_iterations: cfg.iterations,
+            convergence_threshold: cfg.convergence_threshold,
+        };
+        let num_vertices = graph.num_vertices;
+        let inner = match cfg.precision {
+            Precision::Fixed(w) => NativeInner::Fixed(BatchedPpr::new(
+                FixedPath::paper(w),
+                graph,
+                cfg.kappa,
+                cfg.alpha,
+            )),
+            Precision::Float32 => {
+                NativeInner::Float(BatchedPpr::new(FloatPath, graph, cfg.kappa, cfg.alpha))
+            }
+        };
+        Self { inner, num_vertices, cfg, ppr_cfg }
+    }
+}
+
+impl PprEngine for NativeEngine {
+    fn kappa(&self) -> usize {
+        self.cfg.kappa
+    }
+
+    fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    fn run_batch(&mut self, personalization: &[VertexId]) -> Result<(Vec<Vec<f64>>, usize)> {
+        let kappa = self.cfg.kappa;
+        anyhow::ensure!(personalization.len() == kappa, "batch must have κ={kappa} entries");
+        let (scores, iters) = match &mut self.inner {
+            NativeInner::Fixed(engine) => {
+                let fmt = engine.datapath.fmt;
+                let out = engine.run(personalization, &self.ppr_cfg);
+                let lanes = (0..kappa)
+                    .map(|k| {
+                        out.lane(k, kappa).iter().map(|&w_| fmt.to_f64(w_)).collect::<Vec<f64>>()
+                    })
+                    .collect();
+                (lanes, out.iterations)
+            }
+            NativeInner::Float(engine) => {
+                let out = engine.run(personalization, &self.ppr_cfg);
+                let lanes = (0..kappa)
+                    .map(|k| out.lane(k, kappa).iter().map(|&w_| w_ as f64).collect::<Vec<f64>>())
+                    .collect();
+                (lanes, out.iterations)
+            }
+        };
+        Ok((scores, iters))
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "native[{} κ={} B={} iters={}]",
+            self.cfg.precision, self.cfg.kappa, self.cfg.b, self.cfg.iterations
+        )
+    }
+}
+
+/// Adapter making [`crate::runtime::PjrtPprEngine`] a [`PprEngine`].
+pub struct PjrtEngineAdapter {
+    inner: crate::runtime::PjrtPprEngine,
+    ppr_cfg: PprConfig,
+    graph_vertices: usize,
+}
+
+impl PjrtEngineAdapter {
+    /// Wrap a loaded PJRT engine. `graph_vertices` is the real |V| (the
+    /// artifact may be padded larger).
+    pub fn new(inner: crate::runtime::PjrtPprEngine, cfg: &RunConfig, graph_vertices: usize) -> Self {
+        let ppr_cfg = PprConfig {
+            alpha: cfg.alpha,
+            max_iterations: cfg.iterations,
+            convergence_threshold: cfg.convergence_threshold,
+        };
+        Self { inner, ppr_cfg, graph_vertices }
+    }
+}
+
+impl LocalPprEngine for PjrtEngineAdapter {
+    fn kappa(&self) -> usize {
+        self.inner.spec().kappa
+    }
+
+    fn num_vertices(&self) -> usize {
+        self.graph_vertices
+    }
+
+    fn run_batch(&mut self, personalization: &[VertexId]) -> Result<(Vec<Vec<f64>>, usize)> {
+        let kappa = LocalPprEngine::kappa(self);
+        let (scores, iters) = self.inner.run(personalization, &self.ppr_cfg)?;
+        let lanes = (0..kappa)
+            .map(|k| {
+                (0..self.graph_vertices).map(|v| scores[v * kappa + k]).collect::<Vec<f64>>()
+            })
+            .collect();
+        Ok((lanes, iters))
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt[{} {}]", self.inner.spec().label, self.inner.spec().file)
+    }
+}
+
+/// Pins a non-`Send` [`LocalPprEngine`] (e.g. the PJRT engine) to a
+/// dedicated thread and exposes a `Send` [`PprEngine`] facade over a
+/// channel — the standard pattern for thread-affine accelerator handles.
+pub struct ThreadBoundEngine {
+    tx: std::sync::mpsc::Sender<Job>,
+    kappa: usize,
+    num_vertices: usize,
+    description: String,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+type BatchResult = Result<(Vec<Vec<f64>>, usize)>;
+struct Job {
+    lanes: Vec<VertexId>,
+    reply: std::sync::mpsc::Sender<BatchResult>,
+}
+
+impl ThreadBoundEngine {
+    /// Spawn the owning thread: `factory` runs *on that thread* to build
+    /// the engine (PJRT clients must be created where they execute).
+    pub fn spawn<F>(factory: F) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Box<dyn LocalPprEngine>> + Send + 'static,
+    {
+        let (tx, rx) = std::sync::mpsc::channel::<Job>();
+        let (init_tx, init_rx) = std::sync::mpsc::channel();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let mut engine = match factory() {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok((e.kappa(), e.num_vertices(), e.describe())));
+                        e
+                    }
+                    Err(err) => {
+                        let _ = init_tx.send(Err(format!("{err:#}")));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    let _ = job.reply.send(engine.run_batch(&job.lanes));
+                }
+            })
+            .expect("spawn engine thread");
+        let (kappa, num_vertices, description) = init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during init"))?
+            .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
+        Ok(Self { tx, kappa, num_vertices, description, handle: Some(handle) })
+    }
+}
+
+impl PprEngine for ThreadBoundEngine {
+    fn kappa(&self) -> usize {
+        self.kappa
+    }
+
+    fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    fn run_batch(&mut self, personalization: &[VertexId]) -> Result<(Vec<Vec<f64>>, usize)> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(Job { lanes: personalization.to_vec(), reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped reply"))?
+    }
+
+    fn describe(&self) -> String {
+        self.description.clone()
+    }
+}
+
+impl Drop for ThreadBoundEngine {
+    fn drop(&mut self) {
+        // closing the channel stops the loop; join to release the client
+        let (dead_tx, _) = std::sync::mpsc::channel();
+        let _ = std::mem::replace(&mut self.tx, dead_tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn engine(precision: Precision) -> NativeEngine {
+        let g = crate::graph::generators::erdos_renyi(128, 0.05, 10);
+        let pg = Arc::new(PreparedGraph::new(&g, 8));
+        let cfg = RunConfig { precision, kappa: 4, iterations: 15, ..Default::default() };
+        NativeEngine::new(pg, cfg)
+    }
+
+    #[test]
+    fn native_engine_runs_batch() {
+        let mut e = engine(Precision::Fixed(26));
+        let (lanes, iters) = e.run_batch(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(lanes.len(), 4);
+        assert_eq!(lanes[0].len(), 128);
+        assert_eq!(iters, 15);
+        // each lane's personalization vertex carries a large score
+        for (k, &pv) in [1u32, 2, 3, 4].iter().enumerate() {
+            let best = crate::metrics::top_n_indices_f64(&lanes[k], 1)[0];
+            assert_eq!(best, pv as usize);
+        }
+    }
+
+    #[test]
+    fn native_engine_float_variant() {
+        let mut e = engine(Precision::Float32);
+        let (lanes, _) = e.run_batch(&[5, 6, 7, 8]).unwrap();
+        let sum: f64 = lanes[0].iter().sum();
+        assert!((sum - 1.0).abs() < 0.05, "{sum}");
+    }
+
+    #[test]
+    fn wrong_batch_size_rejected() {
+        let mut e = engine(Precision::Fixed(20));
+        assert!(e.run_batch(&[1, 2]).is_err());
+    }
+
+    #[test]
+    fn describe_mentions_precision() {
+        let e = engine(Precision::Fixed(22));
+        assert!(e.describe().contains("22b"));
+        let _ = Graph::new(1, vec![]);
+    }
+}

@@ -1,0 +1,30 @@
+//! L3 coordinator — the serving layer the paper's use-case implies
+//! (§1: "find recommended posts in a social network while users interact
+//! with it, or recommended items for a given query on an e-commerce
+//! platform"; §3: "we compute κ personalization vertices in parallel, to
+//! batch multiple user requests").
+//!
+//! - [`request`] — typed queries/responses with latency accounting.
+//! - [`batcher`] — the dynamic batcher: fill the accelerator's κ lanes or
+//!   flush on timeout (the host-side half of the paper's batching design).
+//! - [`engine`] — the accelerator abstraction: the bit-accurate native
+//!   engine (paper-scale experiments) and the PJRT engine running the AOT
+//!   artifacts (the three-layer serving path).
+//! - [`server`] — worker threads, submission API, graceful shutdown.
+//! - [`stats`] — latency percentiles and throughput counters.
+//!
+//! The vendored crate set has no tokio; the coordinator is built on
+//! `std::thread` + `mpsc` + `Condvar`, which is entirely adequate for a
+//! compute-bound accelerator front-end (one in-flight batch per engine).
+
+pub mod batcher;
+pub mod engine;
+pub mod request;
+pub mod server;
+pub mod stats;
+
+pub use batcher::DynamicBatcher;
+pub use engine::{EngineKind, NativeEngine, PprEngine};
+pub use request::{PprRequest, PprResponse, RankedVertex};
+pub use server::{Server, ServerConfig};
+pub use stats::ServerStats;

@@ -1,0 +1,77 @@
+//! Request/response types of the serving API.
+
+use crate::graph::VertexId;
+use std::time::{Duration, Instant};
+
+/// A single PPR query: "rank vertices for this personalization vertex".
+#[derive(Debug, Clone)]
+pub struct PprRequest {
+    /// Client-assigned id, echoed in the response.
+    pub id: u64,
+    /// Personalization vertex.
+    pub vertex: VertexId,
+    /// How many top-ranked vertices to return.
+    pub top_n: usize,
+    /// Submission timestamp (set by the server on enqueue).
+    pub enqueued_at: Instant,
+}
+
+impl PprRequest {
+    /// Build a request (enqueue time is stamped now).
+    pub fn new(id: u64, vertex: VertexId, top_n: usize) -> Self {
+        Self { id, vertex, top_n, enqueued_at: Instant::now() }
+    }
+}
+
+/// One ranked result row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RankedVertex {
+    /// Vertex id.
+    pub vertex: VertexId,
+    /// PPR score (dequantized).
+    pub score: f64,
+}
+
+/// The response to a [`PprRequest`].
+#[derive(Debug, Clone)]
+pub struct PprResponse {
+    /// Echo of the request id.
+    pub id: u64,
+    /// Echo of the personalization vertex.
+    pub vertex: VertexId,
+    /// Top-N vertices, descending score.
+    pub ranking: Vec<RankedVertex>,
+    /// PPR iterations the batch executed.
+    pub iterations: usize,
+    /// Queue wait (enqueue → batch formation).
+    pub queue_time: Duration,
+    /// Total latency (enqueue → response).
+    pub total_time: Duration,
+}
+
+/// Extract the top-N ranking from a dense lane of scores.
+pub fn rank_top_n(scores: &[f64], top_n: usize) -> Vec<RankedVertex> {
+    crate::metrics::top_n_indices_f64(scores, top_n)
+        .into_iter()
+        .map(|v| RankedVertex { vertex: v as VertexId, score: scores[v] })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_top_n_orders() {
+        let scores = [0.1, 0.5, 0.3];
+        let r = rank_top_n(&scores, 2);
+        assert_eq!(r[0], RankedVertex { vertex: 1, score: 0.5 });
+        assert_eq!(r[1], RankedVertex { vertex: 2, score: 0.3 });
+    }
+
+    #[test]
+    fn request_stamps_time() {
+        let r = PprRequest::new(1, 2, 10);
+        assert!(r.enqueued_at.elapsed() < Duration::from_secs(1));
+    }
+}

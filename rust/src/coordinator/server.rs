@@ -1,0 +1,246 @@
+//! The serving front-end: a submission API feeding the dynamic batcher,
+//! worker threads driving accelerator engines, per-request response
+//! channels, and graceful shutdown.
+//!
+//! Topology mirrors the paper's host-accelerator model (§4.2): the host
+//! batches incoming queries; each worker owns one engine (one "board")
+//! and executes κ-lane batches; results stream back per request.
+
+use super::batcher::DynamicBatcher;
+use super::engine::PprEngine;
+use super::request::{rank_top_n, PprRequest, PprResponse};
+use super::stats::ServerStats;
+use crate::graph::VertexId;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Batching flush timeout.
+    pub batch_timeout: Duration,
+    /// Top-N returned per request.
+    pub default_top_n: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { batch_timeout: Duration::from_millis(5), default_top_n: 10 }
+    }
+}
+
+type ResponseSender = mpsc::Sender<Result<PprResponse, String>>;
+
+/// A running PPR serving instance.
+pub struct Server {
+    batcher: Arc<DynamicBatcher>,
+    pending: Arc<Mutex<std::collections::HashMap<u64, ResponseSender>>>,
+    stats: Arc<ServerStats>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+    num_vertices: usize,
+}
+
+impl Server {
+    /// Start a server over one engine per worker. All engines must share
+    /// κ and vertex count.
+    pub fn start(engines: Vec<Box<dyn PprEngine>>, cfg: ServerConfig) -> Self {
+        assert!(!engines.is_empty(), "need at least one engine");
+        let kappa = engines[0].kappa();
+        let num_vertices = engines[0].num_vertices();
+        assert!(engines.iter().all(|e| e.kappa() == kappa && e.num_vertices() == num_vertices));
+
+        let batcher = Arc::new(DynamicBatcher::new(kappa, cfg.batch_timeout));
+        let pending: Arc<Mutex<std::collections::HashMap<u64, ResponseSender>>> =
+            Arc::new(Mutex::new(std::collections::HashMap::new()));
+        let stats = Arc::new(ServerStats::new());
+
+        let workers = engines
+            .into_iter()
+            .enumerate()
+            .map(|(widx, mut engine)| {
+                let batcher = batcher.clone();
+                let pending = pending.clone();
+                let stats = stats.clone();
+                std::thread::Builder::new()
+                    .name(format!("ppr-worker-{widx}"))
+                    .spawn(move || {
+                        while let Some(batch) = batcher.next_batch() {
+                            Self::serve_batch(&mut *engine, &batch, &pending, &stats);
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+
+        Self {
+            batcher,
+            pending,
+            stats,
+            workers,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+            num_vertices,
+        }
+    }
+
+    fn serve_batch(
+        engine: &mut dyn PprEngine,
+        batch: &[PprRequest],
+        pending: &Mutex<std::collections::HashMap<u64, ResponseSender>>,
+        stats: &ServerStats,
+    ) {
+        let kappa = engine.kappa();
+        let batch_start = Instant::now();
+        // fill unused lanes by repeating the last request (hardware always
+        // runs κ lanes — Alg. 1)
+        let mut lanes: Vec<VertexId> = batch.iter().map(|r| r.vertex).collect();
+        while lanes.len() < kappa {
+            lanes.push(*lanes.last().unwrap());
+        }
+        stats.record_batch(batch.len());
+        match engine.run_batch(&lanes) {
+            Ok((scores, iterations)) => {
+                for (lane, req) in batch.iter().enumerate() {
+                    let ranking = rank_top_n(&scores[lane], req.top_n);
+                    let queue_time = batch_start.duration_since(req.enqueued_at);
+                    let total_time = req.enqueued_at.elapsed();
+                    stats.record_request(queue_time, total_time);
+                    let resp = PprResponse {
+                        id: req.id,
+                        vertex: req.vertex,
+                        ranking,
+                        iterations,
+                        queue_time,
+                        total_time,
+                    };
+                    if let Some(tx) = pending.lock().unwrap().remove(&req.id) {
+                        let _ = tx.send(Ok(resp));
+                    }
+                }
+            }
+            Err(e) => {
+                for req in batch {
+                    stats.record_error();
+                    if let Some(tx) = pending.lock().unwrap().remove(&req.id) {
+                        let _ = tx.send(Err(format!("engine error: {e}")));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Submit a query; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        vertex: VertexId,
+        top_n: usize,
+    ) -> mpsc::Receiver<Result<PprResponse, String>> {
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.pending.lock().unwrap().insert(id, tx);
+        let accepted = self.batcher.submit(PprRequest::new(id, vertex, top_n));
+        if !accepted {
+            if let Some(tx) = self.pending.lock().unwrap().remove(&id) {
+                let _ = tx.send(Err("server shutting down".to_string()));
+            }
+        }
+        rx
+    }
+
+    /// Submit and block for the response.
+    pub fn query(&self, vertex: VertexId, top_n: usize) -> Result<PprResponse, String> {
+        self.submit(vertex, top_n)
+            .recv()
+            .map_err(|_| "response channel closed".to_string())?
+    }
+
+    /// Current statistics.
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// |V| served.
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    /// Stop accepting requests, drain, and join workers.
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::fixed::Precision;
+    use crate::ppr::PreparedGraph;
+
+    fn start_server(workers: usize, kappa: usize) -> Server {
+        let g = crate::graph::generators::watts_strogatz(256, 8, 0.2, 42);
+        let pg = Arc::new(PreparedGraph::new(&g, 8));
+        let cfg = RunConfig {
+            precision: Precision::Fixed(26),
+            kappa,
+            iterations: 30,
+            ..Default::default()
+        };
+        let engines: Vec<Box<dyn PprEngine>> = (0..workers)
+            .map(|_| Box::new(NativeEngine::new(pg.clone(), cfg.clone())) as Box<dyn PprEngine>)
+            .collect();
+        Server::start(engines, ServerConfig { batch_timeout: Duration::from_millis(2), ..Default::default() })
+    }
+
+    #[test]
+    fn query_returns_self_top_ranked() {
+        let server = start_server(1, 4);
+        let resp = server.query(7, 5).unwrap();
+        assert_eq!(resp.vertex, 7);
+        assert_eq!(resp.ranking.len(), 5);
+        assert_eq!(resp.ranking[0].vertex, 7, "personalization vertex ranks first");
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_queries_all_answered() {
+        let server = Arc::new(start_server(2, 4));
+        let mut handles = Vec::new();
+        for i in 0..20u32 {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || s.query(i % 256, 3).unwrap()));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let resp = h.join().unwrap();
+            assert_eq!(resp.vertex, (i % 256) as u32 % 256);
+            assert_eq!(resp.ranking.len(), 3);
+        }
+        let snap = server.stats().snapshot();
+        assert_eq!(snap.requests, 20);
+        assert!(snap.batches >= 3, "κ=4 → at least 5 batches expected, got {}", snap.batches);
+        assert!(snap.mean_batch_fill > 1.0);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_queries() {
+        let server = start_server(1, 2);
+        let batcher = server.batcher.clone();
+        server.shutdown();
+        assert!(!batcher.submit(PprRequest::new(999, 0, 1)));
+    }
+}

@@ -1,0 +1,164 @@
+//! Serving statistics: latency percentiles (log-bucketed histogram) and
+//! throughput counters, thread-safe via atomics + a mutex-guarded
+//! histogram (contention-free relative to millisecond-scale batches).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Number of histogram buckets: bucket i covers [2^(i/4), 2^((i+1)/4)) µs.
+const BUCKETS: usize = 128;
+
+/// Thread-safe server statistics.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    batch_fill_sum: AtomicU64,
+    errors: AtomicU64,
+    latency: Mutex<Histogram>,
+    queue: Mutex<Histogram>,
+}
+
+#[derive(Debug, Clone)]
+struct Histogram {
+    counts: [u64; BUCKETS],
+    total: u64,
+}
+
+impl Histogram {
+    fn bucket_of(d: Duration) -> usize {
+        let us = d.as_micros().max(1) as f64;
+        ((us.log2() * 4.0) as usize).min(BUCKETS - 1)
+    }
+
+    fn record(&mut self, d: Duration) {
+        self.counts[Self::bucket_of(d)] += 1;
+        self.total += 1;
+    }
+
+    /// Upper edge (µs) of the bucket containing quantile `q`.
+    fn quantile_us(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((self.total as f64) * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 2f64.powf((i + 1) as f64 / 4.0);
+            }
+        }
+        2f64.powf(BUCKETS as f64 / 4.0)
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self { counts: [0; BUCKETS], total: 0 }
+    }
+}
+
+/// A point-in-time summary of the stats.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StatsSnapshot {
+    /// Completed requests.
+    pub requests: u64,
+    /// Executed batches.
+    pub batches: u64,
+    /// Mean lanes filled per batch (κ utilization).
+    pub mean_batch_fill: f64,
+    /// Failed requests.
+    pub errors: u64,
+    /// Total-latency percentiles (milliseconds).
+    pub latency_p50_ms: f64,
+    /// p95 latency (ms).
+    pub latency_p95_ms: f64,
+    /// p99 latency (ms).
+    pub latency_p99_ms: f64,
+    /// Median queue wait (ms).
+    pub queue_p50_ms: f64,
+}
+
+impl ServerStats {
+    /// New zeroed stats.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed batch of `fill` requests.
+    pub fn record_batch(&self, fill: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_fill_sum.fetch_add(fill as u64, Ordering::Relaxed);
+    }
+
+    /// Record one completed request with its latency split.
+    pub fn record_request(&self, queue: Duration, total: Duration) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latency.lock().unwrap().record(total);
+        self.queue.lock().unwrap().record(queue);
+    }
+
+    /// Record a failed request.
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot all counters.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let fill_sum = self.batch_fill_sum.load(Ordering::Relaxed);
+        let lat = self.latency.lock().unwrap().clone();
+        let q = self.queue.lock().unwrap().clone();
+        StatsSnapshot {
+            requests,
+            batches,
+            mean_batch_fill: if batches > 0 { fill_sum as f64 / batches as f64 } else { 0.0 },
+            errors: self.errors.load(Ordering::Relaxed),
+            latency_p50_ms: lat.quantile_us(0.50) / 1e3,
+            latency_p95_ms: lat.quantile_us(0.95) / 1e3,
+            latency_p99_ms: lat.quantile_us(0.99) / 1e3,
+            queue_p50_ms: q.quantile_us(0.50) / 1e3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let s = ServerStats::new();
+        for ms in [1u64, 2, 3, 10, 50, 100] {
+            s.record_request(Duration::from_millis(ms / 2), Duration::from_millis(ms));
+        }
+        s.record_batch(6);
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 6);
+        assert_eq!(snap.batches, 1);
+        assert_eq!(snap.mean_batch_fill, 6.0);
+        assert!(snap.latency_p50_ms <= snap.latency_p95_ms);
+        assert!(snap.latency_p95_ms <= snap.latency_p99_ms);
+        assert!(snap.latency_p99_ms >= 50.0, "{}", snap.latency_p99_ms);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let snap = ServerStats::new().snapshot();
+        assert_eq!(snap.requests, 0);
+        assert_eq!(snap.latency_p50_ms, 0.0);
+        assert_eq!(snap.mean_batch_fill, 0.0);
+    }
+
+    #[test]
+    fn bucket_monotone() {
+        let a = Histogram::bucket_of(Duration::from_micros(10));
+        let b = Histogram::bucket_of(Duration::from_micros(100));
+        let c = Histogram::bucket_of(Duration::from_millis(100));
+        assert!(a < b && b < c);
+        assert!(c < BUCKETS);
+    }
+}

@@ -1,0 +1,191 @@
+//! Runtime description of an unsigned Qm.n fixed-point format and its
+//! quantization behaviour.
+
+/// Quantization policy applied when a value has more fractional bits than
+/// the format can represent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum RoundingMode {
+    /// Truncate toward zero — the policy the paper ships ("quantization
+    /// truncates to zero the fractional bits with precision higher than
+    /// representable").
+    #[default]
+    Truncate,
+    /// Round to nearest (ties away from zero) — the policy the paper
+    /// *rejected* for numerical instability; kept as an ablation.
+    Nearest,
+}
+
+/// An unsigned fixed-point format with `int_bits` integer bits and
+/// `frac_bits` fractional bits (total width = int_bits + frac_bits ≤ 63).
+///
+/// PPR values live in `[0, 1]`, so the paper uses Q1.(w−1): one integer bit
+/// so that the value 1.0 (the initial score of a personalization vertex) is
+/// representable exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FixedFormat {
+    /// Number of integer bits (paper: 1).
+    pub int_bits: u32,
+    /// Number of fractional bits (paper: w−1 for width w).
+    pub frac_bits: u32,
+    /// Quantization policy (paper: truncate).
+    pub rounding: RoundingMode,
+}
+
+impl FixedFormat {
+    /// Construct a format; panics if the total width exceeds 63 bits (we
+    /// need headroom for 128-bit-free products in the hot loop).
+    pub fn new(int_bits: u32, frac_bits: u32, rounding: RoundingMode) -> Self {
+        assert!(int_bits >= 1, "need at least one integer bit");
+        assert!(int_bits + frac_bits <= 63, "total width must be <= 63");
+        Self { int_bits, frac_bits, rounding }
+    }
+
+    /// The paper's format for a given total width `w`: unsigned Q1.(w−1),
+    /// truncating quantizer. E.g. `paper(26)` = Q1.25.
+    pub fn paper(total_bits: u32) -> Self {
+        assert!(total_bits >= 2, "width must be >= 2");
+        Self::new(1, total_bits - 1, RoundingMode::Truncate)
+    }
+
+    /// Total storage width in bits.
+    #[inline]
+    pub fn total_bits(&self) -> u32 {
+        self.int_bits + self.frac_bits
+    }
+
+    /// One ULP as f64 (2^-frac_bits).
+    #[inline]
+    pub fn ulp(&self) -> f64 {
+        (0.5f64).powi(self.frac_bits as i32)
+    }
+
+    /// Maximum representable raw word (all ones within the width).
+    #[inline]
+    pub fn max_raw(&self) -> u64 {
+        (1u64 << self.total_bits()) - 1
+    }
+
+    /// Maximum representable value as f64.
+    #[inline]
+    pub fn max_value(&self) -> f64 {
+        self.max_raw() as f64 * self.ulp()
+    }
+
+    /// The raw word representing exactly 1.0.
+    #[inline]
+    pub fn one(&self) -> u64 {
+        1u64 << self.frac_bits
+    }
+
+    /// Quantize an `f64` into a raw word, applying the format's rounding
+    /// mode and saturating to `[0, max_raw]`. Negative inputs clamp to 0
+    /// (the format is unsigned; PPR values are non-negative by
+    /// construction).
+    #[inline]
+    pub fn quantize(&self, x: f64) -> u64 {
+        if x <= 0.0 || x.is_nan() {
+            return 0;
+        }
+        let scaled = x * (1u64 << self.frac_bits) as f64;
+        let raw = match self.rounding {
+            RoundingMode::Truncate => scaled.floor(),
+            RoundingMode::Nearest => (scaled + 0.5).floor(),
+        };
+        if raw >= self.max_raw() as f64 {
+            self.max_raw()
+        } else {
+            raw as u64
+        }
+    }
+
+    /// Convert a raw word back to f64 (exact: widths ≤ 53 fractional bits
+    /// round-trip losslessly through the f64 mantissa for the paper's
+    /// widths).
+    #[inline]
+    pub fn to_f64(&self, raw: u64) -> f64 {
+        raw as f64 * self.ulp()
+    }
+
+    /// Quantize a slice of f64 into raw words.
+    pub fn quantize_slice(&self, xs: &[f64]) -> Vec<u64> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Dequantize a slice of raw words into f64.
+    pub fn dequantize_slice(&self, raws: &[u64]) -> Vec<f64> {
+        raws.iter().map(|&r| self.to_f64(r)).collect()
+    }
+
+    /// Human-readable name, e.g. "Q1.25".
+    pub fn name(&self) -> String {
+        format!("Q{}.{}", self.int_bits, self.frac_bits)
+    }
+}
+
+impl std::fmt::Display for FixedFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_formats() {
+        let q = FixedFormat::paper(26);
+        assert_eq!(q.int_bits, 1);
+        assert_eq!(q.frac_bits, 25);
+        assert_eq!(q.total_bits(), 26);
+        assert_eq!(q.name(), "Q1.25");
+        assert_eq!(q.rounding, RoundingMode::Truncate);
+    }
+
+    #[test]
+    fn one_is_exact() {
+        for w in [20, 22, 24, 26] {
+            let q = FixedFormat::paper(w);
+            assert_eq!(q.to_f64(q.one()), 1.0);
+            assert_eq!(q.quantize(1.0), q.one());
+        }
+    }
+
+    #[test]
+    fn truncation_floors() {
+        let q = FixedFormat::paper(20); // Q1.19, ulp = 2^-19
+        let ulp = q.ulp();
+        // 2.9 ulp truncates to 2 ulp
+        assert_eq!(q.quantize(2.9 * ulp), 2);
+        // nearest would round it to 3
+        let qn = FixedFormat::new(1, 19, RoundingMode::Nearest);
+        assert_eq!(qn.quantize(2.9 * ulp), 3);
+    }
+
+    #[test]
+    fn saturation_and_clamping() {
+        let q = FixedFormat::paper(20);
+        assert_eq!(q.quantize(100.0), q.max_raw());
+        assert_eq!(q.quantize(-0.5), 0);
+        assert_eq!(q.quantize(f64::NAN), 0);
+        assert!(q.max_value() < 2.0);
+        assert!(q.max_value() > 1.999);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_ulp() {
+        let q = FixedFormat::paper(24);
+        let mut x = 0.000913;
+        while x < 1.0 {
+            let err = x - q.to_f64(q.quantize(x));
+            assert!(err >= 0.0 && err < q.ulp(), "x={x} err={err}");
+            x += 0.01037;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "width")]
+    fn too_wide_rejected() {
+        FixedFormat::new(1, 63, RoundingMode::Truncate);
+    }
+}

@@ -1,0 +1,128 @@
+//! Reduced-precision fixed-point arithmetic (§4.1 of the paper).
+//!
+//! The paper stores PPR values as **unsigned Q1.(w−1)** fixed-point numbers
+//! — one integer bit and `w−1` fractional bits for a total width `w` ∈
+//! {20, 22, 24, 26} — and quantizes by **truncating toward zero** the
+//! fractional bits beyond the representable precision ("other policies,
+//! e.g. rounding to the closest representable value, resulted in numerical
+//! instability"). This module is a bit-accurate software model of that
+//! datapath:
+//!
+//! - [`format::FixedFormat`] describes a Qm.n format at runtime (bit-width
+//!   is a CLI/config parameter, exactly like re-synthesizing the FPGA
+//!   design with a different width).
+//! - [`ops`] are the scalar datapath primitives: quantize, multiply with
+//!   truncation, saturating add — all over raw `u64` words so the hot loop
+//!   works on flat arrays with no per-element dispatch.
+//! - [`vector::FxVec`] is a convenience wrapper used by tests, examples and
+//!   the coordinator's response path.
+//!
+//! The same arithmetic (int storage, wide products, arithmetic right-shift
+//! truncation) is implemented in the Pallas kernel
+//! (`python/compile/kernels/coo_spmv.py`); a cross-engine test asserts the
+//! two agree **bit-exactly**.
+
+pub mod format;
+pub mod ops;
+pub mod vector;
+
+pub use format::{FixedFormat, RoundingMode};
+pub use vector::FxVec;
+
+/// The bit-widths evaluated in the paper (§5): Q1.19, Q1.21, Q1.23, Q1.25.
+pub const PAPER_BITWIDTHS: [u32; 4] = [20, 22, 24, 26];
+
+/// Identifier for the arithmetic used by an engine/run: one of the paper's
+/// fixed-point widths, or IEEE f32 (the baseline datapath).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Unsigned fixed-point with the given total width (Q1.(w-1)).
+    Fixed(u32),
+    /// IEEE-754 binary32 (the paper's F32 FPGA variant and CPU baseline).
+    Float32,
+}
+
+impl Precision {
+    /// All precisions evaluated in the paper's figures, fixed widths
+    /// ascending then float: 20, 22, 24, 26, F32.
+    pub fn paper_sweep() -> Vec<Precision> {
+        let mut v: Vec<Precision> = PAPER_BITWIDTHS.iter().map(|&w| Precision::Fixed(w)).collect();
+        v.push(Precision::Float32);
+        v
+    }
+
+    /// Short label used in reports ("20b", "F32", ...).
+    pub fn label(&self) -> String {
+        match self {
+            Precision::Fixed(w) => format!("{w}b"),
+            Precision::Float32 => "F32".to_string(),
+        }
+    }
+
+    /// The storage width in bits (32 for F32).
+    pub fn bits(&self) -> u32 {
+        match self {
+            Precision::Fixed(w) => *w,
+            Precision::Float32 => 32,
+        }
+    }
+
+    /// The fixed format for this precision, if fixed.
+    pub fn format(&self) -> Option<FixedFormat> {
+        match self {
+            Precision::Fixed(w) => Some(FixedFormat::paper(*w)),
+            Precision::Float32 => None,
+        }
+    }
+
+    /// Parse from a label ("20b"/"q1.19"/"f32"/"float").
+    pub fn parse(s: &str) -> Option<Precision> {
+        let t = s.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "f32" | "float" | "float32" => Some(Precision::Float32),
+            _ => {
+                let digits = t.strip_suffix('b').unwrap_or(&t);
+                if let Some(frac) = digits.strip_prefix("q1.") {
+                    return frac.parse::<u32>().ok().map(|f| Precision::Fixed(f + 1));
+                }
+                digits.parse::<u32>().ok().filter(|w| (2..=32).contains(w)).map(Precision::Fixed)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sweep_order() {
+        let s = Precision::paper_sweep();
+        assert_eq!(s.len(), 5);
+        assert_eq!(s[0], Precision::Fixed(20));
+        assert_eq!(s[4], Precision::Float32);
+    }
+
+    #[test]
+    fn parse_labels() {
+        assert_eq!(Precision::parse("20b"), Some(Precision::Fixed(20)));
+        assert_eq!(Precision::parse("26"), Some(Precision::Fixed(26)));
+        assert_eq!(Precision::parse("q1.25"), Some(Precision::Fixed(26)));
+        assert_eq!(Precision::parse("F32"), Some(Precision::Float32));
+        assert_eq!(Precision::parse("bogus"), None);
+        assert_eq!(Precision::parse("99"), None);
+    }
+
+    #[test]
+    fn label_roundtrip() {
+        for p in Precision::paper_sweep() {
+            assert_eq!(Precision::parse(&p.label()), Some(p));
+        }
+    }
+}

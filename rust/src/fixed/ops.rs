@@ -1,0 +1,240 @@
+//! Scalar fixed-point datapath primitives over raw `u64` words.
+//!
+//! These are the operations the FPGA datapath performs in LUTs: wide
+//! multiply + shift (truncation), saturating accumulate, and scaling. They
+//! are free functions over raw words (not methods on a boxed value type) so
+//! the SpMV hot loop can run over flat `&[u64]` arrays with the format
+//! hoisted out of the loop — the software analogue of synthesizing the
+//! datapath once for a chosen width.
+
+use super::format::{FixedFormat, RoundingMode};
+
+/// Fixed × fixed multiply: `(a * b) >> frac` with the format's rounding
+/// mode. For `Truncate` this is exactly the paper's drop-low-bits
+/// quantizer.
+///
+/// Fast path: for formats up to 31 total bits (which covers every width
+/// the paper evaluates) the product of two in-range words fits in a
+/// single `u64`, so no 128-bit arithmetic is needed; the total-bits check
+/// is loop-invariant and hoisted after inlining. Out-of-range inputs
+/// (possible only through saturating intermediate values) fall back to
+/// the wide path.
+#[inline(always)]
+pub fn mul(fmt: &FixedFormat, a: u64, b: u64) -> u64 {
+    if fmt.total_bits() <= 31 && a <= fmt.max_raw() && b <= fmt.max_raw() {
+        // product < 2^62: single-word multiply
+        let wide = a * b;
+        let shifted = match fmt.rounding {
+            RoundingMode::Truncate => wide >> fmt.frac_bits,
+            RoundingMode::Nearest => (wide + (1u64 << (fmt.frac_bits - 1))) >> fmt.frac_bits,
+        };
+        return if shifted > fmt.max_raw() { fmt.max_raw() } else { shifted };
+    }
+    mul_wide_path(fmt, a, b)
+}
+
+#[inline(never)]
+fn mul_wide_path(fmt: &FixedFormat, a: u64, b: u64) -> u64 {
+    let wide = (a as u128) * (b as u128);
+    let shifted = match fmt.rounding {
+        RoundingMode::Truncate => wide >> fmt.frac_bits,
+        RoundingMode::Nearest => {
+            let half = 1u128 << (fmt.frac_bits - 1);
+            (wide + half) >> fmt.frac_bits
+        }
+    };
+    saturate(fmt, shifted)
+}
+
+/// Saturating add of two words in the same format (hardware accumulators
+/// clamp rather than wrap).
+#[inline(always)]
+pub fn add_sat(fmt: &FixedFormat, a: u64, b: u64) -> u64 {
+    saturate(fmt, a as u128 + b as u128)
+}
+
+/// Saturating subtract (clamps at zero: the format is unsigned).
+#[inline(always)]
+pub fn sub_floor(_fmt: &FixedFormat, a: u64, b: u64) -> u64 {
+    a.saturating_sub(b)
+}
+
+/// Clamp a wide intermediate back into the format's range.
+#[inline(always)]
+pub fn saturate(fmt: &FixedFormat, wide: u128) -> u64 {
+    let max = fmt.max_raw() as u128;
+    if wide > max {
+        fmt.max_raw()
+    } else {
+        wide as u64
+    }
+}
+
+/// Absolute difference (useful for convergence norms on raw words).
+#[inline(always)]
+pub fn abs_diff(a: u64, b: u64) -> u64 {
+    a.max(b) - a.min(b)
+}
+
+/// Multiply-accumulate into a wide accumulator WITHOUT intermediate
+/// quantization: `acc += a*b` where `acc` carries `2*frac` fractional bits.
+/// The paper's aggregator sums B edge contributions before the single
+/// truncation at URAM write-back; this models that exactly (one quantize
+/// per output, not per edge).
+#[inline(always)]
+pub fn mac_wide(acc: u128, a: u64, b: u64) -> u128 {
+    acc + (a as u128) * (b as u128)
+}
+
+/// Collapse a wide (2*frac fractional bits) accumulator into the format:
+/// the write-back quantization step.
+#[inline(always)]
+pub fn collapse_wide(fmt: &FixedFormat, acc: u128) -> u64 {
+    let shifted = match fmt.rounding {
+        RoundingMode::Truncate => acc >> fmt.frac_bits,
+        RoundingMode::Nearest => {
+            let half = 1u128 << (fmt.frac_bits - 1);
+            (acc + half) >> fmt.frac_bits
+        }
+    };
+    saturate(fmt, shifted)
+}
+
+/// Dot product of raw-word vectors with one final quantization (wide
+/// accumulation). Used by the dangling-factor computation (Alg. 1 line 6).
+pub fn dot_wide(fmt: &FixedFormat, a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc: u128 = 0;
+    for i in 0..a.len() {
+        acc = mac_wide(acc, a[i], b[i]);
+    }
+    collapse_wide(fmt, acc)
+}
+
+/// Sum of raw words with saturation at the end (single-format values).
+pub fn sum_sat(fmt: &FixedFormat, xs: &[u64]) -> u64 {
+    let mut acc: u128 = 0;
+    for &x in xs {
+        acc += x as u128;
+    }
+    saturate(fmt, acc)
+}
+
+/// Squared L2 distance between two raw-word vectors, returned in f64 value
+/// space (used for convergence tracking, Fig. 7).
+pub fn l2_dist_sq(fmt: &FixedFormat, a: &[u64], b: &[u64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let ulp = fmt.ulp();
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        let d = abs_diff(a[i], b[i]) as f64 * ulp;
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::format::{FixedFormat, RoundingMode};
+
+    fn q(w: u32) -> FixedFormat {
+        FixedFormat::paper(w)
+    }
+
+    #[test]
+    fn mul_identity() {
+        let f = q(26);
+        let x = f.quantize(0.3712);
+        assert_eq!(mul(&f, x, f.one()), x);
+        assert_eq!(mul(&f, f.one(), x), x);
+        assert_eq!(mul(&f, x, 0), 0);
+    }
+
+    #[test]
+    fn mul_truncates_not_rounds() {
+        let f = q(20); // Q1.19
+        // 0.5 * (1 ulp) = 0.5 ulp -> truncates to 0
+        let half = f.quantize(0.5);
+        assert_eq!(mul(&f, half, 1), 0);
+        // nearest mode rounds 0.5 ulp up to 1 ulp
+        let fn_ = FixedFormat::new(1, 19, RoundingMode::Nearest);
+        assert_eq!(mul(&fn_, half, 1), 1);
+    }
+
+    #[test]
+    fn mul_matches_f64_within_ulp() {
+        let f = q(24);
+        let mut x = 0.013;
+        while x < 1.0 {
+            let mut y = 0.017;
+            while y < 1.0 {
+                let fx = f.quantize(x);
+                let fy = f.quantize(y);
+                let exact = f.to_f64(fx) * f.to_f64(fy);
+                let got = f.to_f64(mul(&f, fx, fy));
+                assert!(got <= exact && exact - got < f.ulp(), "x={x} y={y}");
+                y += 0.074;
+            }
+            x += 0.058;
+        }
+    }
+
+    #[test]
+    fn add_saturates() {
+        let f = q(20);
+        assert_eq!(add_sat(&f, f.max_raw(), f.one()), f.max_raw());
+        assert_eq!(add_sat(&f, 3, 4), 7);
+    }
+
+    #[test]
+    fn sub_floors_at_zero() {
+        let f = q(20);
+        assert_eq!(sub_floor(&f, 3, 5), 0);
+        assert_eq!(sub_floor(&f, 5, 3), 2);
+    }
+
+    #[test]
+    fn wide_mac_quantizes_once() {
+        let f = q(20);
+        // Sum of 8 products, each 0.6 ulp in exact value: per-edge
+        // truncation would give 0; wide accumulation gives floor(4.8) = 4.
+        let a = f.quantize(0.6); // 0.6 in value
+        let one_ulp = 1u64; // 1 ulp
+        let mut acc: u128 = 0;
+        for _ in 0..8 {
+            acc = mac_wide(acc, a, one_ulp);
+        }
+        let collapsed = collapse_wide(&f, acc);
+        assert_eq!(collapsed, 4);
+        // versus per-edge truncation:
+        let mut per_edge = 0u64;
+        for _ in 0..8 {
+            per_edge = add_sat(&f, per_edge, mul(&f, a, one_ulp));
+        }
+        assert_eq!(per_edge, 0);
+    }
+
+    #[test]
+    fn dot_wide_simple() {
+        let f = q(26);
+        let a = vec![f.quantize(0.25), f.quantize(0.5)];
+        let b = vec![f.quantize(0.5), f.quantize(0.25)];
+        let d = f.to_f64(dot_wide(&f, &a, &b));
+        assert!((d - 0.25).abs() < 2.0 * f.ulp());
+    }
+
+    #[test]
+    fn l2_dist_on_identical_is_zero() {
+        let f = q(22);
+        let a = f.quantize_slice(&[0.1, 0.2, 0.3]);
+        assert_eq!(l2_dist_sq(&f, &a, &a), 0.0);
+    }
+
+    #[test]
+    fn sum_sat_saturates() {
+        let f = q(20);
+        let xs = vec![f.max_raw(); 4];
+        assert_eq!(sum_sat(&f, &xs), f.max_raw());
+    }
+}

@@ -1,0 +1,116 @@
+//! A format-tagged vector of fixed-point words: the convenience layer used
+//! outside the hot loop (tests, examples, coordinator responses).
+
+use super::format::FixedFormat;
+use super::ops;
+
+/// A vector of raw fixed-point words together with their format.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FxVec {
+    /// The fixed-point format of every element.
+    pub fmt: FixedFormat,
+    /// Raw words.
+    pub raw: Vec<u64>,
+}
+
+impl FxVec {
+    /// Quantize an `f64` slice into a fixed vector.
+    pub fn from_f64(fmt: FixedFormat, xs: &[f64]) -> Self {
+        Self { fmt, raw: fmt.quantize_slice(xs) }
+    }
+
+    /// All zeros.
+    pub fn zeros(fmt: FixedFormat, n: usize) -> Self {
+        Self { fmt, raw: vec![0; n] }
+    }
+
+    /// Dequantize into f64s.
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.fmt.dequantize_slice(&self.raw)
+    }
+
+    /// Length.
+    pub fn len(&self) -> usize {
+        self.raw.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.raw.is_empty()
+    }
+
+    /// Element-wise saturating add (in place).
+    pub fn add_assign(&mut self, other: &FxVec) {
+        assert_eq!(self.fmt, other.fmt, "format mismatch");
+        assert_eq!(self.len(), other.len(), "length mismatch");
+        for (a, &b) in self.raw.iter_mut().zip(&other.raw) {
+            *a = ops::add_sat(&self.fmt, *a, b);
+        }
+    }
+
+    /// Element-wise multiply by a fixed scalar (in place).
+    pub fn scale(&mut self, scalar: u64) {
+        for a in self.raw.iter_mut() {
+            *a = ops::mul(&self.fmt, *a, scalar);
+        }
+    }
+
+    /// Sum of all elements (wide accumulation, one quantization).
+    pub fn sum(&self) -> u64 {
+        ops::sum_sat(&self.fmt, &self.raw)
+    }
+
+    /// Euclidean distance to another vector, in value space.
+    pub fn l2_dist(&self, other: &FxVec) -> f64 {
+        assert_eq!(self.fmt, other.fmt, "format mismatch");
+        ops::l2_dist_sq(&self.fmt, &self.raw, &other.raw).sqrt()
+    }
+
+    /// Indices of the top-`n` values, descending; ties break toward the
+    /// lower vertex id (deterministic, matching the evaluation harness in
+    /// `metrics`).
+    pub fn top_n(&self, n: usize) -> Vec<usize> {
+        crate::metrics::top_n_indices_u64(&self.raw, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fmt() -> FixedFormat {
+        FixedFormat::paper(26)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let v = FxVec::from_f64(fmt(), &[0.0, 0.25, 0.5, 1.0]);
+        assert_eq!(v.to_f64(), vec![0.0, 0.25, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let f = fmt();
+        let mut a = FxVec::from_f64(f, &[0.25, 0.5]);
+        let b = FxVec::from_f64(f, &[0.25, 0.25]);
+        a.add_assign(&b);
+        assert_eq!(a.to_f64(), vec![0.5, 0.75]);
+        a.scale(f.quantize(0.5));
+        assert_eq!(a.to_f64(), vec![0.25, 0.375]);
+    }
+
+    #[test]
+    fn top_n_orders_desc() {
+        let v = FxVec::from_f64(fmt(), &[0.1, 0.9, 0.5, 0.9, 0.2]);
+        // tie between index 1 and 3 -> lower id first
+        assert_eq!(v.top_n(3), vec![1, 3, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "format mismatch")]
+    fn format_mismatch_panics() {
+        let mut a = FxVec::zeros(FixedFormat::paper(20), 2);
+        let b = FxVec::zeros(FixedFormat::paper(26), 2);
+        a.add_assign(&b);
+    }
+}

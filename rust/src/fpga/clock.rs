@@ -1,0 +1,99 @@
+//! Achievable clock frequency (Fmax) model, calibrated on the paper's
+//! §5.1 observations:
+//!
+//! - 220 MHz at 20 bits and 200 MHz at 26 bits (Table 2, κ=8, 100k
+//!   buffers) — longer carry chains lower Fmax ≈ 3.3 MHz/bit;
+//! - the float design closes timing at 115 MHz;
+//! - "we can reach up to 350 MHz with lower number of concurrent PPR
+//!   vertices κ", increasing sublinearly as κ shrinks;
+//! - "doubling the size of the PPR buffers lowers the clock speed by
+//!   around 35–40%" — URAM routing congestion above the 100k-vertex
+//!   reference point.
+
+use super::resource::ResourceEstimate;
+use super::FpgaConfig;
+use crate::fixed::Precision;
+
+/// Vertex capacity of the Table 2 reference design; congestion is charged
+/// only for buffers beyond this footprint.
+const REF_VERTICES: usize = 100_000;
+
+/// Fmax in MHz for a design point with the given resource estimate.
+pub fn fmax_mhz(cfg: &FpgaConfig, res: &ResourceEstimate) -> f64 {
+    // base frequency at κ=8, 100k-vertex buffers
+    let base = match cfg.precision {
+        // affine through (20b → 220 MHz), (26b → 200 MHz)
+        Precision::Fixed(w) => 286.67 - 3.333 * w as f64,
+        Precision::Float32 => 115.0,
+    };
+
+    // κ scaling: smaller crossbars route faster, sublinearly
+    // (κ=1 → ×1.6 ≈ 350 MHz at 20 bits; κ=16 → ×0.8)
+    let kappa_factor = 1.0 + 0.2 * (8.0f64.log2() - (cfg.kappa as f64).log2());
+
+    // URAM congestion: relative to the same design family's footprint at
+    // the 100k reference, doubling the buffers costs 35–40% of the clock
+    // ((1/2)^0.65 ≈ 0.637)
+    let ref_res = super::resource::estimate(&FpgaConfig { max_vertices: REF_VERTICES, ..*cfg });
+    let congestion = if res.uram > ref_res.uram {
+        (ref_res.uram / res.uram).powf(0.65)
+    } else {
+        1.0
+    };
+
+    (base * kappa_factor * congestion).max(50.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::resource;
+
+    fn fmax(cfg: &FpgaConfig) -> f64 {
+        fmax_mhz(cfg, &resource::estimate(cfg))
+    }
+
+    #[test]
+    fn matches_table2_clocks() {
+        let f20 = fmax(&FpgaConfig::paper(Precision::Fixed(20)));
+        let f26 = fmax(&FpgaConfig::paper(Precision::Fixed(26)));
+        let ff = fmax(&FpgaConfig::paper(Precision::Float32));
+        assert!((f20 - 220.0).abs() < 1.0, "{f20}");
+        assert!((f26 - 200.0).abs() < 1.0, "{f26}");
+        assert!((ff - 115.0).abs() < 1.0, "{ff}");
+    }
+
+    #[test]
+    fn low_kappa_approaches_350() {
+        let cfg = FpgaConfig { kappa: 1, ..FpgaConfig::paper(Precision::Fixed(20)) };
+        let f = fmax(&cfg);
+        assert!(f > 330.0 && f < 360.0, "{f}");
+    }
+
+    #[test]
+    fn clock_monotone_in_kappa() {
+        let mut prev = f64::MAX;
+        for k in [1, 2, 4, 8, 16] {
+            let cfg = FpgaConfig { kappa: k, ..FpgaConfig::paper(Precision::Fixed(26)) };
+            let f = fmax(&cfg);
+            assert!(f < prev, "κ={k}");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn doubling_buffers_costs_35_to_40_pct() {
+        let small = fmax(&FpgaConfig::sized_for(Precision::Fixed(26), 100_000));
+        let large = fmax(&FpgaConfig::sized_for(Precision::Fixed(26), 200_000));
+        let drop = 1.0 - large / small;
+        assert!((0.30..=0.45).contains(&drop), "drop {drop}");
+    }
+
+    #[test]
+    fn small_graphs_do_not_overclock() {
+        // below the reference footprint the clock stays at the base rate
+        let tiny = fmax(&FpgaConfig::sized_for(Precision::Fixed(26), 1_000));
+        let refp = fmax(&FpgaConfig::sized_for(Precision::Fixed(26), 100_000));
+        assert_eq!(tiny, refp);
+    }
+}

@@ -1,0 +1,85 @@
+//! Device models: the Xilinx Alveo U200 (xcu200-fsgd2104-2-e) the paper
+//! targets, with the resource counts from Table 2 and §5.
+
+/// Programmable-logic resource counts and board parameters of an
+/// accelerator card.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceModel {
+    /// Marketing name.
+    pub name: &'static str,
+    /// 18 Kb BRAM blocks.
+    pub bram_blocks: u32,
+    /// DSP48 slices.
+    pub dsp_slices: u32,
+    /// Flip-flops.
+    pub flip_flops: u32,
+    /// 6-input LUTs.
+    pub luts: u32,
+    /// 288 Kb UltraRAM blocks.
+    pub uram_blocks: u32,
+    /// URAM port width (bits) — 72 per block.
+    pub uram_port_bits: u32,
+    /// Lines per URAM block (288 Kb / 72 b).
+    pub uram_lines_per_block: u32,
+    /// On-card DRAM capacity (bytes).
+    pub dram_bytes: u64,
+    /// Total DRAM bandwidth (bytes/s) — 77 GB/s on the U200.
+    pub dram_bandwidth: f64,
+    /// Host link bandwidth (bytes/s) — PCIe Gen3 x16 ≈ 12 GB/s effective.
+    pub pcie_bandwidth: f64,
+}
+
+/// The Alveo U200 as specified in §5 of the paper.
+pub const U200: DeviceModel = DeviceModel {
+    name: "Xilinx Alveo U200 (xcu200-fsgd2104-2-e)",
+    bram_blocks: 4320,
+    dsp_slices: 6840,
+    flip_flops: 2_364_480,
+    luts: 1_182_240,
+    uram_blocks: 960,
+    uram_port_bits: 72,
+    uram_lines_per_block: 4096,
+    dram_bytes: 64 * 1024 * 1024 * 1024,
+    dram_bandwidth: 77.0e9,
+    pcie_bandwidth: 12.0e9,
+};
+
+impl DeviceModel {
+    /// Total URAM capacity in bytes (U200: ~33.75 MB raw; the paper quotes
+    /// "up to 90 MB" counting ECC/packing tricks — we use the raw figure).
+    pub fn uram_bytes(&self) -> u64 {
+        self.uram_blocks as u64 * self.uram_lines_per_block as u64 * self.uram_port_bits as u64 / 8
+    }
+
+    /// Maximum edges storable in DRAM (three 32-bit words per COO entry —
+    /// the paper's "about 5 billion on the 64 GB" with value compression;
+    /// we use the uncompressed 12-byte figure).
+    pub fn max_edges(&self) -> u64 {
+        self.dram_bytes / 12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u200_counts_match_table2() {
+        assert_eq!(U200.bram_blocks, 4320);
+        assert_eq!(U200.dsp_slices, 6840);
+        assert_eq!(U200.flip_flops, 2_364_480);
+        assert_eq!(U200.luts, 1_182_240);
+        assert_eq!(U200.uram_blocks, 960);
+    }
+
+    #[test]
+    fn uram_capacity_about_34_mb() {
+        let mb = U200.uram_bytes() as f64 / 1e6;
+        assert!(mb > 33.0 && mb < 36.0, "{mb}");
+    }
+
+    #[test]
+    fn dram_holds_billions_of_edges() {
+        assert!(U200.max_edges() > 5_000_000_000);
+    }
+}

@@ -1,0 +1,110 @@
+//! FPGA performance / resource / power simulator — the substitute for the
+//! Xilinx Alveo U200 the paper deploys on (see DESIGN.md §1).
+//!
+//! The paper's quantitative claims rest on four hardware mechanisms, each
+//! modelled by a submodule and calibrated against the published numbers
+//! (Table 2 and §5.1–5.2):
+//!
+//! - [`device`] — the U200 part (xcu200-fsgd2104-2-e) resource counts and
+//!   board parameters.
+//! - [`resource`] — utilization of the synthesized design as a function of
+//!   (precision, κ, B, buffered vertices): LUT grows ~quadratically with
+//!   fixed-point width (carry chains in the B×κ multiplier array), DSP/FF
+//!   jump for the floating-point variant, URAM grows linearly with κ·V.
+//! - [`clock`] — achievable Fmax: decreases with width, sublinearly with κ,
+//!   and sharply with URAM routing congestion (the paper's "doubling the
+//!   PPR buffers lowers the clock by 35–40%").
+//! - [`power`] — board power from static + activity-weighted resource
+//!   terms (34–40 W measured), plus the 230 W CPU comparison constant.
+//! - [`pipeline`] — the cycle model of the 4-stage dataflow: II-limited
+//!   packet streaming, per-iteration update and dangling-scan sweeps, and
+//!   PCIe result transfer.
+//!
+//! Absolute times are modelled, not measured — Fig. 3 therefore reports
+//! shape (who wins, by how much, where crossovers fall), which is
+//! preserved because every mechanism the paper attributes its wins to
+//! (clock scaling with bit-width, κ-way batching, single-pass edge
+//! streaming) is represented explicitly.
+
+pub mod clock;
+pub mod device;
+pub mod pipeline;
+pub mod power;
+pub mod resource;
+
+pub use device::U200;
+pub use pipeline::{PipelineModel, WorkloadEstimate};
+pub use resource::ResourceEstimate;
+
+use crate::fixed::Precision;
+
+/// A synthesized design point: the parameters that require
+/// re-synthesizing the bitstream to change (§4.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpgaConfig {
+    /// Numeric datapath.
+    pub precision: Precision,
+    /// Personalization lanes κ.
+    pub kappa: usize,
+    /// Edges per cycle B.
+    pub b: usize,
+    /// Maximum vertices the URAM PPR buffers are sized for.
+    pub max_vertices: usize,
+}
+
+impl FpgaConfig {
+    /// The paper's default design point for a given precision (κ=8, B=8,
+    /// 100k-vertex buffers — the Table 2 configuration).
+    pub fn paper(precision: Precision) -> Self {
+        Self { precision, kappa: crate::PAPER_KAPPA, b: crate::PAPER_B, max_vertices: 100_000 }
+    }
+
+    /// Same design point with buffers sized for a specific graph.
+    pub fn sized_for(precision: Precision, num_vertices: usize) -> Self {
+        Self { max_vertices: num_vertices, ..Self::paper(precision) }
+    }
+
+    /// Full synthesis report for this design point: resources, clock,
+    /// power. Errors if the design does not fit the device.
+    pub fn synthesize(&self) -> Result<SynthesisReport, String> {
+        let resources = resource::estimate(self);
+        resources.check_fits(&U200)?;
+        let clock_mhz = clock::fmax_mhz(self, &resources);
+        let power_w = power::board_power_w(&resources, clock_mhz);
+        Ok(SynthesisReport { config: *self, resources, clock_mhz, power_w })
+    }
+}
+
+/// The outcome of "synthesizing" a design point on the simulated U200.
+#[derive(Debug, Clone)]
+pub struct SynthesisReport {
+    /// The design point.
+    pub config: FpgaConfig,
+    /// Estimated utilization.
+    pub resources: ResourceEstimate,
+    /// Achievable clock (MHz).
+    pub clock_mhz: f64,
+    /// Board power during execution (W).
+    pub power_w: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_design_points_synthesize() {
+        for p in Precision::paper_sweep() {
+            let rep = FpgaConfig::paper(p).synthesize().unwrap();
+            assert!(rep.clock_mhz > 50.0 && rep.clock_mhz < 400.0);
+            assert!(rep.power_w > 20.0 && rep.power_w < 60.0);
+        }
+    }
+
+    #[test]
+    fn oversized_design_rejected() {
+        // 30M vertices × κ=8 cannot fit the URAM
+        let cfg = FpgaConfig::sized_for(Precision::Fixed(26), 30_000_000);
+        assert!(cfg.synthesize().is_err());
+    }
+}

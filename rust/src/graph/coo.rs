@@ -1,0 +1,218 @@
+//! COO (Coordinate format) transition matrix — the storage layout of the
+//! paper's streaming SpMV (§3, Fig. 1).
+//!
+//! Three equally-sized arrays hold, for each non-zero, its destination
+//! coordinate `x`, source coordinate `y`, and value `val = 1/outdeg(y)`
+//! (the transition probability of moving from `y` to `x`). Entries are
+//! sorted by `x` so the FSM write-back stage (Alg. 2, step 4) sees
+//! monotonically non-decreasing destination blocks — the property the
+//! two-ping-pong-buffer design relies on.
+
+use super::{Graph, VertexId};
+use crate::fixed::FixedFormat;
+
+/// COO transition matrix X = (D⁻¹A)ᵀ plus the dangling bitmap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CooMatrix {
+    /// Number of vertices |V| (matrix is |V|×|V|).
+    pub num_vertices: usize,
+    /// Destination coordinate of each non-zero (row of X), sorted ascending.
+    pub x: Vec<VertexId>,
+    /// Source coordinate of each non-zero (column of X).
+    pub y: Vec<VertexId>,
+    /// Transition probability 1/outdeg(y), as f64 (quantized on demand).
+    pub val: Vec<f64>,
+    /// Dangling bitmap d̄: true where outdeg == 0.
+    pub dangling: Vec<bool>,
+}
+
+impl CooMatrix {
+    /// Build the PPR transition matrix from a directed graph: entry
+    /// (x=dst, y=src) has value 1/outdeg(src); entries sorted by (x, y).
+    pub fn from_graph(g: &Graph) -> Self {
+        let deg = g.out_degrees();
+        let mut entries: Vec<(VertexId, VertexId)> =
+            g.edges.iter().map(|&(s, d)| (d, s)).collect();
+        // Sort by destination then source: the stream order of the paper's
+        // DRAM layout (aggregators exploit destination locality).
+        entries.sort_unstable();
+        let mut x = Vec::with_capacity(entries.len());
+        let mut y = Vec::with_capacity(entries.len());
+        let mut val = Vec::with_capacity(entries.len());
+        for (dst, src) in entries {
+            x.push(dst);
+            y.push(src);
+            val.push(1.0 / deg[src as usize] as f64);
+        }
+        Self { num_vertices: g.num_vertices, x, y, val, dangling: g.dangling() }
+    }
+
+    /// Number of stored non-zeros.
+    pub fn num_edges(&self) -> usize {
+        self.x.len()
+    }
+
+    /// Quantize the value array into raw fixed-point words.
+    pub fn quantized_values(&self, fmt: &FixedFormat) -> Vec<u64> {
+        fmt.quantize_slice(&self.val)
+    }
+
+    /// Values as f32 (for the F32 FPGA variant and the CPU baseline).
+    pub fn values_f32(&self) -> Vec<f32> {
+        self.val.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Number of packets of `b` edges needed to stream the matrix
+    /// (the last packet is padded in hardware; the iterator below pads
+    /// with zero-valued entries pointing at vertex `x.last()`).
+    pub fn num_packets(&self, b: usize) -> usize {
+        self.num_edges().div_ceil(b)
+    }
+
+    /// Iterate over edge packets of size `b` (Alg. 2 step 1). The final
+    /// packet is padded with zero-valued self-entries so hardware-shaped
+    /// consumers always see full packets.
+    pub fn packets(&self, b: usize) -> PacketIter<'_> {
+        PacketIter { coo: self, b, next: 0 }
+    }
+
+    /// Check structural invariants (sortedness, id ranges, value ranges).
+    /// Used by tests and by the loader on untrusted input.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_vertices;
+        if self.x.len() != self.y.len() || self.x.len() != self.val.len() {
+            return Err("coordinate arrays have mismatched lengths".into());
+        }
+        if self.dangling.len() != n {
+            return Err("dangling bitmap length != |V|".into());
+        }
+        for i in 0..self.x.len() {
+            if self.x[i] as usize >= n || self.y[i] as usize >= n {
+                return Err(format!("entry {i} out of range"));
+            }
+            if i > 0 && self.x[i] < self.x[i - 1] {
+                return Err(format!("x not sorted at {i}"));
+            }
+            if !(self.val[i] > 0.0 && self.val[i] <= 1.0) {
+                return Err(format!("value {} out of (0,1] at {i}", self.val[i]));
+            }
+            if self.dangling[self.y[i] as usize] {
+                return Err(format!("entry {i} sourced from dangling vertex"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Column sums of X (should be 1 for non-dangling sources): a
+    /// stochasticity check used by property tests.
+    pub fn column_sums(&self) -> Vec<f64> {
+        let mut sums = vec![0.0; self.num_vertices];
+        for i in 0..self.num_edges() {
+            sums[self.y[i] as usize] += self.val[i];
+        }
+        sums
+    }
+}
+
+/// A borrowed view of one edge packet (possibly padded).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Packet {
+    /// Destination coordinates (length b).
+    pub x: Vec<VertexId>,
+    /// Source coordinates (length b).
+    pub y: Vec<VertexId>,
+    /// Values (length b; padding entries are 0.0).
+    pub val: Vec<f64>,
+}
+
+/// Iterator over fixed-size edge packets.
+pub struct PacketIter<'a> {
+    coo: &'a CooMatrix,
+    b: usize,
+    next: usize,
+}
+
+impl<'a> Iterator for PacketIter<'a> {
+    type Item = Packet;
+
+    fn next(&mut self) -> Option<Packet> {
+        let e = self.coo.num_edges();
+        if self.next >= e {
+            return None;
+        }
+        let lo = self.next;
+        let hi = (lo + self.b).min(e);
+        self.next = lo + self.b;
+        let mut x: Vec<VertexId> = self.coo.x[lo..hi].to_vec();
+        let mut y: Vec<VertexId> = self.coo.y[lo..hi].to_vec();
+        let mut val: Vec<f64> = self.coo.val[lo..hi].to_vec();
+        // Pad the tail packet with zero-valued entries targeting the last
+        // real destination (contributes nothing, keeps shapes fixed).
+        let pad_x = *x.last().unwrap();
+        while x.len() < self.b {
+            x.push(pad_x);
+            y.push(0);
+            val.push(0.0);
+        }
+        Some(Packet { x, y, val })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        // 1 -> 0, 2 -> 0, 0 -> 1  (vertex 3 dangling); mirrors Fig. 1 style
+        Graph::new(4, vec![(1, 0), (2, 0), (0, 1)])
+    }
+
+    #[test]
+    fn transition_values() {
+        let coo = CooMatrix::from_graph(&tiny());
+        assert_eq!(coo.num_edges(), 3);
+        // sorted by destination: (0,1) (0,2) (1,0)
+        assert_eq!(coo.x, vec![0, 0, 1]);
+        assert_eq!(coo.y, vec![1, 2, 0]);
+        assert_eq!(coo.val, vec![1.0, 1.0, 1.0]);
+        coo.validate().unwrap();
+    }
+
+    #[test]
+    fn column_sums_stochastic() {
+        let g = Graph::new(3, vec![(0, 1), (0, 2), (1, 0), (2, 1)]);
+        let coo = CooMatrix::from_graph(&g);
+        let sums = coo.column_sums();
+        for (v, s) in sums.iter().enumerate() {
+            assert!((s - 1.0).abs() < 1e-12, "col {v} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn packets_pad_tail() {
+        let coo = CooMatrix::from_graph(&tiny());
+        let packets: Vec<_> = coo.packets(2).collect();
+        assert_eq!(packets.len(), 2);
+        assert_eq!(packets[0].x, vec![0, 0]);
+        assert_eq!(packets[1].x.len(), 2);
+        assert_eq!(packets[1].val[1], 0.0); // padding entry
+        assert_eq!(coo.num_packets(2), 2);
+    }
+
+    #[test]
+    fn validate_catches_unsorted() {
+        let mut coo = CooMatrix::from_graph(&tiny());
+        coo.x.swap(0, 2);
+        coo.y.swap(0, 2);
+        assert!(coo.validate().is_err());
+    }
+
+    #[test]
+    fn quantized_values_bounded() {
+        let coo = CooMatrix::from_graph(&tiny());
+        let fmt = FixedFormat::paper(20);
+        let q = coo.quantized_values(&fmt);
+        assert!(q.iter().all(|&w| w <= fmt.max_raw()));
+        assert_eq!(q[0], fmt.one()); // 1/outdeg(1)=1.0 exact
+    }
+}

@@ -1,0 +1,160 @@
+//! CSR view of the transition matrix, used by the multi-threaded CPU
+//! baseline (the PGX analogue) and by the CSR-vs-COO ablation bench.
+//!
+//! Rows are **destinations**: row `x` lists the sources `y` that link to
+//! `x` with value `1/outdeg(y)`. A pull-based PPR iteration then writes
+//! each output entry exactly once, which is what lets the CPU baseline
+//! parallelize over row ranges with no atomics — the same reason the
+//! paper's CSC discussion (§3) cares about who owns the write.
+
+use super::{CooMatrix, Graph, VertexId};
+
+/// CSR (by destination) transition matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    /// Number of vertices.
+    pub num_vertices: usize,
+    /// Row pointer array, length |V|+1.
+    pub row_ptr: Vec<usize>,
+    /// Source vertex of each stored entry (column index).
+    pub cols: Vec<VertexId>,
+    /// Transition probability of each stored entry.
+    pub vals: Vec<f64>,
+    /// Dangling bitmap.
+    pub dangling: Vec<bool>,
+}
+
+impl CsrMatrix {
+    /// Build from a COO matrix (already sorted by destination).
+    pub fn from_coo(coo: &CooMatrix) -> Self {
+        let n = coo.num_vertices;
+        let mut row_ptr = vec![0usize; n + 1];
+        for &xi in &coo.x {
+            row_ptr[xi as usize + 1] += 1;
+        }
+        for i in 0..n {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Self {
+            num_vertices: n,
+            row_ptr,
+            cols: coo.y.clone(),
+            vals: coo.val.clone(),
+            dangling: coo.dangling.clone(),
+        }
+    }
+
+    /// Build directly from a graph.
+    pub fn from_graph(g: &Graph) -> Self {
+        Self::from_coo(&CooMatrix::from_graph(g))
+    }
+
+    /// Number of stored non-zeros.
+    pub fn num_edges(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// The (cols, vals) slice of one row (destination vertex).
+    #[inline]
+    pub fn row(&self, x: usize) -> (&[VertexId], &[f64]) {
+        let lo = self.row_ptr[x];
+        let hi = self.row_ptr[x + 1];
+        (&self.cols[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Row lengths (in-degree of each destination).
+    pub fn row_lengths(&self) -> Vec<usize> {
+        (0..self.num_vertices).map(|i| self.row_ptr[i + 1] - self.row_ptr[i]).collect()
+    }
+
+    /// Split `[0, |V|)` into `parts` contiguous ranges with approximately
+    /// equal numbers of non-zeros (not vertices) — the load-balancing the
+    /// multi-threaded baseline needs on skewed-degree graphs.
+    pub fn balanced_ranges(&self, parts: usize) -> Vec<std::ops::Range<usize>> {
+        assert!(parts > 0);
+        let total = self.num_edges();
+        let per = total.div_ceil(parts).max(1);
+        let mut out = Vec::with_capacity(parts);
+        let mut start = 0usize;
+        let mut acc = 0usize;
+        for v in 0..self.num_vertices {
+            acc += self.row_ptr[v + 1] - self.row_ptr[v];
+            if acc >= per && out.len() + 1 < parts {
+                out.push(start..v + 1);
+                start = v + 1;
+                acc = 0;
+            }
+        }
+        out.push(start..self.num_vertices);
+        while out.len() < parts {
+            out.push(self.num_vertices..self.num_vertices);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn csr() -> CsrMatrix {
+        // edges: 1->0, 2->0, 0->1 over 4 vertices (3 dangling)
+        let g = Graph::new(4, vec![(1, 0), (2, 0), (0, 1)]);
+        CsrMatrix::from_graph(&g)
+    }
+
+    #[test]
+    fn structure() {
+        let m = csr();
+        assert_eq!(m.row_ptr, vec![0, 2, 3, 3, 3]);
+        assert_eq!(m.cols, vec![1, 2, 0]);
+        let (cols, vals) = m.row(0);
+        assert_eq!(cols, &[1, 2]);
+        assert_eq!(vals, &[1.0, 1.0]);
+        assert_eq!(m.row(2).0.len(), 0);
+        assert_eq!(m.num_edges(), 3);
+    }
+
+    #[test]
+    fn row_lengths_match_in_degrees() {
+        let g = Graph::new(4, vec![(1, 0), (2, 0), (0, 1)]);
+        let m = CsrMatrix::from_graph(&g);
+        let lens = m.row_lengths();
+        let indeg: Vec<usize> = g.in_degrees().iter().map(|&d| d as usize).collect();
+        assert_eq!(lens, indeg);
+    }
+
+    #[test]
+    fn balanced_ranges_cover_all() {
+        let m = csr();
+        for parts in 1..5 {
+            let ranges = m.balanced_ranges(parts);
+            assert_eq!(ranges.len(), parts);
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, m.num_vertices);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "ranges must tile");
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_ranges_balance_nnz() {
+        // skewed: vertex 0 has many in-edges
+        let mut edges = vec![];
+        for s in 1..64u32 {
+            edges.push((s, 0));
+        }
+        for s in 0..8u32 {
+            edges.push((s, 64 + s));
+        }
+        let g = Graph::new(128, edges);
+        let m = CsrMatrix::from_graph(&g);
+        let ranges = m.balanced_ranges(4);
+        let nnz: Vec<usize> =
+            ranges.iter().map(|r| m.row_ptr[r.end] - m.row_ptr[r.start]).collect();
+        // first range holds the hub; remaining ranges share the rest
+        assert!(nnz[0] >= 63);
+        assert_eq!(nnz.iter().sum::<usize>(), m.num_edges());
+    }
+}

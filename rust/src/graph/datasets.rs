@@ -1,0 +1,292 @@
+//! The paper's evaluation suite (Table 1): six synthetic graphs from three
+//! statistical distributions at two sizes, plus the two real-world SNAP
+//! datasets (Amazon co-purchasing, Twitter social circles).
+//!
+//! Real snapshots are loaded from `data/<name>.txt` when present; otherwise
+//! structurally-matched synthetic stand-ins are generated (documented
+//! substitution — see DESIGN.md §1): Amazon → Holme–Kim powerlaw-cluster
+//! core (co-purchase clustering) topped up to the exact edge count;
+//! Twitter → overlapping-community model (dense ego circles).
+
+use super::generators;
+use super::{Graph, VertexId};
+use std::path::PathBuf;
+
+/// The generator family of a dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Distribution {
+    /// Erdős–Rényi G(n,p).
+    ErdosRenyi,
+    /// Watts–Strogatz small-world.
+    WattsStrogatz,
+    /// Holme–Kim powerlaw-cluster.
+    HolmeKim,
+    /// Real-world: Amazon co-purchasing network (or stand-in).
+    Amazon,
+    /// Real-world: Twitter social circles (or stand-in).
+    Twitter,
+}
+
+impl Distribution {
+    /// True for the six synthetic rows of Table 1.
+    pub fn is_synthetic(&self) -> bool {
+        matches!(self, Self::ErdosRenyi | Self::WattsStrogatz | Self::HolmeKim)
+    }
+}
+
+/// Specification of one Table 1 row.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    /// Short name used in reports (e.g. "ER-100k", "AMZN").
+    pub name: &'static str,
+    /// Generator family.
+    pub distribution: Distribution,
+    /// Target vertex count.
+    pub num_vertices: usize,
+    /// Target edge count (exact; generators are trimmed/topped-up).
+    pub num_edges: usize,
+    /// Seed for deterministic generation.
+    pub seed: u64,
+}
+
+/// A materialized dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// The spec this dataset was built from.
+    pub spec: DatasetSpec,
+    /// The graph.
+    pub graph: Graph,
+}
+
+impl DatasetSpec {
+    /// The full 8-row Table 1 suite. `scale` divides both |V| and |E|
+    /// (scale=1 is the paper's sizes; benches use scale>1 for quick runs).
+    pub fn table1_suite(scale: usize) -> Vec<DatasetSpec> {
+        assert!(scale >= 1);
+        let s = |x: usize| (x / scale).max(64);
+        vec![
+            DatasetSpec {
+                name: "ER-100k",
+                distribution: Distribution::ErdosRenyi,
+                num_vertices: s(100_000),
+                num_edges: s(1_002_178),
+                seed: 0xE401,
+            },
+            DatasetSpec {
+                name: "ER-200k",
+                distribution: Distribution::ErdosRenyi,
+                num_vertices: s(200_000),
+                num_edges: s(1_999_249),
+                seed: 0xE402,
+            },
+            DatasetSpec {
+                name: "WS-100k",
+                distribution: Distribution::WattsStrogatz,
+                num_vertices: s(100_000),
+                num_edges: s(1_000_000),
+                seed: 0xE403,
+            },
+            DatasetSpec {
+                name: "WS-200k",
+                distribution: Distribution::WattsStrogatz,
+                num_vertices: s(200_000),
+                num_edges: s(2_000_000),
+                seed: 0xE404,
+            },
+            DatasetSpec {
+                name: "HK-100k",
+                distribution: Distribution::HolmeKim,
+                num_vertices: s(100_000),
+                num_edges: s(999_845),
+                seed: 0xE405,
+            },
+            DatasetSpec {
+                name: "HK-200k",
+                distribution: Distribution::HolmeKim,
+                num_vertices: s(200_000),
+                num_edges: s(1_999_825),
+                seed: 0xE406,
+            },
+            DatasetSpec {
+                name: "AMZN",
+                distribution: Distribution::Amazon,
+                num_vertices: s(128_000),
+                num_edges: s(443_378),
+                seed: 0xE407,
+            },
+            DatasetSpec {
+                name: "TWTR",
+                distribution: Distribution::Twitter,
+                num_vertices: s(81_306),
+                num_edges: s(1_572_670),
+                seed: 0xE408,
+            },
+        ]
+    }
+
+    /// The subset with ~2·10⁶ edges used by Fig. 4 (at the given scale:
+    /// the three 200k-vertex synthetic graphs).
+    pub fn fig4_suite(scale: usize) -> Vec<DatasetSpec> {
+        Self::table1_suite(scale)
+            .into_iter()
+            .filter(|s| matches!(s.name, "ER-200k" | "WS-200k" | "HK-200k"))
+            .collect()
+    }
+
+    /// Path where a real snapshot would live (`data/<name>.txt`).
+    pub fn real_data_path(&self) -> Option<PathBuf> {
+        match self.distribution {
+            Distribution::Amazon => Some(PathBuf::from("data/amazon0302.txt")),
+            Distribution::Twitter => Some(PathBuf::from("data/twitter_combined.txt")),
+            _ => None,
+        }
+    }
+
+    /// Materialize the graph. Real datasets load from disk when the SNAP
+    /// snapshot is present; otherwise the documented stand-in is generated.
+    /// All outputs are trimmed / topped-up to the exact target |E|.
+    pub fn build(&self) -> Dataset {
+        let n = self.num_vertices;
+        let e = self.num_edges;
+        let mut g = match self.distribution {
+            Distribution::ErdosRenyi => {
+                let p = e as f64 / (n as f64 * n as f64);
+                let mut g = generators::erdos_renyi(n, p, self.seed);
+                let have = g.num_edges();
+                match have < e {
+                    true => generators::add_random_edges(&mut g, e - have, self.seed ^ 1),
+                    false => generators::trim_to_edge_count(&mut g, e, self.seed ^ 1),
+                }
+                g
+            }
+            Distribution::WattsStrogatz => {
+                // |E| = n*k/2 per the directed-lattice convention.
+                let k = ((2 * e) / n).max(2) & !1usize;
+                let mut g = generators::watts_strogatz(n, k, 0.1, self.seed);
+                let have = g.num_edges();
+                match have < e {
+                    true => generators::add_random_edges(&mut g, e - have, self.seed ^ 1),
+                    false => generators::trim_to_edge_count(&mut g, e, self.seed ^ 1),
+                }
+                g
+            }
+            Distribution::HolmeKim => {
+                let m = (e / n).max(1);
+                let mut g = generators::holme_kim(n, m, 0.25, self.seed);
+                let have = g.num_edges();
+                match have < e {
+                    true => generators::add_random_edges(&mut g, e - have, self.seed ^ 1),
+                    false => generators::trim_to_edge_count(&mut g, e, self.seed ^ 1),
+                }
+                g
+            }
+            Distribution::Amazon => self.build_real_or(|spec| {
+                // co-purchase graph: powerlaw-cluster core (m = 3) plus
+                // uniform top-up to the exact edge count
+                let m = (e / n).max(1);
+                let mut g = generators::holme_kim(n, m, 0.5, spec.seed);
+                let have = g.num_edges();
+                if have < e {
+                    generators::add_random_edges(&mut g, e - have, spec.seed ^ 1);
+                } else {
+                    generators::trim_to_edge_count(&mut g, e, spec.seed ^ 1);
+                }
+                g
+            }),
+            Distribution::Twitter => self.build_real_or(|spec| {
+                // ego networks: overlapping dense communities
+                let num_communities = (n / 100).max(8);
+                generators::overlapping_communities(n, num_communities, 3, e, spec.seed)
+            }),
+        };
+        g.simplify();
+        // simplify() may drop a few duplicate edges produced by top-up;
+        // restore the exact count so Table 1 reproduces row-for-row.
+        let have = g.num_edges();
+        if have < e {
+            generators::add_random_edges(&mut g, e - have, self.seed ^ 2);
+            g.edges.sort_unstable();
+        }
+        Dataset { spec: self.clone(), graph: g }
+    }
+
+    fn build_real_or<F: Fn(&DatasetSpec) -> Graph>(&self, fallback: F) -> Graph {
+        if let Some(p) = self.real_data_path() {
+            if p.exists() {
+                if let Ok(g) = super::loader::read_edge_list(&p) {
+                    return g;
+                }
+            }
+        }
+        fallback(self)
+    }
+}
+
+impl Dataset {
+    /// Sample `count` random non-dangling personalization vertices
+    /// (the paper's "100 random personalization vertices" workload, §5.1).
+    pub fn sample_personalization(&self, count: usize, seed: u64) -> Vec<VertexId> {
+        let mut rng = crate::util::rng::Xoshiro256::seeded(seed);
+        let dangling = self.graph.dangling();
+        let candidates: Vec<VertexId> = (0..self.graph.num_vertices as VertexId)
+            .filter(|&v| !dangling[v as usize])
+            .collect();
+        assert!(!candidates.is_empty(), "graph is all-dangling");
+        (0..count).map(|_| candidates[rng.next_index(candidates.len())]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_eight_rows() {
+        let suite = DatasetSpec::table1_suite(1);
+        assert_eq!(suite.len(), 8);
+        assert_eq!(suite[0].name, "ER-100k");
+        assert_eq!(suite[7].name, "TWTR");
+    }
+
+    #[test]
+    fn scaled_build_hits_exact_edge_targets() {
+        // scale 100 keeps the test fast but exercises every generator path
+        for spec in DatasetSpec::table1_suite(100) {
+            let ds = spec.build();
+            assert_eq!(
+                ds.graph.num_edges(),
+                spec.num_edges,
+                "{}: edges {} != target {}",
+                spec.name,
+                ds.graph.num_edges(),
+                spec.num_edges
+            );
+            assert_eq!(ds.graph.num_vertices, spec.num_vertices, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn builds_are_deterministic() {
+        let spec = &DatasetSpec::table1_suite(200)[0];
+        let a = spec.build();
+        let b = spec.build();
+        assert_eq!(a.graph, b.graph);
+    }
+
+    #[test]
+    fn fig4_suite_is_the_2m_rows() {
+        let s = DatasetSpec::fig4_suite(1);
+        assert_eq!(s.len(), 3);
+        assert!(s.iter().all(|d| d.num_vertices == 200_000));
+    }
+
+    #[test]
+    fn personalization_sampling_avoids_dangling() {
+        let spec = &DatasetSpec::table1_suite(500)[4]; // HK
+        let ds = spec.build();
+        let dangling = ds.graph.dangling();
+        for v in ds.sample_personalization(50, 99) {
+            assert!(!dangling[v as usize]);
+        }
+    }
+}

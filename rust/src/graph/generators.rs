@@ -1,0 +1,300 @@
+//! Statistical graph generators reproducing the paper's synthetic suite
+//! (Table 1): Erdős–Rényi G(n,p), Watts–Strogatz small-world, and Holme–Kim
+//! powerlaw-cluster graphs, plus the community model used as a stand-in for
+//! the Twitter ego-network dataset. Ports of the networkx algorithms the
+//! paper used ("6 are generated using different statistical distributions
+//! offered by the Python networkx library").
+
+use super::{Graph, VertexId};
+use crate::util::rng::Xoshiro256;
+use std::collections::HashSet;
+
+/// Directed Erdős–Rényi G(n, p) via Batagelj–Brandes geometric skipping:
+/// O(|E|) instead of O(n²) Bernoulli trials. Self-loops excluded.
+pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Graph {
+    assert!(n > 0 && p > 0.0 && p < 1.0);
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut edges = Vec::with_capacity((p * (n as f64) * (n as f64)) as usize);
+    // Walk the flattened n*n adjacency with geometric jumps.
+    let total = (n as u64) * (n as u64);
+    let mut idx: u64 = rng.next_geometric(p) as u64;
+    while idx < total {
+        let s = (idx / n as u64) as VertexId;
+        let d = (idx % n as u64) as VertexId;
+        if s != d {
+            edges.push((s, d));
+        }
+        idx += 1 + rng.next_geometric(p) as u64;
+    }
+    Graph::new(n, edges)
+}
+
+/// Watts–Strogatz small-world graph: ring lattice where each vertex
+/// connects to its `k` nearest neighbours (`k/2` on each side), then each
+/// edge is rewired with probability `p`. Edges are emitted in their lattice
+/// orientation (one directed edge per lattice edge), matching the paper's
+/// Table 1 count |E| = n·k/2 · 2 = n·k... the paper lists |E| = 10·n for
+/// k = 20 half-edges; we emit one directed edge per (u, u+j) pair so
+/// |E| = n·k/2.
+pub fn watts_strogatz(n: usize, k: usize, p: f64, seed: u64) -> Graph {
+    assert!(k % 2 == 0 && k < n, "k must be even and < n");
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut present: HashSet<(VertexId, VertexId)> = HashSet::with_capacity(n * k / 2);
+    for u in 0..n {
+        for j in 1..=(k / 2) {
+            let v = (u + j) % n;
+            present.insert((u as VertexId, v as VertexId));
+        }
+    }
+    // Rewire: replace (u, v) with (u, w) for uniform random w, avoiding
+    // self-loops and duplicates (networkx `watts_strogatz_graph` semantics).
+    let original: Vec<(VertexId, VertexId)> = {
+        let mut v: Vec<_> = present.iter().copied().collect();
+        v.sort_unstable();
+        v
+    };
+    for (u, v) in original {
+        if rng.next_bool(p) {
+            // pick a new endpoint
+            let mut w = rng.next_index(n) as VertexId;
+            let mut attempts = 0;
+            while (w == u || present.contains(&(u, w))) && attempts < 32 {
+                w = rng.next_index(n) as VertexId;
+                attempts += 1;
+            }
+            if w != u && !present.contains(&(u, w)) {
+                present.remove(&(u, v));
+                present.insert((u, w));
+            }
+        }
+    }
+    let mut edges: Vec<_> = present.into_iter().collect();
+    edges.sort_unstable();
+    Graph::new(n, edges)
+}
+
+/// Holme–Kim powerlaw-cluster graph: Barabási–Albert preferential
+/// attachment of `m` edges per new vertex, with probability `pt` of closing
+/// a triad after each attachment (networkx `powerlaw_cluster_graph`).
+/// Produces the heavy-tailed degree distribution + dense communities the
+/// paper highlights ("Holme and Kim graphs ... have dense communities,
+/// similarly to real social networks").
+pub fn holme_kim(n: usize, m: usize, pt: f64, seed: u64) -> Graph {
+    assert!(m >= 1 && m < n);
+    let mut rng = Xoshiro256::seeded(seed);
+    // `repeated` holds one entry per half-edge endpoint: sampling uniformly
+    // from it is sampling proportionally to degree.
+    let mut repeated: Vec<VertexId> = Vec::with_capacity(2 * n * m);
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::with_capacity(n * m);
+    // adjacency as index-sampled Vecs: HashSet iteration order is
+    // process-randomized and would break cross-run determinism
+    let mut adjacency: Vec<Vec<VertexId>> = vec![Vec::new(); n];
+
+    // seed clique over the first m vertices' stubs (networkx starts with m
+    // isolated nodes and wires the first incomer to all of them)
+    for v in 0..m {
+        repeated.push(v as VertexId);
+    }
+    for source in m..n {
+        let source = source as VertexId;
+        let mut targets: Vec<VertexId> = Vec::with_capacity(m);
+        let mut prev: Option<VertexId> = None;
+        while targets.len() < m {
+            // triad step: with prob pt, connect to a neighbour of the
+            // previously chosen target (closes a triangle)
+            let candidate = if let Some(pv) = prev.filter(|_| rng.next_bool(pt)) {
+                let neigh = &adjacency[pv as usize];
+                if neigh.is_empty() {
+                    repeated[rng.next_index(repeated.len())]
+                } else {
+                    neigh[rng.next_index(neigh.len())]
+                }
+            } else {
+                repeated[rng.next_index(repeated.len())]
+            };
+            if candidate != source && !targets.contains(&candidate) {
+                targets.push(candidate);
+                prev = Some(candidate);
+            } else {
+                prev = None;
+            }
+        }
+        for &t in &targets {
+            edges.push((source, t));
+            adjacency[source as usize].push(t);
+            adjacency[t as usize].push(source);
+            repeated.push(source);
+            repeated.push(t);
+        }
+    }
+    edges.sort_unstable();
+    Graph::new(n, edges)
+}
+
+/// Overlapping-community graph: the Twitter ego-network stand-in. Vertices
+/// join `memberships` communities drawn from `num_communities` (sizes
+/// heavy-tailed); each community is an Erdős–Rényi subgraph dense enough to
+/// reach the target average degree. Produces the dense overlapping social
+/// circles of the SNAP Twitter dataset.
+pub fn overlapping_communities(
+    n: usize,
+    num_communities: usize,
+    memberships: usize,
+    target_edges: usize,
+    seed: u64,
+) -> Graph {
+    let mut rng = Xoshiro256::seeded(seed);
+    // Heavy-tailed community sizes: Zipf-ish weights.
+    let mut members: Vec<Vec<VertexId>> = vec![Vec::new(); num_communities];
+    for v in 0..n {
+        for _ in 0..memberships {
+            // zipf via inverse-power sampling
+            let u = rng.next_f64();
+            let c = ((num_communities as f64).powf(u) - 1.0) as usize % num_communities;
+            members[c].push(v as VertexId);
+        }
+    }
+    let mut present: HashSet<(VertexId, VertexId)> = HashSet::with_capacity(target_edges);
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::with_capacity(target_edges);
+    // Round-robin the communities, sampling random intra-community pairs,
+    // until we hit the target edge count.
+    let mut guard = 0usize;
+    let max_attempts = target_edges * 20;
+    while edges.len() < target_edges && guard < max_attempts {
+        guard += 1;
+        let c = rng.next_index(num_communities);
+        let com = &members[c];
+        if com.len() < 2 {
+            continue;
+        }
+        let a = com[rng.next_index(com.len())];
+        let b = com[rng.next_index(com.len())];
+        if a != b && !present.contains(&(a, b)) {
+            present.insert((a, b));
+            edges.push((a, b));
+        }
+    }
+    // Top up with uniform random edges if communities saturated.
+    while edges.len() < target_edges {
+        let a = rng.next_index(n) as VertexId;
+        let b = rng.next_index(n) as VertexId;
+        if a != b && !present.contains(&(a, b)) {
+            present.insert((a, b));
+            edges.push((a, b));
+        }
+    }
+    edges.sort_unstable();
+    Graph::new(n, edges)
+}
+
+/// Add `extra` uniform-random distinct directed edges to a graph (used to
+/// hit a dataset's exact |E| target, e.g. the Amazon stand-in).
+pub fn add_random_edges(g: &mut Graph, extra: usize, seed: u64) {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut present: HashSet<(VertexId, VertexId)> = g.edges.iter().copied().collect();
+    let n = g.num_vertices;
+    let mut added = 0usize;
+    while added < extra {
+        let a = rng.next_index(n) as VertexId;
+        let b = rng.next_index(n) as VertexId;
+        if a != b && !present.contains(&(a, b)) {
+            present.insert((a, b));
+            g.edges.push((a, b));
+            added += 1;
+        }
+    }
+}
+
+/// Trim a graph to exactly `target` edges by dropping uniformly random
+/// edges (keeps degree shape; used to pin dataset sizes).
+pub fn trim_to_edge_count(g: &mut Graph, target: usize, seed: u64) {
+    if g.edges.len() <= target {
+        return;
+    }
+    let mut rng = Xoshiro256::seeded(seed);
+    rng.shuffle(&mut g.edges);
+    g.edges.truncate(target);
+    g.edges.sort_unstable();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erdos_renyi_edge_count_near_expectation() {
+        let n = 2000;
+        let p = 1e-3;
+        let g = erdos_renyi(n, p, 42);
+        let expect = p * (n * n) as f64;
+        let got = g.num_edges() as f64;
+        assert!((got - expect).abs() < 0.15 * expect, "got {got}, expect {expect}");
+        assert!(g.edges.iter().all(|&(s, d)| s != d));
+    }
+
+    #[test]
+    fn erdos_renyi_deterministic() {
+        let a = erdos_renyi(500, 0.01, 7);
+        let b = erdos_renyi(500, 0.01, 7);
+        assert_eq!(a, b);
+        let c = erdos_renyi(500, 0.01, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn watts_strogatz_edge_count_exact_at_p0() {
+        let g = watts_strogatz(100, 10, 0.0, 1);
+        assert_eq!(g.num_edges(), 100 * 5);
+        // ring lattice: every vertex has out-degree k/2
+        assert!(g.out_degrees().iter().all(|&d| d == 5));
+    }
+
+    #[test]
+    fn watts_strogatz_rewiring_preserves_count() {
+        let g = watts_strogatz(200, 10, 0.3, 3);
+        // rewiring replaces edges 1:1 (up to rare saturation)
+        let target = 200 * 5;
+        assert!((g.num_edges() as i64 - target as i64).abs() <= 5);
+    }
+
+    #[test]
+    fn holme_kim_edge_count() {
+        let n = 1000;
+        let m = 10;
+        let g = holme_kim(n, m, 0.1, 5);
+        assert_eq!(g.num_edges(), (n - m) * m);
+    }
+
+    #[test]
+    fn holme_kim_heavy_tail() {
+        let g = holme_kim(3000, 5, 0.3, 9);
+        // undirected degree = in + out
+        let deg: Vec<u32> = g
+            .out_degrees()
+            .iter()
+            .zip(g.in_degrees())
+            .map(|(a, b)| a + b)
+            .collect();
+        let max = *deg.iter().max().unwrap() as f64;
+        let mean = deg.iter().map(|&d| d as f64).sum::<f64>() / deg.len() as f64;
+        // preferential attachment: hubs far above the mean
+        assert!(max > 8.0 * mean, "max {max} mean {mean}");
+    }
+
+    #[test]
+    fn overlapping_communities_hits_target() {
+        let g = overlapping_communities(2000, 40, 2, 30_000, 11);
+        assert_eq!(g.num_edges(), 30_000);
+        assert!(g.edges.iter().all(|&(s, d)| s != d));
+    }
+
+    #[test]
+    fn add_and_trim_edges() {
+        let mut g = erdos_renyi(300, 0.005, 2);
+        let before = g.num_edges();
+        add_random_edges(&mut g, 100, 3);
+        assert_eq!(g.num_edges(), before + 100);
+        trim_to_edge_count(&mut g, before, 4);
+        assert_eq!(g.num_edges(), before);
+    }
+}

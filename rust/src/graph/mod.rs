@@ -1,0 +1,127 @@
+//! Graph substrate: directed graphs, sparse-matrix views (COO/CSR), the
+//! PPR transition matrix X = (D⁻¹A)ᵀ with dangling bitmap (§3 of the
+//! paper), statistical generators matching the paper's Table 1 datasets,
+//! and a SNAP-format edge-list loader.
+
+pub mod coo;
+pub mod csr;
+pub mod datasets;
+pub mod generators;
+pub mod loader;
+
+pub use coo::CooMatrix;
+pub use csr::CsrMatrix;
+pub use datasets::{Dataset, DatasetSpec, Distribution};
+
+/// Vertex identifier. The paper's use-case caps at ~1M vertices (§4.1.2),
+/// so 32 bits match the FPGA's packed 32-bit coordinate words.
+pub type VertexId = u32;
+
+/// A directed graph stored as an edge list (`src → dst`).
+///
+/// This is the neutral representation produced by generators and loaders;
+/// algorithm-facing code converts it to [`CooMatrix`] (the streaming FPGA
+/// layout) or [`CsrMatrix`] (the CPU baseline layout).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    /// Number of vertices |V| (ids are `0..num_vertices`).
+    pub num_vertices: usize,
+    /// Directed edges as (src, dst) pairs.
+    pub edges: Vec<(VertexId, VertexId)>,
+}
+
+impl Graph {
+    /// Build from parts, validating vertex ids.
+    pub fn new(num_vertices: usize, edges: Vec<(VertexId, VertexId)>) -> Self {
+        debug_assert!(
+            edges.iter().all(|&(s, d)| (s as usize) < num_vertices && (d as usize) < num_vertices),
+            "edge endpoint out of range"
+        );
+        Self { num_vertices, edges }
+    }
+
+    /// Number of directed edges |E|.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Sparsity |E| / |V|² as reported in Table 1.
+    pub fn sparsity(&self) -> f64 {
+        self.edges.len() as f64 / (self.num_vertices as f64 * self.num_vertices as f64)
+    }
+
+    /// Out-degree of every vertex.
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_vertices];
+        for &(s, _) in &self.edges {
+            deg[s as usize] += 1;
+        }
+        deg
+    }
+
+    /// In-degree of every vertex.
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_vertices];
+        for &(_, d) in &self.edges {
+            deg[d as usize] += 1;
+        }
+        deg
+    }
+
+    /// Dangling bitmap d̄ (§3): `true` for vertices with no outgoing edges.
+    pub fn dangling(&self) -> Vec<bool> {
+        self.out_degrees().iter().map(|&d| d == 0).collect()
+    }
+
+    /// Number of dangling vertices.
+    pub fn num_dangling(&self) -> usize {
+        self.dangling().iter().filter(|&&d| d).count()
+    }
+
+    /// Remove duplicate edges and self-loops (generators may produce a
+    /// handful; the transition matrix assumes simple graphs).
+    pub fn simplify(&mut self) {
+        self.edges.retain(|&(s, d)| s != d);
+        self.edges.sort_unstable();
+        self.edges.dedup();
+    }
+
+    /// Maximum out-degree (drives the smallest representable transition
+    /// probability, relevant to quantization underflow analysis).
+    pub fn max_out_degree(&self) -> u32 {
+        self.out_degrees().into_iter().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        // 0 -> 1, 0 -> 2, 1 -> 2, 3 dangling
+        Graph::new(4, vec![(0, 1), (0, 2), (1, 2)])
+    }
+
+    #[test]
+    fn degrees() {
+        let g = tiny();
+        assert_eq!(g.out_degrees(), vec![2, 1, 0, 0]);
+        assert_eq!(g.in_degrees(), vec![0, 1, 2, 0]);
+        assert_eq!(g.dangling(), vec![false, false, true, true]);
+        assert_eq!(g.num_dangling(), 2);
+        assert_eq!(g.max_out_degree(), 2);
+    }
+
+    #[test]
+    fn sparsity() {
+        let g = tiny();
+        assert!((g.sparsity() - 3.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn simplify_removes_dupes_and_loops() {
+        let mut g = Graph::new(3, vec![(0, 1), (0, 1), (1, 1), (2, 0)]);
+        g.simplify();
+        assert_eq!(g.edges, vec![(0, 1), (2, 0)]);
+    }
+}

@@ -1,0 +1,50 @@
+//! # ppr-spmv
+//!
+//! A reproduction of *"A reduced-precision streaming SpMV architecture for
+//! Personalized PageRank on FPGA"* (Parravicini, Sgherzi, Santambrogio, 2020)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L1** (build-time Python): the paper's COO SpMV hot loop as a Pallas
+//!   kernel with bit-accurate fixed-point arithmetic (`python/compile/kernels/`).
+//! - **L2** (build-time Python): one Personalized PageRank iteration (Eq. 1 of
+//!   the paper) in JAX, AOT-lowered to HLO text artifacts (`python/compile/`).
+//! - **L3** (this crate): the serving coordinator, the bit-identical native
+//!   fixed-point engine used for paper-scale experiments, the FPGA
+//!   performance/resource/power simulator, graph substrates, ranking metrics,
+//!   and the benchmark harness that regenerates every table and figure of the
+//!   paper's evaluation.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod fixed;
+pub mod fpga;
+pub mod graph;
+pub mod metrics;
+pub mod ppr;
+pub mod runtime;
+pub mod spmv;
+pub mod testutil;
+pub mod util;
+
+/// Library version (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Damping factor used throughout the paper's evaluation (§5.1).
+pub const PAPER_ALPHA: f64 = 0.85;
+
+/// Iteration count used for the paper's timed experiments (§5.1).
+pub const PAPER_ITERATIONS: usize = 10;
+
+/// Number of personalization vertices batched per pass (κ, §3).
+pub const PAPER_KAPPA: usize = 8;
+
+/// Edges processed per clock cycle (B, §4.1: 256-bit packets / 32-bit values).
+pub const PAPER_B: usize = 8;
+
+/// Personalization vertices per timed workload (§5.1: "100 random vertices").
+pub const PAPER_WORKLOAD_VERTICES: usize = 100;

@@ -1,0 +1,12 @@
+//! `ppr-spmv` — leader entry point for the three-layer PPR stack.
+//! See `ppr_spmv::cli` for subcommands and `README.md` for a tour.
+
+use ppr_spmv::cli;
+
+fn main() {
+    let args = cli::Args::parse(std::env::args().skip(1));
+    if let Err(e) = cli::dispatch(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

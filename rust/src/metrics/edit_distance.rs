@@ -1,0 +1,75 @@
+//! Levenshtein edit distance between top-N vertex sequences (§5.3.1,
+//! citing Levenshtein 1966). Handles ordering shifts gracefully: in the
+//! paper's example (truth `{2,4,8,6}` vs. pred `{4,8,6,2}`) the distance
+//! is 2 — delete the leading 2 and re-insert it (the paper describes the
+//! same relationship as distance 1 by ignoring values beyond N after the
+//! insertion; we report the symmetric textbook distance, whose *trend*
+//! across bit-widths is what Fig. 4 plots).
+
+/// Levenshtein distance between two sequences (insert/delete/substitute,
+/// all cost 1). O(|a|·|b|) with a rolling row — N ≤ 50 in all uses.
+pub fn edit_distance<T: PartialEq>(a: &[T], b: &[T]) -> usize {
+    if a.is_empty() {
+        return b.len();
+    }
+    if b.is_empty() {
+        return a.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_zero() {
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 2, 3]), 0);
+    }
+
+    #[test]
+    fn empty_cases() {
+        assert_eq!(edit_distance::<i32>(&[], &[]), 0);
+        assert_eq!(edit_distance(&[], &[1, 2]), 2);
+        assert_eq!(edit_distance(&[1, 2], &[]), 2);
+    }
+
+    #[test]
+    fn substitution() {
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 9, 3]), 1);
+    }
+
+    #[test]
+    fn rotation_is_cheap() {
+        // the paper's displaced-value example: one deletion + one insertion
+        assert_eq!(edit_distance(&[4, 8, 6, 2], &[2, 4, 8, 6]), 2);
+    }
+
+    #[test]
+    fn strings_classic() {
+        let a: Vec<char> = "kitten".chars().collect();
+        let b: Vec<char> = "sitting".chars().collect();
+        assert_eq!(edit_distance(&a, &b), 3);
+    }
+
+    #[test]
+    fn triangle_inequality_sample() {
+        let a = [1, 2, 3, 4];
+        let b = [2, 3, 4, 5];
+        let c = [9, 9, 9, 9];
+        let ab = edit_distance(&a, &b);
+        let bc = edit_distance(&b, &c);
+        let ac = edit_distance(&a, &c);
+        assert!(ac <= ab + bc);
+    }
+}

@@ -1,0 +1,86 @@
+//! Kendall's τ-b rank correlation (§5.3.1, citing Shani & Gunawardana):
+//! penalizes out-of-order predictions. Computed over the ground truth's
+//! top-N vertices (the items a recommender would actually surface),
+//! comparing their relative order under both score vectors.
+
+/// Kendall's τ-b between the orders induced by `pred` and `truth` on the
+/// vertex subset `subset` (typically the truth's top-N). Returns 1.0 for a
+/// subset of size < 2 (no pairs to disagree on).
+pub fn kendall_tau(pred: &[f64], truth: &[f64], subset: &[usize]) -> f64 {
+    let m = subset.len();
+    if m < 2 {
+        return 1.0;
+    }
+    let mut concordant = 0i64;
+    let mut discordant = 0i64;
+    let mut ties_pred = 0i64;
+    let mut ties_truth = 0i64;
+    for i in 0..m {
+        for j in (i + 1)..m {
+            let (a, b) = (subset[i], subset[j]);
+            let dp = pred[a].partial_cmp(&pred[b]).unwrap();
+            let dt = truth[a].partial_cmp(&truth[b]).unwrap();
+            use std::cmp::Ordering::Equal;
+            match (dp, dt) {
+                (Equal, Equal) => {}
+                (Equal, _) => ties_pred += 1,
+                (_, Equal) => ties_truth += 1,
+                (x, y) if x == y => concordant += 1,
+                _ => discordant += 1,
+            }
+        }
+    }
+    let n0 = (m * (m - 1) / 2) as i64;
+    let denom = (((n0 - ties_pred) as f64) * ((n0 - ties_truth) as f64)).sqrt();
+    if denom == 0.0 {
+        return 1.0;
+    }
+    (concordant - discordant) as f64 / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_orders_tau_one() {
+        let t: Vec<f64> = (0..20).map(|i| 20.0 - i as f64).collect();
+        let subset: Vec<usize> = (0..10).collect();
+        assert!((kendall_tau(&t, &t, &subset) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reversed_orders_tau_minus_one() {
+        let t: Vec<f64> = (0..10).map(|i| 10.0 - i as f64).collect();
+        let p: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let subset: Vec<usize> = (0..10).collect();
+        assert!((kendall_tau(&p, &t, &subset) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_swap_tau() {
+        // ranks 0..5, swap two adjacent → tau = 1 - 2*2/(n(n-1)) = 1 - 4/20
+        let t: Vec<f64> = vec![5.0, 4.0, 3.0, 2.0, 1.0];
+        let mut p = t.clone();
+        p.swap(0, 1);
+        let subset: Vec<usize> = (0..5).collect();
+        let tau = kendall_tau(&p, &t, &subset);
+        assert!((tau - 0.8).abs() < 1e-12, "{tau}");
+    }
+
+    #[test]
+    fn ties_handled() {
+        let t = vec![3.0, 2.0, 1.0];
+        let p = vec![2.0, 2.0, 1.0];
+        let subset = vec![0, 1, 2];
+        let tau = kendall_tau(&p, &t, &subset);
+        assert!(tau > 0.0 && tau < 1.0);
+    }
+
+    #[test]
+    fn tiny_subsets_are_perfect() {
+        let t = vec![1.0, 2.0];
+        assert_eq!(kendall_tau(&t, &t, &[0]), 1.0);
+        assert_eq!(kendall_tau(&t, &t, &[]), 1.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Information-retrieval ranking metrics (§5.3.1): number of errors, edit
+//! distance, NDCG, Precision@N, MAE and Kendall's τ — everything Figs. 4–6
+//! plot, computed between a reduced-precision ranking and the f64 ground
+//! truth.
+
+pub mod edit_distance;
+pub mod kendall;
+pub mod ndcg;
+pub mod ranking;
+
+pub use edit_distance::edit_distance;
+pub use kendall::kendall_tau;
+pub use ndcg::ndcg;
+pub use ranking::{mae, num_errors, precision_at};
+
+/// Top-`n` indices of a `u64` score vector, descending, ties broken toward
+/// the lower vertex id. Uses a partial selection so `n ≪ |V|` costs
+/// O(|V| + n log n).
+pub fn top_n_indices_u64(scores: &[u64], n: usize) -> Vec<usize> {
+    top_n_by(scores.len(), n, |a, b| scores[a].cmp(&scores[b]))
+}
+
+/// Top-`n` indices of an `f64` score vector (NaN-free input expected).
+pub fn top_n_indices_f64(scores: &[f64], n: usize) -> Vec<usize> {
+    top_n_by(scores.len(), n, |a, b| scores[a].partial_cmp(&scores[b]).unwrap())
+}
+
+/// Top-`n` indices of an `f32` score vector.
+pub fn top_n_indices_f32(scores: &[f32], n: usize) -> Vec<usize> {
+    top_n_by(scores.len(), n, |a, b| scores[a].partial_cmp(&scores[b]).unwrap())
+}
+
+fn top_n_by<F: Fn(usize, usize) -> std::cmp::Ordering>(len: usize, n: usize, cmp: F) -> Vec<usize> {
+    let n = n.min(len);
+    let mut idx: Vec<usize> = (0..len).collect();
+    // descending by score, ascending by id on ties
+    let ord = |a: &usize, b: &usize| cmp(*b, *a).then_with(|| a.cmp(b));
+    if n < len {
+        idx.select_nth_unstable_by(n, ord);
+        idx.truncate(n);
+    }
+    idx.sort_unstable_by(ord);
+    idx.truncate(n);
+    idx
+}
+
+/// Rank position (0-based) of every vertex in a descending score order —
+/// the full ranking used by NDCG's relevance assignment.
+pub fn full_ranking_f64(scores: &[f64]) -> Vec<usize> {
+    let order = top_n_indices_f64(scores, scores.len());
+    let mut rank = vec![0usize; scores.len()];
+    for (pos, &v) in order.iter().enumerate() {
+        rank[v] = pos;
+    }
+    rank
+}
+
+/// All §5.3 metrics for one (prediction, ground-truth) pair at one top-N
+/// cutoff.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccuracyReport {
+    /// Cutoff N.
+    pub n: usize,
+    /// Number of positions in the top-N whose vertex differs from truth.
+    pub num_errors: usize,
+    /// Levenshtein edit distance between the two top-N sequences.
+    pub edit_distance: usize,
+    /// NDCG of the prediction against truth-derived relevances, in [0,1].
+    pub ndcg: f64,
+    /// |top-N ∩ top-N_truth| / N.
+    pub precision: f64,
+    /// Kendall's τ-b over the truth's top-N vertices.
+    pub kendall_tau: f64,
+}
+
+/// Compute the full report at cutoff `n` from score vectors.
+pub fn accuracy_report(pred: &[f64], truth: &[f64], n: usize) -> AccuracyReport {
+    assert_eq!(pred.len(), truth.len());
+    let top_pred = top_n_indices_f64(pred, n);
+    let top_truth = top_n_indices_f64(truth, n);
+    AccuracyReport {
+        n,
+        num_errors: ranking::num_errors(&top_pred, &top_truth),
+        edit_distance: edit_distance::edit_distance(&top_pred, &top_truth),
+        ndcg: ndcg::ndcg(pred, truth, n),
+        precision: ranking::precision_at(&top_pred, &top_truth),
+        kendall_tau: kendall::kendall_tau(pred, truth, &top_truth),
+    }
+}
+
+/// Mean of a set of reports (aggregation across personalization vertices
+/// and graphs, as in Figs. 4–5).
+#[derive(Debug, Clone, Default)]
+pub struct ReportAccumulator {
+    n: usize,
+    count: usize,
+    num_errors: f64,
+    edit_distance: f64,
+    ndcg: f64,
+    precision: f64,
+    kendall_tau: f64,
+    mae_sum: f64,
+}
+
+impl ReportAccumulator {
+    /// Accumulator for cutoff `n`.
+    pub fn new(n: usize) -> Self {
+        Self { n, ..Default::default() }
+    }
+
+    /// Add one report (plus the pair's MAE, which has no cutoff).
+    pub fn add(&mut self, r: &AccuracyReport, mae: f64) {
+        assert_eq!(r.n, self.n);
+        self.count += 1;
+        self.num_errors += r.num_errors as f64;
+        self.edit_distance += r.edit_distance as f64;
+        self.ndcg += r.ndcg;
+        self.precision += r.precision;
+        self.kendall_tau += r.kendall_tau;
+        self.mae_sum += mae;
+    }
+
+    /// Number of accumulated reports.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// The cutoff this accumulator aggregates at.
+    pub fn cutoff(&self) -> usize {
+        self.n
+    }
+
+    /// Fold another accumulator (same cutoff) into this one.
+    pub fn merge(&mut self, other: &ReportAccumulator) {
+        assert_eq!(self.n, other.n, "cutoff mismatch");
+        self.count += other.count;
+        self.num_errors += other.num_errors;
+        self.edit_distance += other.edit_distance;
+        self.ndcg += other.ndcg;
+        self.precision += other.precision;
+        self.kendall_tau += other.kendall_tau;
+        self.mae_sum += other.mae_sum;
+    }
+
+    /// Mean metrics `(errors, edit, ndcg, precision, tau, mae)`.
+    pub fn means(&self) -> (f64, f64, f64, f64, f64, f64) {
+        let c = self.count.max(1) as f64;
+        (
+            self.num_errors / c,
+            self.edit_distance / c,
+            self.ndcg / c,
+            self.precision / c,
+            self.kendall_tau / c,
+            self.mae_sum / c,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_n_basics() {
+        let scores = [0.1, 0.9, 0.5, 0.9, 0.2];
+        assert_eq!(top_n_indices_f64(&scores, 3), vec![1, 3, 2]);
+        assert_eq!(top_n_indices_f64(&scores, 10), vec![1, 3, 2, 4, 0]);
+        let u: Vec<u64> = vec![5, 1, 5, 0];
+        assert_eq!(top_n_indices_u64(&u, 2), vec![0, 2]);
+    }
+
+    #[test]
+    fn full_ranking_inverts_order() {
+        let scores = [0.1, 0.9, 0.5];
+        let rank = full_ranking_f64(&scores);
+        assert_eq!(rank, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn perfect_prediction_is_perfect_report() {
+        let truth: Vec<f64> = (0..100).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let r = accuracy_report(&truth, &truth, 10);
+        assert_eq!(r.num_errors, 0);
+        assert_eq!(r.edit_distance, 0);
+        assert!((r.ndcg - 1.0).abs() < 1e-12);
+        assert_eq!(r.precision, 1.0);
+        assert!((r.kendall_tau - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulator_means() {
+        let truth: Vec<f64> = (0..50).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let r = accuracy_report(&truth, &truth, 10);
+        let mut acc = ReportAccumulator::new(10);
+        acc.add(&r, 0.5);
+        acc.add(&r, 1.5);
+        let (e, _, ndcg, p, _, mae) = acc.means();
+        assert_eq!(acc.count(), 2);
+        assert_eq!(e, 0.0);
+        assert!((ndcg - 1.0).abs() < 1e-12);
+        assert_eq!(p, 1.0);
+        assert_eq!(mae, 1.0);
+    }
+}

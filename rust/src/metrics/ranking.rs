@@ -1,0 +1,59 @@
+//! Position-wise ranking metrics: number of errors, Precision@N, MAE.
+
+/// Number of errors (§5.3.1): positions in the top-N where the predicted
+/// vertex differs from the ground-truth vertex. Deliberately coarse — the
+/// paper notes a single displaced value can shift every later position.
+pub fn num_errors(top_pred: &[usize], top_truth: &[usize]) -> usize {
+    top_pred
+        .iter()
+        .zip(top_truth)
+        .filter(|(a, b)| a != b)
+        .count()
+        + top_pred.len().abs_diff(top_truth.len())
+}
+
+/// Precision@N: fraction of ground-truth top-N vertices retrieved in the
+/// predicted top-N, ignoring order (§5.3.2: "just 20 bits are enough to
+/// retrieve 90% of the best top-50 items").
+pub fn precision_at(top_pred: &[usize], top_truth: &[usize]) -> f64 {
+    if top_truth.is_empty() {
+        return 1.0;
+    }
+    let truth: std::collections::HashSet<_> = top_truth.iter().collect();
+    let hits = top_pred.iter().filter(|v| truth.contains(v)).count();
+    hits as f64 / top_truth.len() as f64
+}
+
+/// Mean Absolute Error between score vectors (Fig. 5): how far the
+/// reduced-precision PPR *values* are from the converged f64 values.
+pub fn mae(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    pred.iter().zip(truth).map(|(a, b)| (a - b).abs()).sum::<f64>() / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_counts_positionwise() {
+        // the paper's own example: truth {2,4,8,6}, pred {4,8,6,2} → 4 errors
+        assert_eq!(num_errors(&[4, 8, 6, 2], &[2, 4, 8, 6]), 4);
+        assert_eq!(num_errors(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(num_errors(&[1, 9, 3], &[1, 2, 3]), 1);
+    }
+
+    #[test]
+    fn precision_ignores_order() {
+        assert_eq!(precision_at(&[4, 8, 6, 2], &[2, 4, 8, 6]), 1.0);
+        assert_eq!(precision_at(&[1, 2], &[2, 3]), 0.5);
+        assert_eq!(precision_at(&[], &[1, 2]), 0.0);
+    }
+
+    #[test]
+    fn mae_basics() {
+        assert_eq!(mae(&[1.0, 2.0], &[1.5, 1.5]), 0.5);
+        assert_eq!(mae(&[1.0], &[1.0]), 0.0);
+    }
+}

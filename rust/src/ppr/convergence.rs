@@ -1,0 +1,71 @@
+//! Convergence analysis (Fig. 7): per-iteration Euclidean update norms and
+//! iterations-to-threshold, used to reproduce the paper's "fixed-point
+//! converges 2× faster than floating-point" result.
+
+/// A convergence trace: the Euclidean norm of `p_{t+1} − p_t` after each
+/// iteration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvergenceTrace {
+    /// Label of the run (precision name, graph, ...).
+    pub label: String,
+    /// Per-iteration update norms.
+    pub norms: Vec<f64>,
+}
+
+impl ConvergenceTrace {
+    /// Wrap a norm series.
+    pub fn new(label: impl Into<String>, norms: Vec<f64>) -> Self {
+        Self { label: label.into(), norms }
+    }
+
+    /// First iteration (1-based) whose update norm drops below `threshold`,
+    /// or `None` if it never does. The paper uses 1e-6 as "a common
+    /// convergence threshold for PPR".
+    pub fn iterations_to(&self, threshold: f64) -> Option<usize> {
+        self.norms.iter().position(|&n| n < threshold).map(|i| i + 1)
+    }
+
+    /// Truncate the trace below `floor` (the paper truncates plotted lines
+    /// below 1e-7).
+    pub fn truncated(&self, floor: f64) -> ConvergenceTrace {
+        let end = self.norms.iter().position(|&n| n < floor).map(|i| i + 1).unwrap_or(self.norms.len());
+        ConvergenceTrace { label: self.label.clone(), norms: self.norms[..end].to_vec() }
+    }
+
+    /// Convergence-speed ratio vs. another trace at a threshold:
+    /// `other.iterations_to(th) / self.iterations_to(th)` (>1 means `self`
+    /// converges faster). Returns `None` when either never converges.
+    pub fn speedup_vs(&self, other: &ConvergenceTrace, threshold: f64) -> Option<f64> {
+        let mine = self.iterations_to(threshold)?;
+        let theirs = other.iterations_to(threshold)?;
+        Some(theirs as f64 / mine as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iterations_to_threshold() {
+        let t = ConvergenceTrace::new("t", vec![1e-1, 1e-3, 1e-5, 1e-7]);
+        assert_eq!(t.iterations_to(1e-4), Some(3));
+        assert_eq!(t.iterations_to(1e-9), None);
+        assert_eq!(t.iterations_to(1.0), Some(1));
+    }
+
+    #[test]
+    fn truncation() {
+        let t = ConvergenceTrace::new("t", vec![1e-1, 1e-3, 1e-8, 1e-9]);
+        let tt = t.truncated(1e-7);
+        assert_eq!(tt.norms.len(), 3);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let fixed = ConvergenceTrace::new("26b", vec![1e-2, 1e-4, 1e-7]);
+        let float = ConvergenceTrace::new("F32", vec![1e-1, 1e-2, 1e-4, 1e-5, 1e-6, 1e-7]);
+        // fixed reaches 1e-6 at iter 3, float at iter 6 → 2x
+        assert_eq!(fixed.speedup_vs(&float, 1e-6), Some(2.0));
+    }
+}

@@ -1,0 +1,144 @@
+//! Personalized PageRank solvers (§3–§4.1 of the paper).
+//!
+//! The recurrence (Eq. 1):
+//!
+//! ```text
+//! p_{t+1} = α·X·p_t + (α/|V|)·(d̄·p_t)·1 + (1−α)·v̄
+//! ```
+//!
+//! - [`batched`] — the paper's Alg. 1: κ personalization vertices advanced
+//!   per pass over the edges, running on the streaming SpMV engine with a
+//!   generic datapath (the "FPGA algorithm", bit-accurate per width).
+//! - [`cpu_baseline`] — the PGX analogue: multi-threaded f32 pull-based
+//!   PPR, one request at a time (the paper found PGX gained nothing from
+//!   manual batching).
+//! - [`reference`] — f64 solver run to convergence: the ground truth the
+//!   accuracy metrics compare against ("CPU implementation at
+//!   convergence, with at least 100 iterations").
+//! - [`convergence`] — per-iteration Euclidean-norm tracking (Fig. 7).
+
+pub mod batched;
+pub mod convergence;
+pub mod cpu_baseline;
+pub mod reference;
+
+pub use batched::{BatchedPpr, PprOutput};
+pub use convergence::ConvergenceTrace;
+
+use crate::graph::{CooMatrix, Graph, VertexId};
+use crate::spmv::PacketSchedule;
+
+/// Solver parameters shared by every engine.
+#[derive(Debug, Clone, Copy)]
+pub struct PprConfig {
+    /// Damping factor α (paper: 0.85).
+    pub alpha: f64,
+    /// Maximum iterations (paper: 10 for timed runs, ≥100 for ground truth).
+    pub max_iterations: usize,
+    /// Optional early-exit threshold on the Euclidean norm of the update
+    /// (paper §5.3.2 uses 1e-6 as the common convergence threshold).
+    pub convergence_threshold: Option<f64>,
+}
+
+impl Default for PprConfig {
+    fn default() -> Self {
+        Self {
+            alpha: crate::PAPER_ALPHA,
+            max_iterations: crate::PAPER_ITERATIONS,
+            convergence_threshold: None,
+        }
+    }
+}
+
+impl PprConfig {
+    /// The paper's timed-experiment configuration (α=0.85, 10 iterations,
+    /// no early exit).
+    pub fn paper_timed() -> Self {
+        Self::default()
+    }
+
+    /// Ground-truth configuration: run to numerical convergence with a
+    /// generous iteration budget.
+    pub fn ground_truth() -> Self {
+        Self { alpha: crate::PAPER_ALPHA, max_iterations: 100, convergence_threshold: Some(1e-12) }
+    }
+}
+
+/// Graph-derived state shared by solver instances: the aligned packet
+/// schedule (FPGA DRAM layout) plus the dangling-vertex index list used by
+/// the scaling-vector computation (Alg. 1 line 6).
+#[derive(Debug, Clone)]
+pub struct PreparedGraph {
+    /// The aligned COO packet schedule.
+    pub sched: PacketSchedule,
+    /// Indices of dangling vertices (outdeg = 0).
+    pub dangling_idx: Vec<VertexId>,
+    /// |V|.
+    pub num_vertices: usize,
+}
+
+impl PreparedGraph {
+    /// Preprocess a graph for packet width `b` (host-side, once per graph;
+    /// the paper reports this takes <1% of execution time, §4.2).
+    pub fn new(g: &Graph, b: usize) -> Self {
+        let coo = CooMatrix::from_graph(g);
+        Self::from_coo(&coo, b)
+    }
+
+    /// Preprocess an existing COO matrix.
+    pub fn from_coo(coo: &CooMatrix, b: usize) -> Self {
+        let sched = PacketSchedule::build(coo, b);
+        let dangling_idx = (0..coo.num_vertices as VertexId)
+            .filter(|&v| coo.dangling[v as usize])
+            .collect();
+        Self { sched, dangling_idx, num_vertices: coo.num_vertices }
+    }
+}
+
+/// Split a request list into κ-sized batches (the last batch may repeat
+/// the final vertex to fill all lanes, mirroring how the hardware always
+/// runs κ lanes).
+pub fn batch_requests(requests: &[VertexId], kappa: usize) -> Vec<Vec<VertexId>> {
+    assert!(kappa >= 1);
+    assert!(!requests.is_empty());
+    requests
+        .chunks(kappa)
+        .map(|c| {
+            let mut batch = c.to_vec();
+            while batch.len() < kappa {
+                batch.push(*c.last().unwrap());
+            }
+            batch
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batching_pads_last() {
+        let b = batch_requests(&[1, 2, 3, 4, 5], 4);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0], vec![1, 2, 3, 4]);
+        assert_eq!(b[1], vec![5, 5, 5, 5]);
+    }
+
+    #[test]
+    fn prepared_graph_collects_dangling() {
+        let g = Graph::new(4, vec![(0, 1), (1, 2)]);
+        let pg = PreparedGraph::new(&g, 4);
+        assert_eq!(pg.dangling_idx, vec![2, 3]);
+        assert_eq!(pg.num_vertices, 4);
+    }
+
+    #[test]
+    fn config_presets() {
+        let t = PprConfig::paper_timed();
+        assert_eq!(t.max_iterations, 10);
+        assert!(t.convergence_threshold.is_none());
+        let g = PprConfig::ground_truth();
+        assert_eq!(g.max_iterations, 100);
+    }
+}

@@ -1,0 +1,216 @@
+//! PJRT-backed PPR engine: drives the AOT step executable from the L3
+//! request path, with the iteration loop, early-exit policy and graph
+//! marshalling on the Rust side.
+
+use super::{ArtifactSpec, Manifest, Runtime, StepExecutable};
+use crate::graph::VertexId;
+use crate::ppr::{PprConfig, PreparedGraph};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Graph stream marshalled to the static shapes of an artifact.
+struct MarshalledGraph {
+    x: Vec<i32>,
+    y: Vec<i32>,
+    val_fixed: Vec<i64>,
+    val_float: Vec<f32>,
+    dangling_fixed: Vec<i64>,
+    dangling_float: Vec<f32>,
+}
+
+/// A PPR engine executing the AOT-compiled step on the PJRT CPU client.
+pub struct PjrtPprEngine {
+    step: StepExecutable,
+    graph: MarshalledGraph,
+    num_vertices: usize,
+}
+
+impl PjrtPprEngine {
+    /// Load the artifact for `label` from `dir` and bind it to a prepared
+    /// graph. The graph must fit the artifact's static shapes (|V| ≤
+    /// artifact vertices, padded stream ≤ artifact edges).
+    pub fn load(rt: &Runtime, dir: &Path, label: &str, graph: &PreparedGraph) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let spec = manifest
+            .find(label)
+            .with_context(|| format!("no artifact for precision {label}"))?
+            .clone();
+        Self::load_spec(rt, dir, &spec, graph)
+    }
+
+    /// Load a specific artifact spec.
+    pub fn load_spec(
+        rt: &Runtime,
+        dir: &Path,
+        spec: &ArtifactSpec,
+        graph: &PreparedGraph,
+    ) -> Result<Self> {
+        if graph.num_vertices > spec.vertices {
+            bail!(
+                "graph has {} vertices but artifact is sized for {}",
+                graph.num_vertices,
+                spec.vertices
+            );
+        }
+        if graph.sched.num_slots() > spec.edges {
+            bail!(
+                "graph stream has {} slots but artifact is sized for {}",
+                graph.sched.num_slots(),
+                spec.edges
+            );
+        }
+        let step = rt.load_step(dir, spec)?;
+        let graph = Self::marshal(spec, graph);
+        Ok(Self { step, graph, num_vertices: spec.vertices })
+    }
+
+    /// Pad the prepared stream to the artifact's static edge length and
+    /// quantize values for its dtype. Padding entries carry val = 0 and
+    /// point at vertex 0 — they contribute nothing.
+    fn marshal(spec: &ArtifactSpec, graph: &PreparedGraph) -> MarshalledGraph {
+        let e = spec.edges;
+        let mut x: Vec<i32> = graph.sched.x.iter().map(|&v| v as i32).collect();
+        let mut y: Vec<i32> = graph.sched.y.iter().map(|&v| v as i32).collect();
+        let mut val = graph.sched.val.clone();
+        x.resize(e, 0);
+        y.resize(e, 0);
+        val.resize(e, 0.0);
+
+        let val_fixed: Vec<i64> = if spec.dtype == "s64" {
+            let fmt = crate::fixed::FixedFormat::paper(spec.frac_bits + 1);
+            val.iter().map(|&v| fmt.quantize(v) as i64).collect()
+        } else {
+            Vec::new()
+        };
+        let val_float: Vec<f32> = if spec.dtype == "f32" {
+            val.iter().map(|&v| v as f32).collect()
+        } else {
+            Vec::new()
+        };
+
+        let mut dangling_fixed = vec![0i64; spec.vertices];
+        for &d in &graph.dangling_idx {
+            dangling_fixed[d as usize] = 1;
+        }
+        let dangling_float: Vec<f32> = dangling_fixed.iter().map(|&d| d as f32).collect();
+        MarshalledGraph { x, y, val_fixed, val_float, dangling_fixed, dangling_float }
+    }
+
+    /// The artifact spec in use.
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.step.spec
+    }
+
+    /// Run PPR for a batch of exactly κ personalization vertices, driving
+    /// the step executable `cfg.max_iterations` times (with optional
+    /// early exit on the update norm). Returns scores dequantized to f64,
+    /// vertex-major `scores[v*κ + k]`, plus iterations executed.
+    pub fn run(&self, personalization: &[VertexId], cfg: &PprConfig) -> Result<(Vec<f64>, usize)> {
+        let spec = &self.step.spec;
+        if personalization.len() != spec.kappa {
+            bail!("batch of {} requests, artifact has κ={}", personalization.len(), spec.kappa);
+        }
+        match spec.dtype.as_str() {
+            "s64" => self.run_fixed(personalization, cfg),
+            "f32" => self.run_float(personalization, cfg),
+            other => bail!("unknown artifact dtype {other}"),
+        }
+    }
+
+    fn run_fixed(&self, pers: &[VertexId], cfg: &PprConfig) -> Result<(Vec<f64>, usize)> {
+        let spec = &self.step.spec;
+        let (v, k) = (spec.vertices, spec.kappa);
+        let one = 1i64 << spec.frac_bits;
+        let ulp = 0.5f64.powi(spec.frac_bits as i32);
+
+        let mut pers_m = vec![0i64; v * k];
+        let mut p = vec![0i64; v * k];
+        for (lane, &pv) in pers.iter().enumerate() {
+            pers_m[pv as usize * k + lane] = 1;
+            p[pv as usize * k + lane] = one;
+        }
+
+        let x_l = xla::Literal::vec1(&self.graph.x).reshape(&[spec.edges as i64])?;
+        let y_l = xla::Literal::vec1(&self.graph.y).reshape(&[spec.edges as i64])?;
+        let val_l = xla::Literal::vec1(&self.graph.val_fixed).reshape(&[spec.edges as i64])?;
+        let dang_l = xla::Literal::vec1(&self.graph.dangling_fixed).reshape(&[v as i64])?;
+        let pers_l = xla::Literal::vec1(&pers_m).reshape(&[v as i64, k as i64])?;
+
+        let mut iterations = 0usize;
+        for _ in 0..cfg.max_iterations {
+            let p_l = xla::Literal::vec1(&p).reshape(&[v as i64, k as i64])?;
+            let result = self.step.exe.execute::<&xla::Literal>(&[
+                &x_l, &y_l, &val_l, &p_l, &dang_l, &pers_l,
+            ])?[0][0]
+                .to_literal_sync()?;
+            let next: Vec<i64> = result.to_tuple1()?.to_vec()?;
+            iterations += 1;
+            let norm = l2_norm_i64(&p, &next, ulp, k);
+            p = next;
+            if let Some(th) = cfg.convergence_threshold {
+                if norm < th {
+                    break;
+                }
+            }
+        }
+        Ok((p.iter().map(|&w| w as f64 * ulp).collect(), iterations))
+    }
+
+    fn run_float(&self, pers: &[VertexId], cfg: &PprConfig) -> Result<(Vec<f64>, usize)> {
+        let spec = &self.step.spec;
+        let (v, k) = (spec.vertices, spec.kappa);
+        let mut pers_m = vec![0f32; v * k];
+        let mut p = vec![0f32; v * k];
+        for (lane, &pv) in pers.iter().enumerate() {
+            pers_m[pv as usize * k + lane] = 1.0;
+            p[pv as usize * k + lane] = 1.0;
+        }
+        let x_l = xla::Literal::vec1(&self.graph.x).reshape(&[spec.edges as i64])?;
+        let y_l = xla::Literal::vec1(&self.graph.y).reshape(&[spec.edges as i64])?;
+        let val_l = xla::Literal::vec1(&self.graph.val_float).reshape(&[spec.edges as i64])?;
+        let dang_l = xla::Literal::vec1(&self.graph.dangling_float).reshape(&[v as i64])?;
+        let pers_l = xla::Literal::vec1(&pers_m).reshape(&[v as i64, k as i64])?;
+
+        let mut iterations = 0usize;
+        for _ in 0..cfg.max_iterations {
+            let p_l = xla::Literal::vec1(&p).reshape(&[v as i64, k as i64])?;
+            let result = self.step.exe.execute::<&xla::Literal>(&[
+                &x_l, &y_l, &val_l, &p_l, &dang_l, &pers_l,
+            ])?[0][0]
+                .to_literal_sync()?;
+            let next: Vec<f32> = result.to_tuple1()?.to_vec()?;
+            iterations += 1;
+            let norm = l2_norm_f32(&p, &next, k);
+            p = next;
+            if let Some(th) = cfg.convergence_threshold {
+                if norm < th {
+                    break;
+                }
+            }
+        }
+        Ok((p.iter().map(|&w| w as f64).collect(), iterations))
+    }
+
+    /// Number of vertices of the bound artifact.
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+}
+
+fn l2_norm_i64(a: &[i64], b: &[i64], ulp: f64, kappa: usize) -> f64 {
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64 * ulp;
+        acc += d * d;
+    }
+    (acc / kappa as f64).sqrt()
+}
+
+fn l2_norm_f32(a: &[f32], b: &[f32], kappa: usize) -> f64 {
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        acc += d * d;
+    }
+    (acc / kappa as f64).sqrt()
+}

@@ -1,0 +1,124 @@
+//! Artifact manifest parsing (`artifacts/manifest.txt`, written by
+//! `python/compile/aot.py`): one line per compiled PPR-step variant.
+
+use crate::fixed::Precision;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One artifact row: a PPR step lowered for fixed static shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    /// Precision label ("20b".."26b", "f32").
+    pub label: String,
+    /// File name within the artifacts directory.
+    pub file: String,
+    /// Static vertex count |V|.
+    pub vertices: usize,
+    /// Padded edge-stream length.
+    pub edges: usize,
+    /// κ lanes.
+    pub kappa: usize,
+    /// Fractional bits (0 for f32).
+    pub frac_bits: u32,
+    /// Element dtype ("s64" or "f32").
+    pub dtype: String,
+}
+
+impl ArtifactSpec {
+    /// The precision this artifact implements.
+    pub fn precision(&self) -> Option<Precision> {
+        Precision::parse(&self.label)
+    }
+}
+
+/// Parsed manifest: the artifact set plus the α they were synthesized with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Damping factor baked into the step executables.
+    pub alpha: f64,
+    /// All artifact rows.
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut alpha = crate::PAPER_ALPHA;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = t.split_whitespace().collect();
+            if fields[0] == "alpha" {
+                alpha = fields
+                    .get(1)
+                    .context("alpha line missing value")?
+                    .parse()
+                    .context("bad alpha")?;
+                continue;
+            }
+            if fields.len() != 7 {
+                bail!("manifest line {}: expected 7 fields, got {}", lineno + 1, fields.len());
+            }
+            artifacts.push(ArtifactSpec {
+                label: fields[0].to_string(),
+                file: fields[1].to_string(),
+                vertices: fields[2].parse().context("vertices")?,
+                edges: fields[3].parse().context("edges")?,
+                kappa: fields[4].parse().context("kappa")?,
+                frac_bits: fields[5].parse().context("frac_bits")?,
+                dtype: fields[6].to_string(),
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest contains no artifacts");
+        }
+        Ok(Self { alpha, artifacts })
+    }
+
+    /// Load `manifest.txt` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Find the artifact for a precision label.
+    pub fn find(&self, label: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.label == label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+alpha 0.85
+26b ppr_step_26b_v512_e1024_k4.hlo.txt 512 1024 4 25 s64
+f32 ppr_step_f32_v512_e1024_k4.hlo.txt 512 1024 4 0 f32
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.alpha, 0.85);
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find("26b").unwrap();
+        assert_eq!(a.vertices, 512);
+        assert_eq!(a.frac_bits, 25);
+        assert_eq!(a.precision(), Some(Precision::Fixed(26)));
+        assert_eq!(m.find("f32").unwrap().precision(), Some(Precision::Float32));
+        assert!(m.find("99b").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("26b file.hlo 512").is_err());
+    }
+}

@@ -1,0 +1,60 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via
+//! the `xla` crate — Python never runs on this path.
+//!
+//! Artifact flow (see /opt/xla-example/load_hlo and DESIGN.md §2):
+//! `manifest.txt` → [`manifest::Manifest`] → `HloModuleProto::from_text_file`
+//! → `client.compile` → [`PjrtPprEngine`] iterating the step executable
+//! with buffer feedback, convergence policy owned by the caller (L3).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::PjrtPprEngine;
+pub use manifest::{ArtifactSpec, Manifest};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled PPR-step executable bound to the PJRT CPU client.
+pub struct StepExecutable {
+    /// The artifact this was compiled from.
+    pub spec: ArtifactSpec,
+    /// PJRT loaded executable.
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// Wrapper around the process-wide PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Platform name (e.g. "cpu"), for diagnostics.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact.
+    pub fn load_step(&self, dir: &Path, spec: &ArtifactSpec) -> Result<StepExecutable> {
+        let path = dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {}", spec.file))?;
+        Ok(StepExecutable { spec: spec.clone(), exe })
+    }
+
+    /// Access the raw client (advanced uses).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}

@@ -1,0 +1,127 @@
+//! Row-parallel CSR SpMV — the kernel inside the multi-threaded CPU
+//! baseline (the paper's PGX comparison point) and one side of the
+//! COO-vs-CSR ablation (§3 motivates COO over CSC/CSR for streaming
+//! hardware; on a cache-based CPU, CSR-by-destination is the natural
+//! layout because each output row is written by exactly one thread).
+
+use crate::graph::CsrMatrix;
+
+/// Single-threaded f32 CSR SpMV over κ lanes (vertex-major vectors).
+pub fn csr_spmv_f32(m: &CsrMatrix, kappa: usize, p: &[f32], out: &mut [f32]) {
+    assert_eq!(p.len(), m.num_vertices * kappa);
+    assert_eq!(out.len(), m.num_vertices * kappa);
+    for x in 0..m.num_vertices {
+        let (cols, vals) = m.row(x);
+        let o = &mut out[x * kappa..(x + 1) * kappa];
+        o.fill(0.0);
+        for (c, &v) in cols.iter().zip(vals) {
+            let v = v as f32;
+            let src = &p[*c as usize * kappa..*c as usize * kappa + kappa];
+            for k in 0..kappa {
+                o[k] += v * src[k];
+            }
+        }
+    }
+}
+
+/// Multi-threaded f32 CSR SpMV: rows are split into nnz-balanced
+/// contiguous ranges, one per thread; each output row has a single writer
+/// so no synchronization is needed inside an iteration.
+pub fn csr_spmv_f32_parallel(
+    m: &CsrMatrix,
+    kappa: usize,
+    p: &[f32],
+    out: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(p.len(), m.num_vertices * kappa);
+    assert_eq!(out.len(), m.num_vertices * kappa);
+    if threads <= 1 || m.num_vertices < 1024 {
+        return csr_spmv_f32(m, kappa, p, out);
+    }
+    let ranges = m.balanced_ranges(threads);
+    // Split `out` into per-range slices (disjoint by construction).
+    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
+    let mut rest = out;
+    let mut offset = 0usize;
+    for r in &ranges {
+        let len = (r.end - r.start) * kappa;
+        debug_assert_eq!(r.start * kappa, offset);
+        let (head, tail) = rest.split_at_mut(len);
+        slices.push(head);
+        rest = tail;
+        offset += len;
+    }
+    std::thread::scope(|s| {
+        for (r, o) in ranges.iter().zip(slices) {
+            let r = r.clone();
+            s.spawn(move || {
+                for x in r.clone() {
+                    let (cols, vals) = m.row(x);
+                    let base = (x - r.start) * kappa;
+                    let orow = &mut o[base..base + kappa];
+                    orow.fill(0.0);
+                    for (c, &v) in cols.iter().zip(vals) {
+                        let v = v as f32;
+                        let src = &p[*c as usize * kappa..*c as usize * kappa + kappa];
+                        for k in 0..kappa {
+                            orow[k] += v * src[k];
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{CooMatrix, Graph};
+    use crate::spmv::reference;
+
+    fn setup(n: usize, seed: u64) -> (CsrMatrix, CooMatrix) {
+        let g = crate::graph::generators::erdos_renyi(n, 8.0 / n as f64, seed);
+        let coo = CooMatrix::from_graph(&g);
+        (CsrMatrix::from_coo(&coo), coo)
+    }
+
+    #[test]
+    fn matches_f64_oracle() {
+        let (csr, coo) = setup(300, 21);
+        let kappa = 3;
+        let p_f64: Vec<f64> = (0..300 * kappa).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let p: Vec<f32> = p_f64.iter().map(|&v| v as f32).collect();
+        let mut out = vec![0f32; 300 * kappa];
+        csr_spmv_f32(&csr, kappa, &p, &mut out);
+        let expect = reference::coo_spmv_f64(&coo, kappa, &p_f64);
+        for i in 0..out.len() {
+            assert!((out[i] as f64 - expect[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let (csr, _) = setup(3000, 22);
+        let kappa = 2;
+        let p: Vec<f32> = (0..3000 * kappa).map(|i| ((i * 37) % 101) as f32 / 101.0).collect();
+        let mut serial = vec![0f32; 3000 * kappa];
+        let mut par = vec![0f32; 3000 * kappa];
+        csr_spmv_f32(&csr, kappa, &p, &mut serial);
+        for threads in [2, 3, 8] {
+            csr_spmv_f32_parallel(&csr, kappa, &p, &mut par, threads);
+            assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn small_graph_falls_back_to_serial() {
+        let (csr, _) = setup(100, 23);
+        let p = vec![0.5f32; 100];
+        let mut a = vec![0f32; 100];
+        let mut b = vec![0f32; 100];
+        csr_spmv_f32(&csr, 1, &p, &mut a);
+        csr_spmv_f32_parallel(&csr, 1, &p, &mut b, 8);
+        assert_eq!(a, b);
+    }
+}

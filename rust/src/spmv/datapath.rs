@@ -1,0 +1,207 @@
+//! Arithmetic datapath abstraction.
+//!
+//! The FPGA design is synthesized once per numeric format; software-side,
+//! the SpMV and PPR engines are generic over a [`Datapath`] that supplies
+//! the format's multiply / saturating-add / quantize operations. Two
+//! implementations exist: [`FixedPath`] (the paper's reduced-precision
+//! unsigned fixed-point, bit-accurate) and [`FloatPath`] (the F32 baseline
+//! architecture).
+
+use crate::fixed::{ops, FixedFormat, Precision};
+
+/// An arithmetic datapath: word type + operations. All operations are
+/// value-level and `Copy`, so engines stay allocation-free in hot loops.
+pub trait Datapath: Clone + Send + Sync + 'static {
+    /// Machine word flowing through the pipeline.
+    type Word: Copy + PartialEq + std::fmt::Debug + Send + Sync + 'static;
+
+    /// The zero word.
+    fn zero(&self) -> Self::Word;
+    /// Quantize an f64 into a word (entry point for all constants).
+    fn quantize(&self, x: f64) -> Self::Word;
+    /// Word back to f64 (for metrics/reporting).
+    fn to_f64(&self, w: Self::Word) -> f64;
+    /// Datapath multiply (fixed: truncating; float: IEEE).
+    fn mul(&self, a: Self::Word, b: Self::Word) -> Self::Word;
+    /// Datapath add (fixed: saturating; float: IEEE).
+    fn add(&self, a: Self::Word, b: Self::Word) -> Self::Word;
+    /// |a - b| in f64 value space (for convergence norms).
+    fn abs_diff_f64(&self, a: Self::Word, b: Self::Word) -> f64;
+    /// The precision this datapath implements (for reports).
+    fn precision(&self) -> Precision;
+
+    /// Accumulator add with the saturation check *deferred* (see
+    /// [`Datapath::clamp`]). For non-negative fixed-point addends,
+    /// `clamp(Σ via add_deferred) == fold of saturating adds` — both are
+    /// `min(Σ, max)` — so kernels may accumulate cheaply and clamp once.
+    /// Defaults to the ordinary add (exact for floats).
+    #[inline(always)]
+    fn add_deferred(&self, a: Self::Word, b: Self::Word) -> Self::Word {
+        self.add(a, b)
+    }
+
+    /// Collapse a deferred accumulator back into range. Identity for
+    /// floats.
+    #[inline(always)]
+    fn clamp(&self, a: Self::Word) -> Self::Word {
+        a
+    }
+}
+
+/// Reduced-precision unsigned fixed-point datapath (paper §4.1).
+#[derive(Debug, Clone, Copy)]
+pub struct FixedPath {
+    /// The Qm.n format (paper: Q1.19 / Q1.21 / Q1.23 / Q1.25).
+    pub fmt: FixedFormat,
+}
+
+impl FixedPath {
+    /// Datapath for a paper bit-width (total bits, e.g. 26 → Q1.25).
+    pub fn paper(bits: u32) -> Self {
+        Self { fmt: FixedFormat::paper(bits) }
+    }
+}
+
+impl Datapath for FixedPath {
+    type Word = u64;
+
+    #[inline(always)]
+    fn zero(&self) -> u64 {
+        0
+    }
+
+    #[inline(always)]
+    fn quantize(&self, x: f64) -> u64 {
+        self.fmt.quantize(x)
+    }
+
+    #[inline(always)]
+    fn to_f64(&self, w: u64) -> f64 {
+        self.fmt.to_f64(w)
+    }
+
+    #[inline(always)]
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        ops::mul(&self.fmt, a, b)
+    }
+
+    #[inline(always)]
+    fn add(&self, a: u64, b: u64) -> u64 {
+        ops::add_sat(&self.fmt, a, b)
+    }
+
+    #[inline(always)]
+    fn abs_diff_f64(&self, a: u64, b: u64) -> f64 {
+        ops::abs_diff(a, b) as f64 * self.fmt.ulp()
+    }
+
+    fn precision(&self) -> Precision {
+        Precision::Fixed(self.fmt.total_bits())
+    }
+
+    #[inline(always)]
+    fn add_deferred(&self, a: u64, b: u64) -> u64 {
+        // in-range words are < 2^31 and real graphs have < 2^33 edges, so
+        // the deferred accumulator cannot overflow u64
+        a + b
+    }
+
+    #[inline(always)]
+    fn clamp(&self, a: u64) -> u64 {
+        a.min(self.fmt.max_raw())
+    }
+}
+
+/// IEEE-754 binary32 datapath: the paper's floating-point FPGA variant and
+/// the numeric format of the CPU baseline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FloatPath;
+
+impl Datapath for FloatPath {
+    type Word = f32;
+
+    #[inline(always)]
+    fn zero(&self) -> f32 {
+        0.0
+    }
+
+    #[inline(always)]
+    fn quantize(&self, x: f64) -> f32 {
+        x as f32
+    }
+
+    #[inline(always)]
+    fn to_f64(&self, w: f32) -> f64 {
+        w as f64
+    }
+
+    #[inline(always)]
+    fn mul(&self, a: f32, b: f32) -> f32 {
+        a * b
+    }
+
+    #[inline(always)]
+    fn add(&self, a: f32, b: f32) -> f32 {
+        a + b
+    }
+
+    #[inline(always)]
+    fn abs_diff_f64(&self, a: f32, b: f32) -> f64 {
+        (a - b).abs() as f64
+    }
+
+    fn precision(&self) -> Precision {
+        Precision::Float32
+    }
+}
+
+/// Dispatch a generic-over-[`Datapath`] expression on a runtime
+/// [`Precision`] — the software analogue of picking which synthesized
+/// bitstream variant to run. Usage:
+/// `dispatch_precision!(prec, |dp| engine.run(dp, ...))`.
+#[macro_export]
+macro_rules! dispatch_precision {
+    ($prec:expr, |$dp:ident| $body:expr) => {
+        match $prec {
+            $crate::fixed::Precision::Fixed(w) => {
+                let $dp = $crate::spmv::datapath::FixedPath::paper(w);
+                $body
+            }
+            $crate::fixed::Precision::Float32 => {
+                let $dp = $crate::spmv::datapath::FloatPath;
+                $body
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_path_matches_ops() {
+        let d = FixedPath::paper(26);
+        let a = d.quantize(0.5);
+        let b = d.quantize(0.25);
+        assert_eq!(d.to_f64(d.mul(a, b)), 0.125);
+        assert_eq!(d.to_f64(d.add(a, b)), 0.75);
+        assert_eq!(d.precision(), Precision::Fixed(26));
+    }
+
+    #[test]
+    fn float_path_is_ieee() {
+        let d = FloatPath;
+        assert_eq!(d.mul(0.5, 0.25), 0.125);
+        assert_eq!(d.precision(), Precision::Float32);
+        assert_eq!(d.abs_diff_f64(1.0, 0.25), 0.75);
+    }
+
+    #[test]
+    fn dispatch_macro_selects_datapath() {
+        let bits = crate::dispatch_precision!(Precision::Fixed(20), |d| d.precision().bits());
+        assert_eq!(bits, 20);
+        let bits = crate::dispatch_precision!(Precision::Float32, |d| d.precision().bits());
+        assert_eq!(bits, 32);
+    }
+}

@@ -1,0 +1,163 @@
+//! Performance-optimized SpMV kernel — **bit-identical** to the
+//! [`super::streaming`] architecture model, minus its structural
+//! bookkeeping.
+//!
+//! Why this is safe: the streaming pipeline's dp/agg/res buffers only
+//! reorder the same set of per-edge quantized products before summing
+//! them into each output word. Products are quantized pairwise (so order
+//! never affects them), all addends are non-negative, and the saturating
+//! add has an absorbing maximum — hence every ordering yields exactly
+//! `min(Σ products, max_raw)`. The property test
+//! `prop_fast_equals_streaming` (rust/tests/properties.rs) and the unit
+//! tests below pin this equivalence on random graphs.
+//!
+//! The engine ([`crate::ppr::BatchedPpr`]) runs this kernel on the hot
+//! path; the streaming model remains the architecture reference that the
+//! FPGA cycle model describes and tests validate against.
+
+use super::datapath::Datapath;
+use super::packets::PacketSchedule;
+
+/// Direct scatter SpMV over the aligned schedule: for each real edge,
+/// `out[x·κ+k] ⊕= val ⊗ p[y·κ+k]`. Padding slots (zero value) are
+/// skipped, and the saturation check is deferred to one final clamp pass
+/// (identical result — see `Datapath::add_deferred`).
+pub fn fast_spmv<D: Datapath>(
+    d: &D,
+    sched: &PacketSchedule,
+    vals: &[D::Word],
+    kappa: usize,
+    p: &[D::Word],
+    out: &mut [D::Word],
+) {
+    let n = sched.num_vertices;
+    assert_eq!(vals.len(), sched.num_slots());
+    assert_eq!(p.len(), n * kappa);
+    assert_eq!(out.len(), n * kappa);
+    let zero = d.zero();
+    out.fill(zero);
+    match kappa {
+        1 => scatter_lanes::<D, 1>(d, sched, vals, p, out),
+        2 => scatter_lanes::<D, 2>(d, sched, vals, p, out),
+        4 => scatter_lanes::<D, 4>(d, sched, vals, p, out),
+        8 => scatter_lanes::<D, 8>(d, sched, vals, p, out),
+        16 => scatter_lanes::<D, 16>(d, sched, vals, p, out),
+        _ => scatter_dyn(d, sched, vals, kappa, p, out),
+    }
+}
+
+/// κ-specialized inner loop: the compiler fully unrolls the lane loop
+/// (the software analogue of the κ replicated scatter cores).
+fn scatter_lanes<D: Datapath, const K: usize>(
+    d: &D,
+    sched: &PacketSchedule,
+    vals: &[D::Word],
+    p: &[D::Word],
+    out: &mut [D::Word],
+) {
+    let zero = d.zero();
+    for i in 0..sched.num_slots() {
+        let v = vals[i];
+        if v == zero {
+            continue; // padding (or a zero-quantized value): contributes nothing
+        }
+        let src = sched.y[i] as usize * K;
+        let dst = sched.x[i] as usize * K;
+        for k in 0..K {
+            out[dst + k] = d.add_deferred(out[dst + k], d.mul(v, p[src + k]));
+        }
+    }
+    for w in out.iter_mut() {
+        *w = d.clamp(*w);
+    }
+}
+
+fn scatter_dyn<D: Datapath>(
+    d: &D,
+    sched: &PacketSchedule,
+    vals: &[D::Word],
+    kappa: usize,
+    p: &[D::Word],
+    out: &mut [D::Word],
+) {
+    let zero = d.zero();
+    for i in 0..sched.num_slots() {
+        let v = vals[i];
+        if v == zero {
+            continue;
+        }
+        let src = sched.y[i] as usize * kappa;
+        let dst = sched.x[i] as usize * kappa;
+        for k in 0..kappa {
+            out[dst + k] = d.add_deferred(out[dst + k], d.mul(v, p[src + k]));
+        }
+    }
+    for w in out.iter_mut() {
+        *w = d.clamp(*w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::CooMatrix;
+    use crate::spmv::datapath::{FixedPath, FloatPath};
+    use crate::spmv::StreamingSpmv;
+
+    #[test]
+    fn fast_equals_streaming_fixed_bit_exact() {
+        let g = crate::graph::generators::holme_kim(400, 4, 0.3, 3);
+        let coo = CooMatrix::from_graph(&g);
+        for bits in [20u32, 26] {
+            for kappa in [1usize, 3, 8] {
+                let d = FixedPath::paper(bits);
+                let sched = PacketSchedule::build(&coo, 8);
+                let vals = sched.quantized_values(&d.fmt);
+                let p: Vec<u64> =
+                    (0..400 * kappa).map(|i| d.fmt.quantize(1.0 / (1.0 + i as f64))).collect();
+                let mut a = vec![0u64; 400 * kappa];
+                let mut b = vec![0u64; 400 * kappa];
+                StreamingSpmv::new(d, 8, kappa).run(&sched, &vals, &p, &mut a);
+                fast_spmv(&d, &sched, &vals, kappa, &p, &mut b);
+                assert_eq!(a, b, "bits={bits} kappa={kappa}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_float_close_to_streaming() {
+        let g = crate::graph::generators::erdos_renyi(300, 0.02, 4);
+        let coo = CooMatrix::from_graph(&g);
+        let sched = PacketSchedule::build(&coo, 8);
+        let vals = sched.values_f32();
+        let kappa = 4;
+        let p: Vec<f32> = (0..300 * kappa).map(|i| 1.0 / (1.0 + i as f32)).collect();
+        let mut a = vec![0f32; 300 * kappa];
+        let mut b = vec![0f32; 300 * kappa];
+        StreamingSpmv::new(FloatPath, 8, kappa).run(&sched, &vals, &p, &mut a);
+        fast_spmv(&FloatPath, &sched, &vals, kappa, &p, &mut b);
+        for i in 0..a.len() {
+            assert!((a[i] - b[i]).abs() < 1e-6, "i={i}");
+        }
+    }
+
+    #[test]
+    fn saturation_is_order_independent() {
+        // a hub vertex whose quantized in-mass exceeds the format max:
+        // both kernels must clamp to exactly max_raw
+        let n = 40;
+        let edges: Vec<(u32, u32)> = (1..n as u32).map(|s| (s, 0)).collect();
+        let g = crate::graph::Graph::new(n, edges);
+        let coo = CooMatrix::from_graph(&g);
+        let d = FixedPath::paper(20);
+        let sched = PacketSchedule::build(&coo, 8);
+        let vals = sched.quantized_values(&d.fmt);
+        let p = vec![d.fmt.max_raw(); n]; // every source at max value
+        let mut a = vec![0u64; n];
+        let mut b = vec![0u64; n];
+        StreamingSpmv::new(d, 8, 1).run(&sched, &vals, &p, &mut a);
+        fast_spmv(&d, &sched, &vals, 1, &p, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a[0], d.fmt.max_raw());
+    }
+}

@@ -1,0 +1,34 @@
+//! Streaming COO SpMV — the paper's architectural contribution (§4.1.1,
+//! Alg. 2, Fig. 2) — plus the reference kernels it is validated against.
+//!
+//! - [`datapath`] abstracts the arithmetic (reduced-precision fixed-point
+//!   vs. IEEE f32), mirroring how the FPGA design is re-synthesized per
+//!   bit-width.
+//! - [`packets`] builds the aligned edge-packet schedule the hardware
+//!   consumes, including the zero-padding needed to uphold the design's
+//!   "destinations within `[x[0], x[0]+B)`" invariant (an assumption the
+//!   paper states but does not enforce explicitly; the padding overhead is
+//!   measured and fed to the FPGA cycle model).
+//! - [`streaming`] is the bit-faithful 4-stage pipeline model: packet
+//!   fetch → edge-wise scatter (dp_buffer) → B aggregator cores → FSM
+//!   ping-pong write-back.
+//! - [`fast`] is the performance-optimized kernel the engine actually
+//!   runs: bit-identical to the streaming model (saturating adds of
+//!   non-negative pairwise-quantized products commute), minus its
+//!   structural bookkeeping.
+//! - [`reference`] is a scalar COO SpMV oracle (same datapath, no
+//!   pipeline structure) used by unit and property tests.
+//! - [`csr_kernel`] is the row-parallel CSR SpMV used by the CPU baseline
+//!   and the COO-vs-CSR ablation.
+
+pub mod csr_kernel;
+pub mod datapath;
+pub mod fast;
+pub mod packets;
+pub mod reference;
+pub mod streaming;
+
+pub use datapath::{Datapath, FixedPath, FloatPath};
+pub use fast::fast_spmv;
+pub use packets::PacketSchedule;
+pub use streaming::StreamingSpmv;

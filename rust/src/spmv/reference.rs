@@ -1,0 +1,79 @@
+//! Scalar COO SpMV oracles: same arithmetic as the streaming engine, no
+//! pipeline structure. Unit/property tests assert the streaming model is
+//! **bit-identical** to these for fixed-point datapaths (saturating adds
+//! commute in the PPR value range) and numerically close for floats.
+
+use crate::fixed::{ops, FixedFormat};
+use crate::graph::CooMatrix;
+
+/// Fixed-point scalar oracle: `out[x·κ+k] ⊕= val ⊗ p[y·κ+k]` per entry,
+/// quantizing every product (exactly what the hardware dp_buffer does).
+pub fn coo_spmv_fixed(coo: &CooMatrix, fmt: &FixedFormat, kappa: usize, p: &[u64]) -> Vec<u64> {
+    assert_eq!(p.len(), coo.num_vertices * kappa);
+    let mut out = vec![0u64; coo.num_vertices * kappa];
+    for i in 0..coo.num_edges() {
+        let v = fmt.quantize(coo.val[i]);
+        let src = coo.y[i] as usize * kappa;
+        let dst = coo.x[i] as usize * kappa;
+        for k in 0..kappa {
+            out[dst + k] = ops::add_sat(fmt, out[dst + k], ops::mul(fmt, v, p[src + k]));
+        }
+    }
+    out
+}
+
+/// f64 scalar oracle (highest-precision ground truth for float tests).
+pub fn coo_spmv_f64(coo: &CooMatrix, kappa: usize, p: &[f64]) -> Vec<f64> {
+    assert_eq!(p.len(), coo.num_vertices * kappa);
+    let mut out = vec![0f64; coo.num_vertices * kappa];
+    for i in 0..coo.num_edges() {
+        let v = coo.val[i];
+        let src = coo.y[i] as usize * kappa;
+        let dst = coo.x[i] as usize * kappa;
+        for k in 0..kappa {
+            out[dst + k] += v * p[src + k];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn fixed_oracle_simple() {
+        // 0 -> 1 (outdeg 1): X entry (x=1, y=0, val=1)
+        let g = Graph::new(2, vec![(0, 1)]);
+        let coo = CooMatrix::from_graph(&g);
+        let fmt = FixedFormat::paper(26);
+        let p = vec![fmt.quantize(0.75), 0];
+        let out = coo_spmv_fixed(&coo, &fmt, 1, &p);
+        assert_eq!(fmt.to_f64(out[1]), 0.75);
+        assert_eq!(out[0], 0);
+    }
+
+    #[test]
+    fn f64_oracle_preserves_mass_on_stochastic_matrix() {
+        // no dangling: column sums are 1 so total mass is preserved
+        let g = Graph::new(3, vec![(0, 1), (1, 2), (2, 0), (0, 2)]);
+        let coo = CooMatrix::from_graph(&g);
+        let p = vec![0.2, 0.3, 0.5];
+        let out = coo_spmv_f64(&coo, 1, &p);
+        assert!((out.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kappa_lanes_independent() {
+        let g = Graph::new(3, vec![(0, 1), (1, 2)]);
+        let coo = CooMatrix::from_graph(&g);
+        let p = vec![0.1, 0.9, 0.2, 0.8, 0.3, 0.7]; // 3 vertices × 2 lanes
+        let out = coo_spmv_f64(&coo, 2, &p);
+        // lane 0: out[1*2+0] = p[0*2+0] = 0.1 ; lane 1: out[1*2+1] = 0.9
+        assert_eq!(out[2], 0.1);
+        assert_eq!(out[3], 0.9);
+        assert_eq!(out[4], 0.2);
+        assert_eq!(out[5], 0.8);
+    }
+}

@@ -1,0 +1,96 @@
+//! Minimal property-testing harness (the vendored crate set has no
+//! `proptest`; see DESIGN.md §1). Provides seeded random-case generation
+//! with failure reporting of the offending case number and seed, plus
+//! graph/vector generators shared by property tests across modules.
+
+use crate::graph::Graph;
+use crate::util::rng::Xoshiro256;
+
+/// Run `cases` random test cases. The property receives a per-case RNG;
+/// panics are augmented with the case index and derived seed so failures
+/// reproduce with `check_with_seed`.
+pub fn check<F: Fn(&mut Xoshiro256)>(cases: usize, seed: u64, property: F) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Xoshiro256::seeded(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut rng)));
+        if let Err(payload) = result {
+            eprintln!("property failed at case {case}/{cases}, reproduce with seed {case_seed:#x}");
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Re-run a single failing case by its derived seed.
+pub fn check_with_seed<F: Fn(&mut Xoshiro256)>(case_seed: u64, property: F) {
+    let mut rng = Xoshiro256::seeded(case_seed);
+    property(&mut rng);
+}
+
+/// Random small graph: |V| ∈ [2, max_v], edge probability tuned to give a
+/// usable edge count, guaranteed at least one edge.
+pub fn arb_graph(rng: &mut Xoshiro256, max_v: usize) -> Graph {
+    let n = 2 + rng.next_index(max_v.saturating_sub(2).max(1));
+    let avg_deg = 1.0 + rng.next_f64() * 8.0;
+    let p = (avg_deg / n as f64).min(0.9);
+    let mut g = crate::graph::generators::erdos_renyi(n, p.max(1e-4), rng.next_u64());
+    if g.num_edges() == 0 {
+        let a = rng.next_index(n) as u32;
+        let b = ((a as usize + 1 + rng.next_index(n - 1)) % n) as u32;
+        g.edges.push((a, b));
+    }
+    g
+}
+
+/// Random probability-like f64 vector of length `n` (entries in [0, 1)).
+pub fn arb_unit_vec(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.next_f64()).collect()
+}
+
+/// Random stochastic vector (sums to 1).
+pub fn arb_stochastic_vec(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+    let mut v = arb_unit_vec(rng, n);
+    let s: f64 = v.iter().sum();
+    if s > 0.0 {
+        for x in v.iter_mut() {
+            *x /= s;
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let counter = std::cell::Cell::new(0usize);
+        check(17, 1, |_| counter.set(counter.get() + 1));
+        assert_eq!(counter.get(), 17);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failures() {
+        check(10, 2, |rng| assert!(rng.next_f64() < 0.5));
+    }
+
+    #[test]
+    fn arb_graph_valid() {
+        check(25, 3, |rng| {
+            let g = arb_graph(rng, 100);
+            assert!(g.num_edges() >= 1);
+            assert!(g.edges.iter().all(|&(s, d)| (s as usize) < g.num_vertices
+                && (d as usize) < g.num_vertices));
+        });
+    }
+
+    #[test]
+    fn stochastic_vec_sums_to_one() {
+        check(10, 4, |rng| {
+            let v = arb_stochastic_vec(rng, 50);
+            assert!((v.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        });
+    }
+}

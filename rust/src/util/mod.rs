@@ -1,0 +1,14 @@
+//! Small shared infrastructure: deterministic PRNGs, timing helpers, and
+//! text-report formatting used by the benchmark harness.
+//!
+//! The vendored crate set has no `rand`, so [`rng`] implements the
+//! splitmix64 / xoshiro256** generators from scratch (public-domain
+//! reference algorithms by Blackman & Vigna). All experiments seed
+//! explicitly, making every table and figure bit-reproducible.
+
+pub mod report;
+pub mod rng;
+pub mod timing;
+
+pub use rng::Xoshiro256;
+pub use timing::Stopwatch;

@@ -1,0 +1,138 @@
+//! Wall-clock measurement helpers used by the CPU baseline and the
+//! benchmark harness (criterion is unavailable offline, so benches use
+//! these directly with warmup + repeated samples).
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch over `Instant`.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as `f64`.
+    pub fn seconds(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds as `f64`.
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+
+    /// Restart and return the previous elapsed duration.
+    pub fn lap(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Summary statistics over repeated timing samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Samples {
+    /// Number of samples taken.
+    pub n: usize,
+    /// Minimum sample (seconds).
+    pub min: f64,
+    /// Median sample (seconds).
+    pub median: f64,
+    /// Mean sample (seconds).
+    pub mean: f64,
+    /// Maximum sample (seconds).
+    pub max: f64,
+    /// Sample standard deviation (seconds).
+    pub stddev: f64,
+}
+
+impl Samples {
+    /// Compute summary statistics from raw samples (seconds).
+    pub fn from_raw(mut xs: Vec<f64>) -> Self {
+        assert!(!xs.is_empty(), "no samples");
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let median = if n % 2 == 1 {
+            xs[n / 2]
+        } else {
+            0.5 * (xs[n / 2 - 1] + xs[n / 2])
+        };
+        Self { n, min: xs[0], median, mean, max: xs[n - 1], stddev: var.sqrt() }
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs, then `samples` measured
+/// runs; returns summary stats in seconds. The closure's return value is
+/// passed through `std::hint::black_box` to stop the optimizer from
+/// removing the work.
+pub fn bench<T, F: FnMut() -> T>(warmup: usize, samples: usize, mut f: F) -> Samples {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let raw: Vec<f64> = (0..samples)
+        .map(|_| {
+            let sw = Stopwatch::start();
+            std::hint::black_box(f());
+            sw.seconds()
+        })
+        .collect();
+    Samples::from_raw(raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_stats() {
+        let s = Samples::from_raw(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.stddev - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn samples_even_median() {
+        let s = Samples::from_raw(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut calls = 0usize;
+        let s = bench(2, 5, || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.min >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.seconds();
+        let b = sw.seconds();
+        assert!(b >= a);
+    }
+}

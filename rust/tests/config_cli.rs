@@ -1,0 +1,59 @@
+//! Integration: config file loading through the CLI surface and the
+//! example config shipped in `configs/`.
+
+use ppr_spmv::cli::Args;
+use ppr_spmv::config::RunConfig;
+use ppr_spmv::fixed::Precision;
+use std::path::Path;
+
+#[test]
+fn shipped_config_parses() {
+    let cfg = RunConfig::load(Path::new("configs/serve_default.toml")).unwrap();
+    assert_eq!(cfg.precision, Precision::Fixed(26));
+    assert_eq!(cfg.kappa, 8);
+    assert_eq!(cfg.alpha, 0.85);
+    assert_eq!(cfg.batch_timeout_ms, 5);
+    assert_eq!(cfg.artifacts_dir, "artifacts");
+}
+
+#[test]
+fn cli_overrides_config_file() {
+    let args = Args::parse(
+        ["serve", "--config", "configs/serve_default.toml", "--precision", "20b", "--kappa", "4"]
+            .into_iter()
+            .map(String::from),
+    );
+    let cfg = ppr_spmv::cli::run_config(&args).unwrap();
+    assert_eq!(cfg.precision, Precision::Fixed(20));
+    assert_eq!(cfg.kappa, 4);
+    assert_eq!(cfg.iterations, 10); // from file/defaults
+}
+
+#[test]
+fn experiment_dispatch_table2_smoke() {
+    // table2 is pure modelling (no dataset build): safe as a test
+    let args = Args::parse(
+        ["experiment", "table2", "--no-csv"].into_iter().map(String::from),
+    );
+    ppr_spmv::cli::dispatch(args).unwrap();
+}
+
+#[test]
+fn generate_and_query_roundtrip() {
+    let dir = std::env::temp_dir().join("ppr_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("g.txt");
+    let args = Args::parse(
+        ["generate", "--graph", "WS-100k", "--scale", "200", "--out", out.to_str().unwrap()]
+            .into_iter()
+            .map(String::from),
+    );
+    ppr_spmv::cli::dispatch(args).unwrap();
+    let args = Args::parse(
+        ["query", "--graph-file", out.to_str().unwrap(), "--vertex", "3", "--top", "5"]
+            .into_iter()
+            .map(String::from),
+    );
+    ppr_spmv::cli::dispatch(args).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,140 @@
+//! Cross-engine bit-exactness: the JAX/Pallas fixed-point PPR (L1+L2) and
+//! the native Rust engine (L3) must produce **identical raw words** on the
+//! shared fixtures written by `python/tests/test_cross_engine.py` (run via
+//! `make artifacts` / `make test`).
+//!
+//! Skips with a notice when the fixtures are absent.
+
+use ppr_spmv::graph::{Graph, VertexId};
+use ppr_spmv::ppr::{PprConfig, PreparedGraph};
+use ppr_spmv::spmv::datapath::FixedPath;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+struct Fixture {
+    graph: Graph,
+    kappa: usize,
+    iterations: usize,
+    alpha: f64,
+    personalization: Vec<VertexId>,
+    bits: Vec<u32>,
+}
+
+fn fixture_dir() -> PathBuf {
+    Path::new("artifacts").join("fixtures")
+}
+
+fn load_fixture() -> Option<Fixture> {
+    let dir = fixture_dir();
+    let params = dir.join("params.txt");
+    if !params.exists() {
+        eprintln!("SKIP: {} missing — run `pytest python/tests` first", params.display());
+        return None;
+    }
+    let text = std::fs::read_to_string(&params).unwrap();
+    let mut vertices = 0usize;
+    let mut kappa = 0usize;
+    let mut iterations = 0usize;
+    let mut alpha = 0.0f64;
+    let mut personalization = Vec::new();
+    let mut bits = Vec::new();
+    for line in text.lines() {
+        let mut f = line.split_whitespace();
+        match f.next() {
+            Some("vertices") => vertices = f.next().unwrap().parse().unwrap(),
+            Some("kappa") => kappa = f.next().unwrap().parse().unwrap(),
+            Some("iterations") => iterations = f.next().unwrap().parse().unwrap(),
+            Some("alpha") => alpha = f.next().unwrap().parse().unwrap(),
+            Some("personalization") => {
+                personalization = f.map(|x| x.parse().unwrap()).collect();
+            }
+            Some("bits") => bits = f.map(|x| x.parse().unwrap()).collect(),
+            _ => {}
+        }
+    }
+    // parse the edge list verbatim (ids already dense 0..V)
+    let graph_text = std::fs::read_to_string(dir.join("graph.txt")).unwrap();
+    let mut edges = Vec::new();
+    for line in graph_text.lines() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut f = t.split_whitespace();
+        let s: VertexId = f.next().unwrap().parse().unwrap();
+        let d: VertexId = f.next().unwrap().parse().unwrap();
+        edges.push((s, d));
+    }
+    Some(Fixture {
+        graph: Graph::new(vertices, edges),
+        kappa,
+        iterations,
+        alpha,
+        personalization,
+        bits,
+    })
+}
+
+fn load_expected(bits: u32, vertices: usize, kappa: usize) -> Vec<u64> {
+    let path = fixture_dir().join(format!("expected_{bits}b.txt"));
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut out = Vec::with_capacity(vertices * kappa);
+    for line in text.lines() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        for w in t.split_whitespace() {
+            out.push(w.parse().unwrap());
+        }
+    }
+    assert_eq!(out.len(), vertices * kappa, "{}", path.display());
+    out
+}
+
+#[test]
+fn native_engine_matches_jax_pallas_bit_exact() {
+    let Some(fx) = load_fixture() else { return };
+    let pg = Arc::new(PreparedGraph::new(&fx.graph, 8));
+    let cfg = PprConfig {
+        alpha: fx.alpha,
+        max_iterations: fx.iterations,
+        convergence_threshold: None,
+    };
+    for &bits in &fx.bits {
+        let d = FixedPath::paper(bits);
+        let mut engine = ppr_spmv::ppr::BatchedPpr::new(d, pg.clone(), fx.kappa, fx.alpha);
+        let out = engine.run(&fx.personalization, &cfg);
+        let expected = load_expected(bits, fx.graph.num_vertices, fx.kappa);
+        let mut mismatches = 0usize;
+        for i in 0..expected.len() {
+            if out.scores[i] != expected[i] {
+                if mismatches < 5 {
+                    eprintln!(
+                        "bits={bits} idx={i} (v={} lane={}): rust {} vs jax {}",
+                        i / fx.kappa,
+                        i % fx.kappa,
+                        out.scores[i],
+                        expected[i]
+                    );
+                }
+                mismatches += 1;
+            }
+        }
+        assert_eq!(mismatches, 0, "bits={bits}: {mismatches} word mismatches");
+    }
+}
+
+#[test]
+fn fixture_personalization_ranks_first() {
+    let Some(fx) = load_fixture() else { return };
+    for &bits in &fx.bits {
+        let expected = load_expected(bits, fx.graph.num_vertices, fx.kappa);
+        for (lane, &pv) in fx.personalization.iter().enumerate() {
+            let best = (0..fx.graph.num_vertices)
+                .max_by_key(|&v| expected[v * fx.kappa + lane])
+                .unwrap();
+            assert_eq!(best, pv as usize, "bits={bits} lane={lane}");
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Integration: the full three-layer path. Loads the HLO-text artifacts
+//! produced by `make artifacts` (python/compile/aot.py), compiles them on
+//! the PJRT CPU client, runs batched PPR through the runtime engine and
+//! checks the numerics against the native Rust engine — **bit-exact** for
+//! fixed point, tolerance for float.
+//!
+//! Skips (with a notice) when `artifacts/manifest.txt` is missing, so
+//! `cargo test` stays green before `make artifacts`.
+
+use ppr_spmv::config::RunConfig;
+use ppr_spmv::coordinator::engine::{LocalPprEngine, PjrtEngineAdapter};
+use ppr_spmv::fixed::Precision;
+use ppr_spmv::graph::Graph;
+use ppr_spmv::ppr::{PprConfig, PreparedGraph};
+use ppr_spmv::runtime::{Manifest, PjrtPprEngine, Runtime};
+use std::path::Path;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.txt missing — run `make artifacts` first");
+        None
+    }
+}
+
+/// A deterministic graph with |V| exactly equal to the artifact's static
+/// vertex count — required for bit-exactness because the α/|V| scaling
+/// constant is baked into the lowered step.
+fn test_graph(num_vertices: usize) -> Graph {
+    let mut g = ppr_spmv::graph::generators::holme_kim(num_vertices, 3, 0.3, 99);
+    // make the last two vertices dangling to exercise the scaling path
+    g.edges.retain(|&(s, _)| (s as usize) < num_vertices - 2);
+    g
+}
+
+#[test]
+fn pjrt_fixed_matches_native_bit_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(dir).unwrap();
+    let spec = manifest.find("26b").expect("26b artifact");
+    let graph = test_graph(spec.vertices);
+    let pg = PreparedGraph::new(&graph, 8);
+
+    let rt = Runtime::cpu().unwrap();
+    let engine = PjrtPprEngine::load_spec(&rt, dir, spec, &pg).unwrap();
+    let pers: Vec<u32> = (1..=spec.kappa as u32).collect();
+    let cfg = PprConfig { alpha: manifest.alpha, max_iterations: 5, convergence_threshold: None };
+    let (pjrt_scores, iters) = engine.run(&pers, &cfg).unwrap();
+    assert_eq!(iters, 5);
+
+    // native engine, same parameters
+    let d = ppr_spmv::spmv::datapath::FixedPath::paper(26);
+    let mut native = ppr_spmv::ppr::BatchedPpr::new(
+        d,
+        Arc::new(pg),
+        spec.kappa,
+        manifest.alpha,
+    );
+    let out = native.run(&pers, &cfg);
+
+    let k = spec.kappa;
+    let ulp = 0.5f64.powi(spec.frac_bits as i32);
+    for v in 0..graph.num_vertices {
+        for lane in 0..k {
+            let native_val = d.fmt.to_f64(out.scores[v * k + lane]);
+            let pjrt_val = pjrt_scores[v * k + lane];
+            assert!(
+                (native_val - pjrt_val).abs() < ulp * 0.5,
+                "v={v} lane={lane}: native {native_val} vs pjrt {pjrt_val}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_float_close_to_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(dir).unwrap();
+    let Some(spec) = manifest.find("f32") else {
+        eprintln!("SKIP: no f32 artifact");
+        return;
+    };
+    let graph = test_graph(spec.vertices);
+    let pg = PreparedGraph::new(&graph, 8);
+    let rt = Runtime::cpu().unwrap();
+    let engine = PjrtPprEngine::load_spec(&rt, dir, spec, &pg).unwrap();
+    let pers: Vec<u32> = (1..=spec.kappa as u32).collect();
+    let cfg = PprConfig { alpha: manifest.alpha, max_iterations: 8, convergence_threshold: None };
+    let (scores, _) = engine.run(&pers, &cfg).unwrap();
+
+    let coo = ppr_spmv::graph::CooMatrix::from_graph(&graph);
+    for (lane, &pv) in pers.iter().enumerate() {
+        let truth = ppr_spmv::ppr::reference::ppr_f64(&coo, pv, manifest.alpha, 8, None);
+        for v in 0..graph.num_vertices {
+            let got = scores[v * spec.kappa + lane];
+            assert!(
+                (got - truth.scores[v]).abs() < 1e-4,
+                "lane {lane} v {v}: {got} vs {}",
+                truth.scores[v]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_engine_through_coordinator_adapter() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(dir).unwrap();
+    let spec = manifest.find("26b").unwrap().clone();
+    let graph = test_graph(spec.vertices);
+    let nv = graph.num_vertices;
+    let pg = PreparedGraph::new(&graph, 8);
+    let rt = Runtime::cpu().unwrap();
+    let engine = PjrtPprEngine::load_spec(&rt, dir, &spec, &pg).unwrap();
+    let cfg = RunConfig {
+        precision: Precision::Fixed(26),
+        kappa: spec.kappa,
+        iterations: 4,
+        alpha: manifest.alpha,
+        ..Default::default()
+    };
+    let mut adapter = PjrtEngineAdapter::new(engine, &cfg, nv);
+    let pers: Vec<u32> = (0..spec.kappa as u32).collect();
+    let (lanes, iters) = adapter.run_batch(&pers).unwrap();
+    assert_eq!(iters, 4);
+    assert_eq!(lanes.len(), spec.kappa);
+    assert_eq!(lanes[0].len(), nv);
+    // each lane ranks its own personalization vertex on top
+    for (k, &pv) in pers.iter().enumerate() {
+        let best = ppr_spmv::metrics::top_n_indices_f64(&lanes[k], 1)[0];
+        assert_eq!(best, pv as usize, "lane {k}");
+    }
+}
+
+#[test]
+fn early_exit_happens_via_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(dir).unwrap();
+    let spec = manifest.find("20b").or_else(|| manifest.find("26b")).unwrap();
+    let graph = test_graph(spec.vertices);
+    let pg = PreparedGraph::new(&graph, 8);
+    let rt = Runtime::cpu().unwrap();
+    let engine = PjrtPprEngine::load_spec(&rt, dir, spec, &pg).unwrap();
+    let pers: Vec<u32> = (1..=spec.kappa as u32).collect();
+    let cfg = PprConfig {
+        alpha: manifest.alpha,
+        max_iterations: 60,
+        convergence_threshold: Some(1e-5),
+    };
+    let (_, iters) = engine.run(&pers, &cfg).unwrap();
+    assert!(iters < 60, "should early-exit, ran {iters}");
+}

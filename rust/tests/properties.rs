@@ -1,0 +1,185 @@
+//! Cross-module property tests (mini-proptest harness from
+//! `ppr_spmv::testutil`): invariants that must hold for *any* graph —
+//! streaming SpMV ≡ scalar oracle bit-exactly, packet-schedule window
+//! invariants, PPR mass bounds, metric bounds, transition stochasticity.
+
+use ppr_spmv::fixed::FixedFormat;
+use ppr_spmv::graph::CooMatrix;
+use ppr_spmv::ppr::{PprConfig, PreparedGraph};
+use ppr_spmv::spmv::datapath::FixedPath;
+use ppr_spmv::spmv::{reference, PacketSchedule, StreamingSpmv};
+use ppr_spmv::testutil;
+use std::sync::Arc;
+
+#[test]
+fn prop_streaming_spmv_bit_exact_vs_oracle() {
+    testutil::check(40, 0xA1, |rng| {
+        let g = testutil::arb_graph(rng, 200);
+        let coo = CooMatrix::from_graph(&g);
+        let bits = 20 + 2 * rng.next_index(4) as u32;
+        let b = [2usize, 4, 8, 16][rng.next_index(4)];
+        let kappa = 1 + rng.next_index(8);
+        let d = FixedPath::paper(bits);
+        let sched = PacketSchedule::build(&coo, b);
+        let vals = sched.quantized_values(&d.fmt);
+        let p_f = testutil::arb_unit_vec(rng, g.num_vertices * kappa);
+        let p: Vec<u64> = p_f.iter().map(|&x| d.fmt.quantize(x)).collect();
+        let mut out = vec![0u64; g.num_vertices * kappa];
+        StreamingSpmv::new(d, b, kappa).run(&sched, &vals, &p, &mut out);
+        let expect = reference::coo_spmv_fixed(&coo, &d.fmt, kappa, &p);
+        assert_eq!(out, expect);
+    });
+}
+
+#[test]
+fn prop_fast_equals_streaming() {
+    // the perf-optimized kernel the engine runs must be bit-identical to
+    // the streaming architecture model on any graph / width / κ / B
+    testutil::check(40, 0xAF, |rng| {
+        let g = testutil::arb_graph(rng, 250);
+        let coo = CooMatrix::from_graph(&g);
+        let bits = 20 + 2 * rng.next_index(4) as u32;
+        let b = [2usize, 4, 8, 16][rng.next_index(4)];
+        let kappa = 1 + rng.next_index(9);
+        let d = FixedPath::paper(bits);
+        let sched = PacketSchedule::build(&coo, b);
+        let vals = sched.quantized_values(&d.fmt);
+        let p_f = testutil::arb_unit_vec(rng, g.num_vertices * kappa);
+        let p: Vec<u64> = p_f.iter().map(|&x| d.fmt.quantize(x)).collect();
+        let mut a = vec![0u64; g.num_vertices * kappa];
+        let mut b_out = vec![0u64; g.num_vertices * kappa];
+        StreamingSpmv::new(d, b, kappa).run(&sched, &vals, &p, &mut a);
+        ppr_spmv::spmv::fast_spmv(&d, &sched, &vals, kappa, &p, &mut b_out);
+        assert_eq!(a, b_out);
+    });
+}
+
+#[test]
+fn prop_packet_schedule_invariants() {
+    testutil::check(60, 0xA2, |rng| {
+        let g = testutil::arb_graph(rng, 300);
+        let coo = CooMatrix::from_graph(&g);
+        let b = [2usize, 4, 8, 16, 32][rng.next_index(5)];
+        let sched = PacketSchedule::build(&coo, b);
+        sched.validate().expect("schedule invariants");
+        assert_eq!(sched.num_edges, coo.num_edges());
+        // value mass is preserved exactly (padding carries zeros)
+        let sum_s: f64 = sched.val.iter().sum();
+        let sum_c: f64 = coo.val.iter().sum();
+        assert!((sum_s - sum_c).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_transition_matrix_is_column_stochastic() {
+    testutil::check(40, 0xA3, |rng| {
+        let g = testutil::arb_graph(rng, 250);
+        let coo = CooMatrix::from_graph(&g);
+        coo.validate().unwrap();
+        let dangling = g.dangling();
+        for (v, s) in coo.column_sums().iter().enumerate() {
+            if dangling[v] {
+                assert_eq!(*s, 0.0, "dangling column {v} must be empty");
+            } else {
+                assert!((s - 1.0).abs() < 1e-9, "column {v} sums to {s}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fixed_ppr_mass_bounded_by_one() {
+    // truncation only loses mass: total score per lane ∈ (0, 1]
+    testutil::check(15, 0xA4, |rng| {
+        let g = testutil::arb_graph(rng, 150);
+        let n = g.num_vertices;
+        let pg = Arc::new(PreparedGraph::new(&g, 8));
+        let bits = 20 + 2 * rng.next_index(4) as u32;
+        let d = FixedPath::paper(bits);
+        let mut engine = ppr_spmv::ppr::BatchedPpr::new(d, pg, 2, 0.85);
+        let dangling = g.dangling();
+        let pv: Vec<u32> = (0..n as u32).filter(|&v| !dangling[v as usize]).take(2).collect();
+        if pv.len() < 2 {
+            return;
+        }
+        let out = engine.run(&pv, &PprConfig { max_iterations: 12, ..Default::default() });
+        for lane in 0..2 {
+            let total: f64 =
+                out.lane(lane, 2).iter().map(|&w| d.fmt.to_f64(w)).sum();
+            assert!(total <= 1.0 + 1e-9, "lane {lane} mass {total}");
+            assert!(total > 0.1, "lane {lane} collapsed to {total}");
+        }
+    });
+}
+
+#[test]
+fn prop_quantization_error_bounded() {
+    testutil::check(200, 0xA5, |rng| {
+        let bits = 10 + rng.next_index(20) as u32;
+        let fmt = FixedFormat::paper(bits);
+        let x = rng.next_f64() * 1.5;
+        let q = fmt.to_f64(fmt.quantize(x));
+        if x <= fmt.max_value() {
+            assert!(q <= x && x - q < fmt.ulp(), "bits={bits} x={x} q={q}");
+        } else {
+            assert_eq!(q, fmt.max_value());
+        }
+    });
+}
+
+#[test]
+fn prop_metrics_bounds() {
+    testutil::check(50, 0xA6, |rng| {
+        let n = 30 + rng.next_index(100);
+        let truth = testutil::arb_unit_vec(rng, n);
+        let pred = testutil::arb_unit_vec(rng, n);
+        let rep = ppr_spmv::metrics::accuracy_report(&pred, &truth, 10);
+        assert!(rep.num_errors <= 10);
+        assert!(rep.edit_distance <= 10);
+        assert!((0.0..=1.0 + 1e-12).contains(&rep.ndcg));
+        assert!((0.0..=1.0).contains(&rep.precision));
+        assert!((-1.0..=1.0).contains(&rep.kendall_tau));
+        // self-comparison is perfect
+        let perfect = ppr_spmv::metrics::accuracy_report(&truth, &truth, 10);
+        assert_eq!(perfect.num_errors, 0);
+        assert_eq!(perfect.edit_distance, 0);
+    });
+}
+
+#[test]
+fn prop_csr_parallel_equals_serial() {
+    testutil::check(20, 0xA7, |rng| {
+        let g = testutil::arb_graph(rng, 400);
+        let csr = ppr_spmv::graph::CsrMatrix::from_graph(&g);
+        let kappa = 1 + rng.next_index(4);
+        let p: Vec<f32> =
+            testutil::arb_unit_vec(rng, g.num_vertices * kappa).iter().map(|&x| x as f32).collect();
+        let mut serial = vec![0f32; p.len()];
+        let mut par = vec![0f32; p.len()];
+        ppr_spmv::spmv::csr_kernel::csr_spmv_f32(&csr, kappa, &p, &mut serial);
+        ppr_spmv::spmv::csr_kernel::csr_spmv_f32_parallel(&csr, kappa, &p, &mut par, 4);
+        assert_eq!(serial, par);
+    });
+}
+
+#[test]
+fn prop_fixed_float_rank_agreement_at_26_bits() {
+    // at the paper's highest precision the top-1 vertex agrees with the
+    // f64 reference on (almost) any graph after enough iterations
+    testutil::check(10, 0xA8, |rng| {
+        let g = testutil::arb_graph(rng, 120);
+        let coo = CooMatrix::from_graph(&g);
+        let dangling = g.dangling();
+        let Some(pv) = (0..g.num_vertices as u32).find(|&v| !dangling[v as usize]) else {
+            return;
+        };
+        let pg = Arc::new(PreparedGraph::new(&g, 8));
+        let d = FixedPath::paper(26);
+        let mut engine = ppr_spmv::ppr::BatchedPpr::new(d, pg, 1, 0.85);
+        let out = engine.run(&[pv], &PprConfig { max_iterations: 40, ..Default::default() });
+        let fixed_top = ppr_spmv::metrics::top_n_indices_u64(&out.scores, 1)[0];
+        let truth = ppr_spmv::ppr::reference::ppr_f64(&coo, pv, 0.85, 40, None);
+        let truth_top = ppr_spmv::metrics::top_n_indices_f64(&truth.scores, 1)[0];
+        assert_eq!(fixed_top, truth_top);
+    });
+}

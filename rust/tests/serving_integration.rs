@@ -1,0 +1,95 @@
+//! Integration: the serving coordinator end-to-end over the native engine
+//! — batching behaviour under load, correctness of returned rankings
+//! against the f64 reference, stats accounting, multi-worker fan-out.
+
+use ppr_spmv::config::RunConfig;
+use ppr_spmv::coordinator::{NativeEngine, PprEngine, Server, ServerConfig};
+use ppr_spmv::fixed::Precision;
+use ppr_spmv::graph::CooMatrix;
+use ppr_spmv::ppr::{reference, PreparedGraph};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn build(workers: usize, kappa: usize, precision: Precision) -> (Server, CooMatrix) {
+    let g = ppr_spmv::graph::generators::holme_kim(512, 4, 0.3, 2026);
+    let coo = CooMatrix::from_graph(&g);
+    let pg = Arc::new(PreparedGraph::new(&g, 8));
+    let cfg = RunConfig { precision, kappa, iterations: 25, ..Default::default() };
+    let engines: Vec<Box<dyn PprEngine>> = (0..workers)
+        .map(|_| Box::new(NativeEngine::new(pg.clone(), cfg.clone())) as Box<dyn PprEngine>)
+        .collect();
+    let server = Server::start(
+        engines,
+        ServerConfig { batch_timeout: Duration::from_millis(3), default_top_n: 10 },
+    );
+    (server, coo)
+}
+
+#[test]
+fn served_rankings_match_reference_topk() {
+    let (server, coo) = build(1, 4, Precision::Fixed(26));
+    for pv in [3u32, 77, 200, 481] {
+        let resp = server.query(pv, 10).unwrap();
+        let truth = reference::ppr_f64(&coo, pv, 0.85, 25, None);
+        let truth_top = ppr_spmv::metrics::top_n_indices_f64(&truth.scores, 10);
+        let got: Vec<usize> = resp.ranking.iter().map(|r| r.vertex as usize).collect();
+        // 26-bit fixed point after 25 iterations: top-10 should agree
+        // almost everywhere; tolerate one displaced tail item
+        let agree = got.iter().zip(&truth_top).filter(|(a, b)| a == b).count();
+        assert!(agree >= 8, "vertex {pv}: got {got:?} want {truth_top:?}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn heavy_concurrent_load_multi_worker() {
+    let (server, _) = build(3, 8, Precision::Fixed(22));
+    let server = Arc::new(server);
+    let mut handles = Vec::new();
+    for t in 0..8 {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0;
+            for i in 0..25u32 {
+                let v = (t * 59 + i * 13) % 510;
+                if s.query(v, 5).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 200);
+    let snap = server.stats().snapshot();
+    assert_eq!(snap.requests, 200);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.mean_batch_fill > 1.5, "batching should engage: {}", snap.mean_batch_fill);
+    assert!(snap.batches < 200, "batching should coalesce requests");
+}
+
+#[test]
+fn response_metadata_sane() {
+    let (server, _) = build(1, 2, Precision::Float32);
+    let resp = server.query(10, 7).unwrap();
+    assert_eq!(resp.vertex, 10);
+    assert_eq!(resp.ranking.len(), 7);
+    assert_eq!(resp.iterations, 25);
+    assert!(resp.total_time >= resp.queue_time);
+    // scores descend
+    for w in resp.ranking.windows(2) {
+        assert!(w[0].score >= w[1].score);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn per_precision_servers_rank_consistently() {
+    // all bit-widths should put the personalization vertex first
+    for p in Precision::paper_sweep() {
+        let (server, _) = build(1, 2, p);
+        let resp = server.query(42, 3).unwrap();
+        assert_eq!(resp.ranking[0].vertex, 42, "{p}");
+        server.shutdown();
+    }
+}

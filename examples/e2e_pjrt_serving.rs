@@ -2,27 +2,28 @@
 //! workload:
 //!
 //!   L1 Pallas COO-SpMV kernel  →  L2 JAX PPR step  →  `make artifacts`
-//!   (HLO text)  →  L3 rust: PJRT load/compile  →  serving coordinator
-//!   with dynamic batching  →  batched recommendation queries  →
+//!   (HLO text)  →  L3 rust: PJRT load/compile via `EngineBuilder::pjrt`
+//!   (thread-bound engines under the hood)  →  serving coordinator with
+//!   dynamic batching  →  batched recommendation queries  →
 //!   latency/throughput report + numeric cross-check vs the native
 //!   bit-accurate engine.
 //!
-//! Requires `make artifacts` (skips politely otherwise).
+//! Requires `make artifacts` and a real `xla` crate (skips politely when
+//! the artifacts are missing or the in-tree xla stub is linked).
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example e2e_pjrt_serving
 //! ```
 
 use ppr_spmv::config::RunConfig;
-use ppr_spmv::coordinator::engine::{PjrtEngineAdapter, ThreadBoundEngine};
-use ppr_spmv::coordinator::{PprEngine, Server, ServerConfig};
+use ppr_spmv::coordinator::{EngineBuilder, PprEngine, ScoreBlock};
+use ppr_spmv::fixed::Precision;
 use ppr_spmv::graph::generators;
 use ppr_spmv::ppr::PreparedGraph;
-use ppr_spmv::runtime::{Manifest, PjrtPprEngine, Runtime};
+use ppr_spmv::runtime::Manifest;
 use ppr_spmv::util::{rng::Xoshiro256, Stopwatch};
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
 
 fn main() {
     let dir = PathBuf::from("artifacts");
@@ -49,37 +50,29 @@ fn main() {
     );
 
     let cfg = RunConfig {
+        precision: Precision::Fixed(spec.frac_bits + 1),
         kappa: spec.kappa,
         iterations: 10,
         alpha: manifest.alpha,
+        batch_timeout_ms: 10,
+        artifacts_dir: dir.to_string_lossy().into_owned(),
         ..Default::default()
     };
 
-    // L3: PJRT engines are thread-affine → pin each to its own thread
+    // L3: one builder call — PJRT engines are thread-affine, so the
+    // builder returns them pre-pinned to dedicated threads
     let workers = 2;
-    let engines: Vec<Box<dyn PprEngine>> = (0..workers)
-        .map(|_| {
-            let dir = dir.clone();
-            let spec = spec.clone();
-            let pg = pg.clone();
-            let cfg = cfg.clone();
-            let nv = graph.num_vertices;
-            Box::new(
-                ThreadBoundEngine::spawn(move || {
-                    let rt = Runtime::cpu()?;
-                    println!("  worker PJRT client up ({})", rt.platform());
-                    let engine = PjrtPprEngine::load_spec(&rt, Path::new(&dir), &spec, &pg)?;
-                    Ok(Box::new(PjrtEngineAdapter::new(engine, &cfg, nv)) as Box<_>)
-                })
-                .expect("engine thread"),
-            ) as Box<dyn PprEngine>
-        })
-        .collect();
-
-    let server = Server::start(
-        engines,
-        ServerConfig { batch_timeout: Duration::from_millis(10), default_top_n: 10 },
-    );
+    let server = match EngineBuilder::pjrt()
+        .config(cfg.clone())
+        .artifact_label("26b")
+        .serve(&graph, workers)
+    {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("PJRT serving unavailable ({e:#}) — skipping e2e demo");
+            std::process::exit(2);
+        }
+    };
     println!("serving via PJRT with {workers} workers, κ={} dynamic batching\n", spec.kappa);
 
     // real small workload: 64 batched recommendation queries
@@ -88,15 +81,15 @@ fn main() {
         (0..graph.num_vertices as u32).filter(|&v| !dangling[v as usize]).collect();
     let mut rng = Xoshiro256::seeded(1);
     let sw = Stopwatch::start();
-    let receivers: Vec<_> = (0..64)
+    let tickets: Vec<_> = (0..64)
         .map(|_| {
             let v = candidates[rng.next_index(candidates.len())];
             (v, server.submit(v, 10))
         })
         .collect();
     let mut responses = Vec::new();
-    for (v, rx) in receivers {
-        let resp = rx.recv().expect("server alive").expect("query succeeds");
+    for (v, ticket) in tickets {
+        let resp = ticket.wait().expect("query succeeds");
         assert_eq!(resp.ranking[0].vertex, v, "personalization vertex ranks first");
         responses.push(resp);
     }
@@ -110,24 +103,18 @@ fn main() {
     );
 
     // numeric cross-check: the PJRT path must agree with the native
-    // bit-accurate engine on a fresh query's full top-10
+    // bit-accurate engine (same builder, different kind) on a fresh
+    // query's full top-10
     let probe = candidates[0];
     let pjrt_resp = server.query(probe, 10).expect("probe query");
-    let d = ppr_spmv::spmv::datapath::FixedPath::paper(spec.frac_bits + 1);
-    let mut native = ppr_spmv::ppr::BatchedPpr::new(d, pg, spec.kappa, manifest.alpha);
-    let batch = ppr_spmv::ppr::batch_requests(&[probe], spec.kappa).remove(0);
-    let out = native.run(
-        &batch,
-        &ppr_spmv::ppr::PprConfig {
-            alpha: manifest.alpha,
-            max_iterations: 10,
-            convergence_threshold: None,
-        },
-    );
-    let native_scores: Vec<f64> =
-        out.lane(0, spec.kappa).iter().map(|&w| d.fmt.to_f64(w)).collect();
-    let native_top = ppr_spmv::metrics::top_n_indices_f64(&native_scores, 10);
-    let pjrt_top: Vec<usize> = pjrt_resp.ranking.iter().map(|r| r.vertex as usize).collect();
+    let mut native = EngineBuilder::native()
+        .config(cfg.clone())
+        .build_prepared(pg)
+        .expect("native engine");
+    let mut block = ScoreBlock::new();
+    native.run_batch(&[probe], &mut block).expect("native batch");
+    let native_top: Vec<u32> = block.top_n(0, 10).iter().map(|r| r.vertex).collect();
+    let pjrt_top: Vec<u32> = pjrt_resp.ranking.iter().map(|r| r.vertex).collect();
     assert_eq!(pjrt_top, native_top, "PJRT and native engines must agree bit-exactly");
     println!("\ncross-check vs native engine: top-10 identical ✓  ({pjrt_top:?})");
 

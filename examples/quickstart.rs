@@ -1,16 +1,18 @@
 //! Quickstart: generate a small graph, run reduced-precision Personalized
-//! PageRank at every bit-width the paper evaluates, and compare the
-//! rankings against the converged f64 reference.
+//! PageRank at every bit-width the paper evaluates through the unified
+//! engine API, and compare the rankings against the converged f64
+//! reference.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
+use ppr_spmv::config::RunConfig;
+use ppr_spmv::coordinator::{EngineBuilder, PprEngine, ScoreBlock};
 use ppr_spmv::fixed::Precision;
 use ppr_spmv::graph::{generators, CooMatrix};
 use ppr_spmv::metrics;
-use ppr_spmv::ppr::{reference, BatchedPpr, PprConfig, PreparedGraph};
-use ppr_spmv::spmv::datapath::FixedPath;
+use ppr_spmv::ppr::{reference, PreparedGraph};
 use std::sync::Arc;
 
 fn main() {
@@ -24,7 +26,8 @@ fn main() {
         g.sparsity()
     );
 
-    // 2. preprocess once (COO transition matrix + aligned packet schedule)
+    // 2. preprocess once (COO transition matrix + aligned packet schedule),
+    //    shared by every engine the builder constructs below
     let coo = CooMatrix::from_graph(&g);
     let prepared = Arc::new(PreparedGraph::from_coo(&coo, ppr_spmv::PAPER_B));
     println!(
@@ -40,19 +43,29 @@ fn main() {
     let truth_top = metrics::top_n_indices_f64(&truth.scores, 10);
     println!("\nf64 reference top-10 for vertex {pers}: {truth_top:?}");
 
-    // 4. reduced-precision PPR, 10 iterations, per bit-width
-    let cfg = PprConfig::paper_timed();
+    // 4. reduced-precision PPR, 10 iterations, per bit-width — one
+    //    single-lane partial batch on a κ=8 engine (lanes are independent,
+    //    so a 1-request batch costs 1/8th of a full one)
+    let mut block = ScoreBlock::new();
     for p in Precision::paper_sweep() {
-        let Precision::Fixed(bits) = p else { continue };
-        let d = FixedPath::paper(bits);
-        let mut engine = BatchedPpr::new(d, prepared.clone(), 1, ppr_spmv::PAPER_ALPHA);
-        let out = engine.run(&[pers], &cfg);
-        let scores: Vec<f64> = out.scores.iter().map(|&w| d.fmt.to_f64(w)).collect();
-        let rep = metrics::accuracy_report(&scores, &truth.scores, 10);
+        let Precision::Fixed(_) = p else { continue };
+        let cfg = RunConfig {
+            precision: p,
+            kappa: ppr_spmv::PAPER_KAPPA,
+            iterations: ppr_spmv::PAPER_ITERATIONS,
+            ..Default::default()
+        };
+        let mut engine = EngineBuilder::native()
+            .config(cfg)
+            .build_prepared(prepared.clone())
+            .expect("engine builds");
+        engine.run_batch(&[pers], &mut block).expect("batch runs");
+        let scores = block.lane(0);
+        let rep = metrics::accuracy_report(scores, &truth.scores, 10);
         println!(
             "{:>4}: top-10 {:?}  errors={} edit={} ndcg={:.2}%",
             p.label(),
-            metrics::top_n_indices_f64(&scores, 10),
+            metrics::top_n_indices_f64(scores, 10),
             rep.num_errors,
             rep.edit_distance,
             rep.ndcg * 100.0

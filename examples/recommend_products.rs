@@ -1,22 +1,21 @@
 //! E-commerce recommendation serving — the paper's motivating use-case
 //! ("recommended items for a given query on an e-commerce platform").
 //!
-//! Builds the Amazon co-purchasing stand-in, starts the serving
-//! coordinator with κ-lane dynamic batching over the 26-bit engine, fires
-//! a bursty request workload, and reports latency percentiles, throughput
-//! and batching efficiency.
+//! Builds the Amazon co-purchasing stand-in, stands up the serving
+//! coordinator through `EngineBuilder::serve` with κ-lane dynamic batching
+//! over the 26-bit engine, fires a bursty ticketed workload (some requests
+//! carrying deadlines), and reports latency percentiles, throughput and
+//! batching efficiency.
 //!
 //! ```sh
 //! cargo run --release --example recommend_products
 //! ```
 
 use ppr_spmv::config::RunConfig;
-use ppr_spmv::coordinator::{NativeEngine, PprEngine, Server, ServerConfig};
+use ppr_spmv::coordinator::EngineBuilder;
 use ppr_spmv::fixed::Precision;
 use ppr_spmv::graph::DatasetSpec;
-use ppr_spmv::ppr::PreparedGraph;
 use ppr_spmv::util::{rng::Xoshiro256, Stopwatch};
-use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -34,30 +33,30 @@ fn main() {
         kappa: 8,
         iterations: 10,
         top_n: 10,
+        batch_timeout_ms: 4,
         ..Default::default()
     };
-    let pg = Arc::new(PreparedGraph::new(&ds.graph, cfg.b));
     let workers = 2;
-    let engines: Vec<Box<dyn PprEngine>> = (0..workers)
-        .map(|_| Box::new(NativeEngine::new(pg.clone(), cfg.clone())) as Box<dyn PprEngine>)
-        .collect();
-    let server = Server::start(
-        engines,
-        ServerConfig { batch_timeout: Duration::from_millis(4), default_top_n: cfg.top_n },
-    );
+    let server = EngineBuilder::native()
+        .config(cfg.clone())
+        .serve(&ds.graph, workers)
+        .expect("server starts");
     println!("serving with {workers} workers, κ={} batching, 26-bit fixed point\n", cfg.kappa);
 
-    // bursty workload: 200 "users" arriving in waves
+    // bursty workload: 200 "users" arriving in waves; every fourth request
+    // carries a (generous) deadline to exercise the deadline path
     let dangling = ds.graph.dangling();
     let products: Vec<u32> =
         (0..ds.graph.num_vertices as u32).filter(|&v| !dangling[v as usize]).collect();
     let mut rng = Xoshiro256::seeded(99);
     let sw = Stopwatch::start();
-    let mut receivers = Vec::new();
+    let mut tickets = Vec::new();
     for wave in 0..10 {
-        for _ in 0..20 {
+        for i in 0..20 {
             let product = products[rng.next_index(products.len())];
-            receivers.push((product, server.submit(product, 10)));
+            let deadline =
+                if i % 4 == 0 { Some(Duration::from_secs(5)) } else { None };
+            tickets.push((product, server.submit_with(product, 10, deadline)));
         }
         if wave % 3 == 2 {
             std::thread::sleep(Duration::from_millis(2)); // burst gap
@@ -65,8 +64,8 @@ fn main() {
     }
     let mut sample_shown = false;
     let mut ok = 0usize;
-    for (product, rx) in receivers {
-        match rx.recv().expect("server alive") {
+    for (product, ticket) in tickets {
+        match ticket.wait() {
             Ok(resp) => {
                 ok += 1;
                 if !sample_shown {
@@ -88,8 +87,8 @@ fn main() {
         snap.latency_p50_ms, snap.latency_p95_ms, snap.latency_p99_ms, snap.queue_p50_ms
     );
     println!(
-        "batches {} | mean fill {:.2}/κ={} (the paper's single-pass κ-batching)",
-        snap.batches, snap.mean_batch_fill, cfg.kappa
+        "batches {} | mean fill {:.2}/κ={} | deadline misses {} (the paper's single-pass κ-batching)",
+        snap.batches, snap.mean_batch_fill, cfg.kappa, snap.deadline_misses
     );
     server.shutdown();
 }

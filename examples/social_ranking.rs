@@ -2,19 +2,21 @@
 //! ("find recommended posts in a social network while users interact
 //! with it"). Explores the accuracy/bit-width trade-off interactively:
 //! ranks the social circle of several users on the Twitter stand-in at
-//! every precision and prints the IR metrics of §5.3, plus the simulated
-//! FPGA deployment report for each design point.
+//! every precision (one engine per design point, all built through the
+//! unified `EngineBuilder`) and prints the IR metrics of §5.3, plus the
+//! simulated FPGA deployment report for each design point.
 //!
 //! ```sh
 //! cargo run --release --example social_ranking
 //! ```
 
+use ppr_spmv::config::RunConfig;
+use ppr_spmv::coordinator::{EngineBuilder, PprEngine, ScoreBlock};
 use ppr_spmv::fixed::Precision;
 use ppr_spmv::fpga::FpgaConfig;
 use ppr_spmv::graph::{CooMatrix, DatasetSpec};
 use ppr_spmv::metrics;
-use ppr_spmv::ppr::{reference, BatchedPpr, PprConfig, PreparedGraph};
-use ppr_spmv::spmv::datapath::FixedPath;
+use ppr_spmv::ppr::{reference, PreparedGraph};
 use std::sync::Arc;
 
 fn main() {
@@ -43,21 +45,27 @@ fn main() {
         "{:>5} | {:>8} {:>9} {:>7} | {:>9} {:>7} {:>7}",
         "width", "err@10", "edit@10", "ndcg", "clock", "power", "LUT"
     );
+    let mut block = ScoreBlock::new();
     for p in Precision::paper_sweep() {
-        let Precision::Fixed(bits) = p else { continue };
-        let d = FixedPath::paper(bits);
-        let mut engine =
-            BatchedPpr::new(d, prepared.clone(), users.len(), ppr_spmv::PAPER_ALPHA);
-        let out = engine.run(&users, &PprConfig::paper_timed());
+        let Precision::Fixed(_) = p else { continue };
+        let cfg = RunConfig {
+            precision: p,
+            kappa: users.len(),
+            iterations: ppr_spmv::PAPER_ITERATIONS,
+            ..Default::default()
+        };
+        let mut engine = EngineBuilder::native()
+            .config(cfg)
+            .build_prepared(prepared.clone())
+            .expect("engine builds");
+        engine.run_batch(&users, &mut block).expect("batch runs");
 
         // aggregate §5.3 metrics over the batch
         let mut errors = 0.0;
         let mut edit = 0.0;
         let mut ndcg = 0.0;
         for (lane, gt) in truth.iter().enumerate() {
-            let scores: Vec<f64> =
-                out.lane(lane, users.len()).iter().map(|&w| d.fmt.to_f64(w)).collect();
-            let rep = metrics::accuracy_report(&scores, gt, 10);
+            let rep = metrics::accuracy_report(block.lane(lane), gt, 10);
             errors += rep.num_errors as f64;
             edit += rep.edit_distance as f64;
             ndcg += rep.ndcg;

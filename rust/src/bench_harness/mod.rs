@@ -18,10 +18,11 @@ pub mod fig7_convergence;
 pub mod table1_datasets;
 pub mod table2_resources;
 
+use crate::config::RunConfig;
+use crate::coordinator::{EngineBuilder, PprEngine, ScoreBlock};
 use crate::fixed::Precision;
 use crate::graph::{CooMatrix, Dataset, VertexId};
-use crate::ppr::{BatchedPpr, PprConfig, PreparedGraph};
-use crate::spmv::datapath::{FixedPath, FloatPath};
+use crate::ppr::PreparedGraph;
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -131,38 +132,34 @@ pub fn prepare(spec: &crate::graph::DatasetSpec, opts: &ExpOptions) -> PreparedD
 }
 
 /// Run the reduced-precision (or F32-FPGA) engine for a workload and
-/// return dequantized score vectors per request.
+/// return dequantized score vectors per request. Goes through the unified
+/// engine API: one [`EngineBuilder`]-constructed native engine, one
+/// reusable [`ScoreBlock`], variable-lane trailing batch.
 pub fn run_engine_scores(
     pd: &PreparedDataset,
     precision: Precision,
     iterations: usize,
 ) -> Vec<Vec<f64>> {
-    let cfg = PprConfig { max_iterations: iterations, ..Default::default() };
-    match precision {
-        Precision::Fixed(w) => {
-            let d = FixedPath::paper(w);
-            let mut engine =
-                BatchedPpr::new(d, pd.prepared.clone(), crate::PAPER_KAPPA, crate::PAPER_ALPHA);
-            engine
-                .run_requests(&pd.requests, &cfg)
-                .into_iter()
-                .map(|lane| lane.iter().map(|&w_| d.fmt.to_f64(w_)).collect())
-                .collect()
-        }
-        Precision::Float32 => {
-            let mut engine = BatchedPpr::new(
-                FloatPath,
-                pd.prepared.clone(),
-                crate::PAPER_KAPPA,
-                crate::PAPER_ALPHA,
-            );
-            engine
-                .run_requests(&pd.requests, &cfg)
-                .into_iter()
-                .map(|lane| lane.iter().map(|&w_| w_ as f64).collect())
-                .collect()
+    let cfg = RunConfig {
+        precision,
+        kappa: crate::PAPER_KAPPA,
+        iterations,
+        alpha: crate::PAPER_ALPHA,
+        ..Default::default()
+    };
+    let mut engine = EngineBuilder::native()
+        .config(cfg)
+        .build_prepared(pd.prepared.clone())
+        .expect("native engine");
+    let mut block = ScoreBlock::new();
+    let mut out = Vec::with_capacity(pd.requests.len());
+    for batch in pd.requests.chunks(crate::PAPER_KAPPA) {
+        engine.run_batch(batch, &mut block).expect("engine batch");
+        for lane in 0..batch.len() {
+            out.push(block.lane(lane).to_vec());
         }
     }
+    out
 }
 
 /// Ground-truth scores (f64, converged) for a workload.

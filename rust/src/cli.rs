@@ -12,13 +12,11 @@
 
 use crate::bench_harness as bh;
 use crate::config::RunConfig;
-use crate::coordinator::{NativeEngine, PprEngine, Server, ServerConfig};
+use crate::coordinator::{EngineBuilder, EngineKind};
 use crate::fixed::Precision;
 use crate::graph::{loader, DatasetSpec};
-use crate::ppr::PreparedGraph;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::PathBuf;
-use std::sync::Arc;
 
 /// Parsed command-line arguments: positionals + `--key value` / `--flag`.
 #[derive(Debug, Clone, Default)]
@@ -87,6 +85,21 @@ pub fn run_config(args: &Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
+/// Build the engine factory from common CLI options: `--engine
+/// native|pjrt|cpu` picks the backend, `--artifact LABEL` pins a specific
+/// AOT artifact for the PJRT backend.
+pub fn engine_builder(args: &Args, cfg: &RunConfig) -> Result<EngineBuilder> {
+    let kind = match args.options.get("engine") {
+        Some(s) => EngineKind::parse(s).ok_or_else(|| anyhow!("bad --engine {s}"))?,
+        None => EngineKind::Native,
+    };
+    let mut builder = EngineBuilder::new(kind).config(cfg.clone());
+    if let Some(label) = args.options.get("artifact") {
+        builder = builder.artifact_label(label.clone());
+    }
+    Ok(builder)
+}
+
 /// Load a graph: `--graph <table1-name>` (generated) or `--graph-file
 /// <path>` (SNAP edge list). Scale applies to generated specs.
 pub fn load_graph(args: &Args) -> Result<crate::graph::Graph> {
@@ -146,8 +159,10 @@ USAGE:
   ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|all>
             [--full] [--scale N] [--requests N] [--iterations N] [--no-csv]
   ppr-spmv serve  [--graph NAME|--graph-file PATH] [--precision 26b]
-            [--kappa 8] [--iterations 10] [--workers N] [--demo-requests N]
+            [--engine native|pjrt|cpu] [--kappa 8] [--iterations 10]
+            [--workers N] [--demo-requests N] [--deadline-ms N]
   ppr-spmv query  --vertex V [--graph NAME|--graph-file PATH] [--top 10]
+            [--engine native|pjrt|cpu]
   ppr-spmv generate --graph NAME --out PATH [--scale N]
   ppr-spmv artifacts [--dir artifacts]
   ppr-spmv synthesize [--precision 26b] [--kappa 8] [--vertices 100000]";
@@ -205,36 +220,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let graph = load_graph(args)?;
     let workers = args.get_or::<usize>("workers", 2);
     let demo_requests = args.get_or::<usize>("demo-requests", 64);
+    let deadline = args.get::<u64>("deadline-ms").map(std::time::Duration::from_millis);
+    let builder = engine_builder(args, &cfg)?;
     println!(
-        "serving |V|={} |E|={} with {} × {} workers",
+        "serving |V|={} |E|={} with {} × {}/{} workers",
         graph.num_vertices,
         graph.num_edges(),
         workers,
+        builder.kind(),
         cfg.precision
     );
-    let pg = Arc::new(PreparedGraph::new(&graph, cfg.b));
-    let engines: Vec<Box<dyn PprEngine>> = (0..workers)
-        .map(|_| Box::new(NativeEngine::new(pg.clone(), cfg.clone())) as Box<dyn PprEngine>)
-        .collect();
-    let server = Server::start(
-        engines,
-        ServerConfig {
-            batch_timeout: std::time::Duration::from_millis(cfg.batch_timeout_ms),
-            default_top_n: cfg.top_n,
-        },
-    );
+    let server = builder.serve(&graph, workers)?;
     // demo workload: random queries from non-dangling vertices
     let mut rng = crate::util::rng::Xoshiro256::seeded(1);
     let dangling = graph.dangling();
     let candidates: Vec<u32> =
         (0..graph.num_vertices as u32).filter(|&v| !dangling[v as usize]).collect();
     let sw = crate::util::Stopwatch::start();
-    let receivers: Vec<_> = (0..demo_requests)
-        .map(|_| server.submit(candidates[rng.next_index(candidates.len())], cfg.top_n))
+    let tickets: Vec<_> = (0..demo_requests)
+        .map(|_| {
+            server.submit_with(candidates[rng.next_index(candidates.len())], cfg.top_n, deadline)
+        })
         .collect();
     let mut ok = 0usize;
-    for rx in receivers {
-        if rx.recv().context("response channel")?.is_ok() {
+    for ticket in tickets {
+        if ticket.wait().is_ok() {
             ok += 1;
         }
     }
@@ -245,13 +255,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ok as f64 / elapsed
     );
     println!(
-        "latency p50={:.2}ms p95={:.2}ms p99={:.2}ms | queue p50={:.2}ms | batches={} mean fill={:.2}",
+        "latency p50={:.2}ms p95={:.2}ms p99={:.2}ms | queue p50={:.2}ms | batches={} mean fill={:.2} | deadline misses={}",
         snap.latency_p50_ms,
         snap.latency_p95_ms,
         snap.latency_p99_ms,
         snap.queue_p50_ms,
         snap.batches,
         snap.mean_batch_fill,
+        snap.deadline_misses,
     );
     server.shutdown();
     Ok(())
@@ -263,9 +274,7 @@ fn cmd_query(args: &Args) -> Result<()> {
     let vertex = args.get::<u32>("vertex").context("--vertex required")?;
     let top = args.get_or::<usize>("top", 10);
     anyhow::ensure!((vertex as usize) < graph.num_vertices, "vertex out of range");
-    let pg = Arc::new(PreparedGraph::new(&graph, cfg.b));
-    let engine: Box<dyn PprEngine> = Box::new(NativeEngine::new(pg, cfg.clone()));
-    let server = Server::start(vec![engine], ServerConfig::default());
+    let server = engine_builder(args, &cfg)?.serve(&graph, 1)?;
     let resp = server.query(vertex, top).map_err(|e| anyhow!(e))?;
     println!("top-{top} for vertex {vertex} ({} iterations):", resp.iterations);
     for (rank, rv) in resp.ranking.iter().enumerate() {
@@ -370,6 +379,16 @@ mod tests {
     fn bad_precision_rejected() {
         let a = args("serve --precision 99x");
         assert!(run_config(&a).is_err());
+    }
+
+    #[test]
+    fn engine_builder_from_args() {
+        let a = args("serve --engine cpu");
+        let cfg = run_config(&a).unwrap();
+        let b = engine_builder(&a, &cfg).unwrap();
+        assert_eq!(b.kind(), EngineKind::CpuBaseline);
+        assert_eq!(engine_builder(&args("serve"), &cfg).unwrap().kind(), EngineKind::Native);
+        assert!(engine_builder(&args("serve --engine warp"), &cfg).is_err());
     }
 
     #[test]

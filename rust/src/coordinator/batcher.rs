@@ -34,13 +34,24 @@ impl DynamicBatcher {
     }
 
     /// Enqueue a request. Returns `false` if the batcher is closed.
+    ///
+    /// Wakes exactly **one** waiter: a single request needs a single
+    /// worker, and `notify_all` here stampedes every idle worker through
+    /// the mutex just to find an empty queue. A wake-up consumed by a
+    /// worker already assembling a batch is not lost: [`next_batch`]
+    /// hands leftover work to another waiter when it drains (see the
+    /// hand-off notify there). `notify_all` is reserved for
+    /// [`close`](Self::close), where every waiter really must observe
+    /// the state change.
+    ///
+    /// [`next_batch`]: Self::next_batch
     pub fn submit(&self, req: PprRequest) -> bool {
         let mut inner = self.inner.lock().unwrap();
         if inner.closed {
             return false;
         }
         inner.queue.push_back(req);
-        self.cv.notify_all();
+        self.cv.notify_one();
         true
     }
 
@@ -71,7 +82,14 @@ impl DynamicBatcher {
                 continue; // raced with another worker
             }
             let take = inner.queue.len().min(self.kappa);
-            return Some(inner.queue.drain(..take).collect());
+            let batch = inner.queue.drain(..take).collect();
+            // hand-off: if submissions outran this batch (their wake-ups
+            // may all have landed on this worker while it was assembling),
+            // wake one more worker for the leftovers before going compute
+            if !inner.queue.is_empty() {
+                self.cv.notify_one();
+            }
+            return Some(batch);
         }
     }
 
@@ -143,6 +161,46 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 2);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn single_submit_wakes_exactly_one_batch() {
+        // regression for the partial-batch path: one request against a
+        // κ=8 batcher must flush alone on timeout, not wait for κ
+        let b = DynamicBatcher::new(8, Duration::from_millis(10));
+        b.submit(req(42));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 42);
+    }
+
+    #[test]
+    fn notify_one_loses_no_requests_across_workers() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let b = Arc::new(DynamicBatcher::new(4, Duration::from_millis(3)));
+        let served = Arc::new(AtomicUsize::new(0));
+        let workers: Vec<_> = (0..3)
+            .map(|_| {
+                let b = b.clone();
+                let served = served.clone();
+                std::thread::spawn(move || {
+                    while let Some(batch) = b.next_batch() {
+                        served.fetch_add(batch.len(), Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for i in 0..50 {
+            assert!(b.submit(req(i)));
+            if i % 9 == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        b.close(); // pending requests drain before workers exit
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(served.load(Ordering::SeqCst), 50, "every request served exactly once");
     }
 
     #[test]

@@ -1,55 +1,78 @@
 //! Accelerator abstraction for the serving path.
 //!
-//! [`PprEngine`] is the trait the server's workers drive; implementations:
+//! Exactly **one** trait — [`PprEngine`] — that every backend implements
+//! (DESIGN.md §3). Batches are *variable-lane*: a call may carry anywhere
+//! from 1 to [`max_kappa`](PprEngine::max_kappa) personalization vertices,
+//! so the timeout-flushed partial batches of
+//! [`super::batcher::DynamicBatcher`] run as-is, with compute proportional
+//! to the lanes actually requested — no padding, no discarded work.
+//! Results land in a caller-owned reusable [`ScoreBlock`].
 //!
-//! - [`NativeEngine`] — the bit-accurate Rust fixed-point/float engine
-//!   (paper-scale, no artifact needed);
+//! Backends:
+//!
+//! - [`NativeEngine`] — the bit-accurate Rust fixed-point/float model of
+//!   the FPGA datapath (paper-scale, no artifact needed);
 //! - [`crate::runtime::PjrtPprEngine`] via [`PjrtEngineAdapter`] — the
-//!   three-layer path executing the AOT JAX/Pallas artifacts.
+//!   three-layer path executing the AOT JAX/Pallas artifacts. PJRT handles
+//!   are thread-affine (non-`Send`), so worker pools drive them through
+//!   [`ThreadBoundEngine`];
+//! - [`CpuBaselineEngine`] — the multi-threaded f32 CPU baseline (the
+//!   paper's PGX comparison point) behind the same interface.
+//!
+//! Construct engines through [`super::builder::EngineBuilder`]; the
+//! concrete types here are public mainly for tests and adapters.
 
+use super::score_block::ScoreBlock;
 use crate::config::RunConfig;
 use crate::fixed::Precision;
-use crate::graph::VertexId;
-use crate::ppr::{BatchedPpr, PprConfig, PreparedGraph};
+use crate::graph::{CsrMatrix, VertexId};
+use crate::ppr::{cpu_baseline, BatchedPpr, PprConfig, PreparedGraph};
 use crate::spmv::datapath::{FixedPath, FloatPath};
 use anyhow::Result;
 use std::sync::Arc;
 
-/// Which backend a server uses.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum EngineKind {
-    /// Native Rust engine (bit-accurate model of the FPGA datapath).
-    Native,
-    /// PJRT execution of the AOT JAX/Pallas artifacts.
-    Pjrt,
-}
+/// A batch-capable PPR accelerator.
+///
+/// `run_batch` accepts 1..=`max_kappa()` personalization vertices and
+/// writes one dense dequantized score lane per vertex into `out` (shaping
+/// it via [`ScoreBlock::reset`] and recording the iteration count).
+///
+/// The trait itself carries no `Send` bound — thread-affine backends (PJRT)
+/// implement it too. Multi-worker consumers take `Box<dyn PprEngine +
+/// Send>`, which [`ThreadBoundEngine`] provides for any local engine.
+pub trait PprEngine {
+    /// Maximum lanes per batch (the κ the backend was built for).
+    fn max_kappa(&self) -> usize;
 
-/// A batch-capable PPR accelerator: runs exactly κ personalization
-/// vertices per call and returns dense dequantized scores per lane.
-pub trait PprEngine: Send {
-    /// κ lanes per batch.
-    fn kappa(&self) -> usize;
     /// Number of vertices scores are produced for.
     fn num_vertices(&self) -> usize;
-    /// Run one batch; returns (lane-major scores `[lane][vertex]`,
-    /// iterations executed).
-    fn run_batch(&mut self, personalization: &[VertexId]) -> Result<(Vec<Vec<f64>>, usize)>;
-    /// Engine description for logs.
-    fn describe(&self) -> String;
-}
 
-/// Like [`PprEngine`] but without the `Send` bound — PJRT handles hold
-/// `Rc`s and raw pointers, so they must stay on the thread that created
-/// them. Wrap with [`ThreadBoundEngine`] to serve from worker pools.
-pub trait LocalPprEngine {
-    /// κ lanes per batch.
-    fn kappa(&self) -> usize;
-    /// Number of vertices scores are produced for.
-    fn num_vertices(&self) -> usize;
-    /// Run one batch.
-    fn run_batch(&mut self, personalization: &[VertexId]) -> Result<(Vec<Vec<f64>>, usize)>;
+    /// Run one batch of `personalization.len()` lanes into `out`.
+    fn run_batch(&mut self, personalization: &[VertexId], out: &mut ScoreBlock) -> Result<()>;
+
     /// Engine description for logs.
     fn describe(&self) -> String;
+
+    /// Shared batch validation: non-empty, within κ, vertices in range.
+    /// Implementations call this at the top of `run_batch`.
+    fn validate_batch(&self, personalization: &[VertexId]) -> Result<()> {
+        anyhow::ensure!(!personalization.is_empty(), "empty batch");
+        anyhow::ensure!(
+            personalization.len() <= self.max_kappa(),
+            "batch of {} lanes exceeds κ={}",
+            personalization.len(),
+            self.max_kappa()
+        );
+        if let Some(&v) =
+            personalization.iter().find(|&&v| v as usize >= self.num_vertices())
+        {
+            anyhow::bail!(
+                "personalization vertex {v} out of range (|V|={})",
+                self.num_vertices()
+            );
+        }
+        Ok(())
+    }
 }
 
 /// Native engine: a persistent [`BatchedPpr`] over the configured
@@ -92,7 +115,7 @@ impl NativeEngine {
 }
 
 impl PprEngine for NativeEngine {
-    fn kappa(&self) -> usize {
+    fn max_kappa(&self) -> usize {
         self.cfg.kappa
     }
 
@@ -100,29 +123,25 @@ impl PprEngine for NativeEngine {
         self.num_vertices
     }
 
-    fn run_batch(&mut self, personalization: &[VertexId]) -> Result<(Vec<Vec<f64>>, usize)> {
-        let kappa = self.cfg.kappa;
-        anyhow::ensure!(personalization.len() == kappa, "batch must have κ={kappa} entries");
-        let (scores, iters) = match &mut self.inner {
+    fn run_batch(&mut self, personalization: &[VertexId], out: &mut ScoreBlock) -> Result<()> {
+        self.validate_batch(personalization)?;
+        let lanes = personalization.len();
+        let nv = self.num_vertices;
+        let iterations = match &mut self.inner {
             NativeInner::Fixed(engine) => {
                 let fmt = engine.datapath.fmt;
-                let out = engine.run(personalization, &self.ppr_cfg);
-                let lanes = (0..kappa)
-                    .map(|k| {
-                        out.lane(k, kappa).iter().map(|&w_| fmt.to_f64(w_)).collect::<Vec<f64>>()
-                    })
-                    .collect();
-                (lanes, out.iterations)
+                let res = engine.run(personalization, &self.ppr_cfg);
+                out.fill_vertex_major(lanes, nv, lanes, &res.scores, |w| fmt.to_f64(w));
+                res.iterations
             }
             NativeInner::Float(engine) => {
-                let out = engine.run(personalization, &self.ppr_cfg);
-                let lanes = (0..kappa)
-                    .map(|k| out.lane(k, kappa).iter().map(|&w_| w_ as f64).collect::<Vec<f64>>())
-                    .collect();
-                (lanes, out.iterations)
+                let res = engine.run(personalization, &self.ppr_cfg);
+                out.fill_vertex_major(lanes, nv, lanes, &res.scores, |w| w as f64);
+                res.iterations
             }
         };
-        Ok((scores, iters))
+        out.set_iterations(iterations);
+        Ok(())
     }
 
     fn describe(&self) -> String {
@@ -133,28 +152,91 @@ impl PprEngine for NativeEngine {
     }
 }
 
+/// The multi-threaded f32 CPU baseline (the paper's PGX stand-in) behind
+/// the engine API: lanes are solved one after another, parallelized
+/// *within* each solve — the paper found PGX gained nothing from manual
+/// batching, so this is the honest baseline shape.
+pub struct CpuBaselineEngine {
+    csr: Arc<CsrMatrix>,
+    cfg: RunConfig,
+    threads: usize,
+}
+
+impl CpuBaselineEngine {
+    /// Bind to a destination-major CSR matrix.
+    pub fn new(csr: Arc<CsrMatrix>, cfg: RunConfig) -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self { csr, cfg, threads }
+    }
+}
+
+impl PprEngine for CpuBaselineEngine {
+    fn max_kappa(&self) -> usize {
+        self.cfg.kappa
+    }
+
+    fn num_vertices(&self) -> usize {
+        self.csr.num_vertices
+    }
+
+    fn run_batch(&mut self, personalization: &[VertexId], out: &mut ScoreBlock) -> Result<()> {
+        self.validate_batch(personalization)?;
+        out.reset(personalization.len(), self.csr.num_vertices);
+        for (lane, &pv) in personalization.iter().enumerate() {
+            let scores = cpu_baseline::ppr_f32_parallel(
+                &self.csr,
+                pv,
+                self.cfg.alpha as f32,
+                self.cfg.iterations,
+                self.threads,
+            );
+            let dst = out.lane_mut(lane);
+            for (slot, &s) in dst.iter_mut().zip(&scores) {
+                *slot = s as f64;
+            }
+        }
+        out.set_iterations(self.cfg.iterations);
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!("cpu-baseline[f32 pull threads={} iters={}]", self.threads, self.cfg.iterations)
+    }
+}
+
 /// Adapter making [`crate::runtime::PjrtPprEngine`] a [`PprEngine`].
+///
+/// The AOT artifact has a *static* κ, so partial batches are padded up to
+/// the artifact width on the way in (repeating the last real vertex — the
+/// hardware always runs κ lanes, Alg. 1) and only the real lanes are
+/// copied out. The padding here is an artifact-format constraint, not a
+/// serving-layer one; the native engine pays for exactly the lanes asked.
 pub struct PjrtEngineAdapter {
     inner: crate::runtime::PjrtPprEngine,
     ppr_cfg: PprConfig,
     graph_vertices: usize,
+    lane_buf: Vec<VertexId>,
 }
 
 impl PjrtEngineAdapter {
     /// Wrap a loaded PJRT engine. `graph_vertices` is the real |V| (the
     /// artifact may be padded larger).
-    pub fn new(inner: crate::runtime::PjrtPprEngine, cfg: &RunConfig, graph_vertices: usize) -> Self {
+    pub fn new(
+        inner: crate::runtime::PjrtPprEngine,
+        cfg: &RunConfig,
+        graph_vertices: usize,
+    ) -> Self {
         let ppr_cfg = PprConfig {
             alpha: cfg.alpha,
             max_iterations: cfg.iterations,
             convergence_threshold: cfg.convergence_threshold,
         };
-        Self { inner, ppr_cfg, graph_vertices }
+        Self { inner, ppr_cfg, graph_vertices, lane_buf: Vec::new() }
     }
 }
 
-impl LocalPprEngine for PjrtEngineAdapter {
-    fn kappa(&self) -> usize {
+impl PprEngine for PjrtEngineAdapter {
+    fn max_kappa(&self) -> usize {
         self.inner.spec().kappa
     }
 
@@ -162,15 +244,20 @@ impl LocalPprEngine for PjrtEngineAdapter {
         self.graph_vertices
     }
 
-    fn run_batch(&mut self, personalization: &[VertexId]) -> Result<(Vec<Vec<f64>>, usize)> {
-        let kappa = LocalPprEngine::kappa(self);
-        let (scores, iters) = self.inner.run(personalization, &self.ppr_cfg)?;
-        let lanes = (0..kappa)
-            .map(|k| {
-                (0..self.graph_vertices).map(|v| scores[v * kappa + k]).collect::<Vec<f64>>()
-            })
-            .collect();
-        Ok((lanes, iters))
+    fn run_batch(&mut self, personalization: &[VertexId], out: &mut ScoreBlock) -> Result<()> {
+        self.validate_batch(personalization)?;
+        let lanes = personalization.len();
+        let kappa = self.inner.spec().kappa;
+        self.lane_buf.clear();
+        self.lane_buf.extend_from_slice(personalization);
+        while self.lane_buf.len() < kappa {
+            self.lane_buf.push(*personalization.last().expect("non-empty batch"));
+        }
+        let (scores, iterations) = self.inner.run(&self.lane_buf, &self.ppr_cfg)?;
+        // stride is the artifact's static κ; only the real lanes copy out
+        out.fill_vertex_major(lanes, self.graph_vertices, kappa, &scores, |s| s);
+        out.set_iterations(iterations);
+        Ok(())
     }
 
     fn describe(&self) -> String {
@@ -178,21 +265,24 @@ impl LocalPprEngine for PjrtEngineAdapter {
     }
 }
 
-/// Pins a non-`Send` [`LocalPprEngine`] (e.g. the PJRT engine) to a
-/// dedicated thread and exposes a `Send` [`PprEngine`] facade over a
-/// channel — the standard pattern for thread-affine accelerator handles.
+/// Pins a non-`Send` engine (e.g. the PJRT adapter) to a dedicated thread
+/// and exposes a `Send` facade over a channel — the standard pattern for
+/// thread-affine accelerator handles. [`ScoreBlock`]s ping-pong across the
+/// channel and are swapped (not copied) into the caller's block, so the
+/// steady state still allocates nothing.
 pub struct ThreadBoundEngine {
     tx: std::sync::mpsc::Sender<Job>,
-    kappa: usize,
+    max_kappa: usize,
     num_vertices: usize,
     description: String,
+    spare: Option<ScoreBlock>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
-type BatchResult = Result<(Vec<Vec<f64>>, usize)>;
 struct Job {
     lanes: Vec<VertexId>,
-    reply: std::sync::mpsc::Sender<BatchResult>,
+    block: ScoreBlock,
+    reply: std::sync::mpsc::Sender<(ScoreBlock, Result<()>)>,
 }
 
 impl ThreadBoundEngine {
@@ -200,16 +290,16 @@ impl ThreadBoundEngine {
     /// the engine (PJRT clients must be created where they execute).
     pub fn spawn<F>(factory: F) -> Result<Self>
     where
-        F: FnOnce() -> Result<Box<dyn LocalPprEngine>> + Send + 'static,
+        F: FnOnce() -> Result<Box<dyn PprEngine>> + Send + 'static,
     {
         let (tx, rx) = std::sync::mpsc::channel::<Job>();
         let (init_tx, init_rx) = std::sync::mpsc::channel();
         let handle = std::thread::Builder::new()
-            .name("pjrt-engine".into())
+            .name("bound-engine".into())
             .spawn(move || {
                 let mut engine = match factory() {
                     Ok(e) => {
-                        let _ = init_tx.send(Ok((e.kappa(), e.num_vertices(), e.describe())));
+                        let _ = init_tx.send(Ok((e.max_kappa(), e.num_vertices(), e.describe())));
                         e
                     }
                     Err(err) => {
@@ -217,34 +307,49 @@ impl ThreadBoundEngine {
                         return;
                     }
                 };
-                while let Ok(job) = rx.recv() {
-                    let _ = job.reply.send(engine.run_batch(&job.lanes));
+                while let Ok(mut job) = rx.recv() {
+                    let res = engine.run_batch(&job.lanes, &mut job.block);
+                    let _ = job.reply.send((job.block, res));
                 }
             })
             .expect("spawn engine thread");
-        let (kappa, num_vertices, description) = init_rx
+        let (max_kappa, num_vertices, description) = init_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("engine thread died during init"))?
             .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
-        Ok(Self { tx, kappa, num_vertices, description, handle: Some(handle) })
+        Ok(Self { tx, max_kappa, num_vertices, description, spare: None, handle: Some(handle) })
     }
 }
 
 impl PprEngine for ThreadBoundEngine {
-    fn kappa(&self) -> usize {
-        self.kappa
+    fn max_kappa(&self) -> usize {
+        self.max_kappa
     }
 
     fn num_vertices(&self) -> usize {
         self.num_vertices
     }
 
-    fn run_batch(&mut self, personalization: &[VertexId]) -> Result<(Vec<Vec<f64>>, usize)> {
+    fn run_batch(&mut self, personalization: &[VertexId], out: &mut ScoreBlock) -> Result<()> {
+        let block = self.spare.take().unwrap_or_default();
         let (reply, rx) = std::sync::mpsc::channel();
         self.tx
-            .send(Job { lanes: personalization.to_vec(), reply })
+            .send(Job { lanes: personalization.to_vec(), block, reply })
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped reply"))?
+        let (block, res) =
+            rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped reply"))?;
+        match res {
+            // success: swap the filled block into the caller's handle
+            Ok(()) => {
+                self.spare = Some(std::mem::replace(out, block));
+                Ok(())
+            }
+            // failure: keep `out` untouched, like every direct engine
+            Err(e) => {
+                self.spare = Some(block);
+                Err(e)
+            }
+        }
     }
 
     fn describe(&self) -> String {
@@ -268,39 +373,67 @@ mod tests {
     use super::*;
     use crate::graph::Graph;
 
-    fn engine(precision: Precision) -> NativeEngine {
+    fn prepared() -> Arc<PreparedGraph> {
         let g = crate::graph::generators::erdos_renyi(128, 0.05, 10);
-        let pg = Arc::new(PreparedGraph::new(&g, 8));
+        Arc::new(PreparedGraph::new(&g, 8))
+    }
+
+    fn engine(precision: Precision) -> NativeEngine {
         let cfg = RunConfig { precision, kappa: 4, iterations: 15, ..Default::default() };
-        NativeEngine::new(pg, cfg)
+        NativeEngine::new(prepared(), cfg)
     }
 
     #[test]
-    fn native_engine_runs_batch() {
+    fn native_engine_runs_full_batch() {
         let mut e = engine(Precision::Fixed(26));
-        let (lanes, iters) = e.run_batch(&[1, 2, 3, 4]).unwrap();
-        assert_eq!(lanes.len(), 4);
-        assert_eq!(lanes[0].len(), 128);
-        assert_eq!(iters, 15);
-        // each lane's personalization vertex carries a large score
+        let mut block = ScoreBlock::new();
+        e.run_batch(&[1, 2, 3, 4], &mut block).unwrap();
+        assert_eq!(block.lanes(), 4);
+        assert_eq!(block.num_vertices(), 128);
+        assert_eq!(block.iterations(), 15);
+        // each lane's personalization vertex carries the top score
         for (k, &pv) in [1u32, 2, 3, 4].iter().enumerate() {
-            let best = crate::metrics::top_n_indices_f64(&lanes[k], 1)[0];
-            assert_eq!(best, pv as usize);
+            assert_eq!(block.top_n(k, 1)[0].vertex, pv);
         }
+    }
+
+    #[test]
+    fn native_engine_partial_batch_first_class() {
+        let mut e = engine(Precision::Fixed(26));
+        let mut block = ScoreBlock::new();
+        e.run_batch(&[7, 9], &mut block).unwrap();
+        assert_eq!(block.lanes(), 2, "partial batch keeps its own lane count");
+        assert_eq!(block.top_n(0, 1)[0].vertex, 7);
+        assert_eq!(block.top_n(1, 1)[0].vertex, 9);
+
+        // the block is reusable across differently-shaped batches
+        e.run_batch(&[1, 2, 3, 4], &mut block).unwrap();
+        assert_eq!(block.lanes(), 4);
     }
 
     #[test]
     fn native_engine_float_variant() {
         let mut e = engine(Precision::Float32);
-        let (lanes, _) = e.run_batch(&[5, 6, 7, 8]).unwrap();
-        let sum: f64 = lanes[0].iter().sum();
+        let mut block = ScoreBlock::new();
+        e.run_batch(&[5, 6, 7, 8], &mut block).unwrap();
+        let sum: f64 = block.lane(0).iter().sum();
         assert!((sum - 1.0).abs() < 0.05, "{sum}");
     }
 
     #[test]
-    fn wrong_batch_size_rejected() {
+    fn oversize_batch_rejected() {
         let mut e = engine(Precision::Fixed(20));
-        assert!(e.run_batch(&[1, 2]).is_err());
+        let mut block = ScoreBlock::new();
+        assert!(e.run_batch(&[1, 2, 3, 4, 5], &mut block).is_err(), "5 lanes > κ=4");
+        assert!(e.run_batch(&[], &mut block).is_err(), "empty batch");
+    }
+
+    #[test]
+    fn out_of_range_vertex_rejected() {
+        let mut e = engine(Precision::Fixed(20));
+        let mut block = ScoreBlock::new();
+        let err = e.run_batch(&[1, 999], &mut block).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
     }
 
     #[test]
@@ -308,5 +441,50 @@ mod tests {
         let e = engine(Precision::Fixed(22));
         assert!(e.describe().contains("22b"));
         let _ = Graph::new(1, vec![]);
+    }
+
+    #[test]
+    fn cpu_baseline_ranks_personalization_first() {
+        let g = crate::graph::generators::watts_strogatz(128, 6, 0.2, 11);
+        let csr = Arc::new(CsrMatrix::from_graph(&g));
+        let cfg = RunConfig { kappa: 4, iterations: 20, ..Default::default() };
+        let mut e = CpuBaselineEngine::new(csr, cfg);
+        let mut block = ScoreBlock::new();
+        e.run_batch(&[3, 40], &mut block).unwrap();
+        assert_eq!(block.lanes(), 2);
+        assert_eq!(block.iterations(), 20);
+        assert_eq!(block.top_n(0, 1)[0].vertex, 3);
+        assert_eq!(block.top_n(1, 1)[0].vertex, 40);
+    }
+
+    #[test]
+    fn thread_bound_engine_matches_direct() {
+        let pg = prepared();
+        let cfg = RunConfig {
+            precision: Precision::Fixed(26),
+            kappa: 4,
+            iterations: 15,
+            ..Default::default()
+        };
+        let mut direct = NativeEngine::new(pg.clone(), cfg.clone());
+        let mut bound = ThreadBoundEngine::spawn(move || {
+            Ok(Box::new(NativeEngine::new(pg, cfg)) as Box<dyn PprEngine>)
+        })
+        .unwrap();
+        assert_eq!(bound.max_kappa(), 4);
+        assert_eq!(bound.num_vertices(), 128);
+        assert!(bound.describe().contains("native"));
+
+        let mut a = ScoreBlock::new();
+        let mut b = ScoreBlock::new();
+        direct.run_batch(&[2, 5, 9], &mut a).unwrap();
+        bound.run_batch(&[2, 5, 9], &mut b).unwrap();
+        assert_eq!(a.as_flat(), b.as_flat(), "channel hop must be bit-transparent");
+        assert_eq!(a.iterations(), b.iterations());
+
+        // errors cross the channel too, leaving the caller's block intact
+        assert!(bound.run_batch(&[1, 2, 3, 4, 5], &mut b).is_err());
+        assert_eq!(b.lanes(), 3, "failed batch must not clobber previous results");
+        assert_eq!(a.as_flat(), b.as_flat());
     }
 }

@@ -4,13 +4,22 @@
 //! platform"; §3: "we compute κ personalization vertices in parallel, to
 //! batch multiple user requests").
 //!
-//! - [`request`] — typed queries/responses with latency accounting.
+//! The accelerator surface is one coherent layer (DESIGN.md §3):
+//!
+//! - [`engine`] — the single [`PprEngine`] trait every backend implements
+//!   (native bit-accurate, PJRT artifacts, CPU baseline), with
+//!   variable-lane batches so timeout-flushed partial batches run as-is;
+//! - [`score_block`] — [`ScoreBlock`], the reusable flat output buffer
+//!   with zero-copy lane views and in-place top-N extraction;
+//! - [`builder`] — [`EngineBuilder`], the one factory (`EngineKind` ×
+//!   `RunConfig`) that the CLI, bench harness, examples and tests all
+//!   construct engines through;
+//! - [`request`] — typed queries/responses with latency accounting and
+//!   optional per-request deadlines;
 //! - [`batcher`] — the dynamic batcher: fill the accelerator's κ lanes or
-//!   flush on timeout (the host-side half of the paper's batching design).
-//! - [`engine`] — the accelerator abstraction: the bit-accurate native
-//!   engine (paper-scale experiments) and the PJRT engine running the AOT
-//!   artifacts (the three-layer serving path).
-//! - [`server`] — worker threads, submission API, graceful shutdown.
+//!   flush on timeout (the host-side half of the paper's batching design);
+//! - [`server`] — worker threads, the non-blocking [`Ticket`] submission
+//!   API, graceful shutdown;
 //! - [`stats`] — latency percentiles and throughput counters.
 //!
 //! The vendored crate set has no tokio; the coordinator is built on
@@ -18,13 +27,19 @@
 //! compute-bound accelerator front-end (one in-flight batch per engine).
 
 pub mod batcher;
+pub mod builder;
 pub mod engine;
 pub mod request;
+pub mod score_block;
 pub mod server;
 pub mod stats;
 
 pub use batcher::DynamicBatcher;
-pub use engine::{EngineKind, NativeEngine, PprEngine};
+pub use builder::{EngineBuilder, EngineKind};
+pub use engine::{
+    CpuBaselineEngine, NativeEngine, PjrtEngineAdapter, PprEngine, ThreadBoundEngine,
+};
 pub use request::{PprRequest, PprResponse, RankedVertex};
-pub use server::{Server, ServerConfig};
+pub use score_block::ScoreBlock;
+pub use server::{Server, ServerConfig, Ticket};
 pub use stats::ServerStats;

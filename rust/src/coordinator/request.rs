@@ -12,14 +12,28 @@ pub struct PprRequest {
     pub vertex: VertexId,
     /// How many top-ranked vertices to return.
     pub top_n: usize,
+    /// Optional completion deadline; requests that expire in the queue are
+    /// failed fast instead of occupying an accelerator lane.
+    pub deadline: Option<Instant>,
     /// Submission timestamp (set by the server on enqueue).
     pub enqueued_at: Instant,
 }
 
 impl PprRequest {
-    /// Build a request (enqueue time is stamped now).
+    /// Build a request (enqueue time is stamped now, no deadline).
     pub fn new(id: u64, vertex: VertexId, top_n: usize) -> Self {
-        Self { id, vertex, top_n, enqueued_at: Instant::now() }
+        Self { id, vertex, top_n, deadline: None, enqueued_at: Instant::now() }
+    }
+
+    /// Attach a completion deadline.
+    pub fn with_deadline(mut self, deadline: Option<Instant>) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Whether the deadline has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
     }
 }
 
@@ -49,7 +63,11 @@ pub struct PprResponse {
     pub total_time: Duration,
 }
 
-/// Extract the top-N ranking from a dense lane of scores.
+/// Extract the top-N ranking from a dense lane of scores: descending
+/// score, ties toward the lower vertex id, NaN never outranking a number.
+/// `top_n` is clamped to the lane length; `top_n == 0` yields an empty
+/// ranking. (Serving-path extraction goes through
+/// [`super::score_block::ScoreBlock::top_n`], which shares this kernel.)
 pub fn rank_top_n(scores: &[f64], top_n: usize) -> Vec<RankedVertex> {
     crate::metrics::top_n_indices_f64(scores, top_n)
         .into_iter()
@@ -70,8 +88,43 @@ mod tests {
     }
 
     #[test]
+    fn rank_top_n_breaks_ties_toward_lower_id() {
+        let scores = [0.5, 0.9, 0.5, 0.9];
+        let r: Vec<u32> = rank_top_n(&scores, 4).iter().map(|x| x.vertex).collect();
+        assert_eq!(r, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn rank_top_n_demotes_nan() {
+        let scores = [f64::NAN, 0.4, 0.9, f64::NAN];
+        let r = rank_top_n(&scores, 3);
+        assert_eq!(r[0].vertex, 2);
+        assert_eq!(r[1].vertex, 1);
+        assert!(r[2].score.is_nan(), "NaN fills the tail, never the head");
+    }
+
+    #[test]
+    fn rank_top_n_clamps_and_zero() {
+        let scores = [0.3, 0.1];
+        assert_eq!(rank_top_n(&scores, 10).len(), 2, "top_n > |V| clamps");
+        assert!(rank_top_n(&scores, 0).is_empty());
+        assert!(rank_top_n(&[], 5).is_empty(), "empty lane yields empty ranking");
+    }
+
+    #[test]
     fn request_stamps_time() {
         let r = PprRequest::new(1, 2, 10);
         assert!(r.enqueued_at.elapsed() < Duration::from_secs(1));
+        assert!(r.deadline.is_none());
+    }
+
+    #[test]
+    fn request_deadline_expiry() {
+        let now = Instant::now();
+        let r = PprRequest::new(1, 2, 10).with_deadline(Some(now + Duration::from_secs(60)));
+        assert!(!r.expired(now));
+        assert!(r.expired(now + Duration::from_secs(61)));
+        assert!(r.expired(now + Duration::from_secs(60)), "boundary counts as expired");
+        assert!(!PprRequest::new(1, 2, 10).expired(now + Duration::from_secs(3600)));
     }
 }

@@ -1,0 +1,251 @@
+//! [`ScoreBlock`] — the reusable output buffer of the engine API.
+//!
+//! One batch produces up to κ dense score vectors (one per lane). The seed
+//! design allocated a fresh `Vec<Vec<f64>>` per batch; at serving rates that
+//! host-side churn is exactly the overhead the paper's §4.2 host/accelerator
+//! split warns about. A `ScoreBlock` is a single flat lane-major `f64`
+//! buffer that the caller allocates once and every [`run_batch`] call
+//! reshapes in place — no steady-state allocation.
+//!
+//! Ownership contract (DESIGN.md §3):
+//!
+//! - the **caller** owns the block and reuses it across batches;
+//! - the **engine** shapes it via [`ScoreBlock::reset`] to exactly the
+//!   batch's lane count (partial batches are first-class: a 3-request batch
+//!   on a κ=8 engine yields a 3-lane block), fills every lane, and records
+//!   the iteration count;
+//! - lanes are read back through zero-copy [`ScoreBlock::lane`] views, and
+//!   top-N rankings are extracted without materializing a sorted copy via
+//!   [`ScoreBlock::top_n`].
+//!
+//! [`run_batch`]: super::engine::PprEngine::run_batch
+
+use super::request::RankedVertex;
+use crate::graph::VertexId;
+
+/// A reusable block of dense PPR scores: `lanes × num_vertices`, lane-major
+/// (`scores[lane * num_vertices + vertex]`).
+#[derive(Debug, Clone, Default)]
+pub struct ScoreBlock {
+    lanes: usize,
+    num_vertices: usize,
+    scores: Vec<f64>,
+    iterations: usize,
+}
+
+impl ScoreBlock {
+    /// An empty block; the first [`reset`](Self::reset) shapes it.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A block pre-sized for `lanes` lanes over `num_vertices` vertices
+    /// (avoids the one growth allocation of a fresh block's first batch).
+    pub fn with_capacity(lanes: usize, num_vertices: usize) -> Self {
+        let mut block = Self::new();
+        block.scores.reserve(lanes * num_vertices);
+        block
+    }
+
+    /// Reshape for a new batch: `lanes` lanes of `num_vertices` scores,
+    /// zero-filled, iteration count cleared. Reuses the existing allocation
+    /// whenever it is large enough.
+    pub fn reset(&mut self, lanes: usize, num_vertices: usize) {
+        self.lanes = lanes;
+        self.num_vertices = num_vertices;
+        self.scores.clear();
+        self.scores.resize(lanes * num_vertices, 0.0);
+        self.iterations = 0;
+    }
+
+    /// Lanes held by the last batch.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Vertices per lane.
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    /// Iterations the producing engine executed for the last batch.
+    pub fn iterations(&self) -> usize {
+        self.iterations
+    }
+
+    /// Record the iteration count (engine side).
+    pub fn set_iterations(&mut self, iterations: usize) {
+        self.iterations = iterations;
+    }
+
+    /// Zero-copy view of lane `k`'s dense scores.
+    ///
+    /// # Panics
+    /// If `k >= self.lanes()`.
+    pub fn lane(&self, k: usize) -> &[f64] {
+        assert!(k < self.lanes, "lane {k} out of range ({} lanes)", self.lanes);
+        &self.scores[k * self.num_vertices..(k + 1) * self.num_vertices]
+    }
+
+    /// Mutable view of lane `k` (engine side).
+    ///
+    /// # Panics
+    /// If `k >= self.lanes()`.
+    pub fn lane_mut(&mut self, k: usize) -> &mut [f64] {
+        assert!(k < self.lanes, "lane {k} out of range ({} lanes)", self.lanes);
+        &mut self.scores[k * self.num_vertices..(k + 1) * self.num_vertices]
+    }
+
+    /// The whole block as one flat lane-major slice.
+    pub fn as_flat(&self) -> &[f64] {
+        &self.scores
+    }
+
+    /// Reshape to `lanes × num_vertices` and fill from a **vertex-major**
+    /// buffer (`src[v * stride + lane]`, `stride >= lanes`), converting
+    /// each word with `convert` — the one transpose/dequantize kernel
+    /// every engine backend shares. `stride` exceeds `lanes` when the
+    /// producer padded extra lanes (the PJRT artifacts' static κ).
+    pub fn fill_vertex_major<W: Copy>(
+        &mut self,
+        lanes: usize,
+        num_vertices: usize,
+        stride: usize,
+        src: &[W],
+        mut convert: impl FnMut(W) -> f64,
+    ) {
+        assert!(stride >= lanes, "stride {stride} < lanes {lanes}");
+        assert!(src.len() >= num_vertices * stride, "source buffer too short");
+        self.reset(lanes, num_vertices);
+        for lane in 0..lanes {
+            let dst = &mut self.scores[lane * num_vertices..(lane + 1) * num_vertices];
+            for (v, slot) in dst.iter_mut().enumerate() {
+                *slot = convert(src[v * stride + lane]);
+            }
+        }
+    }
+
+    /// Extract the top-`n` ranking of lane `k` without copying the lane:
+    /// descending score, ties toward the lower vertex id, NaN ranked last.
+    /// `n` is clamped to `num_vertices`; `n == 0` yields an empty ranking.
+    pub fn top_n(&self, k: usize, n: usize) -> Vec<RankedVertex> {
+        let lane = self.lane(k);
+        crate::metrics::top_n_indices_f64(lane, n)
+            .into_iter()
+            .map(|v| RankedVertex { vertex: v as VertexId, score: lane[v] })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(lanes: usize, nv: usize) -> ScoreBlock {
+        let mut b = ScoreBlock::new();
+        b.reset(lanes, nv);
+        for k in 0..lanes {
+            for v in 0..nv {
+                b.lane_mut(k)[v] = (k * nv + v) as f64;
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn lane_views_are_disjoint_and_ordered() {
+        let b = filled(3, 4);
+        assert_eq!(b.lanes(), 3);
+        assert_eq!(b.num_vertices(), 4);
+        assert_eq!(b.lane(0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(b.lane(2), &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(b.as_flat().len(), 12);
+    }
+
+    #[test]
+    fn reset_reuses_and_reshapes() {
+        let mut b = filled(4, 8);
+        let cap = b.scores.capacity();
+        b.reset(2, 8); // shrink: same allocation, stale data zeroed
+        assert_eq!(b.lanes(), 2);
+        assert_eq!(b.scores.capacity(), cap);
+        assert!(b.lane(1).iter().all(|&x| x == 0.0));
+        assert_eq!(b.iterations(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "lane 2 out of range")]
+    fn lane_out_of_range_panics() {
+        let b = filled(2, 4);
+        let _ = b.lane(2);
+    }
+
+    #[test]
+    fn top_n_orders_descending() {
+        let mut b = ScoreBlock::new();
+        b.reset(1, 4);
+        b.lane_mut(0).copy_from_slice(&[0.1, 0.9, 0.5, 0.3]);
+        let top = b.top_n(0, 2);
+        assert_eq!(top[0], RankedVertex { vertex: 1, score: 0.9 });
+        assert_eq!(top[1], RankedVertex { vertex: 2, score: 0.5 });
+    }
+
+    #[test]
+    fn top_n_ties_break_toward_lower_id() {
+        let mut b = ScoreBlock::new();
+        b.reset(1, 5);
+        b.lane_mut(0).copy_from_slice(&[0.5, 0.9, 0.5, 0.9, 0.1]);
+        let top: Vec<u32> = b.top_n(0, 4).iter().map(|r| r.vertex).collect();
+        assert_eq!(top, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn top_n_handles_nan_lanes() {
+        let mut b = ScoreBlock::new();
+        b.reset(1, 4);
+        b.lane_mut(0).copy_from_slice(&[f64::NAN, 0.2, f64::NAN, 0.7]);
+        let top = b.top_n(0, 4);
+        // finite scores first, NaN demoted to the tail
+        assert_eq!(top[0].vertex, 3);
+        assert_eq!(top[1].vertex, 1);
+        assert!(top[2].score.is_nan() && top[3].score.is_nan());
+    }
+
+    #[test]
+    fn top_n_clamps_and_zero() {
+        let b = filled(1, 3);
+        assert_eq!(b.top_n(0, 10).len(), 3, "n > |V| clamps to |V|");
+        assert!(b.top_n(0, 0).is_empty(), "n == 0 yields empty ranking");
+    }
+
+    #[test]
+    fn fill_vertex_major_transposes() {
+        // vertex-major 3 vertices × 2 lanes: [v0l0, v0l1, v1l0, v1l1, ...]
+        let src = [10u32, 20, 11, 21, 12, 22];
+        let mut b = ScoreBlock::new();
+        b.fill_vertex_major(2, 3, 2, &src, |w| w as f64);
+        assert_eq!(b.lane(0), &[10.0, 11.0, 12.0]);
+        assert_eq!(b.lane(1), &[20.0, 21.0, 22.0]);
+    }
+
+    #[test]
+    fn fill_vertex_major_skips_padded_lanes() {
+        // stride 4 (artifact κ) but only 2 real lanes requested
+        let src: Vec<i64> = (0..3 * 4).collect();
+        let mut b = ScoreBlock::new();
+        b.fill_vertex_major(2, 3, 4, &src, |w| w as f64);
+        assert_eq!(b.lanes(), 2);
+        assert_eq!(b.lane(0), &[0.0, 4.0, 8.0]);
+        assert_eq!(b.lane(1), &[1.0, 5.0, 9.0]);
+    }
+
+    #[test]
+    fn iterations_roundtrip() {
+        let mut b = ScoreBlock::new();
+        b.reset(1, 1);
+        b.set_iterations(7);
+        assert_eq!(b.iterations(), 7);
+        b.reset(1, 1);
+        assert_eq!(b.iterations(), 0, "reset clears iterations");
+    }
+}

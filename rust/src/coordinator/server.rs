@@ -1,17 +1,25 @@
-//! The serving front-end: a submission API feeding the dynamic batcher,
-//! worker threads driving accelerator engines, per-request response
-//! channels, and graceful shutdown.
+//! The serving front-end: a ticketed submission API feeding the dynamic
+//! batcher, worker threads driving accelerator engines, per-request
+//! response channels, and graceful shutdown.
 //!
 //! Topology mirrors the paper's host-accelerator model (§4.2): the host
 //! batches incoming queries; each worker owns one engine (one "board")
-//! and executes κ-lane batches; results stream back per request.
+//! and executes variable-lane batches — timeout-flushed partial batches
+//! run as-is, costing only the lanes they carry. Each worker reuses one
+//! [`ScoreBlock`] across batches, so the steady-state serving path
+//! allocates no score buffers.
+//!
+//! [`Server::submit`] never blocks: it returns a [`Ticket`] immediately,
+//! and the caller chooses blocking [`Ticket::wait`] or non-blocking
+//! [`Ticket::poll`]. Tickets may carry a per-request deadline; requests
+//! that expire in the queue are failed fast without burning a lane.
 
 use super::batcher::DynamicBatcher;
 use super::engine::PprEngine;
-use super::request::{rank_top_n, PprRequest, PprResponse};
+use super::request::{PprRequest, PprResponse};
+use super::score_block::ScoreBlock;
 use super::stats::ServerStats;
 use crate::graph::VertexId;
-use anyhow::Result;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -21,7 +29,7 @@ use std::time::{Duration, Instant};
 pub struct ServerConfig {
     /// Batching flush timeout.
     pub batch_timeout: Duration,
-    /// Top-N returned per request.
+    /// Top-N returned when a submission asks for `top_n == 0`.
     pub default_top_n: usize,
 }
 
@@ -31,7 +39,77 @@ impl Default for ServerConfig {
     }
 }
 
+impl ServerConfig {
+    /// Derive the server knobs from a run configuration.
+    pub fn from_run(cfg: &crate::config::RunConfig) -> Self {
+        Self {
+            batch_timeout: Duration::from_millis(cfg.batch_timeout_ms),
+            default_top_n: cfg.top_n,
+        }
+    }
+}
+
 type ResponseSender = mpsc::Sender<Result<PprResponse, String>>;
+
+/// Handle to one in-flight request, returned by [`Server::submit`].
+///
+/// Dropping a ticket abandons the request: it still executes (its lane is
+/// already scheduled) but the response is discarded.
+#[derive(Debug)]
+pub struct Ticket {
+    id: u64,
+    vertex: VertexId,
+    deadline: Option<Instant>,
+    rx: mpsc::Receiver<Result<PprResponse, String>>,
+}
+
+impl Ticket {
+    /// Server-assigned request id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The personalization vertex this ticket tracks.
+    pub fn vertex(&self) -> VertexId {
+        self.vertex
+    }
+
+    /// The absolute deadline, if one was requested.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// Block until the response arrives. With a deadline set, waits at
+    /// most until the deadline and then reports it exceeded.
+    pub fn wait(self) -> Result<PprResponse, String> {
+        match self.deadline {
+            None => self.rx.recv().map_err(|_| "response channel closed".to_string())?,
+            Some(deadline) => {
+                let budget = deadline.saturating_duration_since(Instant::now());
+                match self.rx.recv_timeout(budget) {
+                    Ok(resp) => resp,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        Err("deadline exceeded waiting for response".to_string())
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        Err("response channel closed".to_string())
+                    }
+                }
+            }
+        }
+    }
+
+    /// Non-blocking check: `None` while the request is still in flight.
+    pub fn poll(&self) -> Option<Result<PprResponse, String>> {
+        match self.rx.try_recv() {
+            Ok(resp) => Some(resp),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err("response channel closed".to_string()))
+            }
+        }
+    }
+}
 
 /// A running PPR serving instance.
 pub struct Server {
@@ -41,16 +119,20 @@ pub struct Server {
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
     num_vertices: usize,
+    default_top_n: usize,
 }
 
 impl Server {
     /// Start a server over one engine per worker. All engines must share
-    /// κ and vertex count.
-    pub fn start(engines: Vec<Box<dyn PprEngine>>, cfg: ServerConfig) -> Self {
+    /// κ and vertex count. (Engine pools come from
+    /// [`super::builder::EngineBuilder::build_pool`].)
+    pub fn start(engines: Vec<Box<dyn PprEngine + Send>>, cfg: ServerConfig) -> Self {
         assert!(!engines.is_empty(), "need at least one engine");
-        let kappa = engines[0].kappa();
+        let kappa = engines[0].max_kappa();
         let num_vertices = engines[0].num_vertices();
-        assert!(engines.iter().all(|e| e.kappa() == kappa && e.num_vertices() == num_vertices));
+        assert!(engines
+            .iter()
+            .all(|e| e.max_kappa() == kappa && e.num_vertices() == num_vertices));
 
         let batcher = Arc::new(DynamicBatcher::new(kappa, cfg.batch_timeout));
         let pending: Arc<Mutex<std::collections::HashMap<u64, ResponseSender>>> =
@@ -67,8 +149,11 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("ppr-worker-{widx}"))
                     .spawn(move || {
+                        // one reusable score block per worker: zero
+                        // steady-state allocation on the serving path
+                        let mut block = ScoreBlock::with_capacity(kappa, num_vertices);
                         while let Some(batch) = batcher.next_batch() {
-                            Self::serve_batch(&mut *engine, &batch, &pending, &stats);
+                            Self::serve_batch(&mut *engine, &mut block, batch, &pending, &stats);
                         }
                     })
                     .expect("spawn worker")
@@ -82,28 +167,49 @@ impl Server {
             workers,
             next_id: std::sync::atomic::AtomicU64::new(1),
             num_vertices,
+            default_top_n: cfg.default_top_n,
+        }
+    }
+
+    fn respond(
+        pending: &Mutex<std::collections::HashMap<u64, ResponseSender>>,
+        id: u64,
+        resp: Result<PprResponse, String>,
+    ) {
+        if let Some(tx) = pending.lock().unwrap().remove(&id) {
+            let _ = tx.send(resp);
         }
     }
 
     fn serve_batch(
         engine: &mut dyn PprEngine,
-        batch: &[PprRequest],
+        block: &mut ScoreBlock,
+        batch: Vec<PprRequest>,
         pending: &Mutex<std::collections::HashMap<u64, ResponseSender>>,
         stats: &ServerStats,
     ) {
-        let kappa = engine.kappa();
         let batch_start = Instant::now();
-        // fill unused lanes by repeating the last request (hardware always
-        // runs κ lanes — Alg. 1)
-        let mut lanes: Vec<VertexId> = batch.iter().map(|r| r.vertex).collect();
-        while lanes.len() < kappa {
-            lanes.push(*lanes.last().unwrap());
+        // fail expired requests fast instead of burning a lane on them
+        let mut live = Vec::with_capacity(batch.len());
+        for req in batch {
+            if req.expired(batch_start) {
+                stats.record_deadline_miss();
+                Self::respond(pending, req.id, Err("deadline exceeded in queue".to_string()));
+            } else {
+                live.push(req);
+            }
         }
-        stats.record_batch(batch.len());
-        match engine.run_batch(&lanes) {
-            Ok((scores, iterations)) => {
-                for (lane, req) in batch.iter().enumerate() {
-                    let ranking = rank_top_n(&scores[lane], req.top_n);
+        if live.is_empty() {
+            return;
+        }
+
+        // variable-lane batch: exactly the requests in hand, no padding
+        let lanes: Vec<VertexId> = live.iter().map(|r| r.vertex).collect();
+        stats.record_batch(live.len());
+        match engine.run_batch(&lanes, block) {
+            Ok(()) => {
+                for (lane, req) in live.iter().enumerate() {
+                    let ranking = block.top_n(lane, req.top_n);
                     let queue_time = batch_start.duration_since(req.enqueued_at);
                     let total_time = req.enqueued_at.elapsed();
                     stats.record_request(queue_time, total_time);
@@ -111,49 +217,61 @@ impl Server {
                         id: req.id,
                         vertex: req.vertex,
                         ranking,
-                        iterations,
+                        iterations: block.iterations(),
                         queue_time,
                         total_time,
                     };
-                    if let Some(tx) = pending.lock().unwrap().remove(&req.id) {
-                        let _ = tx.send(Ok(resp));
-                    }
+                    Self::respond(pending, req.id, Ok(resp));
                 }
             }
             Err(e) => {
-                for req in batch {
+                for req in &live {
                     stats.record_error();
-                    if let Some(tx) = pending.lock().unwrap().remove(&req.id) {
-                        let _ = tx.send(Err(format!("engine error: {e}")));
-                    }
+                    Self::respond(pending, req.id, Err(format!("engine error: {e:#}")));
                 }
             }
         }
     }
 
-    /// Submit a query; returns a receiver for the response.
-    pub fn submit(
+    /// Submit a query; returns immediately with a [`Ticket`].
+    pub fn submit(&self, vertex: VertexId, top_n: usize) -> Ticket {
+        self.submit_with(vertex, top_n, None)
+    }
+
+    /// Submit with an optional completion deadline (relative to now). The
+    /// deadline bounds both queue time and [`Ticket::wait`]; `top_n == 0`
+    /// falls back to the server's configured default.
+    pub fn submit_with(
         &self,
         vertex: VertexId,
         top_n: usize,
-    ) -> mpsc::Receiver<Result<PprResponse, String>> {
+        timeout: Option<Duration>,
+    ) -> Ticket {
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let top_n = if top_n == 0 { self.default_top_n } else { top_n };
         let (tx, rx) = mpsc::channel();
-        self.pending.lock().unwrap().insert(id, tx);
-        let accepted = self.batcher.submit(PprRequest::new(id, vertex, top_n));
-        if !accepted {
-            if let Some(tx) = self.pending.lock().unwrap().remove(&id) {
-                let _ = tx.send(Err("server shutting down".to_string()));
-            }
+        let ticket = Ticket { id, vertex, deadline, rx };
+
+        if vertex as usize >= self.num_vertices {
+            let _ = tx.send(Err(format!(
+                "vertex {vertex} out of range (|V|={})",
+                self.num_vertices
+            )));
+            return ticket;
         }
-        rx
+
+        self.pending.lock().unwrap().insert(id, tx);
+        let req = PprRequest::new(id, vertex, top_n).with_deadline(deadline);
+        if !self.batcher.submit(req) {
+            Self::respond(&self.pending, id, Err("server shutting down".to_string()));
+        }
+        ticket
     }
 
     /// Submit and block for the response.
     pub fn query(&self, vertex: VertexId, top_n: usize) -> Result<PprResponse, String> {
-        self.submit(vertex, top_n)
-            .recv()
-            .map_err(|_| "response channel closed".to_string())?
+        self.submit(vertex, top_n).wait()
     }
 
     /// Current statistics.
@@ -188,23 +306,19 @@ impl Drop for Server {
 mod tests {
     use super::*;
     use crate::config::RunConfig;
-    use crate::coordinator::engine::NativeEngine;
+    use crate::coordinator::builder::EngineBuilder;
     use crate::fixed::Precision;
-    use crate::ppr::PreparedGraph;
 
     fn start_server(workers: usize, kappa: usize) -> Server {
         let g = crate::graph::generators::watts_strogatz(256, 8, 0.2, 42);
-        let pg = Arc::new(PreparedGraph::new(&g, 8));
         let cfg = RunConfig {
             precision: Precision::Fixed(26),
             kappa,
             iterations: 30,
+            batch_timeout_ms: 2,
             ..Default::default()
         };
-        let engines: Vec<Box<dyn PprEngine>> = (0..workers)
-            .map(|_| Box::new(NativeEngine::new(pg.clone(), cfg.clone())) as Box<dyn PprEngine>)
-            .collect();
-        Server::start(engines, ServerConfig { batch_timeout: Duration::from_millis(2), ..Default::default() })
+        EngineBuilder::native().config(cfg).serve(&g, workers).expect("server starts")
     }
 
     #[test]
@@ -234,6 +348,56 @@ mod tests {
         assert_eq!(snap.requests, 20);
         assert!(snap.batches >= 3, "κ=4 → at least 5 batches expected, got {}", snap.batches);
         assert!(snap.mean_batch_fill > 1.0);
+    }
+
+    #[test]
+    fn ticket_poll_transitions_to_some() {
+        let server = start_server(1, 2);
+        let ticket = server.submit(3, 4);
+        assert_eq!(ticket.vertex(), 3);
+        assert!(ticket.id() > 0);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if let Some(resp) = ticket.poll() {
+                let resp = resp.unwrap();
+                assert_eq!(resp.vertex, 3);
+                break;
+            }
+            assert!(Instant::now() < deadline, "response never arrived");
+            std::thread::yield_now();
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn zero_top_n_uses_server_default() {
+        let server = start_server(1, 2);
+        let resp = server.query(5, 0).unwrap();
+        assert_eq!(resp.ranking.len(), 10, "ServerConfig::default_top_n applies");
+        server.shutdown();
+    }
+
+    #[test]
+    fn out_of_range_vertex_fails_without_engine_roundtrip() {
+        let server = start_server(1, 2);
+        let err = server.query(100_000, 3).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        assert_eq!(server.stats().snapshot().requests, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_fails_fast() {
+        let server = start_server(1, 8);
+        // a zero budget is already expired when the worker picks it up
+        let err = server.submit_with(1, 3, Some(Duration::ZERO)).wait().unwrap_err();
+        assert!(err.contains("deadline"), "{err}");
+        // a generous budget still completes
+        let resp = server.submit_with(1, 3, Some(Duration::from_secs(30))).wait().unwrap();
+        assert_eq!(resp.vertex, 1);
+        let snap = server.stats().snapshot();
+        assert_eq!(snap.deadline_misses, 1);
+        server.shutdown();
     }
 
     #[test]

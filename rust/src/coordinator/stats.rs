@@ -16,6 +16,7 @@ pub struct ServerStats {
     batches: AtomicU64,
     batch_fill_sum: AtomicU64,
     errors: AtomicU64,
+    deadline_misses: AtomicU64,
     latency: Mutex<Histogram>,
     queue: Mutex<Histogram>,
 }
@@ -71,6 +72,8 @@ pub struct StatsSnapshot {
     pub mean_batch_fill: f64,
     /// Failed requests.
     pub errors: u64,
+    /// Requests that expired in the queue (per-request deadlines).
+    pub deadline_misses: u64,
     /// Total-latency percentiles (milliseconds).
     pub latency_p50_ms: f64,
     /// p95 latency (ms).
@@ -105,6 +108,11 @@ impl ServerStats {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a request dropped because its deadline passed in the queue.
+    pub fn record_deadline_miss(&self) {
+        self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Snapshot all counters.
     pub fn snapshot(&self) -> StatsSnapshot {
         let requests = self.requests.load(Ordering::Relaxed);
@@ -117,6 +125,7 @@ impl ServerStats {
             batches,
             mean_batch_fill: if batches > 0 { fill_sum as f64 / batches as f64 } else { 0.0 },
             errors: self.errors.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
             latency_p50_ms: lat.quantile_us(0.50) / 1e3,
             latency_p95_ms: lat.quantile_us(0.95) / 1e3,
             latency_p99_ms: lat.quantile_us(0.99) / 1e3,

@@ -14,8 +14,10 @@
 //!   and the benchmark harness that regenerates every table and figure of the
 //!   paper's evaluation.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` (repository root) for the system inventory, the
+//! dependency policy (§1), the AOT artifact flow (§2) and the serving
+//! engine API (§3); `bench_harness` regenerates the paper-vs-measured
+//! numbers.
 
 pub mod bench_harness;
 pub mod cli;

@@ -20,14 +20,26 @@ pub fn top_n_indices_u64(scores: &[u64], n: usize) -> Vec<usize> {
     top_n_by(scores.len(), n, |a, b| scores[a].cmp(&scores[b]))
 }
 
-/// Top-`n` indices of an `f64` score vector (NaN-free input expected).
+/// Top-`n` indices of an `f64` score vector. NaN scores never outrank
+/// finite ones (they sort to the tail of the ranking).
 pub fn top_n_indices_f64(scores: &[f64], n: usize) -> Vec<usize> {
-    top_n_by(scores.len(), n, |a, b| scores[a].partial_cmp(&scores[b]).unwrap())
+    top_n_by(scores.len(), n, |a, b| nan_last(scores[a], scores[b]))
 }
 
-/// Top-`n` indices of an `f32` score vector.
+/// Top-`n` indices of an `f32` score vector (NaN ranked last, as above).
 pub fn top_n_indices_f32(scores: &[f32], n: usize) -> Vec<usize> {
-    top_n_by(scores.len(), n, |a, b| scores[a].partial_cmp(&scores[b]).unwrap())
+    top_n_by(scores.len(), n, |a, b| nan_last(scores[a] as f64, scores[b] as f64))
+}
+
+/// Total order treating NaN as smaller than every number (so it lands at
+/// the tail of a descending ranking instead of panicking the comparator).
+fn nan_last(a: f64, b: f64) -> std::cmp::Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (false, false) => a.partial_cmp(&b).expect("both finite-or-inf"),
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Less,
+        (false, true) => std::cmp::Ordering::Greater,
+    }
 }
 
 fn top_n_by<F: Fn(usize, usize) -> std::cmp::Ordering>(len: usize, n: usize, cmp: F) -> Vec<usize> {

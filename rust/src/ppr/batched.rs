@@ -11,8 +11,11 @@ use std::sync::Arc;
 /// Result of one batched PPR run.
 #[derive(Debug, Clone)]
 pub struct PprOutput<W> {
-    /// Final scores, `num_vertices × κ`, vertex-major (`scores[v*κ + k]`).
+    /// Final scores, `num_vertices × lanes`, vertex-major
+    /// (`scores[v*lanes + k]`).
     pub scores: Vec<W>,
+    /// Lanes this run carried (≤ the engine's κ for partial batches).
+    pub lanes: usize,
     /// Iterations actually executed.
     pub iterations: usize,
     /// Per-iteration Euclidean norm of the update, averaged over lanes
@@ -31,7 +34,7 @@ impl<W: Copy> PprOutput<W> {
 pub struct BatchedPpr<D: Datapath> {
     /// Arithmetic datapath.
     pub datapath: D,
-    /// κ lanes per pass.
+    /// Maximum lanes per pass (a run may carry fewer).
     pub kappa: usize,
     graph: Arc<PreparedGraph>,
     vals: Vec<D::Word>,
@@ -57,12 +60,19 @@ impl<D: Datapath> BatchedPpr<D> {
         vals.iter().map(|&v| d.quantize(v)).collect()
     }
 
-    /// Run Alg. 1 for a batch of exactly κ personalization vertices.
+    /// Run Alg. 1 for a batch of 1..=κ personalization vertices. Partial
+    /// batches are first-class: compute scales with the lanes actually
+    /// carried, and each lane is bit-identical to the same lane of any
+    /// other batch shape (lanes never interact).
     pub fn run(&mut self, personalization: &[VertexId], cfg: &PprConfig) -> PprOutput<D::Word> {
-        assert_eq!(personalization.len(), self.kappa, "batch must fill all κ lanes");
+        let k = personalization.len();
+        assert!(
+            k >= 1 && k <= self.kappa,
+            "batch of {k} lanes outside 1..=κ ({})",
+            self.kappa
+        );
         let d = self.datapath.clone();
         let n = self.graph.num_vertices;
-        let k = self.kappa;
         let z = d.zero();
         let one = d.quantize(1.0);
 
@@ -115,18 +125,18 @@ impl<D: Datapath> BatchedPpr<D> {
             }
         }
 
-        PprOutput { scores: p1, iterations, update_norms }
+        PprOutput { scores: p1, lanes: k, iterations, update_norms }
     }
 
     /// Run a whole request list by splitting it into κ-batches; returns one
-    /// dense score vector per request (the host-facing result shape).
+    /// dense score vector per request (the host-facing result shape). The
+    /// trailing batch runs partial instead of padding with repeated lanes.
     pub fn run_requests(&mut self, requests: &[VertexId], cfg: &PprConfig) -> Vec<Vec<D::Word>> {
         let mut out = Vec::with_capacity(requests.len());
-        for batch in super::batch_requests(requests, self.kappa) {
-            let res = self.run(&batch, cfg);
-            let take = (requests.len() - out.len()).min(self.kappa);
-            for lane in 0..take {
-                out.push(res.lane(lane, self.kappa));
+        for batch in requests.chunks(self.kappa) {
+            let res = self.run(batch, cfg);
+            for lane in 0..batch.len() {
+                out.push(res.lane(lane, batch.len()));
             }
         }
         out
@@ -244,6 +254,22 @@ mod tests {
             let best = (0..64).max_by_key(|&v| o[v]).unwrap();
             assert_eq!(best, i, "request {i} should rank itself first");
         }
+    }
+
+    #[test]
+    fn partial_batch_lane_bit_identical_to_full() {
+        let g = crate::graph::generators::holme_kim(200, 4, 0.25, 9);
+        let pg = Arc::new(PreparedGraph::new(&g, 8));
+        let d = FixedPath::paper(24);
+        let mut engine = BatchedPpr::new(d, pg, 4, 0.85);
+        let cfg = PprConfig { max_iterations: 12, ..Default::default() };
+        let full = engine.run(&[5, 9, 33, 71], &cfg);
+        let partial = engine.run(&[5, 9], &cfg);
+        assert_eq!(partial.lanes, 2);
+        assert_eq!(full.lanes, 4);
+        // lanes never interact, so a 2-lane batch reproduces the same words
+        assert_eq!(partial.lane(0, 2), full.lane(0, 4));
+        assert_eq!(partial.lane(1, 2), full.lane(1, 4));
     }
 
     #[test]

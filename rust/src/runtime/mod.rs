@@ -2,7 +2,7 @@
 //! `python/compile/aot.py` and executes them on the CPU PJRT client via
 //! the `xla` crate — Python never runs on this path.
 //!
-//! Artifact flow (see /opt/xla-example/load_hlo and DESIGN.md §2):
+//! Artifact flow (see DESIGN.md §2 at the repository root):
 //! `manifest.txt` → [`manifest::Manifest`] → `HloModuleProto::from_text_file`
 //! → `client.compile` → [`PjrtPprEngine`] iterating the step executable
 //! with buffer feedback, convergence policy owned by the caller (L3).

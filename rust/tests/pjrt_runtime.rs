@@ -8,7 +8,7 @@
 //! `cargo test` stays green before `make artifacts`.
 
 use ppr_spmv::config::RunConfig;
-use ppr_spmv::coordinator::engine::{LocalPprEngine, PjrtEngineAdapter};
+use ppr_spmv::coordinator::{PjrtEngineAdapter, PprEngine, ScoreBlock};
 use ppr_spmv::fixed::Precision;
 use ppr_spmv::graph::Graph;
 use ppr_spmv::ppr::{PprConfig, PreparedGraph};
@@ -123,16 +123,23 @@ fn pjrt_engine_through_coordinator_adapter() {
         ..Default::default()
     };
     let mut adapter = PjrtEngineAdapter::new(engine, &cfg, nv);
+    assert_eq!(adapter.max_kappa(), spec.kappa);
     let pers: Vec<u32> = (0..spec.kappa as u32).collect();
-    let (lanes, iters) = adapter.run_batch(&pers).unwrap();
-    assert_eq!(iters, 4);
-    assert_eq!(lanes.len(), spec.kappa);
-    assert_eq!(lanes[0].len(), nv);
+    let mut block = ScoreBlock::new();
+    adapter.run_batch(&pers, &mut block).unwrap();
+    assert_eq!(block.iterations(), 4);
+    assert_eq!(block.lanes(), spec.kappa);
+    assert_eq!(block.num_vertices(), nv);
     // each lane ranks its own personalization vertex on top
     for (k, &pv) in pers.iter().enumerate() {
-        let best = ppr_spmv::metrics::top_n_indices_f64(&lanes[k], 1)[0];
-        assert_eq!(best, pv as usize, "lane {k}");
+        assert_eq!(block.top_n(k, 1)[0].vertex, pv, "lane {k}");
     }
+
+    // partial batches ride on the artifact's static κ via internal padding
+    adapter.run_batch(&pers[..2], &mut block).unwrap();
+    assert_eq!(block.lanes(), 2, "partial batch keeps its lane count");
+    assert_eq!(block.top_n(0, 1)[0].vertex, pers[0]);
+    assert_eq!(block.top_n(1, 1)[0].vertex, pers[1]);
 }
 
 #[test]

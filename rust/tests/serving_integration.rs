@@ -1,27 +1,27 @@
-//! Integration: the serving coordinator end-to-end over the native engine
-//! — batching behaviour under load, correctness of returned rankings
-//! against the f64 reference, stats accounting, multi-worker fan-out.
+//! Integration: the serving coordinator end-to-end over builder-constructed
+//! engines — batching behaviour under load, partial/timeout-flushed batches,
+//! per-request deadlines, correctness of returned rankings against the f64
+//! reference, stats accounting, multi-worker fan-out, cross-backend parity.
 
 use ppr_spmv::config::RunConfig;
-use ppr_spmv::coordinator::{NativeEngine, PprEngine, Server, ServerConfig};
+use ppr_spmv::coordinator::{EngineBuilder, EngineKind, Server};
 use ppr_spmv::fixed::Precision;
 use ppr_spmv::graph::CooMatrix;
-use ppr_spmv::ppr::{reference, PreparedGraph};
+use ppr_spmv::ppr::reference;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+fn run_config(kappa: usize, precision: Precision) -> RunConfig {
+    RunConfig { precision, kappa, iterations: 25, batch_timeout_ms: 3, ..Default::default() }
+}
 
 fn build(workers: usize, kappa: usize, precision: Precision) -> (Server, CooMatrix) {
     let g = ppr_spmv::graph::generators::holme_kim(512, 4, 0.3, 2026);
     let coo = CooMatrix::from_graph(&g);
-    let pg = Arc::new(PreparedGraph::new(&g, 8));
-    let cfg = RunConfig { precision, kappa, iterations: 25, ..Default::default() };
-    let engines: Vec<Box<dyn PprEngine>> = (0..workers)
-        .map(|_| Box::new(NativeEngine::new(pg.clone(), cfg.clone())) as Box<dyn PprEngine>)
-        .collect();
-    let server = Server::start(
-        engines,
-        ServerConfig { batch_timeout: Duration::from_millis(3), default_top_n: 10 },
-    );
+    let server = EngineBuilder::native()
+        .config(run_config(kappa, precision))
+        .serve(&g, workers)
+        .expect("server starts");
     (server, coo)
 }
 
@@ -68,6 +68,78 @@ fn heavy_concurrent_load_multi_worker() {
     assert!(snap.batches < 200, "batching should coalesce requests");
 }
 
+/// Regression for the partial-batch mismatch: the batcher flushes fewer
+/// than κ requests on timeout, and the engine must accept that batch
+/// as-is. A single request against a κ=8 server has to complete within
+/// (roughly) the flush timeout, as a 1-lane batch.
+#[test]
+fn single_request_completes_via_timeout_flush() {
+    let (server, _) = build(1, 8, Precision::Fixed(26));
+    let start = Instant::now();
+    let resp = server.query(42, 5).expect("lone request must not hang");
+    assert_eq!(resp.vertex, 42);
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "flush took {:?}",
+        start.elapsed()
+    );
+    let snap = server.stats().snapshot();
+    assert_eq!(snap.batches, 1);
+    assert!(
+        (snap.mean_batch_fill - 1.0).abs() < 1e-9,
+        "1-lane batch served without padding, got fill {}",
+        snap.mean_batch_fill
+    );
+    server.shutdown();
+}
+
+/// Mixed traffic: saturating waves (full κ batches) interleaved with lone
+/// stragglers (timeout-flushed partial batches). Every request must get a
+/// correct ranking either way.
+#[test]
+fn mixed_full_and_partial_batches() {
+    let (server, _) = build(2, 4, Precision::Fixed(26));
+    let mut tickets = Vec::new();
+    for round in 0..3 {
+        // a burst that fills batches...
+        for i in 0..8u32 {
+            let v = round * 100 + i;
+            tickets.push((v, server.submit(v, 3)));
+        }
+        // ...then a straggler that only a timeout flush can serve
+        std::thread::sleep(Duration::from_millis(12));
+        let lone = 450 + round;
+        tickets.push((lone, server.submit(lone, 3)));
+        std::thread::sleep(Duration::from_millis(12));
+    }
+    for (v, ticket) in tickets {
+        let resp = ticket.wait().expect("request served");
+        assert_eq!(resp.ranking[0].vertex, v, "vertex {v} ranks itself first");
+    }
+    let snap = server.stats().snapshot();
+    assert_eq!(snap.requests, 27);
+    assert_eq!(snap.errors, 0);
+    assert!(
+        snap.batches > 27 / 4,
+        "stragglers force partial batches: {} batches",
+        snap.batches
+    );
+    server.shutdown();
+}
+
+#[test]
+fn deadlines_bound_queue_time() {
+    let (server, _) = build(1, 4, Precision::Fixed(20));
+    // already-expired budget fails fast without engine work
+    let err = server.submit_with(5, 3, Some(Duration::ZERO)).wait().unwrap_err();
+    assert!(err.contains("deadline"), "{err}");
+    // generous budget succeeds
+    let resp = server.submit_with(5, 3, Some(Duration::from_secs(30))).wait().unwrap();
+    assert_eq!(resp.vertex, 5);
+    assert_eq!(server.stats().snapshot().deadline_misses, 1);
+    server.shutdown();
+}
+
 #[test]
 fn response_metadata_sane() {
     let (server, _) = build(1, 2, Precision::Float32);
@@ -92,4 +164,20 @@ fn per_precision_servers_rank_consistently() {
         assert_eq!(resp.ranking[0].vertex, 42, "{p}");
         server.shutdown();
     }
+}
+
+/// The same serving stack over the CPU-baseline backend: the registry is
+/// one line away from a different engine, and results stay consistent.
+#[test]
+fn cpu_baseline_backend_serves_through_same_api() {
+    let g = ppr_spmv::graph::generators::watts_strogatz(256, 8, 0.2, 7);
+    let server = EngineBuilder::new(EngineKind::CpuBaseline)
+        .config(run_config(2, Precision::Float32))
+        .serve(&g, 1)
+        .expect("cpu baseline server");
+    let resp = server.query(17, 5).unwrap();
+    assert_eq!(resp.vertex, 17);
+    assert_eq!(resp.ranking[0].vertex, 17);
+    assert_eq!(resp.ranking.len(), 5);
+    server.shutdown();
 }

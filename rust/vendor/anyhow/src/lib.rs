@@ -1,0 +1,236 @@
+//! Minimal in-tree stand-in for the `anyhow` crate.
+//!
+//! The build environment vendors no external crates (DESIGN.md §1), so this
+//! shim provides the small slice of anyhow's API the workspace uses:
+//!
+//! - [`Error`]: an opaque error with a message and a context chain;
+//! - [`Result`]: `Result<T, Error>` alias;
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! - the `anyhow!`, `bail!` and `ensure!` macros.
+//!
+//! Display mirrors anyhow: `{}` prints the outermost message, `{:#}` prints
+//! the whole chain separated by `": "`, and `{:?}` prints the message plus a
+//! `Caused by:` list. Dropping this shim for the real crate is a one-line
+//! change in `Cargo.toml`; no source edits are required.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error with a human-readable message and an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain from the outermost message to the root cause.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The innermost error message.
+    pub fn root_cause(&self) -> &Error {
+        let mut cur = self;
+        while let Some(s) = &cur.source {
+            cur = s;
+        }
+        cur
+    }
+}
+
+/// Iterator over an [`Error`]'s context chain.
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = &self.source;
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = &e.source;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = &self.source;
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = &e.source;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`: that keeps this blanket conversion coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut it = msgs.into_iter().rev();
+        let mut err = Error { msg: it.next().expect("at least one message"), source: None };
+        for msg in it {
+            err = Error { msg, source: Some(Box::new(err)) };
+        }
+        err
+    }
+}
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Error::from(io_err()).context("read config");
+        assert_eq!(format!("{e}"), "read config");
+        assert_eq!(format!("{e:#}"), "read config: no such file");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.chain().count(), 2);
+        assert_eq!(e.root_cause().to_string(), "no such file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+
+    #[test]
+    fn context_nests_on_anyhow_results() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+    }
+
+    #[test]
+    fn macros_compile_and_capture() {
+        let x = 3;
+        let e = anyhow!("value {x}");
+        assert_eq!(e.to_string(), "value 3");
+
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert!(f(true).is_ok());
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+    }
+}

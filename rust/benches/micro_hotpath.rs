@@ -132,7 +132,7 @@ fn rounding_ablation(coo: &CooMatrix, n: usize) {
         let cfg = PprConfig { max_iterations: 20, ..Default::default() };
         let s = bench(1, 3, || engine.run(&pers, &cfg));
         let out = engine.run(&pers, &cfg);
-        let mass: f64 = out.lane(0, 4).iter().map(|&w| fmt.to_f64(w)).sum();
+        let mass: f64 = out.lane(0).iter().map(|&w| fmt.to_f64(w)).sum();
         let note = if mass > 1.0 + 1e-9 {
             "mass inflation → instability risk"
         } else {

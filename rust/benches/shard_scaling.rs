@@ -1,0 +1,13 @@
+//! `cargo bench --bench shard_scaling [-- --full | --scale N]`
+//! Shard-scaling sweep: the sharded edge-sweep kernel at 1/2/4/8 shards ×
+//! the paper's fixed-point bit-widths, with throughput, speedup over the
+//! single-stream engine, padding overhead and the multi-CU model's cycle
+//! estimate. See `bench_harness::shard_scaling`.
+
+use ppr_spmv::bench_harness::{shard_scaling, ExpOptions};
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    println!("# shard scaling [{}]\n", opts.descriptor());
+    shard_scaling::run(&opts);
+}

@@ -1,0 +1,151 @@
+//! Shard-scaling sweep — the multi-CU claim of the HBM Top-K SpMV
+//! follow-up paper, measured on the software engine and cross-checked
+//! against the multi-CU cycle model.
+//!
+//! For each paper bit-width and shard count ∈ {1, 2, 4, 8}, the sweep
+//! times the sharded edge-sweep kernel ([`fast_spmv_sharded`]) over the
+//! HK graph's destination-partitioned streams and reports throughput,
+//! speedup over the single-stream engine, per-shard padding overhead, and
+//! the modelled multi-CU cycles per iteration. Destination partitions are
+//! nnz-balanced, so speedup should track the shard count until memory
+//! bandwidth (or the host's core count) saturates.
+
+use super::ExpOptions;
+use crate::fixed::Precision;
+use crate::fpga::pipeline::PipelineModel;
+use crate::fpga::FpgaConfig;
+use crate::graph::{CooMatrix, DatasetSpec};
+use crate::spmv::datapath::FixedPath;
+use crate::spmv::{fast_spmv_sharded, ShardedSchedule};
+use crate::util::report::Table;
+use crate::util::timing::bench;
+
+/// Shard counts swept (1 = the paper's single-stream design).
+pub const SHARD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// One measured point of the sweep.
+#[derive(Debug, Clone)]
+pub struct ShardPoint {
+    /// Bit-width of the fixed-point datapath.
+    pub bits: u32,
+    /// Shard count.
+    pub shards: usize,
+    /// Median kernel seconds.
+    pub seconds: f64,
+    /// Edge throughput (edges × lanes / s).
+    pub edges_per_second: f64,
+    /// Wall-clock speedup over the 1-shard run at the same width.
+    pub speedup: f64,
+    /// Padding overhead of the sharded schedule.
+    pub padding: f64,
+    /// Modelled multi-CU cycles per PPR iteration.
+    pub model_cycles: u64,
+}
+
+/// Run the sweep on one prepared COO matrix; `kappa` lanes per pass.
+pub fn sweep(coo: &CooMatrix, kappa: usize) -> Vec<ShardPoint> {
+    let n = coo.num_vertices;
+    let e = coo.num_edges();
+    // the schedules depend only on the shard count — build each once and
+    // share them across the bit-width sweep
+    let schedules: Vec<ShardedSchedule> = SHARD_SWEEP
+        .iter()
+        .map(|&shards| ShardedSchedule::build(coo, crate::PAPER_B, shards))
+        .collect();
+    let mut points = Vec::new();
+    for bits in [26u32, 24, 22, 20] {
+        let d = FixedPath::paper(bits);
+        let p: Vec<u64> =
+            (0..n * kappa).map(|i| d.fmt.quantize(1.0 / (1.0 + i as f64))).collect();
+        let mut out = vec![0u64; n * kappa];
+        let model =
+            PipelineModel::new(FpgaConfig::sized_for(Precision::Fixed(bits), n)).expect("fits");
+        let mut base_seconds = f64::NAN;
+        for (shards, sharded) in SHARD_SWEEP.iter().copied().zip(&schedules) {
+            let vals: Vec<Vec<u64>> =
+                sharded.shards.iter().map(|s| s.quantized_values(&d.fmt)).collect();
+            let s = bench(1, 5, || {
+                fast_spmv_sharded(&d, sharded, &vals, kappa, &p, &mut out);
+            });
+            if shards == 1 {
+                base_seconds = s.median;
+            }
+            points.push(ShardPoint {
+                bits,
+                shards,
+                seconds: s.median,
+                edges_per_second: e as f64 * kappa as f64 / s.median,
+                speedup: base_seconds / s.median,
+                padding: sharded.padding_overhead(),
+                model_cycles: model.cycles_per_iteration_sharded(sharded),
+            });
+        }
+    }
+    points
+}
+
+/// The full shard-scaling experiment: HK graph at the configured scale.
+pub fn run(opts: &ExpOptions) -> Table {
+    let spec = DatasetSpec::table1_suite(opts.scale)
+        .into_iter()
+        .find(|s| s.name == "HK-100k")
+        .expect("HK-100k in the Table 1 suite");
+    let ds = spec.build();
+    let coo = CooMatrix::from_graph(&ds.graph);
+    let kappa = crate::PAPER_KAPPA;
+    let mut t = Table::new(
+        &format!(
+            "Shard scaling — sharded edge sweep, |V|={} |E|={} κ={kappa} ({})",
+            ds.graph.num_vertices,
+            ds.graph.num_edges(),
+            opts.descriptor()
+        ),
+        &["width", "shards", "median ms", "Medge/s", "vs 1 shard", "pad %", "model cyc/iter"],
+    );
+    for pt in sweep(&coo, kappa) {
+        t.row(&[
+            format!("{}b", pt.bits),
+            format!("{}", pt.shards),
+            format!("{:.3}", pt.seconds * 1e3),
+            format!("{:.1}", pt.edges_per_second / 1e6),
+            format!("{:.2}x", pt.speedup),
+            format!("{:.2}%", pt.padding * 100.0),
+            format!("{}", pt.model_cycles),
+        ]);
+    }
+    t.emit(opts.csv_path("shard_scaling").as_deref());
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_reports_all_points() {
+        // tiny graph: correctness of the sweep bookkeeping, not timing
+        let g = crate::graph::generators::holme_kim(400, 4, 0.25, 21);
+        let coo = CooMatrix::from_graph(&g);
+        let pts = sweep(&coo, 2);
+        assert_eq!(pts.len(), 4 * SHARD_SWEEP.len());
+        for pt in &pts {
+            assert!(pt.seconds > 0.0);
+            assert!(pt.model_cycles > 0);
+            assert!((0.0..1.0).contains(&pt.padding));
+            if pt.shards == 1 {
+                assert!((pt.speedup - 1.0).abs() < 1e-12);
+            }
+        }
+        // the model never charges a multi-CU design more than 1 CU
+        for bits in [26u32, 24, 22, 20] {
+            let base = pts
+                .iter()
+                .find(|p| p.bits == bits && p.shards == 1)
+                .unwrap()
+                .model_cycles;
+            for pt in pts.iter().filter(|p| p.bits == bits) {
+                assert!(pt.model_cycles <= base, "width {bits} shards {}", pt.shards);
+            }
+        }
+    }
+}

@@ -63,7 +63,7 @@ impl Args {
 }
 
 /// Build a RunConfig from common CLI options (`--precision`, `--kappa`,
-/// `--iterations`, `--alpha`, `--config <file>`).
+/// `--iterations`, `--alpha`, `--shards`, `--config <file>`).
 pub fn run_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = match args.options.get("config") {
         Some(path) => RunConfig::load(std::path::Path::new(path))?,
@@ -80,6 +80,9 @@ pub fn run_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(a) = args.get::<f64>("alpha") {
         cfg.alpha = a;
+    }
+    if let Some(s) = args.get::<usize>("shards") {
+        cfg.num_shards = s;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -156,11 +159,12 @@ pub fn dispatch(args: Args) -> Result<()> {
 const USAGE: &str = "\
 ppr-spmv — reduced-precision streaming SpMV for Personalized PageRank
 USAGE:
-  ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|all>
+  ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|shards|all>
             [--full] [--scale N] [--requests N] [--iterations N] [--no-csv]
   ppr-spmv serve  [--graph NAME|--graph-file PATH] [--precision 26b]
-            [--engine native|pjrt|cpu] [--kappa 8] [--iterations 10]
-            [--workers N] [--demo-requests N] [--deadline-ms N]
+            [--engine native|pjrt|cpu] [--kappa 8] [--shards N]
+            [--iterations 10] [--workers N] [--demo-requests N]
+            [--deadline-ms N]
   ppr-spmv query  --vertex V [--graph NAME|--graph-file PATH] [--top 10]
             [--engine native|pjrt|cpu]
   ppr-spmv generate --graph NAME --out PATH [--scale N]
@@ -198,6 +202,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "energy" => {
             bh::energy::run(&opts);
         }
+        "shards" => {
+            bh::shard_scaling::run(&opts);
+        }
         "all" => {
             bh::table1_datasets::run(&opts);
             bh::table2_resources::run(&opts);
@@ -209,6 +216,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             bh::fig6_sparsity::run(&opts);
             bh::fig7_convergence::run(&opts);
             bh::energy::run(&opts);
+            bh::shard_scaling::run(&opts);
         }
         other => bail!("unknown experiment {other}"),
     }
@@ -369,10 +377,12 @@ mod tests {
 
     #[test]
     fn run_config_from_args() {
-        let a = args("serve --precision 20b --kappa 16");
+        let a = args("serve --precision 20b --kappa 16 --shards 4");
         let cfg = run_config(&a).unwrap();
         assert_eq!(cfg.precision, Precision::Fixed(20));
         assert_eq!(cfg.kappa, 16);
+        assert_eq!(cfg.num_shards, 4);
+        assert!(run_config(&args("serve --shards 0")).is_err());
     }
 
     #[test]

@@ -165,6 +165,10 @@ pub struct RunConfig {
     pub kappa: usize,
     /// Packet width B.
     pub b: usize,
+    /// Destination shards (parallel compute units) of the streaming
+    /// engine. `1` reproduces the single-stream engine exactly; the
+    /// default is the host's available parallelism.
+    pub num_shards: usize,
     /// Damping factor α.
     pub alpha: f64,
     /// PPR iterations.
@@ -179,12 +183,22 @@ pub struct RunConfig {
     pub artifacts_dir: String,
 }
 
+/// Default shard count: one worker per available hardware thread, capped
+/// at 32 to bound thread fan-out on very wide hosts. Small graphs are
+/// protected not here but by the engines' sequential fallbacks (see
+/// `spmv::shard::PARALLEL_WORK_PER_SHARD`), which skip thread spawns
+/// whenever the per-shard work would be dominated by spawn cost.
+pub fn default_num_shards() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(32)
+}
+
 impl Default for RunConfig {
     fn default() -> Self {
         Self {
             precision: Precision::Fixed(26),
             kappa: crate::PAPER_KAPPA,
             b: crate::PAPER_B,
+            num_shards: default_num_shards(),
             alpha: crate::PAPER_ALPHA,
             iterations: crate::PAPER_ITERATIONS,
             convergence_threshold: None,
@@ -209,6 +223,9 @@ impl RunConfig {
         }
         if let Some(v) = doc.get("engine", "b") {
             cfg.b = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("engine", "num_shards") {
+            cfg.num_shards = v.as_int()? as usize;
         }
         if let Some(v) = doc.get("engine", "alpha") {
             cfg.alpha = v.as_float()?;
@@ -247,6 +264,9 @@ impl RunConfig {
         }
         if self.b == 0 || !self.b.is_power_of_two() {
             bail!("b must be a power of two, got {}", self.b);
+        }
+        if self.num_shards == 0 || self.num_shards > 256 {
+            bail!("num_shards must be in 1..=256, got {}", self.num_shards);
         }
         if self.iterations == 0 {
             bail!("iterations must be positive");
@@ -288,11 +308,19 @@ mod tests {
 
     #[test]
     fn run_config_from_doc() {
-        let doc = ConfigDoc::parse("[engine]\nprecision = \"20b\"\nkappa = 16\n").unwrap();
-        let cfg = RunConfig::from_doc(&doc).unwrap();
+        let text = "[engine]\nprecision = \"20b\"\nkappa = 16\nnum_shards = 4\n";
+        let cfg = RunConfig::from_doc(&ConfigDoc::parse(text).unwrap()).unwrap();
         assert_eq!(cfg.precision, Precision::Fixed(20));
         assert_eq!(cfg.kappa, 16);
+        assert_eq!(cfg.num_shards, 4);
         assert_eq!(cfg.alpha, 0.85); // default preserved
+    }
+
+    #[test]
+    fn default_shards_positive_and_validated() {
+        let cfg = RunConfig::default();
+        assert!(cfg.num_shards >= 1);
+        cfg.validate().unwrap();
     }
 
     #[test]
@@ -305,6 +333,11 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = RunConfig::default();
         cfg.kappa = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.num_shards = 0;
+        assert!(cfg.validate().is_err());
+        cfg.num_shards = 300;
         assert!(cfg.validate().is_err());
     }
 

@@ -119,12 +119,27 @@ impl EngineBuilder {
                 let csr = Arc::new(CsrMatrix::from_graph(graph));
                 Ok(Box::new(CpuBaselineEngine::new(csr, self.cfg.clone())))
             }
-            _ => self.build_prepared(Arc::new(PreparedGraph::new(graph, self.cfg.b))),
+            _ => self.build_prepared(Arc::new(self.prepare(graph, 1))),
         }
     }
 
+    /// Graph preparation this builder performs: packet width comes from
+    /// the run configuration; the shard count applies only to the native
+    /// engine (the PJRT marshaller reads the single stream, so sharded
+    /// preparation would be wasted work and memory) and is divided among
+    /// the pool's workers so concurrent batches don't oversubscribe the
+    /// host (each worker fans out over its own engine's shards).
+    fn prepare(&self, graph: &Graph, workers: usize) -> PreparedGraph {
+        let shards = match self.kind {
+            EngineKind::Native => (self.cfg.num_shards / workers.max(1)).max(1),
+            _ => 1,
+        };
+        PreparedGraph::new_sharded(graph, self.cfg.b, shards)
+    }
+
     /// Build one engine over an already-prepared packet schedule (shared
-    /// across a pool; not applicable to the CSR-based CPU baseline).
+    /// across a pool; not applicable to the CSR-based CPU baseline). The
+    /// prepared graph's shard count applies, not the configuration's.
     pub fn build_prepared(&self, prepared: Arc<PreparedGraph>) -> Result<Box<dyn PprEngine + Send>> {
         self.cfg.validate()?;
         match self.kind {
@@ -157,7 +172,7 @@ impl EngineBuilder {
                     .collect())
             }
             _ => {
-                let prepared = Arc::new(PreparedGraph::new(graph, self.cfg.b));
+                let prepared = Arc::new(self.prepare(graph, workers));
                 (0..workers).map(|_| self.build_prepared(prepared.clone())).collect()
             }
         }
@@ -231,6 +246,17 @@ mod tests {
         let pool = EngineBuilder::native().config(cfg).build_pool(&graph(), 3).unwrap();
         assert_eq!(pool.len(), 3);
         assert!(pool.iter().all(|e| e.num_vertices() == 128));
+    }
+
+    #[test]
+    fn shard_count_flows_from_config() {
+        let cfg = RunConfig { kappa: 2, iterations: 5, num_shards: 3, ..Default::default() };
+        let mut e = EngineBuilder::native().config(cfg).build(&graph()).unwrap();
+        assert!(e.describe().contains("S=3"), "{}", e.describe());
+        // sharded engine still serves correct rankings
+        let mut block = ScoreBlock::new();
+        e.run_batch(&[7], &mut block).unwrap();
+        assert_eq!(block.top_n(0, 1)[0].vertex, 7);
     }
 
     #[test]

@@ -81,6 +81,9 @@ pub trait PprEngine {
 pub struct NativeEngine {
     inner: NativeInner,
     num_vertices: usize,
+    /// Shard count of the prepared graph actually bound (may differ from
+    /// the configuration's when built over a shared preparation).
+    num_shards: usize,
     cfg: RunConfig,
     ppr_cfg: PprConfig,
 }
@@ -99,6 +102,7 @@ impl NativeEngine {
             convergence_threshold: cfg.convergence_threshold,
         };
         let num_vertices = graph.num_vertices;
+        let num_shards = graph.num_shards();
         let inner = match cfg.precision {
             Precision::Fixed(w) => NativeInner::Fixed(BatchedPpr::new(
                 FixedPath::paper(w),
@@ -110,7 +114,7 @@ impl NativeEngine {
                 NativeInner::Float(BatchedPpr::new(FloatPath, graph, cfg.kappa, cfg.alpha))
             }
         };
-        Self { inner, num_vertices, cfg, ppr_cfg }
+        Self { inner, num_vertices, num_shards, cfg, ppr_cfg }
     }
 }
 
@@ -146,8 +150,8 @@ impl PprEngine for NativeEngine {
 
     fn describe(&self) -> String {
         format!(
-            "native[{} κ={} B={} iters={}]",
-            self.cfg.precision, self.cfg.kappa, self.cfg.b, self.cfg.iterations
+            "native[{} κ={} B={} S={} iters={}]",
+            self.cfg.precision, self.cfg.kappa, self.cfg.b, self.num_shards, self.cfg.iterations
         )
     }
 }

@@ -16,8 +16,15 @@
 //! claim: "updating P_t requires reading all the edges only once").
 //! Result transfer back over PCIe is charged per batch; the paper reports
 //! it negligible (<1%) and the model agrees.
+//!
+//! The **multi-CU** variant ([`PipelineModel::cycles_per_iteration_sharded`])
+//! models one compute unit per destination shard, each with its own memory
+//! channel — the scaling design of the HBM Top-K SpMV follow-up paper.
+//! Every sweep then costs the max over shards, with each shard's alignment
+//! padding charged to its own channel.
 
 use super::{FpgaConfig, SynthesisReport};
+use crate::spmv::ShardedSchedule;
 
 /// Dataflow pipeline fill/drain latency (cycles), one per sweep.
 const PIPELINE_DEPTH: u64 = 64;
@@ -78,28 +85,74 @@ impl PipelineModel {
         Ok(Self { synth: cfg.synthesize()? })
     }
 
+    /// The edge stream's initiation interval: II-limited by the three
+    /// DRAM bursts per packet for integer datapaths, and by the
+    /// FP-accumulator recurrence for the float design.
+    fn edge_ii(&self) -> u64 {
+        match self.synth.config.precision {
+            crate::fixed::Precision::Fixed(_) => BURSTS_PER_PACKET,
+            crate::fixed::Precision::Float32 => BURSTS_PER_PACKET.max(FLOAT_EDGE_II),
+        }
+    }
+
     /// Cycles for one PPR iteration of one batch.
     pub fn cycles_per_iteration(&self, w: &Workload) -> u64 {
         let b = self.synth.config.b as u64;
         let v = w.num_vertices as u64;
-        // the edge stream is II-limited: by the three DRAM bursts per
-        // packet for integer datapaths, and by the FP-accumulator
-        // recurrence for the float design
-        let edge_ii = match self.synth.config.precision {
-            crate::fixed::Precision::Fixed(_) => BURSTS_PER_PACKET,
-            crate::fixed::Precision::Float32 => BURSTS_PER_PACKET.max(FLOAT_EDGE_II),
-        };
-        let edge_sweep = w.num_packets as u64 * edge_ii + PIPELINE_DEPTH;
+        let edge_sweep = w.num_packets as u64 * self.edge_ii() + PIPELINE_DEPTH;
         let dangling_scan = v.div_ceil(P_SIZE_BITS) + PIPELINE_DEPTH;
         let update_sweep = v.div_ceil(b) + PIPELINE_DEPTH;
         edge_sweep + dangling_scan + update_sweep
     }
 
+    /// Cycles for one PPR iteration on a **multi-CU** design: one compute
+    /// unit per shard, each consuming its own destination partition
+    /// through its own memory channel (the scaling model of the HBM Top-K
+    /// SpMV follow-up paper). All CUs run concurrently, so every sweep is
+    /// limited by its *slowest* shard: the edge sweep by the longest
+    /// per-channel packet stream (each shard's alignment padding is
+    /// charged to its own channel), the dangling scan and update sweep by
+    /// the largest destination range. With one shard this is exactly
+    /// [`Self::cycles_per_iteration`] for that stream.
+    pub fn cycles_per_iteration_sharded(&self, sharded: &ShardedSchedule) -> u64 {
+        debug_assert_eq!(
+            sharded.b, self.synth.config.b,
+            "schedule built for a different packet width than the synthesized design"
+        );
+        let b = self.synth.config.b as u64;
+        let max_packets = sharded
+            .shards
+            .iter()
+            .map(|s| (s.num_slots() / sharded.b) as u64)
+            .max()
+            .unwrap_or(0);
+        let max_vertices = sharded
+            .shards
+            .iter()
+            .map(|s| s.num_dst_vertices() as u64)
+            .max()
+            .unwrap_or(0);
+        let edge_sweep = max_packets * self.edge_ii() + PIPELINE_DEPTH;
+        let dangling_scan = max_vertices.div_ceil(P_SIZE_BITS) + PIPELINE_DEPTH;
+        let update_sweep = max_vertices.div_ceil(b) + PIPELINE_DEPTH;
+        edge_sweep + dangling_scan + update_sweep
+    }
+
+    /// Estimate the full workload on a multi-CU design (`w.num_packets`
+    /// is ignored; the sharded schedule carries the per-channel streams).
+    pub fn estimate_sharded(&self, w: &Workload, sharded: &ShardedSchedule) -> WorkloadEstimate {
+        self.estimate_with_cycles(w, self.cycles_per_iteration_sharded(sharded))
+    }
+
     /// Estimate the full workload.
     pub fn estimate(&self, w: &Workload) -> WorkloadEstimate {
+        self.estimate_with_cycles(w, self.cycles_per_iteration(w))
+    }
+
+    /// Shared workload arithmetic: batching, total cycles, PCIe transfer.
+    fn estimate_with_cycles(&self, w: &Workload, cycles_per_iteration: u64) -> WorkloadEstimate {
         let kappa = self.synth.config.kappa;
         let batches = w.requests.div_ceil(kappa);
-        let cycles_per_iteration = self.cycles_per_iteration(w);
         let total_cycles = cycles_per_iteration * w.iterations as u64 * batches as u64;
         let compute_seconds = total_cycles as f64 / (self.synth.clock_mhz * 1e6);
         // result transfer: κ vectors of |V| words (4 bytes host-side) per batch
@@ -195,5 +248,51 @@ mod tests {
             let m = model(p, 100_000);
             assert!(m.dram_demand() < crate::fpga::U200.dram_bandwidth);
         }
+    }
+
+    #[test]
+    fn single_shard_model_matches_single_stream_model() {
+        let g = crate::graph::generators::erdos_renyi(2000, 0.004, 3);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let m = model(Precision::Fixed(26), 2000);
+        let b = m.synth.config.b;
+        let sharded = ShardedSchedule::build(&coo, b, 1);
+        let w = Workload {
+            requests: 100,
+            iterations: 10,
+            num_vertices: 2000,
+            num_packets: sharded.num_slots() / b,
+        };
+        assert_eq!(m.cycles_per_iteration_sharded(&sharded), m.cycles_per_iteration(&w));
+        assert_eq!(m.estimate_sharded(&w, &sharded), m.estimate(&w));
+    }
+
+    #[test]
+    fn multi_cu_scales_the_edge_sweep() {
+        // a uniform-degree graph partitions evenly: 4 CUs should cut the
+        // iteration time well beyond 2× (edge sweep dominates)
+        let g = crate::graph::generators::erdos_renyi(4000, 0.004, 5);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let m = model(Precision::Fixed(26), 4000);
+        let b = m.synth.config.b;
+        let c1 = m.cycles_per_iteration_sharded(&ShardedSchedule::build(&coo, b, 1));
+        let c4 = m.cycles_per_iteration_sharded(&ShardedSchedule::build(&coo, b, 4));
+        assert!(c4 < c1, "multi-CU must be faster: {c4} vs {c1}");
+        assert!(c1 as f64 / c4 as f64 > 2.0, "ratio {}", c1 as f64 / c4 as f64);
+    }
+
+    #[test]
+    fn skewed_shard_charged_at_its_own_channel() {
+        // a hub graph cannot split its hub: the slowest CU bounds the sweep
+        let mut edges: Vec<(u32, u32)> = (1..1000u32).map(|s| (s, 0)).collect();
+        edges.extend((0..16u32).map(|s| (s, 500 + s)));
+        let g = crate::graph::Graph::new(1000, edges);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let m = model(Precision::Fixed(26), 1000);
+        let b = m.synth.config.b;
+        let sharded = ShardedSchedule::build(&coo, b, 4);
+        let max_packets = *sharded.shard_packets().iter().max().unwrap() as u64;
+        let c = m.cycles_per_iteration_sharded(&sharded);
+        assert!(c >= max_packets * 3, "edge sweep bounded by the hub shard");
     }
 }

@@ -69,27 +69,16 @@ impl CsrMatrix {
 
     /// Split `[0, |V|)` into `parts` contiguous ranges with approximately
     /// equal numbers of non-zeros (not vertices) — the load-balancing the
-    /// multi-threaded baseline needs on skewed-degree graphs.
+    /// multi-threaded baseline needs on skewed-degree graphs. Delegates to
+    /// [`super::partition::balanced_ranges_by`], the same partitioner the
+    /// sharded streaming SpMV uses for its destination ranges, reading
+    /// nnz counts straight from `row_ptr` (no weights allocation).
     pub fn balanced_ranges(&self, parts: usize) -> Vec<std::ops::Range<usize>> {
-        assert!(parts > 0);
-        let total = self.num_edges();
-        let per = total.div_ceil(parts).max(1);
-        let mut out = Vec::with_capacity(parts);
-        let mut start = 0usize;
-        let mut acc = 0usize;
-        for v in 0..self.num_vertices {
-            acc += self.row_ptr[v + 1] - self.row_ptr[v];
-            if acc >= per && out.len() + 1 < parts {
-                out.push(start..v + 1);
-                start = v + 1;
-                acc = 0;
-            }
-        }
-        out.push(start..self.num_vertices);
-        while out.len() < parts {
-            out.push(self.num_vertices..self.num_vertices);
-        }
-        out
+        super::partition::balanced_ranges_by(
+            self.num_vertices,
+            |v| self.row_ptr[v + 1] - self.row_ptr[v],
+            parts,
+        )
     }
 }
 

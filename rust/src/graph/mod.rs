@@ -1,13 +1,16 @@
 //! Graph substrate: directed graphs, sparse-matrix views (COO/CSR), the
 //! PPR transition matrix X = (D⁻¹A)ᵀ with dangling bitmap (§3 of the
 //! paper), statistical generators matching the paper's Table 1 datasets,
-//! and a SNAP-format edge-list loader.
+//! a SNAP-format edge-list loader, and the nnz-balanced contiguous range
+//! partitioning ([`partition`]) shared by the CSR CPU baseline and the
+//! sharded streaming SpMV.
 
 pub mod coo;
 pub mod csr;
 pub mod datasets;
 pub mod generators;
 pub mod loader;
+pub mod partition;
 
 pub use coo::CooMatrix;
 pub use csr::CsrMatrix;

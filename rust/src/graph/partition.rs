@@ -1,0 +1,104 @@
+//! Weight-balanced contiguous range partitioning.
+//!
+//! Both parallel backends split the vertex axis `[0, |V|)` into contiguous
+//! ranges whose *non-zero counts* (not vertex counts) are approximately
+//! equal: the CSR CPU baseline assigns one range per thread, and the
+//! sharded streaming SpMV assigns one destination range per compute unit
+//! (the multi-CU model of the HBM Top-K SpMV follow-up paper). Contiguity
+//! is what makes the parallelism synchronization-free — each range owns a
+//! disjoint slice of the output vector — and on skewed-degree graphs
+//! balancing by nnz instead of vertices is what keeps the ranges' work
+//! comparable.
+
+use std::ops::Range;
+
+/// Split `[0, weights.len())` into `parts` contiguous ranges whose weight
+/// sums are approximately equal (greedy fill to `⌈total/parts⌉`). Always
+/// returns exactly `parts` ranges that tile the index space in order;
+/// trailing ranges may be empty when there are fewer heavy indices than
+/// parts.
+pub fn balanced_ranges(weights: &[usize], parts: usize) -> Vec<Range<usize>> {
+    balanced_ranges_by(weights.len(), |i| weights[i], parts)
+}
+
+/// Like [`balanced_ranges`], but reading weights through a lookup — lets
+/// callers that already hold a prefix-sum form (e.g. a CSR `row_ptr`)
+/// partition without materializing a weights array.
+pub fn balanced_ranges_by<W>(len: usize, weight: W, parts: usize) -> Vec<Range<usize>>
+where
+    W: Fn(usize) -> usize,
+{
+    assert!(parts > 0);
+    let total: usize = (0..len).map(&weight).sum();
+    let per = total.div_ceil(parts).max(1);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for i in 0..len {
+        acc += weight(i);
+        if acc >= per && out.len() + 1 < parts {
+            out.push(start..i + 1);
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    out.push(start..len);
+    while out.len() < parts {
+        out.push(len..len);
+    }
+    out
+}
+
+/// Total weight of one range (convenience for reporting/tests).
+pub fn range_weight(weights: &[usize], r: &Range<usize>) -> usize {
+    weights[r.clone()].iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_tile_in_order() {
+        let w = vec![3usize, 1, 4, 1, 5, 9, 2, 6];
+        for parts in 1..10 {
+            let rs = balanced_ranges(&w, parts);
+            assert_eq!(rs.len(), parts);
+            assert_eq!(rs[0].start, 0);
+            assert_eq!(rs.last().unwrap().end, w.len());
+            for pair in rs.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start, "ranges must tile");
+            }
+            let covered: usize = rs.iter().map(|r| range_weight(&w, r)).sum();
+            assert_eq!(covered, w.iter().sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn heavy_head_isolated() {
+        // one dominant index fills its own range immediately; the light
+        // tail (below the per-part target) shares the next range
+        let mut w = vec![1usize; 16];
+        w[0] = 100;
+        let rs = balanced_ranges(&w, 4);
+        assert_eq!(rs[0], 0..1);
+        assert_eq!(rs[1], 1..16);
+        assert_eq!(range_weight(&w, &rs[0]), 100);
+        assert_eq!(range_weight(&w, &rs[1]), 15);
+    }
+
+    #[test]
+    fn more_parts_than_weight_yields_empty_tails() {
+        let w = vec![0usize, 0, 1];
+        let rs = balanced_ranges(&w, 5);
+        assert_eq!(rs.len(), 5);
+        assert_eq!(rs.last().unwrap(), &(3..3));
+        assert_eq!(rs.iter().map(|r| range_weight(&w, r)).sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn empty_weights() {
+        let rs = balanced_ranges(&[], 3);
+        assert_eq!(rs, vec![0..0, 0..0, 0..0]);
+    }
+}

@@ -2,9 +2,29 @@
 //! generic over the arithmetic datapath. This is the bit-accurate software
 //! model of the FPGA computation: every multiply, add and quantization
 //! happens exactly where the hardware datapath performs it.
+//!
+//! The engine is **sharded** (DESIGN.md §4): the prepared graph carries
+//! one destination-partitioned packet stream per shard, and all three
+//! per-iteration sweeps — dangling scan, edge stream, update — fan out
+//! across the shards' disjoint destination ranges on scoped threads. With
+//! one shard every sweep runs inline and is bit-identical to the original
+//! single-stream engine; with many shards the fixed-point datapath's
+//! *score words* are still bit-identical every iteration (saturating adds
+//! of non-negative values give `min(Σ, max)` under any grouping), while
+//! the float datapath may differ in the last ulp of the dangling sum,
+//! exactly like a per-CU hardware reduction tree would.
+//!
+//! One caveat: the reported update norm is an f64 reduction whose
+//! grouping follows the shards (deterministic for a fixed shard count,
+//! but not identical across shard counts — f64 addition is not
+//! associative). A `convergence_threshold` that lands within an ulp of
+//! the norm can therefore stop at a different iteration for different
+//! shard counts; fixed-iteration runs (the paper's timed configuration)
+//! are unaffected.
 
 use super::{PprConfig, PreparedGraph};
 use crate::graph::VertexId;
+use crate::spmv::shard::{fan_out, PARALLEL_WORK_PER_SHARD};
 use crate::spmv::Datapath;
 use std::sync::Arc;
 
@@ -24,9 +44,11 @@ pub struct PprOutput<W> {
 }
 
 impl<W: Copy> PprOutput<W> {
-    /// Extract lane `k` as a dense vector.
-    pub fn lane(&self, k: usize, kappa: usize) -> Vec<W> {
-        self.scores.iter().skip(k).step_by(kappa).copied().collect()
+    /// Extract lane `k` as a dense vector. The stride is the run's actual
+    /// lane count (partial batches carry fewer lanes than the engine's κ).
+    pub fn lane(&self, k: usize) -> Vec<W> {
+        assert!(k < self.lanes, "lane {k} out of range (run carried {})", self.lanes);
+        self.scores.iter().skip(k).step_by(self.lanes).copied().collect()
     }
 }
 
@@ -37,7 +59,8 @@ pub struct BatchedPpr<D: Datapath> {
     /// Maximum lanes per pass (a run may carry fewer).
     pub kappa: usize,
     graph: Arc<PreparedGraph>,
-    vals: Vec<D::Word>,
+    /// Per-shard quantized value streams (the per-CU channel contents).
+    vals: Vec<Vec<D::Word>>,
     // quantized constants of Eq. 1
     alpha: D::Word,
     one_minus_alpha: D::Word,
@@ -46,18 +69,26 @@ pub struct BatchedPpr<D: Datapath> {
 
 impl<D: Datapath> BatchedPpr<D> {
     /// Bind an engine to a prepared graph. `alpha` is quantized once here,
-    /// like the synthesized constants of the bitstream.
+    /// like the synthesized constants of the bitstream; each shard's value
+    /// stream is quantized once, like loading the partitions onto their
+    /// channels (§4.2).
     pub fn new(datapath: D, graph: Arc<PreparedGraph>, kappa: usize, alpha: f64) -> Self {
         assert!((0.0..1.0).contains(&alpha));
-        let vals = Self::quantize_vals(&datapath, &graph.sched.val);
+        let vals = graph
+            .sharded
+            .shards
+            .iter()
+            .map(|s| s.val.iter().map(|&v| datapath.quantize(v)).collect())
+            .collect();
         let alpha_w = datapath.quantize(alpha);
         let one_minus_alpha = datapath.quantize(1.0 - alpha);
         let alpha_over_v = datapath.quantize(alpha / graph.num_vertices as f64);
         Self { datapath, kappa, graph, vals, alpha: alpha_w, one_minus_alpha, alpha_over_v }
     }
 
-    fn quantize_vals(d: &D, vals: &[f64]) -> Vec<D::Word> {
-        vals.iter().map(|&v| d.quantize(v)).collect()
+    /// Number of shards (parallel compute units) the engine sweeps.
+    pub fn num_shards(&self) -> usize {
+        self.graph.sharded.num_shards()
     }
 
     /// Run Alg. 1 for a batch of 1..=κ personalization vertices. Partial
@@ -87,34 +118,18 @@ impl<D: Datapath> BatchedPpr<D> {
         let mut iterations = 0usize;
 
         for _ in 0..cfg.max_iterations {
-            // scaling_vec ← (α/|V|) · (d̄ · P₁)  — per lane (Alg. 1 line 6)
-            for lane in 0..k {
-                let mut acc = z;
-                for &dv in &self.graph.dangling_idx {
-                    acc = d.add(acc, p1[dv as usize * k + lane]);
-                }
-                scaling[lane] = d.mul(self.alpha_over_v, acc);
-            }
+            // scaling_vec ← (α/|V|) · (d̄ · P₁) — per lane (Alg. 1 line 6),
+            // the dangling scan sharded by destination range
+            self.scaling_sweep(&d, &p1, k, &mut scaling);
 
-            // P₂ ← X · P₁ (Alg. 2) — the fast kernel, bit-identical to the
-            // streaming architecture model (see spmv::fast)
-            crate::spmv::fast_spmv(&d, &self.graph.sched, &self.vals, k, &p1, &mut p2);
+            // P₂ ← X · P₁ (Alg. 2) — one scatter worker per shard, each
+            // writing its own destination slice (see spmv::shard)
+            crate::spmv::fast_spmv_sharded(&d, &self.graph.sharded, &self.vals, k, &p1, &mut p2);
 
-            // P₁ ← α·P₂ + scaling + (1−α)·V̄, tracking the update norm
-            let mut norm_sq = 0.0f64;
-            for v in 0..n {
-                let row = v * k;
-                for lane in 0..k {
-                    let mut x = d.mul(self.alpha, p2[row + lane]);
-                    x = d.add(x, scaling[lane]);
-                    if personalization[lane] as usize == v {
-                        x = d.add(x, self.one_minus_alpha);
-                    }
-                    let delta = d.abs_diff_f64(x, p1[row + lane]);
-                    norm_sq += delta * delta;
-                    p1[row + lane] = x;
-                }
-            }
+            // P₁ ← α·P₂ + scaling + (1−α)·V̄, tracking the update norm,
+            // sharded over the same disjoint destination ranges
+            let norm_sq = self.update_sweep(&d, &mut p1, &p2, &scaling, personalization, k);
+
             iterations += 1;
             let norm = (norm_sq / k as f64).sqrt();
             update_norms.push(norm);
@@ -128,6 +143,69 @@ impl<D: Datapath> BatchedPpr<D> {
         PprOutput { scores: p1, lanes: k, iterations, update_norms }
     }
 
+    /// The dangling scan: per-shard partial sums over each shard's
+    /// dangling vertices, folded in shard order, then scaled by α/|V|.
+    /// One shard reproduces the single-stream scan exactly, and the
+    /// sequential small-work path produces the same words as the parallel
+    /// one (partials are folded in shard order either way).
+    fn scaling_sweep(&self, d: &D, p1: &[D::Word], k: usize, scaling: &mut [D::Word]) {
+        let shards = &self.graph.sharded.shards;
+        let serial = shards.len() == 1
+            || self.graph.dangling_idx.len() * k < PARALLEL_WORK_PER_SHARD * shards.len();
+        let partials = fan_out(shards.iter().collect(), serial, |sh| {
+            dangling_partial(d, &sh.dangling_idx, p1, k)
+        });
+        let mut partials = partials.into_iter();
+        let mut total = partials.next().expect("at least one shard");
+        for part in partials {
+            for lane in 0..k {
+                total[lane] = d.add(total[lane], part[lane]);
+            }
+        }
+        for lane in 0..k {
+            scaling[lane] = d.mul(self.alpha_over_v, total[lane]);
+        }
+    }
+
+    /// The update sweep, one worker per shard over its destination slice;
+    /// returns the summed squared update norm (partials folded in shard
+    /// order, so the norm is deterministic for a given shard count).
+    fn update_sweep(
+        &self,
+        d: &D,
+        p1: &mut [D::Word],
+        p2: &[D::Word],
+        scaling: &[D::Word],
+        personalization: &[VertexId],
+        k: usize,
+    ) -> f64 {
+        let shards = &self.graph.sharded.shards;
+        let alpha = self.alpha;
+        let oma = self.one_minus_alpha;
+        let n = self.graph.num_vertices;
+        if shards.len() == 1 {
+            return update_range(d, 0, n, k, p1, p2, scaling, personalization, alpha, oma);
+        }
+        // split P₁ into the shards' disjoint destination slices
+        let mut slices: Vec<&mut [D::Word]> = Vec::with_capacity(shards.len());
+        let mut rest = p1;
+        for sh in shards {
+            let (head, tail) = rest.split_at_mut((sh.dst_end - sh.dst_start) * k);
+            slices.push(head);
+            rest = tail;
+        }
+        let serial = n * k < PARALLEL_WORK_PER_SHARD * shards.len();
+        let work: Vec<_> = shards.iter().zip(slices).collect();
+        let partials = fan_out(work, serial, |(sh, p1s)| {
+            let p2s = &p2[sh.dst_start * k..sh.dst_end * k];
+            let (lo, hi) = (sh.dst_start, sh.dst_end);
+            update_range(d, lo, hi, k, p1s, p2s, scaling, personalization, alpha, oma)
+        });
+        // fold the per-shard norm partials in shard order (deterministic
+        // for a given shard count; see the module docs on the norm caveat)
+        partials.into_iter().sum()
+    }
+
     /// Run a whole request list by splitting it into κ-batches; returns one
     /// dense score vector per request (the host-facing result shape). The
     /// trailing batch runs partial instead of padding with repeated lanes.
@@ -136,11 +214,65 @@ impl<D: Datapath> BatchedPpr<D> {
         for batch in requests.chunks(self.kappa) {
             let res = self.run(batch, cfg);
             for lane in 0..batch.len() {
-                out.push(res.lane(lane, batch.len()));
+                out.push(res.lane(lane));
             }
         }
         out
     }
+}
+
+/// Per-lane sums of `p1` over one shard's dangling vertices, in ascending
+/// vertex order (the same per-lane add sequence as the single-stream scan
+/// restricted to this range).
+fn dangling_partial<D: Datapath>(
+    d: &D,
+    dangling_idx: &[VertexId],
+    p1: &[D::Word],
+    k: usize,
+) -> Vec<D::Word> {
+    let mut acc = vec![d.zero(); k];
+    for &dv in dangling_idx {
+        let row = dv as usize * k;
+        for lane in 0..k {
+            acc[lane] = d.add(acc[lane], p1[row + lane]);
+        }
+    }
+    acc
+}
+
+/// Apply Eq. 1's affine update to destinations `[lo, hi)`; `p1`/`p2` are
+/// the matching slices (`p1[0]` is vertex `lo`). Returns the partial
+/// squared update norm.
+#[allow(clippy::too_many_arguments)]
+fn update_range<D: Datapath>(
+    d: &D,
+    lo: usize,
+    hi: usize,
+    k: usize,
+    p1: &mut [D::Word],
+    p2: &[D::Word],
+    scaling: &[D::Word],
+    personalization: &[VertexId],
+    alpha: D::Word,
+    one_minus_alpha: D::Word,
+) -> f64 {
+    debug_assert_eq!(p1.len(), (hi - lo) * k);
+    debug_assert_eq!(p2.len(), (hi - lo) * k);
+    let mut norm_sq = 0.0f64;
+    for v in lo..hi {
+        let row = (v - lo) * k;
+        for lane in 0..k {
+            let mut x = d.mul(alpha, p2[row + lane]);
+            x = d.add(x, scaling[lane]);
+            if personalization[lane] as usize == v {
+                x = d.add(x, one_minus_alpha);
+            }
+            let delta = d.abs_diff_f64(x, p1[row + lane]);
+            norm_sq += delta * delta;
+            p1[row + lane] = x;
+        }
+    }
+    norm_sq
 }
 
 #[cfg(test)]
@@ -163,7 +295,7 @@ mod tests {
         let mut engine = BatchedPpr::new(d, pg.clone(), 4, 0.85);
         let out = engine.run(&[0, 5, 9, 13], &PprConfig { max_iterations: 30, ..Default::default() });
         for lane in 0..4 {
-            let sum: f64 = out.lane(lane, 4).iter().map(|&w| d.fmt.to_f64(w)).sum();
+            let sum: f64 = out.lane(lane).iter().map(|&w| d.fmt.to_f64(w)).sum();
             assert!((sum - 1.0).abs() < 1e-4, "lane {lane}: {sum}");
         }
     }
@@ -178,7 +310,7 @@ mod tests {
         let coo = crate::graph::CooMatrix::from_graph(&g);
         for (lane, &pv) in [3u32, 7u32].iter().enumerate() {
             let truth = reference::ppr_f64(&coo, pv, 0.85, 20, None);
-            let got = out.lane(lane, 2);
+            let got = out.lane(lane);
             for v in 0..200 {
                 assert!(
                     (got[v] as f64 - truth.scores[v]).abs() < 1e-4,
@@ -200,7 +332,7 @@ mod tests {
         let out = engine.run(&[10], &cfg);
         let coo = crate::graph::CooMatrix::from_graph(&g);
         let truth = reference::ppr_f64(&coo, 10, 0.85, 15, None);
-        let got = out.lane(0, 1);
+        let got = out.lane(0);
         for v in 0..300 {
             assert!(
                 (d.fmt.to_f64(got[v]) - truth.scores[v]).abs() < 1e-3,
@@ -217,7 +349,7 @@ mod tests {
         let mut engine = BatchedPpr::new(d, pg.clone(), 2, 0.85);
         let out = engine.run(&[42, 100], &PprConfig::paper_timed());
         for (lane, &pv) in [42usize, 100usize].iter().enumerate() {
-            let lane_scores = out.lane(lane, 2);
+            let lane_scores = out.lane(lane);
             let best = (0..128).max_by_key(|&v| lane_scores[v]).unwrap();
             assert_eq!(best, pv, "lane {lane}");
         }
@@ -268,8 +400,19 @@ mod tests {
         assert_eq!(partial.lanes, 2);
         assert_eq!(full.lanes, 4);
         // lanes never interact, so a 2-lane batch reproduces the same words
-        assert_eq!(partial.lane(0, 2), full.lane(0, 4));
-        assert_eq!(partial.lane(1, 2), full.lane(1, 4));
+        assert_eq!(partial.lane(0), full.lane(0));
+        assert_eq!(partial.lane(1), full.lane(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn lane_bounds_checked() {
+        let g = ring(16);
+        let pg = Arc::new(PreparedGraph::new(&g, 4));
+        let d = FixedPath::paper(20);
+        let mut engine = BatchedPpr::new(d, pg, 4, 0.85);
+        let out = engine.run(&[1, 2], &PprConfig { max_iterations: 2, ..Default::default() });
+        let _ = out.lane(2); // run carried 2 lanes; lane 2 must panic
     }
 
     #[test]
@@ -279,10 +422,61 @@ mod tests {
         let pg = Arc::new(PreparedGraph::new(&g, 4));
         let mut engine = BatchedPpr::new(FloatPath, pg.clone(), 1, 0.85);
         let out = engine.run(&[0], &PprConfig { max_iterations: 50, ..Default::default() });
-        let s = out.lane(0, 1);
+        let s = out.lane(0);
         // sink collects mass, but dangling redistribution keeps the total ≈ 1
         let total: f32 = s.iter().sum();
         assert!((total - 1.0).abs() < 0.02, "total {total}");
         assert!(s[4] > s[1], "sink should outrank non-personalized leaves");
+    }
+
+    #[test]
+    fn threaded_sweeps_bit_identical_to_single_shard() {
+        // big enough that all three sweeps take the scoped-thread path
+        // (edges, |V|·k and |dangling|·k all ≥ 4 shards ×
+        // PARALLEL_WORK_PER_SHARD): half the vertices source edges, half
+        // are dangling
+        let n = 12_000usize;
+        let k = 6usize;
+        let mut rng = crate::util::rng::Xoshiro256::seeded(99);
+        let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+        for s in 0..(n / 2) as VertexId {
+            for _ in 0..6 {
+                let d = rng.next_index(n) as VertexId;
+                if d != s {
+                    edges.push((s, d));
+                }
+            }
+        }
+        let g = Graph::new(n, edges);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        assert!(coo.num_edges() >= 1 << 15);
+        let d = FixedPath::paper(26);
+        let cfg = PprConfig { max_iterations: 3, ..Default::default() };
+        let pers: Vec<VertexId> = vec![1, 2, 3, 4, 5, 6];
+        let pg1 = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, 1));
+        let base = BatchedPpr::new(d, pg1, k, 0.85).run(&pers, &cfg);
+        let pg4 = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, 4));
+        let out = BatchedPpr::new(d, pg4, k, 0.85).run(&pers, &cfg);
+        assert_eq!(base.scores, out.scores);
+    }
+
+    #[test]
+    fn sharded_engine_bit_identical_to_single_shard_fixed() {
+        // the whole Alg. 1 loop — dangling scan, edge sweep, update — must
+        // produce identical words for any shard count on the fixed path
+        let g = crate::graph::generators::holme_kim(240, 4, 0.25, 13);
+        let d = FixedPath::paper(24);
+        let cfg = PprConfig { max_iterations: 10, ..Default::default() };
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let pg1 = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, 1));
+        let base = BatchedPpr::new(d, pg1, 3, 0.85).run(&[2, 7, 11], &cfg);
+        for shards in [2usize, 3, 5] {
+            let pgs = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, shards));
+            let mut engine = BatchedPpr::new(d, pgs, 3, 0.85);
+            assert_eq!(engine.num_shards(), shards);
+            let out = engine.run(&[2, 7, 11], &cfg);
+            assert_eq!(out.scores, base.scores, "shards={shards}");
+            assert_eq!(out.update_norms.len(), base.update_norms.len());
+        }
     }
 }

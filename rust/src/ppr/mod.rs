@@ -26,7 +26,7 @@ pub use batched::{BatchedPpr, PprOutput};
 pub use convergence::ConvergenceTrace;
 
 use crate::graph::{CooMatrix, Graph, VertexId};
-use crate::spmv::PacketSchedule;
+use crate::spmv::{PacketSchedule, ShardedSchedule};
 
 /// Solver parameters shared by every engine.
 #[derive(Debug, Clone, Copy)]
@@ -64,34 +64,70 @@ impl PprConfig {
     }
 }
 
-/// Graph-derived state shared by solver instances: the aligned packet
-/// schedule (FPGA DRAM layout) plus the dangling-vertex index list used by
-/// the scaling-vector computation (Alg. 1 line 6).
+/// Graph-derived state shared by solver instances: the single-channel
+/// aligned packet schedule (the architecture reference layout, also what
+/// the PJRT artifacts are marshalled from), the destination-partitioned
+/// sharded schedule (the multi-CU serving layout the native engine runs),
+/// and the dangling-vertex index list used by the scaling-vector
+/// computation (Alg. 1 line 6).
 #[derive(Debug, Clone)]
 pub struct PreparedGraph {
-    /// The aligned COO packet schedule.
+    /// The aligned COO packet schedule (one stream, one DRAM channel).
     pub sched: PacketSchedule,
-    /// Indices of dangling vertices (outdeg = 0).
+    /// The destination-partitioned packet schedule (one stream per shard;
+    /// with one shard its stream is identical to `sched`'s).
+    pub sharded: ShardedSchedule,
+    /// Indices of dangling vertices (outdeg = 0), all shards combined.
     pub dangling_idx: Vec<VertexId>,
     /// |V|.
     pub num_vertices: usize,
 }
 
 impl PreparedGraph {
-    /// Preprocess a graph for packet width `b` (host-side, once per graph;
-    /// the paper reports this takes <1% of execution time, §4.2).
+    /// Preprocess a graph for packet width `b` with a single shard
+    /// (host-side, once per graph; the paper reports this takes <1% of
+    /// execution time, §4.2).
     pub fn new(g: &Graph, b: usize) -> Self {
-        let coo = CooMatrix::from_graph(g);
-        Self::from_coo(&coo, b)
+        Self::new_sharded(g, b, 1)
     }
 
-    /// Preprocess an existing COO matrix.
+    /// Preprocess a graph for packet width `b` and `num_shards` compute
+    /// units (destination-partitioned, nnz-balanced).
+    pub fn new_sharded(g: &Graph, b: usize, num_shards: usize) -> Self {
+        let coo = CooMatrix::from_graph(g);
+        Self::from_coo_sharded(&coo, b, num_shards)
+    }
+
+    /// Preprocess an existing COO matrix with a single shard.
     pub fn from_coo(coo: &CooMatrix, b: usize) -> Self {
+        Self::from_coo_sharded(coo, b, 1)
+    }
+
+    /// Preprocess an existing COO matrix into `num_shards` sub-streams.
+    ///
+    /// Both layouts are retained: the native engine sweeps `sharded`, the
+    /// PJRT marshaller and the architecture model read `sched`. At the
+    /// paper's target scale (≤ ~2·10⁶ edges, see `graph::VertexId`) the
+    /// duplicated stream is tens of megabytes; a future revision can
+    /// derive the single stream by concatenating the shard streams if
+    /// that ever matters.
+    pub fn from_coo_sharded(coo: &CooMatrix, b: usize, num_shards: usize) -> Self {
         let sched = PacketSchedule::build(coo, b);
+        let sharded = if num_shards == 1 {
+            // the one-shard stream is the single stream: skip re-aligning
+            ShardedSchedule::from_packet_schedule(&sched)
+        } else {
+            ShardedSchedule::build(coo, b, num_shards)
+        };
         let dangling_idx = (0..coo.num_vertices as VertexId)
             .filter(|&v| coo.dangling[v as usize])
             .collect();
-        Self { sched, dangling_idx, num_vertices: coo.num_vertices }
+        Self { sched, sharded, dangling_idx, num_vertices: coo.num_vertices }
+    }
+
+    /// Number of shards (compute units) the graph was prepared for.
+    pub fn num_shards(&self) -> usize {
+        self.sharded.num_shards()
     }
 }
 
@@ -131,6 +167,18 @@ mod tests {
         let pg = PreparedGraph::new(&g, 4);
         assert_eq!(pg.dangling_idx, vec![2, 3]);
         assert_eq!(pg.num_vertices, 4);
+        assert_eq!(pg.num_shards(), 1);
+    }
+
+    #[test]
+    fn prepared_graph_sharded_partitions_dangling() {
+        let g = Graph::new(6, vec![(0, 1), (1, 2), (2, 3)]);
+        let pg = PreparedGraph::new_sharded(&g, 4, 3);
+        assert_eq!(pg.num_shards(), 3);
+        pg.sharded.validate().unwrap();
+        let merged: Vec<VertexId> =
+            pg.sharded.shards.iter().flat_map(|s| s.dangling_idx.iter().copied()).collect();
+        assert_eq!(merged, pg.dangling_idx);
     }
 
     #[test]

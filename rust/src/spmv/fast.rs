@@ -17,6 +17,7 @@
 
 use super::datapath::Datapath;
 use super::packets::PacketSchedule;
+use crate::graph::VertexId;
 
 /// Direct scatter SpMV over the aligned schedule: for each real edge,
 /// `out[x·κ+k] ⊕= val ⊗ p[y·κ+k]`. Padding slots (zero value) are
@@ -34,15 +35,33 @@ pub fn fast_spmv<D: Datapath>(
     assert_eq!(vals.len(), sched.num_slots());
     assert_eq!(p.len(), n * kappa);
     assert_eq!(out.len(), n * kappa);
-    let zero = d.zero();
-    out.fill(zero);
+    out.fill(d.zero());
+    scatter(d, &sched.x, &sched.y, vals, kappa, 0, p, out);
+}
+
+/// Scatter an aligned (x, y, val) stream into `out`, whose first word is
+/// destination vertex `dst_base` — the shared core of [`fast_spmv`]
+/// (`dst_base = 0`, the whole vector) and the per-shard workers of
+/// [`super::shard::fast_spmv_sharded`] (each writing its own destination
+/// slice). `out` must be pre-zeroed; every word is clamped on the way out.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scatter<D: Datapath>(
+    d: &D,
+    x: &[VertexId],
+    y: &[VertexId],
+    vals: &[D::Word],
+    kappa: usize,
+    dst_base: usize,
+    p: &[D::Word],
+    out: &mut [D::Word],
+) {
     match kappa {
-        1 => scatter_lanes::<D, 1>(d, sched, vals, p, out),
-        2 => scatter_lanes::<D, 2>(d, sched, vals, p, out),
-        4 => scatter_lanes::<D, 4>(d, sched, vals, p, out),
-        8 => scatter_lanes::<D, 8>(d, sched, vals, p, out),
-        16 => scatter_lanes::<D, 16>(d, sched, vals, p, out),
-        _ => scatter_dyn(d, sched, vals, kappa, p, out),
+        1 => scatter_lanes::<D, 1>(d, x, y, vals, dst_base, p, out),
+        2 => scatter_lanes::<D, 2>(d, x, y, vals, dst_base, p, out),
+        4 => scatter_lanes::<D, 4>(d, x, y, vals, dst_base, p, out),
+        8 => scatter_lanes::<D, 8>(d, x, y, vals, dst_base, p, out),
+        16 => scatter_lanes::<D, 16>(d, x, y, vals, dst_base, p, out),
+        _ => scatter_dyn(d, x, y, vals, kappa, dst_base, p, out),
     }
 }
 
@@ -50,19 +69,21 @@ pub fn fast_spmv<D: Datapath>(
 /// (the software analogue of the κ replicated scatter cores).
 fn scatter_lanes<D: Datapath, const K: usize>(
     d: &D,
-    sched: &PacketSchedule,
+    x: &[VertexId],
+    y: &[VertexId],
     vals: &[D::Word],
+    dst_base: usize,
     p: &[D::Word],
     out: &mut [D::Word],
 ) {
     let zero = d.zero();
-    for i in 0..sched.num_slots() {
+    for i in 0..vals.len() {
         let v = vals[i];
         if v == zero {
             continue; // padding (or a zero-quantized value): contributes nothing
         }
-        let src = sched.y[i] as usize * K;
-        let dst = sched.x[i] as usize * K;
+        let src = y[i] as usize * K;
+        let dst = (x[i] as usize - dst_base) * K;
         for k in 0..K {
             out[dst + k] = d.add_deferred(out[dst + k], d.mul(v, p[src + k]));
         }
@@ -72,22 +93,25 @@ fn scatter_lanes<D: Datapath, const K: usize>(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn scatter_dyn<D: Datapath>(
     d: &D,
-    sched: &PacketSchedule,
+    x: &[VertexId],
+    y: &[VertexId],
     vals: &[D::Word],
     kappa: usize,
+    dst_base: usize,
     p: &[D::Word],
     out: &mut [D::Word],
 ) {
     let zero = d.zero();
-    for i in 0..sched.num_slots() {
+    for i in 0..vals.len() {
         let v = vals[i];
         if v == zero {
             continue;
         }
-        let src = sched.y[i] as usize * kappa;
-        let dst = sched.x[i] as usize * kappa;
+        let src = y[i] as usize * kappa;
+        let dst = (x[i] as usize - dst_base) * kappa;
         for k in 0..kappa {
             out[dst + k] = d.add_deferred(out[dst + k], d.mul(v, p[src + k]));
         }

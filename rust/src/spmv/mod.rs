@@ -16,6 +16,10 @@
 //!   runs: bit-identical to the streaming model (saturating adds of
 //!   non-negative pairwise-quantized products commute), minus its
 //!   structural bookkeeping.
+//! - [`shard`] partitions the stream into destination-owned sub-streams
+//!   (the multi-CU / multi-channel model of the HBM follow-up paper) and
+//!   runs one scatter worker per shard with no merge pass — the engine's
+//!   parallel hot path.
 //! - [`reference`] is a scalar COO SpMV oracle (same datapath, no
 //!   pipeline structure) used by unit and property tests.
 //! - [`csr_kernel`] is the row-parallel CSR SpMV used by the CPU baseline
@@ -26,9 +30,11 @@ pub mod datapath;
 pub mod fast;
 pub mod packets;
 pub mod reference;
+pub mod shard;
 pub mod streaming;
 
 pub use datapath::{Datapath, FixedPath, FloatPath};
 pub use fast::fast_spmv;
 pub use packets::PacketSchedule;
+pub use shard::{fast_spmv_sharded, ShardStream, ShardedSchedule};
 pub use streaming::StreamingSpmv;

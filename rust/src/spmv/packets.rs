@@ -35,40 +35,56 @@ pub struct PacketSchedule {
     pub dangling: Vec<bool>,
 }
 
+/// Align a destination-sorted edge stream into `b`-wide packets upholding
+/// the window invariant, padding with zero-valued entries aimed at each
+/// packet's first destination. Shared by [`PacketSchedule::build`] (the
+/// whole matrix as one stream) and [`super::shard::ShardedSchedule`] (one
+/// stream per destination partition); returns the aligned (x, y, val)
+/// arrays, each of length `num_packets * b`.
+pub(crate) fn align_stream(
+    b: usize,
+    src_x: &[VertexId],
+    src_y: &[VertexId],
+    src_val: &[f64],
+) -> (Vec<VertexId>, Vec<VertexId>, Vec<f64>) {
+    assert!(b >= 1);
+    let e = src_x.len();
+    let mut x: Vec<VertexId> = Vec::with_capacity(e + e / 8);
+    let mut y: Vec<VertexId> = Vec::with_capacity(e + e / 8);
+    let mut val: Vec<f64> = Vec::with_capacity(e + e / 8);
+
+    let mut i = 0usize;
+    while i < e {
+        let first = src_x[i];
+        // take up to b edges whose destination fits the window
+        let mut taken = 0usize;
+        while taken < b && i < e && (src_x[i] - first) < b as VertexId {
+            x.push(src_x[i]);
+            y.push(src_y[i]);
+            val.push(src_val[i]);
+            i += 1;
+            taken += 1;
+        }
+        // pad the rest of the packet with zero-valued entries aimed at
+        // the packet's first destination (contributes 0)
+        for _ in taken..b {
+            x.push(first);
+            y.push(0);
+            val.push(0.0);
+        }
+    }
+    (x, y, val)
+}
+
 impl PacketSchedule {
     /// Build the schedule from a destination-sorted COO matrix.
     pub fn build(coo: &CooMatrix, b: usize) -> Self {
-        assert!(b >= 1);
         debug_assert!(coo.validate().is_ok());
-        let e = coo.num_edges();
-        let mut x: Vec<VertexId> = Vec::with_capacity(e + e / 8);
-        let mut y: Vec<VertexId> = Vec::with_capacity(e + e / 8);
-        let mut val: Vec<f64> = Vec::with_capacity(e + e / 8);
-
-        let mut i = 0usize;
-        while i < e {
-            let first = coo.x[i];
-            // take up to b edges whose destination fits the window
-            let mut taken = 0usize;
-            while taken < b && i < e && (coo.x[i] - first) < b as VertexId {
-                x.push(coo.x[i]);
-                y.push(coo.y[i]);
-                val.push(coo.val[i]);
-                i += 1;
-                taken += 1;
-            }
-            // pad the rest of the packet with zero-valued entries aimed at
-            // the packet's first destination (contributes 0)
-            for _ in taken..b {
-                x.push(first);
-                y.push(0);
-                val.push(0.0);
-            }
-        }
+        let (x, y, val) = align_stream(b, &coo.x, &coo.y, &coo.val);
         Self {
             b,
             num_vertices: coo.num_vertices,
-            num_edges: e,
+            num_edges: coo.num_edges(),
             x,
             y,
             val,

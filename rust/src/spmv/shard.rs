@@ -1,0 +1,496 @@
+//! Destination-partitioned sharding of the streaming SpMV — the multi-CU
+//! model of the paper's follow-up ("Scaling up HBM Efficiency of Top-K
+//! SpMV…", Parravicini et al., 2021), where the matrix is partitioned
+//! across HBM channels and one compute unit consumes each partition.
+//!
+//! The destination-sorted COO stream is split into `num_shards` contiguous
+//! destination ranges balanced by non-zero count (the partitioner shared
+//! with the CSR baseline, [`crate::graph::partition`]). Each shard carries
+//! its **own** aligned packet stream — alignment padding is recomputed per
+//! shard, exactly as each hardware CU would schedule its own channel — and
+//! owns a disjoint vertex-major slice of the output vector, mirroring
+//! per-CU URAM result banks. Because destination ranges are disjoint,
+//! the shards never write the same output word: the software fan-out
+//! ([`fast_spmv_sharded`]) needs no merge pass and no atomics, and each
+//! per-shard kernel is bit-identical to running the single-stream kernel
+//! on that shard's edges.
+//!
+//! Invariants (checked by [`ShardedSchedule::validate`] and the property
+//! tests in `rust/tests/properties.rs`):
+//!
+//! 1. shard destination ranges tile `[0, |V|)` in order (possibly empty);
+//! 2. every packet of a shard targets destinations inside the shard's
+//!    range and upholds the window invariant of [`super::packets`];
+//! 3. the shards' real (non-padding) edges partition the matrix's edges.
+//!
+//! With `num_shards = 1` the single shard's stream is *identical* to
+//! [`PacketSchedule::build`]'s, so the sharded kernel reproduces the
+//! single-stream kernel bit-for-bit and cycle-for-cycle.
+
+use super::datapath::Datapath;
+use super::packets::{align_stream, PacketSchedule};
+use crate::fixed::FixedFormat;
+use crate::graph::{partition, CooMatrix, VertexId};
+
+/// Minimum work units (edges or vector words) **per shard** before a sweep
+/// fans out to threads; below this the shards run sequentially (identical
+/// words — shards share no state), because a thread spawn costs tens of
+/// microseconds while a few thousand work units cost less. Scaling the
+/// threshold by the shard count keeps a wide-host default (many shards)
+/// from paying 32 spawns for microseconds of per-shard work. Mirrors the
+/// CSR baseline's small-graph serial fallback.
+pub(crate) const PARALLEL_WORK_PER_SHARD: usize = 4096;
+
+/// Run one closure per shard work item, either inline (`serial`) or on
+/// scoped threads, returning the results in item order — the one fan-out
+/// primitive behind the edge, dangling and update sweeps, so the
+/// fallback/spawn/join discipline cannot diverge between them. A future
+/// optimization can swap the per-call spawns for a persistent worker pool
+/// here, in one place (DESIGN.md §4).
+pub(crate) fn fan_out<T, R, F>(items: Vec<T>, serial: bool, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    if serial {
+        return items.into_iter().map(f).collect();
+    }
+    std::thread::scope(|s| {
+        let fr = &f;
+        let handles: Vec<_> =
+            items.into_iter().map(|item| s.spawn(move || fr(item))).collect();
+        handles.into_iter().map(|h| h.join().expect("shard worker")).collect()
+    })
+}
+
+/// One destination partition: an aligned packet stream (global
+/// coordinates) plus the partition-local metadata the PPR sweeps need.
+#[derive(Debug, Clone)]
+pub struct ShardStream {
+    /// First destination vertex owned by this shard (inclusive).
+    pub dst_start: usize,
+    /// One past the last destination vertex owned by this shard.
+    pub dst_end: usize,
+    /// Real (non-padding) edges in this shard.
+    pub num_edges: usize,
+    /// Destination coordinates (global vertex ids, all inside
+    /// `[dst_start, dst_end)`), length `num_packets * b`.
+    pub x: Vec<VertexId>,
+    /// Source coordinates (global vertex ids, unrestricted), same length.
+    pub y: Vec<VertexId>,
+    /// Edge values (f64 master copy; quantize per datapath), same length.
+    pub val: Vec<f64>,
+    /// Dangling vertices inside `[dst_start, dst_end)`, ascending — the
+    /// shard's slice of the dangling scan (Alg. 1 line 6).
+    pub dangling_idx: Vec<VertexId>,
+}
+
+impl ShardStream {
+    /// Total slots (edges + padding) of this shard's stream.
+    pub fn num_slots(&self) -> usize {
+        self.x.len()
+    }
+
+    /// Destination vertices owned by this shard.
+    pub fn num_dst_vertices(&self) -> usize {
+        self.dst_end - self.dst_start
+    }
+
+    /// Quantized copy of the value stream for a fixed-point datapath.
+    pub fn quantized_values(&self, fmt: &FixedFormat) -> Vec<u64> {
+        fmt.quantize_slice(&self.val)
+    }
+
+    /// f32 copy of the value stream for the float datapath.
+    pub fn values_f32(&self) -> Vec<f32> {
+        self.val.iter().map(|&v| v as f32).collect()
+    }
+}
+
+/// A destination-partitioned packet schedule: `num_shards` independent
+/// aligned streams whose destination ranges tile the vertex axis.
+#[derive(Debug, Clone)]
+pub struct ShardedSchedule {
+    /// Packet width B (edges per clock, per compute unit).
+    pub b: usize,
+    /// Number of vertices of the underlying matrix.
+    pub num_vertices: usize,
+    /// Number of real (non-padding) edges across all shards.
+    pub num_edges: usize,
+    /// The per-CU streams, in destination order.
+    pub shards: Vec<ShardStream>,
+}
+
+impl ShardedSchedule {
+    /// Partition a destination-sorted COO matrix into `num_shards`
+    /// nnz-balanced contiguous destination ranges and build one aligned
+    /// packet stream per range.
+    pub fn build(coo: &CooMatrix, b: usize, num_shards: usize) -> Self {
+        assert!(b >= 1);
+        assert!(num_shards >= 1);
+        debug_assert!(coo.validate().is_ok());
+        let n = coo.num_vertices;
+        // in-degree of every destination = per-vertex nnz of the stream
+        let mut counts = vec![0usize; n];
+        for &xi in &coo.x {
+            counts[xi as usize] += 1;
+        }
+        let ranges = partition::balanced_ranges(&counts, num_shards);
+        // prefix sums over counts give each range's edge span directly
+        // (coo.x is sorted by destination)
+        let mut prefix = vec![0usize; n + 1];
+        for v in 0..n {
+            prefix[v + 1] = prefix[v] + counts[v];
+        }
+        let shards = ranges
+            .iter()
+            .map(|r| {
+                let lo = prefix[r.start];
+                let hi = prefix[r.end];
+                let (x, y, val) =
+                    align_stream(b, &coo.x[lo..hi], &coo.y[lo..hi], &coo.val[lo..hi]);
+                let dangling_idx = (r.start..r.end)
+                    .filter(|&v| coo.dangling[v])
+                    .map(|v| v as VertexId)
+                    .collect();
+                ShardStream {
+                    dst_start: r.start,
+                    dst_end: r.end,
+                    num_edges: hi - lo,
+                    x,
+                    y,
+                    val,
+                    dangling_idx,
+                }
+            })
+            .collect();
+        Self { b, num_vertices: n, num_edges: coo.num_edges(), shards }
+    }
+
+    /// Wrap an already-aligned single stream as a one-shard schedule —
+    /// byte-identical to `build(coo, b, 1)` (the one-shard stream *is* the
+    /// single-stream schedule), but without a second alignment pass. Used
+    /// by `PreparedGraph` for the common single-shard preparation.
+    pub fn from_packet_schedule(sched: &PacketSchedule) -> Self {
+        let dangling_idx = (0..sched.num_vertices as VertexId)
+            .filter(|&v| sched.dangling[v as usize])
+            .collect();
+        Self {
+            b: sched.b,
+            num_vertices: sched.num_vertices,
+            num_edges: sched.num_edges,
+            shards: vec![ShardStream {
+                dst_start: 0,
+                dst_end: sched.num_vertices,
+                num_edges: sched.num_edges,
+                x: sched.x.clone(),
+                y: sched.y.clone(),
+                val: sched.val.clone(),
+                dangling_idx,
+            }],
+        }
+    }
+
+    /// Number of shards (compute units).
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total slots (edges + padding) across all shards.
+    pub fn num_slots(&self) -> usize {
+        self.shards.iter().map(|s| s.num_slots()).sum()
+    }
+
+    /// Aligned packet count of each shard — the per-channel stream length
+    /// the multi-CU cycle model charges (edge-sweep time is the max).
+    pub fn shard_packets(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.num_slots() / self.b).collect()
+    }
+
+    /// Fraction of slots that are padding, over all shards. Per-shard
+    /// alignment can pad more than the single-stream schedule (each shard
+    /// re-aligns its own tail), which is exactly the overhead a per-channel
+    /// hardware layout pays.
+    pub fn padding_overhead(&self) -> f64 {
+        let slots = self.num_slots();
+        if slots == 0 {
+            return 0.0;
+        }
+        1.0 - self.num_edges as f64 / slots as f64
+    }
+
+    /// Check the sharding invariants (used by property tests): ranges tile
+    /// `[0, |V|)` in order, per-shard streams uphold the packet window
+    /// invariant within their range, and real edges are partitioned.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut expected_start = 0usize;
+        let mut edges = 0usize;
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.dst_start != expected_start {
+                return Err(format!(
+                    "shard {i} starts at {} (expected {expected_start})",
+                    s.dst_start
+                ));
+            }
+            if s.dst_end < s.dst_start || s.dst_end > self.num_vertices {
+                return Err(format!(
+                    "shard {i} range [{}, {}) out of bounds",
+                    s.dst_start, s.dst_end
+                ));
+            }
+            expected_start = s.dst_end;
+            edges += s.num_edges;
+            if s.x.len() % self.b != 0 {
+                return Err(format!("shard {i} slot count not a multiple of b"));
+            }
+            if s.x.len() != s.y.len() || s.x.len() != s.val.len() {
+                return Err(format!("shard {i} stream arrays have mismatched lengths"));
+            }
+            for p in 0..s.x.len() / self.b {
+                let lo = p * self.b;
+                let first = s.x[lo];
+                for j in 0..self.b {
+                    let xi = s.x[lo + j];
+                    if (xi as usize) < s.dst_start || (xi as usize) >= s.dst_end {
+                        return Err(format!("shard {i} packet {p} escapes its destination range"));
+                    }
+                    if xi < first || (xi - first) >= self.b as VertexId {
+                        return Err(format!("shard {i} packet {p} slot {j} violates window"));
+                    }
+                }
+            }
+            for &dv in &s.dangling_idx {
+                if (dv as usize) < s.dst_start || (dv as usize) >= s.dst_end {
+                    return Err(format!("shard {i} dangling index {dv} outside its range"));
+                }
+            }
+        }
+        if expected_start != self.num_vertices {
+            return Err("shard ranges do not cover all vertices".into());
+        }
+        if edges != self.num_edges {
+            return Err(format!("shards carry {edges} edges, matrix has {}", self.num_edges));
+        }
+        Ok(())
+    }
+}
+
+/// Sharded scatter SpMV: `out = X · p` for all κ lanes, computed as one
+/// independent scatter per shard. Each shard writes only its own
+/// destination slice `out[dst_start·κ .. dst_end·κ]`, so the workers run
+/// with no synchronization (scoped threads, one per shard — the software
+/// analogue of per-CU URAM banks). `vals[i]` is shard `i`'s value stream
+/// quantized for the datapath.
+///
+/// Bit-identity: every destination's products are accumulated within one
+/// shard in original stream order, so the result equals [`super::fast_spmv`]
+/// on the single-stream schedule for **every** datapath — see the
+/// saturating-add argument in [`super::fast`] and the cross-shard property
+/// tests.
+pub fn fast_spmv_sharded<D: Datapath>(
+    d: &D,
+    sched: &ShardedSchedule,
+    vals: &[Vec<D::Word>],
+    kappa: usize,
+    p: &[D::Word],
+    out: &mut [D::Word],
+) {
+    let n = sched.num_vertices;
+    assert_eq!(vals.len(), sched.shards.len(), "one value stream per shard");
+    assert_eq!(p.len(), n * kappa);
+    assert_eq!(out.len(), n * kappa);
+    for (s, v) in sched.shards.iter().zip(vals) {
+        assert_eq!(v.len(), s.num_slots(), "value stream length of a shard");
+    }
+
+    if sched.shards.len() == 1 {
+        // single CU: run inline — no thread overhead, identical to fast_spmv
+        run_shard(d, &sched.shards[0], &vals[0], kappa, p, out);
+        return;
+    }
+
+    // split the output into the shards' disjoint destination slices
+    let mut slices: Vec<&mut [D::Word]> = Vec::with_capacity(sched.shards.len());
+    let mut rest = out;
+    for s in &sched.shards {
+        let (head, tail) = rest.split_at_mut(s.num_dst_vertices() * kappa);
+        slices.push(head);
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty());
+
+    // work = edges × lanes, matching the word-count thresholds of the
+    // dangling/update sweeps
+    let serial = sched.num_edges * kappa < PARALLEL_WORK_PER_SHARD * sched.shards.len();
+    let work: Vec<_> = sched.shards.iter().zip(vals).zip(slices).collect();
+    fan_out(work, serial, |((shard, svals), slice)| {
+        run_shard(d, shard, svals, kappa, p, slice)
+    });
+}
+
+/// One shard's scatter: zero the slice, scatter the shard's stream into it
+/// (destinations rebased by `dst_start`), clamp.
+fn run_shard<D: Datapath>(
+    d: &D,
+    shard: &ShardStream,
+    vals: &[D::Word],
+    kappa: usize,
+    p: &[D::Word],
+    out: &mut [D::Word],
+) {
+    debug_assert_eq!(out.len(), shard.num_dst_vertices() * kappa);
+    out.fill(d.zero());
+    super::fast::scatter(d, &shard.x, &shard.y, vals, kappa, shard.dst_start, p, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::spmv::datapath::{FixedPath, FloatPath};
+    use crate::spmv::{fast_spmv, PacketSchedule};
+
+    fn quantized_shards(s: &ShardedSchedule, fmt: &FixedFormat) -> Vec<Vec<u64>> {
+        s.shards.iter().map(|sh| sh.quantized_values(fmt)).collect()
+    }
+
+    #[test]
+    fn one_shard_stream_identical_to_packet_schedule() {
+        let g = crate::graph::generators::holme_kim(300, 4, 0.3, 11);
+        let coo = CooMatrix::from_graph(&g);
+        for b in [2usize, 8] {
+            let single = PacketSchedule::build(&coo, b);
+            let sharded = ShardedSchedule::build(&coo, b, 1);
+            sharded.validate().unwrap();
+            assert_eq!(sharded.num_shards(), 1);
+            let s = &sharded.shards[0];
+            assert_eq!((s.dst_start, s.dst_end), (0, 300));
+            assert_eq!(s.x, single.x, "b={b}");
+            assert_eq!(s.y, single.y);
+            assert_eq!(s.val, single.val);
+            assert_eq!(sharded.padding_overhead(), single.padding_overhead());
+            // the wrap constructor is the same schedule without re-aligning
+            let wrapped = ShardedSchedule::from_packet_schedule(&single);
+            wrapped.validate().unwrap();
+            assert_eq!(wrapped.shards[0].x, s.x);
+            assert_eq!(wrapped.shards[0].dangling_idx, s.dangling_idx);
+        }
+    }
+
+    #[test]
+    fn sharded_matches_single_stream_fixed_bit_exact() {
+        let g = crate::graph::generators::erdos_renyi(400, 0.02, 7);
+        let coo = CooMatrix::from_graph(&g);
+        let d = FixedPath::paper(24);
+        let kappa = 4;
+        let sched = PacketSchedule::build(&coo, 8);
+        let vals = sched.quantized_values(&d.fmt);
+        let p: Vec<u64> =
+            (0..400 * kappa).map(|i| d.fmt.quantize(1.0 / (1.0 + i as f64))).collect();
+        let mut single = vec![0u64; 400 * kappa];
+        fast_spmv(&d, &sched, &vals, kappa, &p, &mut single);
+        for shards in [1usize, 2, 3, 8] {
+            let sharded = ShardedSchedule::build(&coo, 8, shards);
+            sharded.validate().unwrap();
+            let svals = quantized_shards(&sharded, &d.fmt);
+            let mut out = vec![0u64; 400 * kappa];
+            fast_spmv_sharded(&d, &sharded, &svals, kappa, &p, &mut out);
+            assert_eq!(single, out, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn sharded_matches_single_stream_float_bit_exact() {
+        // per-destination accumulation happens entirely inside one shard in
+        // stream order, so even IEEE addition sees the same sequence
+        let g = crate::graph::generators::watts_strogatz(256, 6, 0.2, 9);
+        let coo = CooMatrix::from_graph(&g);
+        let kappa = 2;
+        let sched = PacketSchedule::build(&coo, 8);
+        let vals = sched.values_f32();
+        let p: Vec<f32> = (0..256 * kappa).map(|i| 1.0 / (1.0 + i as f32)).collect();
+        let mut single = vec![0f32; 256 * kappa];
+        fast_spmv(&FloatPath, &sched, &vals, kappa, &p, &mut single);
+        let sharded = ShardedSchedule::build(&coo, 8, 4);
+        let svals: Vec<Vec<f32>> = sharded.shards.iter().map(|s| s.values_f32()).collect();
+        let mut out = vec![0f32; 256 * kappa];
+        fast_spmv_sharded(&FloatPath, &sharded, &svals, kappa, &p, &mut out);
+        assert_eq!(single, out, "float sharding must be bit-transparent");
+    }
+
+    #[test]
+    fn empty_ranges_and_all_dangling_rows() {
+        // every edge lands on vertex 0; vertices 32.. are dangling with no
+        // in-edges, so most shards own empty streams and empty ranges
+        let n = 64;
+        let edges: Vec<(VertexId, VertexId)> = (1..32u32).map(|s| (s, 0)).collect();
+        let g = Graph::new(n, edges);
+        let coo = CooMatrix::from_graph(&g);
+        let d = FixedPath::paper(20);
+        let sched = PacketSchedule::build(&coo, 4);
+        let vals = sched.quantized_values(&d.fmt);
+        let p = vec![d.fmt.quantize(0.25); n];
+        let mut single = vec![0u64; n];
+        fast_spmv(&d, &sched, &vals, 1, &p, &mut single);
+        for shards in [2usize, 7, 64] {
+            let sharded = ShardedSchedule::build(&coo, 4, shards);
+            sharded.validate().unwrap();
+            assert!(sharded.shards.iter().any(|s| s.num_edges == 0), "shards={shards}");
+            let svals = quantized_shards(&sharded, &d.fmt);
+            let mut out = vec![0u64; n];
+            fast_spmv_sharded(&d, &sharded, &svals, 1, &p, &mut out);
+            assert_eq!(single, out, "shards={shards}");
+        }
+        // dangling indices are partitioned across the shards
+        let sharded = ShardedSchedule::build(&coo, 4, 7);
+        let all_dangling: Vec<VertexId> =
+            sharded.shards.iter().flat_map(|s| s.dangling_idx.iter().copied()).collect();
+        let expect: Vec<VertexId> =
+            (0..n as VertexId).filter(|&v| coo.dangling[v as usize]).collect();
+        assert_eq!(all_dangling, expect);
+    }
+
+    #[test]
+    fn shard_packets_and_padding_reported() {
+        // destinations 0 and 100 in separate shards: each stream pads its
+        // own packet tail
+        let coo = CooMatrix::from_graph(&Graph::new(101, vec![(1, 0), (2, 100)]));
+        let sharded = ShardedSchedule::build(&coo, 4, 2);
+        sharded.validate().unwrap();
+        assert_eq!(sharded.shard_packets(), vec![1, 1]);
+        assert!(sharded.padding_overhead() > 0.5);
+        assert_eq!(sharded.num_edges, 2);
+    }
+
+    #[test]
+    fn threaded_fan_out_matches_single_stream() {
+        // enough edges per shard to cross PARALLEL_WORK_PER_SHARD, so the
+        // scoped-thread path (not the sequential fallback) is checked
+        let g = crate::graph::generators::erdos_renyi(3000, 0.005, 13);
+        let coo = CooMatrix::from_graph(&g);
+        assert!(coo.num_edges() >= PARALLEL_WORK_PER_SHARD * 4, "graph too small for this test");
+        let d = FixedPath::paper(26);
+        let kappa = 2;
+        let sched = PacketSchedule::build(&coo, 8);
+        let vals = sched.quantized_values(&d.fmt);
+        let p: Vec<u64> =
+            (0..3000 * kappa).map(|i| d.fmt.quantize(1.0 / (1.0 + i as f64))).collect();
+        let mut single = vec![0u64; 3000 * kappa];
+        fast_spmv(&d, &sched, &vals, kappa, &p, &mut single);
+        let sharded = ShardedSchedule::build(&coo, 8, 4);
+        let svals = quantized_shards(&sharded, &d.fmt);
+        let mut out = vec![0u64; 3000 * kappa];
+        fast_spmv_sharded(&d, &sharded, &svals, kappa, &p, &mut out);
+        assert_eq!(single, out);
+    }
+
+    #[test]
+    fn more_shards_than_vertices() {
+        let coo = CooMatrix::from_graph(&Graph::new(3, vec![(0, 1), (1, 2)]));
+        let sharded = ShardedSchedule::build(&coo, 2, 8);
+        sharded.validate().unwrap();
+        assert_eq!(sharded.num_shards(), 8);
+        assert_eq!(sharded.shards.iter().map(|s| s.num_edges).sum::<usize>(), 2);
+    }
+}

@@ -7,7 +7,9 @@ use ppr_spmv::fixed::FixedFormat;
 use ppr_spmv::graph::CooMatrix;
 use ppr_spmv::ppr::{PprConfig, PreparedGraph};
 use ppr_spmv::spmv::datapath::FixedPath;
-use ppr_spmv::spmv::{reference, PacketSchedule, StreamingSpmv};
+use ppr_spmv::spmv::{
+    fast_spmv_sharded, reference, PacketSchedule, ShardedSchedule, StreamingSpmv,
+};
 use ppr_spmv::testutil;
 use std::sync::Arc;
 
@@ -51,6 +53,99 @@ fn prop_fast_equals_streaming() {
         StreamingSpmv::new(d, b, kappa).run(&sched, &vals, &p, &mut a);
         ppr_spmv::spmv::fast_spmv(&d, &sched, &vals, kappa, &p, &mut b_out);
         assert_eq!(a, b_out);
+    });
+}
+
+#[test]
+fn prop_sharded_fast_spmv_equals_streaming() {
+    // the sharded hot-path kernel must reproduce the single-stream
+    // architecture model bit-for-bit for any shard count — destination
+    // partitioning keeps every output word's accumulation inside one shard
+    testutil::check(25, 0xB0, |rng| {
+        let g = testutil::arb_graph(rng, 250);
+        let coo = CooMatrix::from_graph(&g);
+        let bits = 20 + 2 * rng.next_index(4) as u32;
+        let b = [2usize, 4, 8][rng.next_index(3)];
+        let kappa = 1 + rng.next_index(8);
+        let d = FixedPath::paper(bits);
+        let sched = PacketSchedule::build(&coo, b);
+        let vals = sched.quantized_values(&d.fmt);
+        let p_f = testutil::arb_unit_vec(rng, g.num_vertices * kappa);
+        let p: Vec<u64> = p_f.iter().map(|&x| d.fmt.quantize(x)).collect();
+        let mut expect = vec![0u64; g.num_vertices * kappa];
+        StreamingSpmv::new(d, b, kappa).run(&sched, &vals, &p, &mut expect);
+        for shards in [1usize, 2, 3, 7] {
+            let sharded = ShardedSchedule::build(&coo, b, shards);
+            sharded.validate().expect("sharding invariants");
+            assert_eq!(sharded.num_edges, coo.num_edges());
+            let svals: Vec<Vec<u64>> =
+                sharded.shards.iter().map(|s| s.quantized_values(&d.fmt)).collect();
+            let mut out = vec![0u64; g.num_vertices * kappa];
+            fast_spmv_sharded(&d, &sharded, &svals, kappa, &p, &mut out);
+            assert_eq!(expect, out, "shards={shards} b={b} bits={bits} kappa={kappa}");
+        }
+    });
+}
+
+#[test]
+fn sharded_spmv_empty_ranges_and_all_dangling_rows() {
+    // adversarial shapes: a hub destination (one shard owns almost all
+    // nnz), long runs of in-degree-0 vertices (empty destination ranges),
+    // and every non-hub vertex dangling
+    let n = 96;
+    let edges: Vec<(u32, u32)> = (1..48u32).map(|s| (s, 0)).collect();
+    let g = ppr_spmv::graph::Graph::new(n, edges);
+    let coo = CooMatrix::from_graph(&g);
+    let d = FixedPath::paper(22);
+    let b = 8;
+    let sched = PacketSchedule::build(&coo, b);
+    let vals = sched.quantized_values(&d.fmt);
+    let kappa = 3;
+    let p: Vec<u64> = (0..n * kappa).map(|i| d.fmt.quantize(0.9 / (1.0 + i as f64))).collect();
+    let mut expect = vec![0u64; n * kappa];
+    StreamingSpmv::new(d, b, kappa).run(&sched, &vals, &p, &mut expect);
+    for shards in [1usize, 2, 3, 7, 96] {
+        let sharded = ShardedSchedule::build(&coo, b, shards);
+        sharded.validate().expect("sharding invariants");
+        if shards > 1 {
+            assert!(
+                sharded.shards.iter().any(|s| s.num_edges == 0),
+                "hub graph must yield empty shards at {shards} shards"
+            );
+        }
+        let svals: Vec<Vec<u64>> =
+            sharded.shards.iter().map(|s| s.quantized_values(&d.fmt)).collect();
+        let mut out = vec![0u64; n * kappa];
+        fast_spmv_sharded(&d, &sharded, &svals, kappa, &p, &mut out);
+        assert_eq!(expect, out, "shards={shards}");
+    }
+}
+
+#[test]
+fn prop_sharded_ppr_bit_identical_across_shard_counts() {
+    // whole-engine invariant: every sweep of Alg. 1 is sharded, and on the
+    // fixed datapath a fixed-iteration run's scores must not depend on the
+    // shard count (early-exit thresholds may differ in the norm's last ulp
+    // — see the batched.rs module docs)
+    testutil::check(10, 0xB1, |rng| {
+        let g = testutil::arb_graph(rng, 150);
+        let coo = CooMatrix::from_graph(&g);
+        let bits = 20 + 2 * rng.next_index(4) as u32;
+        let d = FixedPath::paper(bits);
+        let dangling = g.dangling();
+        let pv: Vec<u32> =
+            (0..g.num_vertices as u32).filter(|&v| !dangling[v as usize]).take(2).collect();
+        if pv.is_empty() {
+            return;
+        }
+        let cfg = PprConfig { max_iterations: 8, ..Default::default() };
+        let pg1 = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, 1));
+        let base = ppr_spmv::ppr::BatchedPpr::new(d, pg1, 2, 0.85).run(&pv, &cfg);
+        for shards in [2usize, 5] {
+            let pgs = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, shards));
+            let out = ppr_spmv::ppr::BatchedPpr::new(d, pgs, 2, 0.85).run(&pv, &cfg);
+            assert_eq!(base.scores, out.scores, "shards={shards} bits={bits}");
+        }
     });
 }
 
@@ -105,7 +200,7 @@ fn prop_fixed_ppr_mass_bounded_by_one() {
         let out = engine.run(&pv, &PprConfig { max_iterations: 12, ..Default::default() });
         for lane in 0..2 {
             let total: f64 =
-                out.lane(lane, 2).iter().map(|&w| d.fmt.to_f64(w)).sum();
+                out.lane(lane).iter().map(|&w| d.fmt.to_f64(w)).sum();
             assert!(total <= 1.0 + 1e-9, "lane {lane} mass {total}");
             assert!(total > 0.1, "lane {lane} collapsed to {total}");
         }

@@ -1,0 +1,13 @@
+//! `cargo bench --bench fusion_speedup [-- --full | --scale N]`
+//!
+//! End-to-end PPR iteration throughput of the fused executor vs the
+//! unfused three-sweep engine (on the persistent pool) vs the legacy
+//! spawn-per-sweep engine, across 1/4/8 shards and the paper's four
+//! bit-widths. Also emits the machine-readable `BENCH_fusion.json`
+//! consumed by CI. See `bench_harness::fusion`.
+
+fn main() {
+    let opts = ppr_spmv::bench_harness::ExpOptions::from_args();
+    println!("# fusion speedup [{}]\n", opts.descriptor());
+    ppr_spmv::bench_harness::fusion::run(&opts);
+}

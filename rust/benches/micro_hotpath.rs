@@ -4,6 +4,9 @@
 //! - streaming COO SpMV vs scalar COO vs CSR (the paper's §3 layout
 //!   argument) at several packet widths B
 //! - κ scaling of the batched PPR engine (edges read once per batch)
+//! - fused vs unfused vs legacy (spawn-per-sweep) iteration executors at
+//!   1/4/8 shards — the end-to-end win of the fused sharded pass on the
+//!   persistent worker pool
 //! - truncation vs round-to-nearest quantization (the paper's rejected
 //!   policy), measuring both speed and numerical behaviour
 //! - packet-schedule construction cost + padding overhead by distribution
@@ -11,7 +14,7 @@
 
 use ppr_spmv::fixed::{FixedFormat, RoundingMode};
 use ppr_spmv::graph::{CooMatrix, CsrMatrix, DatasetSpec};
-use ppr_spmv::ppr::{BatchedPpr, PprConfig, PreparedGraph};
+use ppr_spmv::ppr::{BatchedPpr, Executor, PprConfig, PreparedGraph};
 use ppr_spmv::spmv::datapath::FixedPath;
 use ppr_spmv::spmv::{csr_kernel, reference, PacketSchedule, StreamingSpmv};
 use ppr_spmv::util::report::Table;
@@ -30,9 +33,41 @@ fn main() {
 
     spmv_kernels(&coo, n, e);
     kappa_scaling(&ds.graph);
+    fusion_ablation(&coo);
     rounding_ablation(&coo, n);
     schedule_costs(scale);
     pjrt_step_latency();
+}
+
+/// Fused single-pass iteration vs the three-sweep engine (pooled and
+/// legacy spawn-per-sweep), whole κ-batches at paper iterations.
+fn fusion_ablation(coo: &CooMatrix) {
+    let mut t = Table::new(
+        "iteration executor (26b, κ=8, 10 iterations): fused vs unfused vs legacy",
+        &["shards", "fused ms", "unfused ms", "legacy ms", "fused vs legacy"],
+    );
+    let d = FixedPath::paper(26);
+    let kappa = 8;
+    let cfg = PprConfig::paper_timed();
+    let pers: Vec<u32> = (1..=kappa as u32).collect();
+    for shards in [1usize, 4, 8] {
+        let pg = Arc::new(PreparedGraph::from_coo_sharded(coo, 8, shards));
+        let time = |executor: Executor| {
+            let mut engine = BatchedPpr::new(d, pg.clone(), kappa, 0.85).with_executor(executor);
+            bench(1, 5, || engine.run_scratch(&pers, &cfg).iterations).median
+        };
+        let fused = time(Executor::Fused);
+        let unfused = time(Executor::Unfused);
+        let legacy = time(Executor::UnfusedScoped);
+        t.row(&[
+            shards.to_string(),
+            format!("{:.2}", fused * 1e3),
+            format!("{:.2}", unfused * 1e3),
+            format!("{:.2}", legacy * 1e3),
+            format!("{:.2}x", legacy / fused),
+        ]);
+    }
+    t.emit(None);
 }
 
 /// SpMV kernel comparison: edges/s per layout and packet width.

@@ -1,0 +1,239 @@
+//! Fusion-speedup sweep — the end-to-end payoff of the fused iteration
+//! executor on the persistent worker pool (DESIGN.md §5).
+//!
+//! For each paper bit-width and shard count ∈ {1, 4, 8}, the sweep runs
+//! whole PPR batches (κ lanes, the paper's 10 iterations) through three
+//! executors of the same engine on the same prepared graph:
+//!
+//! - **fused** — one sweep per iteration on the persistent pool (the
+//!   production default);
+//! - **unfused** — the three-sweep engine, still on the pool (the
+//!   `--no-fused` escape hatch), isolating the pass-fusion win;
+//! - **legacy** — the three-sweep engine with scoped thread spawns per
+//!   sweep (the pre-pool engine), so `legacy / fused` is the end-to-end
+//!   speedup this PR's tentpole delivers.
+//!
+//! All three are bit-identical on the fixed path (pinned by property
+//! tests), so this table measures *time only*. Results are printed as a
+//! table, dropped as CSV next to the other experiments, and emitted as
+//! machine-readable `BENCH_fusion.json` for CI trend tracking.
+
+use super::ExpOptions;
+use crate::ppr::{BatchedPpr, Executor, PprConfig, PreparedGraph};
+use crate::spmv::datapath::FixedPath;
+use crate::util::report::Table;
+use crate::util::timing::bench;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Shard counts swept (1 = the paper's single-stream design).
+pub const FUSION_SHARD_SWEEP: [usize; 3] = [1, 4, 8];
+
+/// One measured point of the sweep.
+#[derive(Debug, Clone)]
+pub struct FusionPoint {
+    /// Bit-width of the fixed-point datapath.
+    pub bits: u32,
+    /// Shard count.
+    pub shards: usize,
+    /// Median seconds per κ-batch, fused executor.
+    pub fused_seconds: f64,
+    /// Median seconds per κ-batch, unfused executor on the pool.
+    pub unfused_seconds: f64,
+    /// Median seconds per κ-batch, legacy spawn-per-sweep executor.
+    pub legacy_seconds: f64,
+    /// Edge throughput of the fused run (edges × lanes × iterations / s).
+    pub fused_edges_per_second: f64,
+    /// Edge throughput of the unfused-on-pool run.
+    pub unfused_edges_per_second: f64,
+    /// `legacy_seconds / fused_seconds` — the end-to-end win.
+    pub speedup_vs_legacy: f64,
+    /// `unfused_seconds / fused_seconds` — the pass-fusion win alone.
+    pub speedup_vs_unfused: f64,
+    /// Modelled fused multi-CU cycles per iteration.
+    pub model_cycles_fused: u64,
+    /// Modelled unfused multi-CU cycles per iteration.
+    pub model_cycles_unfused: u64,
+}
+
+/// Run the sweep on one graph; `kappa` lanes per batch, `iterations` PPR
+/// iterations per run.
+pub fn sweep(coo: &crate::graph::CooMatrix, kappa: usize, iterations: usize) -> Vec<FusionPoint> {
+    let e = coo.num_edges();
+    let cfg = PprConfig { max_iterations: iterations, ..Default::default() };
+    let pers: Vec<u32> = (1..=kappa as u32).collect();
+    let mut points = Vec::new();
+    for &shards in &FUSION_SHARD_SWEEP {
+        let pg = Arc::new(PreparedGraph::from_coo_sharded(coo, crate::PAPER_B, shards));
+        for bits in [26u32, 24, 22, 20] {
+            let d = FixedPath::paper(bits);
+            let precision = crate::fixed::Precision::Fixed(bits);
+            let model = crate::fpga::pipeline::PipelineModel::new(
+                crate::fpga::FpgaConfig::sized_for(precision, coo.num_vertices),
+            )
+            .expect("design fits");
+            let time = |executor: Executor| {
+                let mut engine = BatchedPpr::new(d, pg.clone(), kappa, crate::PAPER_ALPHA)
+                    .with_executor(executor);
+                bench(1, 5, || engine.run_scratch(&pers, &cfg).iterations).median
+            };
+            let fused_seconds = time(Executor::Fused);
+            let unfused_seconds = time(Executor::Unfused);
+            let legacy_seconds = time(Executor::UnfusedScoped);
+            let work = e as f64 * kappa as f64 * iterations as f64;
+            points.push(FusionPoint {
+                bits,
+                shards,
+                fused_seconds,
+                unfused_seconds,
+                legacy_seconds,
+                fused_edges_per_second: work / fused_seconds,
+                unfused_edges_per_second: work / unfused_seconds,
+                speedup_vs_legacy: legacy_seconds / fused_seconds,
+                speedup_vs_unfused: unfused_seconds / fused_seconds,
+                model_cycles_fused: model.cycles_per_iteration_fused_sharded(&pg.sharded),
+                model_cycles_unfused: model.cycles_per_iteration_sharded(&pg.sharded),
+            });
+        }
+    }
+    points
+}
+
+/// Serialize the sweep as the machine-readable `BENCH_fusion.json`
+/// consumed by CI trend tracking (hand-rolled: the vendored crate set has
+/// no serde).
+pub fn to_json(points: &[FusionPoint], descriptor: &str) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"bench\": \"fusion_speedup\",\n  \"config\": \"{descriptor}\",\n"));
+    s.push_str("  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"bits\": {}, \"shards\": {}, \"fused_s\": {:.6}, \"unfused_s\": {:.6}, \
+             \"legacy_s\": {:.6}, \"fused_edges_per_s\": {:.1}, \"unfused_edges_per_s\": {:.1}, \
+             \"speedup_vs_legacy\": {:.3}, \"speedup_vs_unfused\": {:.3}, \
+             \"model_cycles_fused\": {}, \"model_cycles_unfused\": {}}}{}\n",
+            p.bits,
+            p.shards,
+            p.fused_seconds,
+            p.unfused_seconds,
+            p.legacy_seconds,
+            p.fused_edges_per_second,
+            p.unfused_edges_per_second,
+            p.speedup_vs_legacy,
+            p.speedup_vs_unfused,
+            p.model_cycles_fused,
+            p.model_cycles_unfused,
+            if i + 1 < points.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write `BENCH_fusion.json` into `dir`; returns the path written.
+pub fn emit_json(
+    points: &[FusionPoint],
+    descriptor: &str,
+    dir: &Path,
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_fusion.json");
+    std::fs::write(&path, to_json(points, descriptor))?;
+    Ok(path)
+}
+
+/// The full fusion experiment: HK graph at the configured scale, κ and
+/// iteration count from the paper's timed setup.
+pub fn run(opts: &ExpOptions) -> Table {
+    let spec = crate::graph::DatasetSpec::table1_suite(opts.scale)
+        .into_iter()
+        .find(|s| s.name == "HK-100k")
+        .expect("HK-100k in the Table 1 suite");
+    let ds = spec.build();
+    let coo = crate::graph::CooMatrix::from_graph(&ds.graph);
+    let kappa = crate::PAPER_KAPPA;
+    let mut t = Table::new(
+        &format!(
+            "Fusion speedup — fused vs unfused vs legacy PPR iteration, |V|={} |E|={} κ={kappa} ({})",
+            ds.graph.num_vertices,
+            ds.graph.num_edges(),
+            opts.descriptor()
+        ),
+        &[
+            "width",
+            "shards",
+            "fused ms",
+            "unfused ms",
+            "legacy ms",
+            "vs legacy",
+            "vs unfused",
+            "model cyc fused",
+            "model cyc unfused",
+        ],
+    );
+    let points = sweep(&coo, kappa, opts.iterations);
+    for p in &points {
+        t.row(&[
+            format!("{}b", p.bits),
+            format!("{}", p.shards),
+            format!("{:.3}", p.fused_seconds * 1e3),
+            format!("{:.3}", p.unfused_seconds * 1e3),
+            format!("{:.3}", p.legacy_seconds * 1e3),
+            format!("{:.2}x", p.speedup_vs_legacy),
+            format!("{:.2}x", p.speedup_vs_unfused),
+            format!("{}", p.model_cycles_fused),
+            format!("{}", p.model_cycles_unfused),
+        ]);
+    }
+    t.emit(opts.csv_path("fusion_speedup").as_deref());
+    if let Some(dir) = &opts.csv_dir {
+        match emit_json(&points, &opts.descriptor(), dir) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("could not write BENCH_fusion.json: {e}"),
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_reports_all_points_and_json_shape() {
+        // tiny graph: bookkeeping correctness, not timing
+        let g = crate::graph::generators::holme_kim(300, 4, 0.25, 33);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let pts = sweep(&coo, 2, 2);
+        assert_eq!(pts.len(), 4 * FUSION_SHARD_SWEEP.len());
+        for p in &pts {
+            assert!(p.fused_seconds > 0.0);
+            assert!(p.unfused_seconds > 0.0);
+            assert!(p.legacy_seconds > 0.0);
+            assert!(p.speedup_vs_legacy > 0.0);
+            assert!(p.model_cycles_fused > 0);
+            assert!(
+                p.model_cycles_fused < p.model_cycles_unfused,
+                "fused hardware model must charge fewer cycles"
+            );
+        }
+        let json = to_json(&pts, "test");
+        assert!(json.contains("\"bench\": \"fusion_speedup\""));
+        assert!(json.contains("\"speedup_vs_legacy\""));
+        // every point serialized, commas between but not after the last
+        assert_eq!(json.matches("\"bits\"").count(), pts.len());
+        assert!(!json.contains("},\n  ]"));
+    }
+
+    #[test]
+    fn emit_json_writes_file() {
+        let g = crate::graph::generators::holme_kim(200, 3, 0.2, 5);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let all = sweep(&coo, 1, 1);
+        let dir = std::env::temp_dir().join("ppr_fusion_json_test");
+        let path = emit_json(&all[..2], "test", &dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with('{') && text.trim_end().ends_with('}'));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

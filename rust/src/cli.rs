@@ -63,7 +63,8 @@ impl Args {
 }
 
 /// Build a RunConfig from common CLI options (`--precision`, `--kappa`,
-/// `--iterations`, `--alpha`, `--shards`, `--config <file>`).
+/// `--iterations`, `--alpha`, `--shards`, `--no-fused`,
+/// `--config <file>`).
 pub fn run_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = match args.options.get("config") {
         Some(path) => RunConfig::load(std::path::Path::new(path))?,
@@ -83,6 +84,9 @@ pub fn run_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(s) = args.get::<usize>("shards") {
         cfg.num_shards = s;
+    }
+    if args.flags.contains("no-fused") {
+        cfg.fused = false;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -159,10 +163,10 @@ pub fn dispatch(args: Args) -> Result<()> {
 const USAGE: &str = "\
 ppr-spmv — reduced-precision streaming SpMV for Personalized PageRank
 USAGE:
-  ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|shards|all>
+  ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|shards|fusion|all>
             [--full] [--scale N] [--requests N] [--iterations N] [--no-csv]
   ppr-spmv serve  [--graph NAME|--graph-file PATH] [--precision 26b]
-            [--engine native|pjrt|cpu] [--kappa 8] [--shards N]
+            [--engine native|pjrt|cpu] [--kappa 8] [--shards N] [--no-fused]
             [--iterations 10] [--workers N] [--demo-requests N]
             [--deadline-ms N]
   ppr-spmv query  --vertex V [--graph NAME|--graph-file PATH] [--top 10]
@@ -205,6 +209,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "shards" => {
             bh::shard_scaling::run(&opts);
         }
+        "fusion" => {
+            bh::fusion::run(&opts);
+        }
         "all" => {
             bh::table1_datasets::run(&opts);
             bh::table2_resources::run(&opts);
@@ -217,6 +224,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             bh::fig7_convergence::run(&opts);
             bh::energy::run(&opts);
             bh::shard_scaling::run(&opts);
+            bh::fusion::run(&opts);
         }
         other => bail!("unknown experiment {other}"),
     }
@@ -382,7 +390,14 @@ mod tests {
         assert_eq!(cfg.precision, Precision::Fixed(20));
         assert_eq!(cfg.kappa, 16);
         assert_eq!(cfg.num_shards, 4);
+        assert!(cfg.fused, "fused is the default");
         assert!(run_config(&args("serve --shards 0")).is_err());
+    }
+
+    #[test]
+    fn no_fused_flag_disables_fusion() {
+        let cfg = run_config(&args("serve --no-fused")).unwrap();
+        assert!(!cfg.fused);
     }
 
     #[test]

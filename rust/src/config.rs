@@ -169,6 +169,11 @@ pub struct RunConfig {
     /// engine. `1` reproduces the single-stream engine exactly; the
     /// default is the host's available parallelism.
     pub num_shards: usize,
+    /// Run the fused iteration executor (one sweep per PPR iteration
+    /// instead of three; bit-identical on the fixed path — DESIGN.md §5).
+    /// Default on; config key `engine.fused`, CLI `--no-fused` to opt
+    /// out.
+    pub fused: bool,
     /// Damping factor α.
     pub alpha: f64,
     /// PPR iterations.
@@ -199,6 +204,7 @@ impl Default for RunConfig {
             kappa: crate::PAPER_KAPPA,
             b: crate::PAPER_B,
             num_shards: default_num_shards(),
+            fused: true,
             alpha: crate::PAPER_ALPHA,
             iterations: crate::PAPER_ITERATIONS,
             convergence_threshold: None,
@@ -226,6 +232,9 @@ impl RunConfig {
         }
         if let Some(v) = doc.get("engine", "num_shards") {
             cfg.num_shards = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("engine", "fused") {
+            cfg.fused = v.as_bool()?;
         }
         if let Some(v) = doc.get("engine", "alpha") {
             cfg.alpha = v.as_float()?;
@@ -314,6 +323,17 @@ mod tests {
         assert_eq!(cfg.kappa, 16);
         assert_eq!(cfg.num_shards, 4);
         assert_eq!(cfg.alpha, 0.85); // default preserved
+        assert!(cfg.fused, "fused defaults on");
+    }
+
+    #[test]
+    fn fused_flag_parsed_from_doc() {
+        let text = "[engine]\nfused = false\n";
+        let cfg = RunConfig::from_doc(&ConfigDoc::parse(text).unwrap()).unwrap();
+        assert!(!cfg.fused);
+        let text = "[engine]\nfused = true\n";
+        let cfg = RunConfig::from_doc(&ConfigDoc::parse(text).unwrap()).unwrap();
+        assert!(cfg.fused);
     }
 
     #[test]

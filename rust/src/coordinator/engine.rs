@@ -26,7 +26,7 @@ use super::score_block::ScoreBlock;
 use crate::config::RunConfig;
 use crate::fixed::Precision;
 use crate::graph::{CsrMatrix, VertexId};
-use crate::ppr::{cpu_baseline, BatchedPpr, PprConfig, PreparedGraph};
+use crate::ppr::{cpu_baseline, BatchedPpr, Executor, PprConfig, PreparedGraph};
 use crate::spmv::datapath::{FixedPath, FloatPath};
 use anyhow::Result;
 use std::sync::Arc;
@@ -103,16 +103,15 @@ impl NativeEngine {
         };
         let num_vertices = graph.num_vertices;
         let num_shards = graph.num_shards();
+        let executor = if cfg.fused { Executor::Fused } else { Executor::Unfused };
         let inner = match cfg.precision {
-            Precision::Fixed(w) => NativeInner::Fixed(BatchedPpr::new(
-                FixedPath::paper(w),
-                graph,
-                cfg.kappa,
-                cfg.alpha,
-            )),
-            Precision::Float32 => {
-                NativeInner::Float(BatchedPpr::new(FloatPath, graph, cfg.kappa, cfg.alpha))
-            }
+            Precision::Fixed(w) => NativeInner::Fixed(
+                BatchedPpr::new(FixedPath::paper(w), graph, cfg.kappa, cfg.alpha)
+                    .with_executor(executor),
+            ),
+            Precision::Float32 => NativeInner::Float(
+                BatchedPpr::new(FloatPath, graph, cfg.kappa, cfg.alpha).with_executor(executor),
+            ),
         };
         Self { inner, num_vertices, num_shards, cfg, ppr_cfg }
     }
@@ -131,16 +130,19 @@ impl PprEngine for NativeEngine {
         self.validate_batch(personalization)?;
         let lanes = personalization.len();
         let nv = self.num_vertices;
+        // run_scratch: scores stay in the engine's reusable buffer and
+        // are dequantized straight into the caller's ScoreBlock — no
+        // intermediate score vector per request
         let iterations = match &mut self.inner {
             NativeInner::Fixed(engine) => {
                 let fmt = engine.datapath.fmt;
-                let res = engine.run(personalization, &self.ppr_cfg);
-                out.fill_vertex_major(lanes, nv, lanes, &res.scores, |w| fmt.to_f64(w));
+                let res = engine.run_scratch(personalization, &self.ppr_cfg);
+                out.fill_vertex_major(lanes, nv, lanes, res.scores, |w| fmt.to_f64(w));
                 res.iterations
             }
             NativeInner::Float(engine) => {
-                let res = engine.run(personalization, &self.ppr_cfg);
-                out.fill_vertex_major(lanes, nv, lanes, &res.scores, |w| w as f64);
+                let res = engine.run_scratch(personalization, &self.ppr_cfg);
+                out.fill_vertex_major(lanes, nv, lanes, res.scores, |w| w as f64);
                 res.iterations
             }
         };
@@ -149,9 +151,18 @@ impl PprEngine for NativeEngine {
     }
 
     fn describe(&self) -> String {
+        let executor = match &self.inner {
+            NativeInner::Fixed(e) => e.executor(),
+            NativeInner::Float(e) => e.executor(),
+        };
         format!(
-            "native[{} κ={} B={} S={} iters={}]",
-            self.cfg.precision, self.cfg.kappa, self.cfg.b, self.num_shards, self.cfg.iterations
+            "native[{} κ={} B={} S={} {} iters={}]",
+            self.cfg.precision,
+            self.cfg.kappa,
+            self.cfg.b,
+            self.num_shards,
+            executor.label(),
+            self.cfg.iterations
         )
     }
 }
@@ -445,6 +456,46 @@ mod tests {
         let e = engine(Precision::Fixed(22));
         assert!(e.describe().contains("22b"));
         let _ = Graph::new(1, vec![]);
+    }
+
+    #[test]
+    fn describe_reports_executor_and_no_fused_takes_effect() {
+        let e = engine(Precision::Fixed(26));
+        assert!(e.describe().contains(" fused "), "{}", e.describe());
+        let cfg = RunConfig {
+            precision: Precision::Fixed(26),
+            kappa: 4,
+            iterations: 15,
+            fused: false,
+            ..Default::default()
+        };
+        let mut e = NativeEngine::new(prepared(), cfg);
+        assert!(e.describe().contains(" unfused "), "{}", e.describe());
+        // the unfused engine still serves correct rankings
+        let mut block = ScoreBlock::new();
+        e.run_batch(&[2, 9], &mut block).unwrap();
+        assert_eq!(block.top_n(0, 1)[0].vertex, 2);
+        assert_eq!(block.top_n(1, 1)[0].vertex, 9);
+    }
+
+    #[test]
+    fn fused_and_unfused_engines_bit_identical_through_serving_api() {
+        let pg = prepared();
+        let cfg = RunConfig {
+            precision: Precision::Fixed(24),
+            kappa: 4,
+            iterations: 12,
+            num_shards: 2,
+            ..Default::default()
+        };
+        let mut fused = NativeEngine::new(pg.clone(), cfg.clone());
+        let mut unfused = NativeEngine::new(pg, RunConfig { fused: false, ..cfg });
+        let mut a = ScoreBlock::new();
+        let mut b = ScoreBlock::new();
+        fused.run_batch(&[1, 5, 7], &mut a).unwrap();
+        unfused.run_batch(&[1, 5, 7], &mut b).unwrap();
+        assert_eq!(a.as_flat(), b.as_flat(), "fusion must be bit-transparent end to end");
+        assert_eq!(a.iterations(), b.iterations());
     }
 
     #[test]

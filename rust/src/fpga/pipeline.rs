@@ -17,6 +17,13 @@
 //! Result transfer back over PCIe is charged per batch; the paper reports
 //! it negligible (<1%) and the model agrees.
 //!
+//! The **fused** variant ([`PipelineModel::cycles_per_iteration_fused`],
+//! mirroring the software engine's fused executor — DESIGN.md §5) applies
+//! Eq. 1 in the write-back stage: the update sweep proceeds in lockstep
+//! with the edge stream (the slower of the two bounds the iteration), the
+//! dangling accumulation rides the write-back (no separate P_SIZE bitmap
+//! scan), and a single pipeline fill/drain is paid instead of three.
+//!
 //! The **multi-CU** variant ([`PipelineModel::cycles_per_iteration_sharded`])
 //! models one compute unit per destination shard, each with its own memory
 //! channel — the scaling design of the HBM Top-K SpMV follow-up paper.
@@ -138,10 +145,56 @@ impl PipelineModel {
         edge_sweep + dangling_scan + update_sweep
     }
 
+    /// Cycles for one PPR iteration with the three sweeps **fused** into
+    /// one pass: Eq. 1 is applied as results leave the write-back FSM, so
+    /// the update sweep overlaps the edge stream (the slower one bounds
+    /// the iteration), the dangling partial is accumulated during
+    /// write-back (the separate bitmap scan disappears), and only one
+    /// pipeline fill/drain is charged.
+    pub fn cycles_per_iteration_fused(&self, w: &Workload) -> u64 {
+        let b = self.synth.config.b as u64;
+        let v = w.num_vertices as u64;
+        let edge_sweep = w.num_packets as u64 * self.edge_ii();
+        let update_sweep = v.div_ceil(b);
+        edge_sweep.max(update_sweep) + PIPELINE_DEPTH
+    }
+
+    /// The fused iteration on a multi-CU design: every CU runs its own
+    /// fused sweep, so the iteration is bounded by the slowest shard's
+    /// `max(edge stream, update sweep)`. With one shard this is exactly
+    /// [`Self::cycles_per_iteration_fused`] for that stream.
+    pub fn cycles_per_iteration_fused_sharded(&self, sharded: &ShardedSchedule) -> u64 {
+        debug_assert_eq!(
+            sharded.b, self.synth.config.b,
+            "schedule built for a different packet width than the synthesized design"
+        );
+        let b = self.synth.config.b as u64;
+        let slowest = sharded
+            .shards
+            .iter()
+            .map(|s| {
+                let edge = (s.num_slots() / sharded.b) as u64 * self.edge_ii();
+                let update = (s.num_dst_vertices() as u64).div_ceil(b);
+                edge.max(update)
+            })
+            .max()
+            .unwrap_or(0);
+        slowest + PIPELINE_DEPTH
+    }
+
     /// Estimate the full workload on a multi-CU design (`w.num_packets`
     /// is ignored; the sharded schedule carries the per-channel streams).
     pub fn estimate_sharded(&self, w: &Workload, sharded: &ShardedSchedule) -> WorkloadEstimate {
         self.estimate_with_cycles(w, self.cycles_per_iteration_sharded(sharded))
+    }
+
+    /// Estimate the full workload on a fused multi-CU design.
+    pub fn estimate_fused_sharded(
+        &self,
+        w: &Workload,
+        sharded: &ShardedSchedule,
+    ) -> WorkloadEstimate {
+        self.estimate_with_cycles(w, self.cycles_per_iteration_fused_sharded(sharded))
     }
 
     /// Estimate the full workload.
@@ -265,6 +318,37 @@ mod tests {
         };
         assert_eq!(m.cycles_per_iteration_sharded(&sharded), m.cycles_per_iteration(&w));
         assert_eq!(m.estimate_sharded(&w, &sharded), m.estimate(&w));
+    }
+
+    #[test]
+    fn fused_model_never_slower_and_single_shard_consistent() {
+        let g = crate::graph::generators::erdos_renyi(3000, 0.004, 7);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let m = model(Precision::Fixed(26), 3000);
+        let b = m.synth.config.b;
+        for shards in [1usize, 2, 4] {
+            let sharded = ShardedSchedule::build(&coo, b, shards);
+            let fused = m.cycles_per_iteration_fused_sharded(&sharded);
+            let unfused = m.cycles_per_iteration_sharded(&sharded);
+            assert!(fused < unfused, "shards={shards}: {fused} vs {unfused}");
+            // the fused sweep still pays for its longest component
+            let max_packets = *sharded.shard_packets().iter().max().unwrap() as u64;
+            assert!(fused >= max_packets * 3, "shards={shards}");
+        }
+        // with one shard the sharded fused model equals the flat one
+        let sharded = ShardedSchedule::build(&coo, b, 1);
+        let w = Workload {
+            requests: 100,
+            iterations: 10,
+            num_vertices: 3000,
+            num_packets: sharded.num_slots() / b,
+        };
+        assert_eq!(
+            m.cycles_per_iteration_fused_sharded(&sharded),
+            m.cycles_per_iteration_fused(&w)
+        );
+        let est = m.estimate_fused_sharded(&w, &sharded);
+        assert!(est.seconds < m.estimate_sharded(&w, &sharded).seconds);
     }
 
     #[test]

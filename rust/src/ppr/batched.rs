@@ -3,32 +3,75 @@
 //! model of the FPGA computation: every multiply, add and quantization
 //! happens exactly where the hardware datapath performs it.
 //!
-//! The engine is **sharded** (DESIGN.md §4): the prepared graph carries
-//! one destination-partitioned packet stream per shard, and all three
-//! per-iteration sweeps — dangling scan, edge stream, update — fan out
-//! across the shards' disjoint destination ranges on scoped threads. With
-//! one shard every sweep runs inline and is bit-identical to the original
-//! single-stream engine; with many shards the fixed-point datapath's
-//! *score words* are still bit-identical every iteration (saturating adds
-//! of non-negative values give `min(Σ, max)` under any grouping), while
-//! the float datapath may differ in the last ulp of the dangling sum,
-//! exactly like a per-CU hardware reduction tree would.
+//! The engine is **sharded** (DESIGN.md §4) and, by default, **fused**
+//! (DESIGN.md §5): instead of three passes over the `n·κ` score vectors
+//! per iteration (dangling scan → sharded scatter → Eq. 1 update), the
+//! fused executor makes **one** — the scatter's clamp epilogue applies
+//! Eq. 1, accumulates the update norm, and computes the *next*
+//! iteration's per-shard dangling partial in the same sweep
+//! ([`crate::spmv::fast`]'s `scatter_fused`). `P₁`/`P₂` become a
+//! double-buffered pair that swaps each iteration rather than two
+//! separately-written vectors, and the scratch buffers persist across
+//! `run` calls, so the steady-state request path allocates nothing big.
+//! All fan-outs run on the persistent worker pool
+//! ([`crate::runtime::pool`]) — zero thread spawns per iteration.
 //!
-//! One caveat: the reported update norm is an f64 reduction whose
-//! grouping follows the shards (deterministic for a fixed shard count,
-//! but not identical across shard counts — f64 addition is not
-//! associative). A `convergence_threshold` that lands within an ulp of
-//! the norm can therefore stop at a different iteration for different
+//! Bit-identity: the fused sweep performs, per output word, exactly the
+//! word-level op sequence of the unfused engine (clamp, ×α, +scaling,
+//! +(1−α) at the personalization vertex; dangling partials folded per
+//! shard in ascending-vertex order, shards folded in shard order), so
+//! fused and unfused runs produce identical score words — and identical
+//! f64 update norms — for **both** datapaths at any fixed shard count.
+//! Across shard counts, the fixed-point datapath's score words are still
+//! bit-identical every iteration (saturating adds of non-negative values
+//! give `min(Σ, max)` under any grouping), while the float datapath may
+//! differ in the last ulp of the dangling sum, exactly like a per-CU
+//! hardware reduction tree would.
+//!
+//! One caveat (unchanged by fusion): the reported update norm is an f64
+//! reduction whose grouping follows the shards (deterministic for a fixed
+//! shard count, but not identical across shard counts — f64 addition is
+//! not associative). A `convergence_threshold` that lands within an ulp
+//! of the norm can therefore stop at a different iteration for different
 //! shard counts; fixed-iteration runs (the paper's timed configuration)
 //! are unaffected.
 
 use super::{PprConfig, PreparedGraph};
 use crate::graph::VertexId;
-use crate::spmv::shard::{fan_out, PARALLEL_WORK_PER_SHARD};
+use crate::spmv::fast::{scatter_fused, FusedUpdate};
+use crate::spmv::shard::{fan_out, fan_out_mode, PARALLEL_WORK_PER_SHARD};
 use crate::spmv::Datapath;
 use std::sync::Arc;
 
-/// Result of one batched PPR run.
+/// How [`BatchedPpr`] executes one PPR iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Executor {
+    /// One fused sweep per iteration on the persistent worker pool —
+    /// scatter, Eq. 1 update, norm and next-iteration dangling partial in
+    /// a single pass (the default; config `engine.fused`, CLI
+    /// `--no-fused` to opt out).
+    Fused,
+    /// The three-sweep engine (dangling scan, edge stream, Eq. 1 update),
+    /// still on the persistent pool — the `--no-fused` escape hatch.
+    Unfused,
+    /// The three-sweep engine with scoped thread spawns per sweep: the
+    /// pre-pool execution mode, kept only as the measured baseline of the
+    /// `fusion_speedup` bench.
+    UnfusedScoped,
+}
+
+impl Executor {
+    /// Label for engine descriptions and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Executor::Fused => "fused",
+            Executor::Unfused => "unfused",
+            Executor::UnfusedScoped => "unfused-scoped",
+        }
+    }
+}
+
+/// Result of one batched PPR run (owned copy of the scores).
 #[derive(Debug, Clone)]
 pub struct PprOutput<W> {
     /// Final scores, `num_vertices × lanes`, vertex-major
@@ -48,8 +91,41 @@ impl<W: Copy> PprOutput<W> {
     /// lane count (partial batches carry fewer lanes than the engine's κ).
     pub fn lane(&self, k: usize) -> Vec<W> {
         assert!(k < self.lanes, "lane {k} out of range (run carried {})", self.lanes);
-        self.scores.iter().skip(k).step_by(self.lanes).copied().collect()
+        copy_lane(&self.scores, self.lanes, k)
     }
+}
+
+/// Result of one run viewed in the engine's scratch buffer — the
+/// zero-copy variant of [`PprOutput`] used by the serving path (the
+/// engine's scratch persists across runs; copy what you need before the
+/// next `run_scratch`).
+#[derive(Debug)]
+pub struct PprRun<'a, W> {
+    /// Final scores, `num_vertices × lanes`, vertex-major, borrowed from
+    /// the engine's reusable scratch.
+    pub scores: &'a [W],
+    /// Lanes this run carried.
+    pub lanes: usize,
+    /// Iterations actually executed.
+    pub iterations: usize,
+    /// Per-iteration update norms.
+    pub update_norms: Vec<f64>,
+}
+
+/// Extract lane `k` from a vertex-major block of `lanes`-word rows by
+/// chunked slice iteration — measurably faster than the old
+/// `skip(k).step_by(lanes)` iterator collect on large `n` (the optimizer
+/// sees a strided copy instead of an opaque iterator chain).
+pub fn copy_lane<W: Copy>(scores: &[W], lanes: usize, k: usize) -> Vec<W> {
+    assert!(lanes >= 1 && k < lanes);
+    if lanes == 1 {
+        return scores.to_vec();
+    }
+    let mut out = Vec::with_capacity(scores.len() / lanes);
+    for row in scores.chunks_exact(lanes) {
+        out.push(row[k]);
+    }
+    out
 }
 
 /// Batched PPR engine bound to a prepared graph and a datapath.
@@ -65,13 +141,20 @@ pub struct BatchedPpr<D: Datapath> {
     alpha: D::Word,
     one_minus_alpha: D::Word,
     alpha_over_v: D::Word,
+    executor: Executor,
+    // scratch reused across `run` calls (previously 2·n·κ words were
+    // allocated per request): the double-buffered score pair + the
+    // per-lane scaling vector, sized lazily to the widest run seen
+    cur: Vec<D::Word>,
+    nxt: Vec<D::Word>,
+    scaling: Vec<D::Word>,
 }
 
 impl<D: Datapath> BatchedPpr<D> {
     /// Bind an engine to a prepared graph. `alpha` is quantized once here,
     /// like the synthesized constants of the bitstream; each shard's value
     /// stream is quantized once, like loading the partitions onto their
-    /// channels (§4.2).
+    /// channels (§4.2). The executor defaults to [`Executor::Fused`].
     pub fn new(datapath: D, graph: Arc<PreparedGraph>, kappa: usize, alpha: f64) -> Self {
         assert!((0.0..1.0).contains(&alpha));
         let vals = graph
@@ -83,7 +166,30 @@ impl<D: Datapath> BatchedPpr<D> {
         let alpha_w = datapath.quantize(alpha);
         let one_minus_alpha = datapath.quantize(1.0 - alpha);
         let alpha_over_v = datapath.quantize(alpha / graph.num_vertices as f64);
-        Self { datapath, kappa, graph, vals, alpha: alpha_w, one_minus_alpha, alpha_over_v }
+        Self {
+            datapath,
+            kappa,
+            graph,
+            vals,
+            alpha: alpha_w,
+            one_minus_alpha,
+            alpha_over_v,
+            executor: Executor::Fused,
+            cur: Vec::new(),
+            nxt: Vec::new(),
+            scaling: Vec::new(),
+        }
+    }
+
+    /// Select the iteration executor (builder-style).
+    pub fn with_executor(mut self, executor: Executor) -> Self {
+        self.executor = executor;
+        self
+    }
+
+    /// The iteration executor this engine runs.
+    pub fn executor(&self) -> Executor {
+        self.executor
     }
 
     /// Number of shards (parallel compute units) the engine sweeps.
@@ -91,11 +197,29 @@ impl<D: Datapath> BatchedPpr<D> {
         self.graph.sharded.num_shards()
     }
 
-    /// Run Alg. 1 for a batch of 1..=κ personalization vertices. Partial
-    /// batches are first-class: compute scales with the lanes actually
-    /// carried, and each lane is bit-identical to the same lane of any
-    /// other batch shape (lanes never interact).
+    /// Run Alg. 1 for a batch of 1..=κ personalization vertices,
+    /// returning an owned copy of the scores. Partial batches are
+    /// first-class: compute scales with the lanes actually carried, and
+    /// each lane is bit-identical to the same lane of any other batch
+    /// shape (lanes never interact).
     pub fn run(&mut self, personalization: &[VertexId], cfg: &PprConfig) -> PprOutput<D::Word> {
+        let run = self.run_scratch(personalization, cfg);
+        PprOutput {
+            scores: run.scores.to_vec(),
+            lanes: run.lanes,
+            iterations: run.iterations,
+            update_norms: run.update_norms,
+        }
+    }
+
+    /// Run Alg. 1 leaving the final scores in the engine's reusable
+    /// scratch buffer — the allocation-free serving path ([`PprRun`]
+    /// borrows the scratch; the next `run_scratch` overwrites it).
+    pub fn run_scratch(
+        &mut self,
+        personalization: &[VertexId],
+        cfg: &PprConfig,
+    ) -> PprRun<'_, D::Word> {
         let k = personalization.len();
         assert!(
             k >= 1 && k <= self.kappa,
@@ -107,30 +231,91 @@ impl<D: Datapath> BatchedPpr<D> {
         let z = d.zero();
         let one = d.quantize(1.0);
 
+        // take the scratch buffers out so the iteration helpers can
+        // borrow `self` (graph, value streams, constants) immutably
+        let mut cur = std::mem::take(&mut self.cur);
+        let mut nxt = std::mem::take(&mut self.nxt);
+        let mut scaling = std::mem::take(&mut self.scaling);
+
         // P₁ ← V̄ : score 1 on each lane's personalization vertex
-        let mut p1 = vec![z; n * k];
+        cur.clear();
+        cur.resize(n * k, z);
         for (lane, &v) in personalization.iter().enumerate() {
-            p1[v as usize * k + lane] = one;
+            cur[v as usize * k + lane] = one;
         }
-        let mut p2 = vec![z; n * k];
-        let mut scaling = vec![z; k];
+        // the next buffer is fully overwritten by each sweep; only its
+        // length matters here
+        nxt.resize(n * k, z);
+        scaling.clear();
+        scaling.resize(k, z);
+
         let mut update_norms = Vec::with_capacity(cfg.max_iterations);
         let mut iterations = 0usize;
 
+        match self.executor {
+            Executor::Fused => self.iterate_fused(
+                &d,
+                &mut cur,
+                &mut nxt,
+                &mut scaling,
+                personalization,
+                k,
+                cfg,
+                &mut update_norms,
+                &mut iterations,
+            ),
+            Executor::Unfused | Executor::UnfusedScoped => self.iterate_unfused(
+                &d,
+                &mut cur,
+                &mut nxt,
+                &mut scaling,
+                personalization,
+                k,
+                cfg,
+                &mut update_norms,
+                &mut iterations,
+            ),
+        }
+
+        self.cur = cur;
+        self.nxt = nxt;
+        self.scaling = scaling;
+        PprRun { scores: &self.cur[..n * k], lanes: k, iterations, update_norms }
+    }
+
+    /// The fused executor: one sweep per iteration. Each shard scatters
+    /// `X·P_t` into its slice of the next buffer and applies Eq. 1, the
+    /// norm partial and the next dangling partial in the scatter's clamp
+    /// epilogue; the buffers then swap. Dangling partials enter the loop
+    /// from one standalone scan of the initial scores (the only time the
+    /// dangling rows are visited outside the fused sweep).
+    #[allow(clippy::too_many_arguments)]
+    fn iterate_fused(
+        &self,
+        d: &D,
+        cur: &mut Vec<D::Word>,
+        nxt: &mut Vec<D::Word>,
+        scaling: &mut [D::Word],
+        personalization: &[VertexId],
+        k: usize,
+        cfg: &PprConfig,
+        update_norms: &mut Vec<f64>,
+        iterations: &mut usize,
+    ) {
+        let mut partials = self.dangling_partials(d, cur, k, false);
         for _ in 0..cfg.max_iterations {
-            // scaling_vec ← (α/|V|) · (d̄ · P₁) — per lane (Alg. 1 line 6),
-            // the dangling scan sharded by destination range
-            self.scaling_sweep(&d, &p1, k, &mut scaling);
-
-            // P₂ ← X · P₁ (Alg. 2) — one scatter worker per shard, each
-            // writing its own destination slice (see spmv::shard)
-            crate::spmv::fast_spmv_sharded(&d, &self.graph.sharded, &self.vals, k, &p1, &mut p2);
-
-            // P₁ ← α·P₂ + scaling + (1−α)·V̄, tracking the update norm,
-            // sharded over the same disjoint destination ranges
-            let norm_sq = self.update_sweep(&d, &mut p1, &p2, &scaling, personalization, k);
-
-            iterations += 1;
+            self.fold_scaling(d, &partials, k, scaling);
+            let results = self.fused_sweep(d, cur, nxt, scaling, personalization, k);
+            let mut norm_sq = 0.0f64;
+            partials.clear();
+            for (ns, acc) in results {
+                // fold the per-shard norm partials in shard order, same
+                // grouping as the unfused update sweep
+                norm_sq += ns;
+                partials.push(acc);
+            }
+            std::mem::swap(cur, nxt);
+            *iterations += 1;
             let norm = (norm_sq / k as f64).sqrt();
             update_norms.push(norm);
             if let Some(th) = cfg.convergence_threshold {
@@ -139,25 +324,84 @@ impl<D: Datapath> BatchedPpr<D> {
                 }
             }
         }
-
-        PprOutput { scores: p1, lanes: k, iterations, update_norms }
     }
 
-    /// The dangling scan: per-shard partial sums over each shard's
-    /// dangling vertices, folded in shard order, then scaled by α/|V|.
-    /// One shard reproduces the single-stream scan exactly, and the
-    /// sequential small-work path produces the same words as the parallel
-    /// one (partials are folded in shard order either way).
-    fn scaling_sweep(&self, d: &D, p1: &[D::Word], k: usize, scaling: &mut [D::Word]) {
+    /// The three-sweep executor (the pre-fusion engine): dangling scan,
+    /// sharded scatter into `nxt` (P₂), Eq. 1 update back into `cur`.
+    #[allow(clippy::too_many_arguments)]
+    fn iterate_unfused(
+        &self,
+        d: &D,
+        cur: &mut Vec<D::Word>,
+        nxt: &mut Vec<D::Word>,
+        scaling: &mut [D::Word],
+        personalization: &[VertexId],
+        k: usize,
+        cfg: &PprConfig,
+        update_norms: &mut Vec<f64>,
+        iterations: &mut usize,
+    ) {
+        let scoped = self.executor == Executor::UnfusedScoped;
+        for _ in 0..cfg.max_iterations {
+            // scaling_vec ← (α/|V|) · (d̄ · P₁) — per lane (Alg. 1 line 6),
+            // the dangling scan sharded by destination range
+            let partials = self.dangling_partials(d, cur, k, scoped);
+            self.fold_scaling(d, &partials, k, scaling);
+
+            // P₂ ← X · P₁ (Alg. 2) — one scatter worker per shard, each
+            // writing its own destination slice (see spmv::shard)
+            crate::spmv::shard::sharded_edge_sweep(
+                d,
+                &self.graph.sharded,
+                &self.vals,
+                k,
+                cur,
+                nxt,
+                scoped,
+            );
+
+            // P₁ ← α·P₂ + scaling + (1−α)·V̄, tracking the update norm,
+            // sharded over the same disjoint destination ranges
+            let norm_sq =
+                self.update_sweep(d, cur, nxt, scaling, personalization, k, scoped);
+
+            *iterations += 1;
+            let norm = (norm_sq / k as f64).sqrt();
+            update_norms.push(norm);
+            if let Some(th) = cfg.convergence_threshold {
+                if norm < th {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Per-shard dangling partial sums of `p` (ascending vertex order
+    /// within each shard — the same per-lane add sequence as the
+    /// single-stream scan restricted to each range).
+    fn dangling_partials(
+        &self,
+        d: &D,
+        p: &[D::Word],
+        k: usize,
+        scoped: bool,
+    ) -> Vec<Vec<D::Word>> {
         let shards = &self.graph.sharded.shards;
         let serial = shards.len() == 1
             || self.graph.dangling_idx.len() * k < PARALLEL_WORK_PER_SHARD * shards.len();
-        let partials = fan_out(shards.iter().collect(), serial, |sh| {
-            dangling_partial(d, &sh.dangling_idx, p1, k)
-        });
-        let mut partials = partials.into_iter();
-        let mut total = partials.next().expect("at least one shard");
-        for part in partials {
+        fan_out_mode(shards.iter().collect(), serial, scoped, |sh| {
+            dangling_partial(d, &sh.dangling_idx, p, k)
+        })
+    }
+
+    /// Fold per-shard dangling partials (in shard order) and scale by
+    /// α/|V| into the per-lane scaling vector — shared by both executors
+    /// so the word sequence cannot diverge.
+    fn fold_scaling(&self, d: &D, partials: &[Vec<D::Word>], k: usize, scaling: &mut [D::Word]) {
+        let mut it = partials.iter();
+        let first = it.next().expect("at least one shard");
+        let mut total = first.clone();
+        for part in it {
             for lane in 0..k {
                 total[lane] = d.add(total[lane], part[lane]);
             }
@@ -167,9 +411,82 @@ impl<D: Datapath> BatchedPpr<D> {
         }
     }
 
-    /// The update sweep, one worker per shard over its destination slice;
-    /// returns the summed squared update norm (partials folded in shard
-    /// order, so the norm is deterministic for a given shard count).
+    /// One fused sweep: per shard, scatter + Eq. 1 epilogue into the
+    /// shard's disjoint slice of `nxt`; returns `(norm_sq partial,
+    /// dangling partial)` per shard in shard order.
+    fn fused_sweep(
+        &self,
+        d: &D,
+        cur: &[D::Word],
+        nxt: &mut [D::Word],
+        scaling: &[D::Word],
+        personalization: &[VertexId],
+        k: usize,
+    ) -> Vec<(f64, Vec<D::Word>)> {
+        let shards = &self.graph.sharded.shards;
+        let n = self.graph.num_vertices;
+        let upd: FusedUpdate<'_, D> = FusedUpdate {
+            scaling,
+            personalization,
+            alpha: self.alpha,
+            one_minus_alpha: self.one_minus_alpha,
+        };
+        if shards.len() == 1 {
+            let sh = &shards[0];
+            let mut acc = vec![d.zero(); k];
+            let norm = scatter_fused(
+                d,
+                &sh.x,
+                &sh.y,
+                &self.vals[0],
+                k,
+                sh.dst_start,
+                cur,
+                nxt,
+                &upd,
+                &sh.dangling_idx,
+                &mut acc,
+            );
+            return vec![(norm, acc)];
+        }
+        // split the next buffer into the shards' disjoint destination
+        // slices — the fused sweep's only writes
+        let mut slices: Vec<&mut [D::Word]> = Vec::with_capacity(shards.len());
+        let mut rest = nxt;
+        for sh in shards {
+            let (head, tail) = rest.split_at_mut((sh.dst_end - sh.dst_start) * k);
+            slices.push(head);
+            rest = tail;
+        }
+        debug_assert!(rest.is_empty());
+        // work per shard = edges (scatter) + vertices (epilogue), × lanes
+        let serial =
+            (self.graph.sharded.num_edges + n) * k < PARALLEL_WORK_PER_SHARD * shards.len();
+        let work: Vec<_> = shards.iter().zip(&self.vals).zip(slices).collect();
+        fan_out(work, serial, |((sh, svals), slice)| {
+            let mut acc = vec![d.zero(); k];
+            let norm = scatter_fused(
+                d,
+                &sh.x,
+                &sh.y,
+                svals,
+                k,
+                sh.dst_start,
+                cur,
+                slice,
+                &upd,
+                &sh.dangling_idx,
+                &mut acc,
+            );
+            (norm, acc)
+        })
+    }
+
+    /// The unfused update sweep, one worker per shard over its
+    /// destination slice; returns the summed squared update norm
+    /// (partials folded in shard order, so the norm is deterministic for
+    /// a given shard count).
+    #[allow(clippy::too_many_arguments)]
     fn update_sweep(
         &self,
         d: &D,
@@ -178,6 +495,7 @@ impl<D: Datapath> BatchedPpr<D> {
         scaling: &[D::Word],
         personalization: &[VertexId],
         k: usize,
+        scoped: bool,
     ) -> f64 {
         let shards = &self.graph.sharded.shards;
         let alpha = self.alpha;
@@ -196,7 +514,7 @@ impl<D: Datapath> BatchedPpr<D> {
         }
         let serial = n * k < PARALLEL_WORK_PER_SHARD * shards.len();
         let work: Vec<_> = shards.iter().zip(slices).collect();
-        let partials = fan_out(work, serial, |(sh, p1s)| {
+        let partials = fan_out_mode(work, serial, scoped, |(sh, p1s)| {
             let p2s = &p2[sh.dst_start * k..sh.dst_end * k];
             let (lo, hi) = (sh.dst_start, sh.dst_end);
             update_range(d, lo, hi, k, p1s, p2s, scaling, personalization, alpha, oma)
@@ -209,12 +527,14 @@ impl<D: Datapath> BatchedPpr<D> {
     /// Run a whole request list by splitting it into κ-batches; returns one
     /// dense score vector per request (the host-facing result shape). The
     /// trailing batch runs partial instead of padding with repeated lanes.
+    /// Lanes are extracted with chunked copies straight out of the scratch
+    /// buffer — no intermediate `PprOutput` allocation per batch.
     pub fn run_requests(&mut self, requests: &[VertexId], cfg: &PprConfig) -> Vec<Vec<D::Word>> {
         let mut out = Vec::with_capacity(requests.len());
         for batch in requests.chunks(self.kappa) {
-            let res = self.run(batch, cfg);
-            for lane in 0..batch.len() {
-                out.push(res.lane(lane));
+            let run = self.run_scratch(batch, cfg);
+            for lane in 0..run.lanes {
+                out.push(copy_lane(run.scores, run.lanes, lane));
             }
         }
         out
@@ -431,10 +751,9 @@ mod tests {
 
     #[test]
     fn threaded_sweeps_bit_identical_to_single_shard() {
-        // big enough that all three sweeps take the scoped-thread path
-        // (edges, |V|·k and |dangling|·k all ≥ 4 shards ×
-        // PARALLEL_WORK_PER_SHARD): half the vertices source edges, half
-        // are dangling
+        // big enough that the sweeps take the pooled path (edges, |V|·k
+        // and |dangling|·k all ≥ 4 shards × PARALLEL_WORK_PER_SHARD):
+        // half the vertices source edges, half are dangling
         let n = 12_000usize;
         let k = 6usize;
         let mut rng = crate::util::rng::Xoshiro256::seeded(99);
@@ -478,5 +797,103 @@ mod tests {
             assert_eq!(out.scores, base.scores, "shards={shards}");
             assert_eq!(out.update_norms.len(), base.update_norms.len());
         }
+    }
+
+    #[test]
+    fn fused_matches_unfused_scores_and_norms() {
+        // fused ≡ unfused bit-exactly — scores AND the f64 norms — for
+        // both datapaths at a fixed shard count
+        let g = crate::graph::generators::holme_kim(260, 4, 0.3, 29);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let cfg = PprConfig { max_iterations: 9, ..Default::default() };
+        for shards in [1usize, 3] {
+            let pg = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, shards));
+            let d = FixedPath::paper(24);
+            let fused = BatchedPpr::new(d, pg.clone(), 3, 0.85).run(&[2, 8, 21], &cfg);
+            let unfused = BatchedPpr::new(d, pg.clone(), 3, 0.85)
+                .with_executor(Executor::Unfused)
+                .run(&[2, 8, 21], &cfg);
+            assert_eq!(fused.scores, unfused.scores, "fixed shards={shards}");
+            assert_eq!(fused.update_norms, unfused.update_norms, "norms shards={shards}");
+
+            let fused_f = BatchedPpr::new(FloatPath, pg.clone(), 3, 0.85).run(&[2, 8, 21], &cfg);
+            let unfused_f = BatchedPpr::new(FloatPath, pg.clone(), 3, 0.85)
+                .with_executor(Executor::UnfusedScoped)
+                .run(&[2, 8, 21], &cfg);
+            assert_eq!(fused_f.scores, unfused_f.scores, "float shards={shards}");
+            assert_eq!(fused_f.update_norms, unfused_f.update_norms);
+        }
+    }
+
+    #[test]
+    fn fused_early_exit_matches_unfused() {
+        // identical norms → identical early-exit iteration
+        let g = ring(48);
+        let pg = Arc::new(PreparedGraph::new(&g, 8));
+        let cfg = PprConfig {
+            max_iterations: 100,
+            convergence_threshold: Some(1e-4),
+            ..Default::default()
+        };
+        let fused = BatchedPpr::new(FloatPath, pg.clone(), 1, 0.85).run(&[0], &cfg);
+        let unfused = BatchedPpr::new(FloatPath, pg, 1, 0.85)
+            .with_executor(Executor::Unfused)
+            .run(&[0], &cfg);
+        assert_eq!(fused.iterations, unfused.iterations);
+        assert_eq!(fused.scores, unfused.scores);
+    }
+
+    #[test]
+    fn scratch_reuse_across_runs_is_bit_stable() {
+        // back-to-back runs on one engine (reused scratch) must equal runs
+        // on fresh engines, across different lane counts
+        let g = crate::graph::generators::erdos_renyi(180, 0.04, 7);
+        let pg = Arc::new(PreparedGraph::new_sharded(&g, 8, 2));
+        let d = FixedPath::paper(22);
+        let cfg = PprConfig { max_iterations: 8, ..Default::default() };
+        let mut reused = BatchedPpr::new(d, pg.clone(), 4, 0.85);
+        let a1 = reused.run(&[1, 2, 3, 4], &cfg);
+        let a2 = reused.run(&[5], &cfg);
+        let a3 = reused.run(&[1, 2, 3, 4], &cfg);
+        let b1 = BatchedPpr::new(d, pg.clone(), 4, 0.85).run(&[1, 2, 3, 4], &cfg);
+        let b2 = BatchedPpr::new(d, pg, 4, 0.85).run(&[5], &cfg);
+        assert_eq!(a1.scores, b1.scores);
+        assert_eq!(a2.scores, b2.scores);
+        assert_eq!(a3.scores, b1.scores, "third run must not see stale scratch");
+    }
+
+    #[test]
+    fn run_scratch_borrows_final_scores() {
+        let g = ring(32);
+        let pg = Arc::new(PreparedGraph::new(&g, 8));
+        let d = FixedPath::paper(24);
+        let mut engine = BatchedPpr::new(d, pg, 2, 0.85);
+        let cfg = PprConfig { max_iterations: 5, ..Default::default() };
+        let owned = engine.run(&[3, 9], &cfg);
+        let run = engine.run_scratch(&[3, 9], &cfg);
+        assert_eq!(run.lanes, 2);
+        assert_eq!(run.iterations, 5);
+        assert_eq!(run.scores, owned.scores.as_slice());
+        assert_eq!(run.update_norms, owned.update_norms);
+    }
+
+    #[test]
+    fn copy_lane_strided_and_single_lane() {
+        let scores = vec![10u64, 11, 20, 21, 30, 31];
+        assert_eq!(copy_lane(&scores, 2, 0), vec![10, 20, 30]);
+        assert_eq!(copy_lane(&scores, 2, 1), vec![11, 21, 31]);
+        let single = vec![7u64, 8, 9];
+        assert_eq!(copy_lane(&single, 1, 0), single);
+    }
+
+    #[test]
+    fn executor_labels() {
+        assert_eq!(Executor::Fused.label(), "fused");
+        assert_eq!(Executor::Unfused.label(), "unfused");
+        assert_eq!(Executor::UnfusedScoped.label(), "unfused-scoped");
+        let g = ring(8);
+        let pg = Arc::new(PreparedGraph::new(&g, 4));
+        let e = BatchedPpr::new(FloatPath, pg, 1, 0.85).with_executor(Executor::Unfused);
+        assert_eq!(e.executor(), Executor::Unfused);
     }
 }

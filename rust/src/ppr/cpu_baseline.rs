@@ -3,7 +3,8 @@
 //! of PPR is fully multi-threaded").
 //!
 //! Pull-based f32 PPR over a destination-major CSR matrix, parallelized
-//! across nnz-balanced vertex ranges with `std::thread::scope`. Requests
+//! across nnz-balanced vertex ranges on the persistent worker pool
+//! ([`crate::runtime::pool`]). Requests
 //! are processed one at a time: the paper reports that manually batching
 //! requests in PGX "did not provide a speedup over the fast default
 //! implementation", so the honest baseline serializes requests and
@@ -48,23 +49,21 @@ pub fn ppr_f32_parallel(
             rest = tail;
         }
         let p_ref = &p;
-        std::thread::scope(|s| {
-            for (r, o) in ranges.iter().zip(slices) {
-                let r = r.clone();
-                s.spawn(move || {
-                    for x in r.clone() {
-                        let (cols, vals) = m.row(x);
-                        let mut acc = 0.0f32;
-                        for (c, &v) in cols.iter().zip(vals) {
-                            acc += v as f32 * p_ref[*c as usize];
-                        }
-                        let mut val = alpha * acc + scaling;
-                        if x == personalization as usize {
-                            val += 1.0 - alpha;
-                        }
-                        o[x - r.start] = val;
-                    }
-                });
+        // one task per range on the persistent worker pool (no per-call
+        // thread spawns; see runtime::pool)
+        let work: Vec<_> = ranges.iter().cloned().zip(slices).collect();
+        crate::runtime::pool::global().fan_out(work, false, |(r, o)| {
+            for x in r.clone() {
+                let (cols, vals) = m.row(x);
+                let mut acc = 0.0f32;
+                for (c, &v) in cols.iter().zip(vals) {
+                    acc += v as f32 * p_ref[*c as usize];
+                }
+                let mut val = alpha * acc + scaling;
+                if x == personalization as usize {
+                    val += 1.0 - alpha;
+                }
+                o[x - r.start] = val;
             }
         });
         std::mem::swap(&mut p, &mut next);

@@ -22,7 +22,7 @@ pub mod convergence;
 pub mod cpu_baseline;
 pub mod reference;
 
-pub use batched::{BatchedPpr, PprOutput};
+pub use batched::{copy_lane, BatchedPpr, Executor, PprOutput, PprRun};
 pub use convergence::ConvergenceTrace;
 
 use crate::graph::{CooMatrix, Graph, VertexId};

@@ -1,17 +1,25 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client via
-//! the `xla` crate — Python never runs on this path.
+//! Execution runtimes: the PJRT artifact path and the persistent worker
+//! pool behind every sharded fan-out.
 //!
-//! Artifact flow (see DESIGN.md §2 at the repository root):
-//! `manifest.txt` → [`manifest::Manifest`] → `HloModuleProto::from_text_file`
-//! → `client.compile` → [`PjrtPprEngine`] iterating the step executable
-//! with buffer feedback, convergence policy owned by the caller (L3).
+//! - [`pool`] — long-lived worker threads with a submit/barrier fan-out
+//!   (DESIGN.md §5); the native engine's sweeps, the sharded kernels and
+//!   the bench harness all run on the process-wide [`pool::global`] pool
+//!   instead of spawning scoped threads per call.
+//! - PJRT: loads the AOT-compiled HLO-text artifacts produced by
+//!   `python/compile/aot.py` and executes them on the CPU PJRT client via
+//!   the `xla` crate — Python never runs on this path. Artifact flow (see
+//!   DESIGN.md §2 at the repository root): `manifest.txt` →
+//!   [`manifest::Manifest`] → `HloModuleProto::from_text_file` →
+//!   `client.compile` → [`PjrtPprEngine`] iterating the step executable
+//!   with buffer feedback, convergence policy owned by the caller (L3).
 
 pub mod engine;
 pub mod manifest;
+pub mod pool;
 
 pub use engine::PjrtPprEngine;
 pub use manifest::{ArtifactSpec, Manifest};
+pub use pool::WorkerPool;
 
 use anyhow::{Context, Result};
 use std::path::Path;

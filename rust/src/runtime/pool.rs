@@ -1,0 +1,452 @@
+//! Persistent sharded worker pool — the execution substrate behind every
+//! shard fan-out (DESIGN.md §5).
+//!
+//! The sharded engine fans work out across destination partitions many
+//! times per request: three sweeps per PPR iteration in the unfused
+//! engine, one fused sweep per iteration in the fused one, plus the
+//! standalone kernel fan-outs of the bench harness and the CPU baseline.
+//! Spawning scoped threads per fan-out costs tens of microseconds of
+//! spawn/join each — `3 × iterations × shards` spawns per request in the
+//! worst case. This module replaces those per-call spawns with one
+//! process-wide pool of long-lived workers: a fan-out *submits* one task
+//! per work item and *barriers* on a completion latch; the worker threads
+//! persist across calls, so the steady-state spawn count is zero (see
+//! [`WorkerPool::spawn_count`], which tests assert stays flat across
+//! iterations).
+//!
+//! Protocol (submit/barrier):
+//!
+//! 1. [`WorkerPool::fan_out`] boxes one task per item up front (so no
+//!    allocation happens between the first submission and the barrier),
+//!    enqueues all but the first, and runs the first inline on the
+//!    calling thread — the caller is one of the workers, so `shards`
+//!    items need only `shards − 1` pool threads.
+//! 2. Each task writes its result into a dedicated slot and counts down
+//!    a latch; panics are caught and re-thrown on the caller *after* the
+//!    barrier, so borrowed data never outlives a running task.
+//! 3. While its latch is unresolved the caller *helps*: it pops and runs
+//!    queued tasks — its own remainder or other fan-outs' — so
+//!    concurrent fan-outs on the capped pool never serialize behind one
+//!    another; it sleeps on the latch only once the queue is empty.
+//!    Results are then collected in item order — the same order the
+//!    serial fallback produces, so pooled and serial execution yield
+//!    identical result words.
+//!
+//! Safety: tasks borrow the caller's stack (the closure, the result
+//! slots, the latch). The borrow is sound because `fan_out` cannot return
+//! before the latch barrier — the tasks are either finished or the caller
+//! is still blocked — and every task counts the latch down exactly once,
+//! panic or not.
+//!
+//! Workers are spawned lazily up to a cap (the `num_shards` default:
+//! available parallelism, capped at 32) and live for the lifetime of the
+//! pool; the process-wide [`global`] pool is never dropped. Small work
+//! still runs inline via the `serial` flag, exactly like the old
+//! scoped-thread fallback.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+thread_local! {
+    /// Set for the lifetime of a pool worker thread: a fan-out issued
+    /// from *inside* a pool task runs serially instead of re-entering the
+    /// queue, so tasks can never block a worker on another task's latch
+    /// (the classic nested-pool deadlock is impossible by construction).
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A type-erased unit of work. Tasks are `'static` from the queue's point
+/// of view; `fan_out` upholds the real (shorter) lifetime with its
+/// barrier — see the module docs.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// State shared between the submitting threads and the workers.
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    task_ready: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// What a panicking task leaves behind for the caller to re-throw.
+type PanicPayload = Box<dyn std::any::Any + Send>;
+
+/// Completion latch for one fan-out: counts outstanding tasks and wakes
+/// the submitter when the last one finishes. The first panic payload is
+/// kept and re-thrown by the caller after the barrier.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<PanicPayload>>,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Self { remaining: Mutex::new(count), done: Condvar::new(), panic: Mutex::new(None) }
+    }
+
+    fn count_down(&self) {
+        let mut rem = self.remaining.lock().expect("latch lock");
+        *rem -= 1;
+        if *rem == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut rem = self.remaining.lock().expect("latch lock");
+        while *rem > 0 {
+            rem = self.done.wait(rem).expect("latch wait");
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.remaining.lock().expect("latch lock") == 0
+    }
+}
+
+/// RAII toggle of [`IN_POOL_WORKER`] for a caller that executes queued
+/// tasks while waiting (help-first): any fan-out issued from inside a
+/// helped task must degrade to serial exactly as on a pool worker.
+struct WorkerFlagGuard(bool);
+
+impl WorkerFlagGuard {
+    fn set() -> Self {
+        WorkerFlagGuard(IN_POOL_WORKER.with(|w| w.replace(true)))
+    }
+}
+
+impl Drop for WorkerFlagGuard {
+    fn drop(&mut self) {
+        let prev = self.0;
+        IN_POOL_WORKER.with(|w| w.set(prev));
+    }
+}
+
+/// Send wrapper for a raw result-slot pointer. Each task receives a
+/// distinct slot, so there is never more than one writer per slot, and
+/// the latch barrier sequences all writes before the caller's reads.
+struct Slot<R>(*mut Option<R>);
+// SAFETY: the pointee is owned by the fan-out caller and each Slot aliases
+// a distinct element; see the struct docs.
+unsafe impl<R: Send> Send for Slot<R> {}
+
+/// A pool of persistent worker threads with a submit/barrier fan-out.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Upper bound on worker threads (≈ the shard-count cap).
+    max_workers: usize,
+    /// Worker threads spawned so far — the "zero spawns per iteration"
+    /// counter: once warm, fan-outs never move it.
+    spawned: AtomicUsize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    /// Create a pool that will lazily spawn up to `max_workers` threads.
+    /// No thread is spawned until a parallel fan-out needs one.
+    pub fn new(max_workers: usize) -> Self {
+        Self {
+            shared: Arc::new(Shared {
+                queue: Mutex::new(VecDeque::new()),
+                task_ready: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+            }),
+            max_workers,
+            spawned: AtomicUsize::new(0),
+            handles: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Worker threads spawned over the pool's lifetime. Steady state is
+    /// flat: once enough workers exist for the widest fan-out seen, no
+    /// amount of further iterations changes this number.
+    pub fn spawn_count(&self) -> usize {
+        self.spawned.load(Ordering::Acquire)
+    }
+
+    /// Maximum worker threads this pool may spawn.
+    pub fn max_workers(&self) -> usize {
+        self.max_workers
+    }
+
+    /// Spawn every worker up front (tests use this to make the spawn
+    /// counter flat regardless of which fan-out runs first).
+    pub fn prewarm(&self) {
+        self.ensure_workers(self.max_workers);
+    }
+
+    fn ensure_workers(&self, wanted: usize) {
+        let target = wanted.min(self.max_workers);
+        // racing fan-outs may both observe a deficit, but the CAS hands
+        // out distinct spawn slots so the cap is never exceeded
+        loop {
+            let cur = self.spawned.load(Ordering::Acquire);
+            if cur >= target {
+                return;
+            }
+            if self
+                .spawned
+                .compare_exchange(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                continue;
+            }
+            let shared = self.shared.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ppr-pool-{cur}"))
+                .spawn(move || worker_loop(shared))
+                .expect("spawn pool worker");
+            self.handles.lock().expect("pool handles").push(handle);
+        }
+    }
+
+    /// Run one closure per work item and return the results in item
+    /// order. `serial == true` (the small-work fallback) runs everything
+    /// inline on the caller; otherwise the items are distributed over the
+    /// persistent workers with the caller executing the first item
+    /// itself. Pooled and serial execution produce identical result
+    /// vectors; a panicking item panics the caller after all items have
+    /// settled.
+    pub fn fan_out<T, R, F>(&self, items: Vec<T>, serial: bool, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        let nested = IN_POOL_WORKER.with(Cell::get);
+        if serial || nested || n <= 1 || self.max_workers == 0 {
+            return items.into_iter().map(f).collect();
+        }
+        self.ensure_workers(n - 1);
+
+        let mut slots: Vec<Option<R>> = std::iter::repeat_with(|| None).take(n).collect();
+        let latch = Latch::new(n);
+        let fr = &f;
+        let latch_ref = &latch;
+
+        // Box every task before submitting any: after the first task is
+        // queued the only thing that may unwind on this thread is the
+        // latch barrier itself, so the borrowed stack cannot die early.
+        let mut tasks: Vec<Task> = Vec::with_capacity(n);
+        for (slot, item) in slots.iter_mut().zip(items) {
+            let slot = Slot(slot as *mut Option<R>);
+            let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                match std::panic::catch_unwind(AssertUnwindSafe(|| fr(item))) {
+                    // SAFETY: distinct slot per task, caller blocked on
+                    // the latch until after this write (module docs)
+                    Ok(r) => unsafe { *slot.0 = Some(r) },
+                    Err(payload) => {
+                        let mut p = latch_ref.panic.lock().expect("panic slot");
+                        p.get_or_insert(payload);
+                    }
+                }
+                latch_ref.count_down();
+            });
+            // SAFETY: extends the closure's borrow lifetime to 'static for
+            // the queue; the latch barrier below outlives every task, so
+            // no borrow is dangling while a task can still run.
+            tasks.push(unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Task>(task)
+            });
+        }
+
+        let mut pending = tasks.into_iter();
+        let first = pending.next().expect("n >= 2");
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue");
+            q.extend(pending);
+        }
+        // one wake-up per queued task (notify_all on an empty wait set is
+        // cheap; workers that find the queue empty just re-park)
+        self.shared.task_ready.notify_all();
+
+        // The caller is worker #0: run its own first task, then —
+        // help-first — keep executing queued tasks (its own remainder or
+        // other fan-outs') while its latch is unresolved. Concurrent
+        // fan-outs on the capped pool therefore stay work-conserving:
+        // a blocked caller is never idle while any task is runnable.
+        // Sleep on the latch only once the queue is empty.
+        first();
+        loop {
+            if latch.is_done() {
+                break;
+            }
+            let task = self.shared.queue.lock().expect("pool queue").pop_front();
+            match task {
+                Some(t) => {
+                    let _worker = WorkerFlagGuard::set();
+                    t();
+                }
+                None => {
+                    latch.wait();
+                    break;
+                }
+            }
+        }
+
+        if let Some(payload) = latch.panic.lock().expect("panic slot").take() {
+            std::panic::resume_unwind(payload);
+        }
+        slots.into_iter().map(|s| s.expect("task wrote its slot")).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            // set the flag under the queue lock so a worker between its
+            // empty-queue check and its wait cannot miss the wake-up
+            let _q = self.shared.queue.lock().expect("pool queue");
+            self.shared.shutdown.store(true, Ordering::Release);
+        }
+        self.shared.task_ready.notify_all();
+        let handles = std::mem::take(&mut *self.handles.lock().expect("pool handles"));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    IN_POOL_WORKER.with(|w| w.set(true));
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().expect("pool queue");
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = shared.task_ready.wait(q).expect("pool wait");
+            }
+        };
+        // tasks never unwind (fan_out catches inside), so a worker
+        // survives any workload
+        task();
+    }
+}
+
+/// The process-wide pool every engine fan-out routes through. Sized like
+/// the default shard count (available parallelism, capped at 32) and
+/// never dropped — workers are daemon threads for the process lifetime.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(crate::config::default_num_shards()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_item_order_serial_and_pooled() {
+        let pool = WorkerPool::new(4);
+        let items: Vec<usize> = (0..16).collect();
+        let serial = pool.fan_out(items.clone(), true, |i| i * 3);
+        let pooled = pool.fan_out(items, false, |i| i * 3);
+        assert_eq!(serial, pooled);
+        assert_eq!(pooled, (0..16).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spawn_count_flat_after_warmup() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.spawn_count(), 0, "lazy: no fan-out, no threads");
+        pool.fan_out(vec![1, 2, 3, 4], false, |i| i);
+        let warm = pool.spawn_count();
+        assert!(warm >= 1 && warm <= 3, "{warm}");
+        for _ in 0..50 {
+            pool.fan_out(vec![1, 2, 3, 4], false, |i| i + 1);
+        }
+        assert_eq!(pool.spawn_count(), warm, "steady state must not spawn");
+    }
+
+    #[test]
+    fn serial_fallback_spawns_nothing() {
+        let pool = WorkerPool::new(8);
+        for _ in 0..10 {
+            pool.fan_out(vec![1, 2, 3], true, |i| i);
+        }
+        assert_eq!(pool.spawn_count(), 0);
+    }
+
+    #[test]
+    fn caps_at_max_workers() {
+        let pool = WorkerPool::new(2);
+        pool.fan_out((0..64).collect::<Vec<usize>>(), false, |i| i % 7);
+        assert!(pool.spawn_count() <= 2);
+        pool.prewarm();
+        assert_eq!(pool.spawn_count(), 2);
+    }
+
+    #[test]
+    fn borrowed_data_flows_through() {
+        let pool = WorkerPool::new(4);
+        let base: Vec<u64> = (0..100).collect();
+        let out = pool.fan_out((0..10usize).collect(), false, |chunk| {
+            base[chunk * 10..(chunk + 1) * 10].iter().sum::<u64>()
+        });
+        assert_eq!(out.iter().sum::<u64>(), base.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn panic_propagates_after_barrier() {
+        let pool = WorkerPool::new(4);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.fan_out(vec![0usize, 1, 2, 3], false, |i| {
+                if i == 2 {
+                    panic!("task 2 exploded");
+                }
+                i
+            })
+        }));
+        assert!(result.is_err(), "panic must cross the pool");
+        // the pool is still usable afterwards
+        let ok = pool.fan_out(vec![5usize, 6], false, |i| i);
+        assert_eq!(ok, vec![5, 6]);
+    }
+
+    #[test]
+    fn concurrent_fan_outs_share_the_pool() {
+        let pool = Arc::new(WorkerPool::new(4));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        let out = pool.fan_out(vec![t, t + 1, t + 2], false, |i| i * 2);
+                        assert_eq!(out, vec![2 * t, 2 * t + 2, 2 * t + 4]);
+                    }
+                });
+            }
+        });
+        assert!(pool.spawn_count() <= 4);
+    }
+
+    #[test]
+    fn nested_fan_out_runs_serially_not_deadlocking() {
+        // a task that itself fans out must complete (inner call degrades
+        // to serial inside a worker), even when the pool is narrow
+        let pool = Arc::new(WorkerPool::new(1));
+        let inner = pool.clone();
+        let out = pool.fan_out(vec![10usize, 20], false, move |i| {
+            inner.fan_out(vec![i, i + 1], false, |j| j * 2).iter().sum::<usize>()
+        });
+        assert_eq!(out, vec![42, 82]);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_capped() {
+        let p = global();
+        assert!(p.max_workers() >= 1);
+        let out = p.fan_out(vec![1u32, 2, 3], false, |i| i * i);
+        assert_eq!(out, vec![1, 4, 9]);
+        assert!(p.spawn_count() <= p.max_workers());
+    }
+}

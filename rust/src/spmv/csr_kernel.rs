@@ -52,24 +52,22 @@ pub fn csr_spmv_f32_parallel(
         rest = tail;
         offset += len;
     }
-    std::thread::scope(|s| {
-        for (r, o) in ranges.iter().zip(slices) {
-            let r = r.clone();
-            s.spawn(move || {
-                for x in r.clone() {
-                    let (cols, vals) = m.row(x);
-                    let base = (x - r.start) * kappa;
-                    let orow = &mut o[base..base + kappa];
-                    orow.fill(0.0);
-                    for (c, &v) in cols.iter().zip(vals) {
-                        let v = v as f32;
-                        let src = &p[*c as usize * kappa..*c as usize * kappa + kappa];
-                        for k in 0..kappa {
-                            orow[k] += v * src[k];
-                        }
-                    }
+    // one task per range on the persistent worker pool (no per-call
+    // thread spawns; see runtime::pool)
+    let work: Vec<_> = ranges.iter().cloned().zip(slices).collect();
+    crate::runtime::pool::global().fan_out(work, false, |(r, o)| {
+        for x in r.clone() {
+            let (cols, vals) = m.row(x);
+            let base = (x - r.start) * kappa;
+            let orow = &mut o[base..base + kappa];
+            orow.fill(0.0);
+            for (c, &v) in cols.iter().zip(vals) {
+                let v = v as f32;
+                let src = &p[*c as usize * kappa..*c as usize * kappa + kappa];
+                for k in 0..kappa {
+                    orow[k] += v * src[k];
                 }
-            });
+            }
         }
     });
 }

@@ -55,19 +55,39 @@ pub(crate) fn scatter<D: Datapath>(
     p: &[D::Word],
     out: &mut [D::Word],
 ) {
+    scatter_accum(d, x, y, vals, kappa, dst_base, p, out);
+    for w in out.iter_mut() {
+        *w = d.clamp(*w);
+    }
+}
+
+/// The accumulation half of the scatter (deferred adds, no clamp) —
+/// shared by [`scatter`] (clamp epilogue) and [`scatter_fused`] (Eq. 1
+/// epilogue).
+#[allow(clippy::too_many_arguments)]
+fn scatter_accum<D: Datapath>(
+    d: &D,
+    x: &[VertexId],
+    y: &[VertexId],
+    vals: &[D::Word],
+    kappa: usize,
+    dst_base: usize,
+    p: &[D::Word],
+    out: &mut [D::Word],
+) {
     match kappa {
-        1 => scatter_lanes::<D, 1>(d, x, y, vals, dst_base, p, out),
-        2 => scatter_lanes::<D, 2>(d, x, y, vals, dst_base, p, out),
-        4 => scatter_lanes::<D, 4>(d, x, y, vals, dst_base, p, out),
-        8 => scatter_lanes::<D, 8>(d, x, y, vals, dst_base, p, out),
-        16 => scatter_lanes::<D, 16>(d, x, y, vals, dst_base, p, out),
-        _ => scatter_dyn(d, x, y, vals, kappa, dst_base, p, out),
+        1 => accum_lanes::<D, 1>(d, x, y, vals, dst_base, p, out),
+        2 => accum_lanes::<D, 2>(d, x, y, vals, dst_base, p, out),
+        4 => accum_lanes::<D, 4>(d, x, y, vals, dst_base, p, out),
+        8 => accum_lanes::<D, 8>(d, x, y, vals, dst_base, p, out),
+        16 => accum_lanes::<D, 16>(d, x, y, vals, dst_base, p, out),
+        _ => accum_dyn(d, x, y, vals, kappa, dst_base, p, out),
     }
 }
 
 /// κ-specialized inner loop: the compiler fully unrolls the lane loop
 /// (the software analogue of the κ replicated scatter cores).
-fn scatter_lanes<D: Datapath, const K: usize>(
+fn accum_lanes<D: Datapath, const K: usize>(
     d: &D,
     x: &[VertexId],
     y: &[VertexId],
@@ -88,13 +108,10 @@ fn scatter_lanes<D: Datapath, const K: usize>(
             out[dst + k] = d.add_deferred(out[dst + k], d.mul(v, p[src + k]));
         }
     }
-    for w in out.iter_mut() {
-        *w = d.clamp(*w);
-    }
 }
 
 #[allow(clippy::too_many_arguments)]
-fn scatter_dyn<D: Datapath>(
+fn accum_dyn<D: Datapath>(
     d: &D,
     x: &[VertexId],
     y: &[VertexId],
@@ -116,9 +133,83 @@ fn scatter_dyn<D: Datapath>(
             out[dst + k] = d.add_deferred(out[dst + k], d.mul(v, p[src + k]));
         }
     }
-    for w in out.iter_mut() {
-        *w = d.clamp(*w);
+}
+
+/// Per-lane constants of the Eq. 1 epilogue a fused sweep applies.
+pub(crate) struct FusedUpdate<'a, D: Datapath> {
+    /// Per-lane scaling term `(α/|V|) · (d̄ · P_t)` of this iteration.
+    pub scaling: &'a [D::Word],
+    /// Per-lane personalization vertices (global ids).
+    pub personalization: &'a [VertexId],
+    /// Quantized α.
+    pub alpha: D::Word,
+    /// Quantized 1 − α.
+    pub one_minus_alpha: D::Word,
+}
+
+/// Fused scatter: the whole PPR iteration for one destination range in a
+/// single sweep. The scatter accumulates `X·P_t` into `out` (this range's
+/// slice of the *next* score buffer, zeroed here), and the clamp pass
+/// that [`scatter`] already makes over `out` is extended to apply Eq. 1
+/// (`α·x + scaling + (1−α)·V̄`), accumulate the squared-update-norm
+/// partial against `prev` (the full previous score vector — sources are
+/// global, the range's rows are read for the norm), and fold the range's
+/// dangling vertices of the *new* scores into `dangling_acc` — the
+/// partial the **next** iteration's scaling term needs, making the
+/// separate dangling scan and update sweeps of the unfused engine
+/// unnecessary. Word-level op order per output element is identical to
+/// `scatter` + `update_range` + `dangling_partial`, so the fused sweep is
+/// bit-identical to the three-sweep engine (see the property tests).
+///
+/// Returns the range's squared-update-norm partial (f64, element order =
+/// ascending vertex, lane-inner — the same grouping as the unfused
+/// update sweep).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scatter_fused<D: Datapath>(
+    d: &D,
+    x: &[VertexId],
+    y: &[VertexId],
+    vals: &[D::Word],
+    kappa: usize,
+    dst_start: usize,
+    prev: &[D::Word],
+    out: &mut [D::Word],
+    upd: &FusedUpdate<'_, D>,
+    dangling_idx: &[VertexId],
+    dangling_acc: &mut [D::Word],
+) -> f64 {
+    debug_assert_eq!(out.len() % kappa.max(1), 0);
+    out.fill(d.zero());
+    scatter_accum(d, x, y, vals, kappa, dst_start, prev, out);
+
+    let k = kappa;
+    let prev_rows = &prev[dst_start * k..dst_start * k + out.len()];
+    let mut norm_sq = 0.0f64;
+    let mut di = 0usize; // cursor into the ascending dangling list
+    for (r, row) in out.chunks_exact_mut(k).enumerate() {
+        let v = dst_start + r;
+        let prow = &prev_rows[r * k..(r + 1) * k];
+        for lane in 0..k {
+            // clamp finishes the deferred scatter accumulation; the Eq. 1
+            // word sequence then matches update_range exactly
+            let mut xw = d.mul(upd.alpha, d.clamp(row[lane]));
+            xw = d.add(xw, upd.scaling[lane]);
+            if upd.personalization[lane] as usize == v {
+                xw = d.add(xw, upd.one_minus_alpha);
+            }
+            let delta = d.abs_diff_f64(xw, prow[lane]);
+            norm_sq += delta * delta;
+            row[lane] = xw;
+        }
+        if di < dangling_idx.len() && dangling_idx[di] as usize == v {
+            for lane in 0..k {
+                dangling_acc[lane] = d.add(dangling_acc[lane], row[lane]);
+            }
+            di += 1;
+        }
     }
+    debug_assert_eq!(di, dangling_idx.len(), "dangling list escaped the range");
+    norm_sq
 }
 
 #[cfg(test)]

@@ -15,11 +15,14 @@
 //! - [`fast`] is the performance-optimized kernel the engine actually
 //!   runs: bit-identical to the streaming model (saturating adds of
 //!   non-negative pairwise-quantized products commute), minus its
-//!   structural bookkeeping.
+//!   structural bookkeeping. Its fused variant (`scatter_fused`) folds
+//!   the whole Eq. 1 update — plus the norm and next-iteration dangling
+//!   partials — into the scatter's clamp epilogue (DESIGN.md §5).
 //! - [`shard`] partitions the stream into destination-owned sub-streams
 //!   (the multi-CU / multi-channel model of the HBM follow-up paper) and
 //!   runs one scatter worker per shard with no merge pass — the engine's
-//!   parallel hot path.
+//!   parallel hot path, executed on the persistent worker pool
+//!   ([`crate::runtime::pool`]).
 //! - [`reference`] is a scalar COO SpMV oracle (same datapath, no
 //!   pipeline structure) used by unit and property tests.
 //! - [`csr_kernel`] is the row-parallel CSR SpMV used by the CPU baseline

@@ -42,12 +42,25 @@ use crate::graph::{partition, CooMatrix, VertexId};
 pub(crate) const PARALLEL_WORK_PER_SHARD: usize = 4096;
 
 /// Run one closure per shard work item, either inline (`serial`) or on
-/// scoped threads, returning the results in item order — the one fan-out
-/// primitive behind the edge, dangling and update sweeps, so the
-/// fallback/spawn/join discipline cannot diverge between them. A future
-/// optimization can swap the per-call spawns for a persistent worker pool
-/// here, in one place (DESIGN.md §4).
+/// the persistent worker pool ([`crate::runtime::pool`]), returning the
+/// results in item order — the one fan-out primitive behind the edge,
+/// dangling, update and fused sweeps, so the fallback/submit/barrier
+/// discipline cannot diverge between them. The pool's workers live for
+/// the process, so the steady-state cost per fan-out is a queue push and
+/// a latch wait — zero thread spawns per iteration (DESIGN.md §5).
 pub(crate) fn fan_out<T, R, F>(items: Vec<T>, serial: bool, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    crate::runtime::pool::global().fan_out(items, serial, f)
+}
+
+/// The pre-pool fan-out: scoped threads spawned per call. Kept as the
+/// measured baseline of the `fusion_speedup` bench (the cost this PR's
+/// persistent pool removes) — production paths never take it.
+pub(crate) fn fan_out_scoped<T, R, F>(items: Vec<T>, serial: bool, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
@@ -62,6 +75,22 @@ where
             items.into_iter().map(|item| s.spawn(move || fr(item))).collect();
         handles.into_iter().map(|h| h.join().expect("shard worker")).collect()
     })
+}
+
+/// Dispatch between the pooled fan-out (production) and the scoped-spawn
+/// legacy fan-out (bench baseline). Identical result words either way —
+/// items are independent and results return in item order.
+pub(crate) fn fan_out_mode<T, R, F>(items: Vec<T>, serial: bool, scoped: bool, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    if scoped {
+        fan_out_scoped(items, serial, f)
+    } else {
+        fan_out(items, serial, f)
+    }
 }
 
 /// One destination partition: an aligned packet stream (global
@@ -279,7 +308,7 @@ impl ShardedSchedule {
 /// Sharded scatter SpMV: `out = X · p` for all κ lanes, computed as one
 /// independent scatter per shard. Each shard writes only its own
 /// destination slice `out[dst_start·κ .. dst_end·κ]`, so the workers run
-/// with no synchronization (scoped threads, one per shard — the software
+/// with no synchronization (one pool worker per shard — the software
 /// analogue of per-CU URAM banks). `vals[i]` is shard `i`'s value stream
 /// quantized for the datapath.
 ///
@@ -295,6 +324,21 @@ pub fn fast_spmv_sharded<D: Datapath>(
     kappa: usize,
     p: &[D::Word],
     out: &mut [D::Word],
+) {
+    sharded_edge_sweep(d, sched, vals, kappa, p, out, false);
+}
+
+/// [`fast_spmv_sharded`] with the fan-out strategy explicit: `scoped ==
+/// true` takes the legacy scoped-spawn path (the `fusion_speedup` bench
+/// baseline; see [`fan_out_mode`]), `false` the persistent pool.
+pub(crate) fn sharded_edge_sweep<D: Datapath>(
+    d: &D,
+    sched: &ShardedSchedule,
+    vals: &[Vec<D::Word>],
+    kappa: usize,
+    p: &[D::Word],
+    out: &mut [D::Word],
+    scoped: bool,
 ) {
     let n = sched.num_vertices;
     assert_eq!(vals.len(), sched.shards.len(), "one value stream per shard");
@@ -324,7 +368,7 @@ pub fn fast_spmv_sharded<D: Datapath>(
     // dangling/update sweeps
     let serial = sched.num_edges * kappa < PARALLEL_WORK_PER_SHARD * sched.shards.len();
     let work: Vec<_> = sched.shards.iter().zip(vals).zip(slices).collect();
-    fan_out(work, serial, |((shard, svals), slice)| {
+    fan_out_mode(work, serial, scoped, |((shard, svals), slice)| {
         run_shard(d, shard, svals, kappa, p, slice)
     });
 }
@@ -466,7 +510,7 @@ mod tests {
     #[test]
     fn threaded_fan_out_matches_single_stream() {
         // enough edges per shard to cross PARALLEL_WORK_PER_SHARD, so the
-        // scoped-thread path (not the sequential fallback) is checked
+        // pooled path (not the sequential fallback) is checked
         let g = crate::graph::generators::erdos_renyi(3000, 0.005, 13);
         let coo = CooMatrix::from_graph(&g);
         assert!(coo.num_edges() >= PARALLEL_WORK_PER_SHARD * 4, "graph too small for this test");

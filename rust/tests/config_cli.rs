@@ -30,6 +30,41 @@ fn cli_overrides_config_file() {
 }
 
 #[test]
+fn no_fused_round_trips_config_and_cli() {
+    // default on
+    let cfg = ppr_spmv::cli::run_config(&Args::parse(["serve".to_string()])).unwrap();
+    assert!(cfg.fused);
+    // CLI flag disables
+    let args = Args::parse(["serve", "--no-fused"].into_iter().map(String::from));
+    let cfg = ppr_spmv::cli::run_config(&args).unwrap();
+    assert!(!cfg.fused);
+    // config file disables; CLI flag is a no-op on an already-unfused config
+    let dir = std::env::temp_dir().join("ppr_fused_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("unfused.toml");
+    std::fs::write(&path, "[engine]\nfused = false\nkappa = 4\n").unwrap();
+    let args = Args::parse(
+        ["serve", "--config", path.to_str().unwrap()].into_iter().map(String::from),
+    );
+    let cfg = ppr_spmv::cli::run_config(&args).unwrap();
+    assert!(!cfg.fused);
+    assert_eq!(cfg.kappa, 4);
+    // the flag survives all the way into the engine the builder constructs
+    let g = ppr_spmv::graph::generators::watts_strogatz(64, 4, 0.2, 2);
+    let engine = ppr_spmv::coordinator::EngineBuilder::native()
+        .config(cfg)
+        .build(&g)
+        .unwrap();
+    assert!(engine.describe().contains(" unfused "), "{}", engine.describe());
+    let fused_engine = ppr_spmv::coordinator::EngineBuilder::native()
+        .config(RunConfig::default())
+        .build(&g)
+        .unwrap();
+    assert!(fused_engine.describe().contains(" fused "), "{}", fused_engine.describe());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn experiment_dispatch_table2_smoke() {
     // table2 is pure modelling (no dataset build): safe as a test
     let args = Args::parse(

@@ -150,6 +150,118 @@ fn prop_sharded_ppr_bit_identical_across_shard_counts() {
 }
 
 #[test]
+fn prop_fused_executor_bit_identical_to_unfused() {
+    // the tentpole invariant: the fused single-sweep executor must
+    // reproduce the three-sweep engine word-for-word — scores AND f64
+    // update norms — on the fixed path for shards ∈ {1, 2, 3, 7}
+    use ppr_spmv::ppr::{BatchedPpr, Executor};
+    testutil::check(8, 0xB2, |rng| {
+        let g = testutil::arb_graph(rng, 150);
+        let coo = CooMatrix::from_graph(&g);
+        let bits = 20 + 2 * rng.next_index(4) as u32;
+        let d = FixedPath::paper(bits);
+        let dangling = g.dangling();
+        let pv: Vec<u32> =
+            (0..g.num_vertices as u32).filter(|&v| !dangling[v as usize]).take(3).collect();
+        if pv.is_empty() {
+            return;
+        }
+        let cfg = PprConfig { max_iterations: 7, ..Default::default() };
+        for shards in [1usize, 2, 3, 7] {
+            let pg = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, shards));
+            let fused = BatchedPpr::new(d, pg.clone(), pv.len(), 0.85).run(&pv, &cfg);
+            let unfused = BatchedPpr::new(d, pg, pv.len(), 0.85)
+                .with_executor(Executor::Unfused)
+                .run(&pv, &cfg);
+            assert_eq!(fused.scores, unfused.scores, "shards={shards} bits={bits}");
+            assert_eq!(
+                fused.update_norms, unfused.update_norms,
+                "norm grouping must match: shards={shards} bits={bits}"
+            );
+        }
+    });
+}
+
+#[test]
+fn fused_executor_all_dangling_and_empty_ranges() {
+    // adversarial shapes for the fused sweep: a hub destination (one
+    // shard owns almost all nnz, most shards own empty streams) with
+    // every non-source vertex dangling, and a fully dangling graph
+    // (no edges at all — the sweep is pure epilogue)
+    use ppr_spmv::ppr::{BatchedPpr, Executor};
+    let d = FixedPath::paper(22);
+    let cfg = PprConfig { max_iterations: 6, ..Default::default() };
+    let hub = {
+        let edges: Vec<(u32, u32)> = (1..48u32).map(|s| (s, 0)).collect();
+        ppr_spmv::graph::Graph::new(96, edges)
+    };
+    let no_edges = ppr_spmv::graph::Graph::new(40, vec![]);
+    for (g, pers) in [(&hub, vec![1u32, 5]), (&no_edges, vec![0u32, 39])] {
+        let coo = CooMatrix::from_graph(g);
+        let base = {
+            let pg = Arc::new(PreparedGraph::from_coo_sharded(&coo, 4, 1));
+            BatchedPpr::new(d, pg, 2, 0.85).run(&pers, &cfg)
+        };
+        for shards in [1usize, 2, 3, 7] {
+            let pg = Arc::new(PreparedGraph::from_coo_sharded(&coo, 4, shards));
+            if shards > 1 {
+                assert!(
+                    pg.sharded.shards.iter().any(|s| s.num_edges == 0),
+                    "these graphs must yield empty shards at {shards} shards"
+                );
+            }
+            let fused = BatchedPpr::new(d, pg.clone(), 2, 0.85).run(&pers, &cfg);
+            let unfused = BatchedPpr::new(d, pg, 2, 0.85)
+                .with_executor(Executor::Unfused)
+                .run(&pers, &cfg);
+            assert_eq!(fused.scores, base.scores, "fused vs 1-shard, shards={shards}");
+            assert_eq!(fused.scores, unfused.scores, "fused vs unfused, shards={shards}");
+            assert_eq!(fused.update_norms, unfused.update_norms, "shards={shards}");
+        }
+    }
+}
+
+#[test]
+fn pooled_iterations_spawn_zero_threads() {
+    // the acceptance invariant of the worker pool: once warm, PPR
+    // iterations never spawn a thread. Prewarm the global pool (its cap
+    // can never be exceeded afterwards), run many pooled iterations, and
+    // require the spawn counter to stay flat. The graph is sized so every
+    // sweep crosses the parallel-work threshold.
+    use ppr_spmv::ppr::BatchedPpr;
+    let pool = ppr_spmv::runtime::pool::global();
+    pool.prewarm();
+    let warm = pool.spawn_count();
+    assert_eq!(warm, pool.max_workers());
+
+    let n = 9_000usize;
+    let mut rng = ppr_spmv::util::rng::Xoshiro256::seeded(7);
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    for s in 0..(n / 2) as u32 {
+        for _ in 0..6 {
+            let dst = rng.next_index(n) as u32;
+            if dst != s {
+                edges.push((s, dst));
+            }
+        }
+    }
+    let g = ppr_spmv::graph::Graph::new(n, edges);
+    let pg = Arc::new(PreparedGraph::new_sharded(&g, 8, 4));
+    let d = FixedPath::paper(26);
+    let mut engine = BatchedPpr::new(d, pg, 4, 0.85);
+    let cfg = PprConfig { max_iterations: 12, ..Default::default() };
+    for _ in 0..3 {
+        let run = engine.run_scratch(&[1, 2, 3, 4], &cfg);
+        assert_eq!(run.iterations, 12);
+    }
+    assert_eq!(
+        pool.spawn_count(),
+        warm,
+        "pooled iterations must not spawn threads (36 fused sweeps ran)"
+    );
+}
+
+#[test]
 fn prop_packet_schedule_invariants() {
     testutil::check(60, 0xA2, |rng| {
         let g = testutil::arb_graph(rng, 300);

@@ -1,0 +1,12 @@
+//! `cargo bench --bench multigraph [-- --full | --scale N --requests N]`
+//! Multi-graph serving sweep: cross-graph batch throughput over a
+//! registry-backed server plus hot-swap reload latency under sustained
+//! load. Emits `BENCH_multigraph.json`. See `bench_harness::multigraph`.
+
+use ppr_spmv::bench_harness::{multigraph, ExpOptions};
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    println!("# multigraph serving [{}]\n", opts.descriptor());
+    multigraph::run(&opts);
+}

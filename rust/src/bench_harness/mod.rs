@@ -12,6 +12,7 @@
 pub mod energy;
 pub mod fig3_speedup;
 pub mod fusion;
+pub mod multigraph;
 pub mod fig4_accuracy;
 pub mod fig5_aggregated;
 pub mod fig6_sparsity;

@@ -1,0 +1,367 @@
+//! Multi-graph serving sweep — cross-graph batch throughput and
+//! reload-under-load latency of the registry-backed server (DESIGN.md
+//! §6).
+//!
+//! Phase A drives an interleaved workload across every registered graph
+//! (round-robin submission, so the graph-keyed batcher must separate the
+//! personalization spaces while keeping κ utilization up) and reports
+//! per-graph latency/fill plus aggregate throughput.
+//!
+//! Phase B issues a hot-swap [`GraphRegistry::reload`] for each graph
+//! while submitter threads keep the server under sustained load, and
+//! reports the reload's wall-clock latency, how many requests were in
+//! flight around it, and — the invariant that matters — how many were
+//! lost (always zero: the old epoch drains, the new epoch serves).
+//!
+//! Results print as a table, drop as CSV next to the other experiments,
+//! and emit machine-readable `BENCH_multigraph.json` for CI trend
+//! tracking.
+
+use super::ExpOptions;
+use crate::config::RunConfig;
+use crate::coordinator::{EngineBuilder, GraphRegistry};
+use crate::graph::Graph;
+use crate::util::report::Table;
+use crate::util::timing::Stopwatch;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Per-graph serving metrics from the cross-graph throughput phase.
+#[derive(Debug, Clone)]
+pub struct GraphPoint {
+    /// Graph name.
+    pub name: String,
+    /// |V| of the graph.
+    pub num_vertices: usize,
+    /// Requests completed for this graph.
+    pub requests: u64,
+    /// Median total latency (ms).
+    pub p50_ms: f64,
+    /// p95 total latency (ms).
+    pub p95_ms: f64,
+    /// Batches executed for this graph.
+    pub batches: u64,
+    /// Mean lanes per batch (κ utilization).
+    pub mean_fill: f64,
+}
+
+/// One hot-swap reload issued under sustained load.
+#[derive(Debug, Clone)]
+pub struct ReloadPoint {
+    /// Graph reloaded.
+    pub name: String,
+    /// Wall-clock of the `reload` call (load + re-prepare + swap), ms.
+    pub reload_ms: f64,
+    /// Requests issued across all graphs during this reload window.
+    pub requests_during: usize,
+    /// Requests that failed during the window (must be 0: hot swap drops
+    /// nothing).
+    pub lost: usize,
+    /// Epoch after the swap.
+    pub new_epoch: u64,
+}
+
+/// The full experiment result.
+#[derive(Debug, Clone)]
+pub struct MultigraphReport {
+    /// Per-graph serving metrics (phase A).
+    pub graphs: Vec<GraphPoint>,
+    /// Wall-clock of phase A.
+    pub total_seconds: f64,
+    /// Requests completed in phase A (all graphs).
+    pub total_requests: usize,
+    /// Aggregate phase-A throughput.
+    pub requests_per_second: f64,
+    /// Mean batch fill across graphs (phase A aggregate).
+    pub aggregate_fill: f64,
+    /// Hot-swap reloads issued under load (phase B).
+    pub reloads: Vec<ReloadPoint>,
+}
+
+/// Run the two-phase measurement over named in-memory graphs:
+/// `requests_per_graph` interleaved queries per graph (phase A), then one
+/// reload per graph under sustained background load (phase B).
+pub fn measure(
+    graphs: Vec<(String, Graph)>,
+    cfg: &RunConfig,
+    workers: usize,
+    requests_per_graph: usize,
+    seed: u64,
+) -> MultigraphReport {
+    assert!(!graphs.is_empty(), "need at least one graph");
+    let registry = Arc::new(GraphRegistry::new(crate::coordinator::DEFAULT_REGISTRY_CAPACITY));
+    let mut sizes: Vec<(String, usize)> = Vec::with_capacity(graphs.len());
+    for (name, g) in graphs {
+        sizes.push((name.clone(), g.num_vertices));
+        registry.register_graph(&name, g).expect("register graph");
+    }
+    let server = EngineBuilder::native()
+        .config(cfg.clone())
+        .serve_registry(registry.clone(), workers)
+        .expect("registry server");
+
+    // phase A: interleaved cross-graph throughput
+    let mut rng = crate::util::rng::Xoshiro256::seeded(seed);
+    let total = requests_per_graph * sizes.len();
+    let sw = Stopwatch::start();
+    let tickets: Vec<_> = (0..total)
+        .map(|i| {
+            let (name, nv) = &sizes[i % sizes.len()];
+            server.submit_to(name, rng.next_index(*nv) as u32, 5, None)
+        })
+        .collect();
+    let mut completed = 0usize;
+    for ticket in tickets {
+        if ticket.wait().is_ok() {
+            completed += 1;
+        }
+    }
+    let total_seconds = sw.seconds();
+
+    let graph_points: Vec<GraphPoint> = sizes
+        .iter()
+        .map(|(name, nv)| {
+            let snap = server.graph_stats(name).expect("graph saw traffic");
+            GraphPoint {
+                name: name.clone(),
+                num_vertices: *nv,
+                requests: snap.requests,
+                p50_ms: snap.latency_p50_ms,
+                p95_ms: snap.latency_p95_ms,
+                batches: snap.batches,
+                mean_fill: snap.mean_batch_fill,
+            }
+        })
+        .collect();
+    let aggregate_fill = server.stats().snapshot().mean_batch_fill;
+
+    // phase B: one hot-swap reload per graph under sustained load
+    let mut reloads = Vec::with_capacity(sizes.len());
+    for (name, _) in &sizes {
+        let stop = AtomicBool::new(false);
+        let sent = AtomicUsize::new(0);
+        let lost = AtomicUsize::new(0);
+        let mut reload_ms = 0.0f64;
+        let mut new_epoch = 0u64;
+        std::thread::scope(|s| {
+            let (stop, sent, lost) = (&stop, &sent, &lost);
+            let (server, sizes) = (&server, &sizes);
+            for t in 0..2u64 {
+                s.spawn(move || {
+                    let mut rng = crate::util::rng::Xoshiro256::seeded(seed ^ (0xA0 + t));
+                    while !stop.load(Ordering::Relaxed) {
+                        let i = sent.fetch_add(1, Ordering::Relaxed);
+                        let (gname, nv) = &sizes[i % sizes.len()];
+                        let ticket =
+                            server.submit_to(gname, rng.next_index(*nv) as u32, 3, None);
+                        if ticket.wait().is_err() {
+                            lost.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+            // let the load build, swap, then let the new epoch serve
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            let swr = Stopwatch::start();
+            new_epoch = registry.reload(name).expect("hot-swap reload under load");
+            reload_ms = swr.millis();
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            stop.store(true, Ordering::Relaxed);
+        });
+        reloads.push(ReloadPoint {
+            name: name.clone(),
+            reload_ms,
+            requests_during: sent.load(Ordering::Relaxed),
+            lost: lost.load(Ordering::Relaxed),
+            new_epoch,
+        });
+    }
+    server.shutdown();
+
+    MultigraphReport {
+        graphs: graph_points,
+        total_seconds,
+        total_requests: completed,
+        requests_per_second: completed as f64 / total_seconds.max(1e-12),
+        aggregate_fill,
+        reloads,
+    }
+}
+
+/// Serialize the report as the machine-readable `BENCH_multigraph.json`
+/// consumed by CI trend tracking (hand-rolled: the vendored crate set has
+/// no serde).
+pub fn to_json(report: &MultigraphReport, descriptor: &str) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"multigraph\",\n  \"config\": \"{descriptor}\",\n"
+    ));
+    s.push_str(&format!(
+        "  \"total_requests\": {},\n  \"total_seconds\": {:.6},\n  \
+         \"requests_per_second\": {:.1},\n  \"aggregate_fill\": {:.3},\n",
+        report.total_requests,
+        report.total_seconds,
+        report.requests_per_second,
+        report.aggregate_fill,
+    ));
+    s.push_str("  \"graphs\": [\n");
+    for (i, g) in report.graphs.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"vertices\": {}, \"requests\": {}, \"p50_ms\": {:.3}, \
+             \"p95_ms\": {:.3}, \"batches\": {}, \"mean_fill\": {:.3}}}{}\n",
+            g.name,
+            g.num_vertices,
+            g.requests,
+            g.p50_ms,
+            g.p95_ms,
+            g.batches,
+            g.mean_fill,
+            if i + 1 < report.graphs.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n  \"reloads\": [\n");
+    for (i, r) in report.reloads.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"reload_ms\": {:.3}, \"requests_during\": {}, \
+             \"lost\": {}, \"new_epoch\": {}}}{}\n",
+            r.name,
+            r.reload_ms,
+            r.requests_during,
+            r.lost,
+            r.new_epoch,
+            if i + 1 < report.reloads.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write `BENCH_multigraph.json` into `dir`; returns the path written.
+pub fn emit_json(
+    report: &MultigraphReport,
+    descriptor: &str,
+    dir: &std::path::Path,
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_multigraph.json");
+    std::fs::write(&path, to_json(report, descriptor))?;
+    Ok(path)
+}
+
+/// The full multigraph experiment: three Table 1 graphs at the configured
+/// scale served concurrently, κ and iteration count from the paper's
+/// timed setup, two workers.
+pub fn run(opts: &ExpOptions) -> Table {
+    let suite = crate::graph::DatasetSpec::table1_suite(opts.scale);
+    let graphs: Vec<(String, Graph)> = ["HK-100k", "WS-100k", "ER-100k"]
+        .iter()
+        .map(|&name| {
+            let spec = suite
+                .iter()
+                .find(|s| s.name == name)
+                .unwrap_or_else(|| panic!("{name} in the Table 1 suite"));
+            (name.to_string(), spec.build().graph)
+        })
+        .collect();
+    let cfg = RunConfig {
+        kappa: crate::PAPER_KAPPA,
+        iterations: opts.iterations,
+        batch_timeout_ms: 2,
+        ..Default::default()
+    };
+    let report = measure(graphs, &cfg, 2, opts.requests, opts.seed);
+
+    let mut t = Table::new(
+        &format!(
+            "Multi-graph serving — 3 graphs, registry-backed, κ={} ({})",
+            cfg.kappa,
+            opts.descriptor()
+        ),
+        &["graph", "|V|", "requests", "p50 ms", "p95 ms", "batches", "fill", "reload ms", "lost"],
+    );
+    for (g, r) in report.graphs.iter().zip(&report.reloads) {
+        t.row(&[
+            g.name.clone(),
+            format!("{}", g.num_vertices),
+            format!("{}", g.requests),
+            format!("{:.3}", g.p50_ms),
+            format!("{:.3}", g.p95_ms),
+            format!("{}", g.batches),
+            format!("{:.2}", g.mean_fill),
+            format!("{:.2}", r.reload_ms),
+            format!("{}", r.lost),
+        ]);
+    }
+    t.emit(opts.csv_path("multigraph").as_deref());
+    println!(
+        "aggregate: {} requests in {:.3}s ({:.1} req/s, fill {:.2}); reload losses: {}",
+        report.total_requests,
+        report.total_seconds,
+        report.requests_per_second,
+        report.aggregate_fill,
+        report.reloads.iter().map(|r| r.lost).sum::<usize>(),
+    );
+    if let Some(dir) = &opts.csv_dir {
+        match emit_json(&report, &opts.descriptor(), dir) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("could not write BENCH_multigraph.json: {e}"),
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graphs() -> Vec<(String, Graph)> {
+        vec![
+            ("ws".to_string(), crate::graph::generators::watts_strogatz(96, 4, 0.2, 11)),
+            ("er".to_string(), crate::graph::generators::erdos_renyi(64, 0.08, 12)),
+        ]
+    }
+
+    fn tiny_cfg() -> RunConfig {
+        RunConfig {
+            kappa: 2,
+            iterations: 3,
+            num_shards: 1,
+            batch_timeout_ms: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn measure_serves_all_graphs_and_loses_nothing_on_reload() {
+        let report = measure(tiny_graphs(), &tiny_cfg(), 1, 6, 0xD0);
+        assert_eq!(report.graphs.len(), 2);
+        assert_eq!(report.total_requests, 12, "every phase-A request completed");
+        for g in &report.graphs {
+            assert_eq!(g.requests, 6, "{}: round-robin splits evenly", g.name);
+            assert!(g.batches > 0);
+        }
+        assert_eq!(report.reloads.len(), 2);
+        for r in &report.reloads {
+            assert_eq!(r.lost, 0, "{}: hot swap must not drop requests", r.name);
+            assert!(r.new_epoch >= 1, "{}: epoch bumped", r.name);
+            assert!(r.reload_ms >= 0.0);
+        }
+    }
+
+    #[test]
+    fn json_shape() {
+        let report = measure(tiny_graphs(), &tiny_cfg(), 1, 2, 0xD1);
+        let json = to_json(&report, "test");
+        assert!(json.contains("\"bench\": \"multigraph\""));
+        assert!(json.contains("\"reloads\""));
+        assert_eq!(json.matches("\"reload_ms\"").count(), 2);
+        assert_eq!(json.matches("\"mean_fill\"").count(), 2);
+        assert!(!json.contains("},\n  ]"), "no trailing commas");
+
+        let dir = std::env::temp_dir().join("ppr_multigraph_json_test");
+        let path = emit_json(&report, "test", &dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with('{') && text.trim_end().ends_with('}'));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -11,20 +11,24 @@
 //! - `synthesize` — print the simulated synthesis report for a design
 
 use crate::bench_harness as bh;
-use crate::config::RunConfig;
-use crate::coordinator::{EngineBuilder, EngineKind};
+use crate::config::{RegistryConfig, RunConfig};
+use crate::coordinator::{EngineBuilder, EngineKind, GraphRegistry, GraphSource};
 use crate::fixed::Precision;
 use crate::graph::{loader, DatasetSpec};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Parsed command-line arguments: positionals + `--key value` / `--flag`.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     /// Positional arguments (subcommand first).
     pub positional: Vec<String>,
-    /// `--key value` options.
+    /// `--key value` options (last occurrence wins).
     pub options: std::collections::HashMap<String, String>,
+    /// Every `--key value` occurrence in order (repeatable options like
+    /// `serve --graph name=src --graph name=src` read this).
+    pub occurrences: Vec<(String, String)>,
     /// Bare `--flag`s.
     pub flags: std::collections::HashSet<String>,
 }
@@ -38,7 +42,9 @@ impl Args {
             if let Some(key) = a.strip_prefix("--") {
                 match it.peek() {
                     Some(v) if !v.starts_with("--") => {
-                        out.options.insert(key.to_string(), it.next().unwrap());
+                        let value = it.next().unwrap();
+                        out.occurrences.push((key.to_string(), value.clone()));
+                        out.options.insert(key.to_string(), value);
                     }
                     _ => {
                         out.flags.insert(key.to_string());
@@ -59,6 +65,11 @@ impl Args {
     /// Option or default.
     pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
         self.get(key).unwrap_or(default)
+    }
+
+    /// Every value given for a repeatable option, in order.
+    pub fn all(&self, key: &str) -> Vec<&str> {
+        self.occurrences.iter().filter(|(k, _)| k == key).map(|(_, v)| v.as_str()).collect()
     }
 }
 
@@ -163,12 +174,16 @@ pub fn dispatch(args: Args) -> Result<()> {
 const USAGE: &str = "\
 ppr-spmv — reduced-precision streaming SpMV for Personalized PageRank
 USAGE:
-  ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|shards|fusion|all>
+  ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|shards|fusion|
+            multigraph|all>
             [--full] [--scale N] [--requests N] [--iterations N] [--no-csv]
   ppr-spmv serve  [--graph NAME|--graph-file PATH] [--precision 26b]
             [--engine native|pjrt|cpu] [--kappa 8] [--shards N] [--no-fused]
             [--iterations 10] [--workers N] [--demo-requests N]
             [--deadline-ms N]
+          multi-graph: repeat --graph NAME=SOURCE (SOURCE = edge-list path
+            or dataset:NAME[@SCALE]) and/or a [registry] config section;
+            [--registry-capacity N] [--default-graph NAME]
   ppr-spmv query  --vertex V [--graph NAME|--graph-file PATH] [--top 10]
             [--engine native|pjrt|cpu]
   ppr-spmv generate --graph NAME --out PATH [--scale N]
@@ -212,6 +227,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "fusion" => {
             bh::fusion::run(&opts);
         }
+        "multigraph" => {
+            bh::multigraph::run(&opts);
+        }
         "all" => {
             bh::table1_datasets::run(&opts);
             bh::table2_resources::run(&opts);
@@ -225,14 +243,159 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             bh::energy::run(&opts);
             bh::shard_scaling::run(&opts);
             bh::fusion::run(&opts);
+            bh::multigraph::run(&opts);
         }
         other => bail!("unknown experiment {other}"),
     }
     Ok(())
 }
 
+/// Assemble the multi-graph registry configuration, if any: the
+/// `[registry]` config section seeds it, repeated `--graph NAME=SOURCE`
+/// pairs extend/override it, `--registry-capacity` and `--default-graph`
+/// tune it. Returns `None` when nothing requests multi-graph serving
+/// (plain `--graph NAME` keeps its single-graph dataset meaning).
+pub fn registry_config(args: &Args) -> Result<Option<RegistryConfig>> {
+    let mut reg = match args.options.get("config") {
+        Some(path) => RegistryConfig::load(std::path::Path::new(path))?,
+        None => None,
+    };
+    let pairs: Vec<&str> =
+        args.all("graph").into_iter().filter(|g| g.contains('=')).collect();
+    if !pairs.is_empty() {
+        let reg = reg.get_or_insert_with(RegistryConfig::default);
+        for pair in pairs {
+            let (name, source) = pair.split_once('=').expect("filtered on '='");
+            let (name, source) = (name.trim(), source.trim());
+            if name.is_empty() || source.is_empty() {
+                bail!("bad --graph {pair:?}: expected NAME=SOURCE");
+            }
+            match reg.graphs.iter_mut().find(|(n, _)| n == name) {
+                Some(slot) => slot.1 = source.to_string(),
+                None => reg.graphs.push((name.to_string(), source.to_string())),
+            }
+        }
+    }
+    if let Some(reg) = reg.as_mut() {
+        if let Some(cap) = args.get::<usize>("registry-capacity") {
+            anyhow::ensure!(cap >= 1, "--registry-capacity must be at least 1");
+            reg.capacity = cap;
+        }
+        if let Some(d) = args.options.get("default-graph") {
+            reg.default_graph = Some(d.clone());
+        }
+        anyhow::ensure!(
+            !reg.graphs.is_empty(),
+            "multi-graph serving needs at least one --graph NAME=SOURCE \
+             (or registry.graphs in the config file)"
+        );
+    } else {
+        // don't silently drop registry-only flags outside registry mode
+        anyhow::ensure!(
+            !args.options.contains_key("registry-capacity")
+                && !args.options.contains_key("default-graph"),
+            "--registry-capacity/--default-graph require multi-graph serving \
+             (--graph NAME=SOURCE or a [registry] config section)"
+        );
+    }
+    Ok(reg)
+}
+
+/// Build and populate a [`GraphRegistry`] from its configuration.
+pub fn build_registry(reg_cfg: &RegistryConfig) -> Result<Arc<GraphRegistry>> {
+    let registry = Arc::new(GraphRegistry::new(reg_cfg.capacity));
+    for (name, spec) in &reg_cfg.graphs {
+        let source = GraphSource::parse(spec)?;
+        registry.register(name, source).with_context(|| format!("register graph {name}"))?;
+    }
+    if let Some(d) = &reg_cfg.default_graph {
+        registry.set_default(d)?;
+    }
+    Ok(registry)
+}
+
+fn cmd_serve_registry(args: &Args, cfg: &RunConfig, reg_cfg: RegistryConfig) -> Result<()> {
+    let workers = args.get_or::<usize>("workers", 2);
+    let demo_requests = args.get_or::<usize>("demo-requests", 64);
+    let deadline = args.get::<u64>("deadline-ms").map(std::time::Duration::from_millis);
+    let registry = build_registry(&reg_cfg)?;
+    for (name, spec) in &reg_cfg.graphs {
+        println!(
+            "registered {name} <- {spec} (|V|={})",
+            registry.num_vertices(name).unwrap_or(0)
+        );
+    }
+    let builder = engine_builder(args, cfg)?;
+    println!(
+        "serving {} graphs (default {}) with {} × {}/{} workers, registry capacity {}",
+        registry.len(),
+        registry.default_graph().as_deref().unwrap_or("-"),
+        workers,
+        builder.kind(),
+        cfg.precision,
+        registry.capacity(),
+    );
+    let server = builder.serve_registry(registry.clone(), workers)?;
+    // demo workload: round-robin across graphs, random vertices
+    let names = registry.names();
+    let mut rng = crate::util::rng::Xoshiro256::seeded(1);
+    let sw = crate::util::Stopwatch::start();
+    let tickets: Vec<_> = (0..demo_requests)
+        .map(|i| {
+            let name = &names[i % names.len()];
+            let nv = registry.num_vertices(name).unwrap_or(1);
+            server.submit_to(name, rng.next_index(nv) as u32, cfg.top_n, deadline)
+        })
+        .collect();
+    let mut ok = 0usize;
+    for ticket in tickets {
+        if ticket.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let elapsed = sw.seconds();
+    println!(
+        "completed {ok}/{demo_requests} requests in {elapsed:.3}s ({:.1} req/s)",
+        ok as f64 / elapsed
+    );
+    for name in &names {
+        if let Some(snap) = server.graph_stats(name) {
+            println!(
+                "  {name}: {} req | p50={:.2}ms p95={:.2}ms | batches={} fill={:.2} | misses={}",
+                snap.requests,
+                snap.latency_p50_ms,
+                snap.latency_p95_ms,
+                snap.batches,
+                snap.mean_batch_fill,
+                snap.deadline_misses,
+            );
+        }
+    }
+    server.shutdown();
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
+    if let Some(reg_cfg) = registry_config(args)? {
+        // registry mode must not silently swallow explicit single-graph
+        // flags (a [registry] config section can engage it without any
+        // --graph NAME=SOURCE pair on the command line)
+        anyhow::ensure!(
+            !args.options.contains_key("graph-file"),
+            "--graph-file conflicts with multi-graph serving; drop it or remove the \
+             registry graphs"
+        );
+        if let Some(plain) =
+            args.all("graph").into_iter().find(|g| !g.contains('='))
+        {
+            bail!(
+                "--graph {plain} (dataset name) conflicts with multi-graph serving; \
+                 use --graph NAME=SOURCE or drop the registry configuration"
+            );
+        }
+        return cmd_serve_registry(args, &cfg, reg_cfg);
+    }
     let graph = load_graph(args)?;
     let workers = args.get_or::<usize>("workers", 2);
     let demo_requests = args.get_or::<usize>("demo-requests", 64);
@@ -426,5 +589,71 @@ mod tests {
     #[test]
     fn unknown_subcommand_errors() {
         assert!(dispatch(args("bogus")).is_err());
+    }
+
+    #[test]
+    fn repeated_options_all_retained() {
+        let a = args("serve --graph us=data/us.txt --graph eu=data/eu.txt --workers 2");
+        assert_eq!(a.all("graph"), vec!["us=data/us.txt", "eu=data/eu.txt"]);
+        assert_eq!(a.all("workers"), vec!["2"]);
+        assert!(a.all("nope").is_empty());
+        // last occurrence wins in the plain map
+        assert_eq!(a.options.get("graph").map(String::as_str), Some("eu=data/eu.txt"));
+    }
+
+    #[test]
+    fn registry_config_from_graph_pairs() {
+        let a = args(
+            "serve --graph us=dataset:HK-100k@200 --graph eu=dataset:WS-100k@200 \
+             --registry-capacity 3 --default-graph eu",
+        );
+        let reg = registry_config(&a).unwrap().expect("registry mode engaged");
+        assert_eq!(reg.capacity, 3);
+        assert_eq!(reg.default_graph.as_deref(), Some("eu"));
+        assert_eq!(reg.graphs.len(), 2);
+        assert_eq!(reg.graphs[0].0, "us");
+        // later pairs override earlier same-name pairs
+        let a = args("serve --graph us=a.txt --graph us=b.txt");
+        let reg = registry_config(&a).unwrap().unwrap();
+        assert_eq!(reg.graphs, vec![("us".to_string(), "b.txt".to_string())]);
+    }
+
+    #[test]
+    fn plain_graph_name_stays_single_graph() {
+        let a = args("serve --graph AMZN --scale 400");
+        assert!(registry_config(&a).unwrap().is_none(), "no '=' means dataset-name mode");
+        assert!(registry_config(&args("serve")).unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_graph_pairs_rejected() {
+        assert!(registry_config(&args("serve --graph =x.txt")).is_err());
+        assert!(registry_config(&args("serve --graph us=")).is_err());
+    }
+
+    #[test]
+    fn registry_flags_without_registry_mode_rejected() {
+        assert!(registry_config(&args("serve --registry-capacity 4")).is_err());
+        assert!(registry_config(&args("serve --default-graph main")).is_err());
+        // with a NAME=SOURCE pair they apply normally
+        let reg =
+            registry_config(&args("serve --graph a=x.txt --registry-capacity 4")).unwrap();
+        assert_eq!(reg.unwrap().capacity, 4);
+    }
+
+    #[test]
+    fn build_registry_from_dataset_sources() {
+        let reg_cfg = registry_config(&args(
+            "serve --graph hk=dataset:HK-100k@500 --graph ws=dataset:WS-100k@500",
+        ))
+        .unwrap()
+        .unwrap();
+        let registry = build_registry(&reg_cfg).unwrap();
+        assert_eq!(registry.len(), 2);
+        assert_eq!(registry.default_graph().unwrap().as_ref(), "hk");
+        assert_eq!(registry.num_vertices("ws"), Some(100_000 / 500));
+        // unknown dataset surfaces as a clean error
+        let bad = registry_config(&args("serve --graph x=dataset:BOGUS")).unwrap().unwrap();
+        assert!(build_registry(&bad).is_err());
     }
 }

@@ -284,6 +284,84 @@ impl RunConfig {
     }
 }
 
+/// Typed `[registry]` section: named graph sources for multi-graph
+/// serving (see `coordinator::registry`).
+///
+/// ```toml
+/// [registry]
+/// capacity = 4                # max resident prepared entries (LRU)
+/// default = "main"            # default route (first graph otherwise)
+/// graphs = ["main=dataset:HK-100k@8", "eu=data/eu.txt"]
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegistryConfig {
+    /// LRU capacity for resident prepared entries.
+    pub capacity: usize,
+    /// Default route; `None` defaults to the first registered graph.
+    pub default_graph: Option<String>,
+    /// `(name, source-spec)` pairs, in registration order. Source specs
+    /// are parsed by `coordinator::registry::GraphSource::parse`.
+    pub graphs: Vec<(String, String)>,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        Self { capacity: 8, default_graph: None, graphs: Vec::new() }
+    }
+}
+
+impl RegistryConfig {
+    /// Extract the `[registry]` section from a parsed document. Returns
+    /// `Ok(None)` when the document has no registry keys at all, so
+    /// single-graph configs stay single-graph.
+    pub fn from_doc(doc: &ConfigDoc) -> Result<Option<RegistryConfig>> {
+        let capacity = doc.get("registry", "capacity");
+        let default_graph = doc.get("registry", "default");
+        let graphs = doc.get("registry", "graphs");
+        if capacity.is_none() && default_graph.is_none() && graphs.is_none() {
+            return Ok(None);
+        }
+        let mut cfg = RegistryConfig::default();
+        if let Some(v) = capacity {
+            let c = v.as_int()?;
+            if c < 1 {
+                bail!("registry.capacity must be at least 1, got {c}");
+            }
+            cfg.capacity = c as usize;
+        }
+        if let Some(v) = default_graph {
+            cfg.default_graph = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = graphs {
+            let items = match v {
+                Value::Array(items) => items.as_slice(),
+                _ => bail!("registry.graphs must be an array of \"name=source\" strings"),
+            };
+            for item in items {
+                let spec = item.as_str().context("registry.graphs entries must be strings")?;
+                let (name, source) = spec.split_once('=').ok_or_else(|| {
+                    anyhow!("registry.graphs entry {spec:?}: expected name=source")
+                })?;
+                if name.trim().is_empty() || source.trim().is_empty() {
+                    bail!("registry.graphs entry {spec:?}: empty name or source");
+                }
+                cfg.graphs.push((name.trim().to_string(), source.trim().to_string()));
+            }
+        }
+        if let Some(d) = &cfg.default_graph {
+            if !cfg.graphs.iter().any(|(n, _)| n == d) && !cfg.graphs.is_empty() {
+                bail!("registry.default {d:?} is not among registry.graphs");
+            }
+        }
+        Ok(Some(cfg))
+    }
+
+    /// Load the `[registry]` section (if any) from a TOML-subset file.
+    pub fn load(path: &Path) -> Result<Option<Self>> {
+        Self::from_doc(&ConfigDoc::load(path)?)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -359,6 +437,53 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.num_shards = 300;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn registry_section_parses() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [registry]
+            capacity = 4
+            default = "main"
+            graphs = ["main=dataset:HK-100k@8", "eu=data/eu.txt"]
+            "#,
+        )
+        .unwrap();
+        let reg = RegistryConfig::from_doc(&doc).unwrap().unwrap();
+        assert_eq!(reg.capacity, 4);
+        assert_eq!(reg.default_graph.as_deref(), Some("main"));
+        assert_eq!(
+            reg.graphs,
+            vec![
+                ("main".to_string(), "dataset:HK-100k@8".to_string()),
+                ("eu".to_string(), "data/eu.txt".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn registry_section_absent_is_none() {
+        let doc = ConfigDoc::parse("[engine]\nkappa = 4\n").unwrap();
+        assert_eq!(RegistryConfig::from_doc(&doc).unwrap(), None);
+    }
+
+    #[test]
+    fn registry_section_rejects_malformed_entries() {
+        let doc = ConfigDoc::parse("[registry]\ngraphs = [\"no-equals-sign\"]\n").unwrap();
+        assert!(RegistryConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[registry]\ncapacity = 0\n").unwrap();
+        assert!(RegistryConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse(
+            "[registry]\ndefault = \"ghost\"\ngraphs = [\"main=data/a.txt\"]\n",
+        )
+        .unwrap();
+        assert!(RegistryConfig::from_doc(&doc).is_err(), "default must name a listed graph");
+        // a bare default with no graph list is fine (graphs come from the CLI)
+        let doc = ConfigDoc::parse("[registry]\ndefault = \"main\"\n").unwrap();
+        let reg = RegistryConfig::from_doc(&doc).unwrap().unwrap();
+        assert_eq!(reg.default_graph.as_deref(), Some("main"));
+        assert_eq!(reg.capacity, 8, "default capacity");
     }
 
     #[test]

@@ -2,13 +2,42 @@
 //! are full, or a timeout expires with at least one request pending — the
 //! classic latency/throughput knob of serving systems, and the host-side
 //! realization of the paper's "batch multiple user requests" design.
+//!
+//! The batcher is **graph-keyed** (DESIGN.md §6): each registered graph
+//! is its own personalization space, so a flush yields a [`GraphBatch`]
+//! whose requests all target one graph — batches never mix graphs. Graphs
+//! with pending work are drained round-robin: while one graph's batch is
+//! being assembled it leaves the rotation, so concurrent workers pick up
+//! *other* graphs instead of contending for the same queue.
 
 use super::request::PprRequest;
-use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Thread-safe batching queue.
+/// One flushed batch: up to κ requests, all for the same graph.
+#[derive(Debug)]
+pub struct GraphBatch {
+    /// The graph every request in this batch targets.
+    pub graph: Arc<str>,
+    /// The requests (1..=κ of them).
+    pub requests: Vec<PprRequest>,
+}
+
+impl GraphBatch {
+    /// Lanes this batch occupies.
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// True when the batch carries no requests (never returned by
+    /// [`DynamicBatcher::next_batch`]; provided for completeness).
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Thread-safe graph-keyed batching queue.
 pub struct DynamicBatcher {
     kappa: usize,
     timeout: Duration,
@@ -17,8 +46,22 @@ pub struct DynamicBatcher {
 }
 
 struct Inner {
-    queue: VecDeque<PprRequest>,
+    /// Per-graph FIFO queues (entries persist once a graph is seen).
+    queues: HashMap<Arc<str>, VecDeque<PprRequest>>,
+    /// Round-robin rotation of graphs with pending requests. Invariant: a
+    /// graph is in the rotation iff its queue is non-empty **and** no
+    /// worker is currently assembling its batch (the assembling worker
+    /// pops the graph and re-inserts it only if requests are left over).
+    rotation: VecDeque<Arc<str>>,
+    /// Total queued requests across graphs.
+    depth: usize,
     closed: bool,
+}
+
+impl Inner {
+    fn queue_len(&self, graph: &Arc<str>) -> usize {
+        self.queues.get(graph).map_or(0, |q| q.len())
+    }
 }
 
 impl DynamicBatcher {
@@ -28,21 +71,33 @@ impl DynamicBatcher {
         Self {
             kappa,
             timeout,
-            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            inner: Mutex::new(Inner {
+                queues: HashMap::new(),
+                rotation: VecDeque::new(),
+                depth: 0,
+                closed: false,
+            }),
             cv: Condvar::new(),
         }
     }
 
-    /// Enqueue a request. Returns `false` if the batcher is closed.
+    /// Enqueue a request on its graph's queue. Returns `false` if the
+    /// batcher is closed.
     ///
-    /// Wakes exactly **one** waiter: a single request needs a single
-    /// worker, and `notify_all` here stampedes every idle worker through
-    /// the mutex just to find an empty queue. A wake-up consumed by a
-    /// worker already assembling a batch is not lost: [`next_batch`]
-    /// hands leftover work to another waiter when it drains (see the
-    /// hand-off notify there). `notify_all` is reserved for
-    /// [`close`](Self::close), where every waiter really must observe
-    /// the state change.
+    /// Wake-up policy: a mid-fill request (the graph is pending or being
+    /// assembled, and still short of κ) wakes **one** waiter —
+    /// `notify_all` would stampede every idle worker through the mutex
+    /// for a signal nobody must act on (the assembler re-checks its fill
+    /// on timeout anyway, and an idle worker can do nothing with a
+    /// claimed graph). Two transitions *must* reach a specific sleeper
+    /// and therefore wake **all** waiters, because with per-graph claims
+    /// a single wake-up landing on the wrong worker is simply swallowed:
+    ///
+    /// - a request that **activates** a graph (0→1, enters the rotation)
+    ///   must reach an idle worker — an assembler that eats the wake-up
+    ///   will not absorb another graph's request into its batch;
+    /// - a request that **completes κ** must reach that graph's
+    ///   assembler, or a ready full batch idles until the flush timeout.
     ///
     /// [`next_batch`]: Self::next_batch
     pub fn submit(&self, req: PprRequest) -> bool {
@@ -50,27 +105,49 @@ impl DynamicBatcher {
         if inner.closed {
             return false;
         }
-        inner.queue.push_back(req);
-        self.cv.notify_one();
+        let graph = req.graph.clone();
+        let q = inner.queues.entry(graph.clone()).or_default();
+        let was_empty = q.is_empty();
+        q.push_back(req);
+        // fires exactly once per κ-crossing (queues grow one request at a
+        // time); a backlog left ≥ κ after a drain re-enters the rotation
+        // and gets next_batch's hand-off notify_all instead
+        let filled = q.len() == self.kappa;
+        inner.depth += 1;
+        // 0→1 means no worker owns this graph right now (an assembling
+        // worker would still hold ≥1 request in the queue), so it must
+        // re-enter the rotation
+        if was_empty && !inner.rotation.contains(&graph) {
+            inner.rotation.push_back(graph);
+            self.cv.notify_all();
+        } else if filled {
+            self.cv.notify_all();
+        } else {
+            self.cv.notify_one();
+        }
         true
     }
 
-    /// Blocking: wait for the next batch. Returns up to κ requests —
-    /// exactly κ when the queue is hot, fewer when the flush timeout
+    /// Blocking: wait for the next batch. Takes the front graph of the
+    /// round-robin rotation and returns up to κ of its requests — exactly
+    /// κ when that graph's queue is hot, fewer when the flush timeout
     /// expires first. Returns `None` when closed and drained.
-    pub fn next_batch(&self) -> Option<Vec<PprRequest>> {
+    pub fn next_batch(&self) -> Option<GraphBatch> {
         let mut inner = self.inner.lock().unwrap();
         loop {
-            // wait for the first request (or closure)
-            while inner.queue.is_empty() {
+            // wait for any graph with pending requests (or closure)
+            while inner.rotation.is_empty() {
                 if inner.closed {
                     return None;
                 }
                 inner = self.cv.wait(inner).unwrap();
             }
+            // claim the front graph: out of the rotation while assembling,
+            // so other workers drain other graphs meanwhile
+            let graph = inner.rotation.pop_front().expect("rotation non-empty");
             // first request in hand: wait up to `timeout` for a full batch
             let deadline = Instant::now() + self.timeout;
-            while inner.queue.len() < self.kappa && !inner.closed {
+            while inner.queue_len(&graph) < self.kappa && !inner.closed {
                 let now = Instant::now();
                 if now >= deadline {
                     break;
@@ -78,18 +155,28 @@ impl DynamicBatcher {
                 let (guard, _res) = self.cv.wait_timeout(inner, deadline - now).unwrap();
                 inner = guard;
             }
-            if inner.queue.is_empty() {
-                continue; // raced with another worker
+            let q = inner.queues.get_mut(&graph).expect("claimed graph has a queue");
+            let take = q.len().min(self.kappa);
+            let requests: Vec<PprRequest> = q.drain(..take).collect();
+            let leftover = !q.is_empty();
+            inner.depth -= requests.len();
+            if leftover {
+                // rotate to the back: other graphs get their turn first
+                inner.rotation.push_back(graph.clone());
             }
-            let take = inner.queue.len().min(self.kappa);
-            let batch = inner.queue.drain(..take).collect();
-            // hand-off: if submissions outran this batch (their wake-ups
-            // may all have landed on this worker while it was assembling),
-            // wake one more worker for the leftovers before going compute
-            if !inner.queue.is_empty() {
-                self.cv.notify_one();
+            // hand-off: if work remains (this graph's leftovers or other
+            // graphs whose wake-ups all landed on this worker while it was
+            // assembling), wake the waiters before going compute. Like the
+            // rotation-entry wake in submit, this must reach an *idle*
+            // worker, and a single wake-up can be swallowed by a worker
+            // mid-assembly on another graph — so notify_all.
+            if !inner.rotation.is_empty() {
+                self.cv.notify_all();
             }
-            return Some(batch);
+            if requests.is_empty() {
+                continue; // defensive: claimed graphs always hold ≥1 request
+            }
+            return Some(GraphBatch { graph, requests });
         }
     }
 
@@ -100,9 +187,14 @@ impl DynamicBatcher {
         self.cv.notify_all();
     }
 
-    /// Queue depth (diagnostics).
+    /// Queue depth across all graphs (diagnostics).
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        self.inner.lock().unwrap().depth
+    }
+
+    /// Queue depth of one graph (diagnostics).
+    pub fn depth_of(&self, graph: &str) -> usize {
+        self.inner.lock().unwrap().queues.get(graph).map_or(0, |q| q.len())
     }
 
     /// The κ this batcher fills toward.
@@ -114,10 +206,13 @@ impl DynamicBatcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
 
     fn req(id: u64) -> PprRequest {
         PprRequest::new(id, id as u32, 10)
+    }
+
+    fn req_on(id: u64, graph: &Arc<str>) -> PprRequest {
+        PprRequest::new(id, id as u32, 10).with_graph(graph.clone())
     }
 
     #[test]
@@ -128,7 +223,8 @@ mod tests {
         }
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 4);
-        assert_eq!(batch[0].id, 0);
+        assert_eq!(batch.requests[0].id, 0);
+        assert_eq!(batch.graph.as_ref(), super::super::request::DEFAULT_GRAPH);
     }
 
     #[test]
@@ -171,7 +267,7 @@ mod tests {
         b.submit(req(42));
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
-        assert_eq!(batch[0].id, 42);
+        assert_eq!(batch.requests[0].id, 42);
     }
 
     #[test]
@@ -213,5 +309,104 @@ mod tests {
         assert_eq!(b.next_batch().unwrap().len(), 2);
         assert_eq!(b.next_batch().unwrap().len(), 1);
         assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn batches_never_mix_graphs() {
+        let a: Arc<str> = Arc::from("a");
+        let z: Arc<str> = Arc::from("z");
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        // interleave submissions across two graphs
+        for i in 0..4 {
+            b.submit(req_on(i, &a));
+            b.submit(req_on(100 + i, &z));
+        }
+        assert_eq!(b.depth(), 8);
+        assert_eq!(b.depth_of("a"), 4);
+        assert_eq!(b.depth_of("z"), 4);
+        for _ in 0..2 {
+            let batch = b.next_batch().unwrap();
+            assert_eq!(batch.len(), 4, "each graph flushes a full κ batch");
+            assert!(
+                batch.requests.iter().all(|r| r.graph == batch.graph),
+                "one personalization space per batch"
+            );
+        }
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn round_robin_across_graphs() {
+        let a: Arc<str> = Arc::from("a");
+        let z: Arc<str> = Arc::from("z");
+        let b = DynamicBatcher::new(2, Duration::from_millis(5));
+        // graph a has two batches' worth, z has one: the rotation must
+        // interleave z between a's batches rather than starving it
+        for i in 0..4 {
+            b.submit(req_on(i, &a));
+        }
+        b.submit(req_on(50, &z));
+        b.submit(req_on(51, &z));
+        let order: Vec<String> =
+            (0..3).map(|_| b.next_batch().unwrap().graph.as_ref().to_string()).collect();
+        assert_eq!(order, vec!["a", "z", "a"], "leftover graphs rotate to the back");
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn partial_flush_per_graph_on_timeout() {
+        let a: Arc<str> = Arc::from("a");
+        let z: Arc<str> = Arc::from("z");
+        let b = DynamicBatcher::new(8, Duration::from_millis(8));
+        b.submit(req_on(1, &a));
+        b.submit(req_on(2, &z));
+        b.submit(req_on(3, &a));
+        // neither graph fills κ=8: both flush as partial single-graph
+        // batches once the timeout expires
+        let first = b.next_batch().unwrap();
+        let second = b.next_batch().unwrap();
+        let mut sizes = vec![(first.graph, first.len()), (second.graph, second.len())];
+        sizes.sort_by(|x, y| x.0.cmp(&y.0));
+        assert_eq!(sizes[0].1 + sizes[1].1, 3);
+        assert_eq!(sizes[0].0.as_ref(), "a");
+        assert_eq!(sizes[0].1, 2);
+        assert_eq!(sizes[1].0.as_ref(), "z");
+        assert_eq!(sizes[1].1, 1);
+    }
+
+    #[test]
+    fn multi_graph_load_drains_completely() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let graphs: Vec<Arc<str>> = ["g0", "g1", "g2"].iter().map(|&g| Arc::from(g)).collect();
+        let b = Arc::new(DynamicBatcher::new(4, Duration::from_millis(2)));
+        let served = Arc::new(AtomicUsize::new(0));
+        let mixed = Arc::new(AtomicUsize::new(0));
+        let workers: Vec<_> = (0..3)
+            .map(|_| {
+                let b = b.clone();
+                let served = served.clone();
+                let mixed = mixed.clone();
+                std::thread::spawn(move || {
+                    while let Some(batch) = b.next_batch() {
+                        if batch.requests.iter().any(|r| r.graph != batch.graph) {
+                            mixed.fetch_add(1, Ordering::SeqCst);
+                        }
+                        served.fetch_add(batch.len(), Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for i in 0..90u64 {
+            assert!(b.submit(req_on(i, &graphs[(i % 3) as usize])));
+            if i % 13 == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        b.close();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(served.load(Ordering::SeqCst), 90, "every request served exactly once");
+        assert_eq!(mixed.load(Ordering::SeqCst), 0, "no batch ever mixes graphs");
     }
 }

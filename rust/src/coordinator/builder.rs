@@ -13,6 +13,7 @@
 use super::engine::{
     CpuBaselineEngine, NativeEngine, PjrtEngineAdapter, PprEngine, ThreadBoundEngine,
 };
+use super::registry::{GraphEntry, GraphRegistry};
 use super::server::{Server, ServerConfig};
 use crate::config::RunConfig;
 use crate::graph::{CsrMatrix, Graph};
@@ -123,18 +124,23 @@ impl EngineBuilder {
         }
     }
 
-    /// Graph preparation this builder performs: packet width comes from
-    /// the run configuration; the shard count applies only to the native
-    /// engine (the PJRT marshaller reads the single stream, so sharded
+    /// Shard count of the preparation this builder performs for a pool of
+    /// `workers`: the configured count applies only to the native engine
+    /// (the PJRT marshaller reads the single stream, so sharded
     /// preparation would be wasted work and memory) and is divided among
     /// the pool's workers so concurrent batches don't oversubscribe the
     /// host (each worker fans out over its own engine's shards).
-    fn prepare(&self, graph: &Graph, workers: usize) -> PreparedGraph {
-        let shards = match self.kind {
+    pub fn prep_shards(&self, workers: usize) -> usize {
+        match self.kind {
             EngineKind::Native => (self.cfg.num_shards / workers.max(1)).max(1),
             _ => 1,
-        };
-        PreparedGraph::new_sharded(graph, self.cfg.b, shards)
+        }
+    }
+
+    /// Graph preparation this builder performs: packet width from the run
+    /// configuration, shard count from [`Self::prep_shards`].
+    fn prepare(&self, graph: &Graph, workers: usize) -> PreparedGraph {
+        PreparedGraph::new_sharded(graph, self.cfg.b, self.prep_shards(workers))
     }
 
     /// Build one engine over an already-prepared packet schedule (shared
@@ -178,11 +184,35 @@ impl EngineBuilder {
         }
     }
 
+    /// Build one engine over a resolved registry entry (the registry
+    /// serving path: native/PJRT bind the entry's prepared schedule, the
+    /// CPU baseline its lazily-derived CSR).
+    pub fn build_entry(&self, entry: &GraphEntry) -> Result<Box<dyn PprEngine + Send>> {
+        self.cfg.validate()?;
+        match self.kind {
+            EngineKind::CpuBaseline => {
+                Ok(Box::new(CpuBaselineEngine::new(entry.csr(), self.cfg.clone())))
+            }
+            _ => self.build_prepared(entry.prepared.clone()),
+        }
+    }
+
     /// Stand up a [`Server`] with `workers` engines of this kind, taking
     /// the batching timeout and default top-N from the run configuration.
     pub fn serve(&self, graph: &Graph, workers: usize) -> Result<Server> {
         let engines = self.build_pool(graph, workers)?;
         Ok(Server::start(engines, ServerConfig::from_run(&self.cfg)))
+    }
+
+    /// Stand up a multi-graph [`Server`]: `workers` threads resolving
+    /// per-batch against `registry`, building engines of this kind on
+    /// demand (see [`Server::start_registry`]).
+    pub fn serve_registry(
+        &self,
+        registry: Arc<GraphRegistry>,
+        workers: usize,
+    ) -> Result<Server> {
+        Server::start_registry(registry, self.clone(), workers, ServerConfig::from_run(&self.cfg))
     }
 
     fn spawn_pjrt(&self, prepared: Arc<PreparedGraph>) -> Result<Box<dyn PprEngine + Send>> {
@@ -280,5 +310,51 @@ mod tests {
     fn cpu_baseline_rejects_prepared_path() {
         let pg = Arc::new(crate::ppr::PreparedGraph::new(&graph(), 8));
         assert!(EngineBuilder::cpu_baseline().build_prepared(pg).is_err());
+    }
+
+    #[test]
+    fn build_entry_covers_native_and_cpu_baseline() {
+        let registry = GraphRegistry::new(2);
+        registry.register_graph("g", graph()).unwrap();
+        let cfg = RunConfig { kappa: 2, iterations: 5, num_shards: 1, ..Default::default() };
+        let entry = registry.resolve("g", cfg.precision, cfg.b, 1).unwrap();
+
+        let mut native = EngineBuilder::native().config(cfg.clone()).build_entry(&entry).unwrap();
+        assert_eq!(native.num_vertices(), 128);
+        let mut block = ScoreBlock::new();
+        native.run_batch(&[3], &mut block).unwrap();
+        assert_eq!(block.top_n(0, 1)[0].vertex, 3);
+
+        let cpu = EngineBuilder::cpu_baseline().config(cfg).build_entry(&entry).unwrap();
+        assert!(cpu.describe().contains("cpu-baseline"));
+        assert_eq!(cpu.num_vertices(), 128);
+    }
+
+    #[test]
+    fn prep_shards_divides_among_workers() {
+        let cfg = RunConfig { num_shards: 8, ..Default::default() };
+        let b = EngineBuilder::native().config(cfg.clone());
+        assert_eq!(b.prep_shards(1), 8);
+        assert_eq!(b.prep_shards(4), 2);
+        assert_eq!(b.prep_shards(16), 1, "never below one shard");
+        assert_eq!(EngineBuilder::pjrt().config(cfg).prep_shards(1), 1, "pjrt reads one stream");
+    }
+
+    #[test]
+    fn serve_registry_round_trips_a_query() {
+        let registry = Arc::new(GraphRegistry::new(2));
+        registry.register_graph("main", graph()).unwrap();
+        let cfg = RunConfig {
+            kappa: 2,
+            iterations: 10,
+            num_shards: 1,
+            batch_timeout_ms: 2,
+            ..Default::default()
+        };
+        let server =
+            EngineBuilder::native().config(cfg).serve_registry(registry, 1).unwrap();
+        let resp = server.query_graph("main", 11, 3).unwrap();
+        assert_eq!(resp.ranking[0].vertex, 11);
+        server.shutdown();
     }
 }

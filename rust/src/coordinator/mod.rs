@@ -14,13 +14,21 @@
 //! - [`builder`] — [`EngineBuilder`], the one factory (`EngineKind` ×
 //!   `RunConfig`) that the CLI, bench harness, examples and tests all
 //!   construct engines through;
-//! - [`request`] — typed queries/responses with latency accounting and
-//!   optional per-request deadlines;
-//! - [`batcher`] — the dynamic batcher: fill the accelerator's κ lanes or
-//!   flush on timeout (the host-side half of the paper's batching design);
-//! - [`server`] — worker threads, the non-blocking [`Ticket`] submission
-//!   API, graceful shutdown;
-//! - [`stats`] — latency percentiles and throughput counters.
+//! - [`registry`] — [`GraphRegistry`]: named graphs with lazily-prepared
+//!   `Arc`-shared entries (LRU-bounded residency) and epoch-based
+//!   hot-swap [`GraphRegistry::reload`] — the multi-graph serving
+//!   substrate (DESIGN.md §6);
+//! - [`request`] — typed queries/responses with latency accounting,
+//!   per-graph routing and optional per-request deadlines;
+//! - [`batcher`] — the graph-keyed dynamic batcher: fill the
+//!   accelerator's κ lanes or flush on timeout, per graph, round-robin
+//!   across graphs — one personalization space per batch;
+//! - [`server`] — worker threads (single-graph engine ownership or
+//!   per-batch registry resolution with an engine cache), the
+//!   non-blocking [`Ticket`] submission API with [`Server::submit_to`]
+//!   routing, per-graph statistics, graceful shutdown;
+//! - [`stats`] — latency percentiles and throughput counters (kept both
+//!   in aggregate and per graph).
 //!
 //! The vendored crate set has no tokio; the coordinator is built on
 //! `std::thread` + `mpsc` + `Condvar`, which is entirely adequate for a
@@ -29,17 +37,19 @@
 pub mod batcher;
 pub mod builder;
 pub mod engine;
+pub mod registry;
 pub mod request;
 pub mod score_block;
 pub mod server;
 pub mod stats;
 
-pub use batcher::DynamicBatcher;
+pub use batcher::{DynamicBatcher, GraphBatch};
 pub use builder::{EngineBuilder, EngineKind};
 pub use engine::{
     CpuBaselineEngine, NativeEngine, PjrtEngineAdapter, PprEngine, ThreadBoundEngine,
 };
-pub use request::{PprRequest, PprResponse, RankedVertex};
+pub use registry::{GraphEntry, GraphRegistry, GraphSource, DEFAULT_REGISTRY_CAPACITY};
+pub use request::{default_graph_key, PprRequest, PprResponse, RankedVertex, DEFAULT_GRAPH};
 pub use score_block::ScoreBlock;
 pub use server::{Server, ServerConfig, Ticket};
 pub use stats::ServerStats;

@@ -1,0 +1,610 @@
+//! [`GraphRegistry`] — named graphs behind the serving stack (DESIGN.md
+//! §6).
+//!
+//! Real deployments serve *many* graphs (markets, regions, periodically
+//! re-crawled snapshots), not one. The registry owns that multiplexing:
+//!
+//! - graphs are **registered** under a name from a [`GraphSource`]
+//!   (edge-list file, Table 1 dataset, or an in-memory graph) and loaded
+//!   eagerly, so request validation (|V|) never touches the disk;
+//! - the expensive part — the sharded packet schedule
+//!   ([`PreparedGraph::from_coo_sharded`]) — is **prepared lazily** on
+//!   first use and cached as an `Arc`-shared [`GraphEntry`] keyed by
+//!   `(graph, precision, B, shards)`, with LRU-bounded residency;
+//! - [`GraphRegistry::reload`] is an **atomic hot-swap**: the new
+//!   snapshot is loaded and re-prepared for every resident configuration
+//!   *before* the epoch bumps, so workers flip to the new epoch between
+//!   batches while in-flight batches finish on the `Arc` they already
+//!   hold — the old epoch drains, the new epoch serves, and no request is
+//!   dropped.
+//!
+//! Epochs make the swap observable: every entry carries the epoch of the
+//! snapshot it was prepared from plus a served-batch counter, so drain
+//! tests (and operators) can assert that both sides of a reload actually
+//! carried traffic.
+
+use crate::graph::{CsrMatrix, Graph};
+use crate::ppr::PreparedGraph;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default LRU capacity: resident prepared entries across all graphs.
+pub const DEFAULT_REGISTRY_CAPACITY: usize = 8;
+
+/// Where a registered graph's data comes from. Sources are retained so
+/// [`GraphRegistry::reload`] can re-read a fresh snapshot.
+#[derive(Debug, Clone)]
+pub enum GraphSource {
+    /// A SNAP-style edge-list file (re-read on every reload).
+    File(PathBuf),
+    /// A Table 1 dataset spec, built at `1/scale` size (deterministic, so
+    /// a reload regenerates the same graph — useful as a stable fixture).
+    Dataset {
+        /// Dataset name from the Table 1 suite (e.g. "HK-100k").
+        name: String,
+        /// Size divisor (1 = paper scale).
+        scale: usize,
+    },
+    /// An in-memory graph handed over at registration.
+    InMemory(Arc<Graph>),
+}
+
+impl GraphSource {
+    /// Parse a CLI/config source spec: `dataset:NAME` or
+    /// `dataset:NAME@SCALE` selects a Table 1 dataset; anything else is an
+    /// edge-list file path.
+    pub fn parse(spec: &str) -> Result<GraphSource> {
+        let t = spec.trim();
+        if t.is_empty() {
+            bail!("empty graph source");
+        }
+        if let Some(rest) = t.strip_prefix("dataset:") {
+            let (name, scale) = match rest.split_once('@') {
+                Some((n, s)) => {
+                    (n, s.parse::<usize>().with_context(|| format!("bad dataset scale {s:?}"))?)
+                }
+                None => (rest, 8),
+            };
+            if name.is_empty() || scale == 0 {
+                bail!("bad dataset source {t:?}");
+            }
+            return Ok(GraphSource::Dataset { name: name.to_string(), scale });
+        }
+        Ok(GraphSource::File(PathBuf::from(t)))
+    }
+
+    /// Load (or re-load) the graph this source describes.
+    pub fn load(&self) -> Result<Arc<Graph>> {
+        match self {
+            GraphSource::File(path) => {
+                Ok(Arc::new(crate::graph::loader::read_edge_list(path)?))
+            }
+            GraphSource::Dataset { name, scale } => {
+                let spec = crate::graph::DatasetSpec::table1_suite(*scale)
+                    .into_iter()
+                    .find(|s| s.name.eq_ignore_ascii_case(name))
+                    .ok_or_else(|| anyhow!("unknown dataset {name}"))?;
+                Ok(Arc::new(spec.build().graph))
+            }
+            GraphSource::InMemory(g) => Ok(g.clone()),
+        }
+    }
+
+    /// Short description for logs.
+    pub fn describe(&self) -> String {
+        match self {
+            GraphSource::File(p) => format!("file:{}", p.display()),
+            GraphSource::Dataset { name, scale } => format!("dataset:{name}@{scale}"),
+            GraphSource::InMemory(g) => format!("in-memory(|V|={})", g.num_vertices),
+        }
+    }
+}
+
+/// The preparation a [`GraphEntry`] was built for. Precision rides in the
+/// key even though the packet schedule itself is precision-independent:
+/// engines quantize their value streams per precision, and keying the
+/// entry this way is what later PRs hang per-graph precision selection
+/// off.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct PrepKey {
+    graph: Arc<str>,
+    epoch: u64,
+    precision: crate::fixed::Precision,
+    b: usize,
+    shards: usize,
+}
+
+/// One resident prepared graph: the immutable snapshot workers serve
+/// from. `Arc`-shared — a reload replaces the registry's reference, while
+/// in-flight batches keep serving from the entry they already resolved.
+#[derive(Debug)]
+pub struct GraphEntry {
+    /// Canonical graph name.
+    pub name: Arc<str>,
+    /// Epoch of the snapshot this entry was prepared from (bumps on every
+    /// [`GraphRegistry::reload`]).
+    pub epoch: u64,
+    /// The raw snapshot (kept for CSR derivation and introspection).
+    pub graph: Arc<Graph>,
+    /// The sharded packet schedule the streaming engines bind to.
+    pub prepared: Arc<PreparedGraph>,
+    csr: OnceLock<Arc<CsrMatrix>>,
+    batches_served: AtomicU64,
+}
+
+impl GraphEntry {
+    /// Destination-major CSR of the snapshot (CPU-baseline layout), built
+    /// on first use and shared afterwards.
+    pub fn csr(&self) -> Arc<CsrMatrix> {
+        self.csr.get_or_init(|| Arc::new(CsrMatrix::from_graph(&self.graph))).clone()
+    }
+
+    /// |V| of the snapshot.
+    pub fn num_vertices(&self) -> usize {
+        self.graph.num_vertices
+    }
+
+    /// Batches served from this entry (coarse per-epoch drain
+    /// accounting). The counter belongs to this *entry instance*: if the
+    /// entry is LRU-evicted and the same `(graph, epoch, config)` is
+    /// later re-prepared, the fresh entry starts from zero — hold the
+    /// `Arc` across the window you are accounting for.
+    pub fn batches_served(&self) -> u64 {
+        self.batches_served.load(Ordering::Relaxed)
+    }
+
+    /// Record one served batch (called by the server worker).
+    pub fn record_batch_served(&self) {
+        self.batches_served.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Mutable per-graph state.
+#[derive(Debug)]
+struct Slot {
+    source: GraphSource,
+    graph: Arc<Graph>,
+    epoch: u64,
+    reloads: u64,
+}
+
+#[derive(Debug, Default)]
+struct RegistryInner {
+    graphs: BTreeMap<Arc<str>, Slot>,
+    /// LRU order: front = least recently used, back = most recent.
+    resident: Vec<(PrepKey, Arc<GraphEntry>)>,
+    default_graph: Option<Arc<str>>,
+}
+
+/// Thread-safe registry of named graphs with LRU-bounded prepared-entry
+/// residency and epoch-based hot-swap reload. See the module docs.
+#[derive(Debug)]
+pub struct GraphRegistry {
+    inner: Mutex<RegistryInner>,
+    capacity: usize,
+}
+
+impl GraphRegistry {
+    /// A registry bounding residency to `capacity` prepared entries
+    /// (clamped to at least 1).
+    pub fn new(capacity: usize) -> Self {
+        Self { inner: Mutex::new(RegistryInner::default()), capacity: capacity.max(1) }
+    }
+
+    /// Max resident prepared entries.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Register a graph under `name`, loading it now. The first
+    /// registered graph becomes the default route. Names must be
+    /// non-empty and unique.
+    pub fn register(&self, name: &str, source: GraphSource) -> Result<Arc<str>> {
+        let name = name.trim();
+        if name.is_empty() {
+            bail!("graph name must be non-empty");
+        }
+        let graph = source.load().with_context(|| format!("load graph {name}"))?;
+        let key: Arc<str> = Arc::from(name);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.graphs.contains_key(name) {
+            bail!("graph {name} already registered");
+        }
+        inner.graphs.insert(key.clone(), Slot { source, graph, epoch: 0, reloads: 0 });
+        if inner.default_graph.is_none() {
+            inner.default_graph = Some(key.clone());
+        }
+        Ok(key)
+    }
+
+    /// Register an in-memory graph (convenience for tests and embedders).
+    pub fn register_graph(&self, name: &str, graph: Graph) -> Result<Arc<str>> {
+        self.register(name, GraphSource::InMemory(Arc::new(graph)))
+    }
+
+    /// Make `name` the default route for requests that don't name a graph.
+    pub fn set_default(&self, name: &str) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let key = inner
+            .graphs
+            .get_key_value(name)
+            .map(|(k, _)| k.clone())
+            .ok_or_else(|| anyhow!("unknown graph {name}"))?;
+        inner.default_graph = Some(key);
+        Ok(())
+    }
+
+    /// The default route, if any graph is registered.
+    pub fn default_graph(&self) -> Option<Arc<str>> {
+        self.inner.lock().unwrap().default_graph.clone()
+    }
+
+    /// Canonical shared key for `name` (interning submissions avoids one
+    /// allocation per request).
+    pub fn key(&self, name: &str) -> Option<Arc<str>> {
+        self.inner.lock().unwrap().graphs.get_key_value(name).map(|(k, _)| k.clone())
+    }
+
+    /// Interned key and current |V| for `name` in one lock acquisition —
+    /// the submission path's routing lookup.
+    pub fn route(&self, name: &str) -> Option<(Arc<str>, usize)> {
+        let inner = self.inner.lock().unwrap();
+        inner.graphs.get_key_value(name).map(|(k, s)| (k.clone(), s.graph.num_vertices))
+    }
+
+    /// The default route's key and |V| in one lock acquisition.
+    pub fn default_route(&self) -> Option<(Arc<str>, usize)> {
+        let inner = self.inner.lock().unwrap();
+        let key = inner.default_graph.clone()?;
+        let num_vertices = inner.graphs.get(&key)?.graph.num_vertices;
+        Some((key, num_vertices))
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<Arc<str>> {
+        self.inner.lock().unwrap().graphs.keys().cloned().collect()
+    }
+
+    /// Number of registered graphs.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().graphs.len()
+    }
+
+    /// True when no graph is registered.
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().graphs.is_empty()
+    }
+
+    /// |V| of the current snapshot of `name`.
+    pub fn num_vertices(&self, name: &str) -> Option<usize> {
+        let inner = self.inner.lock().unwrap();
+        inner.graphs.get(name).map(|s| s.graph.num_vertices)
+    }
+
+    /// Current epoch of `name` (0 until the first reload).
+    pub fn epoch(&self, name: &str) -> Option<u64> {
+        let inner = self.inner.lock().unwrap();
+        inner.graphs.get(name).map(|s| s.epoch)
+    }
+
+    /// Completed reloads of `name`.
+    pub fn reloads(&self, name: &str) -> Option<u64> {
+        let inner = self.inner.lock().unwrap();
+        inner.graphs.get(name).map(|s| s.reloads)
+    }
+
+    /// Resident prepared entries (diagnostics).
+    pub fn resident(&self) -> usize {
+        self.inner.lock().unwrap().resident.len()
+    }
+
+    /// Resolve the prepared entry for `(name, precision, b, shards)`,
+    /// preparing it on first use. Preparation runs outside the registry
+    /// lock so other graphs keep serving; concurrent first-uses of the
+    /// same key may prepare twice and keep one — correct, just briefly
+    /// wasteful.
+    pub fn resolve(
+        &self,
+        name: &str,
+        precision: crate::fixed::Precision,
+        b: usize,
+        shards: usize,
+    ) -> Result<Arc<GraphEntry>> {
+        loop {
+            // snapshot under the lock
+            let (key, graph, epoch) = {
+                let mut inner = self.inner.lock().unwrap();
+                let (key, graph, epoch) = inner
+                    .graphs
+                    .get_key_value(name)
+                    .map(|(k, s)| (k.clone(), s.graph.clone(), s.epoch))
+                    .ok_or_else(|| anyhow!("unknown graph {name}"))?;
+                let prep_key = PrepKey { graph: key.clone(), epoch, precision, b, shards };
+                if let Some(pos) = inner.resident.iter().position(|(k, _)| *k == prep_key) {
+                    // hit: refresh LRU position
+                    let hit = inner.resident.remove(pos);
+                    let entry = hit.1.clone();
+                    inner.resident.push(hit);
+                    return Ok(entry);
+                }
+                (key, graph, epoch)
+            };
+            // miss: prepare outside the lock
+            let entry = Arc::new(prepare_entry(key.clone(), epoch, graph, b, shards));
+            let mut inner = self.inner.lock().unwrap();
+            let slot = inner.graphs.get(&key).ok_or_else(|| anyhow!("graph {name} removed"))?;
+            if slot.epoch != epoch {
+                continue; // reloaded while preparing: redo on the new snapshot
+            }
+            let prep_key =
+                PrepKey { graph: key.clone(), epoch, precision, b, shards };
+            if let Some(pos) = inner.resident.iter().position(|(k, _)| *k == prep_key) {
+                return Ok(inner.resident[pos].1.clone()); // lost the race
+            }
+            inner.resident.push((prep_key, entry.clone()));
+            while inner.resident.len() > self.capacity {
+                inner.resident.remove(0); // LRU eviction; in-flight Arcs survive
+            }
+            return Ok(entry);
+        }
+    }
+
+    /// Hot-swap `name` to a fresh snapshot re-read from its source.
+    /// Returns the new epoch. See [`Self::reload_with`] for the protocol.
+    pub fn reload(&self, name: &str) -> Result<u64> {
+        let source = {
+            let inner = self.inner.lock().unwrap();
+            inner
+                .graphs
+                .get(name)
+                .map(|s| s.source.clone())
+                .ok_or_else(|| anyhow!("unknown graph {name}"))?
+        };
+        self.reload_with(name, source)
+    }
+
+    /// Hot-swap `name` to a snapshot loaded from `source` (which replaces
+    /// the stored source for future reloads).
+    ///
+    /// Protocol (DESIGN.md §6): load the new snapshot, re-prepare it for
+    /// every configuration currently resident for this graph, then — in
+    /// one critical section — bump the epoch, swap the snapshot and
+    /// replace the resident entries. Workers pick up the new epoch on
+    /// their next batch; batches already running keep the old entry's
+    /// `Arc` until they finish, so no in-flight request is dropped.
+    pub fn reload_with(&self, name: &str, source: GraphSource) -> Result<u64> {
+        // phase 1: snapshot the old epoch and the resident configurations
+        let (key, old_epoch, configs) = {
+            let inner = self.inner.lock().unwrap();
+            let (key, slot) = inner
+                .graphs
+                .get_key_value(name)
+                .map(|(k, s)| (k.clone(), s))
+                .ok_or_else(|| anyhow!("unknown graph {name}"))?;
+            let epoch = slot.epoch;
+            let configs: Vec<_> = inner
+                .resident
+                .iter()
+                .filter(|(k, _)| k.graph == key)
+                .map(|(k, _)| (k.precision, k.b, k.shards))
+                .collect();
+            (key, epoch, configs)
+        };
+        // phase 2: load + re-prepare outside the lock (serving continues)
+        let graph = source.load().with_context(|| format!("reload graph {name}"))?;
+        let new_epoch = old_epoch + 1;
+        let prepared: Vec<_> = configs
+            .into_iter()
+            .map(|(precision, b, shards)| {
+                let entry =
+                    Arc::new(prepare_entry(key.clone(), new_epoch, graph.clone(), b, shards));
+                (precision, b, shards, entry)
+            })
+            .collect();
+        // phase 3: atomic swap
+        let mut inner = self.inner.lock().unwrap();
+        let slot = inner
+            .graphs
+            .get_mut(&key)
+            .ok_or_else(|| anyhow!("graph {name} removed during reload"))?;
+        if slot.epoch != old_epoch {
+            bail!("concurrent reload of graph {name}");
+        }
+        slot.epoch = new_epoch;
+        slot.graph = graph;
+        slot.source = source;
+        slot.reloads += 1;
+        inner.resident.retain(|(k, _)| k.graph != key || k.epoch >= new_epoch);
+        for (precision, b, shards, entry) in prepared {
+            let prep_key = PrepKey { graph: key.clone(), epoch: new_epoch, precision, b, shards };
+            inner.resident.push((prep_key, entry));
+        }
+        while inner.resident.len() > self.capacity {
+            inner.resident.remove(0);
+        }
+        Ok(new_epoch)
+    }
+}
+
+impl Default for GraphRegistry {
+    fn default() -> Self {
+        Self::new(DEFAULT_REGISTRY_CAPACITY)
+    }
+}
+
+fn prepare_entry(
+    name: Arc<str>,
+    epoch: u64,
+    graph: Arc<Graph>,
+    b: usize,
+    shards: usize,
+) -> GraphEntry {
+    let prepared = Arc::new(PreparedGraph::new_sharded(&graph, b, shards));
+    GraphEntry {
+        name,
+        epoch,
+        graph,
+        prepared,
+        csr: OnceLock::new(),
+        batches_served: AtomicU64::new(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Precision;
+
+    fn tiny(n: usize, seed: u64) -> Graph {
+        crate::graph::generators::watts_strogatz(n.max(16), 4, 0.2, seed)
+    }
+
+    #[test]
+    fn register_resolve_and_default() {
+        let reg = GraphRegistry::new(4);
+        assert!(reg.is_empty());
+        reg.register_graph("a", tiny(32, 1)).unwrap();
+        reg.register_graph("b", tiny(64, 2)).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.default_graph().unwrap().as_ref(), "a");
+        assert_eq!(reg.num_vertices("b"), Some(64));
+        assert_eq!(reg.epoch("a"), Some(0));
+        reg.set_default("b").unwrap();
+        assert_eq!(reg.default_graph().unwrap().as_ref(), "b");
+        assert!(reg.set_default("zzz").is_err());
+
+        let e = reg.resolve("a", Precision::Fixed(26), 8, 1).unwrap();
+        assert_eq!(e.name.as_ref(), "a");
+        assert_eq!(e.epoch, 0);
+        assert_eq!(e.num_vertices(), 32);
+        assert_eq!(e.prepared.num_vertices, 32);
+        assert_eq!(reg.resident(), 1);
+        // same key → same Arc
+        let e2 = reg.resolve("a", Precision::Fixed(26), 8, 1).unwrap();
+        assert!(Arc::ptr_eq(&e, &e2));
+        assert_eq!(reg.resident(), 1);
+        // different shards → different entry
+        let e3 = reg.resolve("a", Precision::Fixed(26), 8, 2).unwrap();
+        assert!(!Arc::ptr_eq(&e, &e3));
+        assert_eq!(e3.prepared.num_shards(), 2);
+        assert_eq!(reg.resident(), 2);
+        assert!(reg.resolve("nope", Precision::Fixed(26), 8, 1).is_err());
+    }
+
+    #[test]
+    fn route_returns_interned_key_and_size_in_one_lookup() {
+        let reg = GraphRegistry::new(2);
+        assert_eq!(reg.default_route(), None, "empty registry has no default route");
+        let key = reg.register_graph("a", tiny(32, 1)).unwrap();
+        let (k, nv) = reg.route("a").expect("registered graph routes");
+        assert!(Arc::ptr_eq(&k, &key), "route hands back the interned key");
+        assert_eq!(nv, 32);
+        assert_eq!(reg.route("ghost"), None);
+        let (dk, dnv) = reg.default_route().expect("first graph is the default");
+        assert!(Arc::ptr_eq(&dk, &key));
+        assert_eq!(dnv, 32);
+    }
+
+    #[test]
+    fn duplicate_and_empty_names_rejected() {
+        let reg = GraphRegistry::default();
+        reg.register_graph("a", tiny(16, 3)).unwrap();
+        assert!(reg.register_graph("a", tiny(16, 4)).is_err());
+        assert!(reg.register_graph("  ", tiny(16, 5)).is_err());
+    }
+
+    #[test]
+    fn lru_bounds_residency() {
+        let reg = GraphRegistry::new(2);
+        reg.register_graph("a", tiny(16, 1)).unwrap();
+        for shards in [1usize, 2, 3] {
+            reg.resolve("a", Precision::Fixed(20), 8, shards).unwrap();
+        }
+        assert_eq!(reg.resident(), 2, "capacity bounds resident entries");
+        // the oldest (shards=1) was evicted: resolving it again re-prepares
+        let again = reg.resolve("a", Precision::Fixed(20), 8, 1).unwrap();
+        assert_eq!(again.prepared.num_shards(), 1);
+        assert_eq!(reg.resident(), 2);
+    }
+
+    #[test]
+    fn reload_bumps_epoch_and_swaps_resident_entries() {
+        let reg = GraphRegistry::new(4);
+        reg.register_graph("a", tiny(32, 7)).unwrap();
+        let old = reg.resolve("a", Precision::Fixed(26), 8, 1).unwrap();
+        assert_eq!(old.epoch, 0);
+        old.record_batch_served();
+
+        let epoch = reg.reload_with("a", GraphSource::InMemory(Arc::new(tiny(48, 8)))).unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(reg.epoch("a"), Some(1));
+        assert_eq!(reg.reloads("a"), Some(1));
+        assert_eq!(reg.num_vertices("a"), Some(48));
+
+        // the resident entry was re-prepared at the new epoch already
+        assert_eq!(reg.resident(), 1);
+        let new = reg.resolve("a", Precision::Fixed(26), 8, 1).unwrap();
+        assert_eq!(new.epoch, 1);
+        assert_eq!(new.num_vertices(), 48);
+        assert!(!Arc::ptr_eq(&old, &new));
+        // the old entry stays usable for whoever still holds it
+        assert_eq!(old.batches_served(), 1);
+        assert_eq!(old.num_vertices(), 32);
+
+        // plain reload of an in-memory source is a same-data re-prepare
+        assert_eq!(reg.reload("a").unwrap(), 2);
+    }
+
+    #[test]
+    fn reload_unknown_graph_errors() {
+        let reg = GraphRegistry::default();
+        assert!(reg.reload("ghost").is_err());
+    }
+
+    #[test]
+    fn csr_is_lazily_shared() {
+        let reg = GraphRegistry::default();
+        reg.register_graph("a", tiny(24, 9)).unwrap();
+        let e = reg.resolve("a", Precision::Float32, 8, 1).unwrap();
+        let c1 = e.csr();
+        let c2 = e.csr();
+        assert!(Arc::ptr_eq(&c1, &c2));
+        assert_eq!(c1.num_vertices, 24);
+    }
+
+    #[test]
+    fn source_parse_forms() {
+        match GraphSource::parse("dataset:HK-100k").unwrap() {
+            GraphSource::Dataset { name, scale } => {
+                assert_eq!(name, "HK-100k");
+                assert_eq!(scale, 8);
+            }
+            other => panic!("{other:?}"),
+        }
+        match GraphSource::parse("dataset:ER-100k@200").unwrap() {
+            GraphSource::Dataset { name, scale } => {
+                assert_eq!(name, "ER-100k");
+                assert_eq!(scale, 200);
+            }
+            other => panic!("{other:?}"),
+        }
+        match GraphSource::parse("data/web.txt").unwrap() {
+            GraphSource::File(p) => assert_eq!(p, PathBuf::from("data/web.txt")),
+            other => panic!("{other:?}"),
+        }
+        assert!(GraphSource::parse("").is_err());
+        assert!(GraphSource::parse("dataset:").is_err());
+        assert!(GraphSource::parse("dataset:HK-100k@zero").is_err());
+    }
+
+    #[test]
+    fn dataset_source_loads_scaled() {
+        let src = GraphSource::parse("dataset:WS-100k@500").unwrap();
+        let g = src.load().unwrap();
+        assert_eq!(g.num_vertices, 100_000 / 500);
+        assert!(GraphSource::parse("dataset:BOGUS").unwrap().load().is_err());
+    }
+}

@@ -1,13 +1,32 @@
 //! Request/response types of the serving API.
 
 use crate::graph::VertexId;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// A single PPR query: "rank vertices for this personalization vertex".
+/// Name routed to when a request does not pick a graph — the implicit
+/// single graph of [`super::server::Server::start`]-style servers, and the
+/// back-compat default for registry-backed servers with no explicit
+/// default.
+pub const DEFAULT_GRAPH: &str = "default";
+
+/// The shared key for [`DEFAULT_GRAPH`]: one allocation per process, so
+/// building a request costs no heap traffic on the steady-state serving
+/// path.
+pub fn default_graph_key() -> Arc<str> {
+    static KEY: std::sync::OnceLock<Arc<str>> = std::sync::OnceLock::new();
+    KEY.get_or_init(|| Arc::from(DEFAULT_GRAPH)).clone()
+}
+
+/// A single PPR query: "rank vertices for this personalization vertex on
+/// this graph".
 #[derive(Debug, Clone)]
 pub struct PprRequest {
     /// Client-assigned id, echoed in the response.
     pub id: u64,
+    /// The graph this query runs on. Requests never batch across graphs
+    /// (one personalization space per batch — DESIGN.md §6).
+    pub graph: Arc<str>,
     /// Personalization vertex.
     pub vertex: VertexId,
     /// How many top-ranked vertices to return.
@@ -20,9 +39,23 @@ pub struct PprRequest {
 }
 
 impl PprRequest {
-    /// Build a request (enqueue time is stamped now, no deadline).
+    /// Build a request for the [`DEFAULT_GRAPH`] (enqueue time is stamped
+    /// now, no deadline).
     pub fn new(id: u64, vertex: VertexId, top_n: usize) -> Self {
-        Self { id, vertex, top_n, deadline: None, enqueued_at: Instant::now() }
+        Self {
+            id,
+            graph: default_graph_key(),
+            vertex,
+            top_n,
+            deadline: None,
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    /// Route the request to a named graph.
+    pub fn with_graph(mut self, graph: Arc<str>) -> Self {
+        self.graph = graph;
+        self
     }
 
     /// Attach a completion deadline.
@@ -51,6 +84,8 @@ pub struct RankedVertex {
 pub struct PprResponse {
     /// Echo of the request id.
     pub id: u64,
+    /// The graph the query ran on.
+    pub graph: Arc<str>,
     /// Echo of the personalization vertex.
     pub vertex: VertexId,
     /// Top-N vertices, descending score.
@@ -116,6 +151,20 @@ mod tests {
         let r = PprRequest::new(1, 2, 10);
         assert!(r.enqueued_at.elapsed() < Duration::from_secs(1));
         assert!(r.deadline.is_none());
+        assert_eq!(r.graph.as_ref(), DEFAULT_GRAPH, "unrouted requests take the default graph");
+        let r2 = PprRequest::new(2, 3, 10);
+        assert!(
+            Arc::ptr_eq(&r.graph, &r2.graph),
+            "the default key is one shared allocation, not one per request"
+        );
+    }
+
+    #[test]
+    fn request_routes_to_named_graph() {
+        let key: Arc<str> = Arc::from("eu-market");
+        let r = PprRequest::new(7, 3, 5).with_graph(key.clone());
+        assert_eq!(r.graph.as_ref(), "eu-market");
+        assert!(Arc::ptr_eq(&r.graph, &key), "interned key is shared, not copied");
     }
 
     #[test]

@@ -1,25 +1,41 @@
-//! The serving front-end: a ticketed submission API feeding the dynamic
-//! batcher, worker threads driving accelerator engines, per-request
-//! response channels, and graceful shutdown.
+//! The serving front-end: a ticketed submission API feeding the
+//! graph-keyed dynamic batcher, worker threads driving accelerator
+//! engines, per-request response channels, and graceful shutdown.
 //!
 //! Topology mirrors the paper's host-accelerator model (§4.2): the host
-//! batches incoming queries; each worker owns one engine (one "board")
-//! and executes variable-lane batches — timeout-flushed partial batches
-//! run as-is, costing only the lanes they carry. Each worker reuses one
-//! [`ScoreBlock`] across batches, so the steady-state serving path
-//! allocates no score buffers.
+//! batches incoming queries; each worker owns one "board" and executes
+//! variable-lane batches — timeout-flushed partial batches run as-is,
+//! costing only the lanes they carry.
 //!
-//! [`Server::submit`] never blocks: it returns a [`Ticket`] immediately,
-//! and the caller chooses blocking [`Ticket::wait`] or non-blocking
-//! [`Ticket::poll`]. Tickets may carry a per-request deadline; requests
-//! that expire in the queue are failed fast without burning a lane.
+//! Two routing modes share the same front-end (DESIGN.md §6):
+//!
+//! - **single-graph** ([`Server::start`]): each worker owns one engine
+//!   forever — the classic one-dataset deployment;
+//! - **registry-backed** ([`Server::start_registry`], usually via
+//!   [`super::builder::EngineBuilder::serve_registry`]): workers resolve
+//!   each batch's graph against a [`GraphRegistry`] and swap engine state
+//!   per batch, keeping a small per-worker engine cache keyed by
+//!   `(graph, epoch)` so steady-state serving builds nothing — a
+//!   hot-swapped [`GraphRegistry::reload`] shows up as an epoch bump and
+//!   the worker rebinds between batches without dropping anything.
+//!
+//! Each worker reuses one [`ScoreBlock`] across batches (graphs of
+//! different |V| reshape it in place), so the steady-state serving path
+//! allocates no score buffers. [`Server::submit`] never blocks: it
+//! returns a [`Ticket`] immediately, and the caller chooses blocking
+//! [`Ticket::wait`] or non-blocking [`Ticket::poll`]. Tickets may carry a
+//! per-request deadline; requests that expire in the queue are failed
+//! fast without burning a lane.
 
-use super::batcher::DynamicBatcher;
+use super::batcher::{DynamicBatcher, GraphBatch};
+use super::builder::EngineBuilder;
 use super::engine::PprEngine;
-use super::request::{PprRequest, PprResponse};
+use super::registry::{GraphEntry, GraphRegistry};
+use super::request::{default_graph_key, PprRequest, PprResponse};
 use super::score_block::ScoreBlock;
-use super::stats::ServerStats;
+use super::stats::{ServerStats, StatsSnapshot};
 use crate::graph::VertexId;
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -50,6 +66,8 @@ impl ServerConfig {
 }
 
 type ResponseSender = mpsc::Sender<Result<PprResponse, String>>;
+type PendingMap = Mutex<HashMap<u64, ResponseSender>>;
+type PerGraphStats = Mutex<HashMap<Arc<str>, Arc<ServerStats>>>;
 
 /// Handle to one in-flight request, returned by [`Server::submit`].
 ///
@@ -58,6 +76,7 @@ type ResponseSender = mpsc::Sender<Result<PprResponse, String>>;
 #[derive(Debug)]
 pub struct Ticket {
     id: u64,
+    graph: Arc<str>,
     vertex: VertexId,
     deadline: Option<Instant>,
     rx: mpsc::Receiver<Result<PprResponse, String>>,
@@ -67,6 +86,11 @@ impl Ticket {
     /// Server-assigned request id.
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// The graph this ticket's query runs on.
+    pub fn graph(&self) -> &str {
+        &self.graph
     }
 
     /// The personalization vertex this ticket tracks.
@@ -111,20 +135,76 @@ impl Ticket {
     }
 }
 
+/// How submissions are routed to engines.
+enum Routing {
+    /// One implicit graph; every worker owns one pre-built engine.
+    Single { graph: Arc<str>, num_vertices: usize },
+    /// Requests name a registry graph; workers resolve entries per batch.
+    /// The default route is read from the registry per submission, so
+    /// `set_default` (and graphs registered after startup) take effect
+    /// live.
+    Registry { registry: Arc<GraphRegistry> },
+}
+
 /// A running PPR serving instance.
 pub struct Server {
     batcher: Arc<DynamicBatcher>,
-    pending: Arc<Mutex<std::collections::HashMap<u64, ResponseSender>>>,
+    pending: Arc<PendingMap>,
     stats: Arc<ServerStats>,
+    per_graph: Arc<PerGraphStats>,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
-    num_vertices: usize,
+    routing: Routing,
     default_top_n: usize,
 }
 
+/// Per-worker cache of built engines, keyed by `(graph, epoch)`. A
+/// reload bumps the epoch, so the stale engine is dropped and rebuilt
+/// from the new entry on the next batch of that graph; steady-state
+/// batches reuse the cached engine (zero construction on the hot path).
+struct EngineCache {
+    builder: EngineBuilder,
+    registry: Arc<GraphRegistry>,
+    /// Shards per prepared graph (the builder divides the configured
+    /// shard count among the pool's workers).
+    shards: usize,
+    /// LRU order: back = most recently used.
+    engines: Vec<CachedEngine>,
+    capacity: usize,
+}
+
+/// One cached engine: `(graph, epoch, engine)`.
+type CachedEngine = (Arc<str>, u64, Box<dyn PprEngine + Send>);
+
+impl EngineCache {
+    /// Resolve the engine + registry entry for `graph`; returns the index
+    /// into `self.engines` (valid until the next call).
+    fn resolve(&mut self, graph: &Arc<str>) -> anyhow::Result<(usize, Arc<GraphEntry>)> {
+        let cfg = self.builder.run_config();
+        let entry = self.registry.resolve(graph, cfg.precision, cfg.b, self.shards)?;
+        if let Some(pos) = self
+            .engines
+            .iter()
+            .position(|(g, epoch, _)| g == graph && *epoch == entry.epoch)
+        {
+            let hit = self.engines.remove(pos);
+            self.engines.push(hit);
+        } else {
+            // drop stale epochs of this graph, then build against the entry
+            self.engines.retain(|(g, _, _)| g != graph);
+            let engine = self.builder.build_entry(&entry)?;
+            self.engines.push((graph.clone(), entry.epoch, engine));
+            while self.engines.len() > self.capacity {
+                self.engines.remove(0);
+            }
+        }
+        Ok((self.engines.len() - 1, entry))
+    }
+}
+
 impl Server {
-    /// Start a server over one engine per worker. All engines must share
-    /// κ and vertex count. (Engine pools come from
+    /// Start a single-graph server over one engine per worker. All
+    /// engines must share κ and vertex count. (Engine pools come from
     /// [`super::builder::EngineBuilder::build_pool`].)
     pub fn start(engines: Vec<Box<dyn PprEngine + Send>>, cfg: ServerConfig) -> Self {
         assert!(!engines.is_empty(), "need at least one engine");
@@ -134,10 +214,11 @@ impl Server {
             .iter()
             .all(|e| e.max_kappa() == kappa && e.num_vertices() == num_vertices));
 
+        let graph = default_graph_key();
         let batcher = Arc::new(DynamicBatcher::new(kappa, cfg.batch_timeout));
-        let pending: Arc<Mutex<std::collections::HashMap<u64, ResponseSender>>> =
-            Arc::new(Mutex::new(std::collections::HashMap::new()));
+        let pending: Arc<PendingMap> = Arc::new(Mutex::new(HashMap::new()));
         let stats = Arc::new(ServerStats::new());
+        let per_graph: Arc<PerGraphStats> = Arc::new(Mutex::new(HashMap::new()));
 
         let workers = engines
             .into_iter()
@@ -146,6 +227,7 @@ impl Server {
                 let batcher = batcher.clone();
                 let pending = pending.clone();
                 let stats = stats.clone();
+                let per_graph = per_graph.clone();
                 std::thread::Builder::new()
                     .name(format!("ppr-worker-{widx}"))
                     .spawn(move || {
@@ -153,7 +235,14 @@ impl Server {
                         // steady-state allocation on the serving path
                         let mut block = ScoreBlock::with_capacity(kappa, num_vertices);
                         while let Some(batch) = batcher.next_batch() {
-                            Self::serve_batch(&mut *engine, &mut block, batch, &pending, &stats);
+                            let gstats = Self::stats_for(&per_graph, &batch.graph);
+                            Self::serve_batch(
+                                &mut *engine,
+                                &mut block,
+                                batch.requests,
+                                &pending,
+                                &[stats.as_ref(), gstats.as_ref()],
+                            );
                         }
                     })
                     .expect("spawn worker")
@@ -164,57 +253,185 @@ impl Server {
             batcher,
             pending,
             stats,
+            per_graph,
             workers,
             next_id: std::sync::atomic::AtomicU64::new(1),
-            num_vertices,
+            routing: Routing::Single { graph, num_vertices },
             default_top_n: cfg.default_top_n,
         }
     }
 
-    fn respond(
-        pending: &Mutex<std::collections::HashMap<u64, ResponseSender>>,
-        id: u64,
-        resp: Result<PprResponse, String>,
-    ) {
+    /// Start a registry-backed multi-graph server: `workers` threads,
+    /// each resolving batches against `registry` with `builder`-built
+    /// engines. Prefer [`super::builder::EngineBuilder::serve_registry`].
+    pub fn start_registry(
+        registry: Arc<GraphRegistry>,
+        builder: EngineBuilder,
+        workers: usize,
+        cfg: ServerConfig,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(workers >= 1, "need at least one worker");
+        builder.run_config().validate()?;
+        let kappa = builder.run_config().kappa;
+        let shards = builder.prep_shards(workers);
+
+        let batcher = Arc::new(DynamicBatcher::new(kappa, cfg.batch_timeout));
+        let pending: Arc<PendingMap> = Arc::new(Mutex::new(HashMap::new()));
+        let stats = Arc::new(ServerStats::new());
+        let per_graph: Arc<PerGraphStats> = Arc::new(Mutex::new(HashMap::new()));
+
+        let handles = (0..workers)
+            .map(|widx| {
+                let batcher = batcher.clone();
+                let pending = pending.clone();
+                let stats = stats.clone();
+                let per_graph = per_graph.clone();
+                let mut cache = EngineCache {
+                    builder: builder.clone(),
+                    registry: registry.clone(),
+                    shards,
+                    engines: Vec::new(),
+                    capacity: registry.capacity().max(1),
+                };
+                std::thread::Builder::new()
+                    .name(format!("ppr-worker-{widx}"))
+                    .spawn(move || {
+                        let mut block = ScoreBlock::new();
+                        while let Some(batch) = batcher.next_batch() {
+                            let gstats = Self::stats_for(&per_graph, &batch.graph);
+                            Self::serve_registry_batch(
+                                &mut cache,
+                                &mut block,
+                                batch,
+                                &pending,
+                                &stats,
+                                &gstats,
+                            );
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+
+        Ok(Self {
+            batcher,
+            pending,
+            stats,
+            per_graph,
+            workers: handles,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+            routing: Routing::Registry { registry },
+            default_top_n: cfg.default_top_n,
+        })
+    }
+
+    fn stats_for(per_graph: &PerGraphStats, graph: &Arc<str>) -> Arc<ServerStats> {
+        per_graph
+            .lock()
+            .unwrap()
+            .entry(graph.clone())
+            .or_insert_with(|| Arc::new(ServerStats::new()))
+            .clone()
+    }
+
+    fn respond(pending: &PendingMap, id: u64, resp: Result<PprResponse, String>) {
         if let Some(tx) = pending.lock().unwrap().remove(&id) {
             let _ = tx.send(resp);
         }
     }
 
+    /// Resolve the batch's engine and run it; a resolution failure fails
+    /// the whole batch (the graph vanished mid-flight or its engine could
+    /// not be built), never silently drops it.
+    fn serve_registry_batch(
+        cache: &mut EngineCache,
+        block: &mut ScoreBlock,
+        batch: GraphBatch,
+        pending: &PendingMap,
+        stats: &ServerStats,
+        gstats: &ServerStats,
+    ) {
+        match cache.resolve(&batch.graph) {
+            Ok((idx, entry)) => {
+                let engine = &mut *cache.engines[idx].2;
+                let served =
+                    Self::serve_batch(engine, block, batch.requests, pending, &[stats, gstats]);
+                if served {
+                    entry.record_batch_served();
+                }
+            }
+            Err(e) => {
+                for req in &batch.requests {
+                    stats.record_error();
+                    gstats.record_error();
+                    Self::respond(
+                        pending,
+                        req.id,
+                        Err(format!("graph {} unavailable: {e:#}", batch.graph)),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Run one single-graph batch; returns whether the engine executed
+    /// (false when every request expired or was out of range).
     fn serve_batch(
         engine: &mut dyn PprEngine,
         block: &mut ScoreBlock,
         batch: Vec<PprRequest>,
-        pending: &Mutex<std::collections::HashMap<u64, ResponseSender>>,
-        stats: &ServerStats,
-    ) {
+        pending: &PendingMap,
+        stats: &[&ServerStats],
+    ) -> bool {
         let batch_start = Instant::now();
-        // fail expired requests fast instead of burning a lane on them
+        let num_vertices = engine.num_vertices();
+        // fail expired requests fast instead of burning a lane on them;
+        // re-check vertex range against the engine actually bound (a
+        // hot-swap may have shrunk the graph since submission)
         let mut live = Vec::with_capacity(batch.len());
         for req in batch {
             if req.expired(batch_start) {
-                stats.record_deadline_miss();
+                for s in stats {
+                    s.record_deadline_miss();
+                }
                 Self::respond(pending, req.id, Err("deadline exceeded in queue".to_string()));
+            } else if req.vertex as usize >= num_vertices {
+                for s in stats {
+                    s.record_error();
+                }
+                Self::respond(
+                    pending,
+                    req.id,
+                    Err(format!(
+                        "vertex {} out of range (|V|={num_vertices} after reload)",
+                        req.vertex
+                    )),
+                );
             } else {
                 live.push(req);
             }
         }
         if live.is_empty() {
-            return;
+            return false;
         }
 
         // variable-lane batch: exactly the requests in hand, no padding
         let lanes: Vec<VertexId> = live.iter().map(|r| r.vertex).collect();
-        stats.record_batch(live.len());
+        for s in stats {
+            s.record_batch(live.len());
+        }
         match engine.run_batch(&lanes, block) {
             Ok(()) => {
                 for (lane, req) in live.iter().enumerate() {
                     let ranking = block.top_n(lane, req.top_n);
                     let queue_time = batch_start.duration_since(req.enqueued_at);
                     let total_time = req.enqueued_at.elapsed();
-                    stats.record_request(queue_time, total_time);
+                    for s in stats {
+                        s.record_request(queue_time, total_time);
+                    }
                     let resp = PprResponse {
                         id: req.id,
+                        graph: req.graph.clone(),
                         vertex: req.vertex,
                         ranking,
                         iterations: block.iterations(),
@@ -223,65 +440,184 @@ impl Server {
                     };
                     Self::respond(pending, req.id, Ok(resp));
                 }
+                true
             }
             Err(e) => {
                 for req in &live {
-                    stats.record_error();
+                    for s in stats {
+                        s.record_error();
+                    }
                     Self::respond(pending, req.id, Err(format!("engine error: {e:#}")));
                 }
+                false
             }
         }
     }
 
-    /// Submit a query; returns immediately with a [`Ticket`].
+    /// Submit a query against the default graph; returns immediately with
+    /// a [`Ticket`].
     pub fn submit(&self, vertex: VertexId, top_n: usize) -> Ticket {
         self.submit_with(vertex, top_n, None)
     }
 
-    /// Submit with an optional completion deadline (relative to now). The
-    /// deadline bounds both queue time and [`Ticket::wait`]; `top_n == 0`
-    /// falls back to the server's configured default.
+    /// Submit against the default graph with an optional completion
+    /// deadline (relative to now). The deadline bounds both queue time
+    /// and [`Ticket::wait`]; `top_n == 0` falls back to the server's
+    /// configured default.
     pub fn submit_with(
         &self,
         vertex: VertexId,
         top_n: usize,
         timeout: Option<Duration>,
     ) -> Ticket {
+        match &self.routing {
+            Routing::Single { graph, num_vertices } => {
+                let (graph, nv) = (graph.clone(), *num_vertices);
+                self.submit_routed(graph, nv, vertex, top_n, timeout)
+            }
+            // read the default live: set_default / late registration apply
+            Routing::Registry { registry } => match registry.default_route() {
+                Some((graph, nv)) => self.submit_routed(graph, nv, vertex, top_n, timeout),
+                None => self.reject(
+                    default_graph_key(),
+                    vertex,
+                    timeout,
+                    "no default graph registered".to_string(),
+                ),
+            },
+        }
+    }
+
+    /// Submit a query against a named graph (registry-backed servers; a
+    /// single-graph server accepts only its own implicit graph name).
+    pub fn submit_to(
+        &self,
+        graph: &str,
+        vertex: VertexId,
+        top_n: usize,
+        timeout: Option<Duration>,
+    ) -> Ticket {
+        match &self.routing {
+            Routing::Single { graph: own, num_vertices } => {
+                if own.as_ref() == graph {
+                    let (own, nv) = (own.clone(), *num_vertices);
+                    self.submit_routed(own, nv, vertex, top_n, timeout)
+                } else {
+                    self.reject(
+                        Arc::from(graph),
+                        vertex,
+                        timeout,
+                        format!("unknown graph {graph} (single-graph server)"),
+                    )
+                }
+            }
+            Routing::Registry { registry } => match registry.route(graph) {
+                Some((key, nv)) => self.submit_routed(key, nv, vertex, top_n, timeout),
+                None => self.reject(
+                    Arc::from(graph),
+                    vertex,
+                    timeout,
+                    format!("unknown graph {graph}"),
+                ),
+            },
+        }
+    }
+
+    /// A ticket that fails immediately with `error` (no engine roundtrip).
+    fn reject(
+        &self,
+        graph: Arc<str>,
+        vertex: VertexId,
+        timeout: Option<Duration>,
+        error: String,
+    ) -> Ticket {
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let (tx, rx) = mpsc::channel();
+        let _ = tx.send(Err(error));
+        Ticket { id, graph, vertex, deadline, rx }
+    }
+
+    /// Enqueue a validated route: `graph` is the interned key and
+    /// `num_vertices` its current |V| (both come from the same registry
+    /// lookup, one lock acquisition per submission).
+    fn submit_routed(
+        &self,
+        graph: Arc<str>,
+        num_vertices: usize,
+        vertex: VertexId,
+        top_n: usize,
+        timeout: Option<Duration>,
+    ) -> Ticket {
+        if vertex as usize >= num_vertices {
+            return self.reject(
+                graph,
+                vertex,
+                timeout,
+                format!("vertex {vertex} out of range (|V|={num_vertices})"),
+            );
+        }
+
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let deadline = timeout.map(|t| Instant::now() + t);
         let top_n = if top_n == 0 { self.default_top_n } else { top_n };
         let (tx, rx) = mpsc::channel();
-        let ticket = Ticket { id, vertex, deadline, rx };
-
-        if vertex as usize >= self.num_vertices {
-            let _ = tx.send(Err(format!(
-                "vertex {vertex} out of range (|V|={})",
-                self.num_vertices
-            )));
-            return ticket;
-        }
+        let ticket = Ticket { id, graph: graph.clone(), vertex, deadline, rx };
 
         self.pending.lock().unwrap().insert(id, tx);
-        let req = PprRequest::new(id, vertex, top_n).with_deadline(deadline);
+        let req =
+            PprRequest::new(id, vertex, top_n).with_graph(graph).with_deadline(deadline);
         if !self.batcher.submit(req) {
             Self::respond(&self.pending, id, Err("server shutting down".to_string()));
         }
         ticket
     }
 
-    /// Submit and block for the response.
+    /// Submit against the default graph and block for the response.
     pub fn query(&self, vertex: VertexId, top_n: usize) -> Result<PprResponse, String> {
         self.submit(vertex, top_n).wait()
     }
 
-    /// Current statistics.
+    /// Submit against a named graph and block for the response.
+    pub fn query_graph(
+        &self,
+        graph: &str,
+        vertex: VertexId,
+        top_n: usize,
+    ) -> Result<PprResponse, String> {
+        self.submit_to(graph, vertex, top_n, None).wait()
+    }
+
+    /// Aggregate statistics across all graphs.
     pub fn stats(&self) -> &ServerStats {
         &self.stats
     }
 
-    /// |V| served.
+    /// Statistics of one graph (`None` until a worker has picked up its
+    /// first batch — the ledger is created on the worker side, keeping
+    /// the submit path free of per-request map traffic).
+    pub fn graph_stats(&self, graph: &str) -> Option<StatsSnapshot> {
+        let map = self.per_graph.lock().unwrap();
+        map.get(graph).map(|s| s.snapshot())
+    }
+
+    /// Graphs that have seen traffic, sorted by name.
+    pub fn graph_names(&self) -> Vec<Arc<str>> {
+        let map = self.per_graph.lock().unwrap();
+        let mut names: Vec<Arc<str>> = map.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// |V| served: the single graph's, or the registry default's (0 when
+    /// the registry has no default).
     pub fn num_vertices(&self) -> usize {
-        self.num_vertices
+        match &self.routing {
+            Routing::Single { num_vertices, .. } => *num_vertices,
+            Routing::Registry { registry } => {
+                registry.default_route().map_or(0, |(_, nv)| nv)
+            }
+        }
     }
 
     /// Stop accepting requests, drain, and join workers.
@@ -307,18 +643,41 @@ mod tests {
     use super::*;
     use crate::config::RunConfig;
     use crate::coordinator::builder::EngineBuilder;
+    use crate::coordinator::request::DEFAULT_GRAPH;
     use crate::fixed::Precision;
 
-    fn start_server(workers: usize, kappa: usize) -> Server {
-        let g = crate::graph::generators::watts_strogatz(256, 8, 0.2, 42);
-        let cfg = RunConfig {
+    fn test_config(kappa: usize) -> RunConfig {
+        RunConfig {
             precision: Precision::Fixed(26),
             kappa,
             iterations: 30,
             batch_timeout_ms: 2,
+            num_shards: 1,
             ..Default::default()
-        };
-        EngineBuilder::native().config(cfg).serve(&g, workers).expect("server starts")
+        }
+    }
+
+    fn start_server(workers: usize, kappa: usize) -> Server {
+        let g = crate::graph::generators::watts_strogatz(256, 8, 0.2, 42);
+        EngineBuilder::native()
+            .config(test_config(kappa))
+            .serve(&g, workers)
+            .expect("server starts")
+    }
+
+    fn start_registry_server(workers: usize, kappa: usize) -> (Server, Arc<GraphRegistry>) {
+        let registry = Arc::new(GraphRegistry::new(4));
+        registry
+            .register_graph("ws", crate::graph::generators::watts_strogatz(256, 8, 0.2, 42))
+            .unwrap();
+        registry
+            .register_graph("er", crate::graph::generators::erdos_renyi(128, 0.06, 7))
+            .unwrap();
+        let server = EngineBuilder::native()
+            .config(test_config(kappa))
+            .serve_registry(registry.clone(), workers)
+            .expect("registry server starts");
+        (server, registry)
     }
 
     #[test]
@@ -328,6 +687,7 @@ mod tests {
         assert_eq!(resp.vertex, 7);
         assert_eq!(resp.ranking.len(), 5);
         assert_eq!(resp.ranking[0].vertex, 7, "personalization vertex ranks first");
+        assert_eq!(resp.graph.as_ref(), DEFAULT_GRAPH);
         server.shutdown();
     }
 
@@ -356,6 +716,7 @@ mod tests {
         let ticket = server.submit(3, 4);
         assert_eq!(ticket.vertex(), 3);
         assert!(ticket.id() > 0);
+        assert_eq!(ticket.graph(), DEFAULT_GRAPH);
         let deadline = Instant::now() + Duration::from_secs(10);
         loop {
             if let Some(resp) = ticket.poll() {
@@ -397,6 +758,9 @@ mod tests {
         assert_eq!(resp.vertex, 1);
         let snap = server.stats().snapshot();
         assert_eq!(snap.deadline_misses, 1);
+        // the per-graph ledger carries the same miss
+        let gsnap = server.graph_stats(DEFAULT_GRAPH).unwrap();
+        assert_eq!(gsnap.deadline_misses, 1);
         server.shutdown();
     }
 
@@ -406,5 +770,95 @@ mod tests {
         let batcher = server.batcher.clone();
         server.shutdown();
         assert!(!batcher.submit(PprRequest::new(999, 0, 1)));
+    }
+
+    #[test]
+    fn single_graph_server_rejects_other_graph_names() {
+        let server = start_server(1, 2);
+        let err = server.query_graph("mystery", 3, 2).unwrap_err();
+        assert!(err.contains("unknown graph"), "{err}");
+        // the implicit name still routes
+        let resp = server.query_graph(DEFAULT_GRAPH, 3, 2).unwrap();
+        assert_eq!(resp.vertex, 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn registry_server_routes_by_graph() {
+        let (server, _registry) = start_registry_server(2, 4);
+        let a = server.query_graph("ws", 7, 3).unwrap();
+        assert_eq!(a.graph.as_ref(), "ws");
+        assert_eq!(a.ranking[0].vertex, 7);
+        let b = server.query_graph("er", 100, 3).unwrap();
+        assert_eq!(b.graph.as_ref(), "er");
+        // default routing goes to the first registered graph
+        let c = server.query(200, 3).unwrap();
+        assert_eq!(c.graph.as_ref(), "ws");
+        // unknown graphs and out-of-range vertices fail without a lane
+        assert!(server.query_graph("nope", 1, 1).unwrap_err().contains("unknown graph"));
+        let err = server.query_graph("er", 5_000, 1).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+
+        let names = server.graph_names();
+        let names: Vec<&str> = names.iter().map(|n| n.as_ref()).collect();
+        assert_eq!(names, vec!["er", "ws"]);
+        let ws = server.graph_stats("ws").unwrap();
+        let er = server.graph_stats("er").unwrap();
+        assert_eq!(ws.requests, 2);
+        assert_eq!(er.requests, 1);
+        assert_eq!(server.stats().snapshot().requests, 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn registry_server_survives_hot_swap_reload() {
+        let (server, registry) = start_registry_server(1, 4);
+        for i in 0..8 {
+            assert!(server.query_graph("ws", i, 2).is_ok());
+        }
+        let before = registry.resolve("ws", Precision::Fixed(26), 8, 1).unwrap();
+        assert!(before.batches_served() > 0, "old epoch carried traffic");
+
+        // swap in a *different* snapshot under the same name
+        registry
+            .reload_with(
+                "ws",
+                super::super::registry::GraphSource::InMemory(Arc::new(
+                    crate::graph::generators::watts_strogatz(300, 6, 0.1, 9),
+                )),
+            )
+            .unwrap();
+        assert_eq!(registry.num_vertices("ws"), Some(300));
+        // vertex 280 only exists in the new snapshot
+        let resp = server.query_graph("ws", 280, 2).unwrap();
+        assert_eq!(resp.ranking[0].vertex, 280);
+        let after = registry.resolve("ws", Precision::Fixed(26), 8, 1).unwrap();
+        assert_eq!(after.epoch, before.epoch + 1);
+        assert!(after.batches_served() > 0, "new epoch serves");
+        assert_eq!(server.stats().snapshot().errors, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn registry_server_num_vertices_tracks_default() {
+        let (server, _registry) = start_registry_server(1, 2);
+        assert_eq!(server.num_vertices(), 256, "default graph is ws (|V|=256)");
+        server.shutdown();
+    }
+
+    #[test]
+    fn registry_default_route_is_read_live() {
+        let (server, registry) = start_registry_server(1, 4);
+        assert_eq!(server.query(3, 2).unwrap().graph.as_ref(), "ws");
+        // switching the default mid-flight redirects subsequent submits
+        registry.set_default("er").unwrap();
+        assert_eq!(server.query(3, 2).unwrap().graph.as_ref(), "er");
+        assert_eq!(server.num_vertices(), 128, "|V| follows the live default");
+        // a graph registered after startup is servable immediately
+        registry
+            .register_graph("late", crate::graph::generators::watts_strogatz(64, 4, 0.2, 3))
+            .unwrap();
+        assert_eq!(server.query_graph("late", 9, 2).unwrap().ranking[0].vertex, 9);
+        server.shutdown();
     }
 }

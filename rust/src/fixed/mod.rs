@@ -75,17 +75,20 @@ impl Precision {
         }
     }
 
-    /// Parse from a label ("20b"/"q1.19"/"f32"/"float").
+    /// Parse from a label ("20b"/"q1.19"/"f32"/"float"). Both spellings
+    /// accept only total widths in `2..=32` (one integer bit plus 1..=31
+    /// fractional bits — the widest format the u64-word datapath models).
     pub fn parse(s: &str) -> Option<Precision> {
         let t = s.trim().to_ascii_lowercase();
         match t.as_str() {
             "f32" | "float" | "float32" => Some(Precision::Float32),
             _ => {
                 let digits = t.strip_suffix('b').unwrap_or(&t);
-                if let Some(frac) = digits.strip_prefix("q1.") {
-                    return frac.parse::<u32>().ok().map(|f| Precision::Fixed(f + 1));
-                }
-                digits.parse::<u32>().ok().filter(|w| (2..=32).contains(w)).map(Precision::Fixed)
+                let width = match digits.strip_prefix("q1.") {
+                    Some(frac) => frac.parse::<u32>().ok().and_then(|f| f.checked_add(1)),
+                    None => digits.parse::<u32>().ok(),
+                };
+                width.filter(|w| (2..=32).contains(w)).map(Precision::Fixed)
             }
         }
     }
@@ -117,6 +120,19 @@ mod tests {
         assert_eq!(Precision::parse("F32"), Some(Precision::Float32));
         assert_eq!(Precision::parse("bogus"), None);
         assert_eq!(Precision::parse("99"), None);
+    }
+
+    #[test]
+    fn parse_q_labels_bounds_checked() {
+        // regression: the q1.N branch skipped the width bounds check, so
+        // "q1.99" parsed to an invalid 100-bit format
+        assert_eq!(Precision::parse("q1.99"), None);
+        assert_eq!(Precision::parse("q1.32"), None, "33 bits exceeds the datapath");
+        assert_eq!(Precision::parse("q1.31"), Some(Precision::Fixed(32)), "widest format");
+        assert_eq!(Precision::parse("q1.1"), Some(Precision::Fixed(2)), "narrowest format");
+        assert_eq!(Precision::parse("q1.0"), None, "zero fractional bits rejected");
+        assert_eq!(Precision::parse("q1.4294967295"), None, "u32::MAX + 1 must not wrap");
+        assert_eq!(Precision::parse("q1.x"), None);
     }
 
     #[test]

@@ -10,21 +10,50 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
+/// Parse the `|V|=N |E|=M` size hint from a metadata comment (the header
+/// [`write_edge_list`] emits). Either count may appear alone.
+pub fn parse_size_hint(comment: &str) -> (Option<usize>, Option<usize>) {
+    let grab = |tag: &str| -> Option<usize> {
+        let rest = &comment[comment.find(tag)? + tag.len()..];
+        let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+        digits.parse().ok()
+    };
+    (grab("|V|="), grab("|E|="))
+}
+
 /// Read a SNAP-style edge list. Vertex ids are remapped to a dense
-/// `0..|V|` range (SNAP files use sparse original ids).
+/// `0..|V|` range (SNAP files use sparse original ids). A metadata
+/// comment carrying `|V|=N |E|=M` (as written by [`write_edge_list`])
+/// pre-sizes the remap table and edge vector, so re-reading our own
+/// output never rehashes or regrows mid-load.
 pub fn read_edge_list(path: &Path) -> Result<Graph> {
     let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let reader = BufReader::new(f);
     let mut remap: HashMap<u64, VertexId> = HashMap::new();
     let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut sized = false;
     let intern = |raw: u64, remap: &mut HashMap<u64, VertexId>| -> VertexId {
         let next = remap.len() as VertexId;
         *remap.entry(raw).or_insert(next)
     };
     for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
+        let line = line.with_context(|| format!("line {}: read error", lineno + 1))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            // a size hint in the preamble pre-sizes both containers; the
+            // hint is untrusted input, so clamp it — an absurd count must
+            // not turn into an allocation-failure abort
+            if !sized && edges.is_empty() {
+                const MAX_HINT: usize = 1 << 20;
+                let (v, e) = parse_size_hint(t);
+                if let Some(v) = v {
+                    remap.reserve(v.min(MAX_HINT));
+                }
+                if let Some(e) = e {
+                    edges.reserve(e.min(MAX_HINT));
+                }
+                sized = v.is_some() || e.is_some();
+            }
             continue;
         }
         let mut it = t.split_whitespace();
@@ -32,10 +61,21 @@ pub fn read_edge_list(path: &Path) -> Result<Graph> {
             (Some(a), Some(b)) => (a, b),
             _ => bail!("line {}: expected `src dst`", lineno + 1),
         };
-        let a: u64 = a.parse().with_context(|| format!("line {}: bad src", lineno + 1))?;
-        let b: u64 = b.parse().with_context(|| format!("line {}: bad dst", lineno + 1))?;
+        let a: u64 = a
+            .parse()
+            .with_context(|| format!("line {}: bad src id {a:?} (integer overflow?)", lineno + 1))?;
+        let b: u64 = b
+            .parse()
+            .with_context(|| format!("line {}: bad dst id {b:?} (integer overflow?)", lineno + 1))?;
         let s = intern(a, &mut remap);
         let d = intern(b, &mut remap);
+        if remap.len() > VertexId::MAX as usize {
+            bail!(
+                "line {}: more than {} distinct vertex ids (VertexId overflow)",
+                lineno + 1,
+                VertexId::MAX
+            );
+        }
         edges.push((s, d));
     }
     if edges.is_empty() {
@@ -83,6 +123,69 @@ mod tests {
         assert_eq!(g.num_vertices, 3);
         assert_eq!(g.num_edges(), 3);
         assert_eq!(g.edges[0], (0, 1)); // 1000 -> 0, 2000 -> 1
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn size_hint_parses_writer_header() {
+        assert_eq!(
+            parse_size_hint("# ppr-spmv edge list: |V|=1234 |E|=56789"),
+            (Some(1234), Some(56789))
+        );
+        assert_eq!(parse_size_hint("# |E|=7"), (None, Some(7)));
+        assert_eq!(parse_size_hint("# SNAP header"), (None, None));
+        assert_eq!(parse_size_hint("# |V|=x"), (None, None));
+    }
+
+    #[test]
+    fn absurd_size_hint_does_not_allocate() {
+        // the hint is clamped: a hostile header must not abort the process
+        let dir = std::env::temp_dir().join("ppr_spmv_loader_hint_clamp");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("huge_hint.txt");
+        std::fs::write(&path, "# |V|=1000000000000000 |E|=999999999999999\n0 1\n").unwrap();
+        let g = read_edge_list(&path).unwrap();
+        assert_eq!(g.num_vertices, 2);
+        assert_eq!(g.num_edges(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sparse_ids_round_trip_through_writer() {
+        // sparse SNAP-style originals: remapped on read, then the written
+        // form re-reads to the identical graph
+        let dir = std::env::temp_dir().join("ppr_spmv_loader_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sparse.txt");
+        std::fs::write(
+            &path,
+            "# SNAP header\n900000000 42\n42 900000000\n900000000 7\n7 123456\n",
+        )
+        .unwrap();
+        let g = read_edge_list(&path).unwrap();
+        assert_eq!(g.num_vertices, 4, "four distinct sparse ids");
+        assert_eq!(g.num_edges(), 4);
+        let rewritten = dir.join("dense.txt");
+        write_edge_list(&g, &rewritten).unwrap();
+        let text = std::fs::read_to_string(&rewritten).unwrap();
+        assert!(text.starts_with("# ppr-spmv edge list: |V|=4 |E|=4"), "{text}");
+        let g2 = read_edge_list(&rewritten).unwrap();
+        // the writer emits already-dense ids in insertion order, so a
+        // second read reproduces the graph exactly
+        assert_eq!(g2, g);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn overflow_ids_report_line_number() {
+        let dir = std::env::temp_dir().join("ppr_spmv_loader_overflow");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("overflow.txt");
+        // line 3 carries an id that overflows u64
+        std::fs::write(&path, "# header\n1 2\n99999999999999999999999999 3\n").unwrap();
+        let err = format!("{:#}", read_edge_list(&path).unwrap_err());
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("overflow"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -74,6 +74,51 @@ fn experiment_dispatch_table2_smoke() {
 }
 
 #[test]
+fn registry_config_file_flows_through_cli() {
+    let dir = std::env::temp_dir().join("ppr_registry_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("multi.toml");
+    std::fs::write(
+        &path,
+        "[engine]\nkappa = 4\n[registry]\ncapacity = 3\ndefault = \"ws\"\n\
+         graphs = [\"hk=dataset:HK-100k@500\", \"ws=dataset:WS-100k@500\"]\n",
+    )
+    .unwrap();
+    let args = Args::parse(
+        ["serve", "--config", path.to_str().unwrap()].into_iter().map(String::from),
+    );
+    let reg_cfg = ppr_spmv::cli::registry_config(&args).unwrap().expect("registry section");
+    assert_eq!(reg_cfg.capacity, 3);
+    assert_eq!(reg_cfg.default_graph.as_deref(), Some("ws"));
+    assert_eq!(reg_cfg.graphs.len(), 2);
+
+    // CLI pairs extend the file's graph list and --default-graph overrides
+    let args = Args::parse(
+        [
+            "serve",
+            "--config",
+            path.to_str().unwrap(),
+            "--graph",
+            "er=dataset:ER-100k@500",
+            "--default-graph",
+            "er",
+        ]
+        .into_iter()
+        .map(String::from),
+    );
+    let reg_cfg = ppr_spmv::cli::registry_config(&args).unwrap().unwrap();
+    assert_eq!(reg_cfg.graphs.len(), 3);
+    assert_eq!(reg_cfg.default_graph.as_deref(), Some("er"));
+
+    // the registry builds and routes end-to-end
+    let registry = ppr_spmv::cli::build_registry(&reg_cfg).unwrap();
+    assert_eq!(registry.len(), 3);
+    assert_eq!(registry.default_graph().unwrap().as_ref(), "er");
+    assert_eq!(registry.capacity(), 3);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn generate_and_query_roundtrip() {
     let dir = std::env::temp_dir().join("ppr_cli_test");
     std::fs::create_dir_all(&dir).unwrap();

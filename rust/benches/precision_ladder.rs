@@ -1,0 +1,15 @@
+//! `cargo bench --bench precision_ladder [-- --full | --scale N]`
+//!
+//! The accuracy-vs-latency frontier of the adaptive precision ladder:
+//! static Q1.15/Q1.19/Q1.25 engines vs the fast/balanced/exact accuracy
+//! classes on a Table-1-style graph, with measured software seconds,
+//! modeled FPGA seconds (per-rung cycle costs × per-rung clocks) and
+//! top-100 ranking precision against the f64 ground truth. Emits the
+//! machine-readable `BENCH_ladder.json` consumed by CI. See
+//! `bench_harness::precision_ladder`.
+
+fn main() {
+    let opts = ppr_spmv::bench_harness::ExpOptions::from_args();
+    println!("# precision ladder [{}]\n", opts.descriptor());
+    ppr_spmv::bench_harness::precision_ladder::run(&opts);
+}

@@ -13,7 +13,7 @@
 use crate::bench_harness as bh;
 use crate::config::{RegistryConfig, RunConfig};
 use crate::coordinator::{EngineBuilder, EngineKind, GraphRegistry, GraphSource};
-use crate::fixed::Precision;
+use crate::fixed::{AccuracyClass, Precision};
 use crate::graph::{loader, DatasetSpec};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::PathBuf;
@@ -73,8 +73,8 @@ impl Args {
     }
 }
 
-/// Build a RunConfig from common CLI options (`--precision`, `--kappa`,
-/// `--iterations`, `--alpha`, `--shards`, `--no-fused`,
+/// Build a RunConfig from common CLI options (`--precision`, `--class`,
+/// `--kappa`, `--iterations`, `--alpha`, `--shards`, `--no-fused`,
 /// `--config <file>`).
 pub fn run_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = match args.options.get("config") {
@@ -83,6 +83,10 @@ pub fn run_config(args: &Args) -> Result<RunConfig> {
     };
     if let Some(p) = args.options.get("precision") {
         cfg.precision = Precision::parse(p).ok_or_else(|| anyhow!("bad --precision {p}"))?;
+    }
+    if let Some(c) = args.options.get("class") {
+        cfg.accuracy_class =
+            AccuracyClass::parse(c).ok_or_else(|| anyhow!("bad --class {c}"))?;
     }
     if let Some(k) = args.get::<usize>("kappa") {
         cfg.kappa = k;
@@ -175,9 +179,10 @@ const USAGE: &str = "\
 ppr-spmv — reduced-precision streaming SpMV for Personalized PageRank
 USAGE:
   ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|shards|fusion|
-            multigraph|all>
+            multigraph|ladder|all>
             [--full] [--scale N] [--requests N] [--iterations N] [--no-csv]
   ppr-spmv serve  [--graph NAME|--graph-file PATH] [--precision 26b]
+            [--class static|fast|balanced|exact]
             [--engine native|pjrt|cpu] [--kappa 8] [--shards N] [--no-fused]
             [--iterations 10] [--workers N] [--demo-requests N]
             [--deadline-ms N]
@@ -185,7 +190,7 @@ USAGE:
             or dataset:NAME[@SCALE]) and/or a [registry] config section;
             [--registry-capacity N] [--default-graph NAME]
   ppr-spmv query  --vertex V [--graph NAME|--graph-file PATH] [--top 10]
-            [--engine native|pjrt|cpu]
+            [--engine native|pjrt|cpu] [--class static|fast|balanced|exact]
   ppr-spmv generate --graph NAME --out PATH [--scale N]
   ppr-spmv artifacts [--dir artifacts]
   ppr-spmv synthesize [--precision 26b] [--kappa 8] [--vertices 100000]";
@@ -230,6 +235,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "multigraph" => {
             bh::multigraph::run(&opts);
         }
+        "ladder" => {
+            bh::precision_ladder::run(&opts);
+        }
         "all" => {
             bh::table1_datasets::run(&opts);
             bh::table2_resources::run(&opts);
@@ -244,6 +252,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             bh::shard_scaling::run(&opts);
             bh::fusion::run(&opts);
             bh::multigraph::run(&opts);
+            bh::precision_ladder::run(&opts);
         }
         other => bail!("unknown experiment {other}"),
     }
@@ -561,6 +570,18 @@ mod tests {
     fn no_fused_flag_disables_fusion() {
         let cfg = run_config(&args("serve --no-fused")).unwrap();
         assert!(!cfg.fused);
+    }
+
+    #[test]
+    fn class_flag_selects_accuracy_class() {
+        let cfg = run_config(&args("serve --class balanced")).unwrap();
+        assert_eq!(cfg.accuracy_class, AccuracyClass::Balanced);
+        assert_eq!(
+            run_config(&args("serve")).unwrap().accuracy_class,
+            AccuracyClass::Static,
+            "static is the back-compat default"
+        );
+        assert!(run_config(&args("serve --class warp9")).is_err());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! Supported syntax: `[section]` headers, `key = value` with string
 //! (`"..."`), integer, float, boolean and flat array values, `#` comments.
 
-use crate::fixed::Precision;
+use crate::fixed::{AccuracyClass, Precision};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -161,6 +161,11 @@ impl ConfigDoc {
 pub struct RunConfig {
     /// Numeric precision of the engine.
     pub precision: Precision,
+    /// Default accuracy class: `Static` keeps the single configured
+    /// precision; `fast`/`balanced`/`exact` run the adaptive precision
+    /// ladder (DESIGN.md §7). Config key `engine.accuracy_class`, CLI
+    /// `--class`; per-request classes override it on the serving path.
+    pub accuracy_class: AccuracyClass,
     /// κ batch lanes.
     pub kappa: usize,
     /// Packet width B.
@@ -201,6 +206,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         Self {
             precision: Precision::Fixed(26),
+            accuracy_class: AccuracyClass::Static,
             kappa: crate::PAPER_KAPPA,
             b: crate::PAPER_B,
             num_shards: default_num_shards(),
@@ -223,6 +229,10 @@ impl RunConfig {
         if let Some(v) = doc.get("engine", "precision") {
             cfg.precision = Precision::parse(v.as_str()?)
                 .ok_or_else(|| anyhow!("bad precision {v:?}"))?;
+        }
+        if let Some(v) = doc.get("engine", "accuracy_class") {
+            cfg.accuracy_class = AccuracyClass::parse(v.as_str()?)
+                .ok_or_else(|| anyhow!("bad accuracy_class {v:?}"))?;
         }
         if let Some(v) = doc.get("engine", "kappa") {
             cfg.kappa = v.as_int()? as usize;
@@ -402,6 +412,16 @@ mod tests {
         assert_eq!(cfg.num_shards, 4);
         assert_eq!(cfg.alpha, 0.85); // default preserved
         assert!(cfg.fused, "fused defaults on");
+    }
+
+    #[test]
+    fn accuracy_class_parsed_from_doc() {
+        let text = "[engine]\naccuracy_class = \"balanced\"\n";
+        let cfg = RunConfig::from_doc(&ConfigDoc::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.accuracy_class, AccuracyClass::Balanced);
+        assert_eq!(RunConfig::default().accuracy_class, AccuracyClass::Static);
+        let bad = "[engine]\naccuracy_class = \"turbo\"\n";
+        assert!(RunConfig::from_doc(&ConfigDoc::parse(bad).unwrap()).is_err());
     }
 
     #[test]

@@ -3,23 +3,37 @@
 //! classic latency/throughput knob of serving systems, and the host-side
 //! realization of the paper's "batch multiple user requests" design.
 //!
-//! The batcher is **graph-keyed** (DESIGN.md §6): each registered graph
-//! is its own personalization space, so a flush yields a [`GraphBatch`]
-//! whose requests all target one graph — batches never mix graphs. Graphs
-//! with pending work are drained round-robin: while one graph's batch is
-//! being assembled it leaves the rotation, so concurrent workers pick up
-//! *other* graphs instead of contending for the same queue.
+//! The batcher is **graph- and class-keyed** (DESIGN.md §6/§7): each
+//! registered graph is its own personalization space and each accuracy
+//! class its own engine configuration, so a flush yields a [`GraphBatch`]
+//! whose requests all target one `(graph, class)` pair — batches never
+//! mix graphs and never mix classes. Keys with pending work are drained
+//! round-robin: while one key's batch is being assembled it leaves the
+//! rotation, so concurrent workers pick up *other* keys instead of
+//! contending for the same queue.
+//!
+//! Flush deadlines are anchored at the **front request's arrival**, not
+//! at the moment a worker claims the key: the batcher stamps every
+//! request on `submit`, and `next_batch` computes the deadline from the
+//! front stamp — so a request that aged in the queue while all workers
+//! were busy flushes immediately instead of waiting a second full
+//! timeout (worst-case queue wait ≤ one flush timeout plus batch
+//! execution, pinned by regression tests).
 
 use super::request::PprRequest;
+use crate::fixed::AccuracyClass;
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// One flushed batch: up to κ requests, all for the same graph.
+/// One flushed batch: up to κ requests, all for the same graph and
+/// accuracy class.
 #[derive(Debug)]
 pub struct GraphBatch {
     /// The graph every request in this batch targets.
     pub graph: Arc<str>,
+    /// The accuracy class every request in this batch runs under.
+    pub class: AccuracyClass,
     /// The requests (1..=κ of them).
     pub requests: Vec<PprRequest>,
 }
@@ -37,7 +51,17 @@ impl GraphBatch {
     }
 }
 
-/// Thread-safe graph-keyed batching queue.
+/// The batching key: one graph × one accuracy class.
+type BatchKey = (Arc<str>, AccuracyClass);
+
+/// A queued request plus the instant the batcher accepted it — the
+/// anchor of its batch's flush deadline.
+struct Queued {
+    at: Instant,
+    req: PprRequest,
+}
+
+/// Thread-safe graph/class-keyed batching queue.
 pub struct DynamicBatcher {
     kappa: usize,
     timeout: Duration,
@@ -46,21 +70,21 @@ pub struct DynamicBatcher {
 }
 
 struct Inner {
-    /// Per-graph FIFO queues (entries persist once a graph is seen).
-    queues: HashMap<Arc<str>, VecDeque<PprRequest>>,
-    /// Round-robin rotation of graphs with pending requests. Invariant: a
-    /// graph is in the rotation iff its queue is non-empty **and** no
+    /// Per-key FIFO queues (entries persist once a key is seen).
+    queues: HashMap<BatchKey, VecDeque<Queued>>,
+    /// Round-robin rotation of keys with pending requests. Invariant: a
+    /// key is in the rotation iff its queue is non-empty **and** no
     /// worker is currently assembling its batch (the assembling worker
-    /// pops the graph and re-inserts it only if requests are left over).
-    rotation: VecDeque<Arc<str>>,
-    /// Total queued requests across graphs.
+    /// pops the key and re-inserts it only if requests are left over).
+    rotation: VecDeque<BatchKey>,
+    /// Total queued requests across keys.
     depth: usize,
     closed: bool,
 }
 
 impl Inner {
-    fn queue_len(&self, graph: &Arc<str>) -> usize {
-        self.queues.get(graph).map_or(0, |q| q.len())
+    fn queue_len(&self, key: &BatchKey) -> usize {
+        self.queues.get(key).map_or(0, |q| q.len())
     }
 }
 
@@ -105,20 +129,22 @@ impl DynamicBatcher {
         if inner.closed {
             return false;
         }
-        let graph = req.graph.clone();
-        let q = inner.queues.entry(graph.clone()).or_default();
+        let key = (req.graph.clone(), req.class);
+        let q = inner.queues.entry(key.clone()).or_default();
         let was_empty = q.is_empty();
-        q.push_back(req);
+        // stamp the arrival: the flush deadline of this request's batch
+        // anchors here, not at whenever a worker gets around to claiming
+        q.push_back(Queued { at: Instant::now(), req });
         // fires exactly once per κ-crossing (queues grow one request at a
         // time); a backlog left ≥ κ after a drain re-enters the rotation
         // and gets next_batch's hand-off notify_all instead
         let filled = q.len() == self.kappa;
         inner.depth += 1;
-        // 0→1 means no worker owns this graph right now (an assembling
+        // 0→1 means no worker owns this key right now (an assembling
         // worker would still hold ≥1 request in the queue), so it must
         // re-enter the rotation
-        if was_empty && !inner.rotation.contains(&graph) {
-            inner.rotation.push_back(graph);
+        if was_empty && !inner.rotation.contains(&key) {
+            inner.rotation.push_back(key);
             self.cv.notify_all();
         } else if filled {
             self.cv.notify_all();
@@ -128,26 +154,33 @@ impl DynamicBatcher {
         true
     }
 
-    /// Blocking: wait for the next batch. Takes the front graph of the
+    /// Blocking: wait for the next batch. Takes the front key of the
     /// round-robin rotation and returns up to κ of its requests — exactly
-    /// κ when that graph's queue is hot, fewer when the flush timeout
+    /// κ when that key's queue is hot, fewer when the flush deadline
     /// expires first. Returns `None` when closed and drained.
     pub fn next_batch(&self) -> Option<GraphBatch> {
         let mut inner = self.inner.lock().unwrap();
         loop {
-            // wait for any graph with pending requests (or closure)
+            // wait for any key with pending requests (or closure)
             while inner.rotation.is_empty() {
                 if inner.closed {
                     return None;
                 }
                 inner = self.cv.wait(inner).unwrap();
             }
-            // claim the front graph: out of the rotation while assembling,
-            // so other workers drain other graphs meanwhile
-            let graph = inner.rotation.pop_front().expect("rotation non-empty");
-            // first request in hand: wait up to `timeout` for a full batch
-            let deadline = Instant::now() + self.timeout;
-            while inner.queue_len(&graph) < self.kappa && !inner.closed {
+            // claim the front key: out of the rotation while assembling,
+            // so other workers drain other keys meanwhile
+            let key = inner.rotation.pop_front().expect("rotation non-empty");
+            // the flush deadline anchors at the FRONT request's arrival —
+            // a request that already aged `timeout` in the queue (all
+            // workers busy) flushes immediately instead of waiting a
+            // second full timeout from the claim
+            let deadline = inner
+                .queues
+                .get(&key)
+                .and_then(|q| q.front())
+                .map_or_else(Instant::now, |front| front.at + self.timeout);
+            while inner.queue_len(&key) < self.kappa && !inner.closed {
                 let now = Instant::now();
                 if now >= deadline {
                     break;
@@ -155,28 +188,29 @@ impl DynamicBatcher {
                 let (guard, _res) = self.cv.wait_timeout(inner, deadline - now).unwrap();
                 inner = guard;
             }
-            let q = inner.queues.get_mut(&graph).expect("claimed graph has a queue");
+            let q = inner.queues.get_mut(&key).expect("claimed key has a queue");
             let take = q.len().min(self.kappa);
-            let requests: Vec<PprRequest> = q.drain(..take).collect();
+            let requests: Vec<PprRequest> = q.drain(..take).map(|queued| queued.req).collect();
             let leftover = !q.is_empty();
             inner.depth -= requests.len();
             if leftover {
-                // rotate to the back: other graphs get their turn first
-                inner.rotation.push_back(graph.clone());
+                // rotate to the back: other keys get their turn first
+                inner.rotation.push_back(key.clone());
             }
-            // hand-off: if work remains (this graph's leftovers or other
-            // graphs whose wake-ups all landed on this worker while it was
+            // hand-off: if work remains (this key's leftovers or other
+            // keys whose wake-ups all landed on this worker while it was
             // assembling), wake the waiters before going compute. Like the
             // rotation-entry wake in submit, this must reach an *idle*
             // worker, and a single wake-up can be swallowed by a worker
-            // mid-assembly on another graph — so notify_all.
+            // mid-assembly on another key — so notify_all.
             if !inner.rotation.is_empty() {
                 self.cv.notify_all();
             }
             if requests.is_empty() {
-                continue; // defensive: claimed graphs always hold ≥1 request
+                continue; // defensive: claimed keys always hold ≥1 request
             }
-            return Some(GraphBatch { graph, requests });
+            let (graph, class) = key;
+            return Some(GraphBatch { graph, class, requests });
         }
     }
 
@@ -192,9 +226,15 @@ impl DynamicBatcher {
         self.inner.lock().unwrap().depth
     }
 
-    /// Queue depth of one graph (diagnostics).
+    /// Queue depth of one graph, summed over its classes (diagnostics).
     pub fn depth_of(&self, graph: &str) -> usize {
-        self.inner.lock().unwrap().queues.get(graph).map_or(0, |q| q.len())
+        let inner = self.inner.lock().unwrap();
+        inner
+            .queues
+            .iter()
+            .filter(|((g, _), _)| g.as_ref() == graph)
+            .map(|(_, q)| q.len())
+            .sum()
     }
 
     /// The κ this batcher fills toward.
@@ -297,6 +337,76 @@ mod tests {
             w.join().unwrap();
         }
         assert_eq!(served.load(Ordering::SeqCst), 50, "every request served exactly once");
+    }
+
+    #[test]
+    fn flush_deadline_anchored_to_enqueue_not_claim() {
+        // regression: the deadline used to be armed at claim time, so a
+        // request that aged while every worker was busy waited up to TWO
+        // flush timeouts. With arrival anchoring, a request older than
+        // the timeout flushes the moment a worker claims its key.
+        let b = DynamicBatcher::new(8, Duration::from_millis(100));
+        b.submit(req(1));
+        std::thread::sleep(Duration::from_millis(130)); // workers "busy"
+        let claim = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            claim.elapsed() < Duration::from_millis(60),
+            "aged request must flush immediately, waited {:?}",
+            claim.elapsed()
+        );
+    }
+
+    #[test]
+    fn worst_case_queue_wait_is_one_flush_timeout() {
+        // end-to-end: submit → worker claims after Δ < timeout → flush at
+        // enqueue + timeout, NOT at claim + timeout
+        let timeout = Duration::from_millis(200);
+        let b = DynamicBatcher::new(8, timeout);
+        let submitted = Instant::now();
+        b.submit(req(1));
+        std::thread::sleep(Duration::from_millis(150));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        let waited = submitted.elapsed();
+        // claim-anchoring would wait ≈ 350 ms; arrival-anchoring ≈ 200 ms
+        assert!(
+            waited < Duration::from_millis(300),
+            "queue wait {waited:?} exceeds one flush timeout + slack"
+        );
+        assert!(waited >= timeout, "partial batch still waits out the flush window");
+    }
+
+    #[test]
+    fn batches_never_mix_accuracy_classes() {
+        use crate::fixed::AccuracyClass;
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        for i in 0..4 {
+            b.submit(req(i).with_class(AccuracyClass::Fast));
+            b.submit(req(100 + i).with_class(AccuracyClass::Exact));
+        }
+        assert_eq!(b.depth(), 8);
+        assert_eq!(b.depth_of(super::super::request::DEFAULT_GRAPH), 8);
+        for _ in 0..2 {
+            let batch = b.next_batch().unwrap();
+            assert_eq!(batch.len(), 4, "each class flushes its own full κ batch");
+            assert!(
+                batch.requests.iter().all(|r| r.class == batch.class),
+                "one ladder per batch"
+            );
+            assert_eq!(batch.graph.as_ref(), super::super::request::DEFAULT_GRAPH);
+        }
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn default_class_is_static_in_batches() {
+        let b = DynamicBatcher::new(2, Duration::from_millis(5));
+        b.submit(req(1));
+        b.submit(req(2));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.class, crate::fixed::AccuracyClass::Static);
     }
 
     #[test]

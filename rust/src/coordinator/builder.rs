@@ -11,11 +11,13 @@
 //! [`EngineBuilder::serve`] that stands up a whole [`Server`].
 
 use super::engine::{
-    CpuBaselineEngine, NativeEngine, PjrtEngineAdapter, PprEngine, ThreadBoundEngine,
+    CpuBaselineEngine, LadderEngine, NativeEngine, PjrtEngineAdapter, PprEngine,
+    ThreadBoundEngine,
 };
 use super::registry::{GraphEntry, GraphRegistry};
 use super::server::{Server, ServerConfig};
 use crate::config::RunConfig;
+use crate::fixed::AccuracyClass;
 use crate::graph::{CsrMatrix, Graph};
 use crate::ppr::PreparedGraph;
 use anyhow::{Context, Result};
@@ -145,12 +147,22 @@ impl EngineBuilder {
 
     /// Build one engine over an already-prepared packet schedule (shared
     /// across a pool; not applicable to the CSR-based CPU baseline). The
-    /// prepared graph's shard count applies, not the configuration's.
+    /// prepared graph's shard count applies, not the configuration's. A
+    /// native builder whose configuration selects a ladder class
+    /// (`engine.accuracy_class` / `--class`) yields a [`LadderEngine`].
     pub fn build_prepared(&self, prepared: Arc<PreparedGraph>) -> Result<Box<dyn PprEngine + Send>> {
         self.cfg.validate()?;
         match self.kind {
             EngineKind::Native => {
-                Ok(Box::new(NativeEngine::new(prepared, self.cfg.clone())))
+                if self.cfg.accuracy_class.ladder().is_some() {
+                    Ok(Box::new(LadderEngine::new(
+                        prepared,
+                        self.cfg.accuracy_class,
+                        &self.cfg,
+                    )?))
+                } else {
+                    Ok(Box::new(NativeEngine::new(prepared, self.cfg.clone())))
+                }
             }
             EngineKind::Pjrt => self.spawn_pjrt(prepared),
             EngineKind::CpuBaseline => anyhow::bail!(
@@ -186,14 +198,48 @@ impl EngineBuilder {
 
     /// Build one engine over a resolved registry entry (the registry
     /// serving path: native/PJRT bind the entry's prepared schedule, the
-    /// CPU baseline its lazily-derived CSR).
+    /// CPU baseline its lazily-derived CSR), under the configuration's
+    /// own accuracy class.
     pub fn build_entry(&self, entry: &GraphEntry) -> Result<Box<dyn PprEngine + Send>> {
+        self.build_entry_class(entry, self.cfg.accuracy_class)
+    }
+
+    /// Build the engine an accuracy class runs on, over a resolved
+    /// registry entry. The class is authoritative (a `Static` request on
+    /// a ladder-default server still gets the static engine): ladder
+    /// classes get a native [`LadderEngine`] whose rung streams come from
+    /// the entry's per-precision cache; `Static` — and backends without a
+    /// ladder implementation (PJRT artifacts are synthesized per width,
+    /// the CPU baseline is f32-only) — get the static engine of the
+    /// configured precision, its value streams also from the entry's
+    /// cache so worker replicas share one quantized copy (DESIGN.md §7).
+    pub fn build_entry_class(
+        &self,
+        entry: &GraphEntry,
+        class: AccuracyClass,
+    ) -> Result<Box<dyn PprEngine + Send>> {
         self.cfg.validate()?;
         match self.kind {
             EngineKind::CpuBaseline => {
                 Ok(Box::new(CpuBaselineEngine::new(entry.csr(), self.cfg.clone())))
             }
-            _ => self.build_prepared(entry.prepared.clone()),
+            EngineKind::Native => match class.ladder() {
+                Some(_) => {
+                    let engine = LadderEngine::with_streams(
+                        entry.prepared.clone(),
+                        class,
+                        &self.cfg,
+                        |p| entry.values(p),
+                    )?;
+                    Ok(Box::new(engine))
+                }
+                None => Ok(Box::new(NativeEngine::with_values(
+                    entry.prepared.clone(),
+                    entry.values(self.cfg.precision),
+                    self.cfg.clone(),
+                ))),
+            },
+            EngineKind::Pjrt => self.build_prepared(entry.prepared.clone()),
         }
     }
 
@@ -317,7 +363,7 @@ mod tests {
         let registry = GraphRegistry::new(2);
         registry.register_graph("g", graph()).unwrap();
         let cfg = RunConfig { kappa: 2, iterations: 5, num_shards: 1, ..Default::default() };
-        let entry = registry.resolve("g", cfg.precision, cfg.b, 1).unwrap();
+        let entry = registry.resolve("g", cfg.b, 1).unwrap();
 
         let mut native = EngineBuilder::native().config(cfg.clone()).build_entry(&entry).unwrap();
         assert_eq!(native.num_vertices(), 128);
@@ -328,6 +374,47 @@ mod tests {
         let cpu = EngineBuilder::cpu_baseline().config(cfg).build_entry(&entry).unwrap();
         assert!(cpu.describe().contains("cpu-baseline"));
         assert_eq!(cpu.num_vertices(), 128);
+    }
+
+    #[test]
+    fn build_entry_class_builds_ladders_and_falls_back() {
+        let registry = GraphRegistry::new(2);
+        registry.register_graph("g", graph()).unwrap();
+        let cfg = RunConfig { kappa: 2, num_shards: 1, ..Default::default() };
+        let entry = registry.resolve("g", cfg.b, 1).unwrap();
+
+        let b = EngineBuilder::native().config(cfg.clone());
+        let mut ladder = b.build_entry_class(&entry, AccuracyClass::Balanced).unwrap();
+        assert!(ladder.describe().contains("ladder"), "{}", ladder.describe());
+        let mut block = ScoreBlock::new();
+        ladder.run_batch(&[5], &mut block).unwrap();
+        assert_eq!(block.top_n(0, 1)[0].vertex, 5);
+        // the ladder's rung streams came from the entry's cache
+        assert!(entry.resident_value_streams() >= 3, "one stream per rung cached");
+
+        // Static falls back to the static engine
+        let stat = b.build_entry_class(&entry, AccuracyClass::Static).unwrap();
+        assert!(stat.describe().contains("native"), "{}", stat.describe());
+        // non-native backends fall back too (CPU baseline is f32-only)
+        let cpu = EngineBuilder::cpu_baseline()
+            .config(cfg)
+            .build_entry_class(&entry, AccuracyClass::Exact)
+            .unwrap();
+        assert!(cpu.describe().contains("cpu-baseline"), "{}", cpu.describe());
+    }
+
+    #[test]
+    fn ladder_class_config_flows_through_build() {
+        let cfg = RunConfig {
+            kappa: 2,
+            accuracy_class: AccuracyClass::Fast,
+            ..Default::default()
+        };
+        let mut e = EngineBuilder::native().config(cfg).build(&graph()).unwrap();
+        assert!(e.describe().contains("ladder[fast"), "{}", e.describe());
+        let mut block = ScoreBlock::new();
+        e.run_batch(&[7], &mut block).unwrap();
+        assert_eq!(block.top_n(0, 1)[0].vertex, 7);
     }
 
     #[test]

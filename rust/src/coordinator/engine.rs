@@ -24,9 +24,12 @@
 
 use super::score_block::ScoreBlock;
 use crate::config::RunConfig;
-use crate::fixed::Precision;
+use crate::fixed::{AccuracyClass, Precision};
 use crate::graph::{CsrMatrix, VertexId};
-use crate::ppr::{cpu_baseline, BatchedPpr, Executor, PprConfig, PreparedGraph};
+use crate::ppr::{
+    cpu_baseline, BatchedPpr, Executor, LadderPpr, LadderScores, PprConfig, PreparedGraph,
+    ValueStreams,
+};
 use crate::spmv::datapath::{FixedPath, FloatPath};
 use anyhow::Result;
 use std::sync::Arc;
@@ -94,8 +97,18 @@ enum NativeInner {
 }
 
 impl NativeEngine {
-    /// Bind to a prepared graph.
+    /// Bind to a prepared graph (value streams quantized here).
     pub fn new(graph: Arc<PreparedGraph>, cfg: RunConfig) -> Self {
+        let values = ValueStreams::quantize(&graph, cfg.precision);
+        Self::with_values(graph, values, cfg)
+    }
+
+    /// Bind to a prepared graph over **pre-quantized** value streams —
+    /// the registry path, where streams are cached per `(graph,
+    /// precision)` on the entry (DESIGN.md §7) and shared by every worker
+    /// engine instead of re-quantized per build. The streams' word type
+    /// must match `cfg.precision`.
+    pub fn with_values(graph: Arc<PreparedGraph>, values: ValueStreams, cfg: RunConfig) -> Self {
         let ppr_cfg = PprConfig {
             alpha: cfg.alpha,
             max_iterations: cfg.iterations,
@@ -104,14 +117,22 @@ impl NativeEngine {
         let num_vertices = graph.num_vertices;
         let num_shards = graph.num_shards();
         let executor = if cfg.fused { Executor::Fused } else { Executor::Unfused };
-        let inner = match cfg.precision {
-            Precision::Fixed(w) => NativeInner::Fixed(
-                BatchedPpr::new(FixedPath::paper(w), graph, cfg.kappa, cfg.alpha)
+        let inner = match (cfg.precision, values) {
+            (Precision::Fixed(w), ValueStreams::Fixed(vals)) => NativeInner::Fixed(
+                BatchedPpr::with_shared_values(
+                    FixedPath::paper(w),
+                    graph,
+                    vals,
+                    cfg.kappa,
+                    cfg.alpha,
+                )
+                .with_executor(executor),
+            ),
+            (Precision::Float32, ValueStreams::Float(vals)) => NativeInner::Float(
+                BatchedPpr::with_shared_values(FloatPath, graph, vals, cfg.kappa, cfg.alpha)
                     .with_executor(executor),
             ),
-            Precision::Float32 => NativeInner::Float(
-                BatchedPpr::new(FloatPath, graph, cfg.kappa, cfg.alpha).with_executor(executor),
-            ),
+            (p, _) => panic!("value streams carry the wrong word type for precision {p}"),
         };
         Self { inner, num_vertices, num_shards, cfg, ppr_cfg }
     }
@@ -163,6 +184,98 @@ impl PprEngine for NativeEngine {
             self.num_shards,
             executor.label(),
             self.cfg.iterations
+        )
+    }
+}
+
+/// The class-aware native engine: an adaptive precision ladder
+/// ([`LadderPpr`], DESIGN.md §7) behind the [`PprEngine`] interface.
+///
+/// The class's `(tolerance, budget)` pair replaces the static iteration
+/// count — that is the feature: "precise control over the accuracy of
+/// the results" per request instead of per deployment. An explicit
+/// `convergence_threshold` in the run configuration still overrides the
+/// class tolerance.
+pub struct LadderEngine {
+    inner: LadderPpr,
+    class: AccuracyClass,
+    kappa: usize,
+    num_vertices: usize,
+    ppr_cfg: PprConfig,
+}
+
+impl LadderEngine {
+    /// Build over a prepared graph, quantizing every rung's value streams
+    /// here. Fails for [`AccuracyClass::Static`] (build a [`NativeEngine`]
+    /// instead).
+    pub fn new(graph: Arc<PreparedGraph>, class: AccuracyClass, cfg: &RunConfig) -> Result<Self> {
+        let g = graph.clone();
+        Self::with_streams(graph, class, cfg, move |p| ValueStreams::quantize(&g, p))
+    }
+
+    /// Build over cached per-precision value streams (the registry path —
+    /// see [`super::registry::GraphEntry::values`]).
+    pub fn with_streams(
+        graph: Arc<PreparedGraph>,
+        class: AccuracyClass,
+        cfg: &RunConfig,
+        streams: impl FnMut(Precision) -> ValueStreams,
+    ) -> Result<Self> {
+        let spec = class
+            .ladder()
+            .ok_or_else(|| anyhow::anyhow!("class {class} has no ladder; build a static engine"))?;
+        let executor = if cfg.fused { Executor::Fused } else { Executor::Unfused };
+        let ppr_cfg = PprConfig {
+            alpha: cfg.alpha,
+            max_iterations: spec.max_iterations,
+            convergence_threshold: Some(cfg.convergence_threshold.unwrap_or(spec.tolerance)),
+        };
+        let num_vertices = graph.num_vertices;
+        let inner = LadderPpr::with_streams(graph, spec, cfg.kappa, cfg.alpha, executor, streams);
+        Ok(Self { inner, class, kappa: cfg.kappa, num_vertices, ppr_cfg })
+    }
+
+    /// The accuracy class this engine serves.
+    pub fn class(&self) -> AccuracyClass {
+        self.class
+    }
+}
+
+impl PprEngine for LadderEngine {
+    fn max_kappa(&self) -> usize {
+        self.kappa
+    }
+
+    fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    fn run_batch(&mut self, personalization: &[VertexId], out: &mut ScoreBlock) -> Result<()> {
+        self.validate_batch(personalization)?;
+        let lanes = personalization.len();
+        let nv = self.num_vertices;
+        let run = self.inner.run(personalization, &self.ppr_cfg);
+        match &run.scores {
+            LadderScores::Fixed(words, fmt) => {
+                out.fill_vertex_major(lanes, nv, lanes, words, |w| fmt.to_f64(w));
+            }
+            LadderScores::Float(words) => {
+                out.fill_vertex_major(lanes, nv, lanes, words, |w| w as f64);
+            }
+        }
+        out.set_iterations(run.iterations);
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "ladder[{} {} κ={} S={} tol={:.0e} budget={}]",
+            self.class,
+            self.inner.spec().describe(),
+            self.kappa,
+            self.inner.num_shards(),
+            self.inner.spec().tolerance,
+            self.inner.spec().max_iterations,
         )
     }
 }
@@ -496,6 +609,47 @@ mod tests {
         unfused.run_batch(&[1, 5, 7], &mut b).unwrap();
         assert_eq!(a.as_flat(), b.as_flat(), "fusion must be bit-transparent end to end");
         assert_eq!(a.iterations(), b.iterations());
+    }
+
+    #[test]
+    fn ladder_engine_serves_through_engine_api() {
+        let pg = prepared();
+        let cfg = RunConfig { kappa: 4, ..Default::default() };
+        let mut e = LadderEngine::new(pg, AccuracyClass::Balanced, &cfg).unwrap();
+        assert_eq!(e.max_kappa(), 4);
+        assert_eq!(e.num_vertices(), 128);
+        assert_eq!(e.class(), AccuracyClass::Balanced);
+        assert!(e.describe().contains("balanced"), "{}", e.describe());
+        assert!(e.describe().contains("16b→20b→26b"), "{}", e.describe());
+        let mut block = ScoreBlock::new();
+        e.run_batch(&[3, 9], &mut block).unwrap();
+        assert_eq!(block.lanes(), 2);
+        assert_eq!(block.top_n(0, 1)[0].vertex, 3);
+        assert_eq!(block.top_n(1, 1)[0].vertex, 9);
+        assert!(block.iterations() > 0);
+        // static class has no ladder: the caller must build NativeEngine
+        assert!(
+            LadderEngine::new(prepared(), AccuracyClass::Static, &RunConfig::default()).is_err()
+        );
+    }
+
+    #[test]
+    fn native_with_values_bit_identical_to_new() {
+        let pg = prepared();
+        let cfg = RunConfig {
+            precision: Precision::Fixed(24),
+            kappa: 4,
+            iterations: 12,
+            ..Default::default()
+        };
+        let mut a = NativeEngine::new(pg.clone(), cfg.clone());
+        let values = ValueStreams::quantize(&pg, cfg.precision);
+        let mut b = NativeEngine::with_values(pg, values, cfg);
+        let mut ba = ScoreBlock::new();
+        let mut bb = ScoreBlock::new();
+        a.run_batch(&[1, 9, 40], &mut ba).unwrap();
+        b.run_batch(&[1, 9, 40], &mut bb).unwrap();
+        assert_eq!(ba.as_flat(), bb.as_flat(), "shared streams are bit-transparent");
     }
 
     #[test]

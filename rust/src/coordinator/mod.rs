@@ -46,7 +46,8 @@ pub mod stats;
 pub use batcher::{DynamicBatcher, GraphBatch};
 pub use builder::{EngineBuilder, EngineKind};
 pub use engine::{
-    CpuBaselineEngine, NativeEngine, PjrtEngineAdapter, PprEngine, ThreadBoundEngine,
+    CpuBaselineEngine, LadderEngine, NativeEngine, PjrtEngineAdapter, PprEngine,
+    ThreadBoundEngine,
 };
 pub use registry::{GraphEntry, GraphRegistry, GraphSource, DEFAULT_REGISTRY_CAPACITY};
 pub use request::{default_graph_key, PprRequest, PprResponse, RankedVertex, DEFAULT_GRAPH};

@@ -9,8 +9,12 @@
 //!   eagerly, so request validation (|V|) never touches the disk;
 //! - the expensive part — the sharded packet schedule
 //!   ([`PreparedGraph::from_coo_sharded`]) — is **prepared lazily** on
-//!   first use and cached as an `Arc`-shared [`GraphEntry`] keyed by
-//!   `(graph, precision, B, shards)`, with LRU-bounded residency;
+//!   first use and cached as an `Arc`-shared [`GraphEntry`] keyed by the
+//!   precision-independent `(graph, B, shards)` schedule key, with
+//!   LRU-bounded residency; per-precision quantized value streams are
+//!   cached *on* the entry ([`GraphEntry::values`]), so a graph served at
+//!   several precisions (the ladder's rungs) keeps one schedule resident
+//!   instead of one per width (DESIGN.md §7);
 //! - [`GraphRegistry::reload`] is an **atomic hot-swap**: the new
 //!   snapshot is loaded and re-prepared for every resident configuration
 //!   *before* the epoch bumps, so workers flip to the new epoch between
@@ -23,8 +27,9 @@
 //! tests (and operators) can assert that both sides of a reload actually
 //! carried traffic.
 
+use crate::fixed::Precision;
 use crate::graph::{CsrMatrix, Graph};
-use crate::ppr::PreparedGraph;
+use crate::ppr::{PreparedGraph, ValueStreams};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -103,16 +108,19 @@ impl GraphSource {
     }
 }
 
-/// The preparation a [`GraphEntry`] was built for. Precision rides in the
-/// key even though the packet schedule itself is precision-independent:
-/// engines quantize their value streams per precision, and keying the
-/// entry this way is what later PRs hang per-graph precision selection
-/// off.
+/// The preparation a [`GraphEntry`] was built for — the **schedule key**.
+/// The packet schedule is precision-independent, so precision is *not*
+/// part of it: every rung of the precision ladder (and every static
+/// engine of any width) resolves to the same entry, and the per-precision
+/// quantized value streams hang off the entry's own cache
+/// ([`GraphEntry::values`]). Splitting the old
+/// `(graph, precision, B, shards)` key this way means a graph served at
+/// several precisions keeps **one** resident schedule instead of one per
+/// width (DESIGN.md §7).
 #[derive(Debug, Clone, PartialEq, Eq)]
 struct PrepKey {
     graph: Arc<str>,
     epoch: u64,
-    precision: crate::fixed::Precision,
     b: usize,
     shards: usize,
 }
@@ -132,6 +140,10 @@ pub struct GraphEntry {
     /// The sharded packet schedule the streaming engines bind to.
     pub prepared: Arc<PreparedGraph>,
     csr: OnceLock<Arc<CsrMatrix>>,
+    /// Per-precision quantized value streams (ladder rungs / static
+    /// engines), cached on first use — the precision-dependent half of
+    /// the old `(graph, precision, B, shards)` key.
+    values: Mutex<Vec<(Precision, ValueStreams)>>,
     batches_served: AtomicU64,
 }
 
@@ -145,6 +157,35 @@ impl GraphEntry {
     /// |V| of the snapshot.
     pub fn num_vertices(&self) -> usize {
         self.graph.num_vertices
+    }
+
+    /// The entry's value streams quantized for `precision`, cached after
+    /// the first use so every worker engine and every ladder rung of this
+    /// `(graph, precision)` pair shares one resident copy. Quantization
+    /// runs outside the cache lock (a race quantizes twice, keeps one).
+    pub fn values(&self, precision: Precision) -> ValueStreams {
+        if let Some(v) = self
+            .values
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(p, _)| *p == precision)
+            .map(|(_, v)| v.clone())
+        {
+            return v;
+        }
+        let fresh = ValueStreams::quantize(&self.prepared, precision);
+        let mut cache = self.values.lock().unwrap();
+        if let Some((_, v)) = cache.iter().find(|(p, _)| *p == precision) {
+            return v.clone();
+        }
+        cache.push((precision, fresh.clone()));
+        fresh
+    }
+
+    /// Number of precisions with resident value streams (diagnostics).
+    pub fn resident_value_streams(&self) -> usize {
+        self.values.lock().unwrap().len()
     }
 
     /// Batches served from this entry (coarse per-epoch drain
@@ -301,18 +342,14 @@ impl GraphRegistry {
         self.inner.lock().unwrap().resident.len()
     }
 
-    /// Resolve the prepared entry for `(name, precision, b, shards)`,
-    /// preparing it on first use. Preparation runs outside the registry
+    /// Resolve the prepared entry for `(name, b, shards)` — the
+    /// precision-independent schedule key — preparing it on first use
+    /// (per-precision value streams ride on the entry itself, see
+    /// [`GraphEntry::values`]). Preparation runs outside the registry
     /// lock so other graphs keep serving; concurrent first-uses of the
     /// same key may prepare twice and keep one — correct, just briefly
     /// wasteful.
-    pub fn resolve(
-        &self,
-        name: &str,
-        precision: crate::fixed::Precision,
-        b: usize,
-        shards: usize,
-    ) -> Result<Arc<GraphEntry>> {
+    pub fn resolve(&self, name: &str, b: usize, shards: usize) -> Result<Arc<GraphEntry>> {
         loop {
             // snapshot under the lock
             let (key, graph, epoch) = {
@@ -322,7 +359,7 @@ impl GraphRegistry {
                     .get_key_value(name)
                     .map(|(k, s)| (k.clone(), s.graph.clone(), s.epoch))
                     .ok_or_else(|| anyhow!("unknown graph {name}"))?;
-                let prep_key = PrepKey { graph: key.clone(), epoch, precision, b, shards };
+                let prep_key = PrepKey { graph: key.clone(), epoch, b, shards };
                 if let Some(pos) = inner.resident.iter().position(|(k, _)| *k == prep_key) {
                     // hit: refresh LRU position
                     let hit = inner.resident.remove(pos);
@@ -339,8 +376,7 @@ impl GraphRegistry {
             if slot.epoch != epoch {
                 continue; // reloaded while preparing: redo on the new snapshot
             }
-            let prep_key =
-                PrepKey { graph: key.clone(), epoch, precision, b, shards };
+            let prep_key = PrepKey { graph: key.clone(), epoch, b, shards };
             if let Some(pos) = inner.resident.iter().position(|(k, _)| *k == prep_key) {
                 return Ok(inner.resident[pos].1.clone()); // lost the race
             }
@@ -389,7 +425,7 @@ impl GraphRegistry {
                 .resident
                 .iter()
                 .filter(|(k, _)| k.graph == key)
-                .map(|(k, _)| (k.precision, k.b, k.shards))
+                .map(|(k, _)| (k.b, k.shards))
                 .collect();
             (key, epoch, configs)
         };
@@ -398,10 +434,10 @@ impl GraphRegistry {
         let new_epoch = old_epoch + 1;
         let prepared: Vec<_> = configs
             .into_iter()
-            .map(|(precision, b, shards)| {
+            .map(|(b, shards)| {
                 let entry =
                     Arc::new(prepare_entry(key.clone(), new_epoch, graph.clone(), b, shards));
-                (precision, b, shards, entry)
+                (b, shards, entry)
             })
             .collect();
         // phase 3: atomic swap
@@ -418,8 +454,8 @@ impl GraphRegistry {
         slot.source = source;
         slot.reloads += 1;
         inner.resident.retain(|(k, _)| k.graph != key || k.epoch >= new_epoch);
-        for (precision, b, shards, entry) in prepared {
-            let prep_key = PrepKey { graph: key.clone(), epoch: new_epoch, precision, b, shards };
+        for (b, shards, entry) in prepared {
+            let prep_key = PrepKey { graph: key.clone(), epoch: new_epoch, b, shards };
             inner.resident.push((prep_key, entry));
         }
         while inner.resident.len() > self.capacity {
@@ -449,6 +485,7 @@ fn prepare_entry(
         graph,
         prepared,
         csr: OnceLock::new(),
+        values: Mutex::new(Vec::new()),
         batches_served: AtomicU64::new(0),
     }
 }
@@ -476,22 +513,22 @@ mod tests {
         assert_eq!(reg.default_graph().unwrap().as_ref(), "b");
         assert!(reg.set_default("zzz").is_err());
 
-        let e = reg.resolve("a", Precision::Fixed(26), 8, 1).unwrap();
+        let e = reg.resolve("a", 8, 1).unwrap();
         assert_eq!(e.name.as_ref(), "a");
         assert_eq!(e.epoch, 0);
         assert_eq!(e.num_vertices(), 32);
         assert_eq!(e.prepared.num_vertices, 32);
         assert_eq!(reg.resident(), 1);
         // same key → same Arc
-        let e2 = reg.resolve("a", Precision::Fixed(26), 8, 1).unwrap();
+        let e2 = reg.resolve("a", 8, 1).unwrap();
         assert!(Arc::ptr_eq(&e, &e2));
         assert_eq!(reg.resident(), 1);
         // different shards → different entry
-        let e3 = reg.resolve("a", Precision::Fixed(26), 8, 2).unwrap();
+        let e3 = reg.resolve("a", 8, 2).unwrap();
         assert!(!Arc::ptr_eq(&e, &e3));
         assert_eq!(e3.prepared.num_shards(), 2);
         assert_eq!(reg.resident(), 2);
-        assert!(reg.resolve("nope", Precision::Fixed(26), 8, 1).is_err());
+        assert!(reg.resolve("nope", 8, 1).is_err());
     }
 
     #[test]
@@ -521,11 +558,11 @@ mod tests {
         let reg = GraphRegistry::new(2);
         reg.register_graph("a", tiny(16, 1)).unwrap();
         for shards in [1usize, 2, 3] {
-            reg.resolve("a", Precision::Fixed(20), 8, shards).unwrap();
+            reg.resolve("a", 8, shards).unwrap();
         }
         assert_eq!(reg.resident(), 2, "capacity bounds resident entries");
         // the oldest (shards=1) was evicted: resolving it again re-prepares
-        let again = reg.resolve("a", Precision::Fixed(20), 8, 1).unwrap();
+        let again = reg.resolve("a", 8, 1).unwrap();
         assert_eq!(again.prepared.num_shards(), 1);
         assert_eq!(reg.resident(), 2);
     }
@@ -534,7 +571,7 @@ mod tests {
     fn reload_bumps_epoch_and_swaps_resident_entries() {
         let reg = GraphRegistry::new(4);
         reg.register_graph("a", tiny(32, 7)).unwrap();
-        let old = reg.resolve("a", Precision::Fixed(26), 8, 1).unwrap();
+        let old = reg.resolve("a", 8, 1).unwrap();
         assert_eq!(old.epoch, 0);
         old.record_batch_served();
 
@@ -546,7 +583,7 @@ mod tests {
 
         // the resident entry was re-prepared at the new epoch already
         assert_eq!(reg.resident(), 1);
-        let new = reg.resolve("a", Precision::Fixed(26), 8, 1).unwrap();
+        let new = reg.resolve("a", 8, 1).unwrap();
         assert_eq!(new.epoch, 1);
         assert_eq!(new.num_vertices(), 48);
         assert!(!Arc::ptr_eq(&old, &new));
@@ -565,10 +602,41 @@ mod tests {
     }
 
     #[test]
+    fn schedule_shared_across_precisions_with_per_precision_value_streams() {
+        // the PrepKey split: one resident schedule serves every precision;
+        // only the quantized value streams multiply per rung
+        let reg = GraphRegistry::new(4);
+        reg.register_graph("a", tiny(32, 5)).unwrap();
+        let e = reg.resolve("a", 8, 1).unwrap();
+        assert_eq!(reg.resident(), 1);
+        assert_eq!(e.resident_value_streams(), 0, "streams quantize on first use");
+
+        let v26 = e.values(Precision::Fixed(26));
+        let v20 = e.values(Precision::Fixed(20));
+        let vf = e.values(Precision::Float32);
+        assert_eq!(e.resident_value_streams(), 3);
+        assert_eq!(reg.resident(), 1, "still one schedule for three precisions");
+        // repeated requests share the cached Arc, not a fresh quantization
+        match (v26, e.values(Precision::Fixed(26))) {
+            (ValueStreams::Fixed(a), ValueStreams::Fixed(b)) => assert!(Arc::ptr_eq(&a, &b)),
+            other => panic!("fixed streams expected, got {other:?}"),
+        }
+        match vf {
+            ValueStreams::Float(v) => assert_eq!(v.len(), 1, "one stream per shard"),
+            other => panic!("float streams expected, got {other:?}"),
+        }
+        assert_eq!(e.resident_value_streams(), 3, "cache hit adds nothing");
+        match v20 {
+            ValueStreams::Fixed(v) => assert_eq!(v.len(), 1),
+            other => panic!("fixed streams expected, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn csr_is_lazily_shared() {
         let reg = GraphRegistry::default();
         reg.register_graph("a", tiny(24, 9)).unwrap();
-        let e = reg.resolve("a", Precision::Float32, 8, 1).unwrap();
+        let e = reg.resolve("a", 8, 1).unwrap();
         let c1 = e.csr();
         let c2 = e.csr();
         assert!(Arc::ptr_eq(&c1, &c2));

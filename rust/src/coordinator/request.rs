@@ -1,5 +1,6 @@
 //! Request/response types of the serving API.
 
+use crate::fixed::AccuracyClass;
 use crate::graph::VertexId;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -27,6 +28,9 @@ pub struct PprRequest {
     /// The graph this query runs on. Requests never batch across graphs
     /// (one personalization space per batch — DESIGN.md §6).
     pub graph: Arc<str>,
+    /// The accuracy class this query runs under (DESIGN.md §7). Requests
+    /// never batch across classes — a batch is one graph × one ladder.
+    pub class: AccuracyClass,
     /// Personalization vertex.
     pub vertex: VertexId,
     /// How many top-ranked vertices to return.
@@ -45,6 +49,7 @@ impl PprRequest {
         Self {
             id,
             graph: default_graph_key(),
+            class: AccuracyClass::Static,
             vertex,
             top_n,
             deadline: None,
@@ -55,6 +60,12 @@ impl PprRequest {
     /// Route the request to a named graph.
     pub fn with_graph(mut self, graph: Arc<str>) -> Self {
         self.graph = graph;
+        self
+    }
+
+    /// Run the request under an accuracy class.
+    pub fn with_class(mut self, class: AccuracyClass) -> Self {
+        self.class = class;
         self
     }
 
@@ -86,6 +97,8 @@ pub struct PprResponse {
     pub id: u64,
     /// The graph the query ran on.
     pub graph: Arc<str>,
+    /// The accuracy class the query ran under.
+    pub class: AccuracyClass,
     /// Echo of the personalization vertex.
     pub vertex: VertexId,
     /// Top-N vertices, descending score.
@@ -165,6 +178,14 @@ mod tests {
         let r = PprRequest::new(7, 3, 5).with_graph(key.clone());
         assert_eq!(r.graph.as_ref(), "eu-market");
         assert!(Arc::ptr_eq(&r.graph, &key), "interned key is shared, not copied");
+    }
+
+    #[test]
+    fn request_carries_accuracy_class() {
+        let r = PprRequest::new(1, 2, 10);
+        assert_eq!(r.class, AccuracyClass::Static, "unclassed requests stay static");
+        let r = r.with_class(AccuracyClass::Balanced);
+        assert_eq!(r.class, AccuracyClass::Balanced);
     }
 
     #[test]

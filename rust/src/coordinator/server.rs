@@ -15,7 +15,7 @@
 //!   [`super::builder::EngineBuilder::serve_registry`]): workers resolve
 //!   each batch's graph against a [`GraphRegistry`] and swap engine state
 //!   per batch, keeping a small per-worker engine cache keyed by
-//!   `(graph, epoch)` so steady-state serving builds nothing — a
+//!   `(graph, epoch, class)` so steady-state serving builds nothing — a
 //!   hot-swapped [`GraphRegistry::reload`] shows up as an epoch bump and
 //!   the worker rebinds between batches without dropping anything.
 //!
@@ -34,6 +34,7 @@ use super::registry::{GraphEntry, GraphRegistry};
 use super::request::{default_graph_key, PprRequest, PprResponse};
 use super::score_block::ScoreBlock;
 use super::stats::{ServerStats, StatsSnapshot};
+use crate::fixed::AccuracyClass;
 use crate::graph::VertexId;
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -47,11 +48,17 @@ pub struct ServerConfig {
     pub batch_timeout: Duration,
     /// Top-N returned when a submission asks for `top_n == 0`.
     pub default_top_n: usize,
+    /// Accuracy class applied to submissions that don't pick one.
+    pub default_class: AccuracyClass,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { batch_timeout: Duration::from_millis(5), default_top_n: 10 }
+        Self {
+            batch_timeout: Duration::from_millis(5),
+            default_top_n: 10,
+            default_class: AccuracyClass::Static,
+        }
     }
 }
 
@@ -61,6 +68,7 @@ impl ServerConfig {
         Self {
             batch_timeout: Duration::from_millis(cfg.batch_timeout_ms),
             default_top_n: cfg.top_n,
+            default_class: cfg.accuracy_class,
         }
     }
 }
@@ -77,6 +85,7 @@ type PerGraphStats = Mutex<HashMap<Arc<str>, Arc<ServerStats>>>;
 pub struct Ticket {
     id: u64,
     graph: Arc<str>,
+    class: AccuracyClass,
     vertex: VertexId,
     deadline: Option<Instant>,
     rx: mpsc::Receiver<Result<PprResponse, String>>,
@@ -91,6 +100,11 @@ impl Ticket {
     /// The graph this ticket's query runs on.
     pub fn graph(&self) -> &str {
         &self.graph
+    }
+
+    /// The accuracy class this ticket's query runs under.
+    pub fn class(&self) -> AccuracyClass {
+        self.class
     }
 
     /// The personalization vertex this ticket tracks.
@@ -156,12 +170,16 @@ pub struct Server {
     next_id: std::sync::atomic::AtomicU64,
     routing: Routing,
     default_top_n: usize,
+    default_class: AccuracyClass,
 }
 
-/// Per-worker cache of built engines, keyed by `(graph, epoch)`. A
-/// reload bumps the epoch, so the stale engine is dropped and rebuilt
+/// Per-worker cache of built engines, keyed by `(graph, epoch, class)`.
+/// A reload bumps the epoch, so the stale engine is dropped and rebuilt
 /// from the new entry on the next batch of that graph; steady-state
 /// batches reuse the cached engine (zero construction on the hot path).
+/// Accuracy classes get their own engines (a ladder stack vs the static
+/// engine), all bound to the **same** registry entry — the schedule is
+/// shared, only the per-precision value streams differ (DESIGN.md §7).
 struct EngineCache {
     builder: EngineBuilder,
     registry: Arc<GraphRegistry>,
@@ -173,27 +191,34 @@ struct EngineCache {
     capacity: usize,
 }
 
-/// One cached engine: `(graph, epoch, engine)`.
-type CachedEngine = (Arc<str>, u64, Box<dyn PprEngine + Send>);
+/// One cached engine: `(graph, epoch, class, engine)`.
+type CachedEngine = (Arc<str>, u64, AccuracyClass, Box<dyn PprEngine + Send>);
 
 impl EngineCache {
-    /// Resolve the engine + registry entry for `graph`; returns the index
-    /// into `self.engines` (valid until the next call).
-    fn resolve(&mut self, graph: &Arc<str>) -> anyhow::Result<(usize, Arc<GraphEntry>)> {
+    /// Resolve the engine + registry entry for `(graph, class)`; returns
+    /// the index into `self.engines` (valid until the next call).
+    fn resolve(
+        &mut self,
+        graph: &Arc<str>,
+        class: AccuracyClass,
+    ) -> anyhow::Result<(usize, Arc<GraphEntry>)> {
         let cfg = self.builder.run_config();
-        let entry = self.registry.resolve(graph, cfg.precision, cfg.b, self.shards)?;
+        let entry = self.registry.resolve(graph, cfg.b, self.shards)?;
         if let Some(pos) = self
             .engines
             .iter()
-            .position(|(g, epoch, _)| g == graph && *epoch == entry.epoch)
+            .position(|(g, epoch, c, _)| g == graph && *epoch == entry.epoch && *c == class)
         {
             let hit = self.engines.remove(pos);
             self.engines.push(hit);
         } else {
-            // drop stale epochs of this graph, then build against the entry
-            self.engines.retain(|(g, _, _)| g != graph);
-            let engine = self.builder.build_entry(&entry)?;
-            self.engines.push((graph.clone(), entry.epoch, engine));
+            // drop stale epochs of this graph across *all* classes — a
+            // reload invalidated them, and keeping them would pin the old
+            // snapshot's schedule and value streams in worker memory —
+            // then build against the entry
+            self.engines.retain(|(g, epoch, _, _)| !(g == graph && *epoch != entry.epoch));
+            let engine = self.builder.build_entry_class(&entry, class)?;
+            self.engines.push((graph.clone(), entry.epoch, class, engine));
             while self.engines.len() > self.capacity {
                 self.engines.remove(0);
             }
@@ -258,6 +283,7 @@ impl Server {
             next_id: std::sync::atomic::AtomicU64::new(1),
             routing: Routing::Single { graph, num_vertices },
             default_top_n: cfg.default_top_n,
+            default_class: cfg.default_class,
         }
     }
 
@@ -286,12 +312,15 @@ impl Server {
                 let pending = pending.clone();
                 let stats = stats.clone();
                 let per_graph = per_graph.clone();
+                // capacity scales with the class dimension of the
+                // cache key, so graphs × classes under steady traffic
+                // don't churn through eviction/rebuild on the hot path
                 let mut cache = EngineCache {
                     builder: builder.clone(),
                     registry: registry.clone(),
                     shards,
                     engines: Vec::new(),
-                    capacity: registry.capacity().max(1),
+                    capacity: registry.capacity().max(1) * AccuracyClass::all().len(),
                 };
                 std::thread::Builder::new()
                     .name(format!("ppr-worker-{widx}"))
@@ -322,6 +351,7 @@ impl Server {
             next_id: std::sync::atomic::AtomicU64::new(1),
             routing: Routing::Registry { registry },
             default_top_n: cfg.default_top_n,
+            default_class: cfg.default_class,
         })
     }
 
@@ -351,9 +381,9 @@ impl Server {
         stats: &ServerStats,
         gstats: &ServerStats,
     ) {
-        match cache.resolve(&batch.graph) {
+        match cache.resolve(&batch.graph, batch.class) {
             Ok((idx, entry)) => {
-                let engine = &mut *cache.engines[idx].2;
+                let engine = &mut *cache.engines[idx].3;
                 let served =
                     Self::serve_batch(engine, block, batch.requests, pending, &[stats, gstats]);
                 if served {
@@ -422,7 +452,24 @@ impl Server {
         }
         match engine.run_batch(&lanes, block) {
             Ok(()) => {
+                // re-check deadlines at respond time: a request whose
+                // deadline passed DURING the solve is a deadline miss,
+                // not a success — its client has already timed out, and
+                // reporting it served would hide the overrun from the
+                // miss ledger
+                let respond_at = Instant::now();
                 for (lane, req) in live.iter().enumerate() {
+                    if req.expired(respond_at) {
+                        for s in stats {
+                            s.record_deadline_miss();
+                        }
+                        Self::respond(
+                            pending,
+                            req.id,
+                            Err("deadline exceeded during solve".to_string()),
+                        );
+                        continue;
+                    }
                     let ranking = block.top_n(lane, req.top_n);
                     let queue_time = batch_start.duration_since(req.enqueued_at);
                     let total_time = req.enqueued_at.elapsed();
@@ -432,6 +479,7 @@ impl Server {
                     let resp = PprResponse {
                         id: req.id,
                         graph: req.graph.clone(),
+                        class: req.class,
                         vertex: req.vertex,
                         ranking,
                         iterations: block.iterations(),
@@ -463,23 +511,40 @@ impl Server {
     /// Submit against the default graph with an optional completion
     /// deadline (relative to now). The deadline bounds both queue time
     /// and [`Ticket::wait`]; `top_n == 0` falls back to the server's
-    /// configured default.
+    /// configured default. Runs under the server's default accuracy
+    /// class.
     pub fn submit_with(
         &self,
         vertex: VertexId,
         top_n: usize,
         timeout: Option<Duration>,
     ) -> Ticket {
+        self.submit_with_class(vertex, top_n, timeout, self.default_class)
+    }
+
+    /// Submit against the default graph under an explicit accuracy class
+    /// (DESIGN.md §7): the request batches only with same-class requests
+    /// and runs on that class's precision ladder.
+    pub fn submit_with_class(
+        &self,
+        vertex: VertexId,
+        top_n: usize,
+        timeout: Option<Duration>,
+        class: AccuracyClass,
+    ) -> Ticket {
         match &self.routing {
             Routing::Single { graph, num_vertices } => {
                 let (graph, nv) = (graph.clone(), *num_vertices);
-                self.submit_routed(graph, nv, vertex, top_n, timeout)
+                self.submit_routed(graph, nv, vertex, top_n, timeout, class)
             }
             // read the default live: set_default / late registration apply
             Routing::Registry { registry } => match registry.default_route() {
-                Some((graph, nv)) => self.submit_routed(graph, nv, vertex, top_n, timeout),
+                Some((graph, nv)) => {
+                    self.submit_routed(graph, nv, vertex, top_n, timeout, class)
+                }
                 None => self.reject(
                     default_graph_key(),
+                    class,
                     vertex,
                     timeout,
                     "no default graph registered".to_string(),
@@ -490,6 +555,7 @@ impl Server {
 
     /// Submit a query against a named graph (registry-backed servers; a
     /// single-graph server accepts only its own implicit graph name).
+    /// Runs under the server's default accuracy class.
     pub fn submit_to(
         &self,
         graph: &str,
@@ -497,14 +563,27 @@ impl Server {
         top_n: usize,
         timeout: Option<Duration>,
     ) -> Ticket {
+        self.submit_to_class(graph, vertex, top_n, timeout, self.default_class)
+    }
+
+    /// Submit against a named graph under an explicit accuracy class.
+    pub fn submit_to_class(
+        &self,
+        graph: &str,
+        vertex: VertexId,
+        top_n: usize,
+        timeout: Option<Duration>,
+        class: AccuracyClass,
+    ) -> Ticket {
         match &self.routing {
             Routing::Single { graph: own, num_vertices } => {
                 if own.as_ref() == graph {
                     let (own, nv) = (own.clone(), *num_vertices);
-                    self.submit_routed(own, nv, vertex, top_n, timeout)
+                    self.submit_routed(own, nv, vertex, top_n, timeout, class)
                 } else {
                     self.reject(
                         Arc::from(graph),
+                        class,
                         vertex,
                         timeout,
                         format!("unknown graph {graph} (single-graph server)"),
@@ -512,9 +591,10 @@ impl Server {
                 }
             }
             Routing::Registry { registry } => match registry.route(graph) {
-                Some((key, nv)) => self.submit_routed(key, nv, vertex, top_n, timeout),
+                Some((key, nv)) => self.submit_routed(key, nv, vertex, top_n, timeout, class),
                 None => self.reject(
                     Arc::from(graph),
+                    class,
                     vertex,
                     timeout,
                     format!("unknown graph {graph}"),
@@ -527,6 +607,7 @@ impl Server {
     fn reject(
         &self,
         graph: Arc<str>,
+        class: AccuracyClass,
         vertex: VertexId,
         timeout: Option<Duration>,
         error: String,
@@ -535,7 +616,7 @@ impl Server {
         let deadline = timeout.map(|t| Instant::now() + t);
         let (tx, rx) = mpsc::channel();
         let _ = tx.send(Err(error));
-        Ticket { id, graph, vertex, deadline, rx }
+        Ticket { id, graph, class, vertex, deadline, rx }
     }
 
     /// Enqueue a validated route: `graph` is the interned key and
@@ -548,10 +629,12 @@ impl Server {
         vertex: VertexId,
         top_n: usize,
         timeout: Option<Duration>,
+        class: AccuracyClass,
     ) -> Ticket {
         if vertex as usize >= num_vertices {
             return self.reject(
                 graph,
+                class,
                 vertex,
                 timeout,
                 format!("vertex {vertex} out of range (|V|={num_vertices})"),
@@ -562,11 +645,13 @@ impl Server {
         let deadline = timeout.map(|t| Instant::now() + t);
         let top_n = if top_n == 0 { self.default_top_n } else { top_n };
         let (tx, rx) = mpsc::channel();
-        let ticket = Ticket { id, graph: graph.clone(), vertex, deadline, rx };
+        let ticket = Ticket { id, graph: graph.clone(), class, vertex, deadline, rx };
 
         self.pending.lock().unwrap().insert(id, tx);
-        let req =
-            PprRequest::new(id, vertex, top_n).with_graph(graph).with_deadline(deadline);
+        let req = PprRequest::new(id, vertex, top_n)
+            .with_graph(graph)
+            .with_class(class)
+            .with_deadline(deadline);
         if !self.batcher.submit(req) {
             Self::respond(&self.pending, id, Err("server shutting down".to_string()));
         }
@@ -576,6 +661,16 @@ impl Server {
     /// Submit against the default graph and block for the response.
     pub fn query(&self, vertex: VertexId, top_n: usize) -> Result<PprResponse, String> {
         self.submit(vertex, top_n).wait()
+    }
+
+    /// Submit against the default graph under an accuracy class and block.
+    pub fn query_class(
+        &self,
+        vertex: VertexId,
+        top_n: usize,
+        class: AccuracyClass,
+    ) -> Result<PprResponse, String> {
+        self.submit_with_class(vertex, top_n, None, class).wait()
     }
 
     /// Submit against a named graph and block for the response.
@@ -816,7 +911,7 @@ mod tests {
         for i in 0..8 {
             assert!(server.query_graph("ws", i, 2).is_ok());
         }
-        let before = registry.resolve("ws", Precision::Fixed(26), 8, 1).unwrap();
+        let before = registry.resolve("ws", 8, 1).unwrap();
         assert!(before.batches_served() > 0, "old epoch carried traffic");
 
         // swap in a *different* snapshot under the same name
@@ -832,7 +927,7 @@ mod tests {
         // vertex 280 only exists in the new snapshot
         let resp = server.query_graph("ws", 280, 2).unwrap();
         assert_eq!(resp.ranking[0].vertex, 280);
-        let after = registry.resolve("ws", Precision::Fixed(26), 8, 1).unwrap();
+        let after = registry.resolve("ws", 8, 1).unwrap();
         assert_eq!(after.epoch, before.epoch + 1);
         assert!(after.batches_served() > 0, "new epoch serves");
         assert_eq!(server.stats().snapshot().errors, 0);
@@ -843,6 +938,87 @@ mod tests {
     fn registry_server_num_vertices_tracks_default() {
         let (server, _registry) = start_registry_server(1, 2);
         assert_eq!(server.num_vertices(), 256, "default graph is ws (|V|=256)");
+        server.shutdown();
+    }
+
+    /// Engine that sleeps through every batch — drives the mid-solve
+    /// deadline-expiry path deterministically.
+    struct SlowEngine {
+        num_vertices: usize,
+        solve: Duration,
+    }
+
+    impl PprEngine for SlowEngine {
+        fn max_kappa(&self) -> usize {
+            4
+        }
+        fn num_vertices(&self) -> usize {
+            self.num_vertices
+        }
+        fn run_batch(
+            &mut self,
+            personalization: &[crate::graph::VertexId],
+            out: &mut ScoreBlock,
+        ) -> anyhow::Result<()> {
+            self.validate_batch(personalization)?;
+            std::thread::sleep(self.solve);
+            out.reset(personalization.len(), self.num_vertices);
+            for (lane, &pv) in personalization.iter().enumerate() {
+                out.lane_mut(lane)[pv as usize] = 1.0;
+            }
+            out.set_iterations(1);
+            Ok(())
+        }
+        fn describe(&self) -> String {
+            "slow[test]".into()
+        }
+    }
+
+    #[test]
+    fn deadline_expiring_mid_solve_counts_as_miss_not_success() {
+        // regression: expiry used to be checked only at batch start, so a
+        // request whose deadline passed DURING the solve came back as a
+        // "success" the client never saw
+        let engine = SlowEngine { num_vertices: 16, solve: Duration::from_millis(80) };
+        let cfg = ServerConfig { batch_timeout: Duration::from_millis(1), ..Default::default() };
+        let server = Server::start(vec![Box::new(engine)], cfg);
+        // generous enough to survive the ~1 ms queue, far too tight for
+        // the 80 ms solve
+        let err =
+            server.submit_with(3, 2, Some(Duration::from_millis(30))).wait().unwrap_err();
+        assert!(err.contains("deadline"), "{err}");
+        // the worker finishes the solve after the client timed out; wait
+        // for it to file the miss
+        let gate = Instant::now() + Duration::from_secs(10);
+        while server.stats().snapshot().deadline_misses == 0 {
+            assert!(Instant::now() < gate, "mid-solve expiry never recorded");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let snap = server.stats().snapshot();
+        assert_eq!(snap.deadline_misses, 1);
+        assert_eq!(snap.requests, 0, "an expired request is not a served request");
+        assert_eq!(snap.errors, 0, "a miss is not an engine error");
+        server.shutdown();
+    }
+
+    #[test]
+    fn accuracy_classes_route_and_answer_on_registry_server() {
+        let (server, _registry) = start_registry_server(1, 4);
+        for class in AccuracyClass::all() {
+            let ticket = server.submit_with_class(7, 3, None, class);
+            assert_eq!(ticket.class(), class);
+            let resp = ticket.wait().unwrap();
+            assert_eq!(resp.class, class);
+            assert_eq!(resp.ranking[0].vertex, 7, "{class}");
+        }
+        // named-graph routing composes with classes
+        let resp = server
+            .submit_to_class("er", 9, 2, None, AccuracyClass::Balanced)
+            .wait()
+            .unwrap();
+        assert_eq!(resp.graph.as_ref(), "er");
+        assert_eq!(resp.class, AccuracyClass::Balanced);
+        assert_eq!(resp.ranking[0].vertex, 9);
         server.shutdown();
     }
 

@@ -81,21 +81,57 @@ impl FixedFormat {
     /// mode and saturating to `[0, max_raw]`. Negative inputs clamp to 0
     /// (the format is unsigned; PPR values are non-negative by
     /// construction).
+    ///
+    /// Exact for every width up to 63 bits: scaling by `2^frac_bits` only
+    /// shifts the exponent (no rounding), the tie test reads the true
+    /// fractional part instead of adding `0.5` (which is absorbed once the
+    /// scaled value exceeds 2^52), and saturation compares in the integer
+    /// domain — `max_raw() as f64` rounds *up* to `2^total_bits` for
+    /// widths above 53 bits, which the old float-domain compare leaned on.
     #[inline]
     pub fn quantize(&self, x: f64) -> u64 {
         if x <= 0.0 || x.is_nan() {
             return 0;
         }
-        let scaled = x * (1u64 << self.frac_bits) as f64;
+        // exact: multiplying by a power of two cannot round (and overflow
+        // goes to +inf, which the saturating cast below maps to max_raw)
+        let scaled = x * (1u128 << self.frac_bits) as f64;
+        let floor = scaled.floor();
         let raw = match self.rounding {
-            RoundingMode::Truncate => scaled.floor(),
-            RoundingMode::Nearest => (scaled + 0.5).floor(),
+            RoundingMode::Truncate => floor,
+            // ties away from zero; `scaled - floor` is exact (both share
+            // an exponent window), unlike `scaled + 0.5` above 2^52
+            RoundingMode::Nearest => {
+                if scaled - floor >= 0.5 {
+                    floor + 1.0
+                } else {
+                    floor
+                }
+            }
         };
-        if raw >= self.max_raw() as f64 {
-            self.max_raw()
+        // integer-domain saturation: `raw` is an exact integer-valued f64,
+        // so the saturating u128 cast loses nothing
+        (raw as u128).min(self.max_raw() as u128) as u64
+    }
+
+    /// Convert a raw word of this format into `to`'s format — the
+    /// precision ladder's mid-run re-quantization. Widening
+    /// (`to.frac_bits >= self.frac_bits`) is an exact left shift (with
+    /// integer-domain saturation for pathological int-bit shrinks);
+    /// narrowing applies `to`'s rounding mode, exactly like quantizing
+    /// the represented value from scratch.
+    #[inline]
+    pub fn requantize(&self, to: &FixedFormat, raw: u64) -> u64 {
+        let wide = if to.frac_bits >= self.frac_bits {
+            (raw as u128) << (to.frac_bits - self.frac_bits)
         } else {
-            raw as u64
-        }
+            let shift = self.frac_bits - to.frac_bits;
+            match to.rounding {
+                RoundingMode::Truncate => (raw >> shift) as u128,
+                RoundingMode::Nearest => ((raw as u128) + (1u128 << (shift - 1))) >> shift,
+            }
+        };
+        wide.min(to.max_raw() as u128) as u64
     }
 
     /// Convert a raw word back to f64 (exact: widths ≤ 53 fractional bits
@@ -187,5 +223,145 @@ mod tests {
     #[should_panic(expected = "width")]
     fn too_wide_rejected() {
         FixedFormat::new(1, 63, RoundingMode::Truncate);
+    }
+
+    /// Exact reference quantizer built on the f64 bit decomposition
+    /// (`x = mant · 2^e`) and pure integer arithmetic — independent of the
+    /// production path, which scales in f64 and floors.
+    fn exact_reference(fmt: &FixedFormat, x: f64) -> u64 {
+        if x <= 0.0 || x.is_nan() {
+            return 0;
+        }
+        let bits = x.to_bits();
+        let biased = ((bits >> 52) & 0x7ff) as i64;
+        let frac = bits & ((1u64 << 52) - 1);
+        let (mant, exp) =
+            if biased == 0 { (frac, -1074i64) } else { (frac | (1u64 << 52), biased - 1075) };
+        if mant == 0 {
+            return 0;
+        }
+        let max = fmt.max_raw();
+        // raw_exact = mant * 2^shift
+        let shift = exp + fmt.frac_bits as i64;
+        if shift >= 0 {
+            if shift >= 75 {
+                return max; // mant ≥ 1, so mant·2^75 > 2^63 > max_raw
+            }
+            return ((mant as u128) << shift).min(max as u128) as u64;
+        }
+        let s = (-shift) as u32;
+        if s >= 54 {
+            return 0; // mant < 2^53 ≤ 2^(s-1): below half an ulp
+        }
+        let raw = match fmt.rounding {
+            RoundingMode::Truncate => mant >> s,
+            RoundingMode::Nearest => (((mant as u128) + (1u128 << (s - 1))) >> s) as u64,
+        };
+        raw.min(max)
+    }
+
+    #[test]
+    fn quantize_matches_exact_reference_across_all_widths() {
+        // regression for the float-domain saturation compare: for widths
+        // above 53 bits `max_raw() as f64` rounds up to 2^total_bits, and
+        // `Nearest`'s `scaled + 0.5` loses the tie increment above 2^52
+        let mut rng = crate::util::rng::Xoshiro256::seeded(0x51AB);
+        for w in 2u32..=63 {
+            for rounding in [RoundingMode::Truncate, RoundingMode::Nearest] {
+                let fmt = FixedFormat::new(1, w - 1, rounding);
+                let ulp = fmt.ulp();
+                let mut probe = |x: f64| {
+                    assert_eq!(
+                        fmt.quantize(x),
+                        exact_reference(&fmt, x),
+                        "w={w} {rounding:?} x={x:e}"
+                    );
+                };
+                // the near-max band where the old compare mis-saturated
+                for k in 0..8 {
+                    probe(fmt.max_value() - k as f64 * ulp);
+                    probe(fmt.max_value() + k as f64 * ulp);
+                }
+                probe(2.0 - ulp);
+                probe(2.0);
+                probe(1.0);
+                probe(1.0 - ulp / 2.0);
+                probe(ulp * 0.49999);
+                probe(ulp * 0.5);
+                probe(ulp * 1.5);
+                probe(f64::MIN_POSITIVE);
+                probe(5e-324); // smallest subnormal
+                probe(f64::MAX);
+                probe(f64::INFINITY);
+                for _ in 0..64 {
+                    // random mantissas across the whole value range
+                    let m = rng.next_u64() >> 11; // 53-bit mantissa
+                    let e = (rng.next_u64() % 80) as i32 - 70; // 2^-70 .. 2^9
+                    probe(m as f64 * (2f64).powi(e));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_near_max_saturates_exactly_at_wide_widths() {
+        // w=63: max_raw = 2^63 − 1, whose f64 image is 2^63 (rounded up)
+        let fmt = FixedFormat::new(1, 62, RoundingMode::Truncate);
+        assert_eq!(fmt.quantize(fmt.max_value()), fmt.max_raw());
+        assert_eq!(fmt.quantize(2.0), fmt.max_raw());
+        assert_eq!(fmt.quantize(1e300), fmt.max_raw());
+        // a value one f64-ulp below max_value() must NOT saturate
+        let below = fmt.max_value() - fmt.max_value().ulp_gap();
+        assert!(fmt.quantize(below) < fmt.max_raw());
+    }
+
+    /// Distance to the next representable f64 below (test helper).
+    trait UlpGap {
+        fn ulp_gap(self) -> f64;
+    }
+    impl UlpGap for f64 {
+        fn ulp_gap(self) -> f64 {
+            self - f64::from_bits(self.to_bits() - 1)
+        }
+    }
+
+    #[test]
+    fn nearest_tie_survives_above_2_pow_52() {
+        // a true half-ulp tie at high frac counts still rounds away from
+        // zero: 3·2^-61 scales to 1.5 under Q1.60
+        let fmt = FixedFormat::new(1, 60, RoundingMode::Nearest);
+        assert_eq!(fmt.quantize(3.0 * (2f64).powi(-61)), 2);
+        // regression: a scaled value that is an exact *odd* integer in
+        // [2^52, 2^53) must not pick up a spurious +1 — the old
+        // `(scaled + 0.5).floor()` hit a round-to-even halfway case there
+        let fmt53 = FixedFormat::new(1, 53, RoundingMode::Nearest);
+        let x = 0.5 + (2f64).powi(-53); // scales to 2^52 + 1 exactly
+        assert_eq!(fmt53.quantize(x), (1u64 << 52) + 1);
+    }
+
+    #[test]
+    fn requantize_widening_is_exact_and_narrowing_truncates() {
+        let narrow = FixedFormat::paper(20);
+        let wide = FixedFormat::paper(26);
+        let mut x = 0.00317;
+        while x < 1.9 {
+            let raw = narrow.quantize(x);
+            let up = narrow.requantize(&wide, raw);
+            // widening preserves the represented value exactly
+            assert_eq!(wide.to_f64(up), narrow.to_f64(raw), "x={x}");
+            // and narrowing back round-trips (truncation of exact words)
+            assert_eq!(wide.requantize(&narrow, up), raw, "x={x}");
+            x += 0.0427;
+        }
+        // narrowing drops low bits with the target's rounding mode
+        let w = wide.quantize(5.0 * wide.ulp() + 3.0 * narrow.ulp());
+        assert_eq!(wide.requantize(&narrow, w), 3);
+        // widening saturates in the integer domain if the target is
+        // narrower in integer range than the source value needs
+        let tall = FixedFormat::new(2, 20, RoundingMode::Truncate);
+        let short = FixedFormat::new(1, 21, RoundingMode::Truncate);
+        let three = tall.quantize(3.0);
+        assert_eq!(short.requantize(&short, three), three);
+        assert_eq!(tall.requantize(&short, three), short.max_raw());
     }
 }

@@ -100,6 +100,163 @@ impl std::fmt::Display for Precision {
     }
 }
 
+/// Serving accuracy class: which precision **ladder** a request runs on
+/// (DESIGN.md §7). The paper's headline — reduced precision gives
+/// "precise control over the accuracy of the results" — becomes a
+/// per-request knob: a run starts on the narrowest rung and hot-switches
+/// to wider ones when its update norm stalls above the class tolerance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum AccuracyClass {
+    /// No ladder: the engine's single configured precision and iteration
+    /// budget, exactly the pre-ladder behaviour (the back-compat default).
+    #[default]
+    Static,
+    /// Narrow rungs only (Q1.15 → Q1.19), loose tolerance — minimum
+    /// latency for "good enough" rankings.
+    Fast,
+    /// Ladder up to the paper's production width (Q1.15 → Q1.19 → Q1.25)
+    /// at the paper's 1e-6 convergence tolerance.
+    Balanced,
+    /// Ladder all the way to IEEE f32 (Q1.15 → Q1.25 → F32): matches the
+    /// float reference within the paper's accuracy tolerance.
+    Exact,
+}
+
+impl AccuracyClass {
+    /// Every class, Static first.
+    pub fn all() -> [AccuracyClass; 4] {
+        [AccuracyClass::Static, AccuracyClass::Fast, AccuracyClass::Balanced, AccuracyClass::Exact]
+    }
+
+    /// Canonical label ("static"/"fast"/"balanced"/"exact").
+    pub fn label(&self) -> &'static str {
+        match self {
+            AccuracyClass::Static => "static",
+            AccuracyClass::Fast => "fast",
+            AccuracyClass::Balanced => "balanced",
+            AccuracyClass::Exact => "exact",
+        }
+    }
+
+    /// Parse a CLI/config label.
+    pub fn parse(s: &str) -> Option<AccuracyClass> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "static" => Some(AccuracyClass::Static),
+            "fast" => Some(AccuracyClass::Fast),
+            "balanced" => Some(AccuracyClass::Balanced),
+            "exact" => Some(AccuracyClass::Exact),
+            _ => None,
+        }
+    }
+
+    /// The precision ladder this class maps to (`None` for `Static`,
+    /// which keeps the engine's single configured precision).
+    pub fn ladder(&self) -> Option<LadderSpec> {
+        match self {
+            AccuracyClass::Static => None,
+            AccuracyClass::Fast => Some(LadderSpec {
+                rungs: vec![Precision::Fixed(16), Precision::Fixed(20)],
+                tolerance: 1e-4,
+                stall_ratio: LadderSpec::DEFAULT_STALL_RATIO,
+                max_iterations: 120,
+            }),
+            AccuracyClass::Balanced => Some(LadderSpec {
+                rungs: vec![Precision::Fixed(16), Precision::Fixed(20), Precision::Fixed(26)],
+                tolerance: 1e-6,
+                stall_ratio: LadderSpec::DEFAULT_STALL_RATIO,
+                max_iterations: 200,
+            }),
+            // 1e-8 sits below Q1.25's smallest nonzero norm (2^-25), so
+            // the exact class always climbs to the float rung
+            AccuracyClass::Exact => Some(LadderSpec {
+                rungs: vec![Precision::Fixed(16), Precision::Fixed(26), Precision::Float32],
+                tolerance: 1e-8,
+                stall_ratio: LadderSpec::DEFAULT_STALL_RATIO,
+                max_iterations: 240,
+            }),
+        }
+    }
+}
+
+impl std::fmt::Display for AccuracyClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// A precision ladder: the rung schedule and escalation policy of one
+/// accuracy class. Rung widths must strictly widen and `Float32` may only
+/// terminate a ladder — escalation is monotone by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LadderSpec {
+    /// Rung precisions, narrowest first (e.g. Q1.15 → Q1.25 → F32).
+    pub rungs: Vec<Precision>,
+    /// Target on the per-iteration update norm: a run finishes as soon as
+    /// any rung reaches it.
+    pub tolerance: f64,
+    /// Escalation trigger: a rung stalls when its update norm fails to
+    /// shrink below `stall_ratio ×` the previous iteration's norm for two
+    /// consecutive iterations while still above `tolerance` (healthy PPR
+    /// decay contracts by ≈ α per iteration, so α < stall_ratio < 1
+    /// separates progress from the quantization floor; the two-in-a-row
+    /// requirement rides out transient 2-norm bumps), or when the norm
+    /// hits exactly 0 — a fixed point of the rung's arithmetic.
+    pub stall_ratio: f64,
+    /// Total iteration budget across all rungs.
+    pub max_iterations: usize,
+}
+
+impl LadderSpec {
+    /// Default escalation trigger (α = 0.85 < 0.95 < 1).
+    pub const DEFAULT_STALL_RATIO: f64 = 0.95;
+
+    /// A single-rung ladder: runs identically to the static engine of
+    /// that precision under the same solver configuration.
+    pub fn single(precision: Precision, tolerance: f64, max_iterations: usize) -> Self {
+        Self {
+            rungs: vec![precision],
+            tolerance,
+            stall_ratio: Self::DEFAULT_STALL_RATIO,
+            max_iterations,
+        }
+    }
+
+    /// Check the rung-schedule invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rungs.is_empty() {
+            return Err("ladder needs at least one rung".into());
+        }
+        if self.tolerance.is_nan() || self.tolerance <= 0.0 {
+            return Err(format!("ladder tolerance must be positive, got {}", self.tolerance));
+        }
+        if self.stall_ratio.is_nan() || self.stall_ratio <= 0.0 || self.stall_ratio >= 1.0 {
+            return Err(format!("stall_ratio must be in (0, 1), got {}", self.stall_ratio));
+        }
+        if self.max_iterations == 0 {
+            return Err("ladder needs a positive iteration budget".into());
+        }
+        for (i, pair) in self.rungs.windows(2).enumerate() {
+            match (pair[0], pair[1]) {
+                (Precision::Fixed(a), Precision::Fixed(b)) if b > a => {}
+                (Precision::Fixed(_), Precision::Float32) => {}
+                (a, b) => {
+                    return Err(format!(
+                        "rung {} → {}: ladders must strictly widen ({a} → {b})",
+                        i,
+                        i + 1
+                    ))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Labels of the rung schedule, e.g. `"16b→26b→F32"`.
+    pub fn describe(&self) -> String {
+        self.rungs.iter().map(|p| p.label()).collect::<Vec<_>>().join("→")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +297,53 @@ mod tests {
         for p in Precision::paper_sweep() {
             assert_eq!(Precision::parse(&p.label()), Some(p));
         }
+    }
+
+    #[test]
+    fn accuracy_class_labels_roundtrip() {
+        for c in AccuracyClass::all() {
+            assert_eq!(AccuracyClass::parse(c.label()), Some(c));
+        }
+        assert_eq!(AccuracyClass::parse("BALANCED"), Some(AccuracyClass::Balanced));
+        assert_eq!(AccuracyClass::parse("turbo"), None);
+        assert_eq!(AccuracyClass::default(), AccuracyClass::Static);
+    }
+
+    #[test]
+    fn class_ladders_validate_and_widen() {
+        assert!(AccuracyClass::Static.ladder().is_none());
+        for c in [AccuracyClass::Fast, AccuracyClass::Balanced, AccuracyClass::Exact] {
+            let spec = c.ladder().expect("ladder classes carry a spec");
+            spec.validate().unwrap_or_else(|e| panic!("{c}: {e}"));
+            assert_eq!(spec.rungs[0], Precision::Fixed(16), "{c} starts on Q1.15");
+            assert!(spec.tolerance > 0.0 && spec.max_iterations > 0);
+        }
+        assert_eq!(
+            AccuracyClass::Exact.ladder().unwrap().rungs.last(),
+            Some(&Precision::Float32),
+            "exact terminates at the float reference datapath"
+        );
+    }
+
+    #[test]
+    fn ladder_spec_rejects_non_widening_schedules() {
+        let mut spec = LadderSpec::single(Precision::Fixed(24), 1e-6, 50);
+        spec.validate().unwrap();
+        assert_eq!(spec.describe(), "24b");
+        spec.rungs = vec![Precision::Fixed(24), Precision::Fixed(20)];
+        assert!(spec.validate().is_err(), "descending widths rejected");
+        spec.rungs = vec![Precision::Fixed(24), Precision::Fixed(24)];
+        assert!(spec.validate().is_err(), "equal widths rejected");
+        spec.rungs = vec![Precision::Float32, Precision::Fixed(26)];
+        assert!(spec.validate().is_err(), "float must terminate the ladder");
+        spec.rungs = vec![];
+        assert!(spec.validate().is_err(), "empty ladder rejected");
+        let mut spec = LadderSpec::single(Precision::Float32, 1e-6, 50);
+        spec.validate().unwrap();
+        spec.stall_ratio = 1.5;
+        assert!(spec.validate().is_err());
+        spec.stall_ratio = 0.9;
+        spec.max_iterations = 0;
+        assert!(spec.validate().is_err());
     }
 }

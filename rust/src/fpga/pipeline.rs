@@ -79,6 +79,38 @@ pub struct Workload {
     pub num_packets: usize,
 }
 
+/// One rung of a mixed-precision ladder estimate
+/// ([`PipelineModel::estimate_ladder`]).
+#[derive(Debug, Clone)]
+pub struct LadderRungEstimate {
+    /// The rung's datapath.
+    pub precision: crate::fixed::Precision,
+    /// Iterations charged to this rung (per batch).
+    pub iterations: usize,
+    /// Fused multi-CU cycles per iteration at this rung.
+    pub cycles_per_iteration: u64,
+    /// The rung's own synthesized clock.
+    pub clock_mhz: f64,
+    /// Compute seconds this rung contributes over the whole workload.
+    pub seconds: f64,
+}
+
+/// A mixed-precision workload estimate: per-rung iteration counts × the
+/// per-rung cycle costs and clocks of the adaptive precision ladder.
+#[derive(Debug, Clone)]
+pub struct LadderEstimate {
+    /// Per-rung breakdown, in rung order.
+    pub rungs: Vec<LadderRungEstimate>,
+    /// Number of κ-batches.
+    pub batches: usize,
+    /// Total device compute seconds.
+    pub compute_seconds: f64,
+    /// PCIe transfer seconds (once per batch, like the static estimates).
+    pub transfer_seconds: f64,
+    /// End-to-end seconds.
+    pub seconds: f64,
+}
+
 /// The pipeline model bound to a synthesized design point.
 #[derive(Debug, Clone)]
 pub struct PipelineModel {
@@ -180,6 +212,57 @@ impl PipelineModel {
             .max()
             .unwrap_or(0);
         slowest + PIPELINE_DEPTH
+    }
+
+    /// Estimate a **mixed-precision ladder** workload (DESIGN.md §7):
+    /// each `(precision, iterations)` rung is synthesized as its own
+    /// design point (same κ / B / buffer sizing), runs its per-batch
+    /// iteration count on the fused multi-CU pipeline at its own clock,
+    /// and the per-rung times sum — the hardware analogue of the software
+    /// ladder's hot-switch (per-precision compute units or partial
+    /// reconfiguration; the switch itself is not charged). `w.iterations`
+    /// is ignored — the rungs carry the iteration split; result transfer
+    /// is charged once per batch like the static estimates. The fixed
+    /// rungs all stream at II=3, so the narrow rungs' win is pure clock
+    /// (≈ 3.3 MHz per bit, §5.1) plus the warm start's iteration savings.
+    pub fn estimate_ladder(
+        rungs: &[(crate::fixed::Precision, usize)],
+        w: &Workload,
+        sharded: &ShardedSchedule,
+        kappa: usize,
+        max_vertices: usize,
+    ) -> Result<LadderEstimate, String> {
+        if rungs.is_empty() {
+            return Err("ladder estimate needs at least one rung".into());
+        }
+        let batches = w.requests.div_ceil(kappa);
+        let mut out_rungs = Vec::with_capacity(rungs.len());
+        let mut compute_seconds = 0.0f64;
+        for &(precision, iterations) in rungs {
+            let cfg = super::FpgaConfig { precision, kappa, b: sharded.b, max_vertices };
+            let model = PipelineModel::new(cfg)?;
+            let cycles_per_iteration = model.cycles_per_iteration_fused_sharded(sharded);
+            let clock_mhz = model.synth.clock_mhz;
+            let seconds = cycles_per_iteration as f64 * iterations as f64 * batches as f64
+                / (clock_mhz * 1e6);
+            compute_seconds += seconds;
+            out_rungs.push(LadderRungEstimate {
+                precision,
+                iterations,
+                cycles_per_iteration,
+                clock_mhz,
+                seconds,
+            });
+        }
+        let bytes = (batches * kappa * w.num_vertices * 4) as f64;
+        let transfer_seconds = bytes / super::U200.pcie_bandwidth;
+        Ok(LadderEstimate {
+            rungs: out_rungs,
+            batches,
+            compute_seconds,
+            transfer_seconds,
+            seconds: compute_seconds + transfer_seconds,
+        })
     }
 
     /// Estimate the full workload on a multi-CU design (`w.num_packets`
@@ -349,6 +432,75 @@ mod tests {
         );
         let est = m.estimate_fused_sharded(&w, &sharded);
         assert!(est.seconds < m.estimate_sharded(&w, &sharded).seconds);
+    }
+
+    #[test]
+    fn ladder_estimate_single_rung_matches_fused_estimate() {
+        let g = crate::graph::generators::erdos_renyi(2000, 0.004, 9);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let m = model(Precision::Fixed(26), 2000);
+        let cfg = m.synth.config;
+        let sharded = ShardedSchedule::build(&coo, cfg.b, 2);
+        let w = Workload { requests: 100, iterations: 10, num_vertices: 2000, num_packets: 0 };
+        let ladder = PipelineModel::estimate_ladder(
+            &[(Precision::Fixed(26), 10)],
+            &w,
+            &sharded,
+            cfg.kappa,
+            cfg.max_vertices,
+        )
+        .unwrap();
+        let fused = m.estimate_fused_sharded(&w, &sharded);
+        assert_eq!(ladder.batches, fused.batches);
+        assert_eq!(ladder.rungs[0].cycles_per_iteration, fused.cycles_per_iteration);
+        assert!(
+            (ladder.seconds - fused.seconds).abs() < 1e-9,
+            "{} vs {}",
+            ladder.seconds,
+            fused.seconds
+        );
+        assert!((ladder.transfer_seconds - fused.transfer_seconds).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ladder_estimate_narrow_rungs_win_on_clock() {
+        let g = crate::graph::generators::erdos_renyi(3000, 0.004, 11);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let cfg = FpgaConfig::sized_for(Precision::Fixed(26), 3000);
+        let sharded = ShardedSchedule::build(&coo, cfg.b, 2);
+        let w = Workload { requests: 100, iterations: 0, num_vertices: 3000, num_packets: 0 };
+        // same total iterations, most charged to the narrow (faster) rungs
+        let all_wide = PipelineModel::estimate_ladder(
+            &[(Precision::Fixed(26), 80)],
+            &w,
+            &sharded,
+            cfg.kappa,
+            cfg.max_vertices,
+        )
+        .unwrap();
+        let laddered = PipelineModel::estimate_ladder(
+            &[(Precision::Fixed(16), 50), (Precision::Fixed(20), 15), (Precision::Fixed(26), 15)],
+            &w,
+            &sharded,
+            cfg.kappa,
+            cfg.max_vertices,
+        )
+        .unwrap();
+        assert!(
+            laddered.seconds < all_wide.seconds,
+            "{} vs {}",
+            laddered.seconds,
+            all_wide.seconds
+        );
+        // clocks fall monotonically as the rungs widen (≈3.3 MHz/bit)
+        assert!(laddered.rungs[0].clock_mhz > laddered.rungs[1].clock_mhz);
+        assert!(laddered.rungs[1].clock_mhz > laddered.rungs[2].clock_mhz);
+        // the fixed rungs share the cycle count — the win is pure clock
+        assert_eq!(
+            laddered.rungs[0].cycles_per_iteration,
+            laddered.rungs[2].cycles_per_iteration
+        );
+        assert!(PipelineModel::estimate_ladder(&[], &w, &sharded, 8, 3000).is_err());
     }
 
     #[test]

@@ -71,6 +71,20 @@ impl Executor {
     }
 }
 
+/// Why a [`BatchedPpr::run_segment`] call stopped — the escalation signal
+/// of the adaptive precision ladder (DESIGN.md §7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentStop {
+    /// The update norm fell below the convergence threshold.
+    Converged,
+    /// The norm stalled above the threshold (shrank by less than the
+    /// stall ratio between consecutive iterations): the datapath has hit
+    /// its quantization floor and a wider rung should take over.
+    Stalled,
+    /// The iteration budget ran out first.
+    Budget,
+}
+
 /// Result of one batched PPR run (owned copy of the scores).
 #[derive(Debug, Clone)]
 pub struct PprOutput<W> {
@@ -136,7 +150,9 @@ pub struct BatchedPpr<D: Datapath> {
     pub kappa: usize,
     graph: Arc<PreparedGraph>,
     /// Per-shard quantized value streams (the per-CU channel contents).
-    vals: Vec<Vec<D::Word>>,
+    /// `Arc`-shared so every engine of one `(graph, precision)` pair —
+    /// worker-pool replicas, ladder rungs — reads one resident copy.
+    vals: Arc<Vec<Vec<D::Word>>>,
     // quantized constants of Eq. 1
     alpha: D::Word,
     one_minus_alpha: D::Word,
@@ -156,13 +172,32 @@ impl<D: Datapath> BatchedPpr<D> {
     /// stream is quantized once, like loading the partitions onto their
     /// channels (§4.2). The executor defaults to [`Executor::Fused`].
     pub fn new(datapath: D, graph: Arc<PreparedGraph>, kappa: usize, alpha: f64) -> Self {
+        let vals = Arc::new(graph.sharded.quantize_values_for(&datapath));
+        Self::with_shared_values(datapath, graph, vals, kappa, alpha)
+    }
+
+    /// Bind an engine to a prepared graph over **already-quantized** value
+    /// streams (one per shard, quantized via
+    /// [`crate::spmv::ShardedSchedule::quantize_values_for`]) — the
+    /// registry's per-precision value-stream cache hands every worker and
+    /// every ladder rung the same `Arc` instead of re-quantizing per
+    /// engine.
+    pub fn with_shared_values(
+        datapath: D,
+        graph: Arc<PreparedGraph>,
+        vals: Arc<Vec<Vec<D::Word>>>,
+        kappa: usize,
+        alpha: f64,
+    ) -> Self {
         assert!((0.0..1.0).contains(&alpha));
-        let vals = graph
-            .sharded
-            .shards
-            .iter()
-            .map(|s| s.val.iter().map(|&v| datapath.quantize(v)).collect())
-            .collect();
+        assert_eq!(
+            vals.len(),
+            graph.sharded.num_shards(),
+            "one value stream per shard"
+        );
+        for (v, s) in vals.iter().zip(&graph.sharded.shards) {
+            assert_eq!(v.len(), s.num_slots(), "value stream length of a shard");
+        }
         let alpha_w = datapath.quantize(alpha);
         let one_minus_alpha = datapath.quantize(1.0 - alpha);
         let alpha_over_v = datapath.quantize(alpha / graph.num_vertices as f64);
@@ -220,6 +255,29 @@ impl<D: Datapath> BatchedPpr<D> {
         personalization: &[VertexId],
         cfg: &PprConfig,
     ) -> PprRun<'_, D::Word> {
+        self.run_segment(personalization, cfg, None, None).1
+    }
+
+    /// One **segment** of Alg. 1 — the unit the adaptive precision ladder
+    /// drives (DESIGN.md §7). Identical to [`Self::run_scratch`] except:
+    ///
+    /// - `resume`: start from the given `n·κ` vertex-major scores (a
+    ///   previous rung's result re-quantized into this datapath) instead
+    ///   of the V̄ initialization;
+    /// - `stall_ratio`: stop with [`SegmentStop::Stalled`] once the norm
+    ///   fails to shrink below `ratio ×` the previous iteration's norm
+    ///   while still above the convergence threshold.
+    ///
+    /// With `resume = None` and `stall_ratio = None` the word-level op
+    /// sequence is exactly `run_scratch`'s, so a single-rung ladder is
+    /// bit-identical to the static engine.
+    pub fn run_segment(
+        &mut self,
+        personalization: &[VertexId],
+        cfg: &PprConfig,
+        resume: Option<&[D::Word]>,
+        stall_ratio: Option<f64>,
+    ) -> (SegmentStop, PprRun<'_, D::Word>) {
         let k = personalization.len();
         assert!(
             k >= 1 && k <= self.kappa,
@@ -237,11 +295,20 @@ impl<D: Datapath> BatchedPpr<D> {
         let mut nxt = std::mem::take(&mut self.nxt);
         let mut scaling = std::mem::take(&mut self.scaling);
 
-        // P₁ ← V̄ : score 1 on each lane's personalization vertex
         cur.clear();
-        cur.resize(n * k, z);
-        for (lane, &v) in personalization.iter().enumerate() {
-            cur[v as usize * k + lane] = one;
+        match resume {
+            // resume mid-ladder from a previous rung's re-quantized scores
+            Some(scores) => {
+                assert_eq!(scores.len(), n * k, "resume scores must be n·κ vertex-major");
+                cur.extend_from_slice(scores);
+            }
+            // P₁ ← V̄ : score 1 on each lane's personalization vertex
+            None => {
+                cur.resize(n * k, z);
+                for (lane, &v) in personalization.iter().enumerate() {
+                    cur[v as usize * k + lane] = one;
+                }
+            }
         }
         // the next buffer is fully overwritten by each sweep; only its
         // length matters here
@@ -252,7 +319,7 @@ impl<D: Datapath> BatchedPpr<D> {
         let mut update_norms = Vec::with_capacity(cfg.max_iterations);
         let mut iterations = 0usize;
 
-        match self.executor {
+        let stop = match self.executor {
             Executor::Fused => self.iterate_fused(
                 &d,
                 &mut cur,
@@ -261,6 +328,7 @@ impl<D: Datapath> BatchedPpr<D> {
                 personalization,
                 k,
                 cfg,
+                stall_ratio,
                 &mut update_norms,
                 &mut iterations,
             ),
@@ -272,15 +340,16 @@ impl<D: Datapath> BatchedPpr<D> {
                 personalization,
                 k,
                 cfg,
+                stall_ratio,
                 &mut update_norms,
                 &mut iterations,
             ),
-        }
+        };
 
         self.cur = cur;
         self.nxt = nxt;
         self.scaling = scaling;
-        PprRun { scores: &self.cur[..n * k], lanes: k, iterations, update_norms }
+        (stop, PprRun { scores: &self.cur[..n * k], lanes: k, iterations, update_norms })
     }
 
     /// The fused executor: one sweep per iteration. Each shard scatters
@@ -299,10 +368,13 @@ impl<D: Datapath> BatchedPpr<D> {
         personalization: &[VertexId],
         k: usize,
         cfg: &PprConfig,
+        stall_ratio: Option<f64>,
         update_norms: &mut Vec<f64>,
         iterations: &mut usize,
-    ) {
+    ) -> SegmentStop {
         let mut partials = self.dangling_partials(d, cur, k, false);
+        let mut prev_norm: Option<f64> = None;
+        let mut slow = 0u32;
         for _ in 0..cfg.max_iterations {
             self.fold_scaling(d, &partials, k, scaling);
             let results = self.fused_sweep(d, cur, nxt, scaling, personalization, k);
@@ -318,12 +390,33 @@ impl<D: Datapath> BatchedPpr<D> {
             *iterations += 1;
             let norm = (norm_sq / k as f64).sqrt();
             update_norms.push(norm);
+            // a norm of exactly 0 on a laddered (non-final) rung means the
+            // datapath reached its quantization fixed point: nothing more
+            // can improve here, so escalate rather than report convergence
+            if stall_ratio.is_some() && norm == 0.0 {
+                return SegmentStop::Stalled;
+            }
             if let Some(th) = cfg.convergence_threshold {
                 if norm < th {
-                    break;
+                    return SegmentStop::Converged;
                 }
             }
+            if let Some(ratio) = stall_ratio {
+                // two consecutive slow iterations, so a single transient
+                // (mass concentrating onto a hub can briefly lift the
+                // 2-norm) does not escalate prematurely
+                if prev_norm.is_some_and(|prev| norm > prev * ratio) {
+                    slow += 1;
+                    if slow >= 2 {
+                        return SegmentStop::Stalled;
+                    }
+                } else {
+                    slow = 0;
+                }
+                prev_norm = Some(norm);
+            }
         }
+        SegmentStop::Budget
     }
 
     /// The three-sweep executor (the pre-fusion engine): dangling scan,
@@ -338,10 +431,13 @@ impl<D: Datapath> BatchedPpr<D> {
         personalization: &[VertexId],
         k: usize,
         cfg: &PprConfig,
+        stall_ratio: Option<f64>,
         update_norms: &mut Vec<f64>,
         iterations: &mut usize,
-    ) {
+    ) -> SegmentStop {
         let scoped = self.executor == Executor::UnfusedScoped;
+        let mut prev_norm: Option<f64> = None;
+        let mut slow = 0u32;
         for _ in 0..cfg.max_iterations {
             // scaling_vec ← (α/|V|) · (d̄ · P₁) — per lane (Alg. 1 line 6),
             // the dangling scan sharded by destination range
@@ -368,12 +464,33 @@ impl<D: Datapath> BatchedPpr<D> {
             *iterations += 1;
             let norm = (norm_sq / k as f64).sqrt();
             update_norms.push(norm);
+            // a norm of exactly 0 on a laddered (non-final) rung means the
+            // datapath reached its quantization fixed point: nothing more
+            // can improve here, so escalate rather than report convergence
+            if stall_ratio.is_some() && norm == 0.0 {
+                return SegmentStop::Stalled;
+            }
             if let Some(th) = cfg.convergence_threshold {
                 if norm < th {
-                    break;
+                    return SegmentStop::Converged;
                 }
             }
+            if let Some(ratio) = stall_ratio {
+                // two consecutive slow iterations, so a single transient
+                // (mass concentrating onto a hub can briefly lift the
+                // 2-norm) does not escalate prematurely
+                if prev_norm.is_some_and(|prev| norm > prev * ratio) {
+                    slow += 1;
+                    if slow >= 2 {
+                        return SegmentStop::Stalled;
+                    }
+                } else {
+                    slow = 0;
+                }
+                prev_norm = Some(norm);
+            }
         }
+        SegmentStop::Budget
     }
 
     /// Per-shard dangling partial sums of `p` (ascending vertex order
@@ -462,7 +579,7 @@ impl<D: Datapath> BatchedPpr<D> {
         // work per shard = edges (scatter) + vertices (epilogue), × lanes
         let serial =
             (self.graph.sharded.num_edges + n) * k < PARALLEL_WORK_PER_SHARD * shards.len();
-        let work: Vec<_> = shards.iter().zip(&self.vals).zip(slices).collect();
+        let work: Vec<_> = shards.iter().zip(self.vals.iter()).zip(slices).collect();
         fan_out(work, serial, |((sh, svals), slice)| {
             let mut acc = vec![d.zero(); k];
             let norm = scatter_fused(
@@ -884,6 +1001,92 @@ mod tests {
         assert_eq!(copy_lane(&scores, 2, 1), vec![11, 21, 31]);
         let single = vec![7u64, 8, 9];
         assert_eq!(copy_lane(&single, 1, 0), single);
+    }
+
+    #[test]
+    fn shared_value_streams_bit_identical_to_inline_quantization() {
+        let g = crate::graph::generators::holme_kim(200, 4, 0.25, 21);
+        let pg = Arc::new(PreparedGraph::new_sharded(&g, 8, 3));
+        let d = FixedPath::paper(22);
+        let cfg = PprConfig { max_iterations: 8, ..Default::default() };
+        let vals = Arc::new(pg.sharded.quantize_values_for(&d));
+        let a = BatchedPpr::new(d, pg.clone(), 2, 0.85).run(&[3, 9], &cfg);
+        let b = BatchedPpr::with_shared_values(d, pg.clone(), vals.clone(), 2, 0.85)
+            .run(&[3, 9], &cfg);
+        assert_eq!(a.scores, b.scores, "shared streams must not change a single word");
+        assert_eq!(a.update_norms, b.update_norms);
+        // float datapath too
+        let fvals = Arc::new(pg.sharded.quantize_values_for(&FloatPath));
+        let af = BatchedPpr::new(FloatPath, pg.clone(), 2, 0.85).run(&[3, 9], &cfg);
+        let bf = BatchedPpr::with_shared_values(FloatPath, pg, fvals, 2, 0.85).run(&[3, 9], &cfg);
+        assert_eq!(af.scores, bf.scores);
+    }
+
+    #[test]
+    fn run_segment_resume_continues_bit_exactly() {
+        // 10 iterations in one go ≡ 4 + resume(6) at the same rung, for
+        // both executors — the invariant the ladder's hot-switch rests on
+        let g = crate::graph::generators::holme_kim(220, 4, 0.25, 41);
+        let pg = Arc::new(PreparedGraph::new_sharded(&g, 8, 2));
+        let d = FixedPath::paper(24);
+        for executor in [Executor::Fused, Executor::Unfused] {
+            let full = BatchedPpr::new(d, pg.clone(), 2, 0.85)
+                .with_executor(executor)
+                .run(&[1, 5], &PprConfig { max_iterations: 10, ..Default::default() });
+            let mut engine =
+                BatchedPpr::new(d, pg.clone(), 2, 0.85).with_executor(executor);
+            let cfg4 = PprConfig { max_iterations: 4, ..Default::default() };
+            let (stop, seg) = engine.run_segment(&[1, 5], &cfg4, None, None);
+            assert_eq!(stop, SegmentStop::Budget);
+            assert_eq!(seg.iterations, 4);
+            let mid = seg.scores.to_vec();
+            let mut norms = seg.update_norms.clone();
+            let cfg6 = PprConfig { max_iterations: 6, ..Default::default() };
+            let (stop, seg) = engine.run_segment(&[1, 5], &cfg6, Some(&mid), None);
+            assert_eq!(stop, SegmentStop::Budget);
+            assert_eq!(seg.scores, full.scores.as_slice(), "{executor:?}");
+            norms.extend_from_slice(&seg.update_norms);
+            assert_eq!(norms, full.update_norms, "{executor:?}");
+        }
+    }
+
+    #[test]
+    fn run_segment_stalls_at_the_quantization_floor() {
+        // a narrow rung cannot push its update norm below its ulp floor:
+        // with a far tighter threshold the segment must report Stalled
+        // (never Converged), and stop well before a generous budget
+        let g = crate::graph::generators::holme_kim(300, 4, 0.25, 17);
+        let pg = Arc::new(PreparedGraph::new(&g, 8));
+        let d = FixedPath::paper(12);
+        let mut engine = BatchedPpr::new(d, pg, 1, 0.85);
+        // threshold 0 is unreachable (norms are non-negative), so the only
+        // ways out are a detected stall or the budget; Q1.11 arithmetic
+        // must plateau (or hit an exact fixed point) long before 400
+        let cfg = PprConfig {
+            max_iterations: 400,
+            convergence_threshold: Some(0.0),
+            ..Default::default()
+        };
+        let (stop, seg) = engine.run_segment(&[7], &cfg, None, Some(0.95));
+        assert_eq!(stop, SegmentStop::Stalled);
+        assert!(seg.iterations < 400, "stall detected before the budget ran out");
+    }
+
+    #[test]
+    fn run_segment_without_stall_matches_run_scratch() {
+        let g = ring(48);
+        let pg = Arc::new(PreparedGraph::new(&g, 8));
+        let cfg = PprConfig {
+            max_iterations: 60,
+            convergence_threshold: Some(1e-5),
+            ..Default::default()
+        };
+        let base = BatchedPpr::new(FloatPath, pg.clone(), 1, 0.85).run(&[0], &cfg);
+        let mut engine = BatchedPpr::new(FloatPath, pg, 1, 0.85);
+        let (stop, seg) = engine.run_segment(&[0], &cfg, None, None);
+        assert_eq!(stop, SegmentStop::Converged);
+        assert_eq!(seg.scores, base.scores.as_slice());
+        assert_eq!(seg.update_norms, base.update_norms);
     }
 
     #[test]

@@ -1,0 +1,484 @@
+//! The **adaptive precision ladder** (DESIGN.md §7) — the paper's claim
+//! that reduced precision gives "precise control over the accuracy of the
+//! results" turned into a runtime mechanism.
+//!
+//! A laddered run starts on the narrowest rung (e.g. Q1.15) and watches
+//! the per-iteration update norm. Healthy PPR decay contracts the norm by
+//! ≈ α per iteration; a reduced-precision datapath eventually hits its
+//! quantization floor, where the norm plateaus (or the iteration reaches
+//! an exact fixed point of the truncating arithmetic, norm 0). Either
+//! signal means the rung has given all the accuracy it has — the ladder
+//! then **hot-switches**: the double-buffered score vectors are
+//! re-quantized into the next rung's format (an exact left shift for
+//! fixed→fixed widening, [`FixedFormat::requantize`]) and the run resumes
+//! on that rung's quantized value streams, warm-starting the wider
+//! datapath from everything the cheap iterations already computed. The
+//! final rung runs without a stall trigger until the tolerance or the
+//! iteration budget.
+//!
+//! Invariants:
+//!
+//! - **monotone escalation**: rungs are visited in spec order, narrowest
+//!   to widest, never descending (enforced by [`LadderSpec::validate`]
+//!   and the construction — there is no descend path);
+//! - **single-rung transparency**: a one-rung ladder performs exactly the
+//!   word-level op sequence of the static engine under the same solver
+//!   configuration — scores and f64 norms are bit-identical (pinned for
+//!   both datapaths and shard counts 1 and 4 by the tests below);
+//! - **re-quantization exactness**: widening fixed→fixed carries every
+//!   bit of the narrow scores (raw << Δfrac); fixed→float converts
+//!   through the exact f64 image of each word.
+//!
+//! Value streams are per-rung, per-precision — the registry caches them
+//! per graph ([`crate::coordinator::GraphEntry::values`]) so the packet
+//! schedule is shared across rungs and only the quantized words are
+//! duplicated (DESIGN.md §7 on the schedule/value-stream cache split).
+
+use super::batched::{BatchedPpr, Executor, SegmentStop};
+use super::{copy_lane, PprConfig, PreparedGraph};
+use crate::fixed::{FixedFormat, LadderSpec, Precision};
+use crate::graph::VertexId;
+use crate::spmv::datapath::{FixedPath, FloatPath};
+use std::sync::Arc;
+
+/// Per-shard value streams quantized for one precision — the unit of the
+/// registry's per-precision cache. `Arc`-shared: every engine and every
+/// ladder rung bound to the same `(graph, precision)` reads one copy.
+#[derive(Debug, Clone)]
+pub enum ValueStreams {
+    /// Raw fixed-point words (any Q1.n rung).
+    Fixed(Arc<Vec<Vec<u64>>>),
+    /// IEEE f32 words (the float rung / engine).
+    Float(Arc<Vec<Vec<f32>>>),
+}
+
+impl ValueStreams {
+    /// Quantize a prepared graph's shard streams for `precision`.
+    pub fn quantize(prepared: &PreparedGraph, precision: Precision) -> ValueStreams {
+        match precision {
+            Precision::Fixed(w) => ValueStreams::Fixed(Arc::new(
+                prepared.sharded.quantize_values_for(&FixedPath::paper(w)),
+            )),
+            Precision::Float32 => {
+                ValueStreams::Float(Arc::new(prepared.sharded.quantize_values_for(&FloatPath)))
+            }
+        }
+    }
+
+    /// Total resident words across shards (cache accounting).
+    pub fn num_words(&self) -> usize {
+        match self {
+            ValueStreams::Fixed(v) => v.iter().map(Vec::len).sum(),
+            ValueStreams::Float(v) => v.iter().map(Vec::len).sum(),
+        }
+    }
+}
+
+/// One rung's share of a ladder run (the escalation trace).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RungSegment {
+    /// The rung's precision.
+    pub precision: Precision,
+    /// Iterations executed on this rung.
+    pub iterations: usize,
+    /// Why the segment ended (non-terminal segments always
+    /// [`SegmentStop::Stalled`]).
+    pub stop: SegmentStop,
+}
+
+/// Final scores of a ladder run, in the terminal rung's representation.
+#[derive(Debug, Clone)]
+pub enum LadderScores {
+    /// Vertex-major raw words plus their format.
+    Fixed(Vec<u64>, FixedFormat),
+    /// Vertex-major f32 scores.
+    Float(Vec<f32>),
+}
+
+impl LadderScores {
+    /// The precision the scores are expressed in.
+    pub fn precision(&self) -> Precision {
+        match self {
+            LadderScores::Fixed(_, fmt) => Precision::Fixed(fmt.total_bits()),
+            LadderScores::Float(_) => Precision::Float32,
+        }
+    }
+
+    /// Dequantized lane `k` of a `lanes`-wide vertex-major block.
+    pub fn lane_f64(&self, lanes: usize, k: usize) -> Vec<f64> {
+        match self {
+            LadderScores::Fixed(words, fmt) => {
+                copy_lane(words, lanes, k).into_iter().map(|w| fmt.to_f64(w)).collect()
+            }
+            LadderScores::Float(words) => {
+                copy_lane(words, lanes, k).into_iter().map(|w| w as f64).collect()
+            }
+        }
+    }
+}
+
+/// The outcome of one laddered PPR run.
+#[derive(Debug, Clone)]
+pub struct LadderOutput {
+    /// Final scores (terminal rung's representation), `num_vertices ×
+    /// lanes`, vertex-major.
+    pub scores: LadderScores,
+    /// Lanes the run carried.
+    pub lanes: usize,
+    /// Total iterations across all rungs.
+    pub iterations: usize,
+    /// Per-iteration update norms, concatenated across rungs.
+    pub update_norms: Vec<f64>,
+    /// The escalation trace, in rung order.
+    pub segments: Vec<RungSegment>,
+}
+
+impl LadderOutput {
+    /// Precision of the rung that produced the final scores.
+    pub fn final_precision(&self) -> Precision {
+        self.scores.precision()
+    }
+}
+
+/// One per-rung engine (each holds its own quantized value streams; all
+/// share the one packet schedule through the `Arc<PreparedGraph>`).
+enum Rung {
+    Fixed(BatchedPpr<FixedPath>),
+    Float(BatchedPpr<FloatPath>),
+}
+
+/// The laddered PPR engine: a stack of [`BatchedPpr`] rungs over one
+/// prepared graph, driven segment by segment. See the module docs.
+pub struct LadderPpr {
+    spec: LadderSpec,
+    kappa: usize,
+    graph: Arc<PreparedGraph>,
+    rungs: Vec<Rung>,
+}
+
+impl LadderPpr {
+    /// Build a ladder over a prepared graph, quantizing each rung's value
+    /// streams here (like loading every precision's partitions onto their
+    /// channels once). Panics on an invalid [`LadderSpec`].
+    pub fn new(graph: Arc<PreparedGraph>, spec: LadderSpec, kappa: usize, alpha: f64) -> Self {
+        let g = graph.clone();
+        Self::with_streams(graph, spec, kappa, alpha, Executor::Fused, move |p| {
+            ValueStreams::quantize(&g, p)
+        })
+    }
+
+    /// Build a ladder over **already-quantized** per-rung value streams —
+    /// the registry path, where streams are cached per `(graph,
+    /// precision)` and shared across workers and rungs. Panics on an
+    /// invalid spec or a stream whose word type mismatches its rung.
+    pub fn with_streams(
+        graph: Arc<PreparedGraph>,
+        spec: LadderSpec,
+        kappa: usize,
+        alpha: f64,
+        executor: Executor,
+        mut streams: impl FnMut(Precision) -> ValueStreams,
+    ) -> Self {
+        if let Err(e) = spec.validate() {
+            panic!("invalid ladder spec: {e}");
+        }
+        let rungs = spec
+            .rungs
+            .iter()
+            .map(|&p| match (p, streams(p)) {
+                (Precision::Fixed(w), ValueStreams::Fixed(vals)) => Rung::Fixed(
+                    BatchedPpr::with_shared_values(
+                        FixedPath::paper(w),
+                        graph.clone(),
+                        vals,
+                        kappa,
+                        alpha,
+                    )
+                    .with_executor(executor),
+                ),
+                (Precision::Float32, ValueStreams::Float(vals)) => Rung::Float(
+                    BatchedPpr::with_shared_values(FloatPath, graph.clone(), vals, kappa, alpha)
+                        .with_executor(executor),
+                ),
+                (p, _) => panic!("value streams for rung {p} carry the wrong word type"),
+            })
+            .collect();
+        Self { spec, kappa, graph, rungs }
+    }
+
+    /// The ladder this engine climbs.
+    pub fn spec(&self) -> &LadderSpec {
+        &self.spec
+    }
+
+    /// Maximum lanes per run.
+    pub fn kappa(&self) -> usize {
+        self.kappa
+    }
+
+    /// |V| of the bound graph.
+    pub fn num_vertices(&self) -> usize {
+        self.graph.num_vertices
+    }
+
+    /// Shards (compute units) every rung sweeps.
+    pub fn num_shards(&self) -> usize {
+        self.graph.num_shards()
+    }
+
+    /// Run Alg. 1 up the ladder for 1..=κ personalization vertices.
+    ///
+    /// The effective tolerance is `cfg.convergence_threshold` when set,
+    /// else the spec's; `cfg.max_iterations` is the total budget across
+    /// rungs. Non-final rungs run with the spec's stall trigger and
+    /// escalate on [`SegmentStop::Stalled`]; any other stop ends the run.
+    ///
+    /// The returned scores are an owned copy (one `n·κ` copy per run, on
+    /// top of the inter-rung re-quantization copies): segments of
+    /// different rungs live in different engines' scratch buffers, so a
+    /// `PprRun`-style borrow of "whichever rung finished" is not
+    /// expressible without boxing — the copy is ≪ 1% of a
+    /// convergence-driven run's sweep work.
+    pub fn run(&mut self, personalization: &[VertexId], cfg: &PprConfig) -> LadderOutput {
+        let threshold = cfg.convergence_threshold.unwrap_or(self.spec.tolerance);
+        let budget = cfg.max_iterations;
+        let nrungs = self.rungs.len();
+        let mut segments: Vec<RungSegment> = Vec::with_capacity(nrungs);
+        let mut update_norms: Vec<f64> = Vec::new();
+        let mut total = 0usize;
+        // scores carried between rungs, in the previous rung's format
+        let mut carried: Option<LadderScores> = None;
+
+        for i in 0..nrungs {
+            let last = i + 1 == nrungs;
+            let remaining = budget.saturating_sub(total);
+            if remaining == 0 && i > 0 {
+                break; // budget exhausted mid-ladder: last rung's result stands
+            }
+            let seg_cfg = PprConfig {
+                alpha: cfg.alpha,
+                max_iterations: remaining,
+                convergence_threshold: Some(threshold),
+            };
+            let stall = if last { None } else { Some(self.spec.stall_ratio) };
+            let (stop, iterations, scores) = match &mut self.rungs[i] {
+                Rung::Fixed(engine) => {
+                    let fmt = engine.datapath.fmt;
+                    // re-quantize the carried scores into this rung's
+                    // format (exact for the monotone widening the spec
+                    // enforces)
+                    let init: Option<Vec<u64>> = carried.take().map(|c| match c {
+                        LadderScores::Fixed(words, from) => {
+                            words.iter().map(|&w| from.requantize(&fmt, w)).collect()
+                        }
+                        LadderScores::Float(_) => {
+                            unreachable!("Float32 only terminates a ladder")
+                        }
+                    });
+                    let (stop, run) =
+                        engine.run_segment(personalization, &seg_cfg, init.as_deref(), stall);
+                    update_norms.extend_from_slice(&run.update_norms);
+                    (stop, run.iterations, LadderScores::Fixed(run.scores.to_vec(), fmt))
+                }
+                Rung::Float(engine) => {
+                    let init: Option<Vec<f32>> = carried.take().map(|c| match c {
+                        LadderScores::Fixed(words, from) => {
+                            words.iter().map(|&w| from.to_f64(w) as f32).collect()
+                        }
+                        LadderScores::Float(words) => words,
+                    });
+                    let (stop, run) =
+                        engine.run_segment(personalization, &seg_cfg, init.as_deref(), stall);
+                    update_norms.extend_from_slice(&run.update_norms);
+                    (stop, run.iterations, LadderScores::Float(run.scores.to_vec()))
+                }
+            };
+            total += iterations;
+            segments.push(RungSegment { precision: self.spec.rungs[i], iterations, stop });
+            carried = Some(scores);
+            if stop != SegmentStop::Stalled {
+                break; // converged (or budget ran dry): the ladder is done
+            }
+        }
+
+        LadderOutput {
+            scores: carried.expect("the first rung always runs"),
+            lanes: personalization.len(),
+            iterations: total,
+            update_norms,
+            segments,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::AccuracyClass;
+    use crate::graph::CooMatrix;
+    use crate::ppr::reference;
+
+    fn coo() -> CooMatrix {
+        CooMatrix::from_graph(&crate::graph::generators::holme_kim(260, 4, 0.25, 23))
+    }
+
+    #[test]
+    fn single_rung_ladder_bit_identical_to_static_engine() {
+        let coo = coo();
+        let pers: Vec<VertexId> = vec![2, 7, 11];
+        let cfg = PprConfig {
+            max_iterations: 40,
+            convergence_threshold: Some(1e-6),
+            ..Default::default()
+        };
+        for shards in [1usize, 4] {
+            let pg = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, shards));
+            // fixed datapath
+            let d = FixedPath::paper(24);
+            let base = BatchedPpr::new(d, pg.clone(), 3, 0.85).run(&pers, &cfg);
+            let spec = LadderSpec::single(Precision::Fixed(24), 1e-6, 40);
+            let out = LadderPpr::new(pg.clone(), spec, 3, 0.85).run(&pers, &cfg);
+            match &out.scores {
+                LadderScores::Fixed(words, fmt) => {
+                    assert_eq!(words, &base.scores, "shards={shards}: score words");
+                    assert_eq!(fmt.total_bits(), 24);
+                }
+                other => panic!("expected fixed scores, got {other:?}"),
+            }
+            assert_eq!(out.update_norms, base.update_norms, "shards={shards}: f64 norms");
+            assert_eq!(out.iterations, base.iterations);
+            assert_eq!(out.segments.len(), 1);
+
+            // float datapath
+            let basef = BatchedPpr::new(FloatPath, pg.clone(), 3, 0.85).run(&pers, &cfg);
+            let specf = LadderSpec::single(Precision::Float32, 1e-6, 40);
+            let outf = LadderPpr::new(pg, specf, 3, 0.85).run(&pers, &cfg);
+            match &outf.scores {
+                LadderScores::Float(words) => assert_eq!(words, &basef.scores, "shards={shards}"),
+                other => panic!("expected float scores, got {other:?}"),
+            }
+            assert_eq!(outf.update_norms, basef.update_norms);
+        }
+    }
+
+    #[test]
+    fn escalation_is_monotone_and_never_descends() {
+        let coo = coo();
+        let pg = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, 2));
+        let spec = AccuracyClass::Balanced.ladder().unwrap();
+        let budget = spec.max_iterations;
+        let mut ladder = LadderPpr::new(pg, spec, 2, 0.85);
+        let cfg = PprConfig { max_iterations: budget, ..Default::default() };
+        let out = ladder.run(&[3, 11], &cfg);
+        assert!(
+            out.segments.len() >= 2,
+            "Q1.15 cannot reach 1e-6 (its smallest nonzero norm is ~2^-15), so the \
+             ladder must escalate: {:?}",
+            out.segments
+        );
+        for pair in out.segments.windows(2) {
+            assert!(
+                pair[1].precision.bits() > pair[0].precision.bits(),
+                "escalation must widen monotonically: {:?}",
+                out.segments
+            );
+        }
+        for seg in &out.segments[..out.segments.len() - 1] {
+            assert_eq!(seg.stop, SegmentStop::Stalled, "non-terminal segments escalate");
+        }
+        assert_eq!(
+            out.segments.iter().map(|s| s.iterations).sum::<usize>(),
+            out.iterations
+        );
+        assert_eq!(out.update_norms.len(), out.iterations);
+        assert!(out.iterations <= budget, "ladder respects the total budget");
+    }
+
+    #[test]
+    fn exact_class_matches_float_reference_within_paper_tolerance() {
+        let coo = coo();
+        let pg = Arc::new(PreparedGraph::from_coo(&coo, 8));
+        let spec = AccuracyClass::Exact.ladder().unwrap();
+        let budget = spec.max_iterations;
+        let mut ladder = LadderPpr::new(pg, spec, 1, 0.85);
+        let cfg = PprConfig { max_iterations: budget, ..Default::default() };
+        let out = ladder.run(&[9], &cfg);
+        assert_eq!(
+            out.final_precision(),
+            Precision::Float32,
+            "exact terminates on the float rung: {:?}",
+            out.segments
+        );
+        let truth = reference::ppr_f64(&coo, 9, 0.85, 150, Some(1e-12));
+        let got = out.scores.lane_f64(1, 0);
+        for v in 0..coo.num_vertices {
+            assert!(
+                (got[v] - truth.scores[v]).abs() < 1e-4,
+                "vertex {v}: {} vs {}",
+                got[v],
+                truth.scores[v]
+            );
+        }
+    }
+
+    #[test]
+    fn warm_start_beats_cold_start_on_the_final_rung() {
+        // the ladder's point: the wide rung resumes from the narrow rungs'
+        // work, so it needs strictly fewer wide iterations than a
+        // cold-started wide engine run to the same tolerance
+        let coo = coo();
+        let pg = Arc::new(PreparedGraph::from_coo(&coo, 8));
+        let tol = 1e-6;
+        let cfg = PprConfig {
+            max_iterations: 200,
+            convergence_threshold: Some(tol),
+            ..Default::default()
+        };
+        let cold = BatchedPpr::new(FixedPath::paper(26), pg.clone(), 1, 0.85).run(&[5], &cfg);
+        let spec = AccuracyClass::Balanced.ladder().unwrap();
+        let out = LadderPpr::new(pg, spec, 1, 0.85).run(&[5], &cfg);
+        let wide_iters = out
+            .segments
+            .iter()
+            .filter(|s| s.precision == Precision::Fixed(26))
+            .map(|s| s.iterations)
+            .sum::<usize>();
+        assert!(
+            wide_iters < cold.iterations,
+            "warm-started Q1.25 segment ({wide_iters} iters) must undercut the \
+             cold start ({} iters)",
+            cold.iterations
+        );
+    }
+
+    #[test]
+    fn value_streams_quantize_per_precision() {
+        let coo = coo();
+        let pg = PreparedGraph::from_coo_sharded(&coo, 8, 3);
+        let fixed = ValueStreams::quantize(&pg, Precision::Fixed(20));
+        let float = ValueStreams::quantize(&pg, Precision::Float32);
+        assert_eq!(fixed.num_words(), float.num_words(), "same slots, different words");
+        match fixed {
+            ValueStreams::Fixed(v) => assert_eq!(v.len(), 3, "one stream per shard"),
+            _ => panic!("fixed precision yields fixed words"),
+        }
+        match float {
+            ValueStreams::Float(v) => assert_eq!(v.len(), 3),
+            _ => panic!("float precision yields float words"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid ladder spec")]
+    fn invalid_spec_rejected_at_construction() {
+        let coo = coo();
+        let pg = Arc::new(PreparedGraph::from_coo(&coo, 8));
+        let spec = LadderSpec {
+            rungs: vec![Precision::Fixed(26), Precision::Fixed(20)],
+            tolerance: 1e-6,
+            stall_ratio: 0.95,
+            max_iterations: 10,
+        };
+        let _ = LadderPpr::new(pg, spec, 1, 0.85);
+    }
+}

@@ -9,6 +9,9 @@
 //! - [`batched`] — the paper's Alg. 1: κ personalization vertices advanced
 //!   per pass over the edges, running on the streaming SpMV engine with a
 //!   generic datapath (the "FPGA algorithm", bit-accurate per width).
+//! - [`ladder`] — the adaptive precision ladder: runs start on a narrow
+//!   rung (Q1.15) and hot-switch to wider rungs as the update norm stalls
+//!   at each rung's quantization floor (DESIGN.md §7).
 //! - [`cpu_baseline`] — the PGX analogue: multi-threaded f32 pull-based
 //!   PPR, one request at a time (the paper found PGX gained nothing from
 //!   manual batching).
@@ -20,10 +23,12 @@
 pub mod batched;
 pub mod convergence;
 pub mod cpu_baseline;
+pub mod ladder;
 pub mod reference;
 
-pub use batched::{copy_lane, BatchedPpr, Executor, PprOutput, PprRun};
+pub use batched::{copy_lane, BatchedPpr, Executor, PprOutput, PprRun, SegmentStop};
 pub use convergence::ConvergenceTrace;
+pub use ladder::{LadderOutput, LadderPpr, LadderScores, RungSegment, ValueStreams};
 
 use crate::graph::{CooMatrix, Graph, VertexId};
 use crate::spmv::{PacketSchedule, ShardedSchedule};

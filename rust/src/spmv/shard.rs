@@ -226,6 +226,16 @@ impl ShardedSchedule {
         self.shards.len()
     }
 
+    /// Quantize every shard's value stream for a datapath — the per-rung
+    /// value-stream preparation of the precision ladder (§4.2: "loading
+    /// the partitions onto their channels", once per precision). The word
+    /// sequence is exactly the one `BatchedPpr::new` produced inline
+    /// before streams became shareable, so engines built over shared
+    /// streams stay bit-identical.
+    pub fn quantize_values_for<D: Datapath>(&self, d: &D) -> Vec<Vec<D::Word>> {
+        self.shards.iter().map(|s| s.val.iter().map(|&v| d.quantize(v)).collect()).collect()
+    }
+
     /// Total slots (edges + padding) across all shards.
     pub fn num_slots(&self) -> usize {
         self.shards.iter().map(|s| s.num_slots()).sum()

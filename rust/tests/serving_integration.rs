@@ -287,8 +287,8 @@ fn hot_swap_reload_under_sustained_load_drains_cleanly() {
         .config(cfg.clone())
         .serve_registry(registry.clone(), 2)
         .expect("registry server");
-    // the prep key the workers use: (precision, B, shards=1/2 workers → 1)
-    let entry0 = registry.resolve("live", cfg.precision, cfg.b, 1).unwrap();
+    // the schedule key the workers use: (B, shards=1 — 1 shard per 2 workers)
+    let entry0 = registry.resolve("live", cfg.b, 1).unwrap();
     assert_eq!(entry0.epoch, 0);
 
     // block until an epoch's entry has actually served traffic — the
@@ -336,7 +336,7 @@ fn hot_swap_reload_under_sustained_load_drains_cleanly() {
                 ))),
             )
             .expect("first reload under load");
-        let entry1 = registry.resolve("live", cfg.precision, cfg.b, 1).unwrap();
+        let entry1 = registry.resolve("live", cfg.b, 1).unwrap();
         assert_eq!(entry1.epoch, 1);
         wait_for_traffic(&entry1);
         registry
@@ -347,7 +347,7 @@ fn hot_swap_reload_under_sustained_load_drains_cleanly() {
                 ))),
             )
             .expect("second reload under load");
-        let entry2 = registry.resolve("live", cfg.precision, cfg.b, 1).unwrap();
+        let entry2 = registry.resolve("live", cfg.b, 1).unwrap();
         assert_eq!(entry2.epoch, 2);
         wait_for_traffic(&entry2);
         stop.store(true, std::sync::atomic::Ordering::Relaxed);

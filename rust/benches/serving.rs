@@ -1,0 +1,13 @@
+//! `cargo bench --bench serving [-- --full | --scale N]`
+//! Closed-loop HTTP serving benchmark: stands up the front door on an
+//! ephemeral port and drives it with open-loop Poisson load at a capacity
+//! rate, then at an overload rate that forces class-ordered shedding.
+//! Emits `BENCH_serving.json`. See `bench_harness::serving`.
+
+use ppr_spmv::bench_harness::{serving, ExpOptions};
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    println!("# http serving [{}]\n", opts.descriptor());
+    serving::run(&opts);
+}

@@ -18,6 +18,7 @@ pub mod fig5_aggregated;
 pub mod fig6_sparsity;
 pub mod fig7_convergence;
 pub mod precision_ladder;
+pub mod serving;
 pub mod shard_scaling;
 pub mod table1_datasets;
 pub mod table2_resources;

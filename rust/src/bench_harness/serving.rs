@@ -1,0 +1,463 @@
+//! Closed-loop serving benchmark — the HTTP front door under open-loop
+//! Poisson load (DESIGN.md §8).
+//!
+//! Two phases against one running [`FrontDoor`]:
+//!
+//! - **capacity**: a modest offered rate the stack should absorb — the
+//!   baseline for latency percentiles and the "no request is ever lost"
+//!   invariant;
+//! - **overload**: the offered rate is pushed to a multiple of the
+//!   capacity phase's *achieved* throughput, so the admission controller
+//!   must shed. The report captures the class-ordered degradation the
+//!   controller promises: `fast` sheds at least as hard as `balanced`,
+//!   `balanced` at least as hard as `exact`, while `exact` latency stays
+//!   bounded by the shallow queue.
+//!
+//! Every request is accounted for: `lost` counts arrivals that got no
+//! HTTP response at all (transport failure) and must be zero — shed
+//! (429) and deadline-missed (504) requests are *answered*, not lost.
+//! The run also scrapes `/metrics` and validates the Prometheus text
+//! exposition with [`validate_exposition`], so CI gates on the scrape
+//! contract, not just on the JSON.
+//!
+//! Results print as a table, drop as CSV, and emit
+//! `BENCH_serving.json` for CI trend tracking.
+
+use super::ExpOptions;
+use crate::config::{RunConfig, ServeConfig};
+use crate::coordinator::builder::EngineBuilder;
+use crate::coordinator::registry::GraphRegistry;
+use crate::fixed::AccuracyClass;
+use crate::serve::http::{format_request, roundtrip};
+use crate::serve::loadgen::{self, LoadReport, LoadSpec};
+use crate::serve::{shutdown_stack, validate_exposition, FrontDoor, ServeState};
+use crate::util::report::Table;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Benchmark configuration (graph, engine, front door, offered load).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Vertices of the generated Watts–Strogatz serving graph.
+    pub num_vertices: usize,
+    /// Engine configuration behind the front door.
+    pub run: RunConfig,
+    /// Front-door configuration (`listen` is forced to an ephemeral
+    /// port). Keep `http_workers` comfortably above `clients`: each
+    /// persistent client connection occupies one worker for its
+    /// lifetime.
+    pub serve: ServeConfig,
+    /// Offered rate of the capacity phase (requests/second).
+    pub capacity_rps: f64,
+    /// Overload offered rate = this factor × capacity-phase achieved
+    /// throughput (floored at 2× the capacity offered rate).
+    pub overload_factor: f64,
+    /// Length of each phase's arrival schedule.
+    pub phase_secs: f64,
+    /// Concurrent load-generator connections.
+    pub clients: usize,
+    /// `top_n` per request.
+    pub top_n: usize,
+    /// Deadline attached to overload-phase requests.
+    pub overload_deadline_ms: u64,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+/// Per-class outcome of one phase.
+#[derive(Debug, Clone)]
+pub struct ClassPoint {
+    /// Class label (`static`/`fast`/`balanced`/`exact`).
+    pub class: &'static str,
+    /// Requests sent / 200s / 429s / 504s / other statuses.
+    pub sent: u64,
+    /// 200 responses.
+    pub ok: u64,
+    /// 429 responses.
+    pub shed: u64,
+    /// 504 responses.
+    pub deadline_miss: u64,
+    /// Any other status.
+    pub error: u64,
+    /// shed / sent.
+    pub shed_rate: f64,
+    /// deadline_miss / sent.
+    pub deadline_miss_rate: f64,
+    /// Latency percentiles (ms, from scheduled arrival; 0 when the class
+    /// saw no answered request).
+    pub p50_ms: f64,
+    /// p99 latency (ms).
+    pub p99_ms: f64,
+    /// p99.9 latency (ms).
+    pub p999_ms: f64,
+}
+
+/// One phase of the benchmark.
+#[derive(Debug, Clone)]
+pub struct ServingPhase {
+    /// `capacity` or `overload`.
+    pub name: &'static str,
+    /// Configured offered rate.
+    pub offered_rps: f64,
+    /// Achieved 200-throughput.
+    pub achieved_rps: f64,
+    /// Phase wall-clock (seconds).
+    pub wall_secs: f64,
+    /// Requests sent.
+    pub sent: u64,
+    /// Requests with no HTTP response (must be 0).
+    pub lost: u64,
+    /// Per-class breakdown (classes in the offered mix).
+    pub classes: Vec<ClassPoint>,
+}
+
+/// The full benchmark result.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    /// Capacity then overload.
+    pub phases: Vec<ServingPhase>,
+    /// Total unanswered requests across phases (gate: 0).
+    pub lost: u64,
+    /// `/metrics` scrape parsed as Prometheus text exposition.
+    pub metrics_valid: bool,
+    /// Samples in the scrape.
+    pub metrics_samples: usize,
+    /// Overload shed rates degrade in class order
+    /// (fast ≥ balanced ≥ exact, with statistical slack).
+    pub shed_order_ok: bool,
+}
+
+fn class_points(report: &LoadReport, mix: &[(AccuracyClass, f64)]) -> Vec<ClassPoint> {
+    mix.iter()
+        .map(|(class, _)| {
+            let s = report.class(*class);
+            ClassPoint {
+                class: class.label(),
+                sent: s.sent,
+                ok: s.ok,
+                shed: s.shed,
+                deadline_miss: s.deadline_miss,
+                error: s.error,
+                shed_rate: s.shed_rate(),
+                deadline_miss_rate: s.deadline_miss_rate(),
+                p50_ms: s.percentile_ms(50.0).unwrap_or(0.0),
+                p99_ms: s.percentile_ms(99.0).unwrap_or(0.0),
+                p999_ms: s.percentile_ms(99.9).unwrap_or(0.0),
+            }
+        })
+        .collect()
+}
+
+fn phase(name: &'static str, report: &LoadReport, mix: &[(AccuracyClass, f64)]) -> ServingPhase {
+    ServingPhase {
+        name,
+        offered_rps: report.offered_rps,
+        achieved_rps: report.achieved_rps,
+        wall_secs: report.wall_secs,
+        sent: report.total_sent(),
+        lost: report.lost,
+        classes: class_points(report, mix),
+    }
+}
+
+/// Stand the full stack up, run both phases, scrape `/metrics`, tear
+/// everything down.
+pub fn measure(sc: &ServingConfig) -> ServingReport {
+    let registry = Arc::new(GraphRegistry::new(2));
+    let graph = crate::graph::generators::watts_strogatz(sc.num_vertices, 6, 0.2, sc.seed ^ 0x5E);
+    registry.register_graph("ws", graph).expect("register serving graph");
+    let server = Arc::new(
+        EngineBuilder::native()
+            .config(sc.run.clone())
+            .serve_registry(registry.clone(), 2)
+            .expect("registry server"),
+    );
+    let mut serve_cfg = sc.serve.clone();
+    serve_cfg.listen = "127.0.0.1:0".to_string();
+    let state = ServeState::new(server.clone(), registry, serve_cfg);
+    let front = FrontDoor::serve(state).expect("front door binds");
+    let addr = front.addr();
+
+    let mix = vec![
+        (AccuracyClass::Fast, 1.0),
+        (AccuracyClass::Balanced, 1.0),
+        (AccuracyClass::Exact, 1.0),
+    ];
+    let base = LoadSpec {
+        graph: "ws".to_string(),
+        class_mix: mix.clone(),
+        offered_rps: sc.capacity_rps,
+        duration: Duration::from_secs_f64(sc.phase_secs),
+        clients: sc.clients,
+        top_n: sc.top_n,
+        deadline_ms: None,
+        max_vertex: sc.num_vertices as u64,
+        seed: sc.seed,
+    };
+    let capacity = loadgen::run(addr, &base);
+
+    let overload_rps =
+        (capacity.achieved_rps * sc.overload_factor).max(sc.capacity_rps * 2.0);
+    let overload_spec = LoadSpec {
+        offered_rps: overload_rps,
+        deadline_ms: Some(sc.overload_deadline_ms),
+        seed: sc.seed.wrapping_add(1),
+        ..base
+    };
+    let overload = loadgen::run(addr, &overload_spec);
+
+    // scrape the live endpoint — the validation target is the wire
+    // format, not the in-process registry
+    let scrape = std::net::TcpStream::connect(addr)
+        .map_err(|e| e.to_string())
+        .and_then(|mut conn| {
+            roundtrip(&mut conn, &format_request("GET", "/metrics", "bench", None))
+                .map_err(|e| e.to_string())
+        })
+        .and_then(|(status, body)| {
+            if status != 200 {
+                return Err(format!("/metrics returned {status}"));
+            }
+            String::from_utf8(body).map_err(|e| e.to_string())
+        });
+    let (metrics_valid, metrics_samples) = match &scrape {
+        Ok(text) => match validate_exposition(text) {
+            Ok(samples) => (text.contains("ppr_http_requests_total"), samples),
+            Err(_) => (false, 0),
+        },
+        Err(_) => (false, 0),
+    };
+
+    // class-ordered degradation, with slack for sampling noise on the
+    // rates of adjacent classes
+    let f = overload.class(AccuracyClass::Fast).shed_rate();
+    let b = overload.class(AccuracyClass::Balanced).shed_rate();
+    let e = overload.class(AccuracyClass::Exact).shed_rate();
+    let shed_order_ok = f >= b - 0.05 && b >= e - 0.05;
+
+    shutdown_stack(front, server);
+
+    ServingReport {
+        lost: capacity.lost + overload.lost,
+        phases: vec![phase("capacity", &capacity, &mix), phase("overload", &overload, &mix)],
+        metrics_valid,
+        metrics_samples,
+        shed_order_ok,
+    }
+}
+
+/// Serialize as the machine-readable `BENCH_serving.json` consumed by CI
+/// (hand-rolled: no serde in the vendored crate set).
+pub fn to_json(report: &ServingReport, descriptor: &str) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"serving\",\n  \"config\": \"{descriptor}\",\n"
+    ));
+    s.push_str(&format!(
+        "  \"lost\": {},\n  \"metrics_valid\": {},\n  \"metrics_samples\": {},\n  \
+         \"shed_order_ok\": {},\n",
+        report.lost, report.metrics_valid, report.metrics_samples, report.shed_order_ok,
+    ));
+    s.push_str("  \"phases\": [\n");
+    for (i, p) in report.phases.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"offered_rps\": {:.1}, \"achieved_rps\": {:.1}, \
+             \"wall_secs\": {:.3}, \"sent\": {}, \"lost\": {},\n     \"classes\": [\n",
+            p.name, p.offered_rps, p.achieved_rps, p.wall_secs, p.sent, p.lost,
+        ));
+        for (j, c) in p.classes.iter().enumerate() {
+            s.push_str(&format!(
+                "      {{\"class\": \"{}\", \"sent\": {}, \"ok\": {}, \"shed\": {}, \
+                 \"deadline_miss\": {}, \"error\": {}, \"shed_rate\": {:.4}, \
+                 \"deadline_miss_rate\": {:.4}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \
+                 \"p999_ms\": {:.3}}}{}\n",
+                c.class,
+                c.sent,
+                c.ok,
+                c.shed,
+                c.deadline_miss,
+                c.error,
+                c.shed_rate,
+                c.deadline_miss_rate,
+                c.p50_ms,
+                c.p99_ms,
+                c.p999_ms,
+                if j + 1 < p.classes.len() { "," } else { "" },
+            ));
+        }
+        s.push_str(&format!(
+            "     ]}}{}\n",
+            if i + 1 < report.phases.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write `BENCH_serving.json` into `dir`; returns the path written.
+pub fn emit_json(
+    report: &ServingReport,
+    descriptor: &str,
+    dir: &std::path::Path,
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_serving.json");
+    std::fs::write(&path, to_json(report, descriptor))?;
+    Ok(path)
+}
+
+/// The full serving experiment at the configured scale.
+pub fn run(opts: &ExpOptions) -> Table {
+    let clients = 6;
+    let sc = ServingConfig {
+        num_vertices: (100_000 / opts.scale).max(1_000),
+        run: RunConfig {
+            kappa: crate::PAPER_KAPPA,
+            iterations: opts.iterations,
+            batch_timeout_ms: 2,
+            ..Default::default()
+        },
+        serve: ServeConfig {
+            http_workers: clients * 2 + 2,
+            queue_cap: 8,
+            ..Default::default()
+        },
+        capacity_rps: 60.0,
+        overload_factor: 6.0,
+        phase_secs: 1.5,
+        clients,
+        top_n: 5,
+        overload_deadline_ms: 500,
+        seed: opts.seed,
+    };
+    let report = measure(&sc);
+
+    let mut t = Table::new(
+        &format!(
+            "HTTP serving — |V|={} κ={} queue_cap={} ({})",
+            sc.num_vertices,
+            sc.run.kappa,
+            sc.serve.queue_cap,
+            opts.descriptor()
+        ),
+        &[
+            "phase", "class", "sent", "ok", "shed", "miss", "err", "shed %", "p50 ms", "p99 ms",
+            "p99.9 ms",
+        ],
+    );
+    for p in &report.phases {
+        for c in &p.classes {
+            t.row(&[
+                p.name.to_string(),
+                c.class.to_string(),
+                format!("{}", c.sent),
+                format!("{}", c.ok),
+                format!("{}", c.shed),
+                format!("{}", c.deadline_miss),
+                format!("{}", c.error),
+                format!("{:.1}", c.shed_rate * 100.0),
+                format!("{:.2}", c.p50_ms),
+                format!("{:.2}", c.p99_ms),
+                format!("{:.2}", c.p999_ms),
+            ]);
+        }
+    }
+    t.emit(opts.csv_path("serving").as_deref());
+    for p in &report.phases {
+        println!(
+            "{}: offered {:.1} req/s, achieved {:.1} req/s over {:.2}s ({} sent, {} lost)",
+            p.name, p.offered_rps, p.achieved_rps, p.wall_secs, p.sent, p.lost
+        );
+    }
+    println!(
+        "lost: {} | metrics_valid: {} ({} samples) | shed_order_ok: {}",
+        report.lost, report.metrics_valid, report.metrics_samples, report.shed_order_ok
+    );
+    if let Some(dir) = &opts.csv_dir {
+        match emit_json(&report, &opts.descriptor(), dir) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("could not write BENCH_serving.json: {e}"),
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Precision;
+
+    fn tiny() -> ServingConfig {
+        ServingConfig {
+            num_vertices: 512,
+            run: RunConfig {
+                precision: Precision::Fixed(26),
+                kappa: 2,
+                iterations: 3,
+                batch_timeout_ms: 1,
+                num_shards: 1,
+                ..Default::default()
+            },
+            serve: ServeConfig { http_workers: 10, queue_cap: 4, ..Default::default() },
+            capacity_rps: 50.0,
+            overload_factor: 8.0,
+            phase_secs: 0.4,
+            clients: 4,
+            top_n: 3,
+            overload_deadline_ms: 400,
+            seed: 0xCAFE,
+        }
+    }
+
+    #[test]
+    fn closed_loop_never_loses_requests_and_metrics_parse() {
+        let report = measure(&tiny());
+        assert_eq!(report.phases.len(), 2);
+        assert_eq!(report.lost, 0, "every arrival must get an HTTP response");
+        assert!(report.metrics_valid, "live /metrics scrape must parse");
+        assert!(report.metrics_samples > 0);
+        for p in &report.phases {
+            assert_eq!(p.lost, 0, "{}", p.name);
+            assert!(p.sent > 0, "{} sent nothing", p.name);
+            assert!(p.wall_secs > 0.0);
+            assert_eq!(p.classes.len(), 3);
+            for c in &p.classes {
+                assert!(c.sent > 0, "{}/{} saw no traffic", p.name, c.class);
+                assert_eq!(
+                    c.sent,
+                    c.ok + c.shed + c.deadline_miss + c.error,
+                    "{}/{}: outcomes must partition sent",
+                    p.name,
+                    c.class
+                );
+            }
+        }
+        let capacity = &report.phases[0];
+        assert!(capacity.achieved_rps > 0.0, "capacity phase made progress");
+        // shed ordering is asserted by the release-mode CI gate where the
+        // sample counts make it statistically stable; here we only require
+        // it to be computed
+        let _ = report.shed_order_ok;
+    }
+
+    #[test]
+    fn json_shape() {
+        let report = measure(&ServingConfig { phase_secs: 0.25, ..tiny() });
+        let json = to_json(&report, "test");
+        assert!(json.contains("\"bench\": \"serving\""));
+        assert!(json.contains("\"metrics_valid\""));
+        assert!(json.contains("\"shed_order_ok\""));
+        assert!(json.contains("\"phases\""));
+        assert_eq!(json.matches("\"name\": \"capacity\"").count(), 1);
+        assert_eq!(json.matches("\"name\": \"overload\"").count(), 1);
+        assert_eq!(json.matches("\"class\": \"fast\"").count(), 2, "one per phase");
+        assert!(!json.contains(",\n  ]"), "no trailing commas");
+        assert!(!json.contains(",\n     ]"), "no trailing commas in classes");
+
+        let dir = std::env::temp_dir().join("ppr_serving_json_test");
+        let path = emit_json(&report, "test", &dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with('{') && text.trim_end().ends_with('}'));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -4,7 +4,8 @@
 //! - `experiment <id>` — regenerate a paper table/figure (table1, table2,
 //!   fig3..fig7, energy, all)
 //! - `serve` — start the serving engine on a dataset and drive a demo
-//!   workload, printing latency/throughput stats
+//!   workload, printing latency/throughput stats; with `--listen` it
+//!   exposes the HTTP front door (DESIGN.md §8) instead
 //! - `query` — one-shot PPR query
 //! - `generate` — materialize a Table 1 dataset to an edge-list file
 //! - `artifacts` — inspect the AOT artifact manifest
@@ -179,7 +180,7 @@ const USAGE: &str = "\
 ppr-spmv — reduced-precision streaming SpMV for Personalized PageRank
 USAGE:
   ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|shards|fusion|
-            multigraph|ladder|all>
+            multigraph|ladder|serving|all>
             [--full] [--scale N] [--requests N] [--iterations N] [--no-csv]
   ppr-spmv serve  [--graph NAME|--graph-file PATH] [--precision 26b]
             [--class static|fast|balanced|exact]
@@ -189,6 +190,10 @@ USAGE:
           multi-graph: repeat --graph NAME=SOURCE (SOURCE = edge-list path
             or dataset:NAME[@SCALE]) and/or a [registry] config section;
             [--registry-capacity N] [--default-graph NAME]
+          front door: --listen HOST:PORT serves HTTP instead of the demo
+            workload (POST /v1/graphs/NAME/query|submit, GET /v1/tickets/ID,
+            GET /v1/graphs|/healthz|/metrics); the [serve] config section
+            seeds it; [--http-workers N] [--queue-cap N] [--serve-seconds N]
   ppr-spmv query  --vertex V [--graph NAME|--graph-file PATH] [--top 10]
             [--engine native|pjrt|cpu] [--class static|fast|balanced|exact]
   ppr-spmv generate --graph NAME --out PATH [--scale N]
@@ -238,6 +243,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "ladder" => {
             bh::precision_ladder::run(&opts);
         }
+        "serving" => {
+            bh::serving::run(&opts);
+        }
         "all" => {
             bh::table1_datasets::run(&opts);
             bh::table2_resources::run(&opts);
@@ -253,6 +261,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             bh::fusion::run(&opts);
             bh::multigraph::run(&opts);
             bh::precision_ladder::run(&opts);
+            bh::serving::run(&opts);
         }
         other => bail!("unknown experiment {other}"),
     }
@@ -386,7 +395,8 @@ fn cmd_serve_registry(args: &Args, cfg: &RunConfig, reg_cfg: RegistryConfig) -> 
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
-    if let Some(reg_cfg) = registry_config(args)? {
+    let reg_cfg = registry_config(args)?;
+    if reg_cfg.is_some() {
         // registry mode must not silently swallow explicit single-graph
         // flags (a [registry] config section can engage it without any
         // --graph NAME=SOURCE pair on the command line)
@@ -403,6 +413,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                  use --graph NAME=SOURCE or drop the registry configuration"
             );
         }
+    }
+    if let Some(listen) = args.options.get("listen").cloned() {
+        return cmd_serve_front(args, &cfg, reg_cfg, &listen);
+    }
+    if let Some(reg_cfg) = reg_cfg {
         return cmd_serve_registry(args, &cfg, reg_cfg);
     }
     let graph = load_graph(args)?;
@@ -453,6 +468,76 @@ fn cmd_serve(args: &Args) -> Result<()> {
         snap.deadline_misses,
     );
     server.shutdown();
+    Ok(())
+}
+
+/// `serve --listen ADDR`: expose the HTTP front door (DESIGN.md §8)
+/// instead of running a demo workload in-process. The `[serve]` section
+/// of `--config` seeds the front-door configuration; `--listen`,
+/// `--http-workers` and `--queue-cap` override it. Serves a registry in
+/// multi-graph mode, otherwise the single `--graph`/`--graph-file` graph
+/// wrapped in a one-entry registry. `--serve-seconds N` bounds the run
+/// (useful for smoke tests); without it the process serves until killed.
+fn cmd_serve_front(
+    args: &Args,
+    cfg: &RunConfig,
+    reg_cfg: Option<RegistryConfig>,
+    listen: &str,
+) -> Result<()> {
+    let mut serve_cfg = match args.options.get("config") {
+        Some(path) => crate::config::ServeConfig::load(std::path::Path::new(path))?,
+        None => crate::config::ServeConfig::default(),
+    };
+    serve_cfg.listen = listen.to_string();
+    if let Some(w) = args.get::<usize>("http-workers") {
+        serve_cfg.http_workers = w;
+    }
+    if let Some(q) = args.get::<usize>("queue-cap") {
+        serve_cfg.queue_cap = q;
+    }
+    serve_cfg.validate()?;
+
+    let registry = match &reg_cfg {
+        Some(reg) => build_registry(reg)?,
+        None => {
+            // wrap the single graph in a one-entry registry so the HTTP
+            // routes (`/v1/graphs/{name}/...`) work uniformly
+            let name = if args.options.contains_key("graph-file") {
+                "default".to_string()
+            } else {
+                args.options.get("graph").cloned().unwrap_or_else(|| "ER-100k".to_string())
+            };
+            let graph = load_graph(args)?;
+            let registry = Arc::new(GraphRegistry::new(2));
+            registry.register_graph(&name, graph)?;
+            registry
+        }
+    };
+    let workers = args.get_or::<usize>("workers", 2);
+    let builder = engine_builder(args, cfg)?;
+    let server = Arc::new(builder.serve_registry(registry.clone(), workers)?);
+    let state = crate::serve::ServeState::new(server.clone(), registry.clone(), serve_cfg);
+    let front = crate::serve::FrontDoor::serve(state)?;
+    println!(
+        "front door on http://{} ({} graphs, {} core workers)",
+        front.addr(),
+        registry.len(),
+        workers
+    );
+    for name in registry.names() {
+        println!("  POST /v1/graphs/{name}/query    {{\"vertex\": 0, \"top_n\": 10}}");
+    }
+    println!("  GET  /v1/graphs | /healthz | /metrics");
+    match args.get::<u64>("serve-seconds") {
+        Some(secs) => {
+            std::thread::sleep(std::time::Duration::from_secs(secs));
+            println!("serve window ({secs}s) elapsed, shutting down");
+        }
+        None => loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        },
+    }
+    crate::serve::shutdown_stack(front, server);
     Ok(())
 }
 
@@ -660,6 +745,20 @@ mod tests {
         let reg =
             registry_config(&args("serve --graph a=x.txt --registry-capacity 4")).unwrap();
         assert_eq!(reg.unwrap().capacity, 4);
+    }
+
+    #[test]
+    fn serve_listen_mode_binds_serves_and_shuts_down() {
+        // ephemeral port + zero-second window: exercises the full
+        // front-door lifecycle (bind, announce, shutdown_stack)
+        let a = args(
+            "serve --graph AMZN --scale 400 --listen 127.0.0.1:0 --serve-seconds 0 \
+             --workers 1 --http-workers 2",
+        );
+        dispatch(a).unwrap();
+        // a bad override is rejected before anything binds
+        let bad = args("serve --graph AMZN --scale 400 --listen 127.0.0.1:0 --queue-cap 0");
+        assert!(dispatch(bad).is_err());
     }
 
     #[test]

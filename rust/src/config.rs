@@ -372,6 +372,132 @@ impl RegistryConfig {
     }
 }
 
+/// Typed `[serve]` section: knobs of the HTTP front door
+/// (`serve::FrontDoor`; DESIGN.md §8).
+///
+/// ```toml
+/// [serve]
+/// listen = "127.0.0.1:7171"   # bind address (port 0 → ephemeral)
+/// http_workers = 8            # connection-handling threads
+/// queue_cap = 64              # per-graph admitted in-flight bound
+/// shed_fast = 0.5             # fast sheds above 50% of queue_cap...
+/// shed_balanced = 0.75        # ...balanced above 75%...
+/// shed_exact = 1.0            # ...exact/static only when full
+/// retry_after_ms = 50         # Retry-After hint on 429s
+/// ticket_ttl_secs = 60        # async tickets expire after this
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Bind address (`host:port`; port 0 picks an ephemeral port).
+    pub listen: String,
+    /// Connection-handling threads in the front door's dedicated pool.
+    pub http_workers: usize,
+    /// Maximum admitted in-flight requests per graph. Admission compares
+    /// the *total* per-graph depth against each class's shed fraction of
+    /// this bound, so lower-fraction classes shed first.
+    pub queue_cap: usize,
+    /// Occupancy fraction above which `fast` requests are shed.
+    pub shed_fast: f64,
+    /// Occupancy fraction above which `balanced` requests are shed.
+    pub shed_balanced: f64,
+    /// Occupancy fraction above which `exact`/`static` requests are shed.
+    pub shed_exact: f64,
+    /// `Retry-After` hint returned with 429 responses (milliseconds).
+    pub retry_after_ms: u64,
+    /// Unpolled async tickets are dropped after this many seconds.
+    pub ticket_ttl_secs: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:7171".to_string(),
+            http_workers: 8,
+            queue_cap: 64,
+            shed_fast: 0.5,
+            shed_balanced: 0.75,
+            shed_exact: 1.0,
+            retry_after_ms: 50,
+            ticket_ttl_secs: 60,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Build from a parsed document (section `[serve]`), falling back to
+    /// defaults for missing keys.
+    pub fn from_doc(doc: &ConfigDoc) -> Result<Self> {
+        let mut cfg = ServeConfig::default();
+        if let Some(v) = doc.get("serve", "listen") {
+            cfg.listen = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("serve", "http_workers") {
+            cfg.http_workers = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("serve", "queue_cap") {
+            cfg.queue_cap = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("serve", "shed_fast") {
+            cfg.shed_fast = v.as_float()?;
+        }
+        if let Some(v) = doc.get("serve", "shed_balanced") {
+            cfg.shed_balanced = v.as_float()?;
+        }
+        if let Some(v) = doc.get("serve", "shed_exact") {
+            cfg.shed_exact = v.as_float()?;
+        }
+        if let Some(v) = doc.get("serve", "retry_after_ms") {
+            cfg.retry_after_ms = v.as_int()? as u64;
+        }
+        if let Some(v) = doc.get("serve", "ticket_ttl_secs") {
+            cfg.ticket_ttl_secs = v.as_int()? as u64;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a TOML-subset file.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_doc(&ConfigDoc::load(path)?)
+    }
+
+    /// Check parameter sanity, including the shed ordering that makes
+    /// overload degrade gracefully (fast sheds no later than balanced,
+    /// balanced no later than exact).
+    pub fn validate(&self) -> Result<()> {
+        if self.listen.is_empty() {
+            bail!("serve.listen must not be empty");
+        }
+        if self.http_workers == 0 || self.http_workers > 256 {
+            bail!("serve.http_workers must be in 1..=256, got {}", self.http_workers);
+        }
+        if self.queue_cap == 0 {
+            bail!("serve.queue_cap must be at least 1");
+        }
+        for (name, f) in [
+            ("shed_fast", self.shed_fast),
+            ("shed_balanced", self.shed_balanced),
+            ("shed_exact", self.shed_exact),
+        ] {
+            if !(f > 0.0 && f <= 1.0) {
+                bail!("serve.{name} must be in (0,1], got {f}");
+            }
+        }
+        if self.shed_fast > self.shed_balanced || self.shed_balanced > self.shed_exact {
+            bail!(
+                "shed fractions must be ordered fast <= balanced <= exact, got {} / {} / {}",
+                self.shed_fast,
+                self.shed_balanced,
+                self.shed_exact
+            );
+        }
+        if self.ticket_ttl_secs == 0 {
+            bail!("serve.ticket_ttl_secs must be at least 1");
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -504,6 +630,53 @@ mod tests {
         let reg = RegistryConfig::from_doc(&doc).unwrap().unwrap();
         assert_eq!(reg.default_graph.as_deref(), Some("main"));
         assert_eq!(reg.capacity, 8, "default capacity");
+    }
+
+    #[test]
+    fn serve_section_parses_and_defaults() {
+        let cfg = ServeConfig::from_doc(&ConfigDoc::parse("[engine]\nkappa = 4\n").unwrap())
+            .unwrap();
+        assert_eq!(cfg, ServeConfig::default(), "absent section yields defaults");
+        let doc = ConfigDoc::parse(
+            r#"
+            [serve]
+            listen = "0.0.0.0:9000"
+            http_workers = 4
+            queue_cap = 16
+            shed_fast = 0.25
+            shed_balanced = 0.5
+            shed_exact = 0.9
+            retry_after_ms = 100
+            ticket_ttl_secs = 30
+            "#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.listen, "0.0.0.0:9000");
+        assert_eq!(cfg.http_workers, 4);
+        assert_eq!(cfg.queue_cap, 16);
+        assert_eq!(cfg.shed_fast, 0.25);
+        assert_eq!(cfg.shed_exact, 0.9);
+        assert_eq!(cfg.retry_after_ms, 100);
+        assert_eq!(cfg.ticket_ttl_secs, 30);
+    }
+
+    #[test]
+    fn serve_section_rejects_bad_values() {
+        for bad in [
+            "[serve]\nhttp_workers = 0\n",
+            "[serve]\nqueue_cap = 0\n",
+            "[serve]\nshed_fast = 0.0\n",
+            "[serve]\nshed_fast = 1.5\n",
+            "[serve]\nticket_ttl_secs = 0\n",
+            "[serve]\nlisten = \"\"\n",
+            // shed ordering must stay fast <= balanced <= exact
+            "[serve]\nshed_fast = 0.9\nshed_balanced = 0.5\n",
+            "[serve]\nshed_balanced = 0.9\nshed_exact = 0.5\n",
+        ] {
+            let doc = ConfigDoc::parse(bad).unwrap();
+            assert!(ServeConfig::from_doc(&doc).is_err(), "{bad:?} should be rejected");
+        }
     }
 
     #[test]

@@ -264,6 +264,7 @@ impl PprEngine for LadderEngine {
             }
         }
         out.set_iterations(run.iterations);
+        out.set_rungs(run.segments.len().max(1));
         Ok(())
     }
 

@@ -50,7 +50,10 @@ pub use engine::{
     ThreadBoundEngine,
 };
 pub use registry::{GraphEntry, GraphRegistry, GraphSource, DEFAULT_REGISTRY_CAPACITY};
-pub use request::{default_graph_key, PprRequest, PprResponse, RankedVertex, DEFAULT_GRAPH};
+pub use request::{
+    default_graph_key, validate_query, PprRequest, PprResponse, QueryError, RankedVertex,
+    DEFAULT_GRAPH,
+};
 pub use score_block::ScoreBlock;
 pub use server::{Server, ServerConfig, Ticket};
 pub use stats::ServerStats;

@@ -105,10 +105,85 @@ pub struct PprResponse {
     pub ranking: Vec<RankedVertex>,
     /// PPR iterations the batch executed.
     pub iterations: usize,
+    /// Precision-ladder rung escalations the batch took (rungs − 1; zero
+    /// for single-rung/static engines). Exposed per-class by `/metrics`.
+    pub escalations: usize,
     /// Queue wait (enqueue → batch formation).
     pub queue_time: Duration,
     /// Total latency (enqueue → response).
     pub total_time: Duration,
+}
+
+/// A typed rejection of a malformed query, raised **before** anything is
+/// enqueued. The HTTP handlers map every variant to a 400; keeping the
+/// taxonomy here (not in the HTTP layer) means the in-process API rejects
+/// the same inputs the same way, and the core can never be panicked by
+/// client-controlled values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QueryError {
+    /// The personalization set was empty.
+    EmptyPersonalization,
+    /// `top_n` was 0 with no server default to fall back to.
+    ZeroTopN,
+    /// The accuracy-class string matched no known class.
+    UnknownClass(String),
+    /// A personalization vertex is outside `[0, num_vertices)`.
+    VertexOutOfRange {
+        /// The offending vertex id.
+        vertex: u64,
+        /// The graph's vertex count at validation time.
+        num_vertices: usize,
+    },
+}
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueryError::EmptyPersonalization => {
+                write!(f, "personalization set must not be empty")
+            }
+            QueryError::ZeroTopN => write!(f, "top_n must be at least 1"),
+            QueryError::UnknownClass(s) => {
+                write!(f, "unknown accuracy class {s:?} (expected static|fast|balanced|exact)")
+            }
+            QueryError::VertexOutOfRange { vertex, num_vertices } => {
+                write!(f, "vertex {vertex} out of range (|V|={num_vertices})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for QueryError {}
+
+/// Validate the JSON-facing query fields against a graph of
+/// `num_vertices` vertices. `class` is the raw client string (`None`
+/// means "use the server default"). Returns the parsed class on success.
+/// Vertex ids arrive as `u64` (straight from the JSON number) so an id
+/// beyond `u32` is a range error, never a silent truncation.
+pub fn validate_query(
+    vertices: &[u64],
+    top_n: usize,
+    class: Option<&str>,
+    num_vertices: usize,
+) -> Result<Option<AccuracyClass>, QueryError> {
+    if vertices.is_empty() {
+        return Err(QueryError::EmptyPersonalization);
+    }
+    if top_n == 0 {
+        return Err(QueryError::ZeroTopN);
+    }
+    let parsed = match class {
+        None => None,
+        Some(s) => Some(
+            AccuracyClass::parse(s).ok_or_else(|| QueryError::UnknownClass(s.to_string()))?,
+        ),
+    };
+    for &v in vertices {
+        if v >= num_vertices as u64 {
+            return Err(QueryError::VertexOutOfRange { vertex: v, num_vertices });
+        }
+    }
+    Ok(parsed)
 }
 
 /// Extract the top-N ranking from a dense lane of scores: descending
@@ -186,6 +261,57 @@ mod tests {
         assert_eq!(r.class, AccuracyClass::Static, "unclassed requests stay static");
         let r = r.with_class(AccuracyClass::Balanced);
         assert_eq!(r.class, AccuracyClass::Balanced);
+    }
+
+    #[test]
+    fn validate_query_rejects_empty_personalization() {
+        assert_eq!(
+            validate_query(&[], 5, None, 100),
+            Err(QueryError::EmptyPersonalization)
+        );
+    }
+
+    #[test]
+    fn validate_query_rejects_zero_top_n() {
+        assert_eq!(validate_query(&[1], 0, None, 100), Err(QueryError::ZeroTopN));
+    }
+
+    #[test]
+    fn validate_query_rejects_unknown_class_strings() {
+        for bad in ["turbo", "", "EXACTLY", "fast ish"] {
+            assert_eq!(
+                validate_query(&[1], 5, Some(bad), 100),
+                Err(QueryError::UnknownClass(bad.to_string())),
+                "{bad:?}"
+            );
+        }
+        // canonical labels and whitespace/case variants parse
+        for class in AccuracyClass::all() {
+            assert_eq!(validate_query(&[1], 5, Some(class.label()), 100), Ok(Some(class)));
+        }
+        assert_eq!(
+            validate_query(&[1], 5, Some(" Exact "), 100),
+            Ok(Some(AccuracyClass::Exact))
+        );
+        assert_eq!(validate_query(&[1], 5, None, 100), Ok(None), "absent class → default");
+    }
+
+    #[test]
+    fn validate_query_rejects_out_of_range_vertices() {
+        assert_eq!(
+            validate_query(&[0, 99, 100], 5, None, 100),
+            Err(QueryError::VertexOutOfRange { vertex: 100, num_vertices: 100 })
+        );
+        // ids beyond u32 are a range error, never a truncation
+        let huge = u64::from(u32::MAX) + 7;
+        assert_eq!(
+            validate_query(&[huge], 5, None, 100),
+            Err(QueryError::VertexOutOfRange { vertex: huge, num_vertices: 100 })
+        );
+        assert!(validate_query(&[0, 99], 5, None, 100).is_ok());
+        // errors format into client-presentable strings
+        let msg = validate_query(&[100], 5, None, 100).unwrap_err().to_string();
+        assert!(msg.contains("out of range"), "{msg}");
     }
 
     #[test]

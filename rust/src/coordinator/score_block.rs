@@ -31,6 +31,7 @@ pub struct ScoreBlock {
     num_vertices: usize,
     scores: Vec<f64>,
     iterations: usize,
+    rungs: usize,
 }
 
 impl ScoreBlock {
@@ -56,6 +57,7 @@ impl ScoreBlock {
         self.scores.clear();
         self.scores.resize(lanes * num_vertices, 0.0);
         self.iterations = 0;
+        self.rungs = 1;
     }
 
     /// Lanes held by the last batch.
@@ -76,6 +78,18 @@ impl ScoreBlock {
     /// Record the iteration count (engine side).
     pub fn set_iterations(&mut self, iterations: usize) {
         self.iterations = iterations;
+    }
+
+    /// Precision-ladder rungs the producing engine ran for the last batch
+    /// (1 for single-precision engines; `reset` restores 1). The serving
+    /// layer reports `rungs − 1` as the batch's escalation count.
+    pub fn rungs(&self) -> usize {
+        self.rungs.max(1)
+    }
+
+    /// Record the rung count (ladder engine side).
+    pub fn set_rungs(&mut self, rungs: usize) {
+        self.rungs = rungs.max(1);
     }
 
     /// Zero-copy view of lane `k`'s dense scores.
@@ -247,5 +261,18 @@ mod tests {
         assert_eq!(b.iterations(), 7);
         b.reset(1, 1);
         assert_eq!(b.iterations(), 0, "reset clears iterations");
+    }
+
+    #[test]
+    fn rungs_roundtrip_and_floor_at_one() {
+        let mut b = ScoreBlock::new();
+        assert_eq!(b.rungs(), 1, "fresh block reads as single-rung");
+        b.reset(1, 1);
+        b.set_rungs(3);
+        assert_eq!(b.rungs(), 3);
+        b.set_rungs(0);
+        assert_eq!(b.rungs(), 1, "rung count floors at 1");
+        b.reset(1, 1);
+        assert_eq!(b.rungs(), 1, "reset restores single-rung");
     }
 }

@@ -118,13 +118,27 @@ impl Ticket {
     }
 
     /// Block until the response arrives. With a deadline set, waits at
-    /// most until the deadline and then reports it exceeded.
+    /// most until the deadline and then reports it exceeded. A ticket
+    /// whose deadline has **already passed** returns the miss immediately
+    /// — it never blocks, and never reports the expiry as a transport
+    /// error (the HTTP layer maps deadline misses to 504, channel faults
+    /// to 500, so the two must stay distinguishable).
     pub fn wait(self) -> Result<PprResponse, String> {
         match self.deadline {
             None => self.rx.recv().map_err(|_| "response channel closed".to_string())?,
             Some(deadline) => {
-                let budget = deadline.saturating_duration_since(Instant::now());
-                match self.rx.recv_timeout(budget) {
+                let now = Instant::now();
+                if deadline <= now {
+                    // already expired: take a buffered response if the
+                    // solve beat the deadline, otherwise fail fast —
+                    // Disconnected here is still a deadline miss, not a
+                    // channel fault
+                    return match self.rx.try_recv() {
+                        Ok(resp) => resp,
+                        Err(_) => Err("deadline exceeded waiting for response".to_string()),
+                    };
+                }
+                match self.rx.recv_timeout(deadline - now) {
                     Ok(resp) => resp,
                     Err(mpsc::RecvTimeoutError::Timeout) => {
                         Err("deadline exceeded waiting for response".to_string())
@@ -483,6 +497,7 @@ impl Server {
                         vertex: req.vertex,
                         ranking,
                         iterations: block.iterations(),
+                        escalations: block.rungs().saturating_sub(1),
                         queue_time,
                         total_time,
                     };
@@ -681,6 +696,11 @@ impl Server {
         top_n: usize,
     ) -> Result<PprResponse, String> {
         self.submit_to(graph, vertex, top_n, None).wait()
+    }
+
+    /// The accuracy class applied to submissions that don't pick one.
+    pub fn default_class(&self) -> AccuracyClass {
+        self.default_class
     }
 
     /// Aggregate statistics across all graphs.
@@ -1019,6 +1039,63 @@ mod tests {
         assert_eq!(resp.graph.as_ref(), "er");
         assert_eq!(resp.class, AccuracyClass::Balanced);
         assert_eq!(resp.ranking[0].vertex, 9);
+        server.shutdown();
+    }
+
+    #[test]
+    fn expired_ticket_wait_returns_miss_immediately() {
+        // regression: wait() with an already-expired deadline used to call
+        // recv_timeout(0) and, if the sender was gone, surface "response
+        // channel closed" — a transport error where a deadline miss
+        // belongs (the HTTP layer maps the former to 500, the latter to
+        // 504). It must return the miss without blocking.
+        let (_tx, rx) = mpsc::channel::<Result<PprResponse, String>>();
+        let ticket = Ticket {
+            id: 1,
+            graph: Arc::from(DEFAULT_GRAPH),
+            class: AccuracyClass::Static,
+            vertex: 0,
+            deadline: Some(Instant::now() - Duration::from_secs(1)),
+            rx,
+        };
+        let sw = crate::util::Stopwatch::start();
+        let err = ticket.wait().unwrap_err();
+        assert!(err.contains("deadline"), "{err}");
+        assert!(sw.millis() < 100.0, "expired wait must not block ({} ms)", sw.millis());
+
+        // same expiry, but the sender already disconnected: still a miss
+        let (tx, rx) = mpsc::channel::<Result<PprResponse, String>>();
+        drop(tx);
+        let ticket = Ticket {
+            id: 2,
+            graph: Arc::from(DEFAULT_GRAPH),
+            class: AccuracyClass::Static,
+            vertex: 0,
+            deadline: Some(Instant::now() - Duration::from_secs(1)),
+            rx,
+        };
+        let err = ticket.wait().unwrap_err();
+        assert!(err.contains("deadline"), "disconnected+expired must be a miss: {err}");
+    }
+
+    #[test]
+    fn expired_ticket_wait_still_delivers_buffered_response() {
+        // the solve finished before the caller got around to wait(): the
+        // buffered response is returned even though the deadline has since
+        // passed (the server-side respond-time expiry check is the
+        // authority on misses, not the caller's scheduling luck)
+        let server = start_server(1, 2);
+        let ticket = server.submit_with(3, 2, Some(Duration::from_millis(200)));
+        // let the solve complete and the response land in the channel
+        let gate = Instant::now() + Duration::from_secs(10);
+        while server.stats().snapshot().requests == 0 {
+            assert!(Instant::now() < gate, "response never produced");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // now let the deadline lapse before waiting
+        std::thread::sleep(Duration::from_millis(210));
+        let resp = ticket.wait().expect("buffered response survives expiry");
+        assert_eq!(resp.vertex, 3);
         server.shutdown();
     }
 

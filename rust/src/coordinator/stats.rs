@@ -1,8 +1,14 @@
 //! Serving statistics: latency percentiles (log-bucketed histogram) and
-//! throughput counters, thread-safe via atomics + a mutex-guarded
-//! histogram (contention-free relative to millisecond-scale batches).
+//! throughput counters.
+//!
+//! All counters live behind a **single** mutex so [`ServerStats::snapshot`]
+//! is a consistent point-in-time read: a scraper can never observe a torn
+//! state such as `deadline_misses > requests` that independent atomics
+//! would permit mid-update. Writers hold the lock for a handful of
+//! nanoseconds per event — contention-free relative to millisecond-scale
+//! batches — and the aggregate invariant is exercised by a concurrent
+//! hammer test below.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -12,13 +18,18 @@ const BUCKETS: usize = 128;
 /// Thread-safe server statistics.
 #[derive(Debug, Default)]
 pub struct ServerStats {
-    requests: AtomicU64,
-    batches: AtomicU64,
-    batch_fill_sum: AtomicU64,
-    errors: AtomicU64,
-    deadline_misses: AtomicU64,
-    latency: Mutex<Histogram>,
-    queue: Mutex<Histogram>,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    batches: u64,
+    batch_fill_sum: u64,
+    errors: u64,
+    deadline_misses: u64,
+    latency: Histogram,
+    queue: Histogram,
 }
 
 #[derive(Debug, Clone)]
@@ -92,44 +103,47 @@ impl ServerStats {
 
     /// Record one completed batch of `fill` requests.
     pub fn record_batch(&self, fill: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batch_fill_sum.fetch_add(fill as u64, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        inner.batches += 1;
+        inner.batch_fill_sum += fill as u64;
     }
 
     /// Record one completed request with its latency split.
     pub fn record_request(&self, queue: Duration, total: Duration) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        self.latency.lock().unwrap().record(total);
-        self.queue.lock().unwrap().record(queue);
+        let mut inner = self.inner.lock().unwrap();
+        inner.requests += 1;
+        inner.latency.record(total);
+        inner.queue.record(queue);
     }
 
     /// Record a failed request.
     pub fn record_error(&self) {
-        self.errors.fetch_add(1, Ordering::Relaxed);
+        self.inner.lock().unwrap().errors += 1;
     }
 
     /// Record a request dropped because its deadline passed in the queue.
     pub fn record_deadline_miss(&self) {
-        self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        self.inner.lock().unwrap().deadline_misses += 1;
     }
 
-    /// Snapshot all counters.
+    /// Snapshot all counters atomically (one lock acquisition, so the
+    /// returned fields are mutually consistent).
     pub fn snapshot(&self) -> StatsSnapshot {
-        let requests = self.requests.load(Ordering::Relaxed);
-        let batches = self.batches.load(Ordering::Relaxed);
-        let fill_sum = self.batch_fill_sum.load(Ordering::Relaxed);
-        let lat = self.latency.lock().unwrap().clone();
-        let q = self.queue.lock().unwrap().clone();
+        let inner = self.inner.lock().unwrap();
         StatsSnapshot {
-            requests,
-            batches,
-            mean_batch_fill: if batches > 0 { fill_sum as f64 / batches as f64 } else { 0.0 },
-            errors: self.errors.load(Ordering::Relaxed),
-            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
-            latency_p50_ms: lat.quantile_us(0.50) / 1e3,
-            latency_p95_ms: lat.quantile_us(0.95) / 1e3,
-            latency_p99_ms: lat.quantile_us(0.99) / 1e3,
-            queue_p50_ms: q.quantile_us(0.50) / 1e3,
+            requests: inner.requests,
+            batches: inner.batches,
+            mean_batch_fill: if inner.batches > 0 {
+                inner.batch_fill_sum as f64 / inner.batches as f64
+            } else {
+                0.0
+            },
+            errors: inner.errors,
+            deadline_misses: inner.deadline_misses,
+            latency_p50_ms: inner.latency.quantile_us(0.50) / 1e3,
+            latency_p95_ms: inner.latency.quantile_us(0.95) / 1e3,
+            latency_p99_ms: inner.latency.quantile_us(0.99) / 1e3,
+            queue_p50_ms: inner.queue.quantile_us(0.50) / 1e3,
         }
     }
 }
@@ -137,6 +151,8 @@ impl ServerStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
 
     #[test]
     fn histogram_quantiles_ordered() {
@@ -169,5 +185,65 @@ mod tests {
         let c = Histogram::bucket_of(Duration::from_millis(100));
         assert!(a < b && b < c);
         assert!(c < BUCKETS);
+    }
+
+    /// Concurrent hammer: every writer thread records a request strictly
+    /// before the matching deadline miss, so the invariant
+    /// `deadline_misses <= requests` must hold in **every** snapshot a
+    /// concurrent reader takes. With the former independent-atomics
+    /// layout (snapshot loaded `requests` before `deadline_misses`) this
+    /// tears; the aggregate-under-lock snapshot cannot.
+    #[test]
+    fn snapshot_never_tears_across_fields() {
+        let stats = Arc::new(ServerStats::new());
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let writers: Vec<_> = (0..4)
+            .map(|_| {
+                let stats = Arc::clone(&stats);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut n = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        stats.record_request(
+                            Duration::from_micros(5),
+                            Duration::from_micros(10),
+                        );
+                        stats.record_deadline_miss();
+                        n += 1;
+                    }
+                    n
+                })
+            })
+            .collect();
+
+        let reader = {
+            let stats = Arc::clone(&stats);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut reads = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = stats.snapshot();
+                    assert!(
+                        snap.deadline_misses <= snap.requests,
+                        "torn snapshot: misses {} > requests {}",
+                        snap.deadline_misses,
+                        snap.requests
+                    );
+                    reads += 1;
+                }
+                reads
+            })
+        };
+
+        std::thread::sleep(Duration::from_millis(100));
+        stop.store(true, Ordering::Relaxed);
+        let written: u64 = writers.into_iter().map(|h| h.join().unwrap()).sum();
+        let reads = reader.join().unwrap();
+        assert!(written > 0 && reads > 0);
+
+        let snap = stats.snapshot();
+        assert_eq!(snap.requests, written);
+        assert_eq!(snap.deadline_misses, written);
     }
 }

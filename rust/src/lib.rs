@@ -29,6 +29,7 @@ pub mod graph;
 pub mod metrics;
 pub mod ppr;
 pub mod runtime;
+pub mod serve;
 pub mod spmv;
 pub mod testutil;
 pub mod util;

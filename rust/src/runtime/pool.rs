@@ -293,6 +293,32 @@ impl WorkerPool {
         }
         slots.into_iter().map(|s| s.expect("task wrote its slot")).collect()
     }
+
+    /// Enqueue one detached task: it runs on some pool worker, the caller
+    /// does not wait, and the task owns its data (`'static`) — unlike
+    /// [`fan_out`](Self::fan_out) there is no barrier upholding shorter
+    /// borrows. Used by the HTTP front door to hand accepted connections
+    /// to a **dedicated** pool (long-lived connection handlers on the
+    /// global compute pool would starve engine fan-outs). Tasks submitted
+    /// after the pool started dropping may be discarded without running.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        // swallow unwinds here so a panicking detached task can never kill
+        // a worker (worker_loop relies on tasks not unwinding)
+        let task: Task = Box::new(move || {
+            let _ = std::panic::catch_unwind(AssertUnwindSafe(f));
+        });
+        if self.max_workers == 0 {
+            // degenerate pool: run inline rather than queueing forever
+            task();
+            return;
+        }
+        self.ensure_workers(self.max_workers);
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue");
+            q.push_back(task);
+        }
+        self.shared.task_ready.notify_all();
+    }
 }
 
 impl Drop for WorkerPool {
@@ -439,6 +465,31 @@ mod tests {
             inner.fan_out(vec![i, i + 1], false, |j| j * 2).iter().sum::<usize>()
         });
         assert_eq!(out, vec![42, 82]);
+    }
+
+    #[test]
+    fn detached_submit_runs_and_survives_panics() {
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // a panicking detached task must not take a worker down
+        pool.submit(|| panic!("detached task exploded"));
+        let c = counter.clone();
+        pool.submit(move || {
+            c.fetch_add(100, Ordering::SeqCst);
+        });
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while counter.load(Ordering::SeqCst) != 108 {
+            assert!(std::time::Instant::now() < deadline, "detached tasks never completed");
+            std::thread::yield_now();
+        }
+        // fan_out still works on the same pool afterwards
+        assert_eq!(pool.fan_out(vec![1, 2], false, |i| i * 2), vec![2, 4]);
     }
 
     #[test]

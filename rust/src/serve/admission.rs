@@ -1,0 +1,222 @@
+//! Admission control between the socket and the serving core: bounded
+//! per-graph in-flight accounting with class-ordered load shedding.
+//!
+//! Policy (DESIGN.md §8): each graph gets one budget of `queue_cap`
+//! admitted-but-unfinished requests. A request of class `c` is admitted
+//! iff the graph's **total** in-flight count is below
+//! `ceil(queue_cap × shed_fraction(c))`, where the fractions are ordered
+//! `fast ≤ balanced ≤ exact` (`static` shares `exact`'s fraction — it is
+//! the paper's fixed-precision baseline, not a degradable tier). Under
+//! load the queue therefore fills past the `fast` threshold first: `fast`
+//! requests shed (HTTP 429 + `Retry-After`) while `balanced` and `exact`
+//! still admit, then `balanced` sheds, and `exact` only when the queue is
+//! truly full — overload degrades rank quality before it collapses
+//! latency.
+//!
+//! Admission is RAII: [`Admission::try_admit`] returns an [`AdmitGuard`]
+//! that decrements the in-flight count on drop, so every exit path
+//! (served, deadline-missed, handler panic) releases its slot.
+
+use crate::config::ServeConfig;
+use crate::fixed::AccuracyClass;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Index of a class in per-graph count arrays (`AccuracyClass::all()`
+/// order: static, fast, balanced, exact).
+fn class_index(class: AccuracyClass) -> usize {
+    match class {
+        AccuracyClass::Static => 0,
+        AccuracyClass::Fast => 1,
+        AccuracyClass::Balanced => 2,
+        AccuracyClass::Exact => 3,
+    }
+}
+
+#[derive(Debug, Default)]
+struct Counts {
+    /// In-flight per class, [`AccuracyClass::all`] order.
+    per_class: [usize; 4],
+}
+
+impl Counts {
+    fn total(&self) -> usize {
+        self.per_class.iter().sum()
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    /// `graph → in-flight counts`. Entries persist once created (the
+    /// graph set is small and bounded by the registry).
+    depths: Mutex<BTreeMap<String, Counts>>,
+    /// Admission threshold per class (absolute request counts).
+    limits: [usize; 4],
+    retry_after_ms: u64,
+}
+
+/// The admission controller. Cheap to clone (shared state).
+#[derive(Debug, Clone)]
+pub struct Admission {
+    inner: Arc<Inner>,
+}
+
+impl Admission {
+    /// Build from the `[serve]` config (assumed validated).
+    pub fn new(cfg: &ServeConfig) -> Self {
+        let limit = |frac: f64| -> usize {
+            (((cfg.queue_cap as f64) * frac).ceil() as usize).max(1)
+        };
+        Self {
+            inner: Arc::new(Inner {
+                depths: Mutex::new(BTreeMap::new()),
+                limits: [
+                    limit(cfg.shed_exact), // static shares exact's fraction
+                    limit(cfg.shed_fast),
+                    limit(cfg.shed_balanced),
+                    limit(cfg.shed_exact),
+                ],
+                retry_after_ms: cfg.retry_after_ms,
+            }),
+        }
+    }
+
+    /// The admission threshold of `class` (diagnostics/tests).
+    pub fn limit(&self, class: AccuracyClass) -> usize {
+        self.inner.limits[class_index(class)]
+    }
+
+    /// `Retry-After` hint for shed responses, in milliseconds.
+    pub fn retry_after_ms(&self) -> u64 {
+        self.inner.retry_after_ms
+    }
+
+    /// Try to admit one request of `class` on `graph`. `Err(Shed)` means
+    /// the caller must answer 429; on success the returned guard holds
+    /// the slot until dropped.
+    pub fn try_admit(&self, graph: &str, class: AccuracyClass) -> Result<AdmitGuard, Shed> {
+        let idx = class_index(class);
+        let mut depths = self.inner.depths.lock().unwrap();
+        let counts = depths.entry(graph.to_string()).or_default();
+        if counts.total() >= self.inner.limits[idx] {
+            return Err(Shed { retry_after_ms: self.inner.retry_after_ms });
+        }
+        counts.per_class[idx] += 1;
+        drop(depths);
+        Ok(AdmitGuard { inner: self.inner.clone(), graph: graph.to_string(), idx })
+    }
+
+    /// Current in-flight count for `(graph, class)`.
+    pub fn depth(&self, graph: &str, class: AccuracyClass) -> usize {
+        let depths = self.inner.depths.lock().unwrap();
+        depths.get(graph).map_or(0, |c| c.per_class[class_index(class)])
+    }
+
+    /// Snapshot of every `(graph, class, depth)` seen so far (including
+    /// zeros — Prometheus gauges should not disappear when idle).
+    pub fn snapshot(&self) -> Vec<(String, AccuracyClass, usize)> {
+        let depths = self.inner.depths.lock().unwrap();
+        let mut out = Vec::with_capacity(depths.len() * 4);
+        for (graph, counts) in depths.iter() {
+            for class in AccuracyClass::all() {
+                out.push((graph.clone(), class, counts.per_class[class_index(class)]));
+            }
+        }
+        out
+    }
+}
+
+/// Rejection: the caller should answer 429 with this `Retry-After` hint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shed {
+    /// Suggested client back-off (milliseconds).
+    pub retry_after_ms: u64,
+}
+
+/// RAII admission slot: dropping it releases the in-flight count.
+#[derive(Debug)]
+pub struct AdmitGuard {
+    inner: Arc<Inner>,
+    graph: String,
+    idx: usize,
+}
+
+impl Drop for AdmitGuard {
+    fn drop(&mut self) {
+        let mut depths = self.inner.depths.lock().unwrap();
+        if let Some(counts) = depths.get_mut(&self.graph) {
+            counts.per_class[self.idx] = counts.per_class[self.idx].saturating_sub(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(queue_cap: usize) -> ServeConfig {
+        ServeConfig { queue_cap, ..Default::default() }
+    }
+
+    #[test]
+    fn admits_until_class_threshold() {
+        // cap 8, fast threshold ceil(8 × 0.5) = 4
+        let adm = Admission::new(&cfg(8));
+        assert_eq!(adm.limit(AccuracyClass::Fast), 4);
+        assert_eq!(adm.limit(AccuracyClass::Balanced), 6);
+        assert_eq!(adm.limit(AccuracyClass::Exact), 8);
+        assert_eq!(adm.limit(AccuracyClass::Static), 8);
+
+        let mut guards = Vec::new();
+        for _ in 0..4 {
+            guards.push(adm.try_admit("g", AccuracyClass::Fast).expect("below threshold"));
+        }
+        // fast is now at its threshold: the next fast sheds...
+        let shed = adm.try_admit("g", AccuracyClass::Fast).unwrap_err();
+        assert_eq!(shed.retry_after_ms, adm.retry_after_ms());
+        // ...while balanced and exact still admit
+        guards.push(adm.try_admit("g", AccuracyClass::Balanced).expect("balanced survives"));
+        guards.push(adm.try_admit("g", AccuracyClass::Balanced).expect("balanced survives"));
+        assert!(adm.try_admit("g", AccuracyClass::Balanced).is_err(), "balanced at 6");
+        guards.push(adm.try_admit("g", AccuracyClass::Exact).expect("exact survives"));
+        guards.push(adm.try_admit("g", AccuracyClass::Exact).expect("exact survives"));
+        assert!(adm.try_admit("g", AccuracyClass::Exact).is_err(), "queue truly full");
+
+        assert_eq!(adm.depth("g", AccuracyClass::Fast), 4);
+        assert_eq!(adm.depth("g", AccuracyClass::Balanced), 2);
+        drop(guards);
+        assert_eq!(adm.depth("g", AccuracyClass::Fast), 0, "guards release on drop");
+        adm.try_admit("g", AccuracyClass::Fast).expect("slots recycled");
+    }
+
+    #[test]
+    fn graphs_have_independent_budgets() {
+        let adm = Admission::new(&cfg(1));
+        let _a = adm.try_admit("a", AccuracyClass::Exact).unwrap();
+        assert!(adm.try_admit("a", AccuracyClass::Exact).is_err(), "a is full");
+        let _b = adm.try_admit("b", AccuracyClass::Exact).expect("b has its own budget");
+    }
+
+    #[test]
+    fn snapshot_lists_all_classes_of_seen_graphs() {
+        let adm = Admission::new(&cfg(4));
+        let _g = adm.try_admit("g", AccuracyClass::Balanced).unwrap();
+        let snap = adm.snapshot();
+        assert_eq!(snap.len(), 4, "all four classes, including zeros");
+        let balanced = snap
+            .iter()
+            .find(|(_, c, _)| *c == AccuracyClass::Balanced)
+            .map(|(_, _, d)| *d);
+        assert_eq!(balanced, Some(1));
+        assert!(snap.iter().all(|(g, _, _)| g == "g"));
+    }
+
+    #[test]
+    fn tiny_caps_always_admit_at_least_one() {
+        // ceil(1 × 0.5) = 1: even the lowest class can use an empty queue
+        let adm = Admission::new(&cfg(1));
+        let g = adm.try_admit("g", AccuracyClass::Fast).expect("empty queue admits");
+        assert!(adm.try_admit("g", AccuracyClass::Fast).is_err());
+        drop(g);
+    }
+}

@@ -1,0 +1,371 @@
+//! Request routing and endpoint handlers of the HTTP front door.
+//!
+//! Endpoints (DESIGN.md §8; `curl` quickstart in the repo README):
+//!
+//! - `GET  /healthz` — liveness.
+//! - `GET  /metrics` — Prometheus text exposition.
+//! - `GET  /v1/graphs` — registry listing.
+//! - `POST /v1/graphs/{name}/query` — synchronous PPR query.
+//! - `POST /v1/graphs/{name}/submit` — asynchronous submission (202 +
+//!   ticket id).
+//! - `GET  /v1/tickets/{id}` — poll an async submission.
+//!
+//! Status mapping: malformed bodies and invalid query parameters → 400;
+//! unknown graphs/tickets → 404; admission shed → 429 with `Retry-After`;
+//! deadline misses → 504; engine/transport faults → 500. The mapping
+//! leans on `coordinator::request::validate_query` and the typed
+//! [`QueryError`], so the HTTP layer and the in-process API reject the
+//! same inputs identically.
+
+use super::http::{Request, Response};
+use super::state::{PollOutcome, ServeState};
+use crate::coordinator::request::{validate_query, PprResponse};
+use crate::coordinator::server::Ticket;
+use crate::graph::VertexId;
+use crate::util::json::{self, Json};
+use crate::util::Stopwatch;
+use std::time::Duration;
+
+/// Default top-N when the request body omits `top_n` (an explicit 0 is a
+/// 400 — see `QueryError::ZeroTopN`).
+pub const DEFAULT_TOP_N: usize = 10;
+
+/// Dispatch one request to its handler.
+pub fn handle(state: &ServeState, req: &Request) -> Response {
+    let segments = req.segments();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => healthz(state),
+        ("GET", ["metrics"]) => metrics(state),
+        ("GET", ["v1", "graphs"]) => list_graphs(state),
+        ("POST", ["v1", "graphs", name, "query"]) => query(state, *name, req, false),
+        ("POST", ["v1", "graphs", name, "submit"]) => query(state, *name, req, true),
+        ("GET", ["v1", "tickets", id]) => poll_ticket(state, *id),
+        // known paths with the wrong verb get a 405, the rest 404
+        (_, ["healthz" | "metrics"] | ["v1", "graphs", ..] | ["v1", "tickets", _]) => {
+            Response::error(405, "method not allowed")
+        }
+        _ => Response::error(404, &format!("no route for {}", req.path)),
+    }
+}
+
+fn healthz(state: &ServeState) -> Response {
+    Response::json(
+        200,
+        &json::obj(vec![
+            ("status", json::str("ok")),
+            ("graphs", json::num(state.registry.len() as f64)),
+        ]),
+    )
+}
+
+fn metrics(state: &ServeState) -> Response {
+    let depths = state.admission.snapshot();
+    let text = state.metrics.render(&depths);
+    Response::text(200, "text/plain; version=0.0.4", text)
+}
+
+fn list_graphs(state: &ServeState) -> Response {
+    let mut graphs = Vec::new();
+    for name in state.registry.names() {
+        graphs.push(json::obj(vec![
+            ("name", json::str(name.as_ref())),
+            (
+                "num_vertices",
+                json::num(state.registry.num_vertices(&name).unwrap_or(0) as f64),
+            ),
+            ("epoch", json::num(state.registry.epoch(&name).unwrap_or(0) as f64)),
+            ("reloads", json::num(state.registry.reloads(&name).unwrap_or(0) as f64)),
+        ]));
+    }
+    let default = match state.registry.default_graph() {
+        Some(name) => json::str(name.as_ref()),
+        None => Json::Null,
+    };
+    Response::json(
+        200,
+        &json::obj(vec![("graphs", Json::Arr(graphs)), ("default", default)]),
+    )
+}
+
+/// Parsed body of a query/submit request.
+struct QueryBody {
+    vertices: Vec<u64>,
+    top_n: usize,
+    class: Option<String>,
+    deadline_ms: Option<u64>,
+}
+
+fn parse_body(body: &[u8]) -> Result<QueryBody, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    if text.trim().is_empty() {
+        return Err("missing JSON body".to_string());
+    }
+    let doc = Json::parse(text).map_err(|e| format!("malformed JSON body: {e:#}"))?;
+    if !matches!(doc, Json::Obj(_)) {
+        return Err("body must be a JSON object".to_string());
+    }
+
+    let vertices: Vec<u64> = match (doc.get("vertices"), doc.get("vertex")) {
+        (Some(arr), _) => {
+            let items = arr
+                .as_array()
+                .ok_or_else(|| "\"vertices\" must be an array".to_string())?;
+            items
+                .iter()
+                .map(|v| {
+                    v.as_u64()
+                        .ok_or_else(|| "vertex ids must be non-negative integers".to_string())
+                })
+                .collect::<Result<_, _>>()?
+        }
+        (None, Some(v)) => {
+            vec![v
+                .as_u64()
+                .ok_or_else(|| "\"vertex\" must be a non-negative integer".to_string())?]
+        }
+        (None, None) => return Err("missing \"vertices\" (or \"vertex\")".to_string()),
+    };
+
+    let top_n = match doc.get("top_n") {
+        None => DEFAULT_TOP_N,
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| "\"top_n\" must be a non-negative integer".to_string())?
+            as usize,
+    };
+    let class = match doc.get("class") {
+        None => None,
+        Some(v) => {
+            Some(v.as_str().ok_or_else(|| "\"class\" must be a string".to_string())?.to_string())
+        }
+    };
+    let deadline_ms = match doc.get("deadline_ms") {
+        None => None,
+        Some(v) => Some(
+            v.as_u64()
+                .ok_or_else(|| "\"deadline_ms\" must be a non-negative integer".to_string())?,
+        ),
+    };
+    Ok(QueryBody { vertices, top_n, class, deadline_ms })
+}
+
+/// Map a serving-core error string onto the HTTP status taxonomy.
+fn core_error_status(msg: &str) -> u16 {
+    if msg.contains("deadline") {
+        504
+    } else if msg.contains("unknown graph") {
+        404
+    } else if msg.contains("out of range") {
+        400
+    } else {
+        500
+    }
+}
+
+fn render_result(resp: &PprResponse) -> Json {
+    let ranking: Vec<Json> = resp
+        .ranking
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("vertex", json::num(f64::from(r.vertex))),
+                ("score", json::num(r.score)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("vertex", json::num(f64::from(resp.vertex))),
+        ("ranking", Json::Arr(ranking)),
+        ("iterations", json::num(resp.iterations as f64)),
+        ("escalations", json::num(resp.escalations as f64)),
+        ("queue_ms", json::num(resp.queue_time.as_secs_f64() * 1e3)),
+        ("total_ms", json::num(resp.total_time.as_secs_f64() * 1e3)),
+    ])
+}
+
+/// Shared implementation of `query` (sync, waits) and `submit` (async,
+/// returns a ticket). Every exit path records metrics under the graph's
+/// client-facing name.
+fn query(state: &ServeState, graph: &str, req: &Request, is_submit: bool) -> Response {
+    let sw = Stopwatch::start();
+    let finish = |label: &'static str, escalations: u64, resp: Response| -> Response {
+        state.metrics.record(graph, label, resp.status, sw.seconds(), escalations);
+        resp
+    };
+
+    let body = match parse_body(&req.body) {
+        Ok(b) => b,
+        Err(msg) => return finish("unknown", 0, Response::error(400, &msg)),
+    };
+
+    // route before validating vertex ranges (the range check needs |V|)
+    let Some((key, num_vertices)) = state.registry.route(graph) else {
+        return finish("unknown", 0, Response::error(404, &format!("unknown graph {graph}")));
+    };
+
+    let parsed_class =
+        match validate_query(&body.vertices, body.top_n, body.class.as_deref(), num_vertices) {
+            Ok(c) => c,
+            Err(e) => return finish("unknown", 0, Response::error(400, &e.to_string())),
+        };
+    let class = parsed_class.unwrap_or_else(|| state.server.default_class());
+    let label = class.label();
+
+    if is_submit && body.vertices.len() != 1 {
+        let msg = "submit accepts exactly one personalization vertex";
+        return finish(label, 0, Response::error(400, msg));
+    }
+
+    // admission: one slot per HTTP request, released when the guard drops
+    let guard = match state.admission.try_admit(graph, class) {
+        Ok(g) => g,
+        Err(shed) => {
+            let resp = Response::error(429, "overloaded, request shed")
+                .with_header("retry-after", format_retry_after(shed.retry_after_ms));
+            return finish(label, 0, resp);
+        }
+    };
+
+    let deadline = body.deadline_ms.map(Duration::from_millis);
+    let submit_one = |v: u64| -> Ticket {
+        state.server.submit_to_class(key.as_ref(), v as VertexId, body.top_n, deadline, class)
+    };
+
+    if is_submit {
+        let ticket = submit_one(body.vertices[0]);
+        let id = state.tickets.insert(ticket, guard);
+        let body = json::obj(vec![
+            ("ticket", json::num(id as f64)),
+            ("graph", json::str(graph)),
+            ("class", json::str(label)),
+        ]);
+        return finish(label, 0, Response::json(202, &body));
+    }
+
+    // sync: submit every vertex first (they batch together), then wait
+    let tickets: Vec<Ticket> = body.vertices.iter().map(|&v| submit_one(v)).collect();
+    let mut results = Vec::with_capacity(tickets.len());
+    let mut escalations = 0u64;
+    for ticket in tickets {
+        match ticket.wait() {
+            Ok(resp) => {
+                escalations += resp.escalations as u64;
+                results.push(render_result(&resp));
+            }
+            Err(msg) => {
+                let status = core_error_status(&msg);
+                drop(guard);
+                return finish(label, escalations, Response::error(status, &msg));
+            }
+        }
+    }
+    drop(guard);
+    let body = json::obj(vec![
+        ("graph", json::str(graph)),
+        ("class", json::str(label)),
+        ("results", Json::Arr(results)),
+    ]);
+    finish(label, escalations, Response::json(200, &body))
+}
+
+/// `Retry-After` is specified in whole seconds; round sub-second hints up
+/// so clients never retry earlier than asked.
+fn format_retry_after(ms: u64) -> String {
+    ms.div_ceil(1000).max(1).to_string()
+}
+
+fn poll_ticket(state: &ServeState, id: &str) -> Response {
+    let Ok(id) = id.parse::<u64>() else {
+        return Response::error(400, "ticket id must be an integer");
+    };
+    match state.tickets.poll(id) {
+        PollOutcome::NotFound => Response::error(404, "no such ticket"),
+        PollOutcome::Pending => Response::json(
+            200,
+            &json::obj(vec![
+                ("status", json::str("pending")),
+                ("ticket", json::num(id as f64)),
+            ]),
+        ),
+        PollOutcome::Done(Ok(resp)) => {
+            state.metrics.record(
+                resp.graph.as_ref(),
+                resp.class.label(),
+                200,
+                resp.total_time.as_secs_f64(),
+                resp.escalations as u64,
+            );
+            Response::json(
+                200,
+                &json::obj(vec![
+                    ("status", json::str("done")),
+                    ("result", render_result(&resp)),
+                ]),
+            )
+        }
+        PollOutcome::Done(Err(msg)) => {
+            let status = core_error_status(&msg);
+            // the final verdict of an async request lands here; graph and
+            // class left with the consumed entry, so attribute failures to
+            // the ticket pseudo-graph
+            state.metrics.record("_tickets", "unknown", status, 0.0, 0);
+            Response::error(status, &msg)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_after_rounds_up_to_whole_seconds() {
+        assert_eq!(format_retry_after(1), "1");
+        assert_eq!(format_retry_after(999), "1");
+        assert_eq!(format_retry_after(1000), "1");
+        assert_eq!(format_retry_after(1001), "2");
+        assert_eq!(format_retry_after(0), "1", "zero hint still asks for a pause");
+    }
+
+    #[test]
+    fn core_errors_map_to_honest_statuses() {
+        assert_eq!(core_error_status("deadline exceeded in queue"), 504);
+        assert_eq!(core_error_status("deadline exceeded waiting for response"), 504);
+        assert_eq!(core_error_status("unknown graph zz"), 404);
+        assert_eq!(core_error_status("vertex 9 out of range (|V|=5)"), 400);
+        assert_eq!(core_error_status("engine error: shard fault"), 500);
+        assert_eq!(core_error_status("response channel closed"), 500);
+    }
+
+    #[test]
+    fn body_parser_accepts_both_vertex_forms() {
+        let b = parse_body(br#"{"vertices":[1,2,3],"top_n":5}"#).unwrap();
+        assert_eq!(b.vertices, vec![1, 2, 3]);
+        assert_eq!(b.top_n, 5);
+        assert!(b.class.is_none() && b.deadline_ms.is_none());
+
+        let b = parse_body(br#"{"vertex":7,"class":"fast","deadline_ms":250}"#).unwrap();
+        assert_eq!(b.vertices, vec![7]);
+        assert_eq!(b.top_n, DEFAULT_TOP_N, "absent top_n takes the documented default");
+        assert_eq!(b.class.as_deref(), Some("fast"));
+        assert_eq!(b.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn body_parser_rejects_malformed_input() {
+        for bad in [
+            &b""[..],
+            br#"[1,2]"#,
+            br#"{"top_n":3}"#,
+            br#"{"vertices":"one"}"#,
+            br#"{"vertices":[1.5]}"#,
+            br#"{"vertices":[-1]}"#,
+            br#"{"vertex":7,"top_n":"many"}"#,
+            br#"{"vertex":7,"class":3}"#,
+            br#"{"vertex":7,"deadline_ms":-5}"#,
+            br#"{"vertex":7"#,
+        ] {
+            assert!(parse_body(bad).is_err(), "{:?} should fail", String::from_utf8_lossy(bad));
+        }
+    }
+}

@@ -1,0 +1,399 @@
+//! Minimal HTTP/1.1 message framing over `std::net::TcpStream` (the
+//! vendored crate set has no HTTP stack; see DESIGN.md §1). Exactly the
+//! subset the front door needs: request-line + headers + `Content-Length`
+//! bodies, keep-alive, and response serialization. No chunked encoding,
+//! no TLS, no HTTP/2 — clients that need those sit behind a real proxy.
+//!
+//! Input bounds (hostile-client hardening): the head (request line +
+//! headers) is capped at [`MAX_HEAD_BYTES`] and bodies at
+//! [`MAX_BODY_BYTES`]; oversized input fails the parse instead of growing
+//! buffers without bound.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Upper bound on request line + headers.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Upper bound on request bodies.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Method verb, uppercased by the client (`GET`, `POST`, ...).
+    pub method: String,
+    /// Path with query string stripped (`/v1/graphs/ws/query`).
+    pub path: String,
+    /// Header `(name, value)` pairs; names lowercased.
+    pub headers: Vec<(String, String)>,
+    /// Raw body bytes (empty without `Content-Length`).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of a header (name matched case-insensitively).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == lower).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the client asked to close the connection after this
+    /// exchange (HTTP/1.1 defaults to keep-alive).
+    pub fn wants_close(&self) -> bool {
+        self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+
+    /// The path split into non-empty `/`-separated segments.
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+}
+
+/// One HTTP response ready to serialize.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Status code.
+    pub status: u16,
+    /// Extra headers beyond `Content-Type`/`Content-Length`/`Connection`.
+    pub headers: Vec<(String, String)>,
+    /// Content type sent with the body.
+    pub content_type: &'static str,
+    /// Body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON response.
+    pub fn json(status: u16, body: &crate::util::Json) -> Response {
+        Response {
+            status,
+            headers: Vec::new(),
+            content_type: "application/json",
+            body: body.render().into_bytes(),
+        }
+    }
+
+    /// A JSON error envelope: `{"error": "..."}`.
+    pub fn error(status: u16, message: &str) -> Response {
+        Response::json(
+            status,
+            &crate::util::json::obj(vec![("error", crate::util::json::str(message))]),
+        )
+    }
+
+    /// A plain-text response (used by `/metrics`).
+    pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
+        Response { status, headers: Vec::new(), content_type, body: body.into_bytes() }
+    }
+
+    /// Attach an extra header.
+    pub fn with_header(mut self, name: &str, value: String) -> Response {
+        self.headers.push((name.to_string(), value));
+        self
+    }
+
+    /// Serialize onto the stream. `close` controls the `Connection`
+    /// header (and must match whether the caller drops the stream).
+    pub fn write_to(&self, stream: &mut TcpStream, close: bool) -> Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
+            self.status,
+            status_reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if close { "close" } else { "keep-alive" },
+        );
+        for (name, value) in &self.headers {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes()).context("write response head")?;
+        stream.write_all(&self.body).context("write response body")?;
+        stream.flush().context("flush response")?;
+        Ok(())
+    }
+}
+
+/// Canonical reason phrase for the status codes the front door emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Read one request off the stream. Returns `Ok(None)` on clean EOF
+/// before any bytes (the peer closed an idle keep-alive connection);
+/// malformed or oversized input is an error.
+pub fn read_request(stream: &mut TcpStream) -> Result<Option<Request>> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+
+    // read until the blank line ending the head
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        let n = stream.read(&mut chunk).context("read request head")?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            bail!("connection closed mid-request");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end]).context("non-utf8 request head")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().context("missing request line")?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let target = parts.next().context("missing request target")?;
+    let path = target.split('?').next().unwrap_or(target).to_string();
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) =
+            line.split_once(':').with_context(|| format!("malformed header {line:?}"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let content_length: usize = headers
+        .iter()
+        .find(|(n, _)| n == "content-length")
+        .map(|(_, v)| v.parse().context("bad content-length"))
+        .transpose()?
+        .unwrap_or(0);
+    if content_length > MAX_BODY_BYTES {
+        bail!("request body exceeds {MAX_BODY_BYTES} bytes");
+    }
+
+    // body: whatever arrived after the head plus the remainder
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).context("read request body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+
+    Ok(Some(Request { method, path, headers, body }))
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Client side: send `request_bytes` and read one full response. Returns
+/// `(status, body)`. Shared by the load generator and the tests; assumes
+/// the server frames responses with `Content-Length` (ours does).
+pub fn roundtrip(stream: &mut TcpStream, request_bytes: &[u8]) -> Result<(u16, Vec<u8>)> {
+    stream.write_all(request_bytes).context("write request")?;
+    stream.flush().context("flush request")?;
+
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            bail!("response head exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        let n = stream.read(&mut chunk).context("read response head")?;
+        if n == 0 {
+            bail!("connection closed before response head");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end]).context("non-utf8 response head")?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().context("missing status line")?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .context("missing status code")?
+        .parse()
+        .context("bad status code")?;
+    let content_length: usize = lines
+        .filter_map(|l| l.split_once(':'))
+        .find(|(n, _)| n.trim().eq_ignore_ascii_case("content-length"))
+        .map(|(_, v)| v.trim().parse().context("bad content-length"))
+        .transpose()?
+        .unwrap_or(0);
+
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).context("read response body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok((status, body))
+}
+
+/// Build the bytes of a request (client side).
+pub fn format_request(method: &str, path: &str, host: &str, body: Option<&str>) -> Vec<u8> {
+    let body = body.unwrap_or("");
+    format!(
+        "{method} {path} HTTP/1.1\r\nhost: {host}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Run `server` on an accepted connection while the client closure
+    /// drives the other end.
+    fn with_pair<S, C, R>(server: S, client: C) -> R
+    where
+        S: FnOnce(TcpStream) + Send + 'static,
+        C: FnOnce(TcpStream) -> R,
+    {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            server(stream);
+        });
+        let out = client(TcpStream::connect(addr).unwrap());
+        handle.join().unwrap();
+        out
+    }
+
+    #[test]
+    fn parses_request_with_body_and_answers() {
+        let (status, body) = with_pair(
+            |mut stream| {
+                let req = read_request(&mut stream).unwrap().unwrap();
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/v1/graphs/ws/query");
+                assert_eq!(req.segments(), vec!["v1", "graphs", "ws", "query"]);
+                assert_eq!(req.header("Content-Type"), Some("application/json"));
+                assert_eq!(req.body, b"{\"vertices\":[1]}");
+                let ok = crate::util::json::obj(vec![("ok", crate::util::Json::Bool(true))]);
+                Response::json(200, &ok).write_to(&mut stream, true).unwrap();
+            },
+            |mut stream| {
+                let req = format_request(
+                    "POST",
+                    "/v1/graphs/ws/query?verbose=1",
+                    "test",
+                    Some("{\"vertices\":[1]}"),
+                );
+                roundtrip(&mut stream, &req).unwrap()
+            },
+        );
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"ok\":true}");
+    }
+
+    #[test]
+    fn keep_alive_serves_sequential_requests() {
+        let (a, b) = with_pair(
+            |mut stream| {
+                for _ in 0..2 {
+                    let req = read_request(&mut stream).unwrap().unwrap();
+                    assert!(!req.wants_close());
+                    Response::text(200, "text/plain", format!("echo {}", req.path))
+                        .write_to(&mut stream, false)
+                        .unwrap();
+                }
+                let eof = read_request(&mut stream).unwrap();
+                assert!(eof.is_none(), "clean EOF after client drop");
+            },
+            |mut stream| {
+                let r1 = roundtrip(&mut stream, &format_request("GET", "/a", "t", None)).unwrap();
+                let r2 = roundtrip(&mut stream, &format_request("GET", "/b", "t", None)).unwrap();
+                (r1, r2)
+            },
+        );
+        assert_eq!(a.1, b"echo /a");
+        assert_eq!(b.1, b"echo /b");
+    }
+
+    #[test]
+    fn rejects_oversized_body_declarations() {
+        with_pair(
+            |mut stream| {
+                let err = read_request(&mut stream).unwrap_err();
+                assert!(err.to_string().contains("body exceeds"), "{err:#}");
+            },
+            |mut stream| {
+                let declared = MAX_BODY_BYTES + 1;
+                let head = format!("POST /x HTTP/1.1\r\ncontent-length: {declared}\r\n\r\n");
+                stream.write_all(head.as_bytes()).unwrap();
+                stream.flush().unwrap();
+                // wait for the server side to finish parsing
+                let mut sink = Vec::new();
+                let _ = stream.read_to_end(&mut sink);
+            },
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_request_line() {
+        with_pair(
+            |mut stream| {
+                assert!(read_request(&mut stream).is_err());
+            },
+            |mut stream| {
+                stream.write_all(b"NOT-HTTP\r\n\r\n").unwrap();
+                stream.flush().unwrap();
+                let mut sink = Vec::new();
+                let _ = stream.read_to_end(&mut sink);
+            },
+        );
+    }
+
+    #[test]
+    fn response_carries_extra_headers() {
+        let (status, _) = with_pair(
+            |mut stream| {
+                let _ = read_request(&mut stream).unwrap().unwrap();
+                Response::error(429, "shed")
+                    .with_header("retry-after", "1".to_string())
+                    .write_to(&mut stream, true)
+                    .unwrap();
+            },
+            |mut stream| {
+                // raw read to inspect headers
+                stream.write_all(&format_request("GET", "/", "t", None)).unwrap();
+                let mut text = String::new();
+                stream.read_to_string(&mut text).unwrap();
+                assert!(text.contains("retry-after: 1"), "{text}");
+                assert!(text.contains("429 Too Many Requests"), "{text}");
+                (429u16, text)
+            },
+        );
+        assert_eq!(status, 429);
+    }
+}

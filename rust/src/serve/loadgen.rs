@@ -1,0 +1,388 @@
+//! Closed-loop serving benchmark client: open-loop Poisson arrivals over
+//! real sockets.
+//!
+//! "Open-loop" is the part that matters: arrival times are drawn up front
+//! from an exponential inter-arrival distribution at the offered rate,
+//! and every request's latency is measured **from its scheduled arrival**,
+//! not from when a client thread got around to sending it. A closed-loop
+//! client (send, wait, send) self-throttles under overload and hides
+//! queueing delay — exactly the regime the admission controller exists
+//! for — so the schedule, not the server, paces the experiment
+//! (coordinated-omission-free measurement).
+//!
+//! Determinism: the schedule (arrival times, class assignment,
+//! personalization vertices) is derived from a seeded [`Xoshiro256`], so
+//! two runs against the same server offer byte-identical request
+//! sequences. Client threads race for schedule slots at run time, which
+//! only affects *which thread* carries a request, never what is sent.
+
+use super::http::{format_request, roundtrip};
+use crate::fixed::AccuracyClass;
+use crate::util::Xoshiro256;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// What to offer the server.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Graph name in the request path.
+    pub graph: String,
+    /// `(class, weight)` mix; weights need not sum to 1.
+    pub class_mix: Vec<(AccuracyClass, f64)>,
+    /// Offered arrival rate (requests/second) across all classes.
+    pub offered_rps: f64,
+    /// Schedule length.
+    pub duration: Duration,
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// `top_n` sent with every request.
+    pub top_n: usize,
+    /// Optional per-request deadline forwarded to the server.
+    pub deadline_ms: Option<u64>,
+    /// Personalization vertices are drawn uniformly from `[0, max_vertex)`.
+    pub max_vertex: u64,
+    /// Schedule seed.
+    pub seed: u64,
+}
+
+/// One scheduled arrival.
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    at: Duration,
+    class_idx: usize,
+    vertex: u64,
+}
+
+/// Outcome tallies and latencies for one accuracy class.
+#[derive(Debug, Clone, Default)]
+pub struct ClassStats {
+    /// Requests sent (admitted to the wire, any outcome).
+    pub sent: u64,
+    /// 200 responses.
+    pub ok: u64,
+    /// 429 responses (admission shed).
+    pub shed: u64,
+    /// 504 responses (deadline misses).
+    pub deadline_miss: u64,
+    /// Any other HTTP status.
+    pub error: u64,
+    /// Latency of every answered request, milliseconds, measured from the
+    /// scheduled arrival. Sorted by [`LoadReport::finish`].
+    pub latencies_ms: Vec<f64>,
+}
+
+impl ClassStats {
+    /// Latency percentile in milliseconds (`p` in `[0, 100]`); `None`
+    /// without samples. Requires sorted latencies (see
+    /// [`LoadReport::finish`]).
+    pub fn percentile_ms(&self, p: f64) -> Option<f64> {
+        percentile_sorted(&self.latencies_ms, p)
+    }
+
+    /// Fraction of sent requests that were shed.
+    pub fn shed_rate(&self) -> f64 {
+        rate(self.shed, self.sent)
+    }
+
+    /// Fraction of sent requests that missed their deadline.
+    pub fn deadline_miss_rate(&self) -> f64 {
+        rate(self.deadline_miss, self.sent)
+    }
+}
+
+fn rate(part: u64, whole: u64) -> f64 {
+    if whole == 0 {
+        0.0
+    } else {
+        part as f64 / whole as f64
+    }
+}
+
+/// Nearest-rank percentile over an ascending slice.
+fn percentile_sorted(sorted: &[f64], p: f64) -> Option<f64> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    Some(sorted[idx.min(sorted.len() - 1)])
+}
+
+/// The result of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// The configured arrival rate.
+    pub offered_rps: f64,
+    /// Successful (200) responses per wall-clock second.
+    pub achieved_rps: f64,
+    /// Wall-clock time from first scheduled arrival to last response.
+    pub wall_secs: f64,
+    /// Requests that got no HTTP response at all (transport failure).
+    /// The acceptance gate: a correct front door never loses a request —
+    /// every arrival gets 200/202/4xx/5xx, so this must be zero.
+    pub lost: u64,
+    /// Per-class outcome tallies, in [`AccuracyClass::all`] order (classes
+    /// outside the mix are present with zero counts).
+    pub per_class: Vec<(AccuracyClass, ClassStats)>,
+}
+
+impl LoadReport {
+    /// Total requests sent across classes.
+    pub fn total_sent(&self) -> u64 {
+        self.per_class.iter().map(|(_, s)| s.sent).sum()
+    }
+
+    /// Stats for one class.
+    pub fn class(&self, class: AccuracyClass) -> &ClassStats {
+        &self.per_class.iter().find(|(c, _)| *c == class).expect("all classes present").1
+    }
+
+    fn finish(&mut self) {
+        for (_, stats) in &mut self.per_class {
+            stats.latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+    }
+}
+
+/// Draw the arrival schedule: exponential inter-arrival gaps at
+/// `offered_rps`, class by weighted draw, vertex uniform.
+fn build_schedule(spec: &LoadSpec) -> Vec<Event> {
+    assert!(spec.offered_rps > 0.0, "offered_rps must be positive");
+    assert!(!spec.class_mix.is_empty(), "class mix must not be empty");
+    let total_weight: f64 = spec.class_mix.iter().map(|(_, w)| w).sum();
+    assert!(total_weight > 0.0, "class weights must sum to a positive value");
+
+    let mut rng = Xoshiro256::seeded(spec.seed);
+    let mut events = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        // u in [0,1) so 1−u in (0,1] and the log is finite
+        let u = rng.next_f64();
+        t += -(1.0 - u).ln() / spec.offered_rps;
+        if t >= spec.duration.as_secs_f64() {
+            break;
+        }
+        let mut pick = rng.next_f64() * total_weight;
+        let mut class_idx = spec.class_mix.len() - 1;
+        for (i, (_, w)) in spec.class_mix.iter().enumerate() {
+            if pick < *w {
+                class_idx = i;
+                break;
+            }
+            pick -= w;
+        }
+        let vertex = (rng.next_f64() * spec.max_vertex as f64) as u64 % spec.max_vertex.max(1);
+        events.push(Event { at: Duration::from_secs_f64(t), class_idx, vertex });
+    }
+    events
+}
+
+/// Per-thread tally merged into the report after the join.
+#[derive(Default)]
+struct ThreadTally {
+    /// `(class_idx, status, latency_ms)` per answered request.
+    outcomes: Vec<(usize, u16, f64)>,
+    lost: u64,
+}
+
+/// Drive `spec` against a front door at `addr` and collect the report.
+/// Blocks for roughly `spec.duration` plus the drain tail.
+pub fn run(addr: SocketAddr, spec: &LoadSpec) -> LoadReport {
+    let events = Arc::new(build_schedule(spec));
+    let next = Arc::new(AtomicUsize::new(0));
+    let start = Instant::now();
+    let clients = spec.clients.max(1);
+
+    let tallies: Vec<ThreadTally> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let events = events.clone();
+                let next = next.clone();
+                scope.spawn(move || client_loop(addr, spec, &events, &next, start))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    let wall_secs = start.elapsed().as_secs_f64();
+    let mut per_class: Vec<(AccuracyClass, ClassStats)> =
+        AccuracyClass::all().into_iter().map(|c| (c, ClassStats::default())).collect();
+    let mut lost = 0u64;
+    for tally in tallies {
+        lost += tally.lost;
+        for (class_idx, status, latency_ms) in tally.outcomes {
+            let class = spec.class_mix[class_idx].0;
+            let stats =
+                &mut per_class.iter_mut().find(|(c, _)| *c == class).expect("known class").1;
+            stats.sent += 1;
+            match status {
+                200 => stats.ok += 1,
+                429 => stats.shed += 1,
+                504 => stats.deadline_miss += 1,
+                _ => stats.error += 1,
+            }
+            stats.latencies_ms.push(latency_ms);
+        }
+    }
+
+    let ok_total: u64 = per_class.iter().map(|(_, s)| s.ok).sum();
+    let mut report = LoadReport {
+        offered_rps: spec.offered_rps,
+        achieved_rps: if wall_secs > 0.0 { ok_total as f64 / wall_secs } else { 0.0 },
+        wall_secs,
+        lost,
+        per_class,
+    };
+    report.finish();
+    report
+}
+
+/// One client: a persistent keep-alive connection racing the shared
+/// schedule cursor. A transport failure counts the request lost and
+/// reconnects; a dead server drains the remaining slots as lost rather
+/// than hanging the run.
+fn client_loop(
+    addr: SocketAddr,
+    spec: &LoadSpec,
+    events: &[Event],
+    next: &AtomicUsize,
+    start: Instant,
+) -> ThreadTally {
+    let mut tally = ThreadTally::default();
+    let mut conn: Option<TcpStream> = None;
+    let host = addr.to_string();
+
+    loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        let Some(event) = events.get(i) else {
+            break;
+        };
+        let now = start.elapsed();
+        if event.at > now {
+            std::thread::sleep(event.at - now);
+        }
+
+        let (class, _) = spec.class_mix[event.class_idx];
+        let body = request_body(spec, class, event.vertex);
+        let path = format!("/v1/graphs/{}/query", spec.graph);
+        let request = format_request("POST", &path, &host, Some(&body));
+
+        if conn.is_none() {
+            match TcpStream::connect(addr) {
+                Ok(s) => conn = Some(s),
+                Err(_) => {
+                    tally.lost += 1;
+                    continue;
+                }
+            }
+        }
+        let stream = conn.as_mut().expect("connection just established");
+        match roundtrip(stream, &request) {
+            Ok((status, _body)) => {
+                let latency_ms = (start.elapsed() - event.at).as_secs_f64() * 1e3;
+                tally.outcomes.push((event.class_idx, status, latency_ms));
+            }
+            Err(_) => {
+                tally.lost += 1;
+                conn = None; // reconnect on the next slot
+            }
+        }
+    }
+    tally
+}
+
+fn request_body(spec: &LoadSpec, class: AccuracyClass, vertex: u64) -> String {
+    let mut body = format!(
+        "{{\"vertex\":{vertex},\"top_n\":{},\"class\":\"{}\"",
+        spec.top_n,
+        class.label()
+    );
+    if let Some(ms) = spec.deadline_ms {
+        body.push_str(&format!(",\"deadline_ms\":{ms}"));
+    }
+    body.push('}');
+    body
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(rps: f64, secs: f64, seed: u64) -> LoadSpec {
+        LoadSpec {
+            graph: "ws".to_string(),
+            class_mix: vec![
+                (AccuracyClass::Fast, 2.0),
+                (AccuracyClass::Balanced, 1.0),
+                (AccuracyClass::Exact, 1.0),
+            ],
+            offered_rps: rps,
+            duration: Duration::from_secs_f64(secs),
+            clients: 4,
+            top_n: 5,
+            deadline_ms: None,
+            max_vertex: 100,
+            seed,
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_paced() {
+        let s = spec(200.0, 2.0, 42);
+        let a = build_schedule(&s);
+        let b = build_schedule(&s);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.class_idx, y.class_idx);
+            assert_eq!(x.vertex, y.vertex);
+        }
+        // ~rps × secs arrivals, generously bounded (Poisson variance)
+        assert!(a.len() > 250 && a.len() < 550, "{}", a.len());
+        // monotone schedule inside the window
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(a.last().unwrap().at < s.duration);
+        assert!(a.iter().all(|e| e.vertex < 100));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = build_schedule(&spec(100.0, 1.0, 1));
+        let b = build_schedule(&spec(100.0, 1.0, 2));
+        assert!(
+            a.len() != b.len() || a.iter().zip(&b).any(|(x, y)| x.at != y.at),
+            "seeds must change the schedule"
+        );
+    }
+
+    #[test]
+    fn class_mix_respects_weights() {
+        let events = build_schedule(&spec(2000.0, 2.0, 7));
+        let fast = events.iter().filter(|e| e.class_idx == 0).count() as f64;
+        let frac = fast / events.len() as f64;
+        assert!((frac - 0.5).abs() < 0.08, "fast fraction {frac} far from weight 0.5");
+    }
+
+    #[test]
+    fn percentiles_over_sorted_samples() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile_sorted(&xs, 100.0), Some(100.0));
+        let p50 = percentile_sorted(&xs, 50.0).unwrap();
+        assert!((49.0..=51.0).contains(&p50), "{p50}");
+        assert_eq!(percentile_sorted(&[], 50.0), None);
+        let one = [7.5];
+        assert_eq!(percentile_sorted(&one, 99.9), Some(7.5));
+    }
+
+    #[test]
+    fn class_stats_rates() {
+        let s = ClassStats { sent: 10, ok: 6, shed: 3, deadline_miss: 1, ..Default::default() };
+        assert!((s.shed_rate() - 0.3).abs() < 1e-12);
+        assert!((s.deadline_miss_rate() - 0.1).abs() < 1e-12);
+        assert_eq!(ClassStats::default().shed_rate(), 0.0, "no sends, no rate");
+    }
+}

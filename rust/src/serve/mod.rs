@@ -1,0 +1,488 @@
+//! L4 HTTP front door — the network edge in front of the L3 coordinator
+//! (DESIGN.md §8).
+//!
+//! The coordinator ([`crate::coordinator`]) is an in-process API: callers
+//! hold a [`Server`] and submit typed requests. This module puts a wire
+//! protocol in front of it so the deployment story of the paper's
+//! use-case (§1: ranking "while users interact" with a social network or
+//! shop) is closed end-to-end: accept sockets, parse JSON, admit or shed,
+//! run the query, expose the counters Prometheus scrapes.
+//!
+//! Layering (one direction, no cycles):
+//!
+//! - [`http`] — HTTP/1.1 framing over `std::net` (no HTTP crate vendored);
+//! - [`prom`] — metric registry + text exposition + a tiny validator;
+//! - [`admission`] — bounded per-graph queues with class-ordered shedding;
+//! - [`state`] — shared handles ([`ServeState`]) and the async
+//!   [`TicketStore`];
+//! - [`handlers`] — route dispatch, JSON mapping, status taxonomy;
+//! - [`FrontDoor`] (here) — acceptor thread + connection workers;
+//! - [`loadgen`] — the benchmark client (open-loop Poisson arrivals).
+//!
+//! Threading: one acceptor thread owns the listener; each accepted
+//! connection becomes a detached task on a **dedicated**
+//! [`WorkerPool`] — never the global compute pool, where long-lived
+//! connection handlers would starve engine fan-outs
+//! (`runtime::pool::global`). Handlers service keep-alive connections
+//! with a short poll interval so shutdown is bounded: every worker
+//! notices the stop flag within [`IDLE_POLL`] and exits; the pool's drop
+//! then joins them.
+
+pub mod admission;
+pub mod handlers;
+pub mod http;
+pub mod loadgen;
+pub mod prom;
+pub mod state;
+
+pub use admission::{Admission, AdmitGuard, Shed};
+pub use http::{Request, Response};
+pub use loadgen::{ClassStats, LoadReport, LoadSpec};
+pub use prom::{validate_exposition, HttpMetrics, LATENCY_BUCKETS_S};
+pub use state::{PollOutcome, ServeState, TicketStore};
+
+use crate::coordinator::server::Server;
+use crate::runtime::pool::WorkerPool;
+use anyhow::{Context, Result};
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How often an idle connection handler checks the stop flag. Bounds
+/// both shutdown latency and the busy-wait cost of parked keep-alive
+/// connections (one `peek` per tick).
+const IDLE_POLL: Duration = Duration::from_millis(100);
+
+/// Read timeout once a request has started arriving: a client that
+/// stalls mid-request is cut off instead of pinning a worker.
+const REQUEST_READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// The running HTTP front door: an acceptor thread plus a dedicated
+/// worker pool of connection handlers. Dropping it (or calling
+/// [`FrontDoor::shutdown`]) stops accepting, drains the workers, and
+/// joins every thread — it does **not** shut the underlying [`Server`]
+/// down; that remains the owner's call.
+pub struct FrontDoor {
+    state: Arc<ServeState>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    pool: Arc<WorkerPool>,
+}
+
+impl FrontDoor {
+    /// Bind `state.cfg.listen` and start serving. With port 0 the OS
+    /// picks a free port — [`FrontDoor::addr`] reports the bound one
+    /// (tests and the bench harness rely on this).
+    pub fn serve(state: ServeState) -> Result<FrontDoor> {
+        let listener = TcpListener::bind(&state.cfg.listen)
+            .with_context(|| format!("bind {}", state.cfg.listen))?;
+        let addr = listener.local_addr().context("resolve listen address")?;
+        let state = Arc::new(state);
+        let pool = Arc::new(WorkerPool::new(state.cfg.http_workers.max(1)));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let acceptor = {
+            let state = state.clone();
+            let pool = pool.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("ppr-http-acceptor".to_string())
+                .spawn(move || acceptor_loop(&listener, &state, &pool, &stop))
+                .context("spawn acceptor")?
+        };
+        Ok(FrontDoor { state, addr, stop, acceptor: Some(acceptor), pool })
+    }
+
+    /// The bound socket address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared serving state (metrics, admission, tickets).
+    pub fn state(&self) -> &Arc<ServeState> {
+        &self.state
+    }
+
+    /// Stop accepting, drain connection handlers, join all threads.
+    pub fn shutdown(self) {
+        // Drop does the work; consuming `self` makes the intent explicit
+        // at call sites.
+    }
+
+    fn stop_now(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // unblock the acceptor's blocking accept() with a throwaway
+        // connection; it re-checks the flag on wake-up
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.acceptor.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for FrontDoor {
+    fn drop(&mut self) {
+        self.stop_now();
+        // `pool` (an Arc field) drops after this body: the last reference
+        // joins the connection workers, each of which exits within
+        // IDLE_POLL of the stop flag
+    }
+}
+
+fn acceptor_loop(
+    listener: &TcpListener,
+    state: &Arc<ServeState>,
+    pool: &Arc<WorkerPool>,
+    stop: &Arc<AtomicBool>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+                let state = state.clone();
+                let stop = stop.clone();
+                pool.submit(move || connection_loop(stream, &state, &stop));
+            }
+            Err(_) => {
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+                // transient accept failure (EMFILE, aborted handshake):
+                // back off briefly instead of spinning
+                std::thread::sleep(IDLE_POLL);
+            }
+        }
+    }
+}
+
+/// Service one keep-alive connection until the peer closes, an error
+/// occurs, or the front door stops. Between requests the handler polls
+/// with a short-timeout `peek` so a parked connection neither blocks
+/// shutdown nor burns a worker on a tight loop.
+fn connection_loop(mut stream: TcpStream, state: &ServeState, stop: &AtomicBool) {
+    if stream.set_read_timeout(Some(IDLE_POLL)).is_err() {
+        return;
+    }
+    let mut probe = [0u8; 1];
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        match stream.peek(&mut probe) {
+            Ok(0) => return, // peer closed
+            Ok(_) => {}      // request bytes waiting
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => continue,
+            Err(_) => return,
+        }
+
+        if stream.set_read_timeout(Some(REQUEST_READ_TIMEOUT)).is_err() {
+            return;
+        }
+        let req = match http::read_request(&mut stream) {
+            Ok(Some(req)) => req,
+            Ok(None) => return,
+            Err(e) => {
+                // parse failures are answered when possible, then the
+                // connection is dropped (framing state is unknown)
+                let _ = Response::error(400, &format!("{e:#}")).write_to(&mut stream, true);
+                return;
+            }
+        };
+        let close = req.wants_close();
+        let resp = handlers::handle(state, &req);
+        if resp.write_to(&mut stream, close).is_err() || close {
+            return;
+        }
+        if stream.set_read_timeout(Some(IDLE_POLL)).is_err() {
+            return;
+        }
+    }
+}
+
+/// Join helper for owners that hold the core [`Server`] behind an `Arc`:
+/// stop the front door first, then shut the server down if this was the
+/// last reference.
+pub fn shutdown_stack(front: FrontDoor, server: Arc<Server>) {
+    front.shutdown();
+    if let Ok(server) = Arc::try_unwrap(server) {
+        server.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::http::{format_request, roundtrip};
+    use super::*;
+    use crate::config::{RunConfig, ServeConfig};
+    use crate::coordinator::builder::EngineBuilder;
+    use crate::coordinator::registry::GraphRegistry;
+    use crate::fixed::Precision;
+    use crate::util::Json;
+    use std::io::{Read, Write};
+
+    /// Registry-backed server + front door on an ephemeral port.
+    fn stack(queue_cap: usize, batch_timeout_ms: u64) -> (FrontDoor, Arc<Server>) {
+        let registry = Arc::new(GraphRegistry::new(4));
+        let g = crate::graph::generators::watts_strogatz(128, 4, 0.2, 7);
+        registry.register_graph("ws", g).expect("register");
+        let cfg = RunConfig {
+            precision: Precision::Fixed(26),
+            kappa: 2,
+            iterations: 4,
+            batch_timeout_ms,
+            num_shards: 1,
+            ..Default::default()
+        };
+        let server = Arc::new(
+            EngineBuilder::native()
+                .config(cfg)
+                .serve_registry(registry.clone(), 1)
+                .expect("server starts"),
+        );
+        let serve_cfg = ServeConfig {
+            listen: "127.0.0.1:0".to_string(),
+            http_workers: 4,
+            queue_cap,
+            ..Default::default()
+        };
+        let state = ServeState::new(server.clone(), registry, serve_cfg);
+        let front = FrontDoor::serve(state).expect("front door binds");
+        (front, server)
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let (status, body) =
+            roundtrip(&mut conn, &format_request("GET", path, "test", None)).unwrap();
+        (status, String::from_utf8(body).unwrap())
+    }
+
+    fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let (status, body) =
+            roundtrip(&mut conn, &format_request("POST", path, "test", Some(body))).unwrap();
+        (status, String::from_utf8(body).unwrap())
+    }
+
+    #[test]
+    fn healthz_and_graph_listing_over_the_wire() {
+        let (front, server) = stack(16, 1);
+        let addr = front.addr();
+
+        let (status, body) = get(addr, "/healthz");
+        assert_eq!(status, 200, "{body}");
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
+
+        let (status, body) = get(addr, "/v1/graphs");
+        assert_eq!(status, 200, "{body}");
+        let doc = Json::parse(&body).unwrap();
+        let graphs = doc.get("graphs").and_then(Json::as_array).unwrap();
+        assert_eq!(graphs.len(), 1);
+        assert_eq!(graphs[0].get("name").and_then(Json::as_str), Some("ws"));
+        assert_eq!(graphs[0].get("num_vertices").and_then(Json::as_u64), Some(128));
+
+        shutdown_stack(front, server);
+    }
+
+    #[test]
+    fn http_query_matches_in_process_query_bit_identically() {
+        let (front, server) = stack(16, 1);
+        let addr = front.addr();
+
+        // no explicit class: both paths run the server's default class,
+        // so the comparison below is engine-for-engine
+        let (status, body) = post(addr, "/v1/graphs/ws/query", r#"{"vertex":5,"top_n":8}"#);
+        assert_eq!(status, 200, "{body}");
+        let doc = Json::parse(&body).unwrap();
+        let results = doc.get("results").and_then(Json::as_array).unwrap();
+        assert_eq!(results.len(), 1);
+        let ranking = results[0].get("ranking").and_then(Json::as_array).unwrap();
+        assert_eq!(ranking.len(), 8);
+
+        // the acceptance gate: scores over the wire are bit-identical to
+        // the in-process API (shortest-round-trip JSON floats)
+        let reference = server.query_graph("ws", 5, 8).expect("in-process query");
+        for (wire, local) in ranking.iter().zip(&reference.ranking) {
+            assert_eq!(
+                wire.get("vertex").and_then(Json::as_u64),
+                Some(u64::from(local.vertex))
+            );
+            let wire_score = wire.get("score").and_then(Json::as_f64).unwrap();
+            assert_eq!(
+                wire_score.to_bits(),
+                local.score.to_bits(),
+                "score drifted across JSON: {wire_score} vs {}",
+                local.score
+            );
+        }
+        shutdown_stack(front, server);
+    }
+
+    #[test]
+    fn error_paths_map_to_honest_statuses() {
+        let (front, server) = stack(16, 1);
+        let addr = front.addr();
+
+        for (path, body, want, needle) in [
+            ("/v1/graphs/nope/query", r#"{"vertex":1}"#, 404, "unknown graph"),
+            ("/v1/graphs/ws/query", r#"{"vertex":1,"top_n":0}"#, 400, "top_n"),
+            ("/v1/graphs/ws/query", r#"{"top_n":3}"#, 400, "vertices"),
+            ("/v1/graphs/ws/query", r#"{"vertices":[]}"#, 400, "empty"),
+            ("/v1/graphs/ws/query", r#"{"vertex":128}"#, 400, "out of range"),
+            ("/v1/graphs/ws/query", r#"{"vertex":1,"class":"turbo"}"#, 400, "unknown accuracy"),
+            ("/v1/graphs/ws/query", "{not json", 400, "malformed"),
+            ("/v1/graphs/ws/submit", r#"{"vertices":[1,2]}"#, 400, "exactly one"),
+        ] {
+            let (status, resp) = post(addr, path, body);
+            assert_eq!(status, want, "{path} {body} → {resp}");
+            assert!(resp.contains(needle), "{path} {body} → {resp}");
+        }
+
+        let (status, _) = get(addr, "/v1/graphs/ws/query");
+        assert_eq!(status, 405, "GET on a POST route");
+        let (status, _) = get(addr, "/v1/tickets/not-a-number");
+        assert_eq!(status, 400);
+        let (status, _) = get(addr, "/v1/tickets/999999");
+        assert_eq!(status, 404);
+        let (status, _) = get(addr, "/nowhere");
+        assert_eq!(status, 404);
+
+        shutdown_stack(front, server);
+    }
+
+    #[test]
+    fn submit_then_poll_roundtrip() {
+        let (front, server) = stack(16, 1);
+        let addr = front.addr();
+
+        let (status, body) =
+            post(addr, "/v1/graphs/ws/submit", r#"{"vertex":3,"top_n":4,"class":"static"}"#);
+        assert_eq!(status, 202, "{body}");
+        let id = Json::parse(&body).unwrap().get("ticket").and_then(Json::as_u64).unwrap();
+
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let result = loop {
+            let (status, body) = get(addr, &format!("/v1/tickets/{id}"));
+            assert_eq!(status, 200, "{body}");
+            let doc = Json::parse(&body).unwrap();
+            match doc.get("status").and_then(Json::as_str) {
+                Some("pending") => {
+                    assert!(std::time::Instant::now() < deadline, "ticket never resolved");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Some("done") => break doc,
+                other => panic!("unexpected poll status {other:?} in {body}"),
+            }
+        };
+        let vertex = result.get("result").and_then(|r| r.get("vertex")).and_then(Json::as_u64);
+        assert_eq!(vertex, Some(3));
+
+        // consumed: a second poll is a 404 and the admission slot is free
+        let (status, _) = get(addr, &format!("/v1/tickets/{id}"));
+        assert_eq!(status, 404);
+        assert!(front.state().tickets.is_empty());
+
+        shutdown_stack(front, server);
+    }
+
+    #[test]
+    fn overload_sheds_with_retry_after() {
+        // queue_cap 1 → every class's limit is 1; a single slow in-flight
+        // request (the κ=2 batch waits out the 300 ms flush timeout)
+        // forces the next one to shed
+        let (front, server) = stack(1, 300);
+        let addr = front.addr();
+
+        let slow = std::thread::spawn(move || {
+            post(addr, "/v1/graphs/ws/query", r#"{"vertex":1,"top_n":3}"#)
+        });
+        // let the slow request claim the admission slot
+        std::thread::sleep(Duration::from_millis(80));
+
+        // raw exchange so the Retry-After header is visible
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let body = r#"{"vertex":2,"top_n":3}"#;
+        let raw = format!(
+            "POST /v1/graphs/ws/query HTTP/1.1\r\nhost: t\r\nconnection: close\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        conn.write_all(raw.as_bytes()).unwrap();
+        let mut text = String::new();
+        conn.read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429"), "{text}");
+        assert!(text.contains("retry-after:"), "{text}");
+
+        let (status, body) = slow.join().unwrap();
+        assert_eq!(status, 200, "the in-flight request still completes: {body}");
+
+        shutdown_stack(front, server);
+    }
+
+    #[test]
+    fn metrics_render_valid_exposition_with_traffic() {
+        let (front, server) = stack(16, 1);
+        let addr = front.addr();
+
+        let (status, _) = post(addr, "/v1/graphs/ws/query", r#"{"vertex":9,"top_n":3}"#);
+        assert_eq!(status, 200);
+        let (status, _) = post(addr, "/v1/graphs/nope/query", r#"{"vertex":1}"#);
+        assert_eq!(status, 404);
+
+        let (status, text) = get(addr, "/metrics");
+        assert_eq!(status, 200);
+        let samples = validate_exposition(&text).expect("exposition parses");
+        assert!(samples > 0, "exposition carries samples");
+        assert!(text.contains("ppr_http_requests_total"), "{text}");
+        assert!(text.contains("graph=\"ws\""), "{text}");
+        assert!(text.contains("ppr_http_request_duration_seconds_bucket"), "{text}");
+        assert!(text.contains("ppr_http_queue_depth"), "{text}");
+
+        shutdown_stack(front, server);
+    }
+
+    #[test]
+    fn keep_alive_connection_serves_many_queries() {
+        let (front, server) = stack(16, 1);
+        let mut conn = TcpStream::connect(front.addr()).unwrap();
+        for vertex in [1u32, 2, 3] {
+            let body = format!("{{\"vertex\":{vertex},\"top_n\":2}}");
+            let req = format_request("POST", "/v1/graphs/ws/query", "t", Some(&body));
+            let (status, resp) = roundtrip(&mut conn, &req).unwrap();
+            assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+        }
+        drop(conn);
+        shutdown_stack(front, server);
+    }
+
+    #[test]
+    fn shutdown_refuses_new_connections() {
+        let (front, server) = stack(16, 1);
+        let addr = front.addr();
+        let (status, _) = get(addr, "/healthz");
+        assert_eq!(status, 200);
+        shutdown_stack(front, server);
+        // the listener is gone: the connect is refused outright, or (if a
+        // race let it through) the exchange yields no response bytes
+        match TcpStream::connect(addr) {
+            Err(_) => {}
+            Ok(mut conn) => {
+                let _ = conn.set_read_timeout(Some(Duration::from_secs(2)));
+                let _ = conn.write_all(&format_request("GET", "/healthz", "t", None));
+                let mut buf = String::new();
+                let read = conn.read_to_string(&mut buf);
+                assert!(
+                    read.is_err() || buf.is_empty(),
+                    "no front door should answer after shutdown: {buf}"
+                );
+            }
+        }
+    }
+}

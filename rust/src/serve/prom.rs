@@ -1,0 +1,337 @@
+//! Prometheus metrics for the HTTP front door: counters, gauges and
+//! fixed-bucket latency histograms rendered in text exposition format
+//! 0.0.4, plus a tiny exposition parser used by tests and the serving
+//! bench to assert `/metrics` stays well-formed.
+//!
+//! Metric taxonomy (documented in DESIGN.md §8):
+//!
+//! | name | type | labels |
+//! |---|---|---|
+//! | `ppr_http_requests_total` | counter | `graph`, `class`, `code` |
+//! | `ppr_http_shed_total` | counter | `graph`, `class` |
+//! | `ppr_http_deadline_misses_total` | counter | `graph`, `class` |
+//! | `ppr_ladder_escalations_total` | counter | `graph`, `class` |
+//! | `ppr_http_queue_depth` | gauge | `graph`, `class` |
+//! | `ppr_http_request_duration_seconds` | histogram | `class` |
+//!
+//! The histogram uses fixed log-spaced buckets (powers of two from 1 ms
+//! to ~8 s), so scrapes are mergeable across processes and time — no
+//! adaptive bucketing.
+//!
+//! Like `coordinator::stats`, all state sits behind one mutex so a scrape
+//! is a consistent point-in-time view (a shed can never be visible before
+//! the request that caused it).
+
+use crate::fixed::AccuracyClass;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Histogram bucket upper bounds (seconds): 1 ms · 2^i.
+pub const LATENCY_BUCKETS_S: [f64; 14] = [
+    0.001, 0.002, 0.004, 0.008, 0.016, 0.032, 0.064, 0.128, 0.256, 0.512, 1.024, 2.048, 4.096,
+    8.192,
+];
+
+#[derive(Debug, Default)]
+struct Hist {
+    /// Count per bucket of [`LATENCY_BUCKETS_S`] (non-cumulative; the
+    /// renderer accumulates into Prometheus' cumulative `le` form).
+    buckets: [u64; LATENCY_BUCKETS_S.len()],
+    /// Observations above the last bound.
+    overflow: u64,
+    sum: f64,
+    count: u64,
+}
+
+impl Hist {
+    fn observe(&mut self, secs: f64) {
+        match LATENCY_BUCKETS_S.iter().position(|&b| secs <= b) {
+            Some(i) => self.buckets[i] += 1,
+            None => self.overflow += 1,
+        }
+        self.sum += secs;
+        self.count += 1;
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// `(graph, class, code) → count`.
+    requests: BTreeMap<(String, &'static str, u16), u64>,
+    /// `(graph, class) → count`.
+    shed: BTreeMap<(String, &'static str), u64>,
+    misses: BTreeMap<(String, &'static str), u64>,
+    escalations: BTreeMap<(String, &'static str), u64>,
+    latency: BTreeMap<&'static str, Hist>,
+}
+
+/// Thread-safe metric registry of the front door.
+#[derive(Debug, Default)]
+pub struct HttpMetrics {
+    inner: Mutex<Inner>,
+}
+
+impl HttpMetrics {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one finished HTTP exchange: response `code`, end-to-end
+    /// handler latency, and how many ladder rung escalations the answer
+    /// took (0 for non-200s). 429s also count as sheds, 504s as deadline
+    /// misses. `label` is [`AccuracyClass::label`] — or `"unknown"` for
+    /// requests rejected before their class string parsed.
+    pub fn record(
+        &self,
+        graph: &str,
+        label: &'static str,
+        code: u16,
+        latency_secs: f64,
+        escalations: u64,
+    ) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.requests.entry((graph.to_string(), label, code)).or_insert(0) += 1;
+        if code == 429 {
+            *inner.shed.entry((graph.to_string(), label)).or_insert(0) += 1;
+        }
+        if code == 504 {
+            *inner.misses.entry((graph.to_string(), label)).or_insert(0) += 1;
+        }
+        if escalations > 0 {
+            *inner.escalations.entry((graph.to_string(), label)).or_insert(0) += escalations;
+        }
+        inner.latency.entry(label).or_default().observe(latency_secs);
+    }
+
+    /// Total requests recorded (all labels).
+    pub fn total_requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests.values().sum()
+    }
+
+    /// Render the registry as Prometheus text exposition. `queue_depths`
+    /// supplies the current admission-queue gauge values (sampled by the
+    /// caller at scrape time — gauges are not accumulated here).
+    pub fn render(&self, queue_depths: &[(String, AccuracyClass, usize)]) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::with_capacity(4096);
+
+        out.push_str("# HELP ppr_http_requests_total HTTP requests by graph, class and status code.\n");
+        out.push_str("# TYPE ppr_http_requests_total counter\n");
+        for ((graph, class, code), n) in &inner.requests {
+            out.push_str(&format!(
+                "ppr_http_requests_total{{graph=\"{graph}\",class=\"{class}\",code=\"{code}\"}} {n}\n"
+            ));
+        }
+
+        out.push_str("# HELP ppr_http_shed_total Requests rejected by admission control (429).\n");
+        out.push_str("# TYPE ppr_http_shed_total counter\n");
+        for ((graph, class), n) in &inner.shed {
+            out.push_str(&format!(
+                "ppr_http_shed_total{{graph=\"{graph}\",class=\"{class}\"}} {n}\n"
+            ));
+        }
+
+        out.push_str("# HELP ppr_http_deadline_misses_total Requests that exceeded their deadline (504).\n");
+        out.push_str("# TYPE ppr_http_deadline_misses_total counter\n");
+        for ((graph, class), n) in &inner.misses {
+            out.push_str(&format!(
+                "ppr_http_deadline_misses_total{{graph=\"{graph}\",class=\"{class}\"}} {n}\n"
+            ));
+        }
+
+        out.push_str("# HELP ppr_ladder_escalations_total Precision-ladder rung escalations taken by served queries.\n");
+        out.push_str("# TYPE ppr_ladder_escalations_total counter\n");
+        for ((graph, class), n) in &inner.escalations {
+            out.push_str(&format!(
+                "ppr_ladder_escalations_total{{graph=\"{graph}\",class=\"{class}\"}} {n}\n"
+            ));
+        }
+
+        out.push_str("# HELP ppr_http_queue_depth Admitted in-flight requests per graph and class.\n");
+        out.push_str("# TYPE ppr_http_queue_depth gauge\n");
+        for (graph, class, depth) in queue_depths {
+            out.push_str(&format!(
+                "ppr_http_queue_depth{{graph=\"{graph}\",class=\"{}\"}} {depth}\n",
+                class.label()
+            ));
+        }
+
+        out.push_str("# HELP ppr_http_request_duration_seconds End-to-end request latency.\n");
+        out.push_str("# TYPE ppr_http_request_duration_seconds histogram\n");
+        for (class, hist) in &inner.latency {
+            let mut cumulative = 0u64;
+            for (i, &bound) in LATENCY_BUCKETS_S.iter().enumerate() {
+                cumulative += hist.buckets[i];
+                out.push_str(&format!(
+                    "ppr_http_request_duration_seconds_bucket{{class=\"{class}\",le=\"{bound}\"}} {cumulative}\n"
+                ));
+            }
+            cumulative += hist.overflow;
+            out.push_str(&format!(
+                "ppr_http_request_duration_seconds_bucket{{class=\"{class}\",le=\"+Inf\"}} {cumulative}\n"
+            ));
+            out.push_str(&format!(
+                "ppr_http_request_duration_seconds_sum{{class=\"{class}\"}} {}\n",
+                hist.sum
+            ));
+            out.push_str(&format!(
+                "ppr_http_request_duration_seconds_count{{class=\"{class}\"}} {}\n",
+                hist.count
+            ));
+        }
+        out
+    }
+}
+
+/// Validate a Prometheus text exposition document: every non-comment line
+/// must be `name{labels} value` (or `name value`) with a legal metric
+/// name, well-formed label pairs and a parseable value; every sample's
+/// family must have a preceding `# TYPE`. Returns the sample count.
+/// This is the checker CI runs against the live `/metrics` endpoint.
+pub fn validate_exposition(text: &str) -> Result<usize> {
+    let mut typed: Vec<String> = Vec::new();
+    let mut samples = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let n = lineno + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let name = parts.next().unwrap_or("");
+            let kind = parts.next().unwrap_or("");
+            if !is_metric_name(name) {
+                bail!("line {n}: bad metric name in TYPE: {name:?}");
+            }
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                bail!("line {n}: bad metric type {kind:?}");
+            }
+            typed.push(name.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP or free-form comment
+        }
+
+        // sample line: name[{labels}] value
+        let (name_labels, value) = match line.rsplit_once(' ') {
+            Some(pair) => pair,
+            None => bail!("line {n}: expected 'name value', got {line:?}"),
+        };
+        if value.parse::<f64>().is_err() && !matches!(value, "+Inf" | "-Inf" | "NaN") {
+            bail!("line {n}: bad sample value {value:?}");
+        }
+        let name = match name_labels.split_once('{') {
+            Some((name, labels)) => {
+                let labels = labels
+                    .strip_suffix('}')
+                    .ok_or_else(|| anyhow::anyhow!("line {n}: unterminated label set"))?;
+                for pair in labels.split(',').filter(|s| !s.is_empty()) {
+                    let (k, v) = pair
+                        .split_once('=')
+                        .ok_or_else(|| anyhow::anyhow!("line {n}: bad label pair {pair:?}"))?;
+                    if !is_label_name(k) {
+                        bail!("line {n}: bad label name {k:?}");
+                    }
+                    if !(v.starts_with('"') && v.ends_with('"') && v.len() >= 2) {
+                        bail!("line {n}: unquoted label value {v:?}");
+                    }
+                }
+                name
+            }
+            None => name_labels,
+        };
+        if !is_metric_name(name) {
+            bail!("line {n}: bad metric name {name:?}");
+        }
+        // histogram series carry the family name plus a suffix
+        let family_known = typed.iter().any(|t| {
+            name == t
+                || name == format!("{t}_bucket")
+                || name == format!("{t}_sum")
+                || name == format!("{t}_count")
+        });
+        if !family_known {
+            bail!("line {n}: sample {name:?} has no preceding # TYPE");
+        }
+        samples += 1;
+    }
+    Ok(samples)
+}
+
+fn is_metric_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn is_label_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_is_valid_exposition() {
+        let m = HttpMetrics::new();
+        m.record("ws", AccuracyClass::Fast.label(), 200, 0.004, 1);
+        m.record("ws", AccuracyClass::Fast.label(), 429, 0.0001, 0);
+        m.record("ws", AccuracyClass::Exact.label(), 504, 0.3, 0);
+        m.record("er", AccuracyClass::Balanced.label(), 200, 12.0, 2);
+        let depths = vec![
+            ("ws".to_string(), AccuracyClass::Fast, 3usize),
+            ("er".to_string(), AccuracyClass::Exact, 0usize),
+        ];
+        let text = m.render(&depths);
+        let samples = validate_exposition(&text).expect("render must validate");
+        assert!(samples > 10, "{samples} samples:\n{text}");
+        assert!(text.contains("ppr_http_requests_total{graph=\"ws\",class=\"fast\",code=\"200\"} 1\n"));
+        assert!(text.contains("ppr_http_shed_total{graph=\"ws\",class=\"fast\"} 1\n"));
+        assert!(text.contains("ppr_http_deadline_misses_total{graph=\"ws\",class=\"exact\"} 1\n"));
+        assert!(text.contains("ppr_ladder_escalations_total{graph=\"er\",class=\"balanced\"} 2\n"));
+        assert!(text.contains("ppr_http_queue_depth{graph=\"ws\",class=\"fast\"} 3\n"));
+        assert_eq!(m.total_requests(), 4);
+    }
+
+    #[test]
+    fn histogram_buckets_cumulative_and_bounded() {
+        let m = HttpMetrics::new();
+        m.record("g", "static", 200, 0.0005, 0); // below first bound
+        m.record("g", "static", 200, 0.005, 0);
+        m.record("g", "static", 200, 100.0, 0); // above last bound
+        let text = m.render(&[]);
+        assert!(text.contains("le=\"0.001\"} 1\n"), "{text}");
+        assert!(text.contains("le=\"+Inf\"} 3\n"), "{text}");
+        assert!(text.contains("ppr_http_request_duration_seconds_count{class=\"static\"} 3\n"));
+        // cumulative counts never decrease across bounds
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{class=\"static\"")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "{line}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        for bad in [
+            "no_type_metric 1\n",                       // sample without TYPE
+            "# TYPE m counter\nm{x=1} 2\n",             // unquoted label value
+            "# TYPE m counter\nm{x=\"1\"} abc\n",       // bad value
+            "# TYPE m bogus\n",                         // bad type
+            "# TYPE m counter\nm{x=\"1\" 2\n",          // unterminated labels
+            "# TYPE 1bad counter\n1bad 2\n",            // bad metric name
+            "# TYPE m counter\nnothing-here\n",         // no value separator
+        ] {
+            assert!(validate_exposition(bad).is_err(), "{bad:?} should fail");
+        }
+        let good = "# HELP m help text\n# TYPE m gauge\nm 1\nm{a=\"b\"} 2.5\n";
+        assert_eq!(validate_exposition(good).unwrap(), 2);
+    }
+}

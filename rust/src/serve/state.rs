@@ -1,0 +1,195 @@
+//! Shared state of the HTTP front door: the serving core handles, the
+//! admission controller, the metric registry, and the store of
+//! asynchronous tickets awaiting `GET /v1/tickets/{id}` polls.
+
+use super::admission::{Admission, AdmitGuard};
+use super::prom::HttpMetrics;
+use crate::config::ServeConfig;
+use crate::coordinator::registry::GraphRegistry;
+use crate::coordinator::request::PprResponse;
+use crate::coordinator::server::{Server, Ticket};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Everything a connection handler needs, shared behind one `Arc`.
+pub struct ServeState {
+    /// The serving core (batching, engines, per-graph stats).
+    pub server: Arc<Server>,
+    /// The graph registry behind the core (listing, routing).
+    pub registry: Arc<GraphRegistry>,
+    /// The validated `[serve]` configuration.
+    pub cfg: ServeConfig,
+    /// Admission control (per-graph bounded queues, class shed order).
+    pub admission: Admission,
+    /// Prometheus counters/histograms.
+    pub metrics: HttpMetrics,
+    /// Async tickets awaiting polls.
+    pub tickets: TicketStore,
+}
+
+impl ServeState {
+    /// Assemble the shared state from the core handles and config.
+    pub fn new(server: Arc<Server>, registry: Arc<GraphRegistry>, cfg: ServeConfig) -> Self {
+        let admission = Admission::new(&cfg);
+        let ttl = Duration::from_secs(cfg.ticket_ttl_secs);
+        Self {
+            server,
+            registry,
+            cfg,
+            admission,
+            metrics: HttpMetrics::new(),
+            tickets: TicketStore::new(ttl),
+        }
+    }
+}
+
+/// One stored async submission: the ticket, its admission slot (released
+/// when the entry is removed), and its creation time for TTL expiry.
+struct Stored {
+    ticket: Ticket,
+    /// Held for the entry's lifetime; dropping it releases admission.
+    _guard: AdmitGuard,
+    created: Instant,
+}
+
+/// Outcome of polling a stored ticket.
+#[derive(Debug)]
+pub enum PollOutcome {
+    /// No such ticket (never existed, already consumed, or TTL-expired).
+    NotFound,
+    /// Still in flight.
+    Pending,
+    /// Finished: the entry has been removed from the store.
+    Done(Result<PprResponse, String>),
+}
+
+/// Thread-safe store of submitted-but-unpolled tickets. Entries are
+/// removed when their result is consumed or when they outlive the TTL
+/// (purged on every insert/poll — no background sweeper thread).
+pub struct TicketStore {
+    entries: Mutex<HashMap<u64, Stored>>,
+    ttl: Duration,
+}
+
+impl TicketStore {
+    /// New store with the given entry TTL.
+    pub fn new(ttl: Duration) -> Self {
+        Self { entries: Mutex::new(HashMap::new()), ttl }
+    }
+
+    /// Store a submitted ticket with its admission slot; returns the
+    /// ticket id the client polls with.
+    pub fn insert(&self, ticket: Ticket, guard: AdmitGuard) -> u64 {
+        let id = ticket.id();
+        let mut entries = self.entries.lock().unwrap();
+        let now = Instant::now();
+        entries.retain(|_, s| now.duration_since(s.created) < self.ttl);
+        entries.insert(id, Stored { ticket, _guard: guard, created: now });
+        id
+    }
+
+    /// Poll a ticket by id. A finished ticket is consumed: its entry (and
+    /// admission slot) is released and a second poll returns `NotFound`.
+    pub fn poll(&self, id: u64) -> PollOutcome {
+        let mut entries = self.entries.lock().unwrap();
+        let now = Instant::now();
+        entries.retain(|_, s| now.duration_since(s.created) < self.ttl);
+        let Some(stored) = entries.get(&id) else {
+            return PollOutcome::NotFound;
+        };
+        match stored.ticket.poll() {
+            None => PollOutcome::Pending,
+            Some(result) => {
+                entries.remove(&id);
+                PollOutcome::Done(result)
+            }
+        }
+    }
+
+    /// Live (unconsumed, unexpired) entries.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Whether the store holds no live entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::coordinator::builder::EngineBuilder;
+    use crate::fixed::{AccuracyClass, Precision};
+
+    fn tiny_server() -> Server {
+        let g = crate::graph::generators::watts_strogatz(64, 4, 0.2, 11);
+        let cfg = RunConfig {
+            precision: Precision::Fixed(26),
+            kappa: 2,
+            iterations: 3,
+            batch_timeout_ms: 1,
+            num_shards: 1,
+            ..Default::default()
+        };
+        EngineBuilder::native().config(cfg).serve(&g, 1).expect("server starts")
+    }
+
+    fn serve_cfg() -> ServeConfig {
+        ServeConfig { queue_cap: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn ticket_store_poll_consumes_once() {
+        let server = tiny_server();
+        let adm = Admission::new(&serve_cfg());
+        let store = TicketStore::new(Duration::from_secs(60));
+
+        let guard = adm.try_admit("default", AccuracyClass::Static).unwrap();
+        let id = store.insert(server.submit(5, 3), guard);
+        assert_eq!(store.len(), 1);
+        assert_eq!(adm.depth("default", AccuracyClass::Static), 1);
+
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let resp = loop {
+            match store.poll(id) {
+                PollOutcome::Pending => {
+                    assert!(Instant::now() < deadline, "never resolved");
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                PollOutcome::Done(result) => break result.expect("query succeeds"),
+                PollOutcome::NotFound => panic!("ticket vanished while pending"),
+            }
+        };
+        assert_eq!(resp.vertex, 5);
+        assert_eq!(resp.ranking.len(), 3);
+        // consumed: the entry and its admission slot are gone
+        assert!(matches!(store.poll(id), PollOutcome::NotFound));
+        assert!(store.is_empty());
+        assert_eq!(adm.depth("default", AccuracyClass::Static), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn ticket_store_expires_stale_entries() {
+        let server = tiny_server();
+        let adm = Admission::new(&serve_cfg());
+        let store = TicketStore::new(Duration::from_millis(30));
+        let guard = adm.try_admit("default", AccuracyClass::Static).unwrap();
+        let id = store.insert(server.submit(1, 2), guard);
+        std::thread::sleep(Duration::from_millis(50));
+        // the TTL purge runs on poll: the entry is gone and its slot free
+        assert!(matches!(store.poll(id), PollOutcome::NotFound));
+        assert_eq!(adm.depth("default", AccuracyClass::Static), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_ticket_is_not_found() {
+        let store = TicketStore::new(Duration::from_secs(1));
+        assert!(matches!(store.poll(424242), PollOutcome::NotFound));
+    }
+}

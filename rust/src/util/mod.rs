@@ -6,9 +6,11 @@
 //! reference algorithms by Blackman & Vigna). All experiments seed
 //! explicitly, making every table and figure bit-reproducible.
 
+pub mod json;
 pub mod report;
 pub mod rng;
 pub mod timing;
 
+pub use json::Json;
 pub use rng::Xoshiro256;
 pub use timing::Stopwatch;

@@ -224,7 +224,12 @@ fn pjrt_step_latency() {
         let rt = ppr_spmv::runtime::Runtime::cpu().unwrap();
         let engine = ppr_spmv::runtime::PjrtPprEngine::load_spec(&rt, dir, spec, &pg).unwrap();
         let pers: Vec<u32> = (1..=spec.kappa as u32).collect();
-        let cfg = PprConfig { alpha: manifest.alpha, max_iterations: 1, convergence_threshold: None };
+        let cfg = PprConfig {
+            alpha: manifest.alpha,
+            max_iterations: 1,
+            convergence_threshold: None,
+            top_k: None,
+        };
         let s = bench(2, 8, || engine.run(&pers, &cfg).unwrap());
         t.row(&[
             spec.file.clone(),

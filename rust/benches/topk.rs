@@ -1,0 +1,14 @@
+//! `cargo bench --bench topk [-- --full | --scale N]`
+//!
+//! Top-K-native streaming datapath vs dense-run-then-extract, across
+//! 1/4/8 shards and K ∈ {10, 100, 1000} at 26-bit fixed point. Verifies
+//! exact top-N agreement between the two paths, reports the write-back
+//! pruning ledger and the pruned HBM channel cycle model, and emits the
+//! machine-readable `BENCH_topk.json` consumed by CI. See
+//! `bench_harness::topk`.
+
+fn main() {
+    let opts = ppr_spmv::bench_harness::ExpOptions::from_args();
+    println!("# topk native [{}]\n", opts.descriptor());
+    ppr_spmv::bench_harness::topk::run(&opts);
+}

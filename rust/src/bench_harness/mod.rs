@@ -22,6 +22,7 @@ pub mod serving;
 pub mod shard_scaling;
 pub mod table1_datasets;
 pub mod table2_resources;
+pub mod topk;
 
 use crate::config::RunConfig;
 use crate::coordinator::{EngineBuilder, PprEngine, ScoreBlock};

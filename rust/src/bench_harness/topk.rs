@@ -1,0 +1,301 @@
+//! Top-K-native sweep — the payoff of carrying candidate heaps inside the
+//! fused sweep instead of extracting rankings from the dense score block
+//! afterwards (DESIGN.md §9).
+//!
+//! For each shard count ∈ {1, 4, 8} and K ∈ {10, 100, 1000}, the sweep
+//! runs the same κ-lane batch (26-bit fixed point, the paper's 10
+//! iterations) through two result paths of the same engine on the same
+//! prepared graph:
+//!
+//! - **native** — `cfg.top_k = Some(K)`: per-shard per-lane streaming
+//!   heaps ride the fused sweep, merge once per iteration, and the run
+//!   returns ranked `(vertex, score)` lists directly (O(K·κ) result
+//!   handling, plus the write-back pruning ledger);
+//! - **extract-after** — the dense run followed by a full per-lane
+//!   top-K selection over all |V| scores (the pre-§9 serving path).
+//!
+//! Both paths produce **identical** rankings by construction (the heaps
+//! use `Datapath::cmp_words` + the crate-wide lower-vertex tie-break,
+//! the same total order `metrics::top_n_by` applies to the dense block);
+//! every point re-verifies that here and the JSON records it — CI gates
+//! on `exact_topn_match` and on the K=100 pruning ledger being positive,
+//! not on the measured speedup (which is hardware-dependent).
+
+use super::ExpOptions;
+use crate::ppr::{BatchedPpr, PprConfig, PreparedGraph};
+use crate::spmv::datapath::{Datapath, FixedPath};
+use crate::util::report::Table;
+use crate::util::timing::bench;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Shard counts swept (1 = the paper's single-stream design).
+pub const TOPK_SHARD_SWEEP: [usize; 3] = [1, 4, 8];
+
+/// K values swept (the follow-up paper's serving regime is K ≪ |V|).
+pub const TOPK_K_SWEEP: [usize; 3] = [10, 100, 1000];
+
+/// One measured point of the sweep.
+#[derive(Debug, Clone)]
+pub struct TopkPoint {
+    /// Shard count.
+    pub shards: usize,
+    /// Requested K.
+    pub k: usize,
+    /// Median seconds per κ-batch, top-K-native run.
+    pub native_seconds: f64,
+    /// Median seconds per κ-batch, dense run + full top-K extraction.
+    pub extract_seconds: f64,
+    /// `extract_seconds / native_seconds`.
+    pub speedup: f64,
+    /// Both paths returned identical ranked vertex sequences.
+    pub exact_topn_match: bool,
+    /// Write-back words the modeled FPGA skips over the whole run.
+    pub writeback_words_saved: u64,
+    /// Modeled fused multi-CU cycles per iteration, dense write-back.
+    pub model_cycles_dense: u64,
+    /// Modeled fused multi-CU cycles per iteration, thresholded pruning.
+    pub model_cycles_pruned: u64,
+}
+
+/// Dense-path reference extraction: per-lane top-K vertex sequence from a
+/// vertex-major score block, using the crate-wide ranking order.
+fn extract_ranked(
+    d: &FixedPath,
+    scores: &[u64],
+    lanes: usize,
+    nv: usize,
+    k: usize,
+) -> Vec<Vec<u32>> {
+    (0..lanes)
+        .map(|lane| {
+            crate::metrics::top_n_by(nv, k, |a, b| {
+                d.cmp_words(scores[a * lanes + lane], scores[b * lanes + lane])
+            })
+            .into_iter()
+            .map(|v| v as u32)
+            .collect()
+        })
+        .collect()
+}
+
+/// Run the sweep on one graph; `kappa` lanes per batch, `iterations` PPR
+/// iterations per run.
+pub fn sweep(coo: &crate::graph::CooMatrix, kappa: usize, iterations: usize) -> Vec<TopkPoint> {
+    let nv = coo.num_vertices;
+    let d = FixedPath::paper(26);
+    let precision = crate::fixed::Precision::Fixed(26);
+    let pers: Vec<u32> = (1..=kappa as u32).collect();
+    let dense_cfg = PprConfig { max_iterations: iterations, ..Default::default() };
+    let model = crate::fpga::pipeline::PipelineModel::new(crate::fpga::FpgaConfig::sized_for(
+        precision, nv,
+    ))
+    .expect("design fits");
+    let model_kappa = model.synth.config.kappa as u64;
+    let mut points = Vec::new();
+    for &shards in &TOPK_SHARD_SWEEP {
+        let pg = Arc::new(PreparedGraph::from_coo_sharded(coo, crate::PAPER_B, shards));
+        let mut engine = BatchedPpr::new(d, pg.clone(), kappa, crate::PAPER_ALPHA);
+        for &k in &TOPK_K_SWEEP {
+            let topk_cfg = PprConfig { top_k: Some(k), ..dense_cfg };
+
+            // un-timed verification pass: identical rankings + the ledger
+            let (native_ranked, saved, saved_per_shard, iters_ran) = {
+                let run = engine.run_scratch(&pers, &topk_cfg);
+                let ranked = run.topk.expect("top-K run returns a ranking");
+                let lanes: Vec<Vec<u32>> = ranked
+                    .lanes
+                    .iter()
+                    .map(|lane| lane.iter().map(|&(v, _)| v).collect())
+                    .collect();
+                (lanes, ranked.writeback_words_saved, ranked.saved_per_shard, run.iterations)
+            };
+            let dense_ranked = {
+                let run = engine.run_scratch(&pers, &dense_cfg);
+                extract_ranked(&d, run.scores, run.lanes, nv, k)
+            };
+            let exact_topn_match = native_ranked == dense_ranked;
+
+            // per-iteration written epilogue words for the channel model:
+            // |V_s|·κ minus the ledger's per-iteration average saving
+            let written: Vec<u64> = pg
+                .sharded
+                .shards
+                .iter()
+                .zip(&saved_per_shard)
+                .map(|(s, &sv)| {
+                    let full = s.num_dst_vertices() as u64 * model_kappa;
+                    full.saturating_sub(sv / (iters_ran.max(1) as u64))
+                })
+                .collect();
+
+            let native_seconds =
+                bench(1, 5, || engine.run_scratch(&pers, &topk_cfg).iterations).median;
+            let extract_seconds = bench(1, 5, || {
+                let run = engine.run_scratch(&pers, &dense_cfg);
+                extract_ranked(&d, run.scores, run.lanes, nv, k).len()
+            })
+            .median;
+            points.push(TopkPoint {
+                shards,
+                k,
+                native_seconds,
+                extract_seconds,
+                speedup: extract_seconds / native_seconds,
+                exact_topn_match,
+                writeback_words_saved: saved,
+                model_cycles_dense: model.cycles_per_iteration_fused_sharded(&pg.sharded),
+                model_cycles_pruned: model
+                    .cycles_per_iteration_fused_sharded_topk(&pg.sharded, &written),
+            });
+        }
+    }
+    points
+}
+
+/// Serialize the sweep as the machine-readable `BENCH_topk.json` consumed
+/// by the CI smoke gate (hand-rolled: the vendored crate set has no
+/// serde). Two top-level flags summarize the acceptance criteria:
+/// `all_exact` (every point's rankings matched the dense extraction) and
+/// `writeback_positive_at_k100` (every K=100 point pruned something).
+pub fn to_json(points: &[TopkPoint], descriptor: &str) -> String {
+    let all_exact = points.iter().all(|p| p.exact_topn_match);
+    let k100_positive = {
+        let k100: Vec<_> = points.iter().filter(|p| p.k == 100).collect();
+        !k100.is_empty() && k100.iter().all(|p| p.writeback_words_saved > 0)
+    };
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"bench\": \"topk_native\",\n  \"config\": \"{descriptor}\",\n"));
+    s.push_str(&format!(
+        "  \"all_exact\": {all_exact},\n  \"writeback_positive_at_k100\": {k100_positive},\n"
+    ));
+    s.push_str("  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"shards\": {}, \"k\": {}, \"native_s\": {:.6}, \"extract_s\": {:.6}, \
+             \"speedup\": {:.3}, \"exact_topn_match\": {}, \"writeback_words_saved\": {}, \
+             \"model_cycles_dense\": {}, \"model_cycles_pruned\": {}}}{}\n",
+            p.shards,
+            p.k,
+            p.native_seconds,
+            p.extract_seconds,
+            p.speedup,
+            p.exact_topn_match,
+            p.writeback_words_saved,
+            p.model_cycles_dense,
+            p.model_cycles_pruned,
+            if i + 1 < points.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write `BENCH_topk.json` into `dir`; returns the path written.
+pub fn emit_json(
+    points: &[TopkPoint],
+    descriptor: &str,
+    dir: &Path,
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_topk.json");
+    std::fs::write(&path, to_json(points, descriptor))?;
+    Ok(path)
+}
+
+/// The full top-K experiment: HK graph at the configured scale, κ and
+/// iteration count from the paper's timed setup.
+pub fn run(opts: &ExpOptions) -> Table {
+    let spec = crate::graph::DatasetSpec::table1_suite(opts.scale)
+        .into_iter()
+        .find(|s| s.name == "HK-100k")
+        .expect("HK-100k in the Table 1 suite");
+    let ds = spec.build();
+    let coo = crate::graph::CooMatrix::from_graph(&ds.graph);
+    let kappa = crate::PAPER_KAPPA;
+    let mut t = Table::new(
+        &format!(
+            "Top-K-native vs extract-after — |V|={} |E|={} κ={kappa} 26b ({})",
+            ds.graph.num_vertices,
+            ds.graph.num_edges(),
+            opts.descriptor()
+        ),
+        &[
+            "shards",
+            "K",
+            "native ms",
+            "extract ms",
+            "speedup",
+            "exact",
+            "wb words saved",
+            "model cyc dense",
+            "model cyc pruned",
+        ],
+    );
+    let points = sweep(&coo, kappa, opts.iterations);
+    for p in &points {
+        t.row(&[
+            format!("{}", p.shards),
+            format!("{}", p.k),
+            format!("{:.3}", p.native_seconds * 1e3),
+            format!("{:.3}", p.extract_seconds * 1e3),
+            format!("{:.2}x", p.speedup),
+            format!("{}", p.exact_topn_match),
+            format!("{}", p.writeback_words_saved),
+            format!("{}", p.model_cycles_dense),
+            format!("{}", p.model_cycles_pruned),
+        ]);
+    }
+    t.emit(opts.csv_path("topk_native").as_deref());
+    if let Some(dir) = &opts.csv_dir {
+        match emit_json(&points, &opts.descriptor(), dir) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("could not write BENCH_topk.json: {e}"),
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_reports_all_points_exact_and_json_shape() {
+        // tiny graph: bookkeeping and exactness, not timing
+        let g = crate::graph::generators::holme_kim(300, 4, 0.25, 41);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let pts = sweep(&coo, 2, 4);
+        assert_eq!(pts.len(), TOPK_SHARD_SWEEP.len() * TOPK_K_SWEEP.len());
+        for p in &pts {
+            assert!(p.native_seconds > 0.0 && p.extract_seconds > 0.0);
+            assert!(p.exact_topn_match, "shards={} K={}", p.shards, p.k);
+            assert!(p.model_cycles_pruned <= p.model_cycles_dense);
+            if p.k < 300 {
+                assert!(
+                    p.writeback_words_saved > 0,
+                    "K={} < |V| must prune something",
+                    p.k
+                );
+            }
+        }
+        let json = to_json(&pts, "test");
+        assert!(json.contains("\"bench\": \"topk_native\""));
+        assert!(json.contains("\"all_exact\": true"));
+        assert!(json.contains("\"writeback_positive_at_k100\": true"));
+        assert_eq!(json.matches("\"exact_topn_match\": true").count(), pts.len());
+        assert!(!json.contains("},\n  ]"));
+    }
+
+    #[test]
+    fn emit_json_writes_file() {
+        let g = crate::graph::generators::holme_kim(200, 3, 0.2, 6);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let pts = sweep(&coo, 1, 2);
+        let dir = std::env::temp_dir().join("ppr_topk_json_test");
+        let path = emit_json(&pts[..2], "test", &dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with('{') && text.trim_end().ends_with('}'));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -75,8 +75,8 @@ impl Args {
 }
 
 /// Build a RunConfig from common CLI options (`--precision`, `--class`,
-/// `--kappa`, `--iterations`, `--alpha`, `--shards`, `--no-fused`,
-/// `--config <file>`).
+/// `--kappa`, `--iterations`, `--alpha`, `--shards`, `--top-k`,
+/// `--no-fused`, `--config <file>`).
 pub fn run_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = match args.options.get("config") {
         Some(path) => RunConfig::load(std::path::Path::new(path))?,
@@ -100,6 +100,9 @@ pub fn run_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(s) = args.get::<usize>("shards") {
         cfg.num_shards = s;
+    }
+    if let Some(k) = args.get::<usize>("top-k") {
+        cfg.top_k = Some(k);
     }
     if args.flags.contains("no-fused") {
         cfg.fused = false;
@@ -180,11 +183,12 @@ const USAGE: &str = "\
 ppr-spmv — reduced-precision streaming SpMV for Personalized PageRank
 USAGE:
   ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|shards|fusion|
-            multigraph|ladder|serving|all>
+            multigraph|ladder|serving|topk|all>
             [--full] [--scale N] [--requests N] [--iterations N] [--no-csv]
   ppr-spmv serve  [--graph NAME|--graph-file PATH] [--precision 26b]
             [--class static|fast|balanced|exact]
             [--engine native|pjrt|cpu] [--kappa 8] [--shards N] [--no-fused]
+            [--top-k N] (route top-N batches onto the top-K-native datapath)
             [--iterations 10] [--workers N] [--demo-requests N]
             [--deadline-ms N]
           multi-graph: repeat --graph NAME=SOURCE (SOURCE = edge-list path
@@ -246,6 +250,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "serving" => {
             bh::serving::run(&opts);
         }
+        "topk" => {
+            bh::topk::run(&opts);
+        }
         "all" => {
             bh::table1_datasets::run(&opts);
             bh::table2_resources::run(&opts);
@@ -262,6 +269,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             bh::multigraph::run(&opts);
             bh::precision_ladder::run(&opts);
             bh::serving::run(&opts);
+            bh::topk::run(&opts);
         }
         other => bail!("unknown experiment {other}"),
     }
@@ -655,6 +663,14 @@ mod tests {
     fn no_fused_flag_disables_fusion() {
         let cfg = run_config(&args("serve --no-fused")).unwrap();
         assert!(!cfg.fused);
+    }
+
+    #[test]
+    fn top_k_flag_sets_the_routing_cap() {
+        let cfg = run_config(&args("serve --top-k 128")).unwrap();
+        assert_eq!(cfg.top_k, Some(128));
+        assert_eq!(run_config(&args("serve")).unwrap().top_k, None, "off by default");
+        assert!(run_config(&args("serve --top-k 0")).is_err(), "K=0 rejected by validate");
     }
 
     #[test]

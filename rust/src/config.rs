@@ -189,6 +189,12 @@ pub struct RunConfig {
     pub batch_timeout_ms: u64,
     /// Top-N results returned per request.
     pub top_n: usize,
+    /// Top-K-native routing cap (DESIGN.md §9): batches whose every
+    /// request asks for `top_n <= top_k` run the engines' in-sweep
+    /// candidate-heap datapath with `K = top_k` instead of extracting
+    /// rankings from dense score vectors. `None` (default) disables the
+    /// routing. Config key `engine.top_k`, CLI `--top-k`.
+    pub top_k: Option<usize>,
     /// Artifacts directory for PJRT execution.
     pub artifacts_dir: String,
 }
@@ -216,6 +222,7 @@ impl Default for RunConfig {
             convergence_threshold: None,
             batch_timeout_ms: 5,
             top_n: 10,
+            top_k: None,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -255,6 +262,9 @@ impl RunConfig {
         if let Some(v) = doc.get("engine", "convergence_threshold") {
             cfg.convergence_threshold = Some(v.as_float()?);
         }
+        if let Some(v) = doc.get("engine", "top_k") {
+            cfg.top_k = Some(v.as_int()? as usize);
+        }
         if let Some(v) = doc.get("server", "batch_timeout_ms") {
             cfg.batch_timeout_ms = v.as_int()? as u64;
         }
@@ -289,6 +299,9 @@ impl RunConfig {
         }
         if self.iterations == 0 {
             bail!("iterations must be positive");
+        }
+        if self.top_k == Some(0) {
+            bail!("top_k must be at least 1 when set");
         }
         Ok(())
     }
@@ -558,6 +571,16 @@ mod tests {
         let text = "[engine]\nfused = true\n";
         let cfg = RunConfig::from_doc(&ConfigDoc::parse(text).unwrap()).unwrap();
         assert!(cfg.fused);
+    }
+
+    #[test]
+    fn top_k_parsed_and_validated() {
+        assert_eq!(RunConfig::default().top_k, None, "top-K routing is opt-in");
+        let text = "[engine]\ntop_k = 100\n";
+        let cfg = RunConfig::from_doc(&ConfigDoc::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.top_k, Some(100));
+        let bad = "[engine]\ntop_k = 0\n";
+        assert!(RunConfig::from_doc(&ConfigDoc::parse(bad).unwrap()).is_err());
     }
 
     #[test]

@@ -49,6 +49,13 @@ impl GraphBatch {
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }
+
+    /// The largest `top_n` any request in this batch asks for — the K a
+    /// top-K-native engine run needs to answer every request as a prefix
+    /// of the ranked lanes (`None` for an empty batch).
+    pub fn top_k_hint(&self) -> Option<usize> {
+        self.requests.iter().map(|r| r.top_n).max()
+    }
 }
 
 /// The batching key: one graph × one accuracy class.
@@ -398,6 +405,22 @@ mod tests {
             assert_eq!(batch.graph.as_ref(), super::super::request::DEFAULT_GRAPH);
         }
         assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn top_k_hint_is_the_batch_max() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        b.submit(PprRequest::new(1, 1, 5));
+        b.submit(PprRequest::new(2, 2, 100));
+        b.submit(PprRequest::new(3, 3, 10));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.top_k_hint(), Some(100));
+        let empty = GraphBatch {
+            graph: Arc::from("x"),
+            class: AccuracyClass::Static,
+            requests: Vec::new(),
+        };
+        assert_eq!(empty.top_k_hint(), None);
     }
 
     #[test]

@@ -53,6 +53,30 @@ pub trait PprEngine {
     /// Run one batch of `personalization.len()` lanes into `out`.
     fn run_batch(&mut self, personalization: &[VertexId], out: &mut ScoreBlock) -> Result<()>;
 
+    /// Run one batch wanting only the per-lane **top-`k` rankings**: `out`
+    /// ends in ranked mode ([`ScoreBlock::ranked_k`]` == Some(k)`) with at
+    /// most `k` entries per lane (fewer when `k > |V|`), the crate-wide
+    /// tie-break (descending score, lower vertex id wins).
+    ///
+    /// The default implementation runs the dense batch and ranks after
+    /// ([`ScoreBlock::rank_in_place`]) — correct for every backend. The
+    /// native engines override it with the top-K-native datapath
+    /// (DESIGN.md §9): in-sweep candidate heaps, O(K·κ) extraction, and a
+    /// write-back pruning ledger surfaced via
+    /// [`ScoreBlock::writeback_words_saved`]. Both paths return the exact
+    /// same ranking.
+    fn run_batch_topk(
+        &mut self,
+        personalization: &[VertexId],
+        k: usize,
+        out: &mut ScoreBlock,
+    ) -> Result<()> {
+        anyhow::ensure!(k >= 1, "top-K batch needs K >= 1");
+        self.run_batch(personalization, out)?;
+        out.rank_in_place(k);
+        Ok(())
+    }
+
     /// Engine description for logs.
     fn describe(&self) -> String;
 
@@ -109,10 +133,13 @@ impl NativeEngine {
     /// engine instead of re-quantized per build. The streams' word type
     /// must match `cfg.precision`.
     pub fn with_values(graph: Arc<PreparedGraph>, values: ValueStreams, cfg: RunConfig) -> Self {
+        // `top_k` stays None here: the engine is built top-K-agnostic and
+        // `run_batch_topk` overlays `Some(k)` per call (PprConfig is Copy)
         let ppr_cfg = PprConfig {
             alpha: cfg.alpha,
             max_iterations: cfg.iterations,
             convergence_threshold: cfg.convergence_threshold,
+            top_k: None,
         };
         let num_vertices = graph.num_vertices;
         let num_shards = graph.num_shards();
@@ -165,6 +192,37 @@ impl PprEngine for NativeEngine {
                 let res = engine.run_scratch(personalization, &self.ppr_cfg);
                 out.fill_vertex_major(lanes, nv, lanes, res.scores, |w| w as f64);
                 res.iterations
+            }
+        };
+        out.set_iterations(iterations);
+        Ok(())
+    }
+
+    fn run_batch_topk(
+        &mut self,
+        personalization: &[VertexId],
+        k: usize,
+        out: &mut ScoreBlock,
+    ) -> Result<()> {
+        self.validate_batch(personalization)?;
+        anyhow::ensure!(k >= 1, "top-K batch needs K >= 1");
+        let nv = self.num_vertices;
+        // overlay the per-call K on the engine's static solver config
+        let cfg = PprConfig { top_k: Some(k), ..self.ppr_cfg };
+        let iterations = match &mut self.inner {
+            NativeInner::Fixed(engine) => {
+                let res = engine.run_scratch(personalization, &cfg);
+                let ranked = res.topk.expect("top-K run returns a ranking");
+                let iterations = res.iterations;
+                out.fill_ranked(nv, &ranked);
+                iterations
+            }
+            NativeInner::Float(engine) => {
+                let res = engine.run_scratch(personalization, &cfg);
+                let ranked = res.topk.expect("top-K run returns a ranking");
+                let iterations = res.iterations;
+                out.fill_ranked(nv, &ranked);
+                iterations
             }
         };
         out.set_iterations(iterations);
@@ -229,6 +287,7 @@ impl LadderEngine {
             alpha: cfg.alpha,
             max_iterations: spec.max_iterations,
             convergence_threshold: Some(cfg.convergence_threshold.unwrap_or(spec.tolerance)),
+            top_k: None,
         };
         let num_vertices = graph.num_vertices;
         let inner = LadderPpr::with_streams(graph, spec, cfg.kappa, cfg.alpha, executor, streams);
@@ -263,6 +322,23 @@ impl PprEngine for LadderEngine {
                 out.fill_vertex_major(lanes, nv, lanes, words, |w| w as f64);
             }
         }
+        out.set_iterations(run.iterations);
+        out.set_rungs(run.segments.len().max(1));
+        Ok(())
+    }
+
+    fn run_batch_topk(
+        &mut self,
+        personalization: &[VertexId],
+        k: usize,
+        out: &mut ScoreBlock,
+    ) -> Result<()> {
+        self.validate_batch(personalization)?;
+        anyhow::ensure!(k >= 1, "top-K batch needs K >= 1");
+        let cfg = PprConfig { top_k: Some(k), ..self.ppr_cfg };
+        let run = self.inner.run(personalization, &cfg);
+        let ranked = run.topk.expect("top-K ladder run returns a ranking");
+        out.fill_ranked(self.num_vertices, &ranked);
         out.set_iterations(run.iterations);
         out.set_rungs(run.segments.len().max(1));
         Ok(())
@@ -359,6 +435,7 @@ impl PjrtEngineAdapter {
             alpha: cfg.alpha,
             max_iterations: cfg.iterations,
             convergence_threshold: cfg.convergence_threshold,
+            top_k: None,
         };
         Self { inner, ppr_cfg, graph_vertices, lane_buf: Vec::new() }
     }
@@ -410,6 +487,9 @@ pub struct ThreadBoundEngine {
 
 struct Job {
     lanes: Vec<VertexId>,
+    /// `Some(k)` routes the job through `run_batch_topk` on the owning
+    /// thread; `None` is a plain dense batch.
+    top_k: Option<usize>,
     block: ScoreBlock,
     reply: std::sync::mpsc::Sender<(ScoreBlock, Result<()>)>,
 }
@@ -437,7 +517,10 @@ impl ThreadBoundEngine {
                     }
                 };
                 while let Ok(mut job) = rx.recv() {
-                    let res = engine.run_batch(&job.lanes, &mut job.block);
+                    let res = match job.top_k {
+                        Some(k) => engine.run_batch_topk(&job.lanes, k, &mut job.block),
+                        None => engine.run_batch(&job.lanes, &mut job.block),
+                    };
                     let _ = job.reply.send((job.block, res));
                 }
             })
@@ -448,22 +531,18 @@ impl ThreadBoundEngine {
             .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
         Ok(Self { tx, max_kappa, num_vertices, description, spare: None, handle: Some(handle) })
     }
-}
 
-impl PprEngine for ThreadBoundEngine {
-    fn max_kappa(&self) -> usize {
-        self.max_kappa
-    }
-
-    fn num_vertices(&self) -> usize {
-        self.num_vertices
-    }
-
-    fn run_batch(&mut self, personalization: &[VertexId], out: &mut ScoreBlock) -> Result<()> {
+    /// Ship one job across the channel and swap the filled block back.
+    fn submit(
+        &mut self,
+        personalization: &[VertexId],
+        top_k: Option<usize>,
+        out: &mut ScoreBlock,
+    ) -> Result<()> {
         let block = self.spare.take().unwrap_or_default();
         let (reply, rx) = std::sync::mpsc::channel();
         self.tx
-            .send(Job { lanes: personalization.to_vec(), block, reply })
+            .send(Job { lanes: personalization.to_vec(), top_k, block, reply })
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
         let (block, res) =
             rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped reply"))?;
@@ -479,6 +558,30 @@ impl PprEngine for ThreadBoundEngine {
                 Err(e)
             }
         }
+    }
+}
+
+impl PprEngine for ThreadBoundEngine {
+    fn max_kappa(&self) -> usize {
+        self.max_kappa
+    }
+
+    fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    fn run_batch(&mut self, personalization: &[VertexId], out: &mut ScoreBlock) -> Result<()> {
+        self.submit(personalization, None, out)
+    }
+
+    fn run_batch_topk(
+        &mut self,
+        personalization: &[VertexId],
+        k: usize,
+        out: &mut ScoreBlock,
+    ) -> Result<()> {
+        anyhow::ensure!(k >= 1, "top-K batch needs K >= 1");
+        self.submit(personalization, Some(k), out)
     }
 
     fn describe(&self) -> String {
@@ -665,6 +768,104 @@ mod tests {
         assert_eq!(block.iterations(), 20);
         assert_eq!(block.top_n(0, 1)[0].vertex, 3);
         assert_eq!(block.top_n(1, 1)[0].vertex, 40);
+    }
+
+    #[test]
+    fn native_topk_matches_dense_extraction_through_engine_api() {
+        for precision in [Precision::Fixed(26), Precision::Float32] {
+            let cfg = RunConfig {
+                precision,
+                kappa: 4,
+                iterations: 15,
+                num_shards: 2,
+                ..Default::default()
+            };
+            let pg = Arc::new(PreparedGraph::new_sharded(
+                &crate::graph::generators::erdos_renyi(128, 0.05, 10),
+                8,
+                2,
+            ));
+            let mut e = NativeEngine::new(pg, cfg);
+            let mut dense = ScoreBlock::new();
+            let mut ranked = ScoreBlock::new();
+            e.run_batch(&[1, 5, 9], &mut dense).unwrap();
+            e.run_batch_topk(&[1, 5, 9], 10, &mut ranked).unwrap();
+            assert_eq!(ranked.ranked_k(), Some(10));
+            assert_eq!(ranked.lanes(), 3);
+            assert_eq!(ranked.iterations(), dense.iterations());
+            for lane in 0..3 {
+                assert_eq!(
+                    ranked.top_n(lane, 10),
+                    dense.top_n(lane, 10),
+                    "{precision} lane {lane}: native top-K must equal extract-after"
+                );
+            }
+            assert!(
+                ranked.writeback_words_saved() > 0,
+                "{precision}: late iterations should mark prunable write-back words"
+            );
+        }
+    }
+
+    #[test]
+    fn ladder_topk_matches_dense_extraction() {
+        let pg = prepared();
+        let cfg = RunConfig { kappa: 4, ..Default::default() };
+        let mut e = LadderEngine::new(pg, AccuracyClass::Balanced, &cfg).unwrap();
+        let mut dense = ScoreBlock::new();
+        let mut ranked = ScoreBlock::new();
+        e.run_batch(&[3, 9], &mut dense).unwrap();
+        e.run_batch_topk(&[3, 9], 7, &mut ranked).unwrap();
+        assert_eq!(ranked.ranked_k(), Some(7));
+        assert_eq!(ranked.rungs(), dense.rungs());
+        assert_eq!(ranked.iterations(), dense.iterations());
+        for lane in 0..2 {
+            assert_eq!(ranked.top_n(lane, 7), dense.top_n(lane, 7), "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn default_topk_impl_ranks_after_dense_run() {
+        // CpuBaselineEngine has no native override: the trait default must
+        // still deliver a ranked block with the same ordering
+        let g = crate::graph::generators::watts_strogatz(64, 6, 0.2, 11);
+        let csr = Arc::new(CsrMatrix::from_graph(&g));
+        let cfg = RunConfig { kappa: 2, iterations: 20, ..Default::default() };
+        let mut e = CpuBaselineEngine::new(csr, cfg);
+        let mut dense = ScoreBlock::new();
+        let mut ranked = ScoreBlock::new();
+        e.run_batch(&[3], &mut dense).unwrap();
+        e.run_batch_topk(&[3], 5, &mut ranked).unwrap();
+        assert_eq!(ranked.ranked_k(), Some(5));
+        assert_eq!(ranked.writeback_words_saved(), 0, "no native pruning ledger");
+        assert_eq!(ranked.top_n(0, 5), dense.top_n(0, 5));
+        let mut err = ScoreBlock::new();
+        assert!(e.run_batch_topk(&[3], 0, &mut err).is_err(), "K=0 rejected");
+    }
+
+    #[test]
+    fn thread_bound_engine_forwards_topk() {
+        let pg = prepared();
+        let cfg = RunConfig {
+            precision: Precision::Fixed(26),
+            kappa: 4,
+            iterations: 15,
+            ..Default::default()
+        };
+        let mut direct = NativeEngine::new(pg.clone(), cfg.clone());
+        let mut bound = ThreadBoundEngine::spawn(move || {
+            Ok(Box::new(NativeEngine::new(pg, cfg)) as Box<dyn PprEngine>)
+        })
+        .unwrap();
+        let mut a = ScoreBlock::new();
+        let mut b = ScoreBlock::new();
+        direct.run_batch_topk(&[2, 5, 9], 8, &mut a).unwrap();
+        bound.run_batch_topk(&[2, 5, 9], 8, &mut b).unwrap();
+        assert_eq!(b.ranked_k(), Some(8), "ranked mode crosses the channel");
+        for lane in 0..3 {
+            assert_eq!(a.top_n(lane, 8), b.top_n(lane, 8), "lane {lane}");
+        }
+        assert_eq!(a.writeback_words_saved(), b.writeback_words_saved());
     }
 
     #[test]

@@ -157,15 +157,20 @@ impl std::error::Error for QueryError {}
 
 /// Validate the JSON-facing query fields against a graph of
 /// `num_vertices` vertices. `class` is the raw client string (`None`
-/// means "use the server default"). Returns the parsed class on success.
-/// Vertex ids arrive as `u64` (straight from the JSON number) so an id
-/// beyond `u32` is a range error, never a silent truncation.
+/// means "use the server default"). Returns the parsed class and the
+/// **effective** `top_n` on success: `top_n == 0` is a typed rejection
+/// ([`QueryError::ZeroTopN`] → HTTP 400) and `top_n > |V|` is clamped to
+/// `|V|` — a ranking can never hold more rows than the graph has
+/// vertices, and clamping here keeps the serving layers (and the
+/// top-K-native routing cap) working with a meaningful K. Vertex ids
+/// arrive as `u64` (straight from the JSON number) so an id beyond `u32`
+/// is a range error, never a silent truncation.
 pub fn validate_query(
     vertices: &[u64],
     top_n: usize,
     class: Option<&str>,
     num_vertices: usize,
-) -> Result<Option<AccuracyClass>, QueryError> {
+) -> Result<(Option<AccuracyClass>, usize), QueryError> {
     if vertices.is_empty() {
         return Err(QueryError::EmptyPersonalization);
     }
@@ -183,7 +188,7 @@ pub fn validate_query(
             return Err(QueryError::VertexOutOfRange { vertex: v, num_vertices });
         }
     }
-    Ok(parsed)
+    Ok((parsed, top_n.min(num_vertices)))
 }
 
 /// Extract the top-N ranking from a dense lane of scores: descending
@@ -287,13 +292,26 @@ mod tests {
         }
         // canonical labels and whitespace/case variants parse
         for class in AccuracyClass::all() {
-            assert_eq!(validate_query(&[1], 5, Some(class.label()), 100), Ok(Some(class)));
+            assert_eq!(
+                validate_query(&[1], 5, Some(class.label()), 100),
+                Ok((Some(class), 5))
+            );
         }
         assert_eq!(
             validate_query(&[1], 5, Some(" Exact "), 100),
-            Ok(Some(AccuracyClass::Exact))
+            Ok((Some(AccuracyClass::Exact), 5))
         );
-        assert_eq!(validate_query(&[1], 5, None, 100), Ok(None), "absent class → default");
+        assert_eq!(validate_query(&[1], 5, None, 100), Ok((None, 5)), "absent class → default");
+    }
+
+    #[test]
+    fn validate_query_clamps_oversized_top_n() {
+        // top_n beyond |V| can never be honored: the effective value is
+        // clamped so downstream layers (including the top-K routing cap)
+        // see a meaningful K
+        assert_eq!(validate_query(&[1], 5_000, None, 100), Ok((None, 100)));
+        assert_eq!(validate_query(&[1], 100, None, 100), Ok((None, 100)), "boundary passes");
+        assert_eq!(validate_query(&[1], 99, None, 100), Ok((None, 99)));
     }
 
     #[test]

@@ -22,9 +22,19 @@
 
 use super::request::RankedVertex;
 use crate::graph::VertexId;
+use crate::spmv::RankedLanes;
 
 /// A reusable block of dense PPR scores: `lanes × num_vertices`, lane-major
 /// (`scores[lane * num_vertices + vertex]`).
+///
+/// Since the top-K-native datapath (DESIGN.md §9) a block can also hold a
+/// **ranked** result — per-lane top-K lists instead of dense vectors — in
+/// which case [`ranked_k`](Self::ranked_k) is `Some(K)`, [`top_n`] serves
+/// O(K) slices and the dense [`lane`] views are unavailable. `reset`
+/// restores dense mode.
+///
+/// [`top_n`]: Self::top_n
+/// [`lane`]: Self::lane
 #[derive(Debug, Clone, Default)]
 pub struct ScoreBlock {
     lanes: usize,
@@ -32,6 +42,12 @@ pub struct ScoreBlock {
     scores: Vec<f64>,
     iterations: usize,
     rungs: usize,
+    /// Per-lane ranked lists; meaningful only while `ranked_k` is `Some`.
+    ranked: Vec<Vec<RankedVertex>>,
+    ranked_k: Option<usize>,
+    writeback_words_saved: u64,
+    /// Index scratch for [`Self::top_n_scratch`] / [`Self::rank_in_place`].
+    topn_idx: Vec<usize>,
 }
 
 impl ScoreBlock {
@@ -58,6 +74,11 @@ impl ScoreBlock {
         self.scores.resize(lanes * num_vertices, 0.0);
         self.iterations = 0;
         self.rungs = 1;
+        self.ranked_k = None;
+        self.writeback_words_saved = 0;
+        for lane in &mut self.ranked {
+            lane.clear();
+        }
     }
 
     /// Lanes held by the last batch.
@@ -95,18 +116,27 @@ impl ScoreBlock {
     /// Zero-copy view of lane `k`'s dense scores.
     ///
     /// # Panics
-    /// If `k >= self.lanes()`.
+    /// If `k >= self.lanes()`, or if the block holds a ranked-only result
+    /// (filled via [`Self::fill_ranked`] — no dense scores exist).
     pub fn lane(&self, k: usize) -> &[f64] {
         assert!(k < self.lanes, "lane {k} out of range ({} lanes)", self.lanes);
+        assert!(
+            self.scores.len() >= self.lanes * self.num_vertices,
+            "dense scores unavailable: block holds a ranked top-K result"
+        );
         &self.scores[k * self.num_vertices..(k + 1) * self.num_vertices]
     }
 
     /// Mutable view of lane `k` (engine side).
     ///
     /// # Panics
-    /// If `k >= self.lanes()`.
+    /// If `k >= self.lanes()`, or if the block holds a ranked-only result.
     pub fn lane_mut(&mut self, k: usize) -> &mut [f64] {
         assert!(k < self.lanes, "lane {k} out of range ({} lanes)", self.lanes);
+        assert!(
+            self.scores.len() >= self.lanes * self.num_vertices,
+            "dense scores unavailable: block holds a ranked top-K result"
+        );
         &mut self.scores[k * self.num_vertices..(k + 1) * self.num_vertices]
     }
 
@@ -140,14 +170,121 @@ impl ScoreBlock {
     }
 
     /// Extract the top-`n` ranking of lane `k` without copying the lane:
-    /// descending score, ties toward the lower vertex id, NaN ranked last.
-    /// `n` is clamped to `num_vertices`; `n == 0` yields an empty ranking.
+    /// descending score, ties toward the lower vertex id, NaN ranked last
+    /// (the crate-wide tie-break, `metrics::top_n_by`). `n` is clamped to
+    /// `num_vertices`; `n == 0` yields an empty ranking. On a ranked block
+    /// this is an O(n) prefix copy of the stored ranking (clamped to its
+    /// K entries).
     pub fn top_n(&self, k: usize, n: usize) -> Vec<RankedVertex> {
+        if self.ranked_k.is_some() {
+            let lane = self.ranked_lane(k);
+            return lane[..n.min(lane.len())].to_vec();
+        }
         let lane = self.lane(k);
         crate::metrics::top_n_indices_f64(lane, n)
             .into_iter()
             .map(|v| RankedVertex { vertex: v as VertexId, score: lane[v] })
             .collect()
+    }
+
+    /// Scratch-reusing [`Self::top_n`] for the serving hot path: the
+    /// O(|V|) index buffer is kept inside the block and reused across
+    /// calls instead of reallocated per response lane. Only the returned
+    /// ranking (which the response owns) is allocated. Ranked blocks are
+    /// served as an O(n) prefix copy, same as `top_n`.
+    pub fn top_n_scratch(&mut self, k: usize, n: usize) -> Vec<RankedVertex> {
+        if self.ranked_k.is_some() {
+            let lane = self.ranked_lane(k);
+            return lane[..n.min(lane.len())].to_vec();
+        }
+        assert!(k < self.lanes, "lane {k} out of range ({} lanes)", self.lanes);
+        let nv = self.num_vertices;
+        let mut idx = std::mem::take(&mut self.topn_idx);
+        let lane = &self.scores[k * nv..(k + 1) * nv];
+        crate::metrics::top_n_by_into(nv, n, |a, b| crate::metrics::nan_last(lane[a], lane[b]), &mut idx);
+        let out = idx
+            .iter()
+            .map(|&v| RankedVertex { vertex: v as VertexId, score: lane[v] })
+            .collect();
+        self.topn_idx = idx;
+        out
+    }
+
+    /// `Some(K)` when the block holds per-lane top-K rankings (the
+    /// top-K-native path or [`Self::rank_in_place`]), `None` for dense
+    /// blocks. `reset` restores `None`.
+    pub fn ranked_k(&self) -> Option<usize> {
+        self.ranked_k
+    }
+
+    /// Score-vector write-back words the producing engine's pruning
+    /// threshold marked skippable (0 for dense blocks and engines without
+    /// the native top-K path). See DESIGN.md §9.
+    pub fn writeback_words_saved(&self) -> u64 {
+        self.writeback_words_saved
+    }
+
+    /// Ranked view of lane `k`: descending score, ties toward the lower
+    /// vertex id, at most `ranked_k` entries.
+    ///
+    /// # Panics
+    /// If the block is dense (`ranked_k() == None`) or `k` is out of range.
+    pub fn ranked_lane(&self, k: usize) -> &[RankedVertex] {
+        assert!(self.ranked_k.is_some(), "ranked_lane on a dense block");
+        assert!(k < self.lanes, "lane {k} out of range ({} lanes)", self.lanes);
+        &self.ranked[k]
+    }
+
+    /// Load a top-K-native engine result: `src.lanes.len()` ranked lanes
+    /// over `num_vertices` vertices with **no dense scores** — the O(K·κ)
+    /// result path that replaces the full dequantize/transpose + per-lane
+    /// scan. Lane buffers are reused across batches; iteration/rung
+    /// counters are cleared for the engine to set.
+    pub fn fill_ranked(&mut self, num_vertices: usize, src: &RankedLanes) {
+        let lanes = src.lanes.len();
+        self.lanes = lanes;
+        self.num_vertices = num_vertices;
+        self.scores.clear();
+        self.iterations = 0;
+        self.rungs = 1;
+        self.ranked_k = Some(src.k);
+        self.writeback_words_saved = src.writeback_words_saved;
+        self.ranked.resize_with(lanes, Vec::new);
+        self.ranked.truncate(lanes);
+        for (dst, lane) in self.ranked.iter_mut().zip(&src.lanes) {
+            dst.clear();
+            dst.extend(lane.iter().map(|&(vertex, score)| RankedVertex { vertex, score }));
+        }
+    }
+
+    /// Rank every dense lane into a top-`k` list and switch the block to
+    /// ranked mode (dense scores are retained, so `lane` keeps working).
+    /// This is the extract-after fallback used by engines without a native
+    /// top-K path; must be called on a dense block.
+    pub fn rank_in_place(&mut self, k: usize) {
+        assert!(
+            self.scores.len() >= self.lanes * self.num_vertices,
+            "rank_in_place needs dense scores"
+        );
+        let nv = self.num_vertices;
+        let mut idx = std::mem::take(&mut self.topn_idx);
+        let mut ranked = std::mem::take(&mut self.ranked);
+        ranked.resize_with(self.lanes, Vec::new);
+        ranked.truncate(self.lanes);
+        for (lane_i, dst) in ranked.iter_mut().enumerate() {
+            let lane = &self.scores[lane_i * nv..(lane_i + 1) * nv];
+            crate::metrics::top_n_by_into(
+                nv,
+                k,
+                |a, b| crate::metrics::nan_last(lane[a], lane[b]),
+                &mut idx,
+            );
+            dst.clear();
+            dst.extend(idx.iter().map(|&v| RankedVertex { vertex: v as VertexId, score: lane[v] }));
+        }
+        self.ranked = ranked;
+        self.topn_idx = idx;
+        self.ranked_k = Some(k);
     }
 }
 
@@ -251,6 +388,72 @@ mod tests {
         assert_eq!(b.lanes(), 2);
         assert_eq!(b.lane(0), &[0.0, 4.0, 8.0]);
         assert_eq!(b.lane(1), &[1.0, 5.0, 9.0]);
+    }
+
+    #[test]
+    fn top_n_scratch_matches_top_n() {
+        let mut b = ScoreBlock::new();
+        b.reset(2, 6);
+        b.lane_mut(0).copy_from_slice(&[0.5, 0.9, 0.5, 0.9, 0.1, f64::NAN]);
+        b.lane_mut(1).copy_from_slice(&[0.0, 0.0, 0.3, 0.2, 0.3, 0.1]);
+        for lane in 0..2 {
+            for n in [0, 1, 3, 6, 10] {
+                assert_eq!(b.top_n_scratch(lane, n), b.top_n(lane, n), "lane {lane} n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_ranked_serves_topn_without_dense_scores() {
+        let src = crate::spmv::RankedLanes {
+            k: 2,
+            lanes: vec![vec![(3, 0.9), (0, 0.5)], vec![(1, 0.8), (4, 0.2)]],
+            writeback_words_saved: 17,
+            saved_per_shard: vec![10, 7],
+        };
+        let mut b = ScoreBlock::new();
+        b.fill_ranked(6, &src);
+        assert_eq!(b.lanes(), 2);
+        assert_eq!(b.num_vertices(), 6);
+        assert_eq!(b.ranked_k(), Some(2));
+        assert_eq!(b.writeback_words_saved(), 17);
+        assert_eq!(b.top_n(0, 1), vec![RankedVertex { vertex: 3, score: 0.9 }]);
+        assert_eq!(b.top_n_scratch(1, 10).len(), 2, "n clamps to the stored K entries");
+        assert_eq!(b.ranked_lane(1)[0].vertex, 1);
+        assert!(b.as_flat().is_empty(), "ranked fill allocates no dense scores");
+    }
+
+    #[test]
+    #[should_panic(expected = "dense scores unavailable")]
+    fn dense_lane_view_panics_on_ranked_block() {
+        let src = crate::spmv::RankedLanes {
+            k: 1,
+            lanes: vec![vec![(0, 1.0)]],
+            writeback_words_saved: 0,
+            saved_per_shard: vec![0],
+        };
+        let mut b = ScoreBlock::new();
+        b.fill_ranked(3, &src);
+        let _ = b.lane(0);
+    }
+
+    #[test]
+    fn rank_in_place_matches_dense_top_n_and_reset_restores_dense() {
+        let mut b = ScoreBlock::new();
+        b.reset(2, 5);
+        b.lane_mut(0).copy_from_slice(&[0.5, 0.9, 0.5, 0.9, 0.1]);
+        b.lane_mut(1).copy_from_slice(&[0.1, 0.2, 0.3, 0.4, 0.5]);
+        let dense: Vec<_> = (0..2).map(|lane| b.top_n(lane, 3)).collect();
+        b.rank_in_place(3);
+        assert_eq!(b.ranked_k(), Some(3));
+        for lane in 0..2 {
+            assert_eq!(b.top_n(lane, 3), dense[lane]);
+            assert_eq!(b.top_n(lane, 9), dense[lane], "clamped to the K stored entries");
+        }
+        assert_eq!(b.lane(0)[1], 0.9, "dense scores retained by rank_in_place");
+        b.reset(1, 5);
+        assert_eq!(b.ranked_k(), None, "reset restores dense mode");
+        assert_eq!(b.writeback_words_saved(), 0);
     }
 
     #[test]

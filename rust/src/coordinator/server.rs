@@ -50,6 +50,14 @@ pub struct ServerConfig {
     pub default_top_n: usize,
     /// Accuracy class applied to submissions that don't pick one.
     pub default_class: AccuracyClass,
+    /// Top-K-native routing cap (DESIGN.md §9). `Some(k0)`: a batch whose
+    /// every request asks for `top_n <= k0` runs on the engine's
+    /// [`PprEngine::run_batch_topk`] path with `K = k0` — in-sweep
+    /// candidate heaps, O(K·κ) extraction — and each response is served
+    /// as a prefix of the ranked lanes. Batches needing more than `k0`
+    /// (and all full-vector work) keep the dense path. `None` disables
+    /// the routing.
+    pub top_k: Option<usize>,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +66,7 @@ impl Default for ServerConfig {
             batch_timeout: Duration::from_millis(5),
             default_top_n: 10,
             default_class: AccuracyClass::Static,
+            top_k: None,
         }
     }
 }
@@ -69,6 +78,7 @@ impl ServerConfig {
             batch_timeout: Duration::from_millis(cfg.batch_timeout_ms),
             default_top_n: cfg.top_n,
             default_class: cfg.accuracy_class,
+            top_k: cfg.top_k,
         }
     }
 }
@@ -259,6 +269,7 @@ impl Server {
         let stats = Arc::new(ServerStats::new());
         let per_graph: Arc<PerGraphStats> = Arc::new(Mutex::new(HashMap::new()));
 
+        let top_k = cfg.top_k;
         let workers = engines
             .into_iter()
             .enumerate()
@@ -279,6 +290,7 @@ impl Server {
                                 &mut *engine,
                                 &mut block,
                                 batch.requests,
+                                top_k,
                                 &pending,
                                 &[stats.as_ref(), gstats.as_ref()],
                             );
@@ -320,6 +332,7 @@ impl Server {
         let stats = Arc::new(ServerStats::new());
         let per_graph: Arc<PerGraphStats> = Arc::new(Mutex::new(HashMap::new()));
 
+        let top_k = cfg.top_k;
         let handles = (0..workers)
             .map(|widx| {
                 let batcher = batcher.clone();
@@ -346,6 +359,7 @@ impl Server {
                                 &mut cache,
                                 &mut block,
                                 batch,
+                                top_k,
                                 &pending,
                                 &stats,
                                 &gstats,
@@ -391,6 +405,7 @@ impl Server {
         cache: &mut EngineCache,
         block: &mut ScoreBlock,
         batch: GraphBatch,
+        top_k: Option<usize>,
         pending: &PendingMap,
         stats: &ServerStats,
         gstats: &ServerStats,
@@ -398,8 +413,14 @@ impl Server {
         match cache.resolve(&batch.graph, batch.class) {
             Ok((idx, entry)) => {
                 let engine = &mut *cache.engines[idx].3;
-                let served =
-                    Self::serve_batch(engine, block, batch.requests, pending, &[stats, gstats]);
+                let served = Self::serve_batch(
+                    engine,
+                    block,
+                    batch.requests,
+                    top_k,
+                    pending,
+                    &[stats, gstats],
+                );
                 if served {
                     entry.record_batch_served();
                 }
@@ -424,6 +445,7 @@ impl Server {
         engine: &mut dyn PprEngine,
         block: &mut ScoreBlock,
         batch: Vec<PprRequest>,
+        top_k: Option<usize>,
         pending: &PendingMap,
         stats: &[&ServerStats],
     ) -> bool {
@@ -464,7 +486,16 @@ impl Server {
         for s in stats {
             s.record_batch(live.len());
         }
-        match engine.run_batch(&lanes, block) {
+        // top-K-native routing (DESIGN.md §9): only when the configured
+        // cap covers every live request — each response is then a prefix
+        // of the K=k0 ranked lanes. A single larger request (or top_k
+        // unset) keeps the whole batch on the dense path.
+        let native_k = top_k.filter(|&k0| live.iter().all(|r| r.top_n >= 1 && r.top_n <= k0));
+        let run_res = match native_k {
+            Some(k0) => engine.run_batch_topk(&lanes, k0, block),
+            None => engine.run_batch(&lanes, block),
+        };
+        match run_res {
             Ok(()) => {
                 // re-check deadlines at respond time: a request whose
                 // deadline passed DURING the solve is a deadline miss,
@@ -484,7 +515,10 @@ impl Server {
                         );
                         continue;
                     }
-                    let ranking = block.top_n(lane, req.top_n);
+                    // scratch-reusing extraction: on ranked blocks an O(n)
+                    // prefix copy, on dense blocks the index buffer is
+                    // reused across lanes and batches
+                    let ranking = block.top_n_scratch(lane, req.top_n);
                     let queue_time = batch_start.duration_since(req.enqueued_at);
                     let total_time = req.enqueued_at.elapsed();
                     for s in stats {
@@ -1096,6 +1130,49 @@ mod tests {
         std::thread::sleep(Duration::from_millis(210));
         let resp = ticket.wait().expect("buffered response survives expiry");
         assert_eq!(resp.vertex, 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn topk_routing_serves_identical_rankings() {
+        let g = crate::graph::generators::watts_strogatz(256, 8, 0.2, 42);
+        let dense =
+            EngineBuilder::native().config(test_config(4)).serve(&g, 1).expect("dense server");
+        let topk = EngineBuilder::native()
+            .config(RunConfig { top_k: Some(16), ..test_config(4) })
+            .serve(&g, 1)
+            .expect("topk server");
+        for v in [3u32, 77, 200] {
+            let a = dense.query(v, 8).unwrap();
+            let b = topk.query(v, 8).unwrap();
+            assert_eq!(a.ranking, b.ranking, "v={v}: top-K routing must not change results");
+            assert_eq!(a.iterations, b.iterations, "v={v}");
+        }
+        // a request above the cap falls back to the dense path and still
+        // gets its full ranking
+        let big = topk.query(5, 64).unwrap();
+        assert_eq!(big.ranking.len(), 64);
+        dense.shutdown();
+        topk.shutdown();
+    }
+
+    #[test]
+    fn topk_routing_works_on_registry_server() {
+        let registry = Arc::new(GraphRegistry::new(4));
+        registry
+            .register_graph("ws", crate::graph::generators::watts_strogatz(256, 8, 0.2, 42))
+            .unwrap();
+        let server = EngineBuilder::native()
+            .config(RunConfig { top_k: Some(10), ..test_config(4) })
+            .serve_registry(registry, 1)
+            .expect("registry server");
+        let resp = server.query_graph("ws", 7, 5).unwrap();
+        assert_eq!(resp.ranking.len(), 5);
+        assert_eq!(resp.ranking[0].vertex, 7);
+        // classes route through the ladder engines' native top-K too
+        let resp = server.submit_with_class(9, 3, None, AccuracyClass::Balanced).wait().unwrap();
+        assert_eq!(resp.ranking[0].vertex, 9);
+        assert_eq!(server.stats().snapshot().errors, 0);
         server.shutdown();
     }
 

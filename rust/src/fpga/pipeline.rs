@@ -29,6 +29,14 @@
 //! channel — the scaling design of the HBM Top-K SpMV follow-up paper.
 //! Every sweep then costs the max over shards, with each shard's alignment
 //! padding charged to its own channel.
+//!
+//! The **top-K pruned** variant
+//! ([`PipelineModel::cycles_per_iteration_fused_sharded_topk`]) models the
+//! same fused multi-CU design with thresholded write-back pruning
+//! (DESIGN.md §9): each CU skips epilogue words below the merged K-th
+//! threshold, shrinking the update sweep to the words actually written,
+//! and the PCIe transfer carries K ranked pairs per lane instead of a
+//! dense |V| vector.
 
 use super::{FpgaConfig, SynthesisReport};
 use crate::spmv::ShardedSchedule;
@@ -212,6 +220,81 @@ impl PipelineModel {
             .max()
             .unwrap_or(0);
         slowest + PIPELINE_DEPTH
+    }
+
+    /// The fused multi-CU iteration under **top-K write-back pruning**
+    /// (DESIGN.md §9): each CU's write-back FSM drops epilogue words whose
+    /// lane fell below the previous iteration's merged K-th threshold, so
+    /// the update sweep streams `written_words` instead of the full
+    /// `|V_s| × κ` block through its HBM channel. `written_words_per_shard`
+    /// is the **per-iteration** epilogue word count of each shard (κ lanes
+    /// wide, one entry per CU — the software engine's
+    /// `RankedLanes::saved_per_shard` ledger yields it as
+    /// `|V_s|·κ − saved_s/iterations`). The edge sweep is untouched: every
+    /// edge is still read once per iteration, exactly like the dense sweep.
+    ///
+    /// With `written_words = |V_s| × κ` for every shard (nothing pruned)
+    /// this equals [`Self::cycles_per_iteration_fused_sharded`]: the wide
+    /// word carries κ lane words per vertex and B vertices retire per
+    /// cycle, so `(|V_s|·κ).div_ceil(B·κ) = |V_s|.div_ceil(B)`.
+    pub fn cycles_per_iteration_fused_sharded_topk(
+        &self,
+        sharded: &ShardedSchedule,
+        written_words_per_shard: &[u64],
+    ) -> u64 {
+        debug_assert_eq!(
+            sharded.b, self.synth.config.b,
+            "schedule built for a different packet width than the synthesized design"
+        );
+        assert_eq!(
+            written_words_per_shard.len(),
+            sharded.shards.len(),
+            "one written-word count per compute unit"
+        );
+        let b = self.synth.config.b as u64;
+        let kappa = self.synth.config.kappa as u64;
+        let slowest = sharded
+            .shards
+            .iter()
+            .zip(written_words_per_shard)
+            .map(|(s, &written)| {
+                let edge = (s.num_slots() / sharded.b) as u64 * self.edge_ii();
+                let update = written.div_ceil(b * kappa);
+                edge.max(update)
+            })
+            .max()
+            .unwrap_or(0);
+        slowest + PIPELINE_DEPTH
+    }
+
+    /// Estimate a top-K workload on the pruned fused multi-CU design:
+    /// compute uses [`Self::cycles_per_iteration_fused_sharded_topk`], and
+    /// the PCIe result transfer shrinks from κ dense |V|-word vectors per
+    /// batch to κ ranked lists of K `(vertex, score)` pairs (8 bytes each)
+    /// — the O(K·κ) extraction the Top-K SpMV follow-up paper ships back.
+    pub fn estimate_fused_sharded_topk(
+        &self,
+        w: &Workload,
+        sharded: &ShardedSchedule,
+        written_words_per_shard: &[u64],
+        top_k: usize,
+    ) -> WorkloadEstimate {
+        let cycles_per_iteration =
+            self.cycles_per_iteration_fused_sharded_topk(sharded, written_words_per_shard);
+        let kappa = self.synth.config.kappa;
+        let batches = w.requests.div_ceil(kappa);
+        let total_cycles = cycles_per_iteration * w.iterations as u64 * batches as u64;
+        let compute_seconds = total_cycles as f64 / (self.synth.clock_mhz * 1e6);
+        // ranked transfer: κ lists of K (vertex id, score) pairs per batch
+        let bytes = (batches * kappa * top_k.min(w.num_vertices) * 8) as f64;
+        let transfer_seconds = bytes / super::U200.pcie_bandwidth;
+        WorkloadEstimate {
+            cycles_per_iteration,
+            total_cycles,
+            batches,
+            transfer_seconds,
+            seconds: compute_seconds + transfer_seconds,
+        }
     }
 
     /// Estimate a **mixed-precision ladder** workload (DESIGN.md §7):
@@ -501,6 +584,68 @@ mod tests {
             laddered.rungs[2].cycles_per_iteration
         );
         assert!(PipelineModel::estimate_ladder(&[], &w, &sharded, 8, 3000).is_err());
+    }
+
+    #[test]
+    fn unpruned_topk_model_equals_fused_model() {
+        // written = |V_s|·κ everywhere (no word below threshold) must
+        // reproduce the dense fused sweep exactly, at every shard count
+        let g = crate::graph::generators::erdos_renyi(3000, 0.004, 13);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let m = model(Precision::Fixed(26), 3000);
+        let (b, kappa) = (m.synth.config.b, m.synth.config.kappa as u64);
+        for shards in [1usize, 2, 4] {
+            let sharded = ShardedSchedule::build(&coo, b, shards);
+            let full: Vec<u64> =
+                sharded.shards.iter().map(|s| s.num_dst_vertices() as u64 * kappa).collect();
+            assert_eq!(
+                m.cycles_per_iteration_fused_sharded_topk(&sharded, &full),
+                m.cycles_per_iteration_fused_sharded(&sharded),
+                "shards={shards}"
+            );
+        }
+    }
+
+    #[test]
+    fn writeback_pruning_cuts_the_update_bound_sweep() {
+        // an edge-starved graph (|E| ≪ |V|) is update-sweep bound, so
+        // pruning 3/4 of the epilogue words must shorten the iteration
+        let edges: Vec<(u32, u32)> = (0..16u32).map(|s| (s, s + 1)).collect();
+        let g = crate::graph::Graph::new(4096, edges);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let m = model(Precision::Fixed(26), 4096);
+        let (b, kappa) = (m.synth.config.b, m.synth.config.kappa as u64);
+        let sharded = ShardedSchedule::build(&coo, b, 2);
+        let full: Vec<u64> =
+            sharded.shards.iter().map(|s| s.num_dst_vertices() as u64 * kappa).collect();
+        let pruned: Vec<u64> = full.iter().map(|w| w / 4).collect();
+        let dense = m.cycles_per_iteration_fused_sharded_topk(&sharded, &full);
+        let cut = m.cycles_per_iteration_fused_sharded_topk(&sharded, &pruned);
+        assert!(cut < dense, "pruned {cut} vs dense {dense}");
+        // ...but never below the edge stream: edges are always read once
+        let max_packets = *sharded.shard_packets().iter().max().unwrap() as u64;
+        assert!(cut >= max_packets * 3 + PIPELINE_DEPTH);
+    }
+
+    #[test]
+    fn topk_transfer_shrinks_with_k() {
+        let g = crate::graph::generators::erdos_renyi(3000, 0.004, 17);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let m = model(Precision::Fixed(26), 3000);
+        let (b, kappa) = (m.synth.config.b, m.synth.config.kappa as u64);
+        let sharded = ShardedSchedule::build(&coo, b, 2);
+        let w = Workload { requests: 100, iterations: 10, num_vertices: 3000, num_packets: 0 };
+        let full: Vec<u64> =
+            sharded.shards.iter().map(|s| s.num_dst_vertices() as u64 * kappa).collect();
+        let dense = m.estimate_fused_sharded(&w, &sharded);
+        let topk = m.estimate_fused_sharded_topk(&w, &sharded, &full, 100);
+        // K (vertex, score) pairs per lane beat |V| dense words per lane
+        assert!(topk.transfer_seconds < dense.transfer_seconds / 10.0);
+        assert_eq!(topk.cycles_per_iteration, dense.cycles_per_iteration);
+        // K clamps to |V|: asking for more rows than vertices charges |V|
+        let clamped = m.estimate_fused_sharded_topk(&w, &sharded, &full, 10_000);
+        let explicit = m.estimate_fused_sharded_topk(&w, &sharded, &full, 3000);
+        assert_eq!(clamped.transfer_seconds, explicit.transfer_seconds);
     }
 
     #[test]

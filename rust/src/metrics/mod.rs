@@ -33,7 +33,7 @@ pub fn top_n_indices_f32(scores: &[f32], n: usize) -> Vec<usize> {
 
 /// Total order treating NaN as smaller than every number (so it lands at
 /// the tail of a descending ranking instead of panicking the comparator).
-fn nan_last(a: f64, b: f64) -> std::cmp::Ordering {
+pub fn nan_last(a: f64, b: f64) -> std::cmp::Ordering {
     match (a.is_nan(), b.is_nan()) {
         (false, false) => a.partial_cmp(&b).expect("both finite-or-inf"),
         (true, true) => std::cmp::Ordering::Equal,
@@ -42,9 +42,37 @@ fn nan_last(a: f64, b: f64) -> std::cmp::Ordering {
     }
 }
 
-fn top_n_by<F: Fn(usize, usize) -> std::cmp::Ordering>(len: usize, n: usize, cmp: F) -> Vec<usize> {
+/// The **single** top-N selection kernel every ranked surface of this crate
+/// goes through — `top_n_indices_*` here, `fixed::FxVec::top_n`,
+/// `coordinator::ScoreBlock::top_n` and the streaming candidate heaps of
+/// `spmv::topk` (whose word-space comparators must agree with `cmp`, see
+/// `Datapath::cmp_words`). The documented tie-break rule: **descending
+/// score, ties broken toward the lower vertex id**, with NaN (when `cmp`
+/// is NaN-aware) never outranking a number. `cmp(a, b)` compares the
+/// *scores* at indices `a` and `b` in ascending value order.
+pub fn top_n_by<F: Fn(usize, usize) -> std::cmp::Ordering>(
+    len: usize,
+    n: usize,
+    cmp: F,
+) -> Vec<usize> {
+    let mut idx = Vec::new();
+    top_n_by_into(len, n, cmp, &mut idx);
+    idx
+}
+
+/// Scratch-reusing form of [`top_n_by`]: fills `idx` (cleared first) with
+/// the selected indices, reusing its allocation across calls — the serving
+/// hot path calls this once per response lane, and the O(|V|) index buffer
+/// must not be reallocated per request.
+pub fn top_n_by_into<F: Fn(usize, usize) -> std::cmp::Ordering>(
+    len: usize,
+    n: usize,
+    cmp: F,
+    idx: &mut Vec<usize>,
+) {
     let n = n.min(len);
-    let mut idx: Vec<usize> = (0..len).collect();
+    idx.clear();
+    idx.extend(0..len);
     // descending by score, ascending by id on ties
     let ord = |a: &usize, b: &usize| cmp(*b, *a).then_with(|| a.cmp(b));
     if n < len {
@@ -53,7 +81,6 @@ fn top_n_by<F: Fn(usize, usize) -> std::cmp::Ordering>(len: usize, n: usize, cmp
     }
     idx.sort_unstable_by(ord);
     idx.truncate(n);
-    idx
 }
 
 /// Rank position (0-based) of every vertex in a descending score order —
@@ -179,6 +206,18 @@ mod tests {
         assert_eq!(top_n_indices_f64(&scores, 10), vec![1, 3, 2, 4, 0]);
         let u: Vec<u64> = vec![5, 1, 5, 0];
         assert_eq!(top_n_indices_u64(&u, 2), vec![0, 2]);
+    }
+
+    #[test]
+    fn top_n_by_into_reuses_scratch() {
+        let scores = [0.5f64, 0.9, 0.5, 0.9];
+        let mut idx = Vec::new();
+        top_n_by_into(scores.len(), 4, |a, b| nan_last(scores[a], scores[b]), &mut idx);
+        assert_eq!(idx, vec![1, 3, 0, 2], "ties break toward the lower id");
+        let cap = idx.capacity();
+        top_n_by_into(scores.len(), 2, |a, b| nan_last(scores[a], scores[b]), &mut idx);
+        assert_eq!(idx, vec![1, 3]);
+        assert_eq!(idx.capacity(), cap, "the index buffer is reused, not reallocated");
     }
 
     #[test]

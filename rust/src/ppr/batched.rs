@@ -40,6 +40,7 @@ use super::{PprConfig, PreparedGraph};
 use crate::graph::VertexId;
 use crate::spmv::fast::{scatter_fused, FusedUpdate};
 use crate::spmv::shard::{fan_out, fan_out_mode, PARALLEL_WORK_PER_SHARD};
+use crate::spmv::topk::{merge_shard_heaps, LaneHeaps, MergedTopK, RankedLanes};
 use crate::spmv::Datapath;
 use std::sync::Arc;
 
@@ -98,6 +99,10 @@ pub struct PprOutput<W> {
     /// Per-iteration Euclidean norm of the update, averaged over lanes
     /// (the convergence signal of Fig. 7).
     pub update_norms: Vec<f64>,
+    /// Top-K-native result (`Some` iff `cfg.top_k` was set): per-lane
+    /// ranked `(vertex, score)` lists plus the write-back pruning ledger.
+    /// The dense `scores` stay valid alongside it.
+    pub topk: Option<RankedLanes>,
 }
 
 impl<W: Copy> PprOutput<W> {
@@ -124,6 +129,9 @@ pub struct PprRun<'a, W> {
     pub iterations: usize,
     /// Per-iteration update norms.
     pub update_norms: Vec<f64>,
+    /// Top-K-native result (`Some` iff `cfg.top_k` was set) — see
+    /// [`PprOutput::topk`].
+    pub topk: Option<RankedLanes>,
 }
 
 /// Extract lane `k` from a vertex-major block of `lanes`-word rows by
@@ -164,6 +172,12 @@ pub struct BatchedPpr<D: Datapath> {
     cur: Vec<D::Word>,
     nxt: Vec<D::Word>,
     scaling: Vec<D::Word>,
+    // top-K-native scratch: one streaming candidate-heap state per shard
+    // plus the cross-shard merge buffer; empty until a run sets
+    // `cfg.top_k`, fully re-seeded at every segment start (ladder rungs
+    // change word formats, so nothing may carry across segments)
+    heaps: Vec<LaneHeaps<D::Word>>,
+    merged: MergedTopK<D::Word>,
 }
 
 impl<D: Datapath> BatchedPpr<D> {
@@ -213,6 +227,8 @@ impl<D: Datapath> BatchedPpr<D> {
             cur: Vec::new(),
             nxt: Vec::new(),
             scaling: Vec::new(),
+            heaps: Vec::new(),
+            merged: MergedTopK::new(),
         }
     }
 
@@ -244,6 +260,7 @@ impl<D: Datapath> BatchedPpr<D> {
             lanes: run.lanes,
             iterations: run.iterations,
             update_norms: run.update_norms,
+            topk: run.topk,
         }
     }
 
@@ -294,6 +311,19 @@ impl<D: Datapath> BatchedPpr<D> {
         let mut cur = std::mem::take(&mut self.cur);
         let mut nxt = std::mem::take(&mut self.nxt);
         let mut scaling = std::mem::take(&mut self.scaling);
+        let mut heaps = std::mem::take(&mut self.heaps);
+        let mut merged = std::mem::take(&mut self.merged);
+
+        let top_k = cfg.top_k.filter(|&kk| kk >= 1);
+        let num_shards = self.graph.sharded.num_shards();
+        if top_k.is_some() {
+            let kk = top_k.unwrap();
+            heaps.resize_with(num_shards, || LaneHeaps::new(kk, k));
+            heaps.truncate(num_shards);
+            for h in &mut heaps {
+                h.reset(kk, k);
+            }
+        }
 
         cur.clear();
         match resume {
@@ -331,6 +361,7 @@ impl<D: Datapath> BatchedPpr<D> {
                 stall_ratio,
                 &mut update_norms,
                 &mut iterations,
+                top_k.map(|_| (&mut heaps[..], &mut merged)),
             ),
             Executor::Unfused | Executor::UnfusedScoped => self.iterate_unfused(
                 &d,
@@ -349,7 +380,32 @@ impl<D: Datapath> BatchedPpr<D> {
         self.cur = cur;
         self.nxt = nxt;
         self.scaling = scaling;
-        (stop, PprRun { scores: &self.cur[..n * k], lanes: k, iterations, update_norms })
+        let topk = top_k.map(|kk| {
+            if self.executor == Executor::Fused && iterations > 0 {
+                // the merged heaps of the final iteration ARE the ranking
+                // (bit-identical to dense extraction — see spmv::topk)
+                let saved_per_shard: Vec<u64> =
+                    heaps.iter().map(|h| h.skipped_words()).collect();
+                RankedLanes {
+                    k: kk,
+                    lanes: merged
+                        .lanes
+                        .iter()
+                        .map(|c| c.iter().map(|c| (c.vertex, d.to_f64(c.word))).collect())
+                        .collect(),
+                    writeback_words_saved: saved_per_shard.iter().sum(),
+                    saved_per_shard,
+                }
+            } else {
+                // unfused executors (and zero-iteration runs, where no
+                // sweep ever fed the heaps) extract densely from the final
+                // scores — same word order, no pruning model
+                dense_ranked(&d, &self.cur[..n * k], k, kk, num_shards)
+            }
+        });
+        self.heaps = heaps;
+        self.merged = merged;
+        (stop, PprRun { scores: &self.cur[..n * k], lanes: k, iterations, update_norms, topk })
     }
 
     /// The fused executor: one sweep per iteration. Each shard scatters
@@ -358,6 +414,13 @@ impl<D: Datapath> BatchedPpr<D> {
     /// epilogue; the buffers then swap. Dangling partials enter the loop
     /// from one standalone scan of the initial scores (the only time the
     /// dangling rows are visited outside the fused sweep).
+    ///
+    /// In top-K-native mode (`topk`), each shard's candidate heaps ride
+    /// inside the same epilogue; at iteration end the heaps are merged
+    /// into the global per-lane top-K and the merged K-th value becomes
+    /// every shard's write-back pruning threshold for the next iteration.
+    /// The sweep's arithmetic is untouched, so scores, norms and stop
+    /// decisions are bit-identical with `topk = None`.
     #[allow(clippy::too_many_arguments)]
     fn iterate_fused(
         &self,
@@ -371,13 +434,29 @@ impl<D: Datapath> BatchedPpr<D> {
         stall_ratio: Option<f64>,
         update_norms: &mut Vec<f64>,
         iterations: &mut usize,
+        mut topk: Option<(&mut [LaneHeaps<D::Word>], &mut MergedTopK<D::Word>)>,
     ) -> SegmentStop {
         let mut partials = self.dangling_partials(d, cur, k, false);
         let mut prev_norm: Option<f64> = None;
         let mut slow = 0u32;
         for _ in 0..cfg.max_iterations {
             self.fold_scaling(d, &partials, k, scaling);
-            let results = self.fused_sweep(d, cur, nxt, scaling, personalization, k);
+            if let Some((heaps, _)) = topk.as_mut() {
+                // heaps rebuild each iteration (every vertex re-observed);
+                // the thresholds of the last merge persist for pruning
+                for h in heaps.iter_mut() {
+                    h.begin_iteration();
+                }
+            }
+            let results = self.fused_sweep(
+                d,
+                cur,
+                nxt,
+                scaling,
+                personalization,
+                k,
+                topk.as_mut().map(|(h, _)| &mut **h),
+            );
             let mut norm_sq = 0.0f64;
             partials.clear();
             for (ns, acc) in results {
@@ -388,6 +467,11 @@ impl<D: Datapath> BatchedPpr<D> {
             }
             std::mem::swap(cur, nxt);
             *iterations += 1;
+            if let Some((heaps, merged)) = topk.as_mut() {
+                // merge BEFORE any stop decision so the final iteration's
+                // global top-K is always in `merged`
+                merge_shard_heaps(d, heaps, merged);
+            }
             let norm = (norm_sq / k as f64).sqrt();
             update_norms.push(norm);
             // a norm of exactly 0 on a laddered (non-final) rung means the
@@ -539,6 +623,7 @@ impl<D: Datapath> BatchedPpr<D> {
         scaling: &[D::Word],
         personalization: &[VertexId],
         k: usize,
+        heaps: Option<&mut [LaneHeaps<D::Word>]>,
     ) -> Vec<(f64, Vec<D::Word>)> {
         let shards = &self.graph.sharded.shards;
         let n = self.graph.num_vertices;
@@ -563,6 +648,7 @@ impl<D: Datapath> BatchedPpr<D> {
                 &upd,
                 &sh.dangling_idx,
                 &mut acc,
+                heaps.map(|h| &mut h[0]),
             );
             return vec![(norm, acc)];
         }
@@ -576,11 +662,18 @@ impl<D: Datapath> BatchedPpr<D> {
             rest = tail;
         }
         debug_assert!(rest.is_empty());
+        // each shard's heap state travels with its worker (one heap per
+        // shard = one candidate unit per HBM pseudo-channel)
+        let heap_slots: Vec<Option<&mut LaneHeaps<D::Word>>> = match heaps {
+            Some(hs) => hs.iter_mut().map(Some).collect(),
+            None => shards.iter().map(|_| None).collect(),
+        };
         // work per shard = edges (scatter) + vertices (epilogue), × lanes
         let serial =
             (self.graph.sharded.num_edges + n) * k < PARALLEL_WORK_PER_SHARD * shards.len();
-        let work: Vec<_> = shards.iter().zip(self.vals.iter()).zip(slices).collect();
-        fan_out(work, serial, |((sh, svals), slice)| {
+        let work: Vec<_> =
+            shards.iter().zip(self.vals.iter()).zip(slices).zip(heap_slots).collect();
+        fan_out(work, serial, |(((sh, svals), slice), heap)| {
             let mut acc = vec![d.zero(); k];
             let norm = scatter_fused(
                 d,
@@ -594,6 +687,7 @@ impl<D: Datapath> BatchedPpr<D> {
                 &upd,
                 &sh.dangling_idx,
                 &mut acc,
+                heap,
             );
             (norm, acc)
         })
@@ -710,6 +804,39 @@ fn update_range<D: Datapath>(
         }
     }
     norm_sq
+}
+
+/// Dense top-K extraction from a vertex-major score block, in word space
+/// through the crate's single selection kernel — the fallback the unfused
+/// executors (and zero-iteration runs) use when `top_k` is requested.
+/// `cmp_words` agrees with `to_f64`, so the ranking is identical to the
+/// streaming heaps'; no sweep was instrumented, so the pruning ledger is
+/// zero.
+fn dense_ranked<D: Datapath>(
+    d: &D,
+    scores: &[D::Word],
+    lanes: usize,
+    k: usize,
+    num_shards: usize,
+) -> RankedLanes {
+    let n = scores.len() / lanes.max(1);
+    let mut out = Vec::with_capacity(lanes);
+    for lane in 0..lanes {
+        let idx = crate::metrics::top_n_by(n, k, |a, b| {
+            d.cmp_words(scores[a * lanes + lane], scores[b * lanes + lane])
+        });
+        out.push(
+            idx.into_iter()
+                .map(|v| (v as VertexId, d.to_f64(scores[v * lanes + lane])))
+                .collect(),
+        );
+    }
+    RankedLanes {
+        k,
+        lanes: out,
+        writeback_words_saved: 0,
+        saved_per_shard: vec![0; num_shards],
+    }
 }
 
 #[cfg(test)]
@@ -1087,6 +1214,104 @@ mod tests {
         assert_eq!(stop, SegmentStop::Converged);
         assert_eq!(seg.scores, base.scores.as_slice());
         assert_eq!(seg.update_norms, base.update_norms);
+    }
+
+    fn ranked_from_dense<D: Datapath>(d: &D, out: &PprOutput<D::Word>, k: usize) -> Vec<Vec<(VertexId, f64)>> {
+        let n = out.scores.len() / out.lanes;
+        (0..out.lanes)
+            .map(|lane| {
+                crate::metrics::top_n_by(n, k, |a, b| {
+                    d.cmp_words(out.scores[a * out.lanes + lane], out.scores[b * out.lanes + lane])
+                })
+                .into_iter()
+                .map(|v| (v as VertexId, d.to_f64(out.scores[v * out.lanes + lane])))
+                .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn topk_native_matches_dense_extraction() {
+        // the streaming heaps must reproduce the dense ranking exactly —
+        // vertices AND scores — at every shard count, and leave the dense
+        // scores / norms / iteration counts bit-unchanged
+        let g = crate::graph::generators::holme_kim(260, 4, 0.3, 29);
+        let coo = crate::graph::CooMatrix::from_graph(&g);
+        let cfg_plain = PprConfig { max_iterations: 9, ..Default::default() };
+        for shards in [1usize, 3] {
+            let pg = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, shards));
+            let d = FixedPath::paper(24);
+            let plain = BatchedPpr::new(d, pg.clone(), 3, 0.85).run(&[2, 8, 21], &cfg_plain);
+            for kk in [5usize, 40, 500] {
+                let cfg = PprConfig { top_k: Some(kk), ..cfg_plain };
+                let out = BatchedPpr::new(d, pg.clone(), 3, 0.85).run(&[2, 8, 21], &cfg);
+                assert_eq!(out.scores, plain.scores, "scores unchanged by top-K mode");
+                assert_eq!(out.update_norms, plain.update_norms);
+                let ranked = out.topk.expect("top_k set");
+                assert_eq!(ranked.k, kk);
+                assert_eq!(ranked.saved_per_shard.len(), shards);
+                assert_eq!(ranked.lanes, ranked_from_dense(&d, &plain, kk), "shards={shards} k={kk}");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_counts_prunable_writeback_words() {
+        // after the first merge installs thresholds, later iterations must
+        // find sub-θ words (most of a power-law graph sits far below the
+        // 10th-ranked score), and the per-shard ledger must sum to the total
+        let g = crate::graph::generators::holme_kim(300, 4, 0.25, 17);
+        let pg = Arc::new(PreparedGraph::new_sharded(&g, 8, 3));
+        let d = FixedPath::paper(26);
+        let cfg = PprConfig { max_iterations: 12, top_k: Some(10), ..Default::default() };
+        let out = BatchedPpr::new(d, pg, 2, 0.85).run(&[1, 7], &cfg);
+        let ranked = out.topk.unwrap();
+        assert!(ranked.writeback_words_saved > 0, "no prunable words found");
+        assert_eq!(
+            ranked.saved_per_shard.iter().sum::<u64>(),
+            ranked.writeback_words_saved
+        );
+        // upper bound: (iterations − 1) sweeps could prune, n·κ words each
+        assert!(ranked.writeback_words_saved < (12 * 300 * 2) as u64);
+    }
+
+    #[test]
+    fn topk_unfused_falls_back_to_dense_extraction() {
+        let g = crate::graph::generators::erdos_renyi(150, 0.04, 3);
+        let pg = Arc::new(PreparedGraph::new(&g, 8));
+        let d = FixedPath::paper(22);
+        let cfg = PprConfig { max_iterations: 8, top_k: Some(7), ..Default::default() };
+        let fused = BatchedPpr::new(d, pg.clone(), 2, 0.85).run(&[3, 9], &cfg);
+        let unfused = BatchedPpr::new(d, pg, 2, 0.85)
+            .with_executor(Executor::Unfused)
+            .run(&[3, 9], &cfg);
+        let (f, u) = (fused.topk.unwrap(), unfused.topk.unwrap());
+        assert_eq!(f.lanes, u.lanes, "identical rankings on both executors");
+        assert_eq!(u.writeback_words_saved, 0, "no sweep instrumented → no ledger");
+    }
+
+    #[test]
+    fn topk_scratch_reseeds_across_runs() {
+        // consecutive runs with different K (and a no-topk run in between)
+        // must not leak candidates or thresholds across requests
+        let g = crate::graph::generators::holme_kim(200, 4, 0.25, 9);
+        let pg = Arc::new(PreparedGraph::new_sharded(&g, 8, 2));
+        let d = FixedPath::paper(24);
+        let mut engine = BatchedPpr::new(d, pg.clone(), 2, 0.85);
+        let cfg_a = PprConfig { max_iterations: 8, top_k: Some(20), ..Default::default() };
+        let a1 = engine.run(&[5, 9], &cfg_a);
+        let _plain = engine.run(&[1, 2], &PprConfig { max_iterations: 8, ..Default::default() });
+        let cfg_b = PprConfig { max_iterations: 8, top_k: Some(3), ..Default::default() };
+        let b = engine.run(&[5, 9], &cfg_b);
+        let a2 = engine.run(&[5, 9], &cfg_a);
+        let fresh_b = BatchedPpr::new(d, pg, 2, 0.85).run(&[5, 9], &cfg_b);
+        assert_eq!(a1.topk.unwrap().lanes, a2.topk.unwrap().lanes);
+        assert_eq!(b.topk.as_ref().unwrap().lanes, fresh_b.topk.as_ref().unwrap().lanes);
+        assert_eq!(
+            b.topk.unwrap().writeback_words_saved,
+            fresh_b.topk.unwrap().writeback_words_saved,
+            "the pruning ledger must restart with every run"
+        );
     }
 
     #[test]

@@ -39,6 +39,7 @@ use super::{copy_lane, PprConfig, PreparedGraph};
 use crate::fixed::{FixedFormat, LadderSpec, Precision};
 use crate::graph::VertexId;
 use crate::spmv::datapath::{FixedPath, FloatPath};
+use crate::spmv::topk::RankedLanes;
 use std::sync::Arc;
 
 /// Per-shard value streams quantized for one precision — the unit of the
@@ -131,6 +132,12 @@ pub struct LadderOutput {
     pub update_norms: Vec<f64>,
     /// The escalation trace, in rung order.
     pub segments: Vec<RungSegment>,
+    /// Top-K-native result (`Some` iff `cfg.top_k` was set): the terminal
+    /// rung's ranking — each rung switch fully re-seeds the candidate
+    /// heaps (narrow and wide words are incomparable), and heaps rebuild
+    /// every iteration, so no candidate can be lost across an escalation.
+    /// The write-back pruning ledger accumulates across all segments.
+    pub topk: Option<RankedLanes>,
 }
 
 impl LadderOutput {
@@ -248,6 +255,8 @@ impl LadderPpr {
         let mut total = 0usize;
         // scores carried between rungs, in the previous rung's format
         let mut carried: Option<LadderScores> = None;
+        // newest rung's ranking; the pruning ledger sums over segments
+        let mut topk: Option<RankedLanes> = None;
 
         for i in 0..nrungs {
             let last = i + 1 == nrungs;
@@ -259,9 +268,10 @@ impl LadderPpr {
                 alpha: cfg.alpha,
                 max_iterations: remaining,
                 convergence_threshold: Some(threshold),
+                top_k: cfg.top_k,
             };
             let stall = if last { None } else { Some(self.spec.stall_ratio) };
-            let (stop, iterations, scores) = match &mut self.rungs[i] {
+            let (stop, iterations, scores, seg_topk) = match &mut self.rungs[i] {
                 Rung::Fixed(engine) => {
                     let fmt = engine.datapath.fmt;
                     // re-quantize the carried scores into this rung's
@@ -278,7 +288,12 @@ impl LadderPpr {
                     let (stop, run) =
                         engine.run_segment(personalization, &seg_cfg, init.as_deref(), stall);
                     update_norms.extend_from_slice(&run.update_norms);
-                    (stop, run.iterations, LadderScores::Fixed(run.scores.to_vec(), fmt))
+                    (
+                        stop,
+                        run.iterations,
+                        LadderScores::Fixed(run.scores.to_vec(), fmt),
+                        run.topk,
+                    )
                 }
                 Rung::Float(engine) => {
                     let init: Option<Vec<f32>> = carried.take().map(|c| match c {
@@ -290,12 +305,25 @@ impl LadderPpr {
                     let (stop, run) =
                         engine.run_segment(personalization, &seg_cfg, init.as_deref(), stall);
                     update_norms.extend_from_slice(&run.update_norms);
-                    (stop, run.iterations, LadderScores::Float(run.scores.to_vec()))
+                    (stop, run.iterations, LadderScores::Float(run.scores.to_vec()), run.topk)
                 }
             };
             total += iterations;
             segments.push(RungSegment { precision: self.spec.rungs[i], iterations, stop });
             carried = Some(scores);
+            if let Some(mut r) = seg_topk {
+                // the heaps were fully re-seeded for this rung (word
+                // formats are incomparable across rungs), so this rung's
+                // ranking replaces the previous one; the write-back ledger
+                // keeps counting across the whole run
+                if let Some(prev) = topk.take() {
+                    r.writeback_words_saved += prev.writeback_words_saved;
+                    for (a, b) in r.saved_per_shard.iter_mut().zip(&prev.saved_per_shard) {
+                        *a += *b;
+                    }
+                }
+                topk = Some(r);
+            }
             if stop != SegmentStop::Stalled {
                 break; // converged (or budget ran dry): the ladder is done
             }
@@ -307,6 +335,7 @@ impl LadderPpr {
             iterations: total,
             update_norms,
             segments,
+            topk,
         }
     }
 }
@@ -449,6 +478,46 @@ mod tests {
              cold start ({} iters)",
             cold.iterations
         );
+    }
+
+    #[test]
+    fn topk_survives_rung_escalation() {
+        // the escalation path must re-seed the heaps per rung without
+        // losing candidates: the final ranking has to equal a dense top-N
+        // extraction of the ladder's own final scores, exactly
+        let coo = coo();
+        let pg = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, 2));
+        let spec = AccuracyClass::Balanced.ladder().unwrap();
+        let budget = spec.max_iterations;
+        let mut ladder = LadderPpr::new(pg, spec, 2, 0.85);
+        let kk = 15usize;
+        let cfg = PprConfig { max_iterations: budget, top_k: Some(kk), ..Default::default() };
+        let out = ladder.run(&[3, 11], &cfg);
+        assert!(out.segments.len() >= 2, "must escalate to exercise the re-seed");
+        let ranked = out.topk.expect("top_k was set");
+        assert_eq!(ranked.k, kk);
+        for lane in 0..2 {
+            let dense = out.scores.lane_f64(2, lane);
+            let want = crate::metrics::top_n_indices_f64(&dense, kk);
+            let got: Vec<usize> =
+                ranked.lanes[lane].iter().map(|&(v, _)| v as usize).collect();
+            assert_eq!(got, want, "lane {lane}: ranking lost candidates across rungs");
+            for (i, &(_, s)) in ranked.lanes[lane].iter().enumerate() {
+                assert_eq!(s, dense[want[i]], "lane {lane} rank {i}: score mismatch");
+            }
+        }
+        // every segment ran with heaps engaged, so the ledger spans them
+        assert!(ranked.writeback_words_saved > 0, "no pruning counted across the run");
+    }
+
+    #[test]
+    fn topk_none_leaves_ladder_output_unranked() {
+        let coo = coo();
+        let pg = Arc::new(PreparedGraph::from_coo(&coo, 8));
+        let spec = LadderSpec::single(Precision::Fixed(24), 1e-6, 20);
+        let out = LadderPpr::new(pg, spec, 1, 0.85)
+            .run(&[4], &PprConfig { max_iterations: 20, ..Default::default() });
+        assert!(out.topk.is_none());
     }
 
     #[test]

@@ -43,6 +43,12 @@ pub struct PprConfig {
     /// Optional early-exit threshold on the Euclidean norm of the update
     /// (paper §5.3.2 uses 1e-6 as the common convergence threshold).
     pub convergence_threshold: Option<f64>,
+    /// Top-K-native mode (`Some(K)`, K ≥ 1): the fused sweep carries
+    /// per-shard streaming candidate heaps and the run also returns the
+    /// per-lane top-K ranking plus the write-back pruning ledger
+    /// ([`batched::PprOutput::topk`]). Scores, norms and iteration counts
+    /// are bit-identical to `None` — the heaps only observe the stream.
+    pub top_k: Option<usize>,
 }
 
 impl Default for PprConfig {
@@ -51,6 +57,7 @@ impl Default for PprConfig {
             alpha: crate::PAPER_ALPHA,
             max_iterations: crate::PAPER_ITERATIONS,
             convergence_threshold: None,
+            top_k: None,
         }
     }
 }
@@ -65,7 +72,12 @@ impl PprConfig {
     /// Ground-truth configuration: run to numerical convergence with a
     /// generous iteration budget.
     pub fn ground_truth() -> Self {
-        Self { alpha: crate::PAPER_ALPHA, max_iterations: 100, convergence_threshold: Some(1e-12) }
+        Self {
+            alpha: crate::PAPER_ALPHA,
+            max_iterations: 100,
+            convergence_threshold: Some(1e-12),
+            top_k: None,
+        }
     }
 }
 

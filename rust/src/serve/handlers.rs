@@ -203,9 +203,11 @@ fn query(state: &ServeState, graph: &str, req: &Request, is_submit: bool) -> Res
         return finish("unknown", 0, Response::error(404, &format!("unknown graph {graph}")));
     };
 
-    let parsed_class =
+    // validate_query also clamps top_n to |V|; the clamped value is what
+    // the engine actually serves, so the response length is honest
+    let (parsed_class, top_n) =
         match validate_query(&body.vertices, body.top_n, body.class.as_deref(), num_vertices) {
-            Ok(c) => c,
+            Ok(v) => v,
             Err(e) => return finish("unknown", 0, Response::error(400, &e.to_string())),
         };
     let class = parsed_class.unwrap_or_else(|| state.server.default_class());
@@ -228,7 +230,7 @@ fn query(state: &ServeState, graph: &str, req: &Request, is_submit: bool) -> Res
 
     let deadline = body.deadline_ms.map(Duration::from_millis);
     let submit_one = |v: u64| -> Ticket {
-        state.server.submit_to_class(key.as_ref(), v as VertexId, body.top_n, deadline, class)
+        state.server.submit_to_class(key.as_ref(), v as VertexId, top_n, deadline, class)
     };
 
     if is_submit {

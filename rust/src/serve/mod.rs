@@ -358,6 +358,24 @@ mod tests {
         shutdown_stack(front, server);
     }
 
+    /// Satellite: `validate_query` clamps an oversized `top_n` to |V|, so
+    /// an HTTP request for more rows than the graph has vertices succeeds
+    /// with exactly |V| rows rather than erroring or over-promising.
+    #[test]
+    fn oversized_top_n_clamps_to_vertex_count_over_http() {
+        let (front, server) = stack(16, 1);
+        let addr = front.addr();
+
+        let (status, body) = post(addr, "/v1/graphs/ws/query", r#"{"vertex":5,"top_n":5000}"#);
+        assert_eq!(status, 200, "{body}");
+        let doc = Json::parse(&body).unwrap();
+        let results = doc.get("results").and_then(Json::as_array).unwrap();
+        let ranking = results[0].get("ranking").and_then(Json::as_array).unwrap();
+        assert_eq!(ranking.len(), 128, "clamped to |V|, not the requested 5000");
+
+        shutdown_stack(front, server);
+    }
+
     #[test]
     fn submit_then_poll_roundtrip() {
         let (front, server) = stack(16, 1);

@@ -30,6 +30,14 @@ pub trait Datapath: Clone + Send + Sync + 'static {
     /// The precision this datapath implements (for reports).
     fn precision(&self) -> Precision;
 
+    /// Rank-order two words by score value: the total order the top-K
+    /// selection uses, in raw word space so streaming candidate heaps
+    /// never dequantize on the hot path. Must agree with `to_f64` —
+    /// `cmp_words(a, b) == nan_last(to_f64(a), to_f64(b))` — so heap-based
+    /// and dense extraction produce identical rankings (see
+    /// [`crate::metrics::top_n_by`] for the shared tie-break rule).
+    fn cmp_words(&self, a: Self::Word, b: Self::Word) -> std::cmp::Ordering;
+
     /// Accumulator add with the saturation check *deferred* (see
     /// [`Datapath::clamp`]). For non-negative fixed-point addends,
     /// `clamp(Σ via add_deferred) == fold of saturating adds` — both are
@@ -100,6 +108,12 @@ impl Datapath for FixedPath {
     }
 
     #[inline(always)]
+    fn cmp_words(&self, a: u64, b: u64) -> std::cmp::Ordering {
+        // raw Q1.n words are monotone in value: plain integer compare
+        a.cmp(&b)
+    }
+
+    #[inline(always)]
     fn add_deferred(&self, a: u64, b: u64) -> u64 {
         // in-range words are < 2^31 and real graphs have < 2^33 edges, so
         // the deferred accumulator cannot overflow u64
@@ -153,6 +167,11 @@ impl Datapath for FloatPath {
     fn precision(&self) -> Precision {
         Precision::Float32
     }
+
+    #[inline(always)]
+    fn cmp_words(&self, a: f32, b: f32) -> std::cmp::Ordering {
+        crate::metrics::nan_last(a as f64, b as f64)
+    }
 }
 
 /// Dispatch a generic-over-[`Datapath`] expression on a runtime
@@ -195,6 +214,21 @@ mod tests {
         assert_eq!(d.mul(0.5, 0.25), 0.125);
         assert_eq!(d.precision(), Precision::Float32);
         assert_eq!(d.abs_diff_f64(1.0, 0.25), 0.75);
+    }
+
+    #[test]
+    fn cmp_words_agrees_with_value_order() {
+        use std::cmp::Ordering;
+        let d = FixedPath::paper(24);
+        let (a, b) = (d.quantize(0.25), d.quantize(0.5));
+        assert_eq!(d.cmp_words(a, b), Ordering::Less);
+        assert_eq!(d.cmp_words(b, a), Ordering::Greater);
+        assert_eq!(d.cmp_words(a, a), Ordering::Equal);
+        let f = FloatPath;
+        assert_eq!(f.cmp_words(0.25, 0.5), Ordering::Less);
+        assert_eq!(f.cmp_words(f32::NAN, 0.0), Ordering::Less, "NaN never outranks a number");
+        assert_eq!(f.cmp_words(0.0, f32::NAN), Ordering::Greater);
+        assert_eq!(f.cmp_words(f32::NAN, f32::NAN), Ordering::Equal);
     }
 
     #[test]

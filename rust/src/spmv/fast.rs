@@ -17,6 +17,7 @@
 
 use super::datapath::Datapath;
 use super::packets::PacketSchedule;
+use super::topk::LaneHeaps;
 use crate::graph::VertexId;
 
 /// Direct scatter SpMV over the aligned schedule: for each real edge,
@@ -161,6 +162,15 @@ pub(crate) struct FusedUpdate<'a, D: Datapath> {
 /// `scatter` + `update_range` + `dangling_partial`, so the fused sweep is
 /// bit-identical to the three-sweep engine (see the property tests).
 ///
+/// In top-K-native mode `topk` carries this shard's streaming candidate
+/// heaps: every finished Eq. 1 word is offered to its lane's heap (the
+/// heaps must observe the **whole** stream — scores fluctuate between
+/// iterations, so a sub-θ word may still belong to the next iteration's
+/// top-K; the O(1) root compare inside `observe` is the fast path) and
+/// sub-θ words are tallied as prunable write-back. The sweep itself is
+/// untouched: every word is still written, so scores, norms and iteration
+/// counts stay bit-identical to `topk = None`.
+///
 /// Returns the range's squared-update-norm partial (f64, element order =
 /// ascending vertex, lane-inner — the same grouping as the unfused
 /// update sweep).
@@ -177,6 +187,7 @@ pub(crate) fn scatter_fused<D: Datapath>(
     upd: &FusedUpdate<'_, D>,
     dangling_idx: &[VertexId],
     dangling_acc: &mut [D::Word],
+    mut topk: Option<&mut LaneHeaps<D::Word>>,
 ) -> f64 {
     debug_assert_eq!(out.len() % kappa.max(1), 0);
     out.fill(d.zero());
@@ -200,6 +211,11 @@ pub(crate) fn scatter_fused<D: Datapath>(
             let delta = d.abs_diff_f64(xw, prow[lane]);
             norm_sq += delta * delta;
             row[lane] = xw;
+        }
+        if let Some(heaps) = topk.as_deref_mut() {
+            for (lane, &w) in row.iter().enumerate() {
+                heaps.observe(d, lane, v as VertexId, w);
+            }
         }
         if di < dangling_idx.len() && dangling_idx[di] as usize == v {
             for lane in 0..k {

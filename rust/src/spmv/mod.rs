@@ -23,6 +23,11 @@
 //!   runs one scatter worker per shard with no merge pass — the engine's
 //!   parallel hot path, executed on the persistent worker pool
 //!   ([`crate::runtime::pool`]).
+//! - [`topk`] holds the per-shard streaming top-K candidate heaps of the
+//!   top-K-native mode (the HBM follow-up's datapath): the fused epilogue
+//!   feeds every score word through them, the merged K-th value becomes a
+//!   write-back pruning threshold, and results come back as O(K·κ)
+//!   ranked lanes instead of full n·κ vectors (DESIGN.md §9).
 //! - [`reference`] is a scalar COO SpMV oracle (same datapath, no
 //!   pipeline structure) used by unit and property tests.
 //! - [`csr_kernel`] is the row-parallel CSR SpMV used by the CPU baseline
@@ -35,9 +40,11 @@ pub mod packets;
 pub mod reference;
 pub mod shard;
 pub mod streaming;
+pub mod topk;
 
 pub use datapath::{Datapath, FixedPath, FloatPath};
 pub use fast::fast_spmv;
 pub use packets::PacketSchedule;
 pub use shard::{fast_spmv_sharded, ShardStream, ShardedSchedule};
 pub use streaming::StreamingSpmv;
+pub use topk::{LaneHeaps, RankedLanes};

@@ -1,0 +1,354 @@
+//! Streaming top-K candidate heaps for the fused PPR sweep — the
+//! software model of the top-K-native datapath from *Scaling up HBM
+//! Efficiency of Top-K SpMV* (the source paper's multi-channel follow-up).
+//!
+//! Each shard (= HBM pseudo-channel in the hardware model) owns one
+//! [`LaneHeaps`]: κ bounded min-heaps that observe every score word the
+//! fused epilogue produces for that shard's destination range. At
+//! iteration end the per-shard heaps are merged ([`merge_shard_heaps`])
+//! into a global per-lane top-K; the merged K-th value becomes the
+//! running write-back threshold θ each shard carries into the next
+//! iteration. Words below θ are counted as *prunable write-back traffic*
+//! (`skipped_words`) — the FPGA model prices them as saved HBM cycles —
+//! while the software sweep still writes every word, so scores, f64
+//! convergence norms and iteration counts are bit-identical to the
+//! full-vector engine (the pruning-exactness argument in DESIGN.md §9).
+//!
+//! Ordering lives in raw word space (`Datapath::cmp_words`, monotone with
+//! `to_f64`) with the crate-wide tie-break of
+//! [`crate::metrics::top_n_by`] — descending score, ties toward the lower
+//! vertex id — so heap extraction is bit-identical to dense extraction.
+
+use super::datapath::Datapath;
+use crate::graph::VertexId;
+use std::cmp::Ordering;
+
+/// One retained candidate: a vertex and its raw score word.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate<W> {
+    /// Global vertex id.
+    pub vertex: VertexId,
+    /// Raw score word (quantized fixed-point or f32, per datapath).
+    pub word: W,
+}
+
+/// `true` when `a` strictly outranks `b`: higher score word, or equal
+/// words and the lower vertex id — exactly the order
+/// [`crate::metrics::top_n_by`] ranks by.
+#[inline(always)]
+fn outranks<D: Datapath>(d: &D, a: &Candidate<D::Word>, b: &Candidate<D::Word>) -> bool {
+    match d.cmp_words(a.word, b.word) {
+        Ordering::Greater => true,
+        Ordering::Less => false,
+        Ordering::Equal => a.vertex < b.vertex,
+    }
+}
+
+/// Per-lane streaming top-K state of one shard: κ bounded min-heaps
+/// (root = worst retained candidate) plus the lane thresholds θ from the
+/// last cross-shard merge and the prunable-write-back ledger.
+#[derive(Debug, Clone)]
+pub struct LaneHeaps<W> {
+    k: usize,
+    heaps: Vec<Vec<Candidate<W>>>,
+    thresholds: Vec<Option<W>>,
+    skipped_words: u64,
+}
+
+impl<W: Copy + PartialEq + std::fmt::Debug> LaneHeaps<W> {
+    /// Empty state for `lanes` lanes keeping `k` candidates each.
+    pub fn new(k: usize, lanes: usize) -> Self {
+        assert!(k >= 1, "top-K needs K >= 1");
+        Self {
+            k,
+            heaps: vec![Vec::new(); lanes],
+            thresholds: vec![None; lanes],
+            skipped_words: 0,
+        }
+    }
+
+    /// Full re-seed: drop candidates, thresholds **and** the skip ledger.
+    /// Precision-ladder rung switches must call this — raw words of
+    /// different formats are not comparable, so a carried θ would be
+    /// garbage (pinned by the ladder re-seed tests).
+    pub fn reset(&mut self, k: usize, lanes: usize) {
+        assert!(k >= 1, "top-K needs K >= 1");
+        self.k = k;
+        self.heaps.resize(lanes, Vec::new());
+        self.heaps.truncate(lanes);
+        for h in &mut self.heaps {
+            h.clear();
+        }
+        self.thresholds.clear();
+        self.thresholds.resize(lanes, None);
+        self.skipped_words = 0;
+    }
+
+    /// Start a new iteration: heaps rebuild from scratch (every vertex is
+    /// re-observed), thresholds and the skip ledger persist.
+    pub fn begin_iteration(&mut self) {
+        for h in &mut self.heaps {
+            h.clear();
+        }
+    }
+
+    /// The candidate capacity K.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Words counted as prunable write-back so far (below the lane's θ).
+    pub fn skipped_words(&self) -> u64 {
+        self.skipped_words
+    }
+
+    /// Observe one epilogue word — the per-element hot path. Cost once a
+    /// heap is full: one θ compare (skip accounting) and one root compare
+    /// (candidacy); pushes are O(log K) but rare in steady state.
+    #[inline(always)]
+    pub fn observe<D: Datapath<Word = W>>(
+        &mut self,
+        d: &D,
+        lane: usize,
+        vertex: VertexId,
+        word: W,
+    ) {
+        if let Some(theta) = self.thresholds[lane] {
+            if d.cmp_words(word, theta) == Ordering::Less {
+                self.skipped_words += 1;
+            }
+        }
+        let cand = Candidate { vertex, word };
+        let heap = &mut self.heaps[lane];
+        if heap.len() < self.k {
+            heap.push(cand);
+            sift_up(d, heap, heap.len() - 1);
+        } else if outranks(d, &cand, &heap[0]) {
+            heap[0] = cand;
+            sift_down(d, heap, 0);
+        }
+    }
+
+    /// The retained candidates of one lane (heap order, not ranked).
+    pub fn lane_candidates(&self, lane: usize) -> &[Candidate<W>] {
+        &self.heaps[lane]
+    }
+
+    /// Install the post-merge global thresholds (one per lane).
+    pub fn set_thresholds(&mut self, thresholds: &[Option<W>]) {
+        self.thresholds.clear();
+        self.thresholds.extend_from_slice(thresholds);
+    }
+}
+
+/// Move `heap[i]` up until its parent is worse-or-equal (min-heap on rank:
+/// the root is the candidate every other retained candidate outranks).
+fn sift_up<D: Datapath>(d: &D, heap: &mut [Candidate<D::Word>], mut i: usize) {
+    while i > 0 {
+        let parent = (i - 1) / 2;
+        if outranks(d, &heap[parent], &heap[i]) {
+            heap.swap(parent, i);
+            i = parent;
+        } else {
+            break;
+        }
+    }
+}
+
+/// Move `heap[i]` down toward the leaves while it outranks a child.
+fn sift_down<D: Datapath>(d: &D, heap: &mut [Candidate<D::Word>], mut i: usize) {
+    loop {
+        let (l, r) = (2 * i + 1, 2 * i + 2);
+        let mut worst = i;
+        if l < heap.len() && outranks(d, &heap[worst], &heap[l]) {
+            worst = l;
+        }
+        if r < heap.len() && outranks(d, &heap[worst], &heap[r]) {
+            worst = r;
+        }
+        if worst == i {
+            break;
+        }
+        heap.swap(i, worst);
+        i = worst;
+    }
+}
+
+/// The cross-shard merge result: per-lane candidates in final rank order
+/// (descending score, ties toward the lower vertex id), at most K each.
+#[derive(Debug, Clone, Default)]
+pub struct MergedTopK<W> {
+    /// Per-lane ranked candidate lists.
+    pub lanes: Vec<Vec<Candidate<W>>>,
+    /// Per-lane K-th word — the running write-back threshold θ. `None`
+    /// while a lane holds fewer than K candidates (no pruning possible).
+    pub thresholds: Vec<Option<W>>,
+}
+
+impl<W> MergedTopK<W> {
+    /// An empty merge (no iteration has run).
+    pub fn new() -> Self {
+        Self { lanes: Vec::new(), thresholds: Vec::new() }
+    }
+}
+
+/// Merge the per-shard heaps into the global per-lane top-K and push the
+/// new thresholds back into every shard. Shards own disjoint destination
+/// ranges, so the merge is a plain concatenate-sort-truncate over at most
+/// `shards × K` candidates per lane — O(K·κ·S log(K·S)), independent of
+/// |V|.
+pub fn merge_shard_heaps<D: Datapath>(
+    d: &D,
+    shards: &mut [LaneHeaps<D::Word>],
+    merged: &mut MergedTopK<D::Word>,
+) {
+    assert!(!shards.is_empty(), "merge needs at least one shard");
+    let k = shards[0].k();
+    let lanes = shards[0].heaps.len();
+    merged.lanes.resize_with(lanes, Vec::new);
+    merged.lanes.truncate(lanes);
+    merged.thresholds.clear();
+    for lane in 0..lanes {
+        let out = &mut merged.lanes[lane];
+        out.clear();
+        for shard in shards.iter() {
+            out.extend_from_slice(shard.lane_candidates(lane));
+        }
+        out.sort_unstable_by(|a, b| {
+            d.cmp_words(b.word, a.word).then_with(|| a.vertex.cmp(&b.vertex))
+        });
+        out.truncate(k);
+        merged.thresholds.push(if out.len() == k { Some(out[k - 1].word) } else { None });
+    }
+    for shard in shards.iter_mut() {
+        shard.set_thresholds(&merged.thresholds);
+    }
+}
+
+/// A finished top-K run in value space: per-lane `(vertex, score)` lists
+/// in final rank order, plus the write-back pruning ledger. This is what
+/// [`crate::ppr::BatchedPpr`] hands to the serving layer — O(K·κ) result
+/// memory in place of the full n·κ score vector.
+#[derive(Debug, Clone)]
+pub struct RankedLanes {
+    /// The K the run retained per lane.
+    pub k: usize,
+    /// Per-lane ranked `(vertex, dequantized score)` rows, length ≤ K.
+    pub lanes: Vec<Vec<(VertexId, f64)>>,
+    /// Total score words the modeled FPGA would have skipped writing
+    /// back (below θ after the first merge), summed over shards and
+    /// iterations.
+    pub writeback_words_saved: u64,
+    /// The same ledger split per shard (= per HBM pseudo-channel), for
+    /// the multi-channel cycle model.
+    pub saved_per_shard: Vec<u64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmv::datapath::{FixedPath, FloatPath};
+
+    fn ranked_via_heap<D: Datapath>(
+        d: &D,
+        words: &[D::Word],
+        k: usize,
+        shards: usize,
+    ) -> Vec<VertexId> {
+        // split the vector into `shards` contiguous ranges, one heap each
+        let mut states: Vec<LaneHeaps<D::Word>> =
+            (0..shards).map(|_| LaneHeaps::new(k, 1)).collect();
+        let per = words.len().div_ceil(shards);
+        for (v, &w) in words.iter().enumerate() {
+            states[(v / per.max(1)).min(shards - 1)].observe(d, 0, v as VertexId, w);
+        }
+        let mut merged = MergedTopK::new();
+        merge_shard_heaps(d, &mut states, &mut merged);
+        merged.lanes[0].iter().map(|c| c.vertex).collect()
+    }
+
+    #[test]
+    fn heap_matches_dense_selection_fixed() {
+        let d = FixedPath::paper(24);
+        let mut rng = crate::util::rng::Xoshiro256::seeded(11);
+        let words: Vec<u64> = (0..500).map(|_| d.quantize(rng.next_f64())).collect();
+        for k in [1usize, 7, 100, 600] {
+            for shards in [1usize, 3, 7] {
+                let heap = ranked_via_heap(&d, &words, k, shards);
+                let dense: Vec<VertexId> = crate::metrics::top_n_indices_u64(&words, k)
+                    .into_iter()
+                    .map(|v| v as VertexId)
+                    .collect();
+                assert_eq!(heap, dense, "k={k} shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn heap_matches_dense_selection_float_with_nan() {
+        let d = FloatPath;
+        let mut rng = crate::util::rng::Xoshiro256::seeded(5);
+        let mut words: Vec<f32> = (0..300).map(|_| rng.next_f64() as f32).collect();
+        // NaN lanes and ties must follow the shared order (NaN last,
+        // lower id wins)
+        for i in (0..300).step_by(17) {
+            words[i] = f32::NAN;
+        }
+        for i in (1..300).step_by(13) {
+            words[i] = 0.5;
+        }
+        for k in [5usize, 40, 299, 300] {
+            for shards in [1usize, 4] {
+                let heap = ranked_via_heap(&d, &words, k, shards);
+                let dense: Vec<VertexId> = crate::metrics::top_n_indices_f32(&words, k)
+                    .into_iter()
+                    .map(|v| v as VertexId)
+                    .collect();
+                assert_eq!(heap, dense, "k={k} shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn thresholds_count_prunable_words() {
+        let d = FixedPath::paper(20);
+        let mut h = LaneHeaps::new(2, 1);
+        for (v, x) in [0.9, 0.8, 0.1, 0.2].into_iter().enumerate() {
+            h.observe(&d, 0, v as VertexId, d.quantize(x));
+        }
+        assert_eq!(h.skipped_words(), 0, "no θ before the first merge");
+        let mut states = vec![h];
+        let mut merged = MergedTopK::new();
+        merge_shard_heaps(&d, &mut states, &mut merged);
+        assert_eq!(merged.lanes[0][0].vertex, 0);
+        assert_eq!(merged.lanes[0][1].vertex, 1);
+        assert_eq!(merged.thresholds[0], Some(d.quantize(0.8)));
+
+        // next iteration: words below θ=0.8 are counted, the rest not
+        let h = &mut states[0];
+        h.begin_iteration();
+        for (v, x) in [0.9, 0.8, 0.1, 0.2].into_iter().enumerate() {
+            h.observe(&d, 0, v as VertexId, d.quantize(x));
+        }
+        assert_eq!(h.skipped_words(), 2, "exactly the two sub-θ words are prunable");
+
+        // a full reset (rung switch) clears θ and the ledger
+        h.reset(2, 1);
+        assert_eq!(h.skipped_words(), 0);
+        h.observe(&d, 0, 9, d.quantize(0.01));
+        assert_eq!(h.skipped_words(), 0, "no carry-over θ after re-seed");
+    }
+
+    #[test]
+    fn short_lane_keeps_all_candidates_without_threshold() {
+        let d = FixedPath::paper(22);
+        let mut states = vec![LaneHeaps::new(10, 1)];
+        for v in 0..4u32 {
+            states[0].observe(&d, 0, v, d.quantize(0.1 * (v + 1) as f64));
+        }
+        let mut merged = MergedTopK::new();
+        merge_shard_heaps(&d, &mut states, &mut merged);
+        assert_eq!(merged.lanes[0].len(), 4, "K > |V| keeps every vertex");
+        assert_eq!(merged.thresholds[0], None, "no θ while the lane is short");
+    }
+}

@@ -100,6 +100,7 @@ fn native_engine_matches_jax_pallas_bit_exact() {
         alpha: fx.alpha,
         max_iterations: fx.iterations,
         convergence_threshold: None,
+        top_k: None,
     };
     for &bits in &fx.bits {
         let d = FixedPath::paper(bits);

@@ -47,7 +47,12 @@ fn pjrt_fixed_matches_native_bit_exact() {
     let rt = Runtime::cpu().unwrap();
     let engine = PjrtPprEngine::load_spec(&rt, dir, spec, &pg).unwrap();
     let pers: Vec<u32> = (1..=spec.kappa as u32).collect();
-    let cfg = PprConfig { alpha: manifest.alpha, max_iterations: 5, convergence_threshold: None };
+    let cfg = PprConfig {
+        alpha: manifest.alpha,
+        max_iterations: 5,
+        convergence_threshold: None,
+        top_k: None,
+    };
     let (pjrt_scores, iters) = engine.run(&pers, &cfg).unwrap();
     assert_eq!(iters, 5);
 
@@ -88,7 +93,12 @@ fn pjrt_float_close_to_native() {
     let rt = Runtime::cpu().unwrap();
     let engine = PjrtPprEngine::load_spec(&rt, dir, spec, &pg).unwrap();
     let pers: Vec<u32> = (1..=spec.kappa as u32).collect();
-    let cfg = PprConfig { alpha: manifest.alpha, max_iterations: 8, convergence_threshold: None };
+    let cfg = PprConfig {
+        alpha: manifest.alpha,
+        max_iterations: 8,
+        convergence_threshold: None,
+        top_k: None,
+    };
     let (scores, _) = engine.run(&pers, &cfg).unwrap();
 
     let coo = ppr_spmv::graph::CooMatrix::from_graph(&graph);
@@ -156,6 +166,7 @@ fn early_exit_happens_via_pjrt() {
         alpha: manifest.alpha,
         max_iterations: 60,
         convergence_threshold: Some(1e-5),
+        top_k: None,
     };
     let (_, iters) = engine.run(&pers, &cfg).unwrap();
     assert!(iters < 60, "should early-exit, ran {iters}");

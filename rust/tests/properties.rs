@@ -3,10 +3,12 @@
 //! streaming SpMV ≡ scalar oracle bit-exactly, packet-schedule window
 //! invariants, PPR mass bounds, metric bounds, transition stochasticity.
 
-use ppr_spmv::fixed::FixedFormat;
-use ppr_spmv::graph::CooMatrix;
-use ppr_spmv::ppr::{PprConfig, PreparedGraph};
-use ppr_spmv::spmv::datapath::FixedPath;
+use ppr_spmv::coordinator::ScoreBlock;
+use ppr_spmv::fixed::{FixedFormat, FxVec};
+use ppr_spmv::graph::{CooMatrix, Graph};
+use ppr_spmv::ppr::{BatchedPpr, PprConfig, PreparedGraph};
+use ppr_spmv::spmv::datapath::{Datapath, FixedPath, FloatPath};
+use ppr_spmv::spmv::topk::{merge_shard_heaps, LaneHeaps, MergedTopK};
 use ppr_spmv::spmv::{
     fast_spmv_sharded, reference, PacketSchedule, ShardedSchedule, StreamingSpmv,
 };
@@ -367,6 +369,169 @@ fn prop_csr_parallel_equals_serial() {
         ppr_spmv::spmv::csr_kernel::csr_spmv_f32_parallel(&csr, kappa, &p, &mut par, 4);
         assert_eq!(serial, par);
     });
+}
+
+#[test]
+fn tie_break_identical_across_all_top_n_implementations() {
+    // one documented selection rule everywhere: descending score, ties
+    // broken toward the lower vertex id, NaN never outranking a number.
+    // The same score vector must produce the same ranking through the
+    // metrics helper, FxVec, ScoreBlock, and the streaming candidate
+    // heaps (split across shards and merged).
+    let fmt = FixedFormat::paper(24);
+    let d = FixedPath::paper(24);
+    let values = [0.5, 0.9, 0.5, 0.9, 0.1, 0.5, 0.9, 0.0];
+    let words: Vec<u64> = values.iter().map(|&x| fmt.quantize(x)).collect();
+    let want = vec![1usize, 3, 6, 0, 2, 5, 4, 7];
+
+    assert_eq!(ppr_spmv::metrics::top_n_indices_u64(&words, 8), want, "metrics helper");
+    assert_eq!(FxVec::from_f64(fmt, &values).top_n(8), want, "FxVec");
+
+    let mut block = ScoreBlock::new();
+    block.reset(1, values.len());
+    block.lane_mut(0).copy_from_slice(&values);
+    let block_rank: Vec<usize> = block.top_n(0, 8).iter().map(|r| r.vertex as usize).collect();
+    assert_eq!(block_rank, want, "ScoreBlock");
+
+    // three shards owning contiguous vertex ranges, merged once
+    let mut shards: Vec<LaneHeaps<u64>> = (0..3).map(|_| LaneHeaps::new(8, 1)).collect();
+    for (v, &w) in words.iter().enumerate() {
+        shards[v / 3].observe(&d, 0, v as u32, w);
+    }
+    let mut merged = MergedTopK::new();
+    merge_shard_heaps(&d, &mut shards, &mut merged);
+    let heap_rank: Vec<usize> = merged.lanes[0].iter().map(|c| c.vertex as usize).collect();
+    assert_eq!(heap_rank, want, "streaming heaps");
+}
+
+#[test]
+fn prop_topk_native_bit_identical_to_dense_extraction() {
+    // the in-sweep candidate heaps are pure observers: a top-K-native run
+    // must leave scores / update norms / iteration counts bit-identical
+    // to the dense run, and its ranking must equal dense extraction
+    // word-for-word — for any graph, shard count, and K below or above |V|
+    testutil::check(8, 0xB1, |rng| {
+        let g = testutil::arb_graph(rng, 120);
+        let coo = CooMatrix::from_graph(&g);
+        let n = g.num_vertices;
+        let bits = 20 + 2 * rng.next_index(4) as u32;
+        let d = FixedPath::paper(bits);
+        let dangling = g.dangling();
+        let pv: Vec<u32> = (0..n as u32).filter(|&v| !dangling[v as usize]).take(3).collect();
+        let kappa = pv.len();
+        let dense_cfg = PprConfig { max_iterations: 6, ..Default::default() };
+        for shards in [1usize, 4, 7] {
+            let pg = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, shards));
+            let dense = BatchedPpr::new(d, pg.clone(), kappa, 0.85).run(&pv, &dense_cfg);
+            for k in [3usize, n + 5] {
+                let topk_cfg = PprConfig { top_k: Some(k), ..dense_cfg };
+                let native = BatchedPpr::new(d, pg.clone(), kappa, 0.85).run(&pv, &topk_cfg);
+                assert_eq!(native.scores, dense.scores, "shards={shards} k={k}: scores drifted");
+                assert_eq!(native.update_norms, dense.update_norms, "shards={shards} k={k}");
+                assert_eq!(native.iterations, dense.iterations, "shards={shards} k={k}");
+                let ranked = native.topk.expect("top-K run returns a ranking");
+                assert_eq!(ranked.lanes.len(), kappa);
+                assert_eq!(ranked.saved_per_shard.len(), shards, "one ledger entry per shard");
+                assert_eq!(
+                    ranked.saved_per_shard.iter().sum::<u64>(),
+                    ranked.writeback_words_saved,
+                    "ledger total must equal the per-shard sum"
+                );
+                for (lane, got_lane) in ranked.lanes.iter().enumerate() {
+                    let want: Vec<u32> = ppr_spmv::metrics::top_n_by(n, k, |a, b| {
+                        d.cmp_words(dense.scores[a * kappa + lane], dense.scores[b * kappa + lane])
+                    })
+                    .into_iter()
+                    .map(|v| v as u32)
+                    .collect();
+                    let got: Vec<u32> = got_lane.iter().map(|&(v, _)| v).collect();
+                    assert_eq!(got, want, "shards={shards} k={k} lane={lane}");
+                    for &(v, score) in got_lane {
+                        let word = dense.scores[v as usize * kappa + lane];
+                        assert_eq!(score, d.to_f64(word), "ranked score must dequantize");
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_topk_native_matches_dense_extraction_float_path() {
+    // same contract on the f32 datapath (NaN-tolerant comparator): the
+    // top-K-native run neither perturbs the dense result nor disagrees
+    // with extraction
+    testutil::check(6, 0xB2, |rng| {
+        let g = testutil::arb_graph(rng, 100);
+        let coo = CooMatrix::from_graph(&g);
+        let n = g.num_vertices;
+        let d = FloatPath;
+        let dangling = g.dangling();
+        let pv: Vec<u32> = (0..n as u32).filter(|&v| !dangling[v as usize]).take(2).collect();
+        let kappa = pv.len();
+        let dense_cfg = PprConfig { max_iterations: 5, ..Default::default() };
+        for shards in [1usize, 4] {
+            let pg = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, shards));
+            let dense = BatchedPpr::new(d, pg.clone(), kappa, 0.85).run(&pv, &dense_cfg);
+            for k in [2usize, n + 1] {
+                let topk_cfg = PprConfig { top_k: Some(k), ..dense_cfg };
+                let native = BatchedPpr::new(d, pg.clone(), kappa, 0.85).run(&pv, &topk_cfg);
+                // compare raw bits: NaN-safe and strictly bit-identical
+                let bits = |s: &[f32]| s.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&native.scores), bits(&dense.scores), "shards={shards} k={k}");
+                assert_eq!(native.iterations, dense.iterations);
+                let ranked = native.topk.expect("top-K run returns a ranking");
+                for (lane, got_lane) in ranked.lanes.iter().enumerate() {
+                    let want: Vec<u32> = ppr_spmv::metrics::top_n_by(n, k, |a, b| {
+                        d.cmp_words(dense.scores[a * kappa + lane], dense.scores[b * kappa + lane])
+                    })
+                    .into_iter()
+                    .map(|v| v as u32)
+                    .collect();
+                    let got: Vec<u32> = got_lane.iter().map(|&(v, _)| v).collect();
+                    assert_eq!(got, want, "shards={shards} k={k} lane={lane}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn topk_native_handles_adversarial_graph_shapes() {
+    // hub graph (every source points at one dangling hub — maximal score
+    // concentration plus dangling redistribution, empty shards at high
+    // shard counts) and a fully dangling graph (no edges — the sweep is
+    // pure epilogue, so the heaps only ever see teleport mass): the
+    // native ranking must still equal dense extraction exactly
+    let hub = Graph::new(96, (1..48u32).map(|s| (s, 0)).collect());
+    let no_edges = Graph::new(40, vec![]);
+    for (g, pv) in [(&hub, vec![1u32, 5]), (&no_edges, vec![0u32, 39])] {
+        let coo = CooMatrix::from_graph(g);
+        let n = g.num_vertices;
+        let d = FixedPath::paper(24);
+        let kappa = pv.len();
+        let dense_cfg = PprConfig { max_iterations: 8, ..Default::default() };
+        for shards in [1usize, 2, 7] {
+            let pg = Arc::new(PreparedGraph::from_coo_sharded(&coo, 8, shards));
+            let dense = BatchedPpr::new(d, pg.clone(), kappa, 0.85).run(&pv, &dense_cfg);
+            for k in [5usize, n + 3] {
+                let topk_cfg = PprConfig { top_k: Some(k), ..dense_cfg };
+                let native = BatchedPpr::new(d, pg.clone(), kappa, 0.85).run(&pv, &topk_cfg);
+                assert_eq!(native.scores, dense.scores, "|V|={n} shards={shards} k={k}");
+                let ranked = native.topk.expect("top-K run returns a ranking");
+                for (lane, got_lane) in ranked.lanes.iter().enumerate() {
+                    let want: Vec<u32> = ppr_spmv::metrics::top_n_by(n, k, |a, b| {
+                        d.cmp_words(dense.scores[a * kappa + lane], dense.scores[b * kappa + lane])
+                    })
+                    .into_iter()
+                    .map(|v| v as u32)
+                    .collect();
+                    let got: Vec<u32> = got_lane.iter().map(|&(v, _)| v).collect();
+                    assert_eq!(got, want, "|V|={n} shards={shards} k={k} lane={lane}");
+                }
+            }
+        }
+    }
 }
 
 #[test]

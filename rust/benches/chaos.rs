@@ -1,0 +1,14 @@
+//! `cargo bench --bench chaos [-- --full | --scale N]`
+//! Chaos benchmark: stands the serving stack up with a deterministic
+//! fault plan, frames a fault burst (engine panics, spurious errors,
+//! worker kills) between a warm and a recovery phase, and gates on zero
+//! lost requests, a full breaker recovery cycle and restored worker
+//! liveness. Emits `BENCH_chaos.json`. See `bench_harness::chaos`.
+
+use ppr_spmv::bench_harness::{chaos, ExpOptions};
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    println!("# serving chaos [{}]\n", opts.descriptor());
+    chaos::run(&opts);
+}

@@ -1,0 +1,516 @@
+//! Chaos benchmark — the serving stack under deterministic fault
+//! injection (DESIGN.md §10).
+//!
+//! Three phases against one running [`FrontDoor`], framed by the fault
+//! plan's enable/disable latch:
+//!
+//! - **warm**: faults disarmed — the healthy baseline;
+//! - **fault-burst**: the plan is armed with aggressive engine-panic,
+//!   spurious-error and worker-kill rates. The panic containment
+//!   boundary, the degradation ladder, the circuit breaker and the
+//!   watchdog all engage; requests carry deadlines so latency under
+//!   faults stays observable;
+//! - **recovery**: faults disarmed again — the breaker must complete its
+//!   open → half-open → closed cycle and the worker pool must return to
+//!   full liveness.
+//!
+//! Gates (enforced by the release CI job on `BENCH_chaos.json`):
+//!
+//! - `"lost": 0` — every arrival gets an HTTP response, even mid-panic
+//!   (shed 429s, breaker 503s and deadline 504s are *answers*, not
+//!   losses);
+//! - `"breaker_cycle_ok": true` — the breaker tripped at least once and
+//!   completed at least one full recovery cycle;
+//! - `"recovered": true` — every worker slot is live after the burst;
+//! - `"p99_bounded": true` — burst-phase p99 stays under the configured
+//!   ceiling (fast failure, not hung requests).
+
+use super::ExpOptions;
+use crate::config::{RunConfig, ServeConfig};
+use crate::coordinator::builder::EngineBuilder;
+use crate::coordinator::registry::GraphRegistry;
+use crate::fault::{FaultConfig, FaultCounters, FaultPlan};
+use crate::fixed::AccuracyClass;
+use crate::serve::http::{format_request, roundtrip};
+use crate::serve::loadgen::{self, LoadReport, LoadSpec};
+use crate::serve::{shutdown_stack, validate_exposition, FrontDoor, ServeState};
+use crate::util::report::Table;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Benchmark configuration: stack shape, offered load, fault rates.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Vertices of the generated Watts–Strogatz serving graph.
+    pub num_vertices: usize,
+    /// Engine configuration behind the front door.
+    pub run: RunConfig,
+    /// Front-door configuration (`listen` forced to an ephemeral port);
+    /// its `breaker_*` knobs shape the recovery cycle under test.
+    pub serve: ServeConfig,
+    /// Serving-core worker threads (watchdog-supervised).
+    pub workers: usize,
+    /// Offered rate of every phase (requests/second).
+    pub rps: f64,
+    /// Length of each phase's arrival schedule.
+    pub phase_secs: f64,
+    /// Concurrent load-generator connections.
+    pub clients: usize,
+    /// `top_n` per request.
+    pub top_n: usize,
+    /// Deadline attached to fault-burst requests (milliseconds).
+    pub burst_deadline_ms: u64,
+    /// Burst-phase p99 ceiling (milliseconds) for the `p99_bounded` gate.
+    pub p99_ceiling_ms: f64,
+    /// Fault rates applied while the burst phase is armed.
+    pub fault: FaultConfig,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+/// One phase's request accounting (single-class mix).
+#[derive(Debug, Clone)]
+pub struct ChaosPhase {
+    /// `warm`, `fault-burst` or `recovery`.
+    pub name: &'static str,
+    /// Configured offered rate.
+    pub offered_rps: f64,
+    /// Achieved 200-throughput.
+    pub achieved_rps: f64,
+    /// Requests sent.
+    pub sent: u64,
+    /// 200 responses.
+    pub ok: u64,
+    /// 429 responses (admission shed).
+    pub shed: u64,
+    /// 504 responses (deadline miss).
+    pub deadline_miss: u64,
+    /// Every other status — injected engine faults surface here as 500s
+    /// and breaker fast-fails as 503s.
+    pub error: u64,
+    /// Arrivals with no HTTP response at all (must be 0).
+    pub lost: u64,
+    /// p50 latency (ms, from scheduled arrival).
+    pub p50_ms: f64,
+    /// p99 latency (ms).
+    pub p99_ms: f64,
+}
+
+/// The full chaos result.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    /// Warm, fault-burst, recovery.
+    pub phases: Vec<ChaosPhase>,
+    /// Total unanswered requests across phases (gate: 0).
+    pub lost: u64,
+    /// Faults the plan actually injected.
+    pub injected: FaultCounters,
+    /// Engine panics contained at the batch boundary (server stats).
+    pub contained_panics: u64,
+    /// Responses served by the degradation policy.
+    pub degraded: u64,
+    /// Workers respawned by the watchdog.
+    pub respawns: u64,
+    /// Live workers after recovery.
+    pub workers_live: usize,
+    /// Configured worker count.
+    pub workers_total: usize,
+    /// Closed → open breaker trips.
+    pub breaker_opens: u64,
+    /// Completed open → half-open → closed cycles.
+    pub breaker_cycles: u64,
+    /// Breaker tripped and recovered at least once.
+    pub breaker_cycle_ok: bool,
+    /// Worker pool back to full liveness after the burst.
+    pub recovered: bool,
+    /// Burst-phase p99 under the configured ceiling.
+    pub p99_bounded: bool,
+    /// Live `/metrics` scrape parses and carries the §10 health families.
+    pub metrics_valid: bool,
+}
+
+fn phase(name: &'static str, report: &LoadReport) -> ChaosPhase {
+    let s = report.class(AccuracyClass::Exact);
+    ChaosPhase {
+        name,
+        offered_rps: report.offered_rps,
+        achieved_rps: report.achieved_rps,
+        sent: report.total_sent(),
+        ok: s.ok,
+        shed: s.shed,
+        deadline_miss: s.deadline_miss,
+        error: s.error,
+        lost: report.lost,
+        p50_ms: s.percentile_ms(50.0).unwrap_or(0.0),
+        p99_ms: s.percentile_ms(99.0).unwrap_or(0.0),
+    }
+}
+
+/// Stand the stack up with an (initially disarmed) fault plan, run the
+/// three phases, scrape `/metrics`, tear everything down.
+pub fn measure(cc: &ChaosConfig) -> ChaosReport {
+    let registry = Arc::new(GraphRegistry::new(2));
+    let graph = crate::graph::generators::watts_strogatz(cc.num_vertices, 6, 0.2, cc.seed ^ 0xC4);
+    registry.register_graph("ws", graph).expect("register chaos graph");
+    let plan = FaultPlan::new(cc.fault.clone());
+    plan.disable();
+    let server = Arc::new(
+        EngineBuilder::native()
+            .config(cc.run.clone())
+            .fault(Some(plan.clone()))
+            .serve_registry(registry.clone(), cc.workers)
+            .expect("registry server"),
+    );
+    let mut serve_cfg = cc.serve.clone();
+    serve_cfg.listen = "127.0.0.1:0".to_string();
+    let state = ServeState::new(server.clone(), registry, serve_cfg);
+    let front = FrontDoor::serve(state).expect("front door binds");
+    let addr = front.addr();
+
+    let mix = vec![(AccuracyClass::Exact, 1.0)];
+    let base = LoadSpec {
+        graph: "ws".to_string(),
+        class_mix: mix.clone(),
+        offered_rps: cc.rps,
+        duration: Duration::from_secs_f64(cc.phase_secs),
+        clients: cc.clients,
+        top_n: cc.top_n,
+        deadline_ms: None,
+        max_vertex: cc.num_vertices as u64,
+        seed: cc.seed,
+    };
+    let warm = loadgen::run(addr, &base);
+
+    plan.enable();
+    let burst_spec = LoadSpec {
+        deadline_ms: Some(cc.burst_deadline_ms),
+        seed: cc.seed.wrapping_add(1),
+        ..base.clone()
+    };
+    let burst = loadgen::run(addr, &burst_spec);
+    plan.disable();
+
+    let recovery_spec = LoadSpec { seed: cc.seed.wrapping_add(2), ..base };
+    let recovery = loadgen::run(addr, &recovery_spec);
+
+    // the watchdog respawns on a short poll tick; give it a bounded
+    // window to restore full liveness before judging recovery
+    let deadline = Instant::now() + Duration::from_secs(3);
+    let health = loop {
+        let h = server.worker_health();
+        if h.live == h.total || Instant::now() >= deadline {
+            break h;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+
+    // live scrape: the §10 health families must ride the same exposition
+    // contract the HTTP metrics do
+    let metrics_valid = std::net::TcpStream::connect(addr)
+        .ok()
+        .and_then(|mut conn| {
+            roundtrip(&mut conn, &format_request("GET", "/metrics", "bench", None)).ok()
+        })
+        .and_then(|(status, body)| {
+            if status != 200 {
+                return None;
+            }
+            String::from_utf8(body).ok()
+        })
+        .is_some_and(|text| {
+            validate_exposition(&text).is_ok()
+                && text.contains("ppr_workers_live")
+                && text.contains("ppr_breaker_state")
+                && text.contains("ppr_engine_panics_total")
+        });
+
+    let snap = server.stats().snapshot();
+    let breaker = front.state().breaker.clone();
+    let breaker_opens = breaker.opens();
+    let breaker_cycles = breaker.cycles();
+    shutdown_stack(front, server);
+
+    let burst_phase = phase("fault-burst", &burst);
+    let p99_bounded = burst_phase.p99_ms <= cc.p99_ceiling_ms;
+    ChaosReport {
+        lost: warm.lost + burst.lost + recovery.lost,
+        phases: vec![phase("warm", &warm), burst_phase, phase("recovery", &recovery)],
+        injected: plan.counters(),
+        contained_panics: snap.panics,
+        degraded: snap.degraded,
+        respawns: snap.respawns,
+        workers_live: health.live,
+        workers_total: health.total,
+        breaker_opens,
+        breaker_cycles,
+        breaker_cycle_ok: breaker_opens >= 1 && breaker_cycles >= 1,
+        recovered: health.live == health.total,
+        p99_bounded,
+        metrics_valid,
+    }
+}
+
+/// Serialize as the machine-readable `BENCH_chaos.json` consumed by CI
+/// (hand-rolled: no serde in the vendored crate set).
+pub fn to_json(report: &ChaosReport, descriptor: &str) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"bench\": \"chaos\",\n  \"config\": \"{descriptor}\",\n"));
+    s.push_str(&format!(
+        "  \"lost\": {},\n  \"breaker_cycle_ok\": {},\n  \"recovered\": {},\n  \
+         \"p99_bounded\": {},\n  \"metrics_valid\": {},\n",
+        report.lost,
+        report.breaker_cycle_ok,
+        report.recovered,
+        report.p99_bounded,
+        report.metrics_valid,
+    ));
+    s.push_str(&format!(
+        "  \"injected\": {{\"panics\": {}, \"errors\": {}, \"slows\": {}, \"kills\": {}, \
+         \"build_failures\": {}}},\n",
+        report.injected.panics,
+        report.injected.errors,
+        report.injected.slows,
+        report.injected.kills,
+        report.injected.build_failures,
+    ));
+    s.push_str(&format!(
+        "  \"contained_panics\": {},\n  \"degraded\": {},\n  \"respawns\": {},\n  \
+         \"workers_live\": {},\n  \"workers_total\": {},\n  \"breaker_opens\": {},\n  \
+         \"breaker_cycles\": {},\n",
+        report.contained_panics,
+        report.degraded,
+        report.respawns,
+        report.workers_live,
+        report.workers_total,
+        report.breaker_opens,
+        report.breaker_cycles,
+    ));
+    s.push_str("  \"phases\": [\n");
+    for (i, p) in report.phases.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"offered_rps\": {:.1}, \"achieved_rps\": {:.1}, \
+             \"sent\": {}, \"ok\": {}, \"shed\": {}, \"deadline_miss\": {}, \"error\": {}, \
+             \"lost\": {}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}}}{}\n",
+            p.name,
+            p.offered_rps,
+            p.achieved_rps,
+            p.sent,
+            p.ok,
+            p.shed,
+            p.deadline_miss,
+            p.error,
+            p.lost,
+            p.p50_ms,
+            p.p99_ms,
+            if i + 1 < report.phases.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write `BENCH_chaos.json` into `dir`; returns the path written.
+pub fn emit_json(
+    report: &ChaosReport,
+    descriptor: &str,
+    dir: &std::path::Path,
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_chaos.json");
+    std::fs::write(&path, to_json(report, descriptor))?;
+    Ok(path)
+}
+
+/// The full chaos experiment at the configured scale.
+pub fn run(opts: &ExpOptions) -> Table {
+    let clients = 6;
+    let cc = ChaosConfig {
+        num_vertices: (100_000 / opts.scale).max(1_000),
+        run: RunConfig {
+            kappa: crate::PAPER_KAPPA,
+            iterations: opts.iterations,
+            batch_timeout_ms: 2,
+            ..Default::default()
+        },
+        serve: ServeConfig {
+            http_workers: clients * 2 + 2,
+            queue_cap: 8,
+            // an aggressive breaker so the open → half-open → closed
+            // cycle completes well inside the recovery phase
+            breaker_window: 16,
+            breaker_failure_rate: 0.35,
+            breaker_min_samples: 6,
+            breaker_open_ms: 120,
+            breaker_half_open_probes: 1,
+            ..Default::default()
+        },
+        workers: 2,
+        rps: 60.0,
+        phase_secs: 1.5,
+        clients,
+        top_n: 5,
+        burst_deadline_ms: 1_500,
+        p99_ceiling_ms: 6_000.0,
+        fault: FaultConfig {
+            seed: opts.seed ^ 0xFA,
+            panic_rate: 0.55,
+            error_rate: 0.25,
+            slow_rate: 0.05,
+            slow_ms: 10,
+            worker_kill_rate: 0.05,
+            ..Default::default()
+        },
+        seed: opts.seed,
+    };
+    let report = measure(&cc);
+
+    let mut t = Table::new(
+        &format!(
+            "chaos — |V|={} workers={} panic_rate={} ({})",
+            cc.num_vertices,
+            cc.workers,
+            cc.fault.panic_rate,
+            opts.descriptor()
+        ),
+        &["phase", "sent", "ok", "shed", "miss", "err", "lost", "p50 ms", "p99 ms"],
+    );
+    for p in &report.phases {
+        t.row(&[
+            p.name.to_string(),
+            format!("{}", p.sent),
+            format!("{}", p.ok),
+            format!("{}", p.shed),
+            format!("{}", p.deadline_miss),
+            format!("{}", p.error),
+            format!("{}", p.lost),
+            format!("{:.2}", p.p50_ms),
+            format!("{:.2}", p.p99_ms),
+        ]);
+    }
+    t.emit(opts.csv_path("chaos").as_deref());
+    println!(
+        "injected: {} panics, {} errors, {} slows, {} kills | contained: {} | degraded: {} | respawns: {}",
+        report.injected.panics,
+        report.injected.errors,
+        report.injected.slows,
+        report.injected.kills,
+        report.contained_panics,
+        report.degraded,
+        report.respawns,
+    );
+    println!(
+        "lost: {} | breaker opens/cycles: {}/{} (cycle_ok: {}) | workers {}/{} (recovered: {}) | p99_bounded: {} | metrics_valid: {}",
+        report.lost,
+        report.breaker_opens,
+        report.breaker_cycles,
+        report.breaker_cycle_ok,
+        report.workers_live,
+        report.workers_total,
+        report.recovered,
+        report.p99_bounded,
+        report.metrics_valid,
+    );
+    if let Some(dir) = &opts.csv_dir {
+        match emit_json(&report, &opts.descriptor(), dir) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("could not write BENCH_chaos.json: {e}"),
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Precision;
+
+    fn tiny() -> ChaosConfig {
+        ChaosConfig {
+            num_vertices: 512,
+            run: RunConfig {
+                precision: Precision::Fixed(26),
+                kappa: 2,
+                iterations: 3,
+                batch_timeout_ms: 1,
+                num_shards: 1,
+                ..Default::default()
+            },
+            serve: ServeConfig {
+                http_workers: 10,
+                queue_cap: 4,
+                breaker_window: 8,
+                breaker_failure_rate: 0.35,
+                breaker_min_samples: 4,
+                breaker_open_ms: 60,
+                breaker_half_open_probes: 1,
+                ..Default::default()
+            },
+            workers: 2,
+            rps: 50.0,
+            phase_secs: 0.5,
+            clients: 4,
+            top_n: 3,
+            burst_deadline_ms: 800,
+            p99_ceiling_ms: 10_000.0,
+            fault: FaultConfig {
+                seed: 0xFA_017,
+                panic_rate: 0.6,
+                error_rate: 0.25,
+                worker_kill_rate: 0.05,
+                ..Default::default()
+            },
+            seed: 0xC0DE,
+        }
+    }
+
+    #[test]
+    fn chaos_run_loses_nothing_and_recovers() {
+        let report = measure(&tiny());
+        assert_eq!(report.phases.len(), 3);
+        assert_eq!(report.lost, 0, "every arrival must get an HTTP response, even mid-panic");
+        for p in &report.phases {
+            assert_eq!(p.lost, 0, "{}", p.name);
+            assert!(p.sent > 0, "{} sent nothing", p.name);
+            assert_eq!(
+                p.sent,
+                p.ok + p.shed + p.deadline_miss + p.error,
+                "{}: outcomes must partition sent",
+                p.name
+            );
+        }
+        assert!(report.injected.panics >= 1, "the burst must actually inject panics");
+        assert!(
+            report.contained_panics >= 1,
+            "injected panics must be contained, not crash the test process"
+        );
+        assert!(report.recovered, "worker pool must return to full liveness");
+        assert_eq!(report.phases[0].error, 0, "warm phase is fault-free");
+        assert!(report.metrics_valid, "live /metrics scrape carries the health families");
+        // the breaker-cycle gate is asserted by the release-mode CI run
+        // where the traffic volume makes it statistically stable; here it
+        // only has to be computed
+        let _ = report.breaker_cycle_ok;
+    }
+
+    #[test]
+    fn json_shape() {
+        let report = measure(&ChaosConfig { phase_secs: 0.3, ..tiny() });
+        let json = to_json(&report, "test");
+        assert!(json.contains("\"bench\": \"chaos\""));
+        assert!(json.contains("\"lost\":"));
+        assert!(json.contains("\"breaker_cycle_ok\""));
+        assert!(json.contains("\"recovered\""));
+        assert!(json.contains("\"p99_bounded\""));
+        assert!(json.contains("\"injected\""));
+        assert_eq!(json.matches("\"name\": \"warm\"").count(), 1);
+        assert_eq!(json.matches("\"name\": \"fault-burst\"").count(), 1);
+        assert_eq!(json.matches("\"name\": \"recovery\"").count(), 1);
+        assert!(!json.contains(",\n  ]"), "no trailing commas");
+
+        let dir = std::env::temp_dir().join("ppr_chaos_json_test");
+        let path = emit_json(&report, "test", &dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with('{') && text.trim_end().ends_with('}'));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

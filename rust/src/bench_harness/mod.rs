@@ -9,6 +9,7 @@
 //! every trend. Pass `--full` (or env `PPR_FULL=1`) for paper-scale, or
 //! `--scale N --requests M` to pick a point.
 
+pub mod chaos;
 pub mod energy;
 pub mod fig3_speedup;
 pub mod fusion;

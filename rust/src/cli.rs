@@ -12,8 +12,9 @@
 //! - `synthesize` — print the simulated synthesis report for a design
 
 use crate::bench_harness as bh;
-use crate::config::{RegistryConfig, RunConfig};
+use crate::config::{ConfigDoc, RegistryConfig, RunConfig};
 use crate::coordinator::{EngineBuilder, EngineKind, GraphRegistry, GraphSource};
+use crate::fault::{FaultConfig, FaultPlan};
 use crate::fixed::{AccuracyClass, Precision};
 use crate::graph::{loader, DatasetSpec};
 use anyhow::{anyhow, bail, Context, Result};
@@ -126,6 +127,57 @@ pub fn engine_builder(args: &Args, cfg: &RunConfig) -> Result<EngineBuilder> {
     Ok(builder)
 }
 
+/// Assemble the fault-injection plan (DESIGN.md §10): the `[fault]`
+/// section of `--config` seeds it, `--fault-*` flags extend/override it.
+/// Returns `None` when nothing requests injection — the production
+/// default, which costs the serving path one `Option` check per batch.
+pub fn fault_plan(args: &Args) -> Result<Option<Arc<FaultPlan>>> {
+    let mut cfg = match args.options.get("config") {
+        Some(path) => FaultConfig::from_doc(&ConfigDoc::load(std::path::Path::new(path))?)?,
+        None => None,
+    };
+    let flag_keys = [
+        "fault-seed",
+        "fault-panic-rate",
+        "fault-error-rate",
+        "fault-slow-rate",
+        "fault-slow-ms",
+        "fault-kill-rate",
+        "fault-reload-rate",
+        "fault-active-from",
+        "fault-active-ticks",
+    ];
+    if flag_keys.iter().any(|k| args.options.contains_key(*k)) {
+        let cfg = cfg.get_or_insert_with(FaultConfig::default);
+        if let Some(s) = args.options.get("fault-seed") {
+            cfg.seed = s.parse().map_err(|_| anyhow!("bad --fault-seed {s}"))?;
+        }
+        for (key, slot) in [
+            ("fault-panic-rate", &mut cfg.panic_rate),
+            ("fault-error-rate", &mut cfg.error_rate),
+            ("fault-slow-rate", &mut cfg.slow_rate),
+            ("fault-kill-rate", &mut cfg.worker_kill_rate),
+            ("fault-reload-rate", &mut cfg.reload_fail_rate),
+        ] {
+            if let Some(s) = args.options.get(key) {
+                *slot = s.parse().map_err(|_| anyhow!("bad --{key} {s}"))?;
+            }
+        }
+        if let Some(s) = args.options.get("fault-slow-ms") {
+            cfg.slow_ms = s.parse().map_err(|_| anyhow!("bad --fault-slow-ms {s}"))?;
+        }
+        let from = args.get::<u64>("fault-active-from");
+        let ticks = args.get::<u64>("fault-active-ticks");
+        if from.is_some() || ticks.is_some() {
+            let ticks = ticks.unwrap_or(u64::MAX);
+            anyhow::ensure!(ticks >= 1, "--fault-active-ticks must be at least 1");
+            cfg.active = Some((from.unwrap_or(0), ticks));
+        }
+        cfg.validate()?;
+    }
+    Ok(cfg.map(FaultPlan::new))
+}
+
 /// Load a graph: `--graph <table1-name>` (generated) or `--graph-file
 /// <path>` (SNAP edge list). Scale applies to generated specs.
 pub fn load_graph(args: &Args) -> Result<crate::graph::Graph> {
@@ -183,7 +235,7 @@ const USAGE: &str = "\
 ppr-spmv — reduced-precision streaming SpMV for Personalized PageRank
 USAGE:
   ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|shards|fusion|
-            multigraph|ladder|serving|topk|all>
+            multigraph|ladder|serving|topk|chaos|all>
             [--full] [--scale N] [--requests N] [--iterations N] [--no-csv]
   ppr-spmv serve  [--graph NAME|--graph-file PATH] [--precision 26b]
             [--class static|fast|balanced|exact]
@@ -198,6 +250,11 @@ USAGE:
             workload (POST /v1/graphs/NAME/query|submit, GET /v1/tickets/ID,
             GET /v1/graphs|/healthz|/metrics); the [serve] config section
             seeds it; [--http-workers N] [--queue-cap N] [--serve-seconds N]
+          fault injection (DESIGN.md §10): the [fault] config section or
+            [--fault-seed N] [--fault-panic-rate P] [--fault-error-rate P]
+            [--fault-slow-rate P] [--fault-slow-ms N] [--fault-kill-rate P]
+            [--fault-reload-rate P] [--fault-active-from N]
+            [--fault-active-ticks N] arm a deterministic fault plan
   ppr-spmv query  --vertex V [--graph NAME|--graph-file PATH] [--top 10]
             [--engine native|pjrt|cpu] [--class static|fast|balanced|exact]
   ppr-spmv generate --graph NAME --out PATH [--scale N]
@@ -253,6 +310,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "topk" => {
             bh::topk::run(&opts);
         }
+        "chaos" => {
+            bh::chaos::run(&opts);
+        }
         "all" => {
             bh::table1_datasets::run(&opts);
             bh::table2_resources::run(&opts);
@@ -270,6 +330,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             bh::precision_ladder::run(&opts);
             bh::serving::run(&opts);
             bh::topk::run(&opts);
+            bh::chaos::run(&opts);
         }
         other => bail!("unknown experiment {other}"),
     }
@@ -351,7 +412,11 @@ fn cmd_serve_registry(args: &Args, cfg: &RunConfig, reg_cfg: RegistryConfig) -> 
             registry.num_vertices(name).unwrap_or(0)
         );
     }
-    let builder = engine_builder(args, cfg)?;
+    let fault = fault_plan(args)?;
+    if let Some(plan) = &fault {
+        println!("fault injection armed: {:?}", plan.config());
+    }
+    let builder = engine_builder(args, cfg)?.fault(fault);
     println!(
         "serving {} graphs (default {}) with {} × {}/{} workers, registry capacity {}",
         registry.len(),
@@ -432,7 +497,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.get_or::<usize>("workers", 2);
     let demo_requests = args.get_or::<usize>("demo-requests", 64);
     let deadline = args.get::<u64>("deadline-ms").map(std::time::Duration::from_millis);
-    let builder = engine_builder(args, &cfg)?;
+    let fault = fault_plan(args)?;
+    if let Some(plan) = &fault {
+        println!("fault injection armed: {:?}", plan.config());
+    }
+    let builder = engine_builder(args, &cfg)?.fault(fault);
     println!(
         "serving |V|={} |E|={} with {} × {}/{} workers",
         graph.num_vertices,
@@ -522,7 +591,11 @@ fn cmd_serve_front(
         }
     };
     let workers = args.get_or::<usize>("workers", 2);
-    let builder = engine_builder(args, cfg)?;
+    let fault = fault_plan(args)?;
+    if let Some(plan) = &fault {
+        println!("fault injection armed: {:?}", plan.config());
+    }
+    let builder = engine_builder(args, cfg)?.fault(fault);
     let server = Arc::new(builder.serve_registry(registry.clone(), workers)?);
     let state = crate::serve::ServeState::new(server.clone(), registry.clone(), serve_cfg);
     let front = crate::serve::FrontDoor::serve(state)?;
@@ -761,6 +834,22 @@ mod tests {
         let reg =
             registry_config(&args("serve --graph a=x.txt --registry-capacity 4")).unwrap();
         assert_eq!(reg.unwrap().capacity, 4);
+    }
+
+    #[test]
+    fn fault_flags_assemble_a_plan() {
+        assert!(fault_plan(&args("serve")).unwrap().is_none(), "off by default");
+        let plan = fault_plan(&args(
+            "serve --fault-panic-rate 0.25 --fault-seed 9 \
+             --fault-active-from 4 --fault-active-ticks 16",
+        ))
+        .unwrap()
+        .expect("flags arm the plan");
+        let cfg = plan.config();
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.panic_rate, 0.25);
+        assert_eq!(cfg.active, Some((4, 16)));
+        assert!(fault_plan(&args("serve --fault-panic-rate 1.5")).is_err(), "rates validated");
     }
 
     #[test]

@@ -419,6 +419,17 @@ pub struct ServeConfig {
     pub retry_after_ms: u64,
     /// Unpolled async tickets are dropped after this many seconds.
     pub ticket_ttl_secs: u64,
+    /// Circuit-breaker sliding-window size, in observed outcomes per
+    /// `(graph, class)` (DESIGN.md §10).
+    pub breaker_window: usize,
+    /// Failure-rate threshold that trips a closed breaker open.
+    pub breaker_failure_rate: f64,
+    /// Minimum outcomes in the window before the rate is trusted.
+    pub breaker_min_samples: usize,
+    /// How long an open breaker fast-fails before probing (milliseconds).
+    pub breaker_open_ms: u64,
+    /// Consecutive half-open probe successes required to close again.
+    pub breaker_half_open_probes: usize,
 }
 
 impl Default for ServeConfig {
@@ -432,6 +443,11 @@ impl Default for ServeConfig {
             shed_exact: 1.0,
             retry_after_ms: 50,
             ticket_ttl_secs: 60,
+            breaker_window: 32,
+            breaker_failure_rate: 0.5,
+            breaker_min_samples: 8,
+            breaker_open_ms: 250,
+            breaker_half_open_probes: 2,
         }
     }
 }
@@ -464,6 +480,21 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get("serve", "ticket_ttl_secs") {
             cfg.ticket_ttl_secs = v.as_int()? as u64;
+        }
+        if let Some(v) = doc.get("serve", "breaker_window") {
+            cfg.breaker_window = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("serve", "breaker_failure_rate") {
+            cfg.breaker_failure_rate = v.as_float()?;
+        }
+        if let Some(v) = doc.get("serve", "breaker_min_samples") {
+            cfg.breaker_min_samples = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("serve", "breaker_open_ms") {
+            cfg.breaker_open_ms = v.as_int()? as u64;
+        }
+        if let Some(v) = doc.get("serve", "breaker_half_open_probes") {
+            cfg.breaker_half_open_probes = v.as_int()? as usize;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -506,6 +537,28 @@ impl ServeConfig {
         }
         if self.ticket_ttl_secs == 0 {
             bail!("serve.ticket_ttl_secs must be at least 1");
+        }
+        if self.breaker_window == 0 {
+            bail!("serve.breaker_window must be at least 1");
+        }
+        if !(self.breaker_failure_rate > 0.0 && self.breaker_failure_rate <= 1.0) {
+            bail!(
+                "serve.breaker_failure_rate must be in (0,1], got {}",
+                self.breaker_failure_rate
+            );
+        }
+        if self.breaker_min_samples == 0 || self.breaker_min_samples > self.breaker_window {
+            bail!(
+                "serve.breaker_min_samples must be in 1..=breaker_window ({}), got {}",
+                self.breaker_window,
+                self.breaker_min_samples
+            );
+        }
+        if self.breaker_open_ms == 0 {
+            bail!("serve.breaker_open_ms must be at least 1");
+        }
+        if self.breaker_half_open_probes == 0 {
+            bail!("serve.breaker_half_open_probes must be at least 1");
         }
         Ok(())
     }

@@ -17,6 +17,7 @@ use super::engine::{
 use super::registry::{GraphEntry, GraphRegistry};
 use super::server::{Server, ServerConfig};
 use crate::config::RunConfig;
+use crate::fault::FaultPlan;
 use crate::fixed::AccuracyClass;
 use crate::graph::{CsrMatrix, Graph};
 use crate::ppr::PreparedGraph;
@@ -68,12 +69,13 @@ pub struct EngineBuilder {
     kind: EngineKind,
     cfg: RunConfig,
     artifact_label: Option<String>,
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl EngineBuilder {
     /// Builder for `kind` with the default [`RunConfig`].
     pub fn new(kind: EngineKind) -> Self {
-        Self { kind, cfg: RunConfig::default(), artifact_label: None }
+        Self { kind, cfg: RunConfig::default(), artifact_label: None, fault: None }
     }
 
     /// Shorthand for [`EngineKind::Native`].
@@ -101,6 +103,15 @@ impl EngineBuilder {
     /// configured precision's label, e.g. `26b`).
     pub fn artifact_label(mut self, label: impl Into<String>) -> Self {
         self.artifact_label = Some(label.into());
+        self
+    }
+
+    /// Attach (or clear) a deterministic fault-injection plan
+    /// (DESIGN.md §10): servers stood up through [`Self::serve`] /
+    /// [`Self::serve_registry`] carry it into their workers. `None` — the
+    /// default — keeps the production hot path.
+    pub fn fault(mut self, plan: Option<Arc<FaultPlan>>) -> Self {
+        self.fault = plan;
         self
     }
 
@@ -247,7 +258,9 @@ impl EngineBuilder {
     /// the batching timeout and default top-N from the run configuration.
     pub fn serve(&self, graph: &Graph, workers: usize) -> Result<Server> {
         let engines = self.build_pool(graph, workers)?;
-        Ok(Server::start(engines, ServerConfig::from_run(&self.cfg)))
+        let mut cfg = ServerConfig::from_run(&self.cfg);
+        cfg.fault = self.fault.clone();
+        Server::start(engines, cfg)
     }
 
     /// Stand up a multi-graph [`Server`]: `workers` threads resolving
@@ -258,7 +271,9 @@ impl EngineBuilder {
         registry: Arc<GraphRegistry>,
         workers: usize,
     ) -> Result<Server> {
-        Server::start_registry(registry, self.clone(), workers, ServerConfig::from_run(&self.cfg))
+        let mut cfg = ServerConfig::from_run(&self.cfg);
+        cfg.fault = self.fault.clone();
+        Server::start_registry(registry, self.clone(), workers, cfg)
     }
 
     fn spawn_pjrt(&self, prepared: Arc<PreparedGraph>) -> Result<Box<dyn PprEngine + Send>> {

@@ -52,8 +52,8 @@ pub use engine::{
 pub use registry::{GraphEntry, GraphRegistry, GraphSource, DEFAULT_REGISTRY_CAPACITY};
 pub use request::{
     default_graph_key, validate_query, PprRequest, PprResponse, QueryError, RankedVertex,
-    DEFAULT_GRAPH,
+    ServeError, DEFAULT_GRAPH,
 };
 pub use score_block::ScoreBlock;
-pub use server::{Server, ServerConfig, Ticket};
+pub use server::{Server, ServerConfig, Ticket, WorkerHealth};
 pub use stats::ServerStats;

@@ -91,7 +91,7 @@ pub struct RankedVertex {
 }
 
 /// The response to a [`PprRequest`].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PprResponse {
     /// Echo of the request id.
     pub id: u64,
@@ -112,7 +112,157 @@ pub struct PprResponse {
     pub queue_time: Duration,
     /// Total latency (enqueue → response).
     pub total_time: Duration,
+    /// True when the response was produced by the degradation policy (a
+    /// retry on a narrower accuracy class or the CPU-baseline backend
+    /// after the requested engine failed) rather than the requested
+    /// engine. The HTTP layer only serializes the field when set, so
+    /// fault-free responses are byte-identical to servers without the
+    /// policy.
+    pub degraded: bool,
 }
+
+/// A typed serving failure — everything that can go wrong **after** a
+/// request passes validation: queue/deadline expiry, routing misses,
+/// engine faults (errors and contained panics), worker death, exhausted
+/// degradation retries, and shutdown races. The HTTP layer maps status
+/// codes from [`ServeError::status`] instead of matching substrings of
+/// error text, and the `Display` strings stay client-presentable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The deadline passed while the request waited in the batcher queue.
+    DeadlineQueue,
+    /// The deadline passed while the solve was running.
+    DeadlineSolve,
+    /// The deadline passed while the caller waited on the ticket.
+    DeadlineWait,
+    /// The named graph is not registered. `single` marks single-graph
+    /// servers, which only route [`DEFAULT_GRAPH`].
+    GraphUnknown {
+        /// The graph name the request asked for.
+        name: String,
+        /// True on single-graph servers (different client remedy).
+        single: bool,
+    },
+    /// A routed request reached a registry server with no default graph.
+    NoDefaultGraph,
+    /// The personalization vertex is outside the graph's vertex range.
+    /// `after_reload` marks the race where a hot-swap shrank |V| after
+    /// submission validated the vertex.
+    VertexOutOfRange {
+        /// The offending vertex id.
+        vertex: u64,
+        /// |V| at rejection time.
+        num_vertices: usize,
+        /// True when the range check failed post-reload at serve time.
+        after_reload: bool,
+    },
+    /// The engine returned an error from the solve.
+    EngineFailed(String),
+    /// The engine panicked; the panic was contained and the worker keeps
+    /// serving.
+    EnginePanicked(String),
+    /// The worker thread died while this request's batch was in flight;
+    /// the watchdog fails pending tickets promptly instead of letting
+    /// them hang to their deadlines.
+    WorkerDied,
+    /// The registry could not resolve/prepare the graph for this batch.
+    GraphUnavailable {
+        /// The graph name.
+        name: String,
+        /// The resolution failure.
+        reason: String,
+    },
+    /// The degradation policy's retry also failed.
+    DegradedExhausted(String),
+    /// The circuit breaker for this `(graph, class)` is open; retry after
+    /// the embedded hint.
+    BreakerOpen {
+        /// Suggested client back-off in milliseconds.
+        retry_after_ms: u64,
+    },
+    /// The response channel disconnected without a response (server
+    /// dropped mid-flight).
+    ChannelClosed,
+    /// The server is shutting down and no longer accepts work.
+    ShuttingDown,
+}
+
+impl ServeError {
+    /// The HTTP status this failure maps to. Kept next to the taxonomy so
+    /// the HTTP layer never interprets error *text*.
+    pub fn status(&self) -> u16 {
+        match self {
+            ServeError::DeadlineQueue | ServeError::DeadlineSolve | ServeError::DeadlineWait => {
+                504
+            }
+            ServeError::GraphUnknown { .. } | ServeError::NoDefaultGraph => 404,
+            ServeError::VertexOutOfRange { .. } => 400,
+            ServeError::BreakerOpen { .. } | ServeError::ShuttingDown => 503,
+            ServeError::EngineFailed(_)
+            | ServeError::EnginePanicked(_)
+            | ServeError::WorkerDied
+            | ServeError::GraphUnavailable { .. }
+            | ServeError::DegradedExhausted(_)
+            | ServeError::ChannelClosed => 500,
+        }
+    }
+
+    /// True for failures that should trip the circuit breaker: genuine
+    /// engine/worker faults, not client errors, overload shed, or
+    /// deadline expiry.
+    pub fn is_fault(&self) -> bool {
+        matches!(
+            self,
+            ServeError::EngineFailed(_)
+                | ServeError::EnginePanicked(_)
+                | ServeError::WorkerDied
+                | ServeError::GraphUnavailable { .. }
+                | ServeError::DegradedExhausted(_)
+                | ServeError::ChannelClosed
+        )
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::DeadlineQueue => write!(f, "deadline exceeded in queue"),
+            ServeError::DeadlineSolve => write!(f, "deadline exceeded during solve"),
+            ServeError::DeadlineWait => {
+                write!(f, "deadline exceeded waiting for response")
+            }
+            ServeError::GraphUnknown { name, single: false } => {
+                write!(f, "unknown graph {name}")
+            }
+            ServeError::GraphUnknown { name, single: true } => {
+                write!(f, "unknown graph {name} (single-graph server)")
+            }
+            ServeError::NoDefaultGraph => write!(f, "no default graph registered"),
+            ServeError::VertexOutOfRange { vertex, num_vertices, after_reload: false } => {
+                write!(f, "vertex {vertex} out of range (|V|={num_vertices})")
+            }
+            ServeError::VertexOutOfRange { vertex, num_vertices, after_reload: true } => {
+                write!(f, "vertex {vertex} out of range (|V|={num_vertices} after reload)")
+            }
+            ServeError::EngineFailed(e) => write!(f, "engine error: {e}"),
+            ServeError::EnginePanicked(msg) => write!(f, "engine panicked: {msg}"),
+            ServeError::WorkerDied => write!(f, "worker died with the batch in flight"),
+            ServeError::GraphUnavailable { name, reason } => {
+                write!(f, "graph {name} unavailable: {reason}")
+            }
+            ServeError::DegradedExhausted(e) => {
+                write!(f, "degraded retry exhausted: {e}")
+            }
+            ServeError::BreakerOpen { retry_after_ms } => {
+                write!(f, "circuit breaker open (retry in {retry_after_ms}ms)")
+            }
+            ServeError::ChannelClosed => write!(f, "response channel closed"),
+            ServeError::ShuttingDown => write!(f, "server shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// A typed rejection of a malformed query, raised **before** anything is
 /// enqueued. The HTTP handlers map every variant to a 400; keeping the
@@ -330,6 +480,58 @@ mod tests {
         // errors format into client-presentable strings
         let msg = validate_query(&[100], 5, None, 100).unwrap_err().to_string();
         assert!(msg.contains("out of range"), "{msg}");
+    }
+
+    #[test]
+    fn serve_error_statuses_and_messages() {
+        use ServeError::*;
+        assert_eq!(DeadlineQueue.status(), 504);
+        assert_eq!(DeadlineSolve.status(), 504);
+        assert_eq!(DeadlineWait.status(), 504);
+        assert_eq!(GraphUnknown { name: "x".into(), single: false }.status(), 404);
+        assert_eq!(NoDefaultGraph.status(), 404);
+        assert_eq!(
+            VertexOutOfRange { vertex: 9, num_vertices: 4, after_reload: false }.status(),
+            400
+        );
+        assert_eq!(BreakerOpen { retry_after_ms: 100 }.status(), 503);
+        assert_eq!(ShuttingDown.status(), 503);
+        for e in [
+            EngineFailed("boom".into()),
+            EnginePanicked("boom".into()),
+            WorkerDied,
+            GraphUnavailable { name: "g".into(), reason: "r".into() },
+            DegradedExhausted("boom".into()),
+            ChannelClosed,
+        ] {
+            assert_eq!(e.status(), 500, "{e}");
+            assert!(e.is_fault(), "{e} trips the breaker");
+        }
+        assert!(!DeadlineQueue.is_fault(), "deadline misses are load, not faults");
+        assert!(!BreakerOpen { retry_after_ms: 1 }.is_fault());
+
+        // the Display strings are the wire-visible contract
+        assert_eq!(DeadlineQueue.to_string(), "deadline exceeded in queue");
+        assert_eq!(DeadlineSolve.to_string(), "deadline exceeded during solve");
+        assert_eq!(DeadlineWait.to_string(), "deadline exceeded waiting for response");
+        assert_eq!(
+            GraphUnknown { name: "eu".into(), single: false }.to_string(),
+            "unknown graph eu"
+        );
+        assert_eq!(
+            GraphUnknown { name: "eu".into(), single: true }.to_string(),
+            "unknown graph eu (single-graph server)"
+        );
+        assert_eq!(
+            VertexOutOfRange { vertex: 7, num_vertices: 5, after_reload: false }.to_string(),
+            "vertex 7 out of range (|V|=5)"
+        );
+        assert_eq!(
+            VertexOutOfRange { vertex: 7, num_vertices: 5, after_reload: true }.to_string(),
+            "vertex 7 out of range (|V|=5 after reload)"
+        );
+        assert_eq!(ChannelClosed.to_string(), "response channel closed");
+        assert_eq!(ShuttingDown.to_string(), "server shutting down");
     }
 
     #[test]

@@ -28,15 +28,18 @@
 //! fast without burning a lane.
 
 use super::batcher::{DynamicBatcher, GraphBatch};
-use super::builder::EngineBuilder;
+use super::builder::{EngineBuilder, EngineKind};
 use super::engine::PprEngine;
 use super::registry::{GraphEntry, GraphRegistry};
-use super::request::{default_graph_key, PprRequest, PprResponse};
+use super::request::{default_graph_key, PprRequest, PprResponse, ServeError};
 use super::score_block::ScoreBlock;
 use super::stats::{ServerStats, StatsSnapshot};
+use crate::fault::FaultPlan;
 use crate::fixed::AccuracyClass;
 use crate::graph::VertexId;
 use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -58,6 +61,10 @@ pub struct ServerConfig {
     /// (and all full-vector work) keep the dense path. `None` disables
     /// the routing.
     pub top_k: Option<usize>,
+    /// Deterministic fault-injection plan (DESIGN.md §10). `None` — the
+    /// production default — costs one `Option` check per batch on the hot
+    /// path.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServerConfig {
@@ -67,6 +74,7 @@ impl Default for ServerConfig {
             default_top_n: 10,
             default_class: AccuracyClass::Static,
             top_k: None,
+            fault: None,
         }
     }
 }
@@ -79,13 +87,159 @@ impl ServerConfig {
             default_top_n: cfg.top_n,
             default_class: cfg.accuracy_class,
             top_k: cfg.top_k,
+            fault: None,
         }
     }
 }
 
-type ResponseSender = mpsc::Sender<Result<PprResponse, String>>;
+type ResponseSender = mpsc::Sender<Result<PprResponse, ServeError>>;
 type PendingMap = Mutex<HashMap<u64, ResponseSender>>;
 type PerGraphStats = Mutex<HashMap<Arc<str>, Arc<ServerStats>>>;
+
+/// Per-worker liveness and in-flight-batch board shared with the
+/// watchdog and the metrics endpoint (DESIGN.md §10). Lock-free: workers
+/// stamp their slot on batch claim/finish, readers fold the slots.
+#[derive(Debug)]
+struct HealthBoard {
+    slots: Vec<SlotHealth>,
+    respawns: AtomicU64,
+    epoch: Instant,
+}
+
+#[derive(Debug)]
+struct SlotHealth {
+    alive: AtomicBool,
+    /// Microseconds since `epoch` when the in-flight batch was claimed,
+    /// plus 1 (0 = idle).
+    busy_since_us: AtomicU64,
+}
+
+impl HealthBoard {
+    fn new(workers: usize) -> Self {
+        Self {
+            slots: (0..workers)
+                .map(|_| SlotHealth {
+                    alive: AtomicBool::new(false),
+                    busy_since_us: AtomicU64::new(0),
+                })
+                .collect(),
+            respawns: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    fn mark_alive(&self, slot: usize, alive: bool) {
+        self.slots[slot].alive.store(alive, Ordering::Relaxed);
+    }
+
+    fn set_busy(&self, slot: usize) {
+        let us = self.epoch.elapsed().as_micros() as u64;
+        self.slots[slot].busy_since_us.store(us + 1, Ordering::Relaxed);
+    }
+
+    fn clear_busy(&self, slot: usize) {
+        self.slots[slot].busy_since_us.store(0, Ordering::Relaxed);
+    }
+
+    fn record_respawn(&self) {
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> WorkerHealth {
+        let live = self.slots.iter().filter(|s| s.alive.load(Ordering::Relaxed)).count();
+        let now_us = self.epoch.elapsed().as_micros() as u64;
+        let oldest = self
+            .slots
+            .iter()
+            .filter_map(|s| {
+                let b = s.busy_since_us.load(Ordering::Relaxed);
+                (b > 0).then(|| now_us.saturating_sub(b - 1))
+            })
+            .max()
+            .unwrap_or(0);
+        WorkerHealth {
+            live,
+            total: self.slots.len(),
+            respawns: self.respawns.load(Ordering::Relaxed),
+            oldest_batch_age: Duration::from_micros(oldest),
+        }
+    }
+}
+
+/// Snapshot of the worker pool's health, served by
+/// [`Server::worker_health`] and exported on `/metrics`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerHealth {
+    /// Workers currently alive.
+    pub live: usize,
+    /// Configured worker count.
+    pub total: usize,
+    /// Times the watchdog respawned a dead worker.
+    pub respawns: u64,
+    /// Age of the oldest in-flight batch (zero when all workers are
+    /// idle) — a growing value flags a stuck solve.
+    pub oldest_batch_age: Duration,
+}
+
+/// RAII containment boundary around one claimed batch: registered before
+/// the solve, disarmed by responding. If the worker thread dies with the
+/// batch in flight (a panic outside the engine's `catch_unwind`, e.g. an
+/// injected worker kill), the guard's `Drop` runs during unwind and fails
+/// every still-pending ticket of the batch with a typed
+/// [`ServeError::WorkerDied`] — promptly, not after a deadline-long hang.
+struct BatchGuard<'a> {
+    pending: &'a PendingMap,
+    health: &'a HealthBoard,
+    slot: usize,
+    ids: Vec<u64>,
+}
+
+impl<'a> BatchGuard<'a> {
+    fn new(
+        pending: &'a PendingMap,
+        health: &'a HealthBoard,
+        slot: usize,
+        requests: &[PprRequest],
+    ) -> Self {
+        health.set_busy(slot);
+        Self { pending, health, slot, ids: requests.iter().map(|r| r.id).collect() }
+    }
+}
+
+impl Drop for BatchGuard<'_> {
+    fn drop(&mut self) {
+        self.health.clear_busy(self.slot);
+        // on the normal path every id has been responded to already and
+        // these are no-ops; during unwind they fail the batch promptly
+        for id in &self.ids {
+            Server::respond(self.pending, *id, Err(ServeError::WorkerDied));
+        }
+    }
+}
+
+/// What became of one batch solve attempt.
+enum BatchOutcome {
+    /// Every request was answered before the engine ran (expired or out
+    /// of range) — nothing to retry.
+    Idle,
+    /// The engine ran and every live request was answered.
+    Served,
+    /// The solve failed — engine error or contained panic. The live
+    /// requests are still unanswered so the caller can degrade or fail
+    /// them.
+    Failed { live: Vec<PprRequest>, error: ServeError },
+}
+
+/// Extract a printable message from a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Handle to one in-flight request, returned by [`Server::submit`].
 ///
@@ -98,7 +252,7 @@ pub struct Ticket {
     class: AccuracyClass,
     vertex: VertexId,
     deadline: Option<Instant>,
-    rx: mpsc::Receiver<Result<PprResponse, String>>,
+    rx: mpsc::Receiver<Result<PprResponse, ServeError>>,
 }
 
 impl Ticket {
@@ -133,9 +287,9 @@ impl Ticket {
     /// — it never blocks, and never reports the expiry as a transport
     /// error (the HTTP layer maps deadline misses to 504, channel faults
     /// to 500, so the two must stay distinguishable).
-    pub fn wait(self) -> Result<PprResponse, String> {
+    pub fn wait(self) -> Result<PprResponse, ServeError> {
         match self.deadline {
-            None => self.rx.recv().map_err(|_| "response channel closed".to_string())?,
+            None => self.rx.recv().map_err(|_| ServeError::ChannelClosed)?,
             Some(deadline) => {
                 let now = Instant::now();
                 if deadline <= now {
@@ -145,30 +299,24 @@ impl Ticket {
                     // channel fault
                     return match self.rx.try_recv() {
                         Ok(resp) => resp,
-                        Err(_) => Err("deadline exceeded waiting for response".to_string()),
+                        Err(_) => Err(ServeError::DeadlineWait),
                     };
                 }
                 match self.rx.recv_timeout(deadline - now) {
                     Ok(resp) => resp,
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        Err("deadline exceeded waiting for response".to_string())
-                    }
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        Err("response channel closed".to_string())
-                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => Err(ServeError::DeadlineWait),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::ChannelClosed),
                 }
             }
         }
     }
 
     /// Non-blocking check: `None` while the request is still in flight.
-    pub fn poll(&self) -> Option<Result<PprResponse, String>> {
+    pub fn poll(&self) -> Option<Result<PprResponse, ServeError>> {
         match self.rx.try_recv() {
             Ok(resp) => Some(resp),
             Err(mpsc::TryRecvError::Empty) => None,
-            Err(mpsc::TryRecvError::Disconnected) => {
-                Some(Err("response channel closed".to_string()))
-            }
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(ServeError::ChannelClosed)),
         }
     }
 }
@@ -190,11 +338,168 @@ pub struct Server {
     pending: Arc<PendingMap>,
     stats: Arc<ServerStats>,
     per_graph: Arc<PerGraphStats>,
+    /// Single-graph mode owns its worker handles directly; registry mode
+    /// hands them to the watchdog (which joins them at shutdown).
     workers: Vec<std::thread::JoinHandle<()>>,
+    watchdog: Option<Watchdog>,
+    health: Arc<HealthBoard>,
     next_id: std::sync::atomic::AtomicU64,
     routing: Routing,
     default_top_n: usize,
     default_class: AccuracyClass,
+}
+
+/// The registry-mode watchdog thread: polls worker liveness, respawns
+/// dead workers, and owns the worker handles so shutdown joins them
+/// exactly once.
+struct Watchdog {
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl Watchdog {
+    /// How often the watchdog polls worker liveness.
+    const TICK: Duration = Duration::from_millis(10);
+
+    /// Take ownership of the worker handles and start the watchdog
+    /// thread. On spawn failure the workers are shut down and joined
+    /// before the error is returned.
+    fn start(
+        spec: RegistryWorkerSpec,
+        handles: Vec<std::thread::JoinHandle<()>>,
+        stats: Arc<ServerStats>,
+    ) -> anyhow::Result<Self> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let mut slots: Vec<Option<std::thread::JoinHandle<()>>> =
+            handles.into_iter().map(Some).collect();
+        let spawned = std::thread::Builder::new().name("ppr-watchdog".into()).spawn(move || {
+            loop {
+                if stop2.load(Ordering::Acquire) {
+                    break;
+                }
+                for (slot, cell) in slots.iter_mut().enumerate() {
+                    let dead = cell.as_ref().is_some_and(|h| h.is_finished());
+                    // re-check stop before respawning: a worker that
+                    // drained out because shutdown closed the batcher is
+                    // not a casualty
+                    if !dead || stop2.load(Ordering::Acquire) {
+                        continue;
+                    }
+                    // the worker exited while the server is still up: it
+                    // panicked past its containment boundary. Join the
+                    // corpse (BatchGuard already failed its batch), then
+                    // respawn a clean worker on the same slot.
+                    if let Some(h) = cell.take() {
+                        let _ = h.join();
+                    }
+                    spec.health.mark_alive(slot, false);
+                    spec.health.clear_busy(slot);
+                    match spawn_registry_worker(&spec, slot) {
+                        Ok(h) => {
+                            *cell = Some(h);
+                            spec.health.record_respawn();
+                            stats.record_respawn();
+                        }
+                        Err(_) => {
+                            // out of threads right now — leave the slot
+                            // empty and retry on the next tick
+                        }
+                    }
+                }
+                std::thread::sleep(Self::TICK);
+            }
+            // shutdown: the batcher is closed, workers drain and exit;
+            // join them all here so shutdown joins exactly once
+            for cell in slots.iter_mut() {
+                if let Some(h) = cell.take() {
+                    let _ = h.join();
+                }
+            }
+        });
+        match spawned {
+            Ok(handle) => Ok(Self { stop, handle }),
+            Err(e) => {
+                // the closure (owning the worker handles) was never run;
+                // workers exit once the caller closes the batcher, but we
+                // cannot join them here — fail construction
+                anyhow::bail!("spawn watchdog: {e}")
+            }
+        }
+    }
+
+    /// Signal the watchdog to stop respawning and join it (which joins
+    /// the workers). Call **after** closing the batcher.
+    fn stop_and_join(self) {
+        self.stop.store(true, Ordering::Release);
+        let _ = self.handle.join();
+    }
+}
+
+/// Everything a registry worker needs to run — and, because it is
+/// `Clone`, everything the watchdog needs to *respawn* one: the engine
+/// cache and score block are rebuilt inside the worker closure, so a
+/// respawned worker starts clean.
+#[derive(Clone)]
+struct RegistryWorkerSpec {
+    batcher: Arc<DynamicBatcher>,
+    pending: Arc<PendingMap>,
+    stats: Arc<ServerStats>,
+    per_graph: Arc<PerGraphStats>,
+    builder: EngineBuilder,
+    registry: Arc<GraphRegistry>,
+    shards: usize,
+    cache_capacity: usize,
+    top_k: Option<usize>,
+    fault: Option<Arc<FaultPlan>>,
+    health: Arc<HealthBoard>,
+}
+
+/// Spawn one registry worker on `slot`. Spawn failure is propagated, not
+/// panicked, so a half-constructed server can clean up (and the watchdog
+/// can retry on its next tick).
+fn spawn_registry_worker(
+    spec: &RegistryWorkerSpec,
+    slot: usize,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    let wspec = spec.clone();
+    let handle = std::thread::Builder::new().name(format!("ppr-worker-{slot}")).spawn(
+        move || {
+            let mut cache = EngineCache {
+                builder: wspec.builder.clone(),
+                registry: wspec.registry.clone(),
+                shards: wspec.shards,
+                engines: Vec::new(),
+                capacity: wspec.cache_capacity,
+                fault: wspec.fault.clone(),
+            };
+            let mut block = ScoreBlock::new();
+            while let Some(batch) = wspec.batcher.next_batch() {
+                // containment boundary: if anything below unwinds past the
+                // engine-level catch_unwind, the guard fails the batch's
+                // pending tickets promptly and the watchdog respawns us
+                let guard =
+                    BatchGuard::new(&wspec.pending, &wspec.health, slot, &batch.requests);
+                if let Some(f) = &wspec.fault {
+                    f.before_claim();
+                }
+                let gstats = Server::stats_for(&wspec.per_graph, &batch.graph);
+                Server::serve_registry_batch(
+                    &mut cache,
+                    &mut block,
+                    batch,
+                    wspec.top_k,
+                    &wspec.pending,
+                    &wspec.stats,
+                    &gstats,
+                    wspec.fault.as_deref(),
+                );
+                drop(guard);
+            }
+        },
+    )?;
+    spec.health.mark_alive(slot, true);
+    Ok(handle)
 }
 
 /// Per-worker cache of built engines, keyed by `(graph, epoch, class)`.
@@ -213,6 +518,8 @@ struct EngineCache {
     /// LRU order: back = most recently used.
     engines: Vec<CachedEngine>,
     capacity: usize,
+    /// Fault-injection hook for resolve/build failures (DESIGN.md §10).
+    fault: Option<Arc<FaultPlan>>,
 }
 
 /// One cached engine: `(graph, epoch, class, engine)`.
@@ -226,6 +533,9 @@ impl EngineCache {
         graph: &Arc<str>,
         class: AccuracyClass,
     ) -> anyhow::Result<(usize, Arc<GraphEntry>)> {
+        if let Some(f) = &self.fault {
+            f.on_build().map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
         let cfg = self.builder.run_config();
         let entry = self.registry.resolve(graph, cfg.b, self.shards)?;
         if let Some(pos) = self
@@ -254,63 +564,101 @@ impl EngineCache {
 impl Server {
     /// Start a single-graph server over one engine per worker. All
     /// engines must share κ and vertex count. (Engine pools come from
-    /// [`super::builder::EngineBuilder::build_pool`].)
-    pub fn start(engines: Vec<Box<dyn PprEngine + Send>>, cfg: ServerConfig) -> Self {
-        assert!(!engines.is_empty(), "need at least one engine");
+    /// [`super::builder::EngineBuilder::build_pool`].) A thread-spawn
+    /// failure is propagated — already-spawned workers are drained and
+    /// joined first, never left running behind an error return.
+    pub fn start(
+        engines: Vec<Box<dyn PprEngine + Send>>,
+        cfg: ServerConfig,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!engines.is_empty(), "need at least one engine");
         let kappa = engines[0].max_kappa();
         let num_vertices = engines[0].num_vertices();
-        assert!(engines
-            .iter()
-            .all(|e| e.max_kappa() == kappa && e.num_vertices() == num_vertices));
+        anyhow::ensure!(
+            engines.iter().all(|e| e.max_kappa() == kappa && e.num_vertices() == num_vertices),
+            "engines must share κ and vertex count"
+        );
 
         let graph = default_graph_key();
         let batcher = Arc::new(DynamicBatcher::new(kappa, cfg.batch_timeout));
         let pending: Arc<PendingMap> = Arc::new(Mutex::new(HashMap::new()));
         let stats = Arc::new(ServerStats::new());
         let per_graph: Arc<PerGraphStats> = Arc::new(Mutex::new(HashMap::new()));
+        let health = Arc::new(HealthBoard::new(engines.len()));
 
         let top_k = cfg.top_k;
-        let workers = engines
-            .into_iter()
-            .enumerate()
-            .map(|(widx, mut engine)| {
-                let batcher = batcher.clone();
-                let pending = pending.clone();
-                let stats = stats.clone();
-                let per_graph = per_graph.clone();
-                std::thread::Builder::new()
-                    .name(format!("ppr-worker-{widx}"))
-                    .spawn(move || {
-                        // one reusable score block per worker: zero
-                        // steady-state allocation on the serving path
-                        let mut block = ScoreBlock::with_capacity(kappa, num_vertices);
-                        while let Some(batch) = batcher.next_batch() {
-                            let gstats = Self::stats_for(&per_graph, &batch.graph);
-                            Self::serve_batch(
-                                &mut *engine,
-                                &mut block,
-                                batch.requests,
-                                top_k,
-                                &pending,
-                                &[stats.as_ref(), gstats.as_ref()],
-                            );
+        let fault = cfg.fault.clone();
+        let mut workers = Vec::with_capacity(engines.len());
+        for (widx, mut engine) in engines.into_iter().enumerate() {
+            let batcher = batcher.clone();
+            let pending = pending.clone();
+            let stats = stats.clone();
+            let per_graph = per_graph.clone();
+            let health = health.clone();
+            let fault = fault.clone();
+            let spawned = std::thread::Builder::new().name(format!("ppr-worker-{widx}")).spawn(
+                move || {
+                    // one reusable score block per worker: zero
+                    // steady-state allocation on the serving path
+                    let mut block = ScoreBlock::with_capacity(kappa, num_vertices);
+                    while let Some(batch) = batcher.next_batch() {
+                        let guard =
+                            BatchGuard::new(&pending, &health, widx, &batch.requests);
+                        if let Some(f) = &fault {
+                            f.before_claim();
                         }
-                    })
-                    .expect("spawn worker")
-            })
-            .collect();
+                        let gstats = Self::stats_for(&per_graph, &batch.graph);
+                        let sts = [stats.as_ref(), gstats.as_ref()];
+                        let outcome = Self::serve_batch(
+                            &mut *engine,
+                            &mut block,
+                            batch.requests,
+                            top_k,
+                            &pending,
+                            &sts,
+                            fault.as_deref(),
+                            false,
+                        );
+                        // single-graph mode has no narrower class or
+                        // baseline backend to degrade onto: a failed solve
+                        // fails its requests with the typed error
+                        if let BatchOutcome::Failed { live, error } = outcome {
+                            Self::fail_requests(&pending, &sts, &live, &error);
+                        }
+                        drop(guard);
+                    }
+                },
+            );
+            match spawned {
+                Ok(handle) => {
+                    health.mark_alive(widx, true);
+                    workers.push(handle);
+                }
+                Err(e) => {
+                    // unwind cleanly: stop the batcher so the workers we
+                    // already spawned exit, join them, then report
+                    batcher.close();
+                    for w in workers.drain(..) {
+                        let _ = w.join();
+                    }
+                    anyhow::bail!("spawn worker {widx}: {e}");
+                }
+            }
+        }
 
-        Self {
+        Ok(Self {
             batcher,
             pending,
             stats,
             per_graph,
             workers,
+            watchdog: None,
+            health,
             next_id: std::sync::atomic::AtomicU64::new(1),
             routing: Routing::Single { graph, num_vertices },
             default_top_n: cfg.default_top_n,
             default_class: cfg.default_class,
-        }
+        })
     }
 
     /// Start a registry-backed multi-graph server: `workers` threads,
@@ -332,50 +680,48 @@ impl Server {
         let stats = Arc::new(ServerStats::new());
         let per_graph: Arc<PerGraphStats> = Arc::new(Mutex::new(HashMap::new()));
 
-        let top_k = cfg.top_k;
-        let handles = (0..workers)
-            .map(|widx| {
-                let batcher = batcher.clone();
-                let pending = pending.clone();
-                let stats = stats.clone();
-                let per_graph = per_graph.clone();
-                // capacity scales with the class dimension of the
-                // cache key, so graphs × classes under steady traffic
-                // don't churn through eviction/rebuild on the hot path
-                let mut cache = EngineCache {
-                    builder: builder.clone(),
-                    registry: registry.clone(),
-                    shards,
-                    engines: Vec::new(),
-                    capacity: registry.capacity().max(1) * AccuracyClass::all().len(),
-                };
-                std::thread::Builder::new()
-                    .name(format!("ppr-worker-{widx}"))
-                    .spawn(move || {
-                        let mut block = ScoreBlock::new();
-                        while let Some(batch) = batcher.next_batch() {
-                            let gstats = Self::stats_for(&per_graph, &batch.graph);
-                            Self::serve_registry_batch(
-                                &mut cache,
-                                &mut block,
-                                batch,
-                                top_k,
-                                &pending,
-                                &stats,
-                                &gstats,
-                            );
-                        }
-                    })
-                    .expect("spawn worker")
-            })
-            .collect();
+        let health = Arc::new(HealthBoard::new(workers));
+        // capacity scales with the class dimension of the cache key, so
+        // graphs × classes under steady traffic don't churn through
+        // eviction/rebuild on the hot path
+        let spec = RegistryWorkerSpec {
+            batcher: batcher.clone(),
+            pending: pending.clone(),
+            stats: stats.clone(),
+            per_graph: per_graph.clone(),
+            builder,
+            registry: registry.clone(),
+            shards,
+            cache_capacity: registry.capacity().max(1) * AccuracyClass::all().len(),
+            top_k: cfg.top_k,
+            fault: cfg.fault.clone(),
+            health: health.clone(),
+        };
+
+        let mut handles = Vec::with_capacity(workers);
+        for widx in 0..workers {
+            match spawn_registry_worker(&spec, widx) {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    batcher.close();
+                    for h in handles.drain(..) {
+                        let _ = h.join();
+                    }
+                    anyhow::bail!("spawn worker {widx}: {e}");
+                }
+            }
+        }
+
+        let watchdog = Watchdog::start(spec, handles, stats.clone())?;
 
         Ok(Self {
             batcher,
             pending,
             stats,
             per_graph,
-            workers: handles,
+            workers: Vec::new(),
+            watchdog: Some(watchdog),
+            health,
             next_id: std::sync::atomic::AtomicU64::new(1),
             routing: Routing::Registry { registry },
             default_top_n: cfg.default_top_n,
@@ -392,15 +738,43 @@ impl Server {
             .clone()
     }
 
-    fn respond(pending: &PendingMap, id: u64, resp: Result<PprResponse, String>) {
-        if let Some(tx) = pending.lock().unwrap().remove(&id) {
+    fn respond(pending: &PendingMap, id: u64, resp: Result<PprResponse, ServeError>) {
+        // poison-tolerant: this runs from BatchGuard::drop during a
+        // worker's unwind, after the panicking thread may have poisoned
+        // the map — the data (id → sender) is still sound
+        let mut map = match pending.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some(tx) = map.remove(&id) {
             let _ = tx.send(resp);
         }
     }
 
-    /// Resolve the batch's engine and run it; a resolution failure fails
+    /// Fail every request in `requests` with `error`, recording one error
+    /// per request on each stats ledger.
+    fn fail_requests(
+        pending: &PendingMap,
+        stats: &[&ServerStats],
+        requests: &[PprRequest],
+        error: &ServeError,
+    ) {
+        for req in requests {
+            for s in stats {
+                s.record_error();
+            }
+            Self::respond(pending, req.id, Err(error.clone()));
+        }
+    }
+
+    /// Resolve the batch's engine and run it. A resolution failure fails
     /// the whole batch (the graph vanished mid-flight or its engine could
-    /// not be built), never silently drops it.
+    /// not be built), never silently drops it. A solve failure — engine
+    /// error or contained panic — walks the degradation ladder
+    /// (DESIGN.md §10): retry once on the next-narrower class, or on the
+    /// CPU-baseline backend when already at the narrowest, before giving
+    /// up with a typed error.
+    #[allow(clippy::too_many_arguments)]
     fn serve_registry_batch(
         cache: &mut EngineCache,
         block: &mut ScoreBlock,
@@ -409,38 +783,135 @@ impl Server {
         pending: &PendingMap,
         stats: &ServerStats,
         gstats: &ServerStats,
+        fault: Option<&FaultPlan>,
     ) {
-        match cache.resolve(&batch.graph, batch.class) {
+        let graph = batch.graph.clone();
+        let class = batch.class;
+        let sts = [stats, gstats];
+        let (entry, outcome) = match cache.resolve(&graph, class) {
             Ok((idx, entry)) => {
                 let engine = &mut *cache.engines[idx].3;
-                let served = Self::serve_batch(
+                let outcome = Self::serve_batch(
                     engine,
                     block,
                     batch.requests,
                     top_k,
                     pending,
-                    &[stats, gstats],
+                    &sts,
+                    fault,
+                    false,
                 );
-                if served {
-                    entry.record_batch_served();
-                }
+                (entry, outcome)
             }
             Err(e) => {
-                for req in &batch.requests {
-                    stats.record_error();
-                    gstats.record_error();
-                    Self::respond(
-                        pending,
-                        req.id,
-                        Err(format!("graph {} unavailable: {e:#}", batch.graph)),
-                    );
+                let error = ServeError::GraphUnavailable {
+                    name: graph.to_string(),
+                    reason: format!("{e:#}"),
+                };
+                Self::fail_requests(pending, &sts, &batch.requests, &error);
+                return;
+            }
+        };
+
+        match outcome {
+            BatchOutcome::Idle => {}
+            BatchOutcome::Served => entry.record_batch_served(),
+            BatchOutcome::Failed { live, error } => {
+                if matches!(error, ServeError::EnginePanicked(_)) {
+                    // a panicked engine's internal state is suspect:
+                    // evict it (resolve left it at the LRU back) so the
+                    // next batch rebuilds from the registry entry
+                    cache.engines.pop();
                 }
+                Self::degrade_batch(
+                    cache, block, &entry, graph, class, live, error, top_k, pending, &sts,
+                    fault,
+                );
             }
         }
     }
 
-    /// Run one single-graph batch; returns whether the engine executed
-    /// (false when every request expired or was out of range).
+    /// One-step degradation retry for a failed batch: `exact`/`balanced`
+    /// retry on the next-narrower class; the narrowest classes retry on
+    /// the CPU-baseline backend. Successful retries are flagged
+    /// `degraded` on the response and counted; a failed retry fails the
+    /// requests with [`ServeError::DegradedExhausted`].
+    #[allow(clippy::too_many_arguments)]
+    fn degrade_batch(
+        cache: &mut EngineCache,
+        block: &mut ScoreBlock,
+        entry: &Arc<GraphEntry>,
+        graph: Arc<str>,
+        class: AccuracyClass,
+        live: Vec<PprRequest>,
+        first_error: ServeError,
+        top_k: Option<usize>,
+        pending: &PendingMap,
+        stats: &[&ServerStats],
+        fault: Option<&FaultPlan>,
+    ) {
+        let narrower = match class {
+            AccuracyClass::Exact => Some(AccuracyClass::Balanced),
+            AccuracyClass::Balanced => Some(AccuracyClass::Fast),
+            AccuracyClass::Fast | AccuracyClass::Static => None,
+        };
+        let retry = match narrower {
+            Some(nc) => match cache.resolve(&graph, nc) {
+                Ok((idx, _)) => {
+                    let engine = &mut *cache.engines[idx].3;
+                    Self::serve_batch(engine, block, live, top_k, pending, stats, fault, true)
+                }
+                Err(e) => BatchOutcome::Failed {
+                    live,
+                    error: ServeError::EngineFailed(format!("degraded rebuild: {e:#}")),
+                },
+            },
+            None => {
+                // already at the narrowest rung: fall back to the plain
+                // CPU-baseline backend on the same class — slower, but
+                // structurally independent of the accelerated engine that
+                // just failed
+                let baseline = EngineBuilder::new(EngineKind::CpuBaseline)
+                    .config(cache.builder.run_config().clone())
+                    .build_entry_class(entry, class);
+                match baseline {
+                    Ok(mut engine) => Self::serve_batch(
+                        &mut *engine,
+                        block,
+                        live,
+                        top_k,
+                        pending,
+                        stats,
+                        fault,
+                        true,
+                    ),
+                    Err(e) => BatchOutcome::Failed {
+                        live,
+                        error: ServeError::EngineFailed(format!("baseline build: {e:#}")),
+                    },
+                }
+            }
+        };
+        match retry {
+            BatchOutcome::Idle => {}
+            BatchOutcome::Served => entry.record_batch_served(),
+            BatchOutcome::Failed { live, error } => {
+                if matches!(error, ServeError::EnginePanicked(_)) && narrower.is_some() {
+                    cache.engines.pop();
+                }
+                let exhausted =
+                    ServeError::DegradedExhausted(format!("{first_error}; retry: {error}"));
+                Self::fail_requests(pending, stats, &live, &exhausted);
+            }
+        }
+    }
+
+    /// Run one batch on `engine`; panics and errors inside the solve are
+    /// contained and reported as a [`BatchOutcome::Failed`] carrying the
+    /// still-live requests, so the caller can degrade or fail them.
+    /// `degraded` marks every response produced here as a
+    /// degraded-ladder result.
+    #[allow(clippy::too_many_arguments)]
     fn serve_batch(
         engine: &mut dyn PprEngine,
         block: &mut ScoreBlock,
@@ -448,7 +919,9 @@ impl Server {
         top_k: Option<usize>,
         pending: &PendingMap,
         stats: &[&ServerStats],
-    ) -> bool {
+        fault: Option<&FaultPlan>,
+        degraded: bool,
+    ) -> BatchOutcome {
         let batch_start = Instant::now();
         let num_vertices = engine.num_vertices();
         // fail expired requests fast instead of burning a lane on them;
@@ -460,7 +933,7 @@ impl Server {
                 for s in stats {
                     s.record_deadline_miss();
                 }
-                Self::respond(pending, req.id, Err("deadline exceeded in queue".to_string()));
+                Self::respond(pending, req.id, Err(ServeError::DeadlineQueue));
             } else if req.vertex as usize >= num_vertices {
                 for s in stats {
                     s.record_error();
@@ -468,17 +941,18 @@ impl Server {
                 Self::respond(
                     pending,
                     req.id,
-                    Err(format!(
-                        "vertex {} out of range (|V|={num_vertices} after reload)",
-                        req.vertex
-                    )),
+                    Err(ServeError::VertexOutOfRange {
+                        vertex: req.vertex as u64,
+                        num_vertices,
+                        after_reload: true,
+                    }),
                 );
             } else {
                 live.push(req);
             }
         }
         if live.is_empty() {
-            return false;
+            return BatchOutcome::Idle;
         }
 
         // variable-lane batch: exactly the requests in hand, no padding
@@ -491,12 +965,22 @@ impl Server {
         // of the K=k0 ranked lanes. A single larger request (or top_k
         // unset) keeps the whole batch on the dense path.
         let native_k = top_k.filter(|&k0| live.iter().all(|r| r.top_n >= 1 && r.top_n <= k0));
-        let run_res = match native_k {
-            Some(k0) => engine.run_batch_topk(&lanes, k0, block),
-            None => engine.run_batch(&lanes, block),
-        };
+        // panic containment boundary (DESIGN.md §10): an engine that
+        // panics mid-solve must not take the worker thread (and every
+        // later batch) down with it. Injected faults fire inside the
+        // boundary so they exercise exactly the production unwind path.
+        let run_res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            if let Some(f) = fault {
+                f.before_solve()?;
+            }
+            match native_k {
+                Some(k0) => engine.run_batch_topk(&lanes, k0, block),
+                None => engine.run_batch(&lanes, block),
+            }
+            .map_err(|e| format!("{e:#}"))
+        }));
         match run_res {
-            Ok(()) => {
+            Ok(Ok(())) => {
                 // re-check deadlines at respond time: a request whose
                 // deadline passed DURING the solve is a deadline miss,
                 // not a success — its client has already timed out, and
@@ -508,11 +992,7 @@ impl Server {
                         for s in stats {
                             s.record_deadline_miss();
                         }
-                        Self::respond(
-                            pending,
-                            req.id,
-                            Err("deadline exceeded during solve".to_string()),
-                        );
+                        Self::respond(pending, req.id, Err(ServeError::DeadlineSolve));
                         continue;
                     }
                     // scratch-reusing extraction: on ranked blocks an O(n)
@@ -523,6 +1003,9 @@ impl Server {
                     let total_time = req.enqueued_at.elapsed();
                     for s in stats {
                         s.record_request(queue_time, total_time);
+                        if degraded {
+                            s.record_degraded();
+                        }
                     }
                     let resp = PprResponse {
                         id: req.id,
@@ -534,19 +1017,23 @@ impl Server {
                         escalations: block.rungs().saturating_sub(1),
                         queue_time,
                         total_time,
+                        degraded,
                     };
                     Self::respond(pending, req.id, Ok(resp));
                 }
-                true
+                BatchOutcome::Served
             }
-            Err(e) => {
-                for req in &live {
-                    for s in stats {
-                        s.record_error();
-                    }
-                    Self::respond(pending, req.id, Err(format!("engine error: {e:#}")));
+            Ok(Err(msg)) => {
+                BatchOutcome::Failed { live, error: ServeError::EngineFailed(msg) }
+            }
+            Err(payload) => {
+                for s in stats {
+                    s.record_panic();
                 }
-                false
+                BatchOutcome::Failed {
+                    live,
+                    error: ServeError::EnginePanicked(panic_message(&*payload)),
+                }
             }
         }
     }
@@ -596,7 +1083,7 @@ impl Server {
                     class,
                     vertex,
                     timeout,
-                    "no default graph registered".to_string(),
+                    ServeError::NoDefaultGraph,
                 ),
             },
         }
@@ -635,7 +1122,7 @@ impl Server {
                         class,
                         vertex,
                         timeout,
-                        format!("unknown graph {graph} (single-graph server)"),
+                        ServeError::GraphUnknown { name: graph.to_string(), single: true },
                     )
                 }
             }
@@ -646,7 +1133,7 @@ impl Server {
                     class,
                     vertex,
                     timeout,
-                    format!("unknown graph {graph}"),
+                    ServeError::GraphUnknown { name: graph.to_string(), single: false },
                 ),
             },
         }
@@ -659,7 +1146,7 @@ impl Server {
         class: AccuracyClass,
         vertex: VertexId,
         timeout: Option<Duration>,
-        error: String,
+        error: ServeError,
     ) -> Ticket {
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let deadline = timeout.map(|t| Instant::now() + t);
@@ -686,7 +1173,11 @@ impl Server {
                 class,
                 vertex,
                 timeout,
-                format!("vertex {vertex} out of range (|V|={num_vertices})"),
+                ServeError::VertexOutOfRange {
+                    vertex: vertex as u64,
+                    num_vertices,
+                    after_reload: false,
+                },
             );
         }
 
@@ -702,13 +1193,13 @@ impl Server {
             .with_class(class)
             .with_deadline(deadline);
         if !self.batcher.submit(req) {
-            Self::respond(&self.pending, id, Err("server shutting down".to_string()));
+            Self::respond(&self.pending, id, Err(ServeError::ShuttingDown));
         }
         ticket
     }
 
     /// Submit against the default graph and block for the response.
-    pub fn query(&self, vertex: VertexId, top_n: usize) -> Result<PprResponse, String> {
+    pub fn query(&self, vertex: VertexId, top_n: usize) -> Result<PprResponse, ServeError> {
         self.submit(vertex, top_n).wait()
     }
 
@@ -718,7 +1209,7 @@ impl Server {
         vertex: VertexId,
         top_n: usize,
         class: AccuracyClass,
-    ) -> Result<PprResponse, String> {
+    ) -> Result<PprResponse, ServeError> {
         self.submit_with_class(vertex, top_n, None, class).wait()
     }
 
@@ -728,8 +1219,14 @@ impl Server {
         graph: &str,
         vertex: VertexId,
         top_n: usize,
-    ) -> Result<PprResponse, String> {
+    ) -> Result<PprResponse, ServeError> {
         self.submit_to(graph, vertex, top_n, None).wait()
+    }
+
+    /// Live worker-pool health: liveness, respawns, oldest in-flight
+    /// batch age (exported on `/metrics`).
+    pub fn worker_health(&self) -> WorkerHealth {
+        self.health.snapshot()
     }
 
     /// The accuracy class applied to submissions that don't pick one.
@@ -771,7 +1268,20 @@ impl Server {
 
     /// Stop accepting requests, drain, and join workers.
     pub fn shutdown(mut self) {
-        self.batcher.close();
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        // order matters: quiesce the watchdog *before* closing the
+        // batcher so workers draining out of a closed queue aren't
+        // mistaken for casualties and respawned
+        if let Some(w) = self.watchdog.take() {
+            w.stop.store(true, Ordering::Release);
+            self.batcher.close();
+            w.stop_and_join();
+        } else {
+            self.batcher.close();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -780,10 +1290,7 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.batcher.close();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown_impl();
     }
 }
 
@@ -891,7 +1398,7 @@ mod tests {
     fn out_of_range_vertex_fails_without_engine_roundtrip() {
         let server = start_server(1, 2);
         let err = server.query(100_000, 3).unwrap_err();
-        assert!(err.contains("out of range"), "{err}");
+        assert!(err.to_string().contains("out of range"), "{err}");
         assert_eq!(server.stats().snapshot().requests, 0);
         server.shutdown();
     }
@@ -901,7 +1408,7 @@ mod tests {
         let server = start_server(1, 8);
         // a zero budget is already expired when the worker picks it up
         let err = server.submit_with(1, 3, Some(Duration::ZERO)).wait().unwrap_err();
-        assert!(err.contains("deadline"), "{err}");
+        assert!(err.to_string().contains("deadline"), "{err}");
         // a generous budget still completes
         let resp = server.submit_with(1, 3, Some(Duration::from_secs(30))).wait().unwrap();
         assert_eq!(resp.vertex, 1);
@@ -925,7 +1432,7 @@ mod tests {
     fn single_graph_server_rejects_other_graph_names() {
         let server = start_server(1, 2);
         let err = server.query_graph("mystery", 3, 2).unwrap_err();
-        assert!(err.contains("unknown graph"), "{err}");
+        assert!(err.to_string().contains("unknown graph"), "{err}");
         // the implicit name still routes
         let resp = server.query_graph(DEFAULT_GRAPH, 3, 2).unwrap();
         assert_eq!(resp.vertex, 3);
@@ -944,9 +1451,13 @@ mod tests {
         let c = server.query(200, 3).unwrap();
         assert_eq!(c.graph.as_ref(), "ws");
         // unknown graphs and out-of-range vertices fail without a lane
-        assert!(server.query_graph("nope", 1, 1).unwrap_err().contains("unknown graph"));
+        assert!(server
+            .query_graph("nope", 1, 1)
+            .unwrap_err()
+            .to_string()
+            .contains("unknown graph"));
         let err = server.query_graph("er", 5_000, 1).unwrap_err();
-        assert!(err.contains("out of range"), "{err}");
+        assert!(err.to_string().contains("out of range"), "{err}");
 
         let names = server.graph_names();
         let names: Vec<&str> = names.iter().map(|n| n.as_ref()).collect();
@@ -1035,12 +1546,12 @@ mod tests {
         // "success" the client never saw
         let engine = SlowEngine { num_vertices: 16, solve: Duration::from_millis(80) };
         let cfg = ServerConfig { batch_timeout: Duration::from_millis(1), ..Default::default() };
-        let server = Server::start(vec![Box::new(engine)], cfg);
+        let server = Server::start(vec![Box::new(engine)], cfg).expect("server starts");
         // generous enough to survive the ~1 ms queue, far too tight for
         // the 80 ms solve
         let err =
             server.submit_with(3, 2, Some(Duration::from_millis(30))).wait().unwrap_err();
-        assert!(err.contains("deadline"), "{err}");
+        assert!(err.to_string().contains("deadline"), "{err}");
         // the worker finishes the solve after the client timed out; wait
         // for it to file the miss
         let gate = Instant::now() + Duration::from_secs(10);
@@ -1083,7 +1594,7 @@ mod tests {
         // channel closed" — a transport error where a deadline miss
         // belongs (the HTTP layer maps the former to 500, the latter to
         // 504). It must return the miss without blocking.
-        let (_tx, rx) = mpsc::channel::<Result<PprResponse, String>>();
+        let (_tx, rx) = mpsc::channel::<Result<PprResponse, ServeError>>();
         let ticket = Ticket {
             id: 1,
             graph: Arc::from(DEFAULT_GRAPH),
@@ -1094,11 +1605,11 @@ mod tests {
         };
         let sw = crate::util::Stopwatch::start();
         let err = ticket.wait().unwrap_err();
-        assert!(err.contains("deadline"), "{err}");
+        assert_eq!(err, ServeError::DeadlineWait);
         assert!(sw.millis() < 100.0, "expired wait must not block ({} ms)", sw.millis());
 
         // same expiry, but the sender already disconnected: still a miss
-        let (tx, rx) = mpsc::channel::<Result<PprResponse, String>>();
+        let (tx, rx) = mpsc::channel::<Result<PprResponse, ServeError>>();
         drop(tx);
         let ticket = Ticket {
             id: 2,
@@ -1109,7 +1620,180 @@ mod tests {
             rx,
         };
         let err = ticket.wait().unwrap_err();
-        assert!(err.contains("deadline"), "disconnected+expired must be a miss: {err}");
+        assert_eq!(err, ServeError::DeadlineWait, "disconnected+expired must be a miss");
+    }
+
+    #[test]
+    fn dropped_responder_is_typed_channel_error_never_panic() {
+        // wait() on a responder that vanished (no deadline set) must
+        // surface the typed transport error, not hang or panic
+        let (tx, rx) = mpsc::channel::<Result<PprResponse, ServeError>>();
+        drop(tx);
+        let ticket = Ticket {
+            id: 3,
+            graph: Arc::from(DEFAULT_GRAPH),
+            class: AccuracyClass::Static,
+            vertex: 0,
+            deadline: None,
+            rx,
+        };
+        assert_eq!(ticket.wait().unwrap_err(), ServeError::ChannelClosed);
+
+        // poll() on the same condition reports it too
+        let (tx, rx) = mpsc::channel::<Result<PprResponse, ServeError>>();
+        drop(tx);
+        let ticket = Ticket {
+            id: 4,
+            graph: Arc::from(DEFAULT_GRAPH),
+            class: AccuracyClass::Static,
+            vertex: 0,
+            deadline: None,
+            rx,
+        };
+        assert_eq!(ticket.poll(), Some(Err(ServeError::ChannelClosed)));
+    }
+
+    #[test]
+    fn empty_engine_pool_is_an_error_not_a_panic() {
+        let err = Server::start(Vec::new(), ServerConfig::default()).err().unwrap();
+        assert!(err.to_string().contains("at least one engine"), "{err:#}");
+    }
+
+    /// Engine that panics on its first `panics` solves, then recovers —
+    /// drives the containment boundary deterministically.
+    struct PanickyEngine {
+        num_vertices: usize,
+        panics: usize,
+        calls: usize,
+    }
+
+    impl PprEngine for PanickyEngine {
+        fn max_kappa(&self) -> usize {
+            4
+        }
+        fn num_vertices(&self) -> usize {
+            self.num_vertices
+        }
+        fn run_batch(
+            &mut self,
+            personalization: &[crate::graph::VertexId],
+            out: &mut ScoreBlock,
+        ) -> anyhow::Result<()> {
+            self.validate_batch(personalization)?;
+            self.calls += 1;
+            if self.calls <= self.panics {
+                panic!("synthetic solver fault #{}", self.calls);
+            }
+            out.reset(personalization.len(), self.num_vertices);
+            for (lane, &pv) in personalization.iter().enumerate() {
+                out.lane_mut(lane)[pv as usize] = 1.0;
+            }
+            out.set_iterations(1);
+            Ok(())
+        }
+        fn describe(&self) -> String {
+            "panicky[test]".into()
+        }
+    }
+
+    #[test]
+    fn engine_panic_is_contained_and_worker_keeps_serving() {
+        let engine = PanickyEngine { num_vertices: 16, panics: 1, calls: 0 };
+        let cfg = ServerConfig { batch_timeout: Duration::from_millis(1), ..Default::default() };
+        let server = Server::start(vec![Box::new(engine)], cfg).expect("server starts");
+        // first solve panics: the request fails promptly with the typed
+        // error, not a deadline-long hang
+        let err = server.query(3, 2).unwrap_err();
+        assert_eq!(err, ServeError::EnginePanicked("synthetic solver fault #1".into()));
+        // the worker survived the panic and keeps serving
+        let resp = server.query(5, 2).unwrap();
+        assert_eq!(resp.vertex, 5);
+        assert!(!resp.degraded, "single-graph recovery is not a degraded answer");
+        let snap = server.stats().snapshot();
+        assert_eq!(snap.panics, 1);
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.requests, 1);
+        let health = server.worker_health();
+        assert_eq!(health.live, 1);
+        assert_eq!(health.total, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn registry_panic_degrades_to_narrower_class() {
+        use crate::fault::{FaultConfig, FaultPlan};
+        let registry = Arc::new(GraphRegistry::new(4));
+        registry
+            .register_graph("ws", crate::graph::generators::watts_strogatz(256, 8, 0.2, 42))
+            .unwrap();
+        // panic on exactly the first solve; the degraded retry (and all
+        // later traffic) runs clean
+        let fault = FaultPlan::new(FaultConfig {
+            panic_rate: 1.0,
+            active: Some((0, 1)),
+            ..Default::default()
+        });
+        let server = EngineBuilder::native()
+            .config(test_config(4))
+            .fault(Some(fault))
+            .serve_registry(registry, 1)
+            .expect("registry server");
+        let resp = server.query_class(7, 3, AccuracyClass::Exact).unwrap();
+        assert_eq!(resp.vertex, 7);
+        assert_eq!(resp.ranking[0].vertex, 7);
+        assert!(resp.degraded, "retry on the narrower class must be flagged");
+        let snap = server.stats().snapshot();
+        assert_eq!(snap.panics, 1);
+        assert_eq!(snap.degraded, 1);
+        assert_eq!(snap.requests, 1);
+        // follow-up traffic is healthy and undegraded
+        let resp = server.query_class(9, 3, AccuracyClass::Exact).unwrap();
+        assert!(!resp.degraded);
+        server.shutdown();
+    }
+
+    #[test]
+    fn watchdog_respawns_killed_worker_and_fails_batch_promptly() {
+        use crate::fault::{FaultConfig, FaultPlan};
+        let registry = Arc::new(GraphRegistry::new(4));
+        registry
+            .register_graph("ws", crate::graph::generators::watts_strogatz(256, 8, 0.2, 42))
+            .unwrap();
+        // kill the worker thread on its first batch claim — outside the
+        // engine containment boundary, so only BatchGuard + watchdog can
+        // save the requests and the capacity
+        let fault = FaultPlan::new(FaultConfig {
+            worker_kill_rate: 1.0,
+            active: Some((0, 1)),
+            ..Default::default()
+        });
+        let server = EngineBuilder::native()
+            .config(test_config(4))
+            .fault(Some(fault))
+            .serve_registry(registry, 1)
+            .expect("registry server");
+        let sw = crate::util::Stopwatch::start();
+        let err = server
+            .submit_with(3, 2, Some(Duration::from_secs(30)))
+            .wait()
+            .unwrap_err();
+        assert_eq!(err, ServeError::WorkerDied);
+        assert!(sw.millis() < 5_000.0, "guard must fail fast, not wait out the deadline");
+        // the watchdog respawns the worker; the next query succeeds
+        let gate = Instant::now() + Duration::from_secs(10);
+        loop {
+            let h = server.worker_health();
+            if h.live == h.total && h.respawns >= 1 {
+                break;
+            }
+            assert!(Instant::now() < gate, "worker never respawned: {h:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let resp = server.query(5, 2).unwrap();
+        assert_eq!(resp.vertex, 5);
+        let snap = server.stats().snapshot();
+        assert!(snap.respawns >= 1, "respawn must be counted: {snap:?}");
+        server.shutdown();
     }
 
     #[test]

@@ -28,6 +28,9 @@ struct Inner {
     batch_fill_sum: u64,
     errors: u64,
     deadline_misses: u64,
+    panics: u64,
+    degraded: u64,
+    respawns: u64,
     latency: Histogram,
     queue: Histogram,
 }
@@ -85,6 +88,13 @@ pub struct StatsSnapshot {
     pub errors: u64,
     /// Requests that expired in the queue (per-request deadlines).
     pub deadline_misses: u64,
+    /// Engine panics contained at the batch boundary (DESIGN.md §10).
+    pub panics: u64,
+    /// Requests answered by a degraded retry (narrower class or
+    /// CPU-baseline fallback).
+    pub degraded: u64,
+    /// Dead workers respawned by the watchdog.
+    pub respawns: u64,
     /// Total-latency percentiles (milliseconds).
     pub latency_p50_ms: f64,
     /// p95 latency (ms).
@@ -126,6 +136,21 @@ impl ServerStats {
         self.inner.lock().unwrap().deadline_misses += 1;
     }
 
+    /// Record an engine panic contained at the batch boundary.
+    pub fn record_panic(&self) {
+        self.inner.lock().unwrap().panics += 1;
+    }
+
+    /// Record a request served by a degraded retry.
+    pub fn record_degraded(&self) {
+        self.inner.lock().unwrap().degraded += 1;
+    }
+
+    /// Record a watchdog worker respawn.
+    pub fn record_respawn(&self) {
+        self.inner.lock().unwrap().respawns += 1;
+    }
+
     /// Snapshot all counters atomically (one lock acquisition, so the
     /// returned fields are mutually consistent).
     pub fn snapshot(&self) -> StatsSnapshot {
@@ -140,6 +165,9 @@ impl ServerStats {
             },
             errors: inner.errors,
             deadline_misses: inner.deadline_misses,
+            panics: inner.panics,
+            degraded: inner.degraded,
+            respawns: inner.respawns,
             latency_p50_ms: inner.latency.quantile_us(0.50) / 1e3,
             latency_p95_ms: inner.latency.quantile_us(0.95) / 1e3,
             latency_p99_ms: inner.latency.quantile_us(0.99) / 1e3,

@@ -1,0 +1,414 @@
+//! Deterministic fault injection for the serving stack (DESIGN.md §10).
+//!
+//! A [`FaultPlan`] is a seeded, shared schedule of failures — engine
+//! panics, slow solves, spurious solve errors, worker kills, reload/build
+//! failures — injected at fixed hook points in the serving path:
+//!
+//! - [`FaultPlan::before_solve`] fires **inside** the worker's
+//!   `catch_unwind` containment boundary, so an injected panic exercises
+//!   exactly the production unwind path (typed error to the clients,
+//!   worker survives, degradation ladder engages);
+//! - [`FaultPlan::before_claim`] fires **outside** the boundary, killing
+//!   the worker thread itself — only the batch guard and the watchdog can
+//!   save the in-flight requests and the pool's capacity;
+//! - [`FaultPlan::on_build`] fails engine resolution/rebuild, modelling a
+//!   reload that lands a graph the builder cannot prepare.
+//!
+//! Determinism: all randomness flows through one seeded
+//! [`Xoshiro256`](crate::util::Xoshiro256) behind a mutex, and each hook
+//! keeps its own monotone tick counter, so a given
+//! `(seed, rates, traffic order)` replays the same faults. The plan is
+//! carried as an `Option<Arc<FaultPlan>>` through the server config; the
+//! production default (`None`) costs one `Option` check per batch.
+//!
+//! Configured by the `[fault]` config section or `--fault-*` CLI flags;
+//! the chaos bench (`bench_harness::chaos`) toggles a plan's
+//! [`enable`](FaultPlan::enable)/[`disable`](FaultPlan::disable) latch to
+//! frame fault bursts between clean phases.
+
+use crate::config::ConfigDoc;
+use crate::util::Xoshiro256;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Rates and shape of the injected faults (the `[fault]` config section).
+///
+/// ```toml
+/// [fault]
+/// seed = 7                 # rng seed (deterministic replay)
+/// panic_rate = 0.05        # P(engine panic) per solve
+/// error_rate = 0.0         # P(spurious solve error) per solve
+/// slow_rate = 0.0          # P(injected stall) per solve
+/// slow_ms = 20             # stall duration
+/// worker_kill_rate = 0.0   # P(worker-thread kill) per batch claim
+/// reload_fail_rate = 0.0   # P(build failure) per engine resolve
+/// active_from = 0          # optional window: first affected tick...
+/// active_ticks = 100       # ...and how many ticks it spans
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Seed for the plan's private rng stream.
+    pub seed: u64,
+    /// Probability an engine solve panics.
+    pub panic_rate: f64,
+    /// Probability an engine solve returns a spurious error.
+    pub error_rate: f64,
+    /// Probability an engine solve is stalled by `slow_ms`.
+    pub slow_rate: f64,
+    /// Injected stall duration (milliseconds).
+    pub slow_ms: u64,
+    /// Probability a batch claim kills the worker thread outright.
+    pub worker_kill_rate: f64,
+    /// Probability an engine resolve/build fails.
+    pub reload_fail_rate: f64,
+    /// Optional `(start, count)` window, in per-hook ticks: faults fire
+    /// only on ticks in `[start, start + count)`. `None` — always armed.
+    pub active: Option<(u64, u64)>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0xFA_017,
+            panic_rate: 0.0,
+            error_rate: 0.0,
+            slow_rate: 0.0,
+            slow_ms: 20,
+            worker_kill_rate: 0.0,
+            reload_fail_rate: 0.0,
+            active: None,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Extract the `[fault]` section from a parsed document. Returns
+    /// `Ok(None)` when the document has no fault keys at all, so plain
+    /// configs keep the zero-cost `None` plan.
+    pub fn from_doc(doc: &ConfigDoc) -> Result<Option<FaultConfig>> {
+        let keys = [
+            "seed",
+            "panic_rate",
+            "error_rate",
+            "slow_rate",
+            "slow_ms",
+            "worker_kill_rate",
+            "reload_fail_rate",
+            "active_from",
+            "active_ticks",
+        ];
+        if keys.iter().all(|k| doc.get("fault", k).is_none()) {
+            return Ok(None);
+        }
+        let mut cfg = FaultConfig::default();
+        if let Some(v) = doc.get("fault", "seed") {
+            cfg.seed = v.as_int()? as u64;
+        }
+        if let Some(v) = doc.get("fault", "panic_rate") {
+            cfg.panic_rate = v.as_float()?;
+        }
+        if let Some(v) = doc.get("fault", "error_rate") {
+            cfg.error_rate = v.as_float()?;
+        }
+        if let Some(v) = doc.get("fault", "slow_rate") {
+            cfg.slow_rate = v.as_float()?;
+        }
+        if let Some(v) = doc.get("fault", "slow_ms") {
+            cfg.slow_ms = v.as_int()? as u64;
+        }
+        if let Some(v) = doc.get("fault", "worker_kill_rate") {
+            cfg.worker_kill_rate = v.as_float()?;
+        }
+        if let Some(v) = doc.get("fault", "reload_fail_rate") {
+            cfg.reload_fail_rate = v.as_float()?;
+        }
+        let from = doc.get("fault", "active_from").map(|v| v.as_int()).transpose()?;
+        let ticks = doc.get("fault", "active_ticks").map(|v| v.as_int()).transpose()?;
+        match (from, ticks) {
+            (None, None) => {}
+            (f, t) => {
+                let f = f.unwrap_or(0);
+                let t = t.unwrap_or(i64::MAX);
+                if f < 0 || t < 1 {
+                    bail!("fault.active_from must be >= 0 and fault.active_ticks >= 1");
+                }
+                cfg.active = Some((f as u64, t as u64));
+            }
+        }
+        cfg.validate()?;
+        Ok(Some(cfg))
+    }
+
+    /// Check rate sanity: probabilities in `[0, 1]`.
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("panic_rate", self.panic_rate),
+            ("error_rate", self.error_rate),
+            ("slow_rate", self.slow_rate),
+            ("worker_kill_rate", self.worker_kill_rate),
+            ("reload_fail_rate", self.reload_fail_rate),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("fault.{name} must be in [0,1], got {p}");
+            }
+        }
+        Ok(())
+    }
+
+    /// True when any fault can ever fire.
+    pub fn any_rate(&self) -> bool {
+        self.panic_rate > 0.0
+            || self.error_rate > 0.0
+            || self.slow_rate > 0.0
+            || self.worker_kill_rate > 0.0
+            || self.reload_fail_rate > 0.0
+    }
+}
+
+/// Count of faults actually injected, per kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultCounters {
+    /// Engine panics injected inside the solve boundary.
+    pub panics: u64,
+    /// Spurious solve errors injected.
+    pub errors: u64,
+    /// Solves stalled by `slow_ms`.
+    pub slows: u64,
+    /// Worker threads killed at batch claim.
+    pub kills: u64,
+    /// Engine resolve/build failures injected.
+    pub build_failures: u64,
+}
+
+/// A live, shared fault schedule (see module docs). Create with
+/// [`FaultPlan::new`], hand the `Arc` to
+/// [`EngineBuilder::fault`](crate::coordinator::EngineBuilder::fault) or
+/// [`ServerConfig`](crate::coordinator::ServerConfig), keep a clone to
+/// toggle and observe.
+#[derive(Debug)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    rng: Mutex<Xoshiro256>,
+    /// Master latch: a disabled plan injects nothing (and does not
+    /// advance its tick counters), letting a bench frame fault bursts.
+    enabled: AtomicBool,
+    solve_ticks: AtomicU64,
+    claim_ticks: AtomicU64,
+    build_ticks: AtomicU64,
+    injected_panics: AtomicU64,
+    injected_errors: AtomicU64,
+    injected_slows: AtomicU64,
+    injected_kills: AtomicU64,
+    injected_build_failures: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Build an enabled plan from `cfg`.
+    pub fn new(cfg: FaultConfig) -> Arc<Self> {
+        let rng = Mutex::new(Xoshiro256::seeded(cfg.seed));
+        Arc::new(Self {
+            cfg,
+            rng,
+            enabled: AtomicBool::new(true),
+            solve_ticks: AtomicU64::new(0),
+            claim_ticks: AtomicU64::new(0),
+            build_ticks: AtomicU64::new(0),
+            injected_panics: AtomicU64::new(0),
+            injected_errors: AtomicU64::new(0),
+            injected_slows: AtomicU64::new(0),
+            injected_kills: AtomicU64::new(0),
+            injected_build_failures: AtomicU64::new(0),
+        })
+    }
+
+    /// The configuration this plan runs.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Arm the plan.
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Release);
+    }
+
+    /// Disarm the plan (hooks become no-ops).
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::Release);
+    }
+
+    /// Whether the plan is currently armed.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Acquire)
+    }
+
+    fn in_window(&self, tick: u64) -> bool {
+        match self.cfg.active {
+            None => true,
+            Some((start, count)) => tick >= start && tick - start < count,
+        }
+    }
+
+    fn roll(&self, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        self.rng.lock().unwrap().next_bool(p)
+    }
+
+    /// Solve-path hook, called **inside** the worker's `catch_unwind`
+    /// boundary. May stall, return a spurious error, or panic.
+    pub fn before_solve(&self) -> std::result::Result<(), String> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        let tick = self.solve_ticks.fetch_add(1, Ordering::Relaxed);
+        if !self.in_window(tick) {
+            return Ok(());
+        }
+        if self.roll(self.cfg.slow_rate) {
+            self.injected_slows.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(self.cfg.slow_ms));
+        }
+        if self.roll(self.cfg.error_rate) {
+            self.injected_errors.fetch_add(1, Ordering::Relaxed);
+            return Err(format!("injected fault: spurious solve error (solve {tick})"));
+        }
+        if self.roll(self.cfg.panic_rate) {
+            self.injected_panics.fetch_add(1, Ordering::Relaxed);
+            panic!("injected fault: engine panic (solve {tick})");
+        }
+        Ok(())
+    }
+
+    /// Batch-claim hook, called **outside** the containment boundary: a
+    /// fired kill panics the worker thread itself, exercising the batch
+    /// guard and the watchdog respawn path.
+    pub fn before_claim(&self) {
+        if !self.enabled() || self.cfg.worker_kill_rate <= 0.0 {
+            return;
+        }
+        let tick = self.claim_ticks.fetch_add(1, Ordering::Relaxed);
+        if !self.in_window(tick) {
+            return;
+        }
+        if self.roll(self.cfg.worker_kill_rate) {
+            self.injected_kills.fetch_add(1, Ordering::Relaxed);
+            panic!("injected fault: worker kill (claim {tick})");
+        }
+    }
+
+    /// Engine-resolution hook: a fired failure models a reload/build that
+    /// cannot be prepared.
+    pub fn on_build(&self) -> std::result::Result<(), String> {
+        if !self.enabled() || self.cfg.reload_fail_rate <= 0.0 {
+            return Ok(());
+        }
+        let tick = self.build_ticks.fetch_add(1, Ordering::Relaxed);
+        if !self.in_window(tick) {
+            return Ok(());
+        }
+        if self.roll(self.cfg.reload_fail_rate) {
+            self.injected_build_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(format!("injected fault: reload failure (build {tick})"));
+        }
+        Ok(())
+    }
+
+    /// Snapshot of the faults injected so far.
+    pub fn counters(&self) -> FaultCounters {
+        FaultCounters {
+            panics: self.injected_panics.load(Ordering::Relaxed),
+            errors: self.injected_errors.load(Ordering::Relaxed),
+            slows: self.injected_slows.load(Ordering::Relaxed),
+            kills: self.injected_kills.load(Ordering::Relaxed),
+            build_failures: self.injected_build_failures.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_inert_and_valid() {
+        let cfg = FaultConfig::default();
+        cfg.validate().unwrap();
+        assert!(!cfg.any_rate());
+        let plan = FaultPlan::new(cfg);
+        for _ in 0..32 {
+            assert!(plan.before_solve().is_ok());
+            plan.before_claim();
+            assert!(plan.on_build().is_ok());
+        }
+        assert_eq!(plan.counters(), FaultCounters::default());
+    }
+
+    #[test]
+    fn from_doc_absent_section_is_none() {
+        let doc = ConfigDoc::parse("[engine]\nkappa = 8\n").unwrap();
+        assert_eq!(FaultConfig::from_doc(&doc).unwrap(), None);
+    }
+
+    #[test]
+    fn from_doc_parses_and_validates() {
+        let doc = ConfigDoc::parse(
+            "[fault]\nseed = 7\npanic_rate = 0.25\nslow_ms = 5\nactive_from = 2\nactive_ticks = 10\n",
+        )
+        .unwrap();
+        let cfg = FaultConfig::from_doc(&doc).unwrap().unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.panic_rate, 0.25);
+        assert_eq!(cfg.slow_ms, 5);
+        assert_eq!(cfg.active, Some((2, 10)));
+
+        let bad = ConfigDoc::parse("[fault]\npanic_rate = 1.5\n").unwrap();
+        assert!(FaultConfig::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn deterministic_replay_across_plans() {
+        let cfg = FaultConfig { seed: 99, error_rate: 0.5, ..Default::default() };
+        let a = FaultPlan::new(cfg.clone());
+        let b = FaultPlan::new(cfg);
+        let fire_a: Vec<bool> = (0..64).map(|_| a.before_solve().is_err()).collect();
+        let fire_b: Vec<bool> = (0..64).map(|_| b.before_solve().is_err()).collect();
+        assert_eq!(fire_a, fire_b, "same seed must replay the same schedule");
+        assert!(fire_a.iter().any(|&f| f), "a 50% rate over 64 ticks fires");
+        assert_eq!(a.counters().errors, fire_a.iter().filter(|&&f| f).count() as u64);
+    }
+
+    #[test]
+    fn window_bounds_injection() {
+        let cfg = FaultConfig {
+            error_rate: 1.0,
+            active: Some((2, 3)),
+            ..Default::default()
+        };
+        let plan = FaultPlan::new(cfg);
+        let fired: Vec<bool> = (0..8).map(|_| plan.before_solve().is_err()).collect();
+        assert_eq!(fired, vec![false, false, true, true, true, false, false, false]);
+    }
+
+    #[test]
+    fn disable_latch_stops_injection_without_advancing_ticks() {
+        let cfg = FaultConfig { error_rate: 1.0, ..Default::default() };
+        let plan = FaultPlan::new(cfg);
+        assert!(plan.before_solve().is_err());
+        plan.disable();
+        assert!(!plan.enabled());
+        assert!(plan.before_solve().is_ok());
+        plan.enable();
+        assert!(plan.before_solve().is_err());
+        assert_eq!(plan.counters().errors, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "injected fault: engine panic")]
+    fn panic_rate_panics() {
+        let plan = FaultPlan::new(FaultConfig { panic_rate: 1.0, ..Default::default() });
+        let _ = plan.before_solve();
+    }
+}

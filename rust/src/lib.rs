@@ -23,6 +23,7 @@ pub mod bench_harness;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod fault;
 pub mod fixed;
 pub mod fpga;
 pub mod graph;

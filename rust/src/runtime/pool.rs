@@ -68,6 +68,10 @@ struct Shared {
     queue: Mutex<VecDeque<Task>>,
     task_ready: Condvar,
     shutdown: AtomicBool,
+    /// Panics swallowed from detached [`WorkerPool::submit`] tasks — a
+    /// crashing connection handler is survived, but never silently:
+    /// `/metrics` exports this count (DESIGN.md §10).
+    caught_panics: AtomicUsize,
 }
 
 /// What a panicking task leaves behind for the caller to re-throw.
@@ -153,6 +157,7 @@ impl WorkerPool {
                 queue: Mutex::new(VecDeque::new()),
                 task_ready: Condvar::new(),
                 shutdown: AtomicBool::new(false),
+                caught_panics: AtomicUsize::new(0),
             }),
             max_workers,
             spawned: AtomicUsize::new(0),
@@ -170,6 +175,11 @@ impl WorkerPool {
     /// Maximum worker threads this pool may spawn.
     pub fn max_workers(&self) -> usize {
         self.max_workers
+    }
+
+    /// Panics swallowed from detached [`Self::submit`] tasks so far.
+    pub fn caught_panics(&self) -> usize {
+        self.shared.caught_panics.load(Ordering::Relaxed)
     }
 
     /// Spawn every worker up front (tests use this to make the spawn
@@ -303,9 +313,13 @@ impl WorkerPool {
     /// after the pool started dropping may be discarded without running.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         // swallow unwinds here so a panicking detached task can never kill
-        // a worker (worker_loop relies on tasks not unwinding)
+        // a worker (worker_loop relies on tasks not unwinding) — but count
+        // them, so crashed handlers are visible on /metrics
+        let shared = self.shared.clone();
         let task: Task = Box::new(move || {
-            let _ = std::panic::catch_unwind(AssertUnwindSafe(f));
+            if std::panic::catch_unwind(AssertUnwindSafe(f)).is_err() {
+                shared.caught_panics.fetch_add(1, Ordering::Relaxed);
+            }
         });
         if self.max_workers == 0 {
             // degenerate pool: run inline rather than queueing forever
@@ -490,6 +504,12 @@ mod tests {
         }
         // fan_out still works on the same pool afterwards
         assert_eq!(pool.fan_out(vec![1, 2], false, |i| i * 2), vec![2, 4]);
+        // the swallowed panic is counted, not silent (poll: the panicking
+        // task may still be unwinding on a sibling worker)
+        while pool.caught_panics() != 1 {
+            assert!(std::time::Instant::now() < deadline, "caught panic never counted");
+            std::thread::yield_now();
+        }
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! Per-`(graph, class)` circuit breaker (DESIGN.md §10).
+//!
+//! Classic three-state machine over a sliding window of solve outcomes:
+//!
+//! - **Closed** — traffic flows; outcomes land in a bounded window. When
+//!   the window holds at least `min_samples` outcomes and the failure
+//!   fraction reaches `failure_rate`, the breaker opens.
+//! - **Open** — requests fast-fail with 503 + `Retry-After` (no queue
+//!   slot, no engine lane) until `open_ms` elapses.
+//! - **HalfOpen** — up to `half_open_probes` requests are admitted as
+//!   probes; that many consecutive successes close the breaker (counting
+//!   one full open → half-open → closed **cycle**), any failure re-opens
+//!   it.
+//!
+//! Only *fault* outcomes (engine failures, panics, dead workers —
+//! [`ServeError::is_fault`](crate::coordinator::ServeError::is_fault))
+//! trip the breaker; deadline misses and validation rejections are the
+//! client's problem, not the backend's. The keyed granularity means a
+//! graph whose engine is melting down fast-fails alone — other graphs
+//! (and other accuracy classes of the same graph, which run on different
+//! engines) keep serving.
+
+use crate::fixed::AccuracyClass;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Breaker tuning knobs (from the `[serve]` config section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BreakerConfig {
+    /// Sliding-window size, in observed outcomes.
+    pub window: usize,
+    /// Failure fraction that trips a closed breaker.
+    pub failure_rate: f64,
+    /// Minimum outcomes in the window before the rate is trusted.
+    pub min_samples: usize,
+    /// How long an open breaker fast-fails before probing.
+    pub open_for: Duration,
+    /// Consecutive half-open successes required to close.
+    pub half_open_probes: usize,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self {
+            window: 32,
+            failure_rate: 0.5,
+            min_samples: 8,
+            open_for: Duration::from_millis(250),
+            half_open_probes: 2,
+        }
+    }
+}
+
+impl BreakerConfig {
+    /// Lift the breaker knobs out of a full serve configuration.
+    pub fn from_serve(cfg: &crate::config::ServeConfig) -> Self {
+        Self {
+            window: cfg.breaker_window,
+            failure_rate: cfg.breaker_failure_rate,
+            min_samples: cfg.breaker_min_samples,
+            open_for: Duration::from_millis(cfg.breaker_open_ms),
+            half_open_probes: cfg.breaker_half_open_probes,
+        }
+    }
+}
+
+/// Observable state of one breaker entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Traffic flows, outcomes are being watched.
+    Closed,
+    /// Fast-failing; holds until the open interval elapses.
+    Open,
+    /// Probing with limited admissions.
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Numeric encoding for the metrics gauge (0/1/2).
+    pub fn as_gauge(&self) -> u64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum EntryState {
+    Closed,
+    Open { until: Instant },
+    HalfOpen { in_flight: usize, successes: usize },
+}
+
+#[derive(Debug)]
+struct Entry {
+    state: EntryState,
+    /// Sliding outcome window (true = failure), closed state only.
+    window: VecDeque<bool>,
+}
+
+impl Entry {
+    fn new() -> Self {
+        Self { state: EntryState::Closed, window: VecDeque::new() }
+    }
+}
+
+/// The breaker table: one entry per `(graph, class)` seen.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    inner: Mutex<HashMap<(Arc<str>, AccuracyClass), Entry>>,
+    /// Closed → open trips.
+    opens: AtomicU64,
+    /// Completed open → half-open → closed cycles.
+    cycles: AtomicU64,
+}
+
+impl CircuitBreaker {
+    /// Empty table under `cfg`.
+    pub fn new(cfg: BreakerConfig) -> Self {
+        Self {
+            cfg,
+            inner: Mutex::new(HashMap::new()),
+            opens: AtomicU64::new(0),
+            cycles: AtomicU64::new(0),
+        }
+    }
+
+    /// Admission check for one request. `Ok(())` admits (and, in
+    /// half-open, reserves a probe slot); `Err(retry_after)` fast-fails
+    /// with the remaining hold time.
+    pub fn check(&self, graph: &Arc<str>, class: AccuracyClass) -> Result<(), Duration> {
+        let mut map = self.inner.lock().unwrap();
+        let Some(entry) = map.get_mut(&(graph.clone(), class)) else {
+            return Ok(()); // no history → closed
+        };
+        match &mut entry.state {
+            EntryState::Closed => Ok(()),
+            EntryState::Open { until } => {
+                let now = Instant::now();
+                if now < *until {
+                    Err(*until - now)
+                } else {
+                    entry.state = EntryState::HalfOpen { in_flight: 1, successes: 0 };
+                    Ok(())
+                }
+            }
+            EntryState::HalfOpen { in_flight, .. } => {
+                if *in_flight < self.cfg.half_open_probes {
+                    *in_flight += 1;
+                    Ok(())
+                } else {
+                    // probes are out; hold the rest back briefly
+                    Err(self.cfg.open_for)
+                }
+            }
+        }
+    }
+
+    /// Record the outcome of an admitted request (`failure` = a backend
+    /// fault, not a client error).
+    pub fn record(&self, graph: &Arc<str>, class: AccuracyClass, failure: bool) {
+        let mut map = self.inner.lock().unwrap();
+        let entry = map.entry((graph.clone(), class)).or_insert_with(Entry::new);
+        match &mut entry.state {
+            EntryState::Closed => {
+                entry.window.push_back(failure);
+                while entry.window.len() > self.cfg.window {
+                    entry.window.pop_front();
+                }
+                if entry.window.len() >= self.cfg.min_samples {
+                    let fails = entry.window.iter().filter(|&&f| f).count();
+                    if fails as f64 >= self.cfg.failure_rate * entry.window.len() as f64 {
+                        entry.state =
+                            EntryState::Open { until: Instant::now() + self.cfg.open_for };
+                        entry.window.clear();
+                        self.opens.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            EntryState::Open { .. } => {
+                // a straggler finishing after the trip: no state change
+            }
+            EntryState::HalfOpen { in_flight, successes } => {
+                if failure {
+                    entry.state =
+                        EntryState::Open { until: Instant::now() + self.cfg.open_for };
+                    self.opens.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    *successes += 1;
+                    *in_flight = in_flight.saturating_sub(1);
+                    if *successes >= self.cfg.half_open_probes {
+                        entry.state = EntryState::Closed;
+                        self.cycles.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Closed → open transitions so far.
+    pub fn opens(&self) -> u64 {
+        self.opens.load(Ordering::Relaxed)
+    }
+
+    /// Completed open → half-open → closed recovery cycles so far.
+    pub fn cycles(&self) -> u64 {
+        self.cycles.load(Ordering::Relaxed)
+    }
+
+    /// Current state per `(graph, class)`, for the metrics exposition.
+    pub fn states(&self) -> Vec<(Arc<str>, AccuracyClass, BreakerState)> {
+        let map = self.inner.lock().unwrap();
+        let mut out: Vec<_> = map
+            .iter()
+            .map(|((g, c), e)| {
+                let state = match e.state {
+                    EntryState::Closed => BreakerState::Closed,
+                    EntryState::Open { until } => {
+                        // report what a check() would do, so the gauge
+                        // never shows "open" past the hold interval
+                        if Instant::now() < until {
+                            BreakerState::Open
+                        } else {
+                            BreakerState::HalfOpen
+                        }
+                    }
+                    EntryState::HalfOpen { .. } => BreakerState::HalfOpen,
+                };
+                (g.clone(), *c, state)
+            })
+            .collect();
+        out.sort_by(|a, b| (a.0.as_ref(), a.1.label()).cmp(&(b.0.as_ref(), b.1.label())));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> Arc<str> {
+        Arc::from("g")
+    }
+
+    fn quick_cfg() -> BreakerConfig {
+        BreakerConfig {
+            window: 8,
+            failure_rate: 0.5,
+            min_samples: 4,
+            open_for: Duration::from_millis(30),
+            half_open_probes: 2,
+        }
+    }
+
+    #[test]
+    fn stays_closed_under_healthy_traffic() {
+        let b = CircuitBreaker::new(quick_cfg());
+        let g = key();
+        for _ in 0..64 {
+            assert!(b.check(&g, AccuracyClass::Exact).is_ok());
+            b.record(&g, AccuracyClass::Exact, false);
+        }
+        assert_eq!(b.opens(), 0);
+        assert_eq!(b.states()[0].2, BreakerState::Closed);
+    }
+
+    #[test]
+    fn opens_on_failure_rate_and_isolates_key() {
+        let b = CircuitBreaker::new(quick_cfg());
+        let g = key();
+        for _ in 0..4 {
+            b.record(&g, AccuracyClass::Exact, true);
+        }
+        assert_eq!(b.opens(), 1);
+        let err = b.check(&g, AccuracyClass::Exact).unwrap_err();
+        assert!(err <= Duration::from_millis(30));
+        // other classes and graphs are unaffected
+        assert!(b.check(&g, AccuracyClass::Fast).is_ok());
+        assert!(b.check(&Arc::from("other"), AccuracyClass::Exact).is_ok());
+    }
+
+    #[test]
+    fn full_cycle_open_half_open_closed() {
+        let b = CircuitBreaker::new(quick_cfg());
+        let g = key();
+        for _ in 0..4 {
+            b.record(&g, AccuracyClass::Exact, true);
+        }
+        assert!(b.check(&g, AccuracyClass::Exact).is_err(), "open fast-fails");
+        std::thread::sleep(Duration::from_millis(35));
+        // hold expired: probes are admitted, up to the configured count
+        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
+        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
+        assert!(b.check(&g, AccuracyClass::Exact).is_err(), "probe budget spent");
+        b.record(&g, AccuracyClass::Exact, false);
+        b.record(&g, AccuracyClass::Exact, false);
+        assert_eq!(b.cycles(), 1, "two probe successes close the breaker");
+        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
+        assert_eq!(b.states()[0].2, BreakerState::Closed);
+    }
+
+    #[test]
+    fn half_open_failure_reopens() {
+        let b = CircuitBreaker::new(quick_cfg());
+        let g = key();
+        for _ in 0..4 {
+            b.record(&g, AccuracyClass::Exact, true);
+        }
+        std::thread::sleep(Duration::from_millis(35));
+        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
+        b.record(&g, AccuracyClass::Exact, true);
+        assert_eq!(b.opens(), 2, "probe failure re-opens");
+        assert!(b.check(&g, AccuracyClass::Exact).is_err());
+        assert_eq!(b.cycles(), 0);
+    }
+
+    #[test]
+    fn window_slides_old_failures_out() {
+        let b = CircuitBreaker::new(quick_cfg());
+        let g = key();
+        // 3 failures, then a steady stream of successes: the failures age
+        // out of the 8-deep window before min_samples worth of rate can
+        // trip anything
+        for _ in 0..3 {
+            b.record(&g, AccuracyClass::Exact, true);
+        }
+        for _ in 0..16 {
+            b.record(&g, AccuracyClass::Exact, false);
+        }
+        assert_eq!(b.opens(), 0);
+    }
+}

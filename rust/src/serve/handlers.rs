@@ -12,14 +12,16 @@
 //!
 //! Status mapping: malformed bodies and invalid query parameters → 400;
 //! unknown graphs/tickets → 404; admission shed → 429 with `Retry-After`;
-//! deadline misses → 504; engine/transport faults → 500. The mapping
-//! leans on `coordinator::request::validate_query` and the typed
-//! [`QueryError`], so the HTTP layer and the in-process API reject the
-//! same inputs identically.
+//! open circuit breaker → 503 with `Retry-After`; deadline misses → 504;
+//! engine/transport faults → 500. Serving-core failures arrive as the
+//! typed [`ServeError`] and map through [`ServeError::status`] — no
+//! string matching — so the HTTP layer and the in-process API agree on
+//! every rejection.
 
 use super::http::{Request, Response};
+use super::prom::CoreHealth;
 use super::state::{PollOutcome, ServeState};
-use crate::coordinator::request::{validate_query, PprResponse};
+use crate::coordinator::request::{validate_query, PprResponse, ServeError};
 use crate::coordinator::server::Ticket;
 use crate::graph::VertexId;
 use crate::util::json::{self, Json};
@@ -60,7 +62,21 @@ fn healthz(state: &ServeState) -> Response {
 
 fn metrics(state: &ServeState) -> Response {
     let depths = state.admission.snapshot();
-    let text = state.metrics.render(&depths);
+    let snap = state.server.stats().snapshot();
+    let health = state.server.worker_health();
+    let core = CoreHealth {
+        workers_live: health.live as u64,
+        workers_total: health.total as u64,
+        worker_respawns: health.respawns,
+        stuck_batch_age_seconds: health.oldest_batch_age.as_secs_f64(),
+        engine_panics: snap.panics,
+        degraded_responses: snap.degraded,
+        pool_caught_panics: crate::runtime::pool::global().caught_panics() as u64,
+        breaker_states: state.breaker.states(),
+        breaker_opens: state.breaker.opens(),
+        breaker_cycles: state.breaker.cycles(),
+    };
+    let text = state.metrics.render_with(&depths, &core);
     Response::text(200, "text/plain; version=0.0.4", text)
 }
 
@@ -149,19 +165,6 @@ fn parse_body(body: &[u8]) -> Result<QueryBody, String> {
     Ok(QueryBody { vertices, top_n, class, deadline_ms })
 }
 
-/// Map a serving-core error string onto the HTTP status taxonomy.
-fn core_error_status(msg: &str) -> u16 {
-    if msg.contains("deadline") {
-        504
-    } else if msg.contains("unknown graph") {
-        404
-    } else if msg.contains("out of range") {
-        400
-    } else {
-        500
-    }
-}
-
 fn render_result(resp: &PprResponse) -> Json {
     let ranking: Vec<Json> = resp
         .ranking
@@ -173,14 +176,20 @@ fn render_result(resp: &PprResponse) -> Json {
             ])
         })
         .collect();
-    json::obj(vec![
+    let mut fields = vec![
         ("vertex", json::num(f64::from(resp.vertex))),
         ("ranking", Json::Arr(ranking)),
         ("iterations", json::num(resp.iterations as f64)),
         ("escalations", json::num(resp.escalations as f64)),
         ("queue_ms", json::num(resp.queue_time.as_secs_f64() * 1e3)),
         ("total_ms", json::num(resp.total_time.as_secs_f64() * 1e3)),
-    ])
+    ];
+    // only serialized when set, so fault-free responses stay byte-identical
+    // to servers without the degradation policy
+    if resp.degraded {
+        fields.push(("degraded", Json::Bool(true)));
+    }
+    json::obj(fields)
 }
 
 /// Shared implementation of `query` (sync, waits) and `submit` (async,
@@ -218,6 +227,16 @@ fn query(state: &ServeState, graph: &str, req: &Request, is_submit: bool) -> Res
         return finish(label, 0, Response::error(400, msg));
     }
 
+    // circuit breaker: an open breaker fast-fails before a queue slot or
+    // engine lane is spent on a backend that is known to be failing
+    if let Err(retry) = state.breaker.check(&key, class) {
+        let retry_ms = retry.as_millis() as u64;
+        let err = ServeError::BreakerOpen { retry_after_ms: retry_ms };
+        let resp = Response::error(err.status(), &err.to_string())
+            .with_header("retry-after", format_retry_after(retry_ms));
+        return finish(label, 0, resp);
+    }
+
     // admission: one slot per HTTP request, released when the guard drops
     let guard = match state.admission.try_admit(graph, class) {
         Ok(g) => g,
@@ -251,13 +270,16 @@ fn query(state: &ServeState, graph: &str, req: &Request, is_submit: bool) -> Res
     for ticket in tickets {
         match ticket.wait() {
             Ok(resp) => {
+                state.breaker.record(&key, class, false);
                 escalations += resp.escalations as u64;
                 results.push(render_result(&resp));
             }
-            Err(msg) => {
-                let status = core_error_status(&msg);
+            Err(err) => {
+                // only backend faults feed the breaker; deadline misses
+                // and validation rejections are the client's problem
+                state.breaker.record(&key, class, err.is_fault());
                 drop(guard);
-                return finish(label, escalations, Response::error(status, &msg));
+                return finish(label, escalations, Response::error(err.status(), &err.to_string()));
             }
         }
     }
@@ -290,6 +312,7 @@ fn poll_ticket(state: &ServeState, id: &str) -> Response {
             ]),
         ),
         PollOutcome::Done(Ok(resp)) => {
+            state.breaker.record(&resp.graph, resp.class, false);
             state.metrics.record(
                 resp.graph.as_ref(),
                 resp.class.label(),
@@ -305,13 +328,14 @@ fn poll_ticket(state: &ServeState, id: &str) -> Response {
                 ]),
             )
         }
-        PollOutcome::Done(Err(msg)) => {
-            let status = core_error_status(&msg);
+        PollOutcome::Done(Err(err)) => {
+            let status = err.status();
             // the final verdict of an async request lands here; graph and
             // class left with the consumed entry, so attribute failures to
-            // the ticket pseudo-graph
+            // the ticket pseudo-graph (and skip the breaker — the key is
+            // gone too; sync traffic on the same graph still feeds it)
             state.metrics.record("_tickets", "unknown", status, 0.0, 0);
-            Response::error(status, &msg)
+            Response::error(status, &err.to_string())
         }
     }
 }
@@ -330,13 +354,43 @@ mod tests {
     }
 
     #[test]
-    fn core_errors_map_to_honest_statuses() {
-        assert_eq!(core_error_status("deadline exceeded in queue"), 504);
-        assert_eq!(core_error_status("deadline exceeded waiting for response"), 504);
-        assert_eq!(core_error_status("unknown graph zz"), 404);
-        assert_eq!(core_error_status("vertex 9 out of range (|V|=5)"), 400);
-        assert_eq!(core_error_status("engine error: shard fault"), 500);
-        assert_eq!(core_error_status("response channel closed"), 500);
+    fn serve_errors_map_to_honest_statuses() {
+        // the enum carries its own status — no string matching anywhere
+        assert_eq!(ServeError::DeadlineQueue.status(), 504);
+        assert_eq!(ServeError::DeadlineWait.status(), 504);
+        assert_eq!(ServeError::GraphUnknown { name: "zz".into(), single: false }.status(), 404);
+        assert_eq!(
+            ServeError::VertexOutOfRange { vertex: 9, num_vertices: 5, after_reload: false }
+                .status(),
+            400
+        );
+        assert_eq!(ServeError::EngineFailed("shard fault".into()).status(), 500);
+        assert_eq!(ServeError::BreakerOpen { retry_after_ms: 120 }.status(), 503);
+        assert_eq!(ServeError::ChannelClosed.status(), 500);
+    }
+
+    #[test]
+    fn degraded_flag_serializes_only_when_set() {
+        use crate::fixed::AccuracyClass;
+        use std::sync::Arc;
+        use std::time::Duration;
+        let mut resp = PprResponse {
+            id: 1,
+            graph: Arc::from("g"),
+            class: AccuracyClass::Exact,
+            vertex: 3,
+            ranking: Vec::new(),
+            iterations: 2,
+            escalations: 0,
+            queue_time: Duration::ZERO,
+            total_time: Duration::ZERO,
+            degraded: false,
+        };
+        let clean = render_result(&resp).render();
+        assert!(!clean.contains("degraded"), "{clean}");
+        resp.degraded = true;
+        let flagged = render_result(&resp).render();
+        assert!(flagged.contains("\"degraded\":true"), "{flagged}");
     }
 
     #[test]

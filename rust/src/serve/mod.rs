@@ -13,6 +13,8 @@
 //! - [`http`] — HTTP/1.1 framing over `std::net` (no HTTP crate vendored);
 //! - [`prom`] — metric registry + text exposition + a tiny validator;
 //! - [`admission`] — bounded per-graph queues with class-ordered shedding;
+//! - [`breaker`] — per-`(graph, class)` circuit breakers that fast-fail
+//!   requests to a failing backend (DESIGN.md §10);
 //! - [`state`] — shared handles ([`ServeState`]) and the async
 //!   [`TicketStore`];
 //! - [`handlers`] — route dispatch, JSON mapping, status taxonomy;
@@ -29,6 +31,7 @@
 //! then joins them.
 
 pub mod admission;
+pub mod breaker;
 pub mod handlers;
 pub mod http;
 pub mod loadgen;
@@ -36,9 +39,10 @@ pub mod prom;
 pub mod state;
 
 pub use admission::{Admission, AdmitGuard, Shed};
+pub use breaker::{BreakerConfig, BreakerState, CircuitBreaker};
 pub use http::{Request, Response};
 pub use loadgen::{ClassStats, LoadReport, LoadSpec};
-pub use prom::{validate_exposition, HttpMetrics, LATENCY_BUCKETS_S};
+pub use prom::{validate_exposition, CoreHealth, HttpMetrics, LATENCY_BUCKETS_S};
 pub use state::{PollOutcome, ServeState, TicketStore};
 
 use crate::coordinator::server::Server;

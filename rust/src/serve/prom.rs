@@ -13,6 +13,19 @@
 //! | `ppr_ladder_escalations_total` | counter | `graph`, `class` |
 //! | `ppr_http_queue_depth` | gauge | `graph`, `class` |
 //! | `ppr_http_request_duration_seconds` | histogram | `class` |
+//! | `ppr_workers_live` / `ppr_workers_total` | gauge | — |
+//! | `ppr_stuck_batch_age_seconds` | gauge | — |
+//! | `ppr_worker_respawns_total` | counter | — |
+//! | `ppr_engine_panics_total` | counter | — |
+//! | `ppr_degraded_responses_total` | counter | — |
+//! | `ppr_pool_caught_panics_total` | counter | — |
+//! | `ppr_breaker_state` | gauge | `graph`, `class` (0/1/2) |
+//! | `ppr_breaker_open_total` / `ppr_breaker_cycles_total` | counter | — |
+//!
+//! The serving-core health families (workers, breaker, degradation —
+//! DESIGN.md §10) are sampled by the caller at scrape time and passed
+//! into [`HttpMetrics::render_with`] as a [`CoreHealth`]; the registry
+//! itself only accumulates HTTP-level counters.
 //!
 //! The histogram uses fixed log-spaced buckets (powers of two from 1 ms
 //! to ~8 s), so scrapes are mergeable across processes and time — no
@@ -22,10 +35,11 @@
 //! is a consistent point-in-time view (a shed can never be visible before
 //! the request that caused it).
 
+use super::breaker::BreakerState;
 use crate::fixed::AccuracyClass;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Histogram bucket upper bounds (seconds): 1 ms · 2^i.
 pub const LATENCY_BUCKETS_S: [f64; 14] = [
@@ -64,6 +78,32 @@ struct Inner {
     misses: BTreeMap<(String, &'static str), u64>,
     escalations: BTreeMap<(String, &'static str), u64>,
     latency: BTreeMap<&'static str, Hist>,
+}
+
+/// Point-in-time serving-core health, sampled by the scrape handler and
+/// rendered as gauge/counter families alongside the HTTP metrics.
+#[derive(Debug, Clone, Default)]
+pub struct CoreHealth {
+    /// Workers currently alive.
+    pub workers_live: u64,
+    /// Configured worker count.
+    pub workers_total: u64,
+    /// Watchdog respawns so far.
+    pub worker_respawns: u64,
+    /// Age of the oldest in-flight batch (0 when idle).
+    pub stuck_batch_age_seconds: f64,
+    /// Engine panics contained by the batch boundary.
+    pub engine_panics: u64,
+    /// Responses produced by the degradation policy.
+    pub degraded_responses: u64,
+    /// Panics swallowed by detached runtime-pool tasks.
+    pub pool_caught_panics: u64,
+    /// Current breaker state per `(graph, class)`.
+    pub breaker_states: Vec<(Arc<str>, AccuracyClass, BreakerState)>,
+    /// Closed → open breaker trips.
+    pub breaker_opens: u64,
+    /// Completed open → half-open → closed recovery cycles.
+    pub breaker_cycles: u64,
 }
 
 /// Thread-safe metric registry of the front door.
@@ -183,6 +223,65 @@ impl HttpMetrics {
         }
         out
     }
+
+    /// [`Self::render`] plus the serving-core health families (worker
+    /// liveness, stuck-batch age, panic/degradation counters, breaker
+    /// states — DESIGN.md §10) sampled into `core` at scrape time.
+    pub fn render_with(
+        &self,
+        queue_depths: &[(String, AccuracyClass, usize)],
+        core: &CoreHealth,
+    ) -> String {
+        let mut out = self.render(queue_depths);
+
+        out.push_str("# HELP ppr_workers_live Worker threads currently alive.\n");
+        out.push_str("# TYPE ppr_workers_live gauge\n");
+        out.push_str(&format!("ppr_workers_live {}\n", core.workers_live));
+
+        out.push_str("# HELP ppr_workers_total Configured worker thread count.\n");
+        out.push_str("# TYPE ppr_workers_total gauge\n");
+        out.push_str(&format!("ppr_workers_total {}\n", core.workers_total));
+
+        out.push_str("# HELP ppr_stuck_batch_age_seconds Age of the oldest in-flight batch.\n");
+        out.push_str("# TYPE ppr_stuck_batch_age_seconds gauge\n");
+        out.push_str(&format!("ppr_stuck_batch_age_seconds {}\n", core.stuck_batch_age_seconds));
+
+        out.push_str("# HELP ppr_worker_respawns_total Dead workers respawned by the watchdog.\n");
+        out.push_str("# TYPE ppr_worker_respawns_total counter\n");
+        out.push_str(&format!("ppr_worker_respawns_total {}\n", core.worker_respawns));
+
+        out.push_str("# HELP ppr_engine_panics_total Engine panics contained at the batch boundary.\n");
+        out.push_str("# TYPE ppr_engine_panics_total counter\n");
+        out.push_str(&format!("ppr_engine_panics_total {}\n", core.engine_panics));
+
+        out.push_str("# HELP ppr_degraded_responses_total Responses served by the degradation policy.\n");
+        out.push_str("# TYPE ppr_degraded_responses_total counter\n");
+        out.push_str(&format!("ppr_degraded_responses_total {}\n", core.degraded_responses));
+
+        out.push_str("# HELP ppr_pool_caught_panics_total Panics swallowed by detached runtime-pool tasks.\n");
+        out.push_str("# TYPE ppr_pool_caught_panics_total counter\n");
+        out.push_str(&format!("ppr_pool_caught_panics_total {}\n", core.pool_caught_panics));
+
+        out.push_str("# HELP ppr_breaker_state Circuit breaker state (0=closed, 1=open, 2=half-open).\n");
+        out.push_str("# TYPE ppr_breaker_state gauge\n");
+        for (graph, class, st) in &core.breaker_states {
+            out.push_str(&format!(
+                "ppr_breaker_state{{graph=\"{graph}\",class=\"{}\"}} {}\n",
+                class.label(),
+                st.as_gauge()
+            ));
+        }
+
+        out.push_str("# HELP ppr_breaker_open_total Closed-to-open breaker trips.\n");
+        out.push_str("# TYPE ppr_breaker_open_total counter\n");
+        out.push_str(&format!("ppr_breaker_open_total {}\n", core.breaker_opens));
+
+        out.push_str("# HELP ppr_breaker_cycles_total Completed open-half-open-closed recovery cycles.\n");
+        out.push_str("# TYPE ppr_breaker_cycles_total counter\n");
+        out.push_str(&format!("ppr_breaker_cycles_total {}\n", core.breaker_cycles));
+
+        out
+    }
 }
 
 /// Validate a Prometheus text exposition document: every non-comment line
@@ -297,6 +396,40 @@ mod tests {
         assert!(text.contains("ppr_ladder_escalations_total{graph=\"er\",class=\"balanced\"} 2\n"));
         assert!(text.contains("ppr_http_queue_depth{graph=\"ws\",class=\"fast\"} 3\n"));
         assert_eq!(m.total_requests(), 4);
+    }
+
+    #[test]
+    fn render_with_emits_core_health_families() {
+        let m = HttpMetrics::new();
+        m.record("ws", AccuracyClass::Exact.label(), 200, 0.01, 0);
+        let core = CoreHealth {
+            workers_live: 3,
+            workers_total: 4,
+            worker_respawns: 2,
+            stuck_batch_age_seconds: 0.5,
+            engine_panics: 7,
+            degraded_responses: 5,
+            pool_caught_panics: 1,
+            breaker_states: vec![
+                (Arc::from("ws"), AccuracyClass::Exact, BreakerState::Open),
+                (Arc::from("er"), AccuracyClass::Fast, BreakerState::Closed),
+            ],
+            breaker_opens: 3,
+            breaker_cycles: 1,
+        };
+        let text = m.render_with(&[], &core);
+        validate_exposition(&text).expect("core families must validate");
+        assert!(text.contains("ppr_workers_live 3\n"), "{text}");
+        assert!(text.contains("ppr_workers_total 4\n"));
+        assert!(text.contains("ppr_worker_respawns_total 2\n"));
+        assert!(text.contains("ppr_stuck_batch_age_seconds 0.5\n"));
+        assert!(text.contains("ppr_engine_panics_total 7\n"));
+        assert!(text.contains("ppr_degraded_responses_total 5\n"));
+        assert!(text.contains("ppr_pool_caught_panics_total 1\n"));
+        assert!(text.contains("ppr_breaker_state{graph=\"ws\",class=\"exact\"} 1\n"));
+        assert!(text.contains("ppr_breaker_state{graph=\"er\",class=\"fast\"} 0\n"));
+        assert!(text.contains("ppr_breaker_open_total 3\n"));
+        assert!(text.contains("ppr_breaker_cycles_total 1\n"));
     }
 
     #[test]

@@ -3,10 +3,11 @@
 //! asynchronous tickets awaiting `GET /v1/tickets/{id}` polls.
 
 use super::admission::{Admission, AdmitGuard};
+use super::breaker::{BreakerConfig, CircuitBreaker};
 use super::prom::HttpMetrics;
 use crate::config::ServeConfig;
 use crate::coordinator::registry::GraphRegistry;
-use crate::coordinator::request::PprResponse;
+use crate::coordinator::request::{PprResponse, ServeError};
 use crate::coordinator::server::{Server, Ticket};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -26,6 +27,8 @@ pub struct ServeState {
     pub metrics: HttpMetrics,
     /// Async tickets awaiting polls.
     pub tickets: TicketStore,
+    /// Per-`(graph, class)` circuit breakers (DESIGN.md §10).
+    pub breaker: Arc<CircuitBreaker>,
 }
 
 impl ServeState {
@@ -33,6 +36,7 @@ impl ServeState {
     pub fn new(server: Arc<Server>, registry: Arc<GraphRegistry>, cfg: ServeConfig) -> Self {
         let admission = Admission::new(&cfg);
         let ttl = Duration::from_secs(cfg.ticket_ttl_secs);
+        let breaker = Arc::new(CircuitBreaker::new(BreakerConfig::from_serve(&cfg)));
         Self {
             server,
             registry,
@@ -40,6 +44,7 @@ impl ServeState {
             admission,
             metrics: HttpMetrics::new(),
             tickets: TicketStore::new(ttl),
+            breaker,
         }
     }
 }
@@ -61,7 +66,7 @@ pub enum PollOutcome {
     /// Still in flight.
     Pending,
     /// Finished: the entry has been removed from the store.
-    Done(Result<PprResponse, String>),
+    Done(Result<PprResponse, ServeError>),
 }
 
 /// Thread-safe store of submitted-but-unpolled tickets. Entries are

@@ -136,7 +136,7 @@ fn deadlines_bound_queue_time() {
     let (server, _) = build(1, 4, Precision::Fixed(20));
     // already-expired budget fails fast without engine work
     let err = server.submit_with(5, 3, Some(Duration::ZERO)).wait().unwrap_err();
-    assert!(err.contains("deadline"), "{err}");
+    assert!(err.to_string().contains("deadline"), "{err}");
     // generous budget succeeds
     let resp = server.submit_with(5, 3, Some(Duration::from_secs(30))).wait().unwrap();
     assert_eq!(resp.vertex, 5);
@@ -403,7 +403,7 @@ fn deadline_expiry_behind_another_graphs_flush_burns_no_lane() {
     // ...and park an already-expired request behind it on graph b
     let doomed = server.submit_to("b", 9, 3, Some(Duration::ZERO));
     let err = doomed.wait().unwrap_err();
-    assert!(err.contains("deadline"), "{err}");
+    assert!(err.to_string().contains("deadline"), "{err}");
     for t in a_tickets {
         t.wait().expect("graph a batch unaffected");
     }

@@ -217,6 +217,31 @@ impl Drop for BatchGuard<'_> {
     }
 }
 
+/// Marks a worker slot alive for the span of its thread's run: the slot
+/// goes live when the thread starts and — via `Drop`, which runs even
+/// during a panic's unwind — dead when the thread exits for *any* reason.
+/// This keeps `worker_health` honest in single-graph mode, which has no
+/// watchdog to notice a worker killed past the containment boundary (the
+/// silent capacity loss still shows on `/metrics`), and closes the gap
+/// between a registry worker's death and the watchdog's next tick.
+struct AliveGuard<'a> {
+    health: &'a HealthBoard,
+    slot: usize,
+}
+
+impl<'a> AliveGuard<'a> {
+    fn new(health: &'a HealthBoard, slot: usize) -> Self {
+        health.mark_alive(slot, true);
+        Self { health, slot }
+    }
+}
+
+impl Drop for AliveGuard<'_> {
+    fn drop(&mut self) {
+        self.health.mark_alive(self.slot, false);
+    }
+}
+
 /// What became of one batch solve attempt.
 enum BatchOutcome {
     /// Every request was answered before the engine ran (expired or out
@@ -263,6 +288,12 @@ impl Ticket {
 
     /// The graph this ticket's query runs on.
     pub fn graph(&self) -> &str {
+        &self.graph
+    }
+
+    /// The interned graph key — the same `Arc<str>` the serving core's
+    /// ledgers and the circuit breaker are keyed by.
+    pub fn graph_key(&self) -> &Arc<str> {
         &self.graph
     }
 
@@ -420,9 +451,11 @@ impl Watchdog {
         match spawned {
             Ok(handle) => Ok(Self { stop, handle }),
             Err(e) => {
-                // the closure (owning the worker handles) was never run;
-                // workers exit once the caller closes the batcher, but we
-                // cannot join them here — fail construction
+                // the closure (owning the worker handles) was never run,
+                // so the handles were dropped and the workers detached —
+                // they cannot be joined here. The caller must close the
+                // batcher so they drain and exit instead of blocking in
+                // next_batch() forever.
                 anyhow::bail!("spawn watchdog: {e}")
             }
         }
@@ -465,6 +498,10 @@ fn spawn_registry_worker(
     let wspec = spec.clone();
     let handle = std::thread::Builder::new().name(format!("ppr-worker-{slot}")).spawn(
         move || {
+            // liveness spans the thread itself, marked dead on any exit
+            // (drain-out or unwind) — never left stale-alive for the
+            // watchdog's tick to correct
+            let _alive = AliveGuard::new(&wspec.health, slot);
             let mut cache = EngineCache {
                 builder: wspec.builder.clone(),
                 registry: wspec.registry.clone(),
@@ -498,7 +535,6 @@ fn spawn_registry_worker(
             }
         },
     )?;
-    spec.health.mark_alive(slot, true);
     Ok(handle)
 }
 
@@ -598,6 +634,11 @@ impl Server {
             let fault = fault.clone();
             let spawned = std::thread::Builder::new().name(format!("ppr-worker-{widx}")).spawn(
                 move || {
+                    // mark the slot dead on any exit — single-graph mode
+                    // has no watchdog, so without this a worker killed
+                    // past the containment boundary would read as live
+                    // forever and the capacity loss would be invisible
+                    let _alive = AliveGuard::new(&health, widx);
                     // one reusable score block per worker: zero
                     // steady-state allocation on the serving path
                     let mut block = ScoreBlock::with_capacity(kappa, num_vertices);
@@ -631,7 +672,6 @@ impl Server {
             );
             match spawned {
                 Ok(handle) => {
-                    health.mark_alive(widx, true);
                     workers.push(handle);
                 }
                 Err(e) => {
@@ -712,7 +752,18 @@ impl Server {
             }
         }
 
-        let watchdog = Watchdog::start(spec, handles, stats.clone())?;
+        let watchdog = match Watchdog::start(spec, handles, stats.clone()) {
+            Ok(w) => w,
+            Err(e) => {
+                // the worker handles moved into the never-run watchdog
+                // closure and were dropped — the threads are detached and
+                // unjoinable. Close the batcher so they drain out of
+                // next_batch() and exit instead of leaking, blocked
+                // forever.
+                batcher.close();
+                return Err(e);
+            }
+        };
 
         Ok(Self {
             batcher,
@@ -1793,6 +1844,48 @@ mod tests {
         assert_eq!(resp.vertex, 5);
         let snap = server.stats().snapshot();
         assert!(snap.respawns >= 1, "respawn must be counted: {snap:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn single_graph_worker_death_is_visible_in_health() {
+        use crate::fault::{FaultConfig, FaultPlan};
+        let g = crate::graph::generators::watts_strogatz(64, 4, 0.2, 42);
+        // kill the worker on its first batch claim — outside the engine
+        // containment boundary, so the thread itself dies
+        let fault = FaultPlan::new(FaultConfig {
+            worker_kill_rate: 1.0,
+            active: Some((0, 1)),
+            ..Default::default()
+        });
+        let server = EngineBuilder::native()
+            .config(test_config(2))
+            .fault(Some(fault))
+            .serve(&g, 1)
+            .expect("server starts");
+        let gate = Instant::now() + Duration::from_secs(10);
+        while server.worker_health().live != 1 {
+            assert!(Instant::now() < gate, "worker never reported alive");
+            std::thread::yield_now();
+        }
+        let err = server
+            .submit_with(3, 2, Some(Duration::from_secs(30)))
+            .wait()
+            .unwrap_err();
+        assert_eq!(err, ServeError::WorkerDied);
+        // single-graph mode has no watchdog: the slot must read dead on
+        // /metrics (silent capacity loss made visible), never stale-alive
+        let gate = Instant::now() + Duration::from_secs(10);
+        loop {
+            let h = server.worker_health();
+            if h.live == 0 {
+                assert_eq!(h.total, 1);
+                assert_eq!(h.respawns, 0, "single-graph mode never respawns");
+                break;
+            }
+            assert!(Instant::now() < gate, "dead worker still reported live: {h:?}");
+            std::thread::sleep(Duration::from_millis(2));
+        }
         server.shutdown();
     }
 

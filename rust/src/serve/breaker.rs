@@ -10,7 +10,13 @@
 //! - **HalfOpen** — up to `half_open_probes` requests are admitted as
 //!   probes; that many consecutive successes close the breaker (counting
 //!   one full open → half-open → closed **cycle**), any failure re-opens
-//!   it.
+//!   it. A reserved probe slot must be settled by [`CircuitBreaker::record`]
+//!   (outcome observed) or returned by [`CircuitBreaker::release`]
+//!   (request shed or abandoned before any solve ran). As a backstop
+//!   against leaked slots, a half-open entry whose probe budget has been
+//!   fully reserved for longer than `open_for` without an outcome
+//!   reclaims one slot for the next `check` — the breaker can always
+//!   probe its way back to closed, never wedging at 503 forever.
 //!
 //! Only *fault* outcomes (engine failures, panics, dead workers —
 //! [`ServeError::is_fault`](crate::coordinator::ServeError::is_fault))
@@ -93,7 +99,7 @@ impl BreakerState {
 enum EntryState {
     Closed,
     Open { until: Instant },
-    HalfOpen { in_flight: usize, successes: usize },
+    HalfOpen { in_flight: usize, successes: usize, last_admit: Instant },
 }
 
 #[derive(Debug)]
@@ -133,7 +139,10 @@ impl CircuitBreaker {
 
     /// Admission check for one request. `Ok(())` admits (and, in
     /// half-open, reserves a probe slot); `Err(retry_after)` fast-fails
-    /// with the remaining hold time.
+    /// with the remaining hold time. Every admitted request must settle
+    /// with exactly one [`record`](Self::record) — or return its slot via
+    /// [`release`](Self::release) if it is dropped before any solve runs
+    /// — so half-open probe slots are never leaked.
     pub fn check(&self, graph: &Arc<str>, class: AccuracyClass) -> Result<(), Duration> {
         let mut map = self.inner.lock().unwrap();
         let Some(entry) = map.get_mut(&(graph.clone(), class)) else {
@@ -146,13 +155,27 @@ impl CircuitBreaker {
                 if now < *until {
                     Err(*until - now)
                 } else {
-                    entry.state = EntryState::HalfOpen { in_flight: 1, successes: 0 };
+                    entry.state = EntryState::HalfOpen {
+                        in_flight: 1,
+                        successes: 0,
+                        last_admit: now,
+                    };
                     Ok(())
                 }
             }
-            EntryState::HalfOpen { in_flight, .. } => {
+            EntryState::HalfOpen { in_flight, last_admit, .. } => {
+                let now = Instant::now();
                 if *in_flight < self.cfg.half_open_probes {
                     *in_flight += 1;
+                    *last_admit = now;
+                    Ok(())
+                } else if now.duration_since(*last_admit) >= self.cfg.open_for {
+                    // every probe slot has been reserved for a full hold
+                    // interval with no outcome: the slots leaked (request
+                    // shed downstream, ticket abandoned). Hand one to this
+                    // request so the breaker can still recover instead of
+                    // fast-failing forever.
+                    *last_admit = now;
                     Ok(())
                 } else {
                     // probes are out; hold the rest back briefly
@@ -186,7 +209,7 @@ impl CircuitBreaker {
             EntryState::Open { .. } => {
                 // a straggler finishing after the trip: no state change
             }
-            EntryState::HalfOpen { in_flight, successes } => {
+            EntryState::HalfOpen { in_flight, successes, .. } => {
                 if failure {
                     entry.state =
                         EntryState::Open { until: Instant::now() + self.cfg.open_for };
@@ -199,6 +222,20 @@ impl CircuitBreaker {
                         self.cycles.fetch_add(1, Ordering::Relaxed);
                     }
                 }
+            }
+        }
+    }
+
+    /// Return an admission reserved by [`check`](Self::check) without
+    /// recording an outcome: the request was shed or abandoned before any
+    /// solve ran, so it says nothing about backend health. Only a
+    /// half-open probe slot holds state to return; in every other state
+    /// this is a no-op.
+    pub fn release(&self, graph: &Arc<str>, class: AccuracyClass) {
+        let mut map = self.inner.lock().unwrap();
+        if let Some(entry) = map.get_mut(&(graph.clone(), class)) {
+            if let EntryState::HalfOpen { in_flight, .. } = &mut entry.state {
+                *in_flight = in_flight.saturating_sub(1);
             }
         }
     }
@@ -318,6 +355,56 @@ mod tests {
         assert_eq!(b.opens(), 2, "probe failure re-opens");
         assert!(b.check(&g, AccuracyClass::Exact).is_err());
         assert_eq!(b.cycles(), 0);
+    }
+
+    #[test]
+    fn release_returns_probe_slot_without_outcome() {
+        let b = CircuitBreaker::new(quick_cfg());
+        let g = key();
+        for _ in 0..4 {
+            b.record(&g, AccuracyClass::Exact, true);
+        }
+        std::thread::sleep(Duration::from_millis(35));
+        // both probe slots reserved, then one request is shed downstream
+        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
+        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
+        assert!(b.check(&g, AccuracyClass::Exact).is_err(), "budget spent");
+        b.release(&g, AccuracyClass::Exact);
+        // the returned slot admits the next probe immediately
+        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
+        // releasing never counts as a probe outcome
+        assert_eq!(b.cycles(), 0);
+        assert_eq!(b.states()[0].2, BreakerState::HalfOpen);
+        // a closed entry ignores release entirely
+        b.release(&Arc::from("other"), AccuracyClass::Exact);
+        assert!(b.check(&Arc::from("other"), AccuracyClass::Exact).is_ok());
+    }
+
+    #[test]
+    fn leaked_probe_slots_are_reclaimed_after_hold_interval() {
+        // regression: a probe slot whose request never settled (shed by
+        // admission, abandoned async ticket) used to wedge the key at 503
+        // forever — half-open had no timeout and check() fast-failed once
+        // in_flight hit the budget
+        let b = CircuitBreaker::new(quick_cfg());
+        let g = key();
+        for _ in 0..4 {
+            b.record(&g, AccuracyClass::Exact, true);
+        }
+        std::thread::sleep(Duration::from_millis(35));
+        // reserve the full probe budget and leak it (no record, no release)
+        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
+        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
+        assert!(b.check(&g, AccuracyClass::Exact).is_err(), "budget spent");
+        // after a full hold interval with no outcome a slot is reclaimed
+        std::thread::sleep(Duration::from_millis(35));
+        assert!(b.check(&g, AccuracyClass::Exact).is_ok(), "leaked slot reclaimed");
+        // two recorded successes still close the breaker normally
+        b.record(&g, AccuracyClass::Exact, false);
+        b.record(&g, AccuracyClass::Exact, false);
+        assert_eq!(b.cycles(), 1);
+        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
+        assert_eq!(b.states()[0].2, BreakerState::Closed);
     }
 
     #[test]

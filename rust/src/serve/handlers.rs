@@ -241,6 +241,10 @@ fn query(state: &ServeState, graph: &str, req: &Request, is_submit: bool) -> Res
     let guard = match state.admission.try_admit(graph, class) {
         Ok(g) => g,
         Err(shed) => {
+            // the breaker admitted this request (possibly reserving a
+            // half-open probe slot) but no solve will run: return the
+            // admission so the probe budget is never leaked
+            state.breaker.release(&key, class);
             let resp = Response::error(429, "overloaded, request shed")
                 .with_header("retry-after", format_retry_after(shed.retry_after_ms));
             return finish(label, 0, resp);
@@ -263,14 +267,17 @@ fn query(state: &ServeState, graph: &str, req: &Request, is_submit: bool) -> Res
         return finish(label, 0, Response::json(202, &body));
     }
 
-    // sync: submit every vertex first (they batch together), then wait
+    // sync: submit every vertex first (they batch together), then wait.
+    // The breaker saw one check() for this HTTP request, so it gets
+    // exactly one aggregate record back — per-ticket recording would let
+    // a single admitted half-open probe close the breaker on its own
+    // (N ticket successes >= half_open_probes after one request)
     let tickets: Vec<Ticket> = body.vertices.iter().map(|&v| submit_one(v)).collect();
     let mut results = Vec::with_capacity(tickets.len());
     let mut escalations = 0u64;
     for ticket in tickets {
         match ticket.wait() {
             Ok(resp) => {
-                state.breaker.record(&key, class, false);
                 escalations += resp.escalations as u64;
                 results.push(render_result(&resp));
             }
@@ -283,6 +290,7 @@ fn query(state: &ServeState, graph: &str, req: &Request, is_submit: bool) -> Res
             }
         }
     }
+    state.breaker.record(&key, class, false);
     drop(guard);
     let body = json::obj(vec![
         ("graph", json::str(graph)),
@@ -311,11 +319,11 @@ fn poll_ticket(state: &ServeState, id: &str) -> Response {
                 ("ticket", json::num(id as f64)),
             ]),
         ),
-        PollOutcome::Done(Ok(resp)) => {
-            state.breaker.record(&resp.graph, resp.class, false);
+        PollOutcome::Done { graph, class, result: Ok(resp) } => {
+            state.breaker.record(&graph, class, false);
             state.metrics.record(
-                resp.graph.as_ref(),
-                resp.class.label(),
+                graph.as_ref(),
+                class.label(),
                 200,
                 resp.total_time.as_secs_f64(),
                 resp.escalations as u64,
@@ -328,13 +336,13 @@ fn poll_ticket(state: &ServeState, id: &str) -> Response {
                 ]),
             )
         }
-        PollOutcome::Done(Err(err)) => {
+        PollOutcome::Done { graph, class, result: Err(err) } => {
             let status = err.status();
-            // the final verdict of an async request lands here; graph and
-            // class left with the consumed entry, so attribute failures to
-            // the ticket pseudo-graph (and skip the breaker — the key is
-            // gone too; sync traffic on the same graph still feeds it)
-            state.metrics.record("_tickets", "unknown", status, 0.0, 0);
+            // the consumed entry carries its breaker key, so async-only
+            // traffic feeds the breaker on failure exactly like sync
+            // traffic does (a faulting probe must re-open, not leak)
+            state.breaker.record(&graph, class, err.is_fault());
+            state.metrics.record(graph.as_ref(), class.label(), status, 0.0, 0);
             Response::error(status, &err.to_string())
         }
     }

@@ -9,6 +9,7 @@ use crate::config::ServeConfig;
 use crate::coordinator::registry::GraphRegistry;
 use crate::coordinator::request::{PprResponse, ServeError};
 use crate::coordinator::server::{Server, Ticket};
+use crate::fixed::AccuracyClass;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -43,18 +44,23 @@ impl ServeState {
             cfg,
             admission,
             metrics: HttpMetrics::new(),
-            tickets: TicketStore::new(ttl),
+            tickets: TicketStore::new(ttl, breaker.clone()),
             breaker,
         }
     }
 }
 
 /// One stored async submission: the ticket, its admission slot (released
-/// when the entry is removed), and its creation time for TTL expiry.
+/// when the entry is removed), its `(graph, class)` breaker key, and its
+/// creation time for TTL expiry.
 struct Stored {
     ticket: Ticket,
     /// Held for the entry's lifetime; dropping it releases admission.
     _guard: AdmitGuard,
+    /// Interned graph key, kept so the final poll (or TTL expiry) can
+    /// still feed the `(graph, class)` circuit breaker.
+    graph: Arc<str>,
+    class: AccuracyClass,
     created: Instant,
 }
 
@@ -65,32 +71,65 @@ pub enum PollOutcome {
     NotFound,
     /// Still in flight.
     Pending,
-    /// Finished: the entry has been removed from the store.
-    Done(Result<PprResponse, ServeError>),
+    /// Finished: the entry has been removed from the store. Carries the
+    /// entry's `(graph, class)` so the caller can attribute the verdict —
+    /// breaker outcome, metrics — even when the result is an error that
+    /// names neither.
+    Done {
+        /// Interned graph key of the consumed entry.
+        graph: Arc<str>,
+        /// Accuracy class the query ran under.
+        class: AccuracyClass,
+        /// The final verdict of the async request.
+        result: Result<PprResponse, ServeError>,
+    },
 }
 
 /// Thread-safe store of submitted-but-unpolled tickets. Entries are
 /// removed when their result is consumed or when they outlive the TTL
-/// (purged on every insert/poll — no background sweeper thread).
+/// (purged on every insert/poll — no background sweeper thread). An
+/// expired entry observed no outcome, so its breaker admission — possibly
+/// a half-open probe slot — is released, never leaked.
 pub struct TicketStore {
     entries: Mutex<HashMap<u64, Stored>>,
     ttl: Duration,
+    breaker: Arc<CircuitBreaker>,
 }
 
 impl TicketStore {
-    /// New store with the given entry TTL.
-    pub fn new(ttl: Duration) -> Self {
-        Self { entries: Mutex::new(HashMap::new()), ttl }
+    /// New store with the given entry TTL, feeding `breaker` when entries
+    /// expire unobserved.
+    pub fn new(ttl: Duration, breaker: Arc<CircuitBreaker>) -> Self {
+        Self { entries: Mutex::new(HashMap::new()), ttl, breaker }
+    }
+
+    /// Drop entries past the TTL, returning each one's breaker admission
+    /// (a ticket abandoned by its client says nothing about backend
+    /// health — but its probe slot must not leak, or a half-open breaker
+    /// could wedge at 503 with no recovery path).
+    fn purge_expired(&self, entries: &mut HashMap<u64, Stored>) {
+        let now = Instant::now();
+        entries.retain(|_, s| {
+            if now.duration_since(s.created) < self.ttl {
+                return true;
+            }
+            self.breaker.release(&s.graph, s.class);
+            false
+        });
     }
 
     /// Store a submitted ticket with its admission slot; returns the
     /// ticket id the client polls with.
     pub fn insert(&self, ticket: Ticket, guard: AdmitGuard) -> u64 {
         let id = ticket.id();
+        let graph = ticket.graph_key().clone();
+        let class = ticket.class();
         let mut entries = self.entries.lock().unwrap();
-        let now = Instant::now();
-        entries.retain(|_, s| now.duration_since(s.created) < self.ttl);
-        entries.insert(id, Stored { ticket, _guard: guard, created: now });
+        self.purge_expired(&mut entries);
+        entries.insert(
+            id,
+            Stored { ticket, _guard: guard, graph, class, created: Instant::now() },
+        );
         id
     }
 
@@ -98,16 +137,15 @@ impl TicketStore {
     /// admission slot) is released and a second poll returns `NotFound`.
     pub fn poll(&self, id: u64) -> PollOutcome {
         let mut entries = self.entries.lock().unwrap();
-        let now = Instant::now();
-        entries.retain(|_, s| now.duration_since(s.created) < self.ttl);
+        self.purge_expired(&mut entries);
         let Some(stored) = entries.get(&id) else {
             return PollOutcome::NotFound;
         };
         match stored.ticket.poll() {
             None => PollOutcome::Pending,
             Some(result) => {
-                entries.remove(&id);
-                PollOutcome::Done(result)
+                let stored = entries.remove(&id).expect("entry present");
+                PollOutcome::Done { graph: stored.graph, class: stored.class, result }
             }
         }
     }
@@ -147,11 +185,15 @@ mod tests {
         ServeConfig { queue_cap: 4, ..Default::default() }
     }
 
+    fn test_breaker() -> Arc<CircuitBreaker> {
+        Arc::new(CircuitBreaker::new(BreakerConfig::default()))
+    }
+
     #[test]
     fn ticket_store_poll_consumes_once() {
         let server = tiny_server();
         let adm = Admission::new(&serve_cfg());
-        let store = TicketStore::new(Duration::from_secs(60));
+        let store = TicketStore::new(Duration::from_secs(60), test_breaker());
 
         let guard = adm.try_admit("default", AccuracyClass::Static).unwrap();
         let id = store.insert(server.submit(5, 3), guard);
@@ -159,18 +201,24 @@ mod tests {
         assert_eq!(adm.depth("default", AccuracyClass::Static), 1);
 
         let deadline = Instant::now() + Duration::from_secs(10);
-        let resp = loop {
+        let (resp, graph, class) = loop {
             match store.poll(id) {
                 PollOutcome::Pending => {
                     assert!(Instant::now() < deadline, "never resolved");
                     std::thread::sleep(Duration::from_millis(2));
                 }
-                PollOutcome::Done(result) => break result.expect("query succeeds"),
+                PollOutcome::Done { graph, class, result } => {
+                    break (result.expect("query succeeds"), graph, class)
+                }
                 PollOutcome::NotFound => panic!("ticket vanished while pending"),
             }
         };
         assert_eq!(resp.vertex, 5);
         assert_eq!(resp.ranking.len(), 3);
+        // the consumed entry hands back its breaker key alongside the
+        // result, so even error verdicts stay attributable
+        assert_eq!(graph.as_ref(), "default");
+        assert_eq!(class, AccuracyClass::Static);
         // consumed: the entry and its admission slot are gone
         assert!(matches!(store.poll(id), PollOutcome::NotFound));
         assert!(store.is_empty());
@@ -182,7 +230,7 @@ mod tests {
     fn ticket_store_expires_stale_entries() {
         let server = tiny_server();
         let adm = Admission::new(&serve_cfg());
-        let store = TicketStore::new(Duration::from_millis(30));
+        let store = TicketStore::new(Duration::from_millis(30), test_breaker());
         let guard = adm.try_admit("default", AccuracyClass::Static).unwrap();
         let id = store.insert(server.submit(1, 2), guard);
         std::thread::sleep(Duration::from_millis(50));
@@ -193,8 +241,46 @@ mod tests {
     }
 
     #[test]
+    fn expired_ticket_releases_half_open_probe_slot() {
+        // regression: a ticket admitted as a half-open probe and then
+        // abandoned by its client used to leak the probe slot — with the
+        // whole budget leaked the breaker wedged at 503 forever
+        let server = tiny_server();
+        let adm = Admission::new(&serve_cfg());
+        // open_for is deliberately much longer than the ticket TTL so the
+        // leaked-slot reclaim backstop cannot mask a missing release: only
+        // the TTL purge can free the slot inside this test's window
+        let breaker = Arc::new(CircuitBreaker::new(BreakerConfig {
+            window: 8,
+            failure_rate: 0.5,
+            min_samples: 4,
+            open_for: Duration::from_millis(200),
+            half_open_probes: 1,
+        }));
+        let store = TicketStore::new(Duration::from_millis(40), breaker.clone());
+        let g: Arc<str> = Arc::from("default");
+        for _ in 0..4 {
+            breaker.record(&g, AccuracyClass::Static, true);
+        }
+        std::thread::sleep(Duration::from_millis(210));
+        // the single probe slot goes to an async submission…
+        breaker.check(&g, AccuracyClass::Static).expect("probe admitted");
+        assert!(breaker.check(&g, AccuracyClass::Static).is_err(), "budget spent");
+        let guard = adm.try_admit("default", AccuracyClass::Static).unwrap();
+        let id = store.insert(server.submit(1, 2), guard);
+        // …which its client never polls: the TTL purge must return the slot
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(matches!(store.poll(id), PollOutcome::NotFound));
+        assert!(
+            breaker.check(&g, AccuracyClass::Static).is_ok(),
+            "expired entry must release its probe slot"
+        );
+        server.shutdown();
+    }
+
+    #[test]
     fn unknown_ticket_is_not_found() {
-        let store = TicketStore::new(Duration::from_secs(1));
+        let store = TicketStore::new(Duration::from_secs(1), test_breaker());
         assert!(matches!(store.poll(424242), PollOutcome::NotFound));
     }
 }

@@ -45,7 +45,7 @@ fn main() {
         "graph: |V|={} |E|={} → {} stream slots (artifact capacity {})",
         graph.num_vertices,
         graph.num_edges(),
-        pg.sched.num_slots(),
+        pg.sched().num_slots(),
         spec.edges
     );
 

@@ -32,9 +32,9 @@ fn main() {
     let prepared = Arc::new(PreparedGraph::from_coo(&coo, ppr_spmv::PAPER_B));
     println!(
         "stream: {} packets of B={} ({}% padding)",
-        prepared.sched.num_packets(),
-        prepared.sched.b,
-        (prepared.sched.padding_overhead() * 100.0).round(),
+        prepared.sched().num_packets(),
+        prepared.sched().b,
+        (prepared.sched().padding_overhead() * 100.0).round(),
     );
 
     // 3. ground truth: f64 PPR at convergence (the paper's CPU oracle)

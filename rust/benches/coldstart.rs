@@ -1,0 +1,15 @@
+//! `cargo bench --bench coldstart [-- --full | --scale N]`
+//! Cold-start benchmark: serializes a prepared schedule (plus every
+//! default precision rung's value stream) to an on-disk artifact, then
+//! times the mmap-backed cold start against full re-preparation, checks
+//! artifact-served scores for bit-identity on both datapaths, and drives
+//! a capacity-1 registry through demotion to disk and promotion back.
+//! Emits `BENCH_coldstart.json`. See `bench_harness::coldstart`.
+
+use ppr_spmv::bench_harness::{coldstart, ExpOptions};
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    println!("# schedule-artifact cold start [{}]\n", opts.descriptor());
+    coldstart::run(&opts);
+}

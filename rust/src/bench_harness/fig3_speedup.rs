@@ -36,7 +36,7 @@ pub fn fpga_seconds(pd: &PreparedDataset, precision: Precision, opts: &ExpOption
         requests: opts.requests,
         iterations: opts.iterations,
         num_vertices: v,
-        num_packets: pd.prepared.sched.num_packets(),
+        num_packets: pd.prepared.sched().num_packets(),
     };
     model.estimate(&w).seconds
 }

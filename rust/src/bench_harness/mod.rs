@@ -10,6 +10,7 @@
 //! `--scale N --requests M` to pick a point.
 
 pub mod chaos;
+pub mod coldstart;
 pub mod energy;
 pub mod fig3_speedup;
 pub mod fusion;
@@ -204,6 +205,6 @@ mod tests {
         let pd = prepare(spec, &opts);
         assert_eq!(pd.requests.len(), 4);
         assert_eq!(pd.coo.num_edges(), spec.num_edges);
-        assert!(pd.prepared.sched.validate().is_ok());
+        assert!(pd.prepared.sched().validate().is_ok());
     }
 }

@@ -219,6 +219,7 @@ pub fn dispatch(args: Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("experiment") => cmd_experiment(&args),
         Some("serve") => cmd_serve(&args),
+        Some("prepare") => cmd_prepare(&args),
         Some("query") => cmd_query(&args),
         Some("generate") => cmd_generate(&args),
         Some("artifacts") => cmd_artifacts(&args),
@@ -235,7 +236,7 @@ const USAGE: &str = "\
 ppr-spmv — reduced-precision streaming SpMV for Personalized PageRank
 USAGE:
   ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|shards|fusion|
-            multigraph|ladder|serving|topk|chaos|all>
+            multigraph|ladder|serving|topk|chaos|coldstart|all>
             [--full] [--scale N] [--requests N] [--iterations N] [--no-csv]
   ppr-spmv serve  [--graph NAME|--graph-file PATH] [--precision 26b]
             [--class static|fast|balanced|exact]
@@ -246,6 +247,8 @@ USAGE:
           multi-graph: repeat --graph NAME=SOURCE (SOURCE = edge-list path
             or dataset:NAME[@SCALE]) and/or a [registry] config section;
             [--registry-capacity N] [--default-graph NAME]
+            [--artifact-dir DIR] (on-disk schedule artifacts: cold starts
+            mmap instead of re-preparing; evictions demote to disk)
           front door: --listen HOST:PORT serves HTTP instead of the demo
             workload (POST /v1/graphs/NAME/query|submit, GET /v1/tickets/ID,
             GET /v1/graphs|/healthz|/metrics); the [serve] config section
@@ -255,6 +258,8 @@ USAGE:
             [--fault-slow-rate P] [--fault-slow-ms N] [--fault-kill-rate P]
             [--fault-reload-rate P] [--fault-active-from N]
             [--fault-active-ticks N] arm a deterministic fault plan
+  ppr-spmv prepare --graph NAME=SOURCE [--graph ...] --artifact-dir DIR
+            [--shards N] (pre-build schedule artifacts for fast cold start)
   ppr-spmv query  --vertex V [--graph NAME|--graph-file PATH] [--top 10]
             [--engine native|pjrt|cpu] [--class static|fast|balanced|exact]
   ppr-spmv generate --graph NAME --out PATH [--scale N]
@@ -313,6 +318,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "chaos" => {
             bh::chaos::run(&opts);
         }
+        "coldstart" => {
+            bh::coldstart::run(&opts);
+        }
         "all" => {
             bh::table1_datasets::run(&opts);
             bh::table2_resources::run(&opts);
@@ -331,6 +339,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             bh::serving::run(&opts);
             bh::topk::run(&opts);
             bh::chaos::run(&opts);
+            bh::coldstart::run(&opts);
         }
         other => bail!("unknown experiment {other}"),
     }
@@ -339,9 +348,12 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 /// Assemble the multi-graph registry configuration, if any: the
 /// `[registry]` config section seeds it, repeated `--graph NAME=SOURCE`
-/// pairs extend/override it, `--registry-capacity` and `--default-graph`
-/// tune it. Returns `None` when nothing requests multi-graph serving
-/// (plain `--graph NAME` keeps its single-graph dataset meaning).
+/// pairs extend/override it, `--registry-capacity`, `--default-graph` and
+/// `--artifact-dir` tune it. A CLI pair may override a config-file entry
+/// of the same name, but two CLI pairs with the same name are an operator
+/// mistake and are rejected. Returns `None` when nothing requests
+/// multi-graph serving (plain `--graph NAME` keeps its single-graph
+/// dataset meaning).
 pub fn registry_config(args: &Args) -> Result<Option<RegistryConfig>> {
     let mut reg = match args.options.get("config") {
         Some(path) => RegistryConfig::load(std::path::Path::new(path))?,
@@ -351,13 +363,22 @@ pub fn registry_config(args: &Args) -> Result<Option<RegistryConfig>> {
         args.all("graph").into_iter().filter(|g| g.contains('=')).collect();
     if !pairs.is_empty() {
         let reg = reg.get_or_insert_with(RegistryConfig::default);
+        let mut cli_names: Vec<String> = Vec::new();
         for pair in pairs {
             let (name, source) = pair.split_once('=').expect("filtered on '='");
             let (name, source) = (name.trim(), source.trim());
             if name.is_empty() || source.is_empty() {
                 bail!("bad --graph {pair:?}: expected NAME=SOURCE");
             }
+            if cli_names.iter().any(|n| n == name) {
+                bail!(
+                    "--graph {name}= given twice; graph names must be unique \
+                     (the registry never silently replaces an earlier source)"
+                );
+            }
+            cli_names.push(name.to_string());
             match reg.graphs.iter_mut().find(|(n, _)| n == name) {
+                // a CLI pair overrides the config-file entry of that name
                 Some(slot) => slot.1 = source.to_string(),
                 None => reg.graphs.push((name.to_string(), source.to_string())),
             }
@@ -371,6 +392,10 @@ pub fn registry_config(args: &Args) -> Result<Option<RegistryConfig>> {
         if let Some(d) = args.options.get("default-graph") {
             reg.default_graph = Some(d.clone());
         }
+        if let Some(dir) = args.options.get("artifact-dir") {
+            anyhow::ensure!(!dir.trim().is_empty(), "--artifact-dir must be a non-empty path");
+            reg.artifact_dir = Some(PathBuf::from(dir.trim()));
+        }
         anyhow::ensure!(
             !reg.graphs.is_empty(),
             "multi-graph serving needs at least one --graph NAME=SOURCE \
@@ -380,9 +405,10 @@ pub fn registry_config(args: &Args) -> Result<Option<RegistryConfig>> {
         // don't silently drop registry-only flags outside registry mode
         anyhow::ensure!(
             !args.options.contains_key("registry-capacity")
-                && !args.options.contains_key("default-graph"),
-            "--registry-capacity/--default-graph require multi-graph serving \
-             (--graph NAME=SOURCE or a [registry] config section)"
+                && !args.options.contains_key("default-graph")
+                && !args.options.contains_key("artifact-dir"),
+            "--registry-capacity/--default-graph/--artifact-dir require multi-graph \
+             serving (--graph NAME=SOURCE or a [registry] config section)"
         );
     }
     Ok(reg)
@@ -390,7 +416,11 @@ pub fn registry_config(args: &Args) -> Result<Option<RegistryConfig>> {
 
 /// Build and populate a [`GraphRegistry`] from its configuration.
 pub fn build_registry(reg_cfg: &RegistryConfig) -> Result<Arc<GraphRegistry>> {
-    let registry = Arc::new(GraphRegistry::new(reg_cfg.capacity));
+    let mut registry = GraphRegistry::new(reg_cfg.capacity);
+    if let Some(dir) = &reg_cfg.artifact_dir {
+        registry = registry.with_artifact_dir(dir.clone());
+    }
+    let registry = Arc::new(registry);
     for (name, spec) in &reg_cfg.graphs {
         let source = GraphSource::parse(spec)?;
         registry.register(name, source).with_context(|| format!("register graph {name}"))?;
@@ -399,6 +429,49 @@ pub fn build_registry(reg_cfg: &RegistryConfig) -> Result<Arc<GraphRegistry>> {
         registry.set_default(d)?;
     }
     Ok(registry)
+}
+
+/// `prepare`: build on-disk schedule artifacts ahead of serving
+/// (DESIGN.md §11), so the next `serve` with the same `--artifact-dir`
+/// cold starts by mmap'ing them instead of re-running the O(|E|)
+/// preparation. Graphs come from `--graph NAME=SOURCE` pairs (or the
+/// `[registry]` config section); geometry (`--shards`, packet width B)
+/// from the run config.
+fn cmd_prepare(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let reg_cfg = registry_config(args)?.ok_or_else(|| {
+        anyhow!("prepare needs --graph NAME=SOURCE pairs (or a [registry] config section)")
+    })?;
+    let dir = reg_cfg.artifact_dir.clone().ok_or_else(|| {
+        anyhow!("prepare needs --artifact-dir DIR (or registry.artifact_dir in the config)")
+    })?;
+    use crate::spmv::artifact;
+    for (name, spec) in &reg_cfg.graphs {
+        let source = GraphSource::parse(spec)?;
+        let graph = source.load().with_context(|| format!("load graph {name}"))?;
+        let digest = artifact::graph_digest(&graph);
+        let sw = crate::util::Stopwatch::start();
+        let prepared =
+            crate::ppr::PreparedGraph::new_sharded(&graph, cfg.b, cfg.num_shards);
+        let prep_secs = sw.seconds();
+        let path = artifact::artifact_path(&dir, digest, cfg.b, cfg.num_shards);
+        let sw = crate::util::Stopwatch::start();
+        let bytes =
+            artifact::write_artifact(&path, &prepared, digest, &artifact::default_precisions())
+                .with_context(|| format!("write artifact for {name}"))?;
+        println!(
+            "{name}: |V|={} |E|={} digest={digest:016x} b={} shards={} -> {} \
+             ({:.1} MiB, prep {prep_secs:.2}s, write {:.2}s)",
+            graph.num_vertices,
+            graph.edges.len(),
+            cfg.b,
+            cfg.num_shards,
+            path.display(),
+            bytes as f64 / (1024.0 * 1024.0),
+            sw.seconds(),
+        );
+    }
+    Ok(())
 }
 
 fn cmd_serve_registry(args: &Args, cfg: &RunConfig, reg_cfg: RegistryConfig) -> Result<()> {
@@ -807,10 +880,72 @@ mod tests {
         assert_eq!(reg.default_graph.as_deref(), Some("eu"));
         assert_eq!(reg.graphs.len(), 2);
         assert_eq!(reg.graphs[0].0, "us");
-        // later pairs override earlier same-name pairs
+        // the same name on two CLI pairs is an operator mistake, not a
+        // silent replacement of the earlier source
         let a = args("serve --graph us=a.txt --graph us=b.txt");
+        let err = registry_config(&a).unwrap_err();
+        assert!(format!("{err:#}").contains("us"), "error names the duplicate: {err:#}");
+    }
+
+    #[test]
+    fn artifact_dir_flag_requires_and_joins_registry_mode() {
+        let a = args("serve --graph us=a.txt --artifact-dir target/artifacts");
         let reg = registry_config(&a).unwrap().unwrap();
-        assert_eq!(reg.graphs, vec![("us".to_string(), "b.txt".to_string())]);
+        assert_eq!(reg.artifact_dir, Some(PathBuf::from("target/artifacts")));
+        // without registry mode the flag is rejected, not dropped
+        assert!(registry_config(&args("serve --artifact-dir x")).is_err());
+        // registries built from it write artifacts through
+        let dir = std::env::temp_dir()
+            .join(format!("ppr-cli-artifacts-{}", std::process::id()));
+        let reg_cfg = registry_config(&Args::parse(
+            [
+                "serve".to_string(),
+                "--graph".to_string(),
+                "hk=dataset:HK-100k@500".to_string(),
+                "--artifact-dir".to_string(),
+                dir.display().to_string(),
+            ]
+            .into_iter(),
+        ))
+        .unwrap()
+        .unwrap();
+        let registry = build_registry(&reg_cfg).unwrap();
+        assert_eq!(registry.artifact_dir(), Some(dir.as_path()));
+        registry.resolve("hk", crate::PAPER_B, 1).unwrap();
+        assert_eq!(registry.preparations(), 1);
+        let files = std::fs::read_dir(&dir).unwrap().count();
+        assert!(files >= 1, "resolve must write the artifact through");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prepare_writes_artifacts_for_each_graph() {
+        let dir =
+            std::env::temp_dir().join(format!("ppr-cli-prepare-{}", std::process::id()));
+        let a = Args::parse(
+            [
+                "prepare".to_string(),
+                "--graph".to_string(),
+                "hk=dataset:HK-100k@500".to_string(),
+                "--graph".to_string(),
+                "ws=dataset:WS-100k@500".to_string(),
+                "--artifact-dir".to_string(),
+                dir.display().to_string(),
+                "--shards".to_string(),
+                "2".to_string(),
+            ]
+            .into_iter(),
+        );
+        dispatch(a).unwrap();
+        let files: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().map(|x| x == "ppra").unwrap_or(false))
+            .collect();
+        assert_eq!(files.len(), 2, "one artifact per graph");
+        // prepare without graphs or without a dir is a clean error
+        assert!(dispatch(args("prepare --graph hk=dataset:HK-100k@500")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

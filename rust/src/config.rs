@@ -8,7 +8,7 @@
 use crate::fixed::{AccuracyClass, Precision};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// A parsed scalar value.
 #[derive(Debug, Clone, PartialEq)]
@@ -315,6 +315,7 @@ impl RunConfig {
 /// capacity = 4                # max resident prepared entries (LRU)
 /// default = "main"            # default route (first graph otherwise)
 /// graphs = ["main=dataset:HK-100k@8", "eu=data/eu.txt"]
+/// artifact_dir = "artifacts"  # on-disk schedule artifact cache (§11)
 /// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct RegistryConfig {
@@ -325,11 +326,15 @@ pub struct RegistryConfig {
     /// `(name, source-spec)` pairs, in registration order. Source specs
     /// are parsed by `coordinator::registry::GraphSource::parse`.
     pub graphs: Vec<(String, String)>,
+    /// Schedule-artifact cache directory: enables the registry's
+    /// disk-residency tier and cold starts from mmap'd artifacts
+    /// (DESIGN.md §11). `None` keeps the RAM-only ladder.
+    pub artifact_dir: Option<PathBuf>,
 }
 
 impl Default for RegistryConfig {
     fn default() -> Self {
-        Self { capacity: 8, default_graph: None, graphs: Vec::new() }
+        Self { capacity: 8, default_graph: None, graphs: Vec::new(), artifact_dir: None }
     }
 }
 
@@ -341,7 +346,10 @@ impl RegistryConfig {
         let capacity = doc.get("registry", "capacity");
         let default_graph = doc.get("registry", "default");
         let graphs = doc.get("registry", "graphs");
-        if capacity.is_none() && default_graph.is_none() && graphs.is_none() {
+        let artifact_dir = doc.get("registry", "artifact_dir");
+        if capacity.is_none() && default_graph.is_none() && graphs.is_none()
+            && artifact_dir.is_none()
+        {
             return Ok(None);
         }
         let mut cfg = RegistryConfig::default();
@@ -370,6 +378,13 @@ impl RegistryConfig {
                 }
                 cfg.graphs.push((name.trim().to_string(), source.trim().to_string()));
             }
+        }
+        if let Some(v) = artifact_dir {
+            let dir = v.as_str()?.trim();
+            if dir.is_empty() {
+                bail!("registry.artifact_dir must be a non-empty path");
+            }
+            cfg.artifact_dir = Some(PathBuf::from(dir));
         }
         if let Some(d) = &cfg.default_graph {
             if !cfg.graphs.iter().any(|(n, _)| n == d) && !cfg.graphs.is_empty() {
@@ -669,6 +684,7 @@ mod tests {
             capacity = 4
             default = "main"
             graphs = ["main=dataset:HK-100k@8", "eu=data/eu.txt"]
+            artifact_dir = "target/artifacts"
             "#,
         )
         .unwrap();
@@ -682,6 +698,7 @@ mod tests {
                 ("eu".to_string(), "data/eu.txt".to_string()),
             ]
         );
+        assert_eq!(reg.artifact_dir, Some(PathBuf::from("target/artifacts")));
     }
 
     #[test]
@@ -706,6 +723,9 @@ mod tests {
         let reg = RegistryConfig::from_doc(&doc).unwrap().unwrap();
         assert_eq!(reg.default_graph.as_deref(), Some("main"));
         assert_eq!(reg.capacity, 8, "default capacity");
+        assert_eq!(reg.artifact_dir, None, "artifact tier is opt-in");
+        let doc = ConfigDoc::parse("[registry]\nartifact_dir = \"  \"\n").unwrap();
+        assert!(RegistryConfig::from_doc(&doc).is_err(), "blank artifact_dir rejected");
     }
 
     #[test]

@@ -49,7 +49,10 @@ pub use engine::{
     CpuBaselineEngine, LadderEngine, NativeEngine, PjrtEngineAdapter, PprEngine,
     ThreadBoundEngine,
 };
-pub use registry::{GraphEntry, GraphRegistry, GraphSource, DEFAULT_REGISTRY_CAPACITY};
+pub use registry::{
+    GraphEntry, GraphRegistry, GraphSource, RegisterError, DEFAULT_REGISTRY_CAPACITY,
+    DISK_CAPACITY_FACTOR,
+};
 pub use request::{
     default_graph_key, validate_query, PprRequest, PprResponse, QueryError, RankedVertex,
     ServeError, DEFAULT_GRAPH,

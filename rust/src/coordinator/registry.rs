@@ -1,5 +1,5 @@
 //! [`GraphRegistry`] — named graphs behind the serving stack (DESIGN.md
-//! §6).
+//! §6, §11).
 //!
 //! Real deployments serve *many* graphs (markets, regions, periodically
 //! re-crawled snapshots), not one. The registry owns that multiplexing:
@@ -15,6 +15,17 @@
 //!   cached *on* the entry ([`GraphEntry::values`]), so a graph served at
 //!   several precisions (the ladder's rungs) keeps one schedule resident
 //!   instead of one per width (DESIGN.md §7);
+//! - with an **artifact directory** configured, entries climb a
+//!   three-state **residency ladder** (DESIGN.md §11): *RAM-resident*
+//!   (in the LRU list, serving) → *disk-resident* (LRU-evicted, but its
+//!   schedule artifact stays open — promotion back is an mmap-backed
+//!   zero-copy load, not an O(|E|) re-preparation) → *unloaded* (only
+//!   the artifact file remains; a cold start re-opens it when the graph
+//!   digest still matches). Preparations write through to the artifact
+//!   directory so eviction can always demote instead of drop;
+//! - concurrent first-uses of the same key are **single-flight**: one
+//!   resolver prepares, the rest wait on a condvar and share the result
+//!   (no duplicated O(|E|) preparation under a request burst);
 //! - [`GraphRegistry::reload`] is an **atomic hot-swap**: the new
 //!   snapshot is loaded and re-prepared for every resident configuration
 //!   *before* the epoch bumps, so workers flip to the new epoch between
@@ -30,14 +41,65 @@
 use crate::fixed::Precision;
 use crate::graph::{CsrMatrix, Graph};
 use crate::ppr::{PreparedGraph, ValueStreams};
+use crate::spmv::artifact::{
+    artifact_path, default_precisions, graph_digest, write_artifact, ScheduleArtifact,
+};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::fmt;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Default LRU capacity: resident prepared entries across all graphs.
 pub const DEFAULT_REGISTRY_CAPACITY: usize = 8;
+
+/// Disk-resident (demoted) entries retained per unit of RAM capacity:
+/// an open artifact handle is a parsed header plus an mmap — pages are
+/// reclaimable by the OS — so the disk tier can afford to be wider.
+pub const DISK_CAPACITY_FACTOR: usize = 4;
+
+/// Why [`GraphRegistry::register`] refused a registration. Typed so
+/// callers (the CLI flag parser in particular) can distinguish an
+/// operator error worth a precise message — e.g. the same name given to
+/// two `--graph NAME=SOURCE` flags — from a load failure.
+#[derive(Debug)]
+pub enum RegisterError {
+    /// The name was empty (or all whitespace).
+    EmptyName,
+    /// The name is already registered. Registration never silently
+    /// replaces an earlier source — use [`GraphRegistry::reload_with`]
+    /// to swap a live graph's source intentionally.
+    Duplicate {
+        /// The already-taken name.
+        name: String,
+    },
+    /// The [`GraphSource`] failed to load.
+    Load {
+        /// The name being registered.
+        name: String,
+        /// The load failure, rendered with its context chain.
+        detail: String,
+    },
+}
+
+impl fmt::Display for RegisterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegisterError::EmptyName => write!(f, "graph name must be non-empty"),
+            RegisterError::Duplicate { name } => write!(
+                f,
+                "graph {name} already registered (names must be unique; \
+                 use reload to replace a live graph)"
+            ),
+            RegisterError::Load { name, detail } => {
+                write!(f, "load graph {name}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegisterError {}
 
 /// Where a registered graph's data comes from. Sources are retained so
 /// [`GraphRegistry::reload`] can re-read a fresh snapshot.
@@ -139,6 +201,11 @@ pub struct GraphEntry {
     pub graph: Arc<Graph>,
     /// The sharded packet schedule the streaming engines bind to.
     pub prepared: Arc<PreparedGraph>,
+    /// The open schedule artifact backing this entry, when one exists:
+    /// either the entry was loaded from it (cold start / promotion) or a
+    /// fresh preparation wrote through to it. Eviction demotes entries
+    /// with an artifact to the disk tier instead of dropping them.
+    artifact: Option<Arc<ScheduleArtifact>>,
     csr: OnceLock<Arc<CsrMatrix>>,
     /// Per-precision quantized value streams (ladder rungs / static
     /// engines), cached on first use — the precision-dependent half of
@@ -159,10 +226,19 @@ impl GraphEntry {
         self.graph.num_vertices
     }
 
+    /// Whether this entry is backed by an open schedule artifact (and can
+    /// therefore be demoted to the disk tier instead of dropped).
+    pub fn has_artifact(&self) -> bool {
+        self.artifact.is_some()
+    }
+
     /// The entry's value streams quantized for `precision`, cached after
     /// the first use so every worker engine and every ladder rung of this
-    /// `(graph, precision)` pair shares one resident copy. Quantization
-    /// runs outside the cache lock (a race quantizes twice, keeps one).
+    /// `(graph, precision)` pair shares one resident copy. When the entry
+    /// is artifact-backed and the artifact serialized this rung, the
+    /// streams are mmap-backed (zero-copy) instead of re-quantized.
+    /// Quantization runs outside the cache lock (a race quantizes twice,
+    /// keeps one).
     pub fn values(&self, precision: Precision) -> ValueStreams {
         if let Some(v) = self
             .values
@@ -174,7 +250,11 @@ impl GraphEntry {
         {
             return v;
         }
-        let fresh = ValueStreams::quantize(&self.prepared, precision);
+        let fresh = self
+            .artifact
+            .as_ref()
+            .and_then(|a| a.value_streams(precision).ok().flatten())
+            .unwrap_or_else(|| ValueStreams::quantize(&self.prepared, precision));
         let mut cache = self.values.lock().unwrap();
         if let Some((_, v)) = cache.iter().find(|(p, _)| *p == precision) {
             return v.clone();
@@ -208,6 +288,10 @@ impl GraphEntry {
 struct Slot {
     source: GraphSource,
     graph: Arc<Graph>,
+    /// Content digest of the current snapshot ([`graph_digest`]) — the
+    /// artifact-matching key: a reload that changes the edge set changes
+    /// the digest and invalidates every artifact of the old snapshot.
+    digest: u64,
     epoch: u64,
     reloads: u64,
 }
@@ -215,46 +299,113 @@ struct Slot {
 #[derive(Debug, Default)]
 struct RegistryInner {
     graphs: BTreeMap<Arc<str>, Slot>,
-    /// LRU order: front = least recently used, back = most recent.
+    /// RAM tier, LRU order: front = least recently used, back = most
+    /// recent.
     resident: Vec<(PrepKey, Arc<GraphEntry>)>,
+    /// Disk tier: LRU-evicted entries that kept an open artifact. Only
+    /// the artifact handle survives here — the prepared schedule is
+    /// rebuilt zero-copy from the mapping on promotion.
+    disk_resident: Vec<(PrepKey, Arc<ScheduleArtifact>)>,
+    /// Keys currently being materialized by some resolver (single-flight
+    /// guard; waiters sleep on the registry condvar).
+    pending: Vec<PrepKey>,
+    /// Per-graph count of resolves served from an artifact (cold start or
+    /// disk-tier promotion) instead of an O(|E|) preparation.
+    artifact_hits: BTreeMap<Arc<str>, u64>,
     default_graph: Option<Arc<str>>,
 }
 
-/// Thread-safe registry of named graphs with LRU-bounded prepared-entry
-/// residency and epoch-based hot-swap reload. See the module docs.
+/// Thread-safe registry of named graphs with a three-tier residency
+/// ladder (RAM → disk artifact → unloaded), single-flight preparation,
+/// and epoch-based hot-swap reload. See the module docs.
 #[derive(Debug)]
 pub struct GraphRegistry {
     inner: Mutex<RegistryInner>,
+    cv: Condvar,
     capacity: usize,
+    disk_capacity: usize,
+    artifact_dir: Option<PathBuf>,
+    /// Full O(|E|) preparations performed (cache-miss work; artifact
+    /// loads don't count).
+    preparations: AtomicU64,
 }
 
 impl GraphRegistry {
-    /// A registry bounding residency to `capacity` prepared entries
-    /// (clamped to at least 1).
+    /// A registry bounding RAM residency to `capacity` prepared entries
+    /// (clamped to at least 1). The disk tier defaults to
+    /// [`DISK_CAPACITY_FACTOR`]× that and stays empty until an artifact
+    /// directory is configured ([`Self::with_artifact_dir`]).
     pub fn new(capacity: usize) -> Self {
-        Self { inner: Mutex::new(RegistryInner::default()), capacity: capacity.max(1) }
+        let capacity = capacity.max(1);
+        Self {
+            inner: Mutex::new(RegistryInner::default()),
+            cv: Condvar::new(),
+            capacity,
+            disk_capacity: capacity * DISK_CAPACITY_FACTOR,
+            artifact_dir: None,
+            preparations: AtomicU64::new(0),
+        }
     }
 
-    /// Max resident prepared entries.
+    /// Enable the artifact tier: preparations write through to `dir`,
+    /// evictions demote to open artifacts instead of dropping, and
+    /// resolves of a graph whose digest matches an artifact in `dir` cold
+    /// start from it (mmap, zero-copy) instead of re-preparing.
+    pub fn with_artifact_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifact_dir = Some(dir.into());
+        self
+    }
+
+    /// Override the disk-tier capacity (clamped to at least 1).
+    pub fn with_disk_capacity(mut self, disk_capacity: usize) -> Self {
+        self.disk_capacity = disk_capacity.max(1);
+        self
+    }
+
+    /// Max RAM-resident prepared entries.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Max disk-resident (demoted) entries.
+    pub fn disk_capacity(&self) -> usize {
+        self.disk_capacity
+    }
+
+    /// The artifact cache directory, when the artifact tier is enabled.
+    pub fn artifact_dir(&self) -> Option<&Path> {
+        self.artifact_dir.as_deref()
+    }
+
     /// Register a graph under `name`, loading it now. The first
     /// registered graph becomes the default route. Names must be
-    /// non-empty and unique.
-    pub fn register(&self, name: &str, source: GraphSource) -> Result<Arc<str>> {
+    /// non-empty and unique — a duplicate is a typed
+    /// [`RegisterError::Duplicate`], never a silent replacement.
+    pub fn register(
+        &self,
+        name: &str,
+        source: GraphSource,
+    ) -> std::result::Result<Arc<str>, RegisterError> {
         let name = name.trim();
         if name.is_empty() {
-            bail!("graph name must be non-empty");
+            return Err(RegisterError::EmptyName);
         }
-        let graph = source.load().with_context(|| format!("load graph {name}"))?;
+        let graph = source.load().map_err(|e| RegisterError::Load {
+            name: name.to_string(),
+            detail: format!("{e:#}"),
+        })?;
+        let digest = graph_digest(&graph);
         let key: Arc<str> = Arc::from(name);
         let mut inner = self.inner.lock().unwrap();
         if inner.graphs.contains_key(name) {
-            bail!("graph {name} already registered");
+            return Err(RegisterError::Duplicate { name: name.to_string() });
         }
-        inner.graphs.insert(key.clone(), Slot { source, graph, epoch: 0, reloads: 0 });
+        inner
+            .graphs
+            .insert(key.clone(), Slot { source, graph, digest, epoch: 0, reloads: 0 });
+        // seed the per-graph hit counter so `/metrics` exposes the family
+        // at 0 from registration, not from the first cold start
+        inner.artifact_hits.entry(key.clone()).or_insert(0);
         if inner.default_graph.is_none() {
             inner.default_graph = Some(key.clone());
         }
@@ -262,7 +413,11 @@ impl GraphRegistry {
     }
 
     /// Register an in-memory graph (convenience for tests and embedders).
-    pub fn register_graph(&self, name: &str, graph: Graph) -> Result<Arc<str>> {
+    pub fn register_graph(
+        &self,
+        name: &str,
+        graph: Graph,
+    ) -> std::result::Result<Arc<str>, RegisterError> {
         self.register(name, GraphSource::InMemory(Arc::new(graph)))
     }
 
@@ -331,60 +486,206 @@ impl GraphRegistry {
         inner.graphs.get(name).map(|s| s.epoch)
     }
 
+    /// Content digest of the current snapshot of `name`.
+    pub fn digest(&self, name: &str) -> Option<u64> {
+        let inner = self.inner.lock().unwrap();
+        inner.graphs.get(name).map(|s| s.digest)
+    }
+
     /// Completed reloads of `name`.
     pub fn reloads(&self, name: &str) -> Option<u64> {
         let inner = self.inner.lock().unwrap();
         inner.graphs.get(name).map(|s| s.reloads)
     }
 
-    /// Resident prepared entries (diagnostics).
+    /// RAM-resident prepared entries (diagnostics / metrics).
     pub fn resident(&self) -> usize {
         self.inner.lock().unwrap().resident.len()
     }
 
+    /// Disk-resident (demoted) entries (diagnostics / metrics).
+    pub fn resident_disk(&self) -> usize {
+        self.inner.lock().unwrap().disk_resident.len()
+    }
+
+    /// Full O(|E|) preparations performed so far (artifact loads and
+    /// promotions don't count — that's the point of the artifact tier).
+    pub fn preparations(&self) -> u64 {
+        self.preparations.load(Ordering::Relaxed)
+    }
+
+    /// Per-graph resolves served from an artifact instead of a full
+    /// preparation, sorted by name (metrics exposition).
+    pub fn artifact_hits(&self) -> Vec<(Arc<str>, u64)> {
+        self.inner.lock().unwrap().artifact_hits.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Artifact hits for one graph (0 when never hit).
+    pub fn artifact_hits_for(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().artifact_hits.get(name).copied().unwrap_or(0)
+    }
+
     /// Resolve the prepared entry for `(name, b, shards)` — the
-    /// precision-independent schedule key — preparing it on first use
-    /// (per-precision value streams ride on the entry itself, see
-    /// [`GraphEntry::values`]). Preparation runs outside the registry
-    /// lock so other graphs keep serving; concurrent first-uses of the
-    /// same key may prepare twice and keep one — correct, just briefly
-    /// wasteful.
+    /// precision-independent schedule key — against the residency ladder:
+    ///
+    /// 1. **RAM hit**: refresh the LRU position, return the entry.
+    /// 2. **Disk hit**: the key was LRU-demoted but its artifact is still
+    ///    open — rebuild the entry zero-copy from the mapping (no O(|E|)
+    ///    work) and promote it back to the RAM tier.
+    /// 3. **Single-flight wait**: another resolver is already
+    ///    materializing this key — sleep on the condvar and re-check.
+    /// 4. **Cold start**: an artifact with a matching digest exists in
+    ///    the artifact directory — load it (counts as an artifact hit).
+    /// 5. **Full preparation** (counted in [`Self::preparations`]),
+    ///    writing through to the artifact directory when one is
+    ///    configured so later evictions demote instead of drop.
+    ///
+    /// Steps 4–5 run outside the registry lock so other graphs keep
+    /// serving; the pending guard makes concurrent first-uses of the same
+    /// key prepare exactly once.
     pub fn resolve(&self, name: &str, b: usize, shards: usize) -> Result<Arc<GraphEntry>> {
         loop {
-            // snapshot under the lock
-            let (key, graph, epoch) = {
+            // phase 1: under the lock — RAM hit, disk promotion, wait, or
+            // claim the key for materialization
+            let (key, graph, epoch, digest) = {
                 let mut inner = self.inner.lock().unwrap();
-                let (key, graph, epoch) = inner
-                    .graphs
-                    .get_key_value(name)
-                    .map(|(k, s)| (k.clone(), s.graph.clone(), s.epoch))
-                    .ok_or_else(|| anyhow!("unknown graph {name}"))?;
-                let prep_key = PrepKey { graph: key.clone(), epoch, b, shards };
-                if let Some(pos) = inner.resident.iter().position(|(k, _)| *k == prep_key) {
-                    // hit: refresh LRU position
-                    let hit = inner.resident.remove(pos);
-                    let entry = hit.1.clone();
-                    inner.resident.push(hit);
-                    return Ok(entry);
+                loop {
+                    let (key, graph, epoch, digest) = inner
+                        .graphs
+                        .get_key_value(name)
+                        .map(|(k, s)| (k.clone(), s.graph.clone(), s.epoch, s.digest))
+                        .ok_or_else(|| anyhow!("unknown graph {name}"))?;
+                    let prep_key = PrepKey { graph: key.clone(), epoch, b, shards };
+                    if let Some(pos) = inner.resident.iter().position(|(k, _)| *k == prep_key) {
+                        // RAM hit: refresh LRU position
+                        let hit = inner.resident.remove(pos);
+                        let entry = hit.1.clone();
+                        inner.resident.push(hit);
+                        return Ok(entry);
+                    }
+                    if let Some(pos) =
+                        inner.disk_resident.iter().position(|(k, _)| *k == prep_key)
+                    {
+                        // disk hit: promote zero-copy from the open artifact
+                        let (pk, art) = inner.disk_resident.remove(pos);
+                        match art.load_prepared() {
+                            Ok(pg) => {
+                                let entry = Arc::new(make_entry(
+                                    key.clone(),
+                                    epoch,
+                                    graph,
+                                    Arc::new(pg),
+                                    Some(art),
+                                ));
+                                *inner.artifact_hits.entry(key).or_insert(0) += 1;
+                                inner.resident.push((pk, entry.clone()));
+                                self.evict_locked(&mut inner);
+                                return Ok(entry);
+                            }
+                            // unreadable artifact: the disk entry is gone,
+                            // fall through to a full materialization
+                            Err(_) => continue,
+                        }
+                    }
+                    if inner.pending.contains(&prep_key) {
+                        inner = self.cv.wait(inner).unwrap();
+                        continue; // re-check every tier after waking
+                    }
+                    inner.pending.push(prep_key);
+                    break (key, graph, epoch, digest);
                 }
-                (key, graph, epoch)
             };
-            // miss: prepare outside the lock
-            let entry = Arc::new(prepare_entry(key.clone(), epoch, graph, b, shards));
+            // phase 2: materialize outside the lock (artifact cold start
+            // or full preparation + write-through)
+            let (entry, from_artifact) = self.materialize(&key, epoch, graph, digest, b, shards);
+            // phase 3: release the claim, publish the entry
             let mut inner = self.inner.lock().unwrap();
+            let prep_key = PrepKey { graph: key.clone(), epoch, b, shards };
+            inner.pending.retain(|k| *k != prep_key);
+            self.cv.notify_all();
             let slot = inner.graphs.get(&key).ok_or_else(|| anyhow!("graph {name} removed"))?;
             if slot.epoch != epoch {
                 continue; // reloaded while preparing: redo on the new snapshot
             }
-            let prep_key = PrepKey { graph: key.clone(), epoch, b, shards };
             if let Some(pos) = inner.resident.iter().position(|(k, _)| *k == prep_key) {
-                return Ok(inner.resident[pos].1.clone()); // lost the race
+                return Ok(inner.resident[pos].1.clone()); // lost a race
+            }
+            if from_artifact {
+                *inner.artifact_hits.entry(key.clone()).or_insert(0) += 1;
             }
             inner.resident.push((prep_key, entry.clone()));
-            while inner.resident.len() > self.capacity {
-                inner.resident.remove(0); // LRU eviction; in-flight Arcs survive
-            }
+            self.evict_locked(&mut inner);
             return Ok(entry);
+        }
+    }
+
+    /// Build the entry for a key that missed every resident tier: try the
+    /// artifact directory first (digest + geometry must match), else run
+    /// the full O(|E|) preparation and write through. Returns the entry
+    /// and whether it came from an artifact.
+    fn materialize(
+        &self,
+        key: &Arc<str>,
+        epoch: u64,
+        graph: Arc<Graph>,
+        digest: u64,
+        b: usize,
+        shards: usize,
+    ) -> (Arc<GraphEntry>, bool) {
+        if let Some(dir) = &self.artifact_dir {
+            let path = artifact_path(dir, digest, b, shards);
+            if let Ok(art) = ScheduleArtifact::open(&path) {
+                let geometry_ok = art.digest() == digest
+                    && art.b() == b
+                    && art.num_shards() == shards
+                    && art.num_vertices() == graph.num_vertices;
+                if geometry_ok {
+                    if let Ok(pg) = art.load_prepared() {
+                        let entry = make_entry(
+                            key.clone(),
+                            epoch,
+                            graph,
+                            Arc::new(pg),
+                            Some(Arc::new(art)),
+                        );
+                        return (Arc::new(entry), true);
+                    }
+                }
+            }
+        }
+        self.preparations.fetch_add(1, Ordering::Relaxed);
+        let prepared = Arc::new(PreparedGraph::new_sharded(&graph, b, shards));
+        // write-through (best effort): a failure here only costs the
+        // ability to demote/cold-start — serving proceeds from RAM
+        let artifact = self.artifact_dir.as_ref().and_then(|dir| {
+            let path = artifact_path(dir, digest, b, shards);
+            write_artifact(&path, &prepared, digest, &default_precisions()).ok()?;
+            ScheduleArtifact::open(&path).ok().map(Arc::new)
+        });
+        (Arc::new(make_entry(key.clone(), epoch, graph, prepared, artifact)), false)
+    }
+
+    /// Enforce both tier bounds. RAM eviction prefers the oldest entry
+    /// nobody outside the registry holds — an entry with in-flight
+    /// batches (external `Arc`s) is only evicted when *every* resident
+    /// entry is in flight. Evicted entries with an artifact demote to the
+    /// disk tier; the rest drop (in-flight `Arc`s keep them alive either
+    /// way).
+    fn evict_locked(&self, inner: &mut RegistryInner) {
+        while inner.resident.len() > self.capacity {
+            let pos = inner
+                .resident
+                .iter()
+                .position(|(_, e)| Arc::strong_count(e) == 1)
+                .unwrap_or(0);
+            let (pk, entry) = inner.resident.remove(pos);
+            if let Some(art) = entry.artifact.clone() {
+                inner.disk_resident.retain(|(k, _)| *k != pk);
+                inner.disk_resident.push((pk, art));
+            }
+        }
+        while inner.disk_resident.len() > self.disk_capacity {
+            inner.disk_resident.remove(0);
         }
     }
 
@@ -411,6 +712,8 @@ impl GraphRegistry {
     /// replace the resident entries. Workers pick up the new epoch on
     /// their next batch; batches already running keep the old entry's
     /// `Arc` until they finish, so no in-flight request is dropped.
+    /// Disk-tier entries of the old epoch are purged too (their digest no
+    /// longer matches unless the content is unchanged).
     pub fn reload_with(&self, name: &str, source: GraphSource) -> Result<u64> {
         // phase 1: snapshot the old epoch and the resident configurations
         let (key, old_epoch, configs) = {
@@ -431,12 +734,13 @@ impl GraphRegistry {
         };
         // phase 2: load + re-prepare outside the lock (serving continues)
         let graph = source.load().with_context(|| format!("reload graph {name}"))?;
+        let digest = graph_digest(&graph);
         let new_epoch = old_epoch + 1;
         let prepared: Vec<_> = configs
             .into_iter()
             .map(|(b, shards)| {
-                let entry =
-                    Arc::new(prepare_entry(key.clone(), new_epoch, graph.clone(), b, shards));
+                let (entry, _) =
+                    self.materialize(&key, new_epoch, graph.clone(), digest, b, shards);
                 (b, shards, entry)
             })
             .collect();
@@ -451,16 +755,16 @@ impl GraphRegistry {
         }
         slot.epoch = new_epoch;
         slot.graph = graph;
+        slot.digest = digest;
         slot.source = source;
         slot.reloads += 1;
         inner.resident.retain(|(k, _)| k.graph != key || k.epoch >= new_epoch);
+        inner.disk_resident.retain(|(k, _)| k.graph != key || k.epoch >= new_epoch);
         for (b, shards, entry) in prepared {
             let prep_key = PrepKey { graph: key.clone(), epoch: new_epoch, b, shards };
             inner.resident.push((prep_key, entry));
         }
-        while inner.resident.len() > self.capacity {
-            inner.resident.remove(0);
-        }
+        self.evict_locked(&mut inner);
         Ok(new_epoch)
     }
 }
@@ -471,19 +775,19 @@ impl Default for GraphRegistry {
     }
 }
 
-fn prepare_entry(
+fn make_entry(
     name: Arc<str>,
     epoch: u64,
     graph: Arc<Graph>,
-    b: usize,
-    shards: usize,
+    prepared: Arc<PreparedGraph>,
+    artifact: Option<Arc<ScheduleArtifact>>,
 ) -> GraphEntry {
-    let prepared = Arc::new(PreparedGraph::new_sharded(&graph, b, shards));
     GraphEntry {
         name,
         epoch,
         graph,
         prepared,
+        artifact,
         csr: OnceLock::new(),
         values: Mutex::new(Vec::new()),
         batches_served: AtomicU64::new(0),
@@ -497,6 +801,13 @@ mod tests {
 
     fn tiny(n: usize, seed: u64) -> Graph {
         crate::graph::generators::watts_strogatz(n.max(16), 4, 0.2, seed)
+    }
+
+    fn tmp_artifact_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ppr-registry-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
     }
 
     #[test]
@@ -529,6 +840,9 @@ mod tests {
         assert_eq!(e3.prepared.num_shards(), 2);
         assert_eq!(reg.resident(), 2);
         assert!(reg.resolve("nope", 8, 1).is_err());
+        // without an artifact dir, nothing reaches the disk tier
+        assert_eq!(reg.resident_disk(), 0);
+        assert_eq!(reg.preparations(), 2);
     }
 
     #[test]
@@ -546,11 +860,29 @@ mod tests {
     }
 
     #[test]
-    fn duplicate_and_empty_names_rejected() {
+    fn duplicate_and_empty_names_rejected_with_typed_errors() {
         let reg = GraphRegistry::default();
         reg.register_graph("a", tiny(16, 3)).unwrap();
-        assert!(reg.register_graph("a", tiny(16, 4)).is_err());
-        assert!(reg.register_graph("  ", tiny(16, 5)).is_err());
+        // the duplicate is a typed error naming the offending graph, and
+        // the original registration survives untouched
+        match reg.register_graph("a", tiny(64, 4)) {
+            Err(RegisterError::Duplicate { name }) => assert_eq!(name, "a"),
+            other => panic!("expected Duplicate, got {other:?}"),
+        }
+        assert_eq!(reg.num_vertices("a"), Some(16), "first source must win");
+        match reg.register_graph("  ", tiny(16, 5)) {
+            Err(RegisterError::EmptyName) => {}
+            other => panic!("expected EmptyName, got {other:?}"),
+        }
+        // load failures carry the name and the cause chain
+        match reg.register("ghost", GraphSource::parse("dataset:BOGUS").unwrap()) {
+            Err(RegisterError::Load { name, detail }) => {
+                assert_eq!(name, "ghost");
+                assert!(detail.contains("BOGUS"), "detail: {detail}");
+            }
+            other => panic!("expected Load, got {other:?}"),
+        }
+        assert_eq!(reg.len(), 1);
     }
 
     #[test]
@@ -565,6 +897,112 @@ mod tests {
         let again = reg.resolve("a", 8, 1).unwrap();
         assert_eq!(again.prepared.num_shards(), 1);
         assert_eq!(reg.resident(), 2);
+        assert_eq!(reg.preparations(), 4, "re-resolving an evicted key re-prepares");
+    }
+
+    #[test]
+    fn eviction_spares_in_flight_entries() {
+        let reg = GraphRegistry::new(2);
+        reg.register_graph("a", tiny(16, 1)).unwrap();
+        // hold the first entry: it has an external Arc ("in-flight batch")
+        let held = reg.resolve("a", 8, 1).unwrap();
+        held.record_batch_served();
+        // churn enough other keys to trigger eviction repeatedly
+        for shards in [2usize, 3, 4, 5] {
+            reg.resolve("a", 8, shards).unwrap();
+        }
+        assert_eq!(reg.resident(), 2);
+        // the held entry was never evicted: resolving it again returns the
+        // exact same Arc (no re-preparation)
+        let preps = reg.preparations();
+        let again = reg.resolve("a", 8, 1).unwrap();
+        assert!(Arc::ptr_eq(&held, &again), "in-flight entry must stay resident");
+        assert_eq!(reg.preparations(), preps, "no re-preparation for the held key");
+    }
+
+    #[test]
+    fn concurrent_resolves_prepare_once() {
+        // single-flight: a burst of first-uses of the same key runs one
+        // O(|E|) preparation; everyone shares the same entry
+        let reg = Arc::new(GraphRegistry::new(4));
+        reg.register_graph("a", tiny(256, 11)).unwrap();
+        let entries: Vec<Arc<GraphEntry>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let reg = reg.clone();
+                    scope.spawn(move || reg.resolve("a", 8, 2).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(reg.preparations(), 1, "single-flight must prepare exactly once");
+        for e in &entries[1..] {
+            assert!(Arc::ptr_eq(&entries[0], e), "all resolvers share one entry");
+        }
+        assert_eq!(reg.resident(), 1);
+    }
+
+    #[test]
+    fn artifact_dir_enables_demotion_and_promotion() {
+        let dir = tmp_artifact_dir("ladder");
+        let reg = GraphRegistry::new(1).with_artifact_dir(&dir);
+        assert_eq!(reg.artifact_dir(), Some(dir.as_path()));
+        reg.register_graph("a", tiny(64, 21)).unwrap();
+
+        let first = reg.resolve("a", 8, 1).unwrap();
+        assert!(first.has_artifact(), "preparation writes through to the artifact tier");
+        let x_first = first.prepared.sharded.shards[0].x.to_vec();
+        drop(first);
+        assert_eq!(reg.preparations(), 1);
+
+        // second key evicts the first, which demotes to disk instead of dropping
+        reg.resolve("a", 8, 2).unwrap();
+        assert_eq!(reg.resident(), 1);
+        assert_eq!(reg.resident_disk(), 1, "evicted entry must demote to the disk tier");
+        assert_eq!(reg.preparations(), 2);
+
+        // resolving the demoted key promotes it back: an artifact hit, not
+        // a third preparation, and the schedule is bit-identical
+        let promoted = reg.resolve("a", 8, 1).unwrap();
+        assert_eq!(reg.preparations(), 2, "promotion must not re-prepare");
+        assert_eq!(reg.artifact_hits_for("a"), 1);
+        assert!(promoted.prepared.sharded.shards[0].x.is_mapped(), "promoted = zero-copy");
+        assert_eq!(promoted.prepared.sharded.shards[0].x, x_first);
+        // artifact-backed value streams come from the mapping too
+        match promoted.values(Precision::Fixed(26)) {
+            ValueStreams::Fixed(v) => assert!(v[0].is_mapped()),
+            other => panic!("fixed streams expected, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cold_start_resolves_from_artifact_across_registries() {
+        // a fresh registry process pointed at the same artifact dir skips
+        // the O(|E|) preparation entirely when the digest matches
+        let dir = tmp_artifact_dir("coldstart");
+        let g = tiny(64, 31);
+        {
+            let reg = GraphRegistry::new(2).with_artifact_dir(&dir);
+            reg.register_graph("a", g.clone()).unwrap();
+            reg.resolve("a", 8, 2).unwrap();
+            assert_eq!(reg.preparations(), 1);
+        }
+        let reg = GraphRegistry::new(2).with_artifact_dir(&dir);
+        reg.register_graph("a", g.clone()).unwrap();
+        let e = reg.resolve("a", 8, 2).unwrap();
+        assert_eq!(reg.preparations(), 0, "cold start must load, not prepare");
+        assert_eq!(reg.artifact_hits_for("a"), 1);
+        assert!(e.prepared.sharded.shards[0].x.is_mapped());
+        e.prepared.sharded.validate().expect("artifact-loaded schedule validates");
+
+        // a different graph under the same name misses the artifact
+        let reg2 = GraphRegistry::new(2).with_artifact_dir(&dir);
+        reg2.register_graph("a", tiny(96, 32)).unwrap();
+        reg2.resolve("a", 8, 2).unwrap();
+        assert_eq!(reg2.preparations(), 1, "digest mismatch must re-prepare");
+        assert_eq!(reg2.artifact_hits_for("a"), 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -574,12 +1012,14 @@ mod tests {
         let old = reg.resolve("a", 8, 1).unwrap();
         assert_eq!(old.epoch, 0);
         old.record_batch_served();
+        let old_digest = reg.digest("a").unwrap();
 
         let epoch = reg.reload_with("a", GraphSource::InMemory(Arc::new(tiny(48, 8)))).unwrap();
         assert_eq!(epoch, 1);
         assert_eq!(reg.epoch("a"), Some(1));
         assert_eq!(reg.reloads("a"), Some(1));
         assert_eq!(reg.num_vertices("a"), Some(48));
+        assert_ne!(reg.digest("a"), Some(old_digest), "new content, new digest");
 
         // the resident entry was re-prepared at the new epoch already
         assert_eq!(reg.resident(), 1);

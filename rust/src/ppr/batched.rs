@@ -42,6 +42,7 @@ use crate::spmv::fast::{scatter_fused, FusedUpdate};
 use crate::spmv::shard::{fan_out, fan_out_mode, PARALLEL_WORK_PER_SHARD};
 use crate::spmv::topk::{merge_shard_heaps, LaneHeaps, MergedTopK, RankedLanes};
 use crate::spmv::Datapath;
+use crate::util::mmap::PodVec;
 use std::sync::Arc;
 
 /// How [`BatchedPpr`] executes one PPR iteration.
@@ -160,7 +161,7 @@ pub struct BatchedPpr<D: Datapath> {
     /// Per-shard quantized value streams (the per-CU channel contents).
     /// `Arc`-shared so every engine of one `(graph, precision)` pair —
     /// worker-pool replicas, ladder rungs — reads one resident copy.
-    vals: Arc<Vec<Vec<D::Word>>>,
+    vals: Arc<Vec<PodVec<D::Word>>>,
     // quantized constants of Eq. 1
     alpha: D::Word,
     one_minus_alpha: D::Word,
@@ -199,7 +200,7 @@ impl<D: Datapath> BatchedPpr<D> {
     pub fn with_shared_values(
         datapath: D,
         graph: Arc<PreparedGraph>,
-        vals: Arc<Vec<Vec<D::Word>>>,
+        vals: Arc<Vec<PodVec<D::Word>>>,
         kappa: usize,
         alpha: f64,
     ) -> Self {

@@ -40,17 +40,20 @@ use crate::fixed::{FixedFormat, LadderSpec, Precision};
 use crate::graph::VertexId;
 use crate::spmv::datapath::{FixedPath, FloatPath};
 use crate::spmv::topk::RankedLanes;
+use crate::util::mmap::PodVec;
 use std::sync::Arc;
 
 /// Per-shard value streams quantized for one precision — the unit of the
 /// registry's per-precision cache. `Arc`-shared: every engine and every
 /// ladder rung bound to the same `(graph, precision)` reads one copy.
+/// Each shard's stream is a [`PodVec`]: owned when quantized in RAM,
+/// zero-copy when served out of a mapped schedule artifact.
 #[derive(Debug, Clone)]
 pub enum ValueStreams {
     /// Raw fixed-point words (any Q1.n rung).
-    Fixed(Arc<Vec<Vec<u64>>>),
+    Fixed(Arc<Vec<PodVec<u64>>>),
     /// IEEE f32 words (the float rung / engine).
-    Float(Arc<Vec<Vec<f32>>>),
+    Float(Arc<Vec<PodVec<f32>>>),
 }
 
 impl ValueStreams {
@@ -69,8 +72,8 @@ impl ValueStreams {
     /// Total resident words across shards (cache accounting).
     pub fn num_words(&self) -> usize {
         match self {
-            ValueStreams::Fixed(v) => v.iter().map(Vec::len).sum(),
-            ValueStreams::Float(v) => v.iter().map(Vec::len).sum(),
+            ValueStreams::Fixed(v) => v.iter().map(|s| s.len()).sum(),
+            ValueStreams::Float(v) => v.iter().map(|s| s.len()).sum(),
         }
     }
 }

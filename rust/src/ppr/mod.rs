@@ -32,6 +32,7 @@ pub use ladder::{LadderOutput, LadderPpr, LadderScores, RungSegment, ValueStream
 
 use crate::graph::{CooMatrix, Graph, VertexId};
 use crate::spmv::{PacketSchedule, ShardedSchedule};
+use std::sync::OnceLock;
 
 /// Solver parameters shared by every engine.
 #[derive(Debug, Clone, Copy)]
@@ -90,7 +91,10 @@ impl PprConfig {
 #[derive(Debug, Clone)]
 pub struct PreparedGraph {
     /// The aligned COO packet schedule (one stream, one DRAM channel).
-    pub sched: PacketSchedule,
+    /// RAM preparation fills this eagerly; artifact-loaded graphs derive
+    /// it lazily from the shard streams on first use — see
+    /// [`Self::sched`].
+    sched: OnceLock<PacketSchedule>,
     /// The destination-partitioned packet schedule (one stream per shard;
     /// with one shard its stream is identical to `sched`'s).
     pub sharded: ShardedSchedule,
@@ -123,11 +127,7 @@ impl PreparedGraph {
     /// Preprocess an existing COO matrix into `num_shards` sub-streams.
     ///
     /// Both layouts are retained: the native engine sweeps `sharded`, the
-    /// PJRT marshaller and the architecture model read `sched`. At the
-    /// paper's target scale (≤ ~2·10⁶ edges, see `graph::VertexId`) the
-    /// duplicated stream is tens of megabytes; a future revision can
-    /// derive the single stream by concatenating the shard streams if
-    /// that ever matters.
+    /// PJRT marshaller and the architecture model read [`Self::sched`].
     pub fn from_coo_sharded(coo: &CooMatrix, b: usize, num_shards: usize) -> Self {
         let sched = PacketSchedule::build(coo, b);
         let sharded = if num_shards == 1 {
@@ -139,12 +139,80 @@ impl PreparedGraph {
         let dangling_idx = (0..coo.num_vertices as VertexId)
             .filter(|&v| coo.dangling[v as usize])
             .collect();
-        Self { sched, sharded, dangling_idx, num_vertices: coo.num_vertices }
+        let cell = OnceLock::new();
+        cell.set(sched).expect("fresh cell");
+        Self { sched: cell, sharded, dangling_idx, num_vertices: coo.num_vertices }
+    }
+
+    /// Wrap an already-built sharded schedule (e.g. one loaded zero-copy
+    /// from a schedule artifact, [`crate::spmv::artifact`]); the
+    /// single-stream layout is derived lazily on first use so the mmap'd
+    /// hot path pays nothing for it.
+    pub fn from_sharded(sharded: ShardedSchedule) -> Self {
+        let num_vertices = sharded.num_vertices;
+        let dangling_idx = sharded
+            .shards
+            .iter()
+            .flat_map(|s| s.dangling_idx.iter().copied())
+            .collect();
+        Self { sched: OnceLock::new(), sharded, dangling_idx, num_vertices }
+    }
+
+    /// The single-stream packet schedule. RAM-prepared graphs return the
+    /// eagerly built stream; artifact-loaded graphs reconstruct it once,
+    /// on first use, by de-padding the shard streams (padding slots are
+    /// exactly the `val == 0.0` slots — real transition-matrix values are
+    /// `1/outdeg > 0`), concatenating them back into the destination-
+    /// sorted edge stream, and re-aligning. The reconstruction is
+    /// bit-identical to building from the COO matrix directly because
+    /// shard ranges tile the destination axis in order and alignment
+    /// preserves the relative order of real edges.
+    pub fn sched(&self) -> &PacketSchedule {
+        self.sched.get_or_init(|| derive_single_stream(&self.sharded))
     }
 
     /// Number of shards (compute units) the graph was prepared for.
     pub fn num_shards(&self) -> usize {
         self.sharded.num_shards()
+    }
+}
+
+/// Rebuild the single-channel packet schedule from the shard streams.
+/// See [`PreparedGraph::sched`] for the padding-recovery argument.
+fn derive_single_stream(sharded: &ShardedSchedule) -> PacketSchedule {
+    let mut x = Vec::with_capacity(sharded.num_edges);
+    let mut y = Vec::with_capacity(sharded.num_edges);
+    let mut val = Vec::with_capacity(sharded.num_edges);
+    for s in &sharded.shards {
+        for i in 0..s.num_slots() {
+            let v = s.val[i];
+            if v != 0.0 {
+                x.push(s.x[i]);
+                y.push(s.y[i]);
+                val.push(v);
+            }
+        }
+    }
+    assert_eq!(
+        x.len(),
+        sharded.num_edges,
+        "de-padded shard streams must recover exactly the real edges"
+    );
+    let (x, y, val) = crate::spmv::packets::align_stream(sharded.b, &x, &y, &val);
+    let mut dangling = vec![false; sharded.num_vertices];
+    for s in &sharded.shards {
+        for &v in &s.dangling_idx {
+            dangling[v as usize] = true;
+        }
+    }
+    PacketSchedule {
+        b: sharded.b,
+        num_vertices: sharded.num_vertices,
+        num_edges: sharded.num_edges,
+        x,
+        y,
+        val,
+        dangling,
     }
 }
 
@@ -196,6 +264,26 @@ mod tests {
         let merged: Vec<VertexId> =
             pg.sharded.shards.iter().flat_map(|s| s.dangling_idx.iter().copied()).collect();
         assert_eq!(merged, pg.dangling_idx);
+    }
+
+    #[test]
+    fn lazy_single_stream_matches_eager_bit_exact() {
+        // an artifact-loaded graph derives `sched` from its shard streams;
+        // the reconstruction must equal the eager COO-built stream exactly
+        let g = crate::graph::generators::holme_kim(200, 4, 0.3, 5);
+        for shards in [1usize, 3, 4] {
+            let eager = PreparedGraph::new_sharded(&g, 8, shards);
+            let lazy = PreparedGraph::from_sharded(eager.sharded.clone());
+            assert_eq!(lazy.dangling_idx, eager.dangling_idx, "shards={shards}");
+            let a = eager.sched();
+            let b = lazy.sched();
+            assert_eq!(a.x, b.x, "shards={shards}");
+            assert_eq!(a.y, b.y);
+            assert_eq!(a.val, b.val);
+            assert_eq!(a.dangling, b.dangling);
+            assert_eq!(a.num_edges, b.num_edges);
+            b.validate().expect("reconstructed stream validates");
+        }
     }
 
     #[test]

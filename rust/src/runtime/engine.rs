@@ -52,10 +52,10 @@ impl PjrtPprEngine {
                 spec.vertices
             );
         }
-        if graph.sched.num_slots() > spec.edges {
+        if graph.sched().num_slots() > spec.edges {
             bail!(
                 "graph stream has {} slots but artifact is sized for {}",
-                graph.sched.num_slots(),
+                graph.sched().num_slots(),
                 spec.edges
             );
         }
@@ -69,9 +69,9 @@ impl PjrtPprEngine {
     /// point at vertex 0 — they contribute nothing.
     fn marshal(spec: &ArtifactSpec, graph: &PreparedGraph) -> MarshalledGraph {
         let e = spec.edges;
-        let mut x: Vec<i32> = graph.sched.x.iter().map(|&v| v as i32).collect();
-        let mut y: Vec<i32> = graph.sched.y.iter().map(|&v| v as i32).collect();
-        let mut val = graph.sched.val.clone();
+        let mut x: Vec<i32> = graph.sched().x.iter().map(|&v| v as i32).collect();
+        let mut y: Vec<i32> = graph.sched().y.iter().map(|&v| v as i32).collect();
+        let mut val = graph.sched().val.clone();
         x.resize(e, 0);
         y.resize(e, 0);
         val.resize(e, 0.0);

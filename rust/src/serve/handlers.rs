@@ -75,6 +75,10 @@ fn metrics(state: &ServeState) -> Response {
         breaker_states: state.breaker.states(),
         breaker_opens: state.breaker.opens(),
         breaker_cycles: state.breaker.cycles(),
+        registry_resident_ram: state.registry.resident() as u64,
+        registry_resident_disk: state.registry.resident_disk() as u64,
+        registry_capacity: state.registry.capacity() as u64,
+        artifact_hits: state.registry.artifact_hits(),
     };
     let text = state.metrics.render_with(&depths, &core);
     Response::text(200, "text/plain; version=0.0.4", text)

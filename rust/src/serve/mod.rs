@@ -466,6 +466,12 @@ mod tests {
         assert!(text.contains("graph=\"ws\""), "{text}");
         assert!(text.contains("ppr_http_request_duration_seconds_bucket"), "{text}");
         assert!(text.contains("ppr_http_queue_depth"), "{text}");
+        // registry residency families (DESIGN.md §11): the query above
+        // resolved "ws", so at least one entry is RAM-resident
+        assert!(text.contains("ppr_registry_resident_ram 1"), "{text}");
+        assert!(text.contains("ppr_registry_resident_disk 0"), "{text}");
+        assert!(text.contains("ppr_registry_capacity"), "{text}");
+        assert!(text.contains("ppr_registry_artifact_hits_total{graph=\"ws\"} 0"), "{text}");
 
         shutdown_stack(front, server);
     }

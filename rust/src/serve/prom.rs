@@ -21,6 +21,10 @@
 //! | `ppr_pool_caught_panics_total` | counter | — |
 //! | `ppr_breaker_state` | gauge | `graph`, `class` (0/1/2) |
 //! | `ppr_breaker_open_total` / `ppr_breaker_cycles_total` | counter | — |
+//! | `ppr_registry_resident_ram` | gauge | — |
+//! | `ppr_registry_resident_disk` | gauge | — |
+//! | `ppr_registry_capacity` | gauge | — |
+//! | `ppr_registry_artifact_hits_total` | counter | `graph` |
 //!
 //! The serving-core health families (workers, breaker, degradation —
 //! DESIGN.md §10) are sampled by the caller at scrape time and passed
@@ -104,6 +108,15 @@ pub struct CoreHealth {
     pub breaker_opens: u64,
     /// Completed open → half-open → closed recovery cycles.
     pub breaker_cycles: u64,
+    /// Fully-prepared registry entries resident in RAM (DESIGN.md §11).
+    pub registry_resident_ram: u64,
+    /// Registry entries demoted to disk-resident schedule artifacts.
+    pub registry_resident_disk: u64,
+    /// RAM residency cap of the registry.
+    pub registry_capacity: u64,
+    /// Artifact cold-start hits per graph (promotions and cross-process
+    /// cold starts served from an on-disk artifact instead of a re-prep).
+    pub artifact_hits: Vec<(Arc<str>, u64)>,
 }
 
 /// Thread-safe metric registry of the front door.
@@ -280,6 +293,26 @@ impl HttpMetrics {
         out.push_str("# TYPE ppr_breaker_cycles_total counter\n");
         out.push_str(&format!("ppr_breaker_cycles_total {}\n", core.breaker_cycles));
 
+        out.push_str("# HELP ppr_registry_resident_ram Fully-prepared registry entries resident in RAM.\n");
+        out.push_str("# TYPE ppr_registry_resident_ram gauge\n");
+        out.push_str(&format!("ppr_registry_resident_ram {}\n", core.registry_resident_ram));
+
+        out.push_str("# HELP ppr_registry_resident_disk Registry entries demoted to disk-resident schedule artifacts.\n");
+        out.push_str("# TYPE ppr_registry_resident_disk gauge\n");
+        out.push_str(&format!("ppr_registry_resident_disk {}\n", core.registry_resident_disk));
+
+        out.push_str("# HELP ppr_registry_capacity RAM residency cap of the graph registry.\n");
+        out.push_str("# TYPE ppr_registry_capacity gauge\n");
+        out.push_str(&format!("ppr_registry_capacity {}\n", core.registry_capacity));
+
+        out.push_str("# HELP ppr_registry_artifact_hits_total Cold starts served from an on-disk schedule artifact instead of a re-preparation.\n");
+        out.push_str("# TYPE ppr_registry_artifact_hits_total counter\n");
+        for (graph, n) in &core.artifact_hits {
+            out.push_str(&format!(
+                "ppr_registry_artifact_hits_total{{graph=\"{graph}\"}} {n}\n"
+            ));
+        }
+
         out
     }
 }
@@ -416,6 +449,10 @@ mod tests {
             ],
             breaker_opens: 3,
             breaker_cycles: 1,
+            registry_resident_ram: 2,
+            registry_resident_disk: 4,
+            registry_capacity: 2,
+            artifact_hits: vec![(Arc::from("ws"), 6), (Arc::from("er"), 0)],
         };
         let text = m.render_with(&[], &core);
         validate_exposition(&text).expect("core families must validate");
@@ -430,6 +467,11 @@ mod tests {
         assert!(text.contains("ppr_breaker_state{graph=\"er\",class=\"fast\"} 0\n"));
         assert!(text.contains("ppr_breaker_open_total 3\n"));
         assert!(text.contains("ppr_breaker_cycles_total 1\n"));
+        assert!(text.contains("ppr_registry_resident_ram 2\n"));
+        assert!(text.contains("ppr_registry_resident_disk 4\n"));
+        assert!(text.contains("ppr_registry_capacity 2\n"));
+        assert!(text.contains("ppr_registry_artifact_hits_total{graph=\"ws\"} 6\n"));
+        assert!(text.contains("ppr_registry_artifact_hits_total{graph=\"er\"} 0\n"));
     }
 
     #[test]

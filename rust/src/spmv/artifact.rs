@@ -1,0 +1,772 @@
+//! On-disk **schedule artifacts** (DESIGN.md §11) — the serialized form
+//! of a prepared [`ShardedSchedule`] plus its per-precision quantized
+//! value streams, enabling out-of-core serving and near-instant registry
+//! cold starts.
+//!
+//! Re-preparing a graph is O(|E|) compute (COO build, destination sort,
+//! per-shard alignment, quantization). The streaming format is sequential
+//! by construction, which makes it ideal disk residency: an artifact
+//! stores the exact per-shard packet streams the sweep consumes, so a
+//! cold start is a header parse plus an `mmap` — the packet stream is
+//! served zero-copy out of the page cache through
+//! [`PodVec`](crate::util::mmap::PodVec) windows.
+//!
+//! ## File format (version 1, all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic "PPRSCHD1"
+//! 8       4     format version (u32, = 1)
+//! 12      4     reserved (0)
+//! 16      8     graph digest (FNV-1a 64 over |V|, |E|, edge pairs)
+//! 24      8     packet width B
+//! 32      8     shard count S
+//! 40      8     |V|
+//! 48      8     |E| (real edges, padding excluded)
+//! 56      8     section count
+//! 64      8     header checksum (FNV-1a 64 over bytes [0, 72+40·sections)
+//!               with this field zeroed)
+//! 72      40·k  section table (one 40-byte entry per section)
+//! ...           payload sections, each 8-byte aligned
+//! ```
+//!
+//! Section table entry: `kind: u32, shard: u32, param: u64, offset: u64,
+//! len: u64 (items), reserved: u64`. Kinds: 1 = destination coordinates
+//! (`u32`), 2 = source coordinates (`u32`), 3 = f64 edge values, 4 =
+//! dangling indices (`u32`), 5 = shard ranges (`u64` triples `(dst_start,
+//! dst_end, num_edges)` × S), 6 = fixed-point value stream (`u64`, `param`
+//! = total bits), 7 = f32 value stream.
+//!
+//! **Crash safety**: [`write_artifact`] writes to a `.tmp` sibling, calls
+//! `sync_all`, then renames over the final path — a crash leaves either
+//! the old artifact or none, never a torn file. **Integrity**: the header
+//! checksum covers the header and the whole section table; payload bytes
+//! are trusted once the digest of the registered graph matches the header
+//! digest (a mismatched or truncated payload fails the bounds checks in
+//! [`PodVec::from_mapped`](crate::util::mmap::PodVec::from_mapped) or the
+//! structural checks in [`ScheduleArtifact::load_prepared`]).
+
+use super::shard::{ShardStream, ShardedSchedule};
+use crate::fixed::{FixedFormat, Precision};
+use crate::graph::{Graph, VertexId};
+use crate::ppr::{PreparedGraph, ValueStreams};
+use crate::util::mmap::{Mmap, Pod, PodVec};
+use anyhow::{bail, ensure, Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// File magic: "PPRSCHD1".
+pub const ARTIFACT_MAGIC: [u8; 8] = *b"PPRSCHD1";
+/// Current format version.
+pub const ARTIFACT_VERSION: u32 = 1;
+/// Artifact file extension.
+pub const ARTIFACT_EXT: &str = "ppra";
+
+const HEADER_BYTES: usize = 72;
+const SECTION_ENTRY_BYTES: usize = 40;
+
+const KIND_X: u32 = 1;
+const KIND_Y: u32 = 2;
+const KIND_VAL: u32 = 3;
+const KIND_DANGLING: u32 = 4;
+const KIND_RANGES: u32 = 5;
+const KIND_FIXED_VALS: u32 = 6;
+const KIND_FLOAT_VALS: u32 = 7;
+
+/// Incremental FNV-1a 64-bit hash (public-domain reference constants).
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    /// Fresh hasher at the FNV offset basis.
+    pub fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Absorb bytes.
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    /// The digest so far.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Content digest of a graph snapshot: FNV-1a 64 over |V|, |E| and every
+/// `(src, dst)` pair in registration order. An artifact is only resolved
+/// for a graph whose digest matches its header — reloads that change the
+/// edge set change the digest and fall back to a fresh preparation.
+pub fn graph_digest(g: &Graph) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(&(g.num_vertices as u64).to_le_bytes());
+    h.update(&(g.edges.len() as u64).to_le_bytes());
+    for &(s, d) in &g.edges {
+        h.update(&s.to_le_bytes());
+        h.update(&d.to_le_bytes());
+    }
+    h.finish()
+}
+
+/// Canonical artifact path inside a cache directory: the file name keys
+/// on `(digest, B, shards)`, so distinct preparations of the same graph
+/// coexist and a reload with different content lands on a new file.
+pub fn artifact_path(dir: &Path, digest: u64, b: usize, shards: usize) -> PathBuf {
+    dir.join(format!("{digest:016x}-b{b}-s{shards}.{ARTIFACT_EXT}"))
+}
+
+/// The value-stream rungs a write-through artifact carries by default:
+/// the union of every [`AccuracyClass`](crate::fixed::AccuracyClass)
+/// ladder (Q1.15, Q1.19, Q1.25) plus the f32 engine. Other precisions
+/// still serve from the artifact — they re-quantize from the mapped f64
+/// value stream on first use.
+pub fn default_precisions() -> Vec<Precision> {
+    vec![
+        Precision::Fixed(16),
+        Precision::Fixed(20),
+        Precision::Fixed(26),
+        Precision::Float32,
+    ]
+}
+
+/// One section-table entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Section {
+    kind: u32,
+    shard: u32,
+    param: u64,
+    /// Absolute byte offset of the payload.
+    offset: u64,
+    /// Payload length in items (item width is implied by `kind`).
+    len: u64,
+}
+
+fn item_bytes(kind: u32) -> usize {
+    match kind {
+        KIND_X | KIND_Y | KIND_DANGLING => 4,
+        KIND_VAL | KIND_RANGES | KIND_FIXED_VALS => 8,
+        KIND_FLOAT_VALS => 4,
+        _ => 0,
+    }
+}
+
+fn align8(off: usize) -> usize {
+    (off + 7) & !7
+}
+
+/// Serialize a prepared schedule (plus quantized value streams for each
+/// of `precisions`) into `path`, atomically: the bytes go to a `.tmp`
+/// sibling which is fsynced and renamed over `path`. Returns the file
+/// size in bytes.
+pub fn write_artifact(
+    path: &Path,
+    prepared: &PreparedGraph,
+    digest: u64,
+    precisions: &[Precision],
+) -> Result<u64> {
+    let sharded = &prepared.sharded;
+    let nshards = sharded.num_shards();
+
+    // plan the section table: ranges first, then per-shard streams, then
+    // per-precision value streams
+    let mut sections: Vec<Section> = Vec::new();
+    let mut plan = |kind: u32, shard: u32, param: u64, len: usize| {
+        sections.push(Section { kind, shard, param, offset: 0, len: len as u64 });
+    };
+    plan(KIND_RANGES, 0, 0, 3 * nshards);
+    for (i, s) in sharded.shards.iter().enumerate() {
+        let i = i as u32;
+        plan(KIND_X, i, 0, s.num_slots());
+        plan(KIND_Y, i, 0, s.num_slots());
+        plan(KIND_VAL, i, 0, s.num_slots());
+        plan(KIND_DANGLING, i, 0, s.dangling_idx.len());
+    }
+    for p in precisions {
+        let (kind, param) = match p {
+            Precision::Fixed(w) => (KIND_FIXED_VALS, *w as u64),
+            Precision::Float32 => (KIND_FLOAT_VALS, 0),
+        };
+        for (i, s) in sharded.shards.iter().enumerate() {
+            plan(kind, i as u32, param, s.num_slots());
+        }
+    }
+
+    // assign aligned offsets
+    let mut cursor = HEADER_BYTES + SECTION_ENTRY_BYTES * sections.len();
+    for sec in &mut sections {
+        cursor = align8(cursor);
+        sec.offset = cursor as u64;
+        cursor += sec.len as usize * item_bytes(sec.kind);
+    }
+    let total_bytes = cursor as u64;
+
+    // header + table, checksummed with the checksum field zeroed
+    let mut head = Vec::with_capacity(HEADER_BYTES + SECTION_ENTRY_BYTES * sections.len());
+    head.extend_from_slice(&ARTIFACT_MAGIC);
+    head.extend_from_slice(&ARTIFACT_VERSION.to_le_bytes());
+    head.extend_from_slice(&0u32.to_le_bytes());
+    head.extend_from_slice(&digest.to_le_bytes());
+    head.extend_from_slice(&(sharded.b as u64).to_le_bytes());
+    head.extend_from_slice(&(nshards as u64).to_le_bytes());
+    head.extend_from_slice(&(sharded.num_vertices as u64).to_le_bytes());
+    head.extend_from_slice(&(sharded.num_edges as u64).to_le_bytes());
+    head.extend_from_slice(&(sections.len() as u64).to_le_bytes());
+    head.extend_from_slice(&0u64.to_le_bytes()); // checksum placeholder
+    for sec in &sections {
+        head.extend_from_slice(&sec.kind.to_le_bytes());
+        head.extend_from_slice(&sec.shard.to_le_bytes());
+        head.extend_from_slice(&sec.param.to_le_bytes());
+        head.extend_from_slice(&sec.offset.to_le_bytes());
+        head.extend_from_slice(&sec.len.to_le_bytes());
+        head.extend_from_slice(&0u64.to_le_bytes());
+    }
+    let mut h = Fnv64::new();
+    h.update(&head);
+    head[64..72].copy_from_slice(&h.finish().to_le_bytes());
+
+    // write-tmp-then-rename: a crash leaves the old artifact or nothing
+    let dir = path.parent().unwrap_or_else(|| Path::new("."));
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create artifact dir {}", dir.display()))?;
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .context("artifact path has no file name")?;
+    let tmp = dir.join(format!(".{file_name}.tmp.{}", std::process::id()));
+    let res = write_payload(&tmp, &head, &sections, sharded);
+    match res {
+        Ok(()) => {}
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename artifact into {}", path.display()))?;
+    // best-effort directory durability for the rename itself
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(total_bytes)
+}
+
+/// Write header + every payload section (with alignment padding) to
+/// `tmp` and fsync it.
+fn write_payload(
+    tmp: &Path,
+    head: &[u8],
+    sections: &[Section],
+    sharded: &ShardedSchedule,
+) -> Result<()> {
+    let file =
+        File::create(tmp).with_context(|| format!("create artifact tmp {}", tmp.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(head)?;
+    let mut written = head.len();
+    for sec in sections {
+        let target = sec.offset as usize;
+        ensure!(target >= written, "section offsets must be monotone");
+        for _ in written..target {
+            w.write_all(&[0u8])?;
+        }
+        written = target + sec.len as usize * item_bytes(sec.kind);
+        let shard = sharded
+            .shards
+            .get(sec.shard as usize)
+            .context("section names a missing shard")?;
+        match (sec.kind, sec.param) {
+            (KIND_RANGES, _) => {
+                for s in &sharded.shards {
+                    w.write_all(&(s.dst_start as u64).to_le_bytes())?;
+                    w.write_all(&(s.dst_end as u64).to_le_bytes())?;
+                    w.write_all(&(s.num_edges as u64).to_le_bytes())?;
+                }
+            }
+            (KIND_X, _) => {
+                for &v in &shard.x {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            (KIND_Y, _) => {
+                for &v in &shard.y {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            (KIND_VAL, _) => {
+                for &v in &shard.val {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            (KIND_DANGLING, _) => {
+                for &v in &shard.dangling_idx {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            (KIND_FIXED_VALS, bits) => {
+                let fmt = FixedFormat::paper(bits as u32);
+                for &v in &shard.val {
+                    w.write_all(&fmt.quantize(v).to_le_bytes())?;
+                }
+            }
+            (KIND_FLOAT_VALS, _) => {
+                for &v in &shard.val {
+                    w.write_all(&(v as f32).to_le_bytes())?;
+                }
+            }
+            (k, _) => bail!("unknown section kind {k} while writing"),
+        }
+    }
+    w.flush()?;
+    w.into_inner()
+        .map_err(|e| anyhow::anyhow!("flush artifact tmp: {e}"))?
+        .sync_all()
+        .context("fsync artifact tmp")?;
+    Ok(())
+}
+
+/// An opened (mmap'd) schedule artifact: parsed, checksum-verified header
+/// plus zero-copy access to every section. Cheap to open — no payload
+/// byte is touched until a stream is consumed.
+#[derive(Debug)]
+pub struct ScheduleArtifact {
+    map: Arc<Mmap>,
+    path: PathBuf,
+    digest: u64,
+    b: usize,
+    num_shards: usize,
+    num_vertices: usize,
+    num_edges: usize,
+    sections: Vec<Section>,
+}
+
+impl ScheduleArtifact {
+    /// Open and validate an artifact file (magic, version, header
+    /// checksum, section-table bounds).
+    pub fn open(path: &Path) -> Result<ScheduleArtifact> {
+        let map = Arc::new(Mmap::open(path)?);
+        let bytes = map.as_bytes();
+        ensure!(bytes.len() >= HEADER_BYTES, "artifact too short for a header");
+        ensure!(bytes[0..8] == ARTIFACT_MAGIC, "bad artifact magic");
+        let version = rd_u32(bytes, 8);
+        ensure!(
+            version == ARTIFACT_VERSION,
+            "unsupported artifact version {version} (this build reads {ARTIFACT_VERSION})"
+        );
+        let digest = rd_u64(bytes, 16);
+        let b = rd_u64(bytes, 24) as usize;
+        let num_shards = rd_u64(bytes, 32) as usize;
+        let num_vertices = rd_u64(bytes, 40) as usize;
+        let num_edges = rd_u64(bytes, 48) as usize;
+        let nsections = rd_u64(bytes, 56) as usize;
+        let stored_checksum = rd_u64(bytes, 64);
+        let table_end = HEADER_BYTES
+            .checked_add(nsections.checked_mul(SECTION_ENTRY_BYTES).context("table overflow")?)
+            .context("table overflow")?;
+        ensure!(bytes.len() >= table_end, "artifact truncated inside the section table");
+        ensure!(b >= 1, "artifact has b = 0");
+        ensure!(num_shards >= 1, "artifact has no shards");
+
+        // checksum covers header + table with the checksum field zeroed
+        let mut h = Fnv64::new();
+        h.update(&bytes[0..64]);
+        h.update(&0u64.to_le_bytes());
+        h.update(&bytes[HEADER_BYTES..table_end]);
+        ensure!(
+            h.finish() == stored_checksum,
+            "artifact header checksum mismatch (corrupt or torn file)"
+        );
+
+        let mut sections = Vec::with_capacity(nsections);
+        for i in 0..nsections {
+            let off = HEADER_BYTES + i * SECTION_ENTRY_BYTES;
+            let sec = Section {
+                kind: rd_u32(bytes, off),
+                shard: rd_u32(bytes, off + 4),
+                param: rd_u64(bytes, off + 8),
+                offset: rd_u64(bytes, off + 16),
+                len: rd_u64(bytes, off + 24),
+            };
+            let end = (sec.offset as usize)
+                .checked_add((sec.len as usize).checked_mul(item_bytes(sec.kind)).context("section overflow")?)
+                .context("section overflow")?;
+            ensure!(end <= bytes.len(), "section {i} exceeds the file");
+            sections.push(sec);
+        }
+        Ok(ScheduleArtifact {
+            map,
+            path: path.to_path_buf(),
+            digest,
+            b,
+            num_shards,
+            num_vertices,
+            num_edges,
+            sections,
+        })
+    }
+
+    /// Graph digest recorded at write time.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// Packet width the schedule was prepared for.
+    pub fn b(&self) -> usize {
+        self.b
+    }
+
+    /// Shard count the schedule was prepared for.
+    pub fn num_shards(&self) -> usize {
+        self.num_shards
+    }
+
+    /// |V| of the serialized schedule.
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    /// Real (non-padding) edges of the serialized schedule.
+    pub fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    /// On-disk size in bytes.
+    pub fn file_len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// The path this artifact was opened from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Fixed-point widths with serialized value streams, ascending, plus
+    /// whether an f32 stream is present (diagnostics / `prepare` output).
+    pub fn stream_inventory(&self) -> (Vec<u32>, bool) {
+        let mut widths: Vec<u32> = self
+            .sections
+            .iter()
+            .filter(|s| s.kind == KIND_FIXED_VALS && s.shard == 0)
+            .map(|s| s.param as u32)
+            .collect();
+        widths.sort_unstable();
+        widths.dedup();
+        let has_float = self.sections.iter().any(|s| s.kind == KIND_FLOAT_VALS);
+        (widths, has_float)
+    }
+
+    fn find(&self, kind: u32, shard: u32, param: u64) -> Option<&Section> {
+        self.sections
+            .iter()
+            .find(|s| s.kind == kind && s.shard == shard && s.param == param)
+    }
+
+    fn typed<T: Pod>(&self, sec: &Section) -> Result<PodVec<T>> {
+        ensure!(
+            std::mem::size_of::<T>() == item_bytes(sec.kind),
+            "section kind {} item width mismatch",
+            sec.kind
+        );
+        PodVec::from_mapped(self.map.clone(), sec.offset as usize, sec.len as usize)
+    }
+
+    fn require(&self, kind: u32, shard: u32, param: u64) -> Result<&Section> {
+        self.find(kind, shard, param).with_context(|| {
+            format!("artifact is missing section kind={kind} shard={shard} param={param}")
+        })
+    }
+
+    /// Materialize the prepared graph, zero-copy: every shard-stream
+    /// array is a typed window into the mapping. Structural invariants
+    /// (ranges tile `[0, |V|)`, stream lengths agree, edge counts sum)
+    /// are checked; per-packet invariants are not re-scanned here — that
+    /// would fault in the whole payload and defeat the lazy load.
+    pub fn load_prepared(&self) -> Result<PreparedGraph> {
+        let ranges: PodVec<u64> = self.typed(self.require(KIND_RANGES, 0, 0)?)?;
+        ensure!(
+            ranges.len() == 3 * self.num_shards,
+            "shard-range section has {} entries, expected {}",
+            ranges.len(),
+            3 * self.num_shards
+        );
+        let mut shards = Vec::with_capacity(self.num_shards);
+        let mut expected_start = 0usize;
+        let mut edge_sum = 0usize;
+        for i in 0..self.num_shards {
+            let dst_start = ranges[3 * i] as usize;
+            let dst_end = ranges[3 * i + 1] as usize;
+            let num_edges = ranges[3 * i + 2] as usize;
+            ensure!(
+                dst_start == expected_start && dst_end >= dst_start
+                    && dst_end <= self.num_vertices,
+                "shard {i} range [{dst_start}, {dst_end}) does not tile [0, {})",
+                self.num_vertices
+            );
+            expected_start = dst_end;
+            edge_sum += num_edges;
+            let sh = i as u32;
+            let x: PodVec<VertexId> = self.typed(self.require(KIND_X, sh, 0)?)?;
+            let y: PodVec<VertexId> = self.typed(self.require(KIND_Y, sh, 0)?)?;
+            let val: PodVec<f64> = self.typed(self.require(KIND_VAL, sh, 0)?)?;
+            let dangling_idx: PodVec<VertexId> = self.typed(self.require(KIND_DANGLING, sh, 0)?)?;
+            ensure!(
+                x.len() == y.len() && x.len() == val.len(),
+                "shard {i} stream arrays have mismatched lengths"
+            );
+            ensure!(x.len() % self.b == 0, "shard {i} slot count not a multiple of b");
+            ensure!(num_edges <= x.len(), "shard {i} claims more edges than slots");
+            shards.push(ShardStream { dst_start, dst_end, num_edges, x, y, val, dangling_idx });
+        }
+        ensure!(
+            expected_start == self.num_vertices,
+            "shard ranges cover [0, {expected_start}), |V| is {}",
+            self.num_vertices
+        );
+        ensure!(
+            edge_sum == self.num_edges,
+            "shards carry {edge_sum} edges, header says {}",
+            self.num_edges
+        );
+        let sharded = ShardedSchedule {
+            b: self.b,
+            num_vertices: self.num_vertices,
+            num_edges: self.num_edges,
+            shards,
+        };
+        Ok(PreparedGraph::from_sharded(sharded))
+    }
+
+    /// The serialized value streams for `precision`, zero-copy, or `None`
+    /// when the artifact does not carry that rung (callers fall back to
+    /// quantizing from the mapped f64 stream).
+    pub fn value_streams(&self, precision: Precision) -> Result<Option<ValueStreams>> {
+        match precision {
+            Precision::Fixed(w) => {
+                let mut per: Vec<PodVec<u64>> = Vec::with_capacity(self.num_shards);
+                for i in 0..self.num_shards {
+                    match self.find(KIND_FIXED_VALS, i as u32, w as u64) {
+                        Some(sec) => per.push(self.typed(sec)?),
+                        None => return Ok(None),
+                    }
+                }
+                Ok(Some(ValueStreams::Fixed(Arc::new(per))))
+            }
+            Precision::Float32 => {
+                let mut per: Vec<PodVec<f32>> = Vec::with_capacity(self.num_shards);
+                for i in 0..self.num_shards {
+                    match self.find(KIND_FLOAT_VALS, i as u32, 0) {
+                        Some(sec) => per.push(self.typed(sec)?),
+                        None => return Ok(None),
+                    }
+                }
+                Ok(Some(ValueStreams::Float(Arc::new(per))))
+            }
+        }
+    }
+}
+
+/// Read a little-endian u32 at `off` (caller guarantees bounds).
+fn rd_u32(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(bytes[off..off + 4].try_into().expect("4 bytes"))
+}
+
+/// Read a little-endian u64 at `off` (caller guarantees bounds).
+fn rd_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().expect("8 bytes"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ppr::PprConfig;
+    use crate::spmv::datapath::{FixedPath, FloatPath};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ppr-artifact-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn graph() -> Graph {
+        crate::graph::generators::holme_kim(240, 4, 0.3, 17)
+    }
+
+    #[test]
+    fn digest_is_content_sensitive() {
+        let g1 = graph();
+        let d1 = graph_digest(&g1);
+        assert_eq!(d1, graph_digest(&g1.clone()), "digest is deterministic");
+        let g2 = crate::graph::generators::holme_kim(240, 4, 0.3, 18);
+        assert_ne!(d1, graph_digest(&g2), "different edges, different digest");
+    }
+
+    #[test]
+    fn round_trip_preserves_schedule_exactly() {
+        let dir = tmp_dir("roundtrip");
+        let g = graph();
+        let digest = graph_digest(&g);
+        for shards in [1usize, 4] {
+            let prepared = PreparedGraph::new_sharded(&g, 8, shards);
+            let path = artifact_path(&dir, digest, 8, shards);
+            let bytes = write_artifact(&path, &prepared, digest, &default_precisions()).unwrap();
+            assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+
+            let art = ScheduleArtifact::open(&path).unwrap();
+            assert_eq!(art.digest(), digest);
+            assert_eq!(art.b(), 8);
+            assert_eq!(art.num_shards(), shards);
+            assert_eq!(art.num_edges(), prepared.sharded.num_edges);
+            let (widths, has_float) = art.stream_inventory();
+            assert_eq!(widths, vec![16, 20, 26]);
+            assert!(has_float);
+
+            let loaded = art.load_prepared().unwrap();
+            assert_eq!(loaded.num_vertices, prepared.num_vertices);
+            assert_eq!(loaded.dangling_idx, prepared.dangling_idx);
+            loaded.sharded.validate().unwrap();
+            for (a, b) in loaded.sharded.shards.iter().zip(&prepared.sharded.shards) {
+                assert_eq!(a.x, b.x);
+                assert_eq!(a.y, b.y);
+                assert_eq!(a.val, b.val);
+                assert_eq!(a.dangling_idx, b.dangling_idx);
+                assert_eq!((a.dst_start, a.dst_end, a.num_edges), (b.dst_start, b.dst_end, b.num_edges));
+                assert!(a.x.is_mapped(), "artifact streams must be zero-copy windows");
+            }
+            // serialized value streams equal a fresh quantization, bit for bit
+            let fresh = prepared.sharded.quantize_values_for(&FixedPath::paper(26));
+            match art.value_streams(Precision::Fixed(26)).unwrap().unwrap() {
+                ValueStreams::Fixed(v) => {
+                    assert_eq!(v.len(), shards);
+                    for (a, b) in v.iter().zip(&fresh) {
+                        assert_eq!(a, b);
+                    }
+                }
+                other => panic!("expected fixed streams, got {other:?}"),
+            }
+            let freshf = prepared.sharded.quantize_values_for(&FloatPath);
+            match art.value_streams(Precision::Float32).unwrap().unwrap() {
+                ValueStreams::Float(v) => {
+                    for (a, b) in v.iter().zip(&freshf) {
+                        assert_eq!(a, b);
+                    }
+                }
+                other => panic!("expected float streams, got {other:?}"),
+            }
+            // a rung that was not serialized reports absent, not an error
+            assert!(art.value_streams(Precision::Fixed(18)).unwrap().is_none());
+
+            // the lazily derived single stream matches the eager one
+            assert_eq!(loaded.sched().x, prepared.sched().x, "shards={shards}");
+            assert_eq!(loaded.sched().val, prepared.sched().val);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn artifact_scores_bit_identical_to_ram_prepared() {
+        let dir = tmp_dir("bitident");
+        let g = graph();
+        let digest = graph_digest(&g);
+        let cfg = PprConfig { max_iterations: 8, ..Default::default() };
+        for shards in [1usize, 4] {
+            let ram = Arc::new(PreparedGraph::new_sharded(&g, 8, shards));
+            let path = artifact_path(&dir, digest, 8, shards);
+            write_artifact(&path, &ram, digest, &default_precisions()).unwrap();
+            let art = ScheduleArtifact::open(&path).unwrap();
+            let disk = Arc::new(art.load_prepared().unwrap());
+
+            // fixed datapath, artifact-served value streams
+            let d = FixedPath::paper(26);
+            let base =
+                crate::ppr::BatchedPpr::new(d, ram.clone(), 2, 0.85).run(&[3, 11], &cfg);
+            let streams = match art.value_streams(Precision::Fixed(26)).unwrap().unwrap() {
+                ValueStreams::Fixed(v) => v,
+                other => panic!("{other:?}"),
+            };
+            let out = crate::ppr::BatchedPpr::with_shared_values(d, disk.clone(), streams, 2, 0.85)
+                .run(&[3, 11], &cfg);
+            assert_eq!(out.scores, base.scores, "shards={shards}: fixed score words");
+            assert_eq!(out.update_norms, base.update_norms, "shards={shards}: f64 norms");
+
+            // float datapath
+            let basef =
+                crate::ppr::BatchedPpr::new(FloatPath, ram.clone(), 2, 0.85).run(&[3, 11], &cfg);
+            let streamsf = match art.value_streams(Precision::Float32).unwrap().unwrap() {
+                ValueStreams::Float(v) => v,
+                other => panic!("{other:?}"),
+            };
+            let outf =
+                crate::ppr::BatchedPpr::with_shared_values(FloatPath, disk, streamsf, 2, 0.85)
+                    .run(&[3, 11], &cfg);
+            assert_eq!(outf.scores, basef.scores, "shards={shards}: float score words");
+            assert_eq!(outf.update_norms, basef.update_norms);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_header_and_wrong_magic_rejected() {
+        let dir = tmp_dir("corrupt");
+        let g = graph();
+        let digest = graph_digest(&g);
+        let prepared = PreparedGraph::new(&g, 8);
+        let path = artifact_path(&dir, digest, 8, 1);
+        write_artifact(&path, &prepared, digest, &[]).unwrap();
+        assert!(ScheduleArtifact::open(&path).is_ok());
+
+        // flip a byte inside the section table: checksum must catch it
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[HEADER_BYTES + 4] ^= 0xFF;
+        let bad = dir.join("bad.ppra");
+        std::fs::write(&bad, &bytes).unwrap();
+        assert!(ScheduleArtifact::open(&bad).is_err(), "corrupt table must be rejected");
+
+        // wrong magic
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&bad, &bytes).unwrap();
+        assert!(ScheduleArtifact::open(&bad).is_err(), "bad magic must be rejected");
+
+        // truncation inside the table
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&bad, &bytes[..HEADER_BYTES + 10]).unwrap();
+        assert!(ScheduleArtifact::open(&bad).is_err(), "truncated file must be rejected");
+
+        // no stray tmp files were left behind by successful writes
+        let strays: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(strays.is_empty(), "tmp files must be renamed away: {strays:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_graph_and_minimal_artifacts_round_trip() {
+        let dir = tmp_dir("minimal");
+        let g = Graph::new(4, vec![(0, 1), (1, 2)]);
+        let digest = graph_digest(&g);
+        let prepared = PreparedGraph::new_sharded(&g, 4, 2);
+        let path = artifact_path(&dir, digest, 4, 2);
+        write_artifact(&path, &prepared, digest, &[Precision::Fixed(26)]).unwrap();
+        let art = ScheduleArtifact::open(&path).unwrap();
+        let loaded = art.load_prepared().unwrap();
+        loaded.sharded.validate().unwrap();
+        assert_eq!(loaded.dangling_idx, prepared.dangling_idx);
+        assert!(art.value_streams(Precision::Float32).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

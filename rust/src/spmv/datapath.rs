@@ -12,8 +12,10 @@ use crate::fixed::{ops, FixedFormat, Precision};
 /// An arithmetic datapath: word type + operations. All operations are
 /// value-level and `Copy`, so engines stay allocation-free in hot loops.
 pub trait Datapath: Clone + Send + Sync + 'static {
-    /// Machine word flowing through the pipeline.
-    type Word: Copy + PartialEq + std::fmt::Debug + Send + Sync + 'static;
+    /// Machine word flowing through the pipeline. `Pod` so value streams
+    /// can be served zero-copy out of mapped schedule artifacts
+    /// ([`crate::util::mmap::PodVec`]).
+    type Word: Copy + PartialEq + std::fmt::Debug + Send + Sync + crate::util::mmap::Pod + 'static;
 
     /// The zero word.
     fn zero(&self) -> Self::Word;

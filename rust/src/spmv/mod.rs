@@ -33,6 +33,12 @@
 //! - [`csr_kernel`] is the row-parallel CSR SpMV used by the CPU baseline
 //!   and the COO-vs-CSR ablation.
 
+//! - [`artifact`] serializes a prepared sharded schedule (plus quantized
+//!   value streams) into a checksummed on-disk artifact that is later
+//!   mmap'd back zero-copy — the out-of-core cold-start path
+//!   (DESIGN.md §11).
+
+pub mod artifact;
 pub mod csr_kernel;
 pub mod datapath;
 pub mod fast;
@@ -42,6 +48,7 @@ pub mod shard;
 pub mod streaming;
 pub mod topk;
 
+pub use artifact::{graph_digest, ScheduleArtifact};
 pub use datapath::{Datapath, FixedPath, FloatPath};
 pub use fast::fast_spmv;
 pub use packets::PacketSchedule;

@@ -31,6 +31,7 @@ use super::datapath::Datapath;
 use super::packets::{align_stream, PacketSchedule};
 use crate::fixed::FixedFormat;
 use crate::graph::{partition, CooMatrix, VertexId};
+use crate::util::mmap::PodVec;
 
 /// Minimum work units (edges or vector words) **per shard** before a sweep
 /// fans out to threads; below this the shards run sequentially (identical
@@ -95,6 +96,11 @@ where
 
 /// One destination partition: an aligned packet stream (global
 /// coordinates) plus the partition-local metadata the PPR sweeps need.
+///
+/// The stream arrays are [`PodVec`]s: owned vectors when prepared in RAM,
+/// zero-copy windows into a mapped schedule artifact when loaded from
+/// disk ([`crate::spmv::artifact`]). The sweeps consume both through the
+/// same `&[T]` view.
 #[derive(Debug, Clone)]
 pub struct ShardStream {
     /// First destination vertex owned by this shard (inclusive).
@@ -105,14 +111,14 @@ pub struct ShardStream {
     pub num_edges: usize,
     /// Destination coordinates (global vertex ids, all inside
     /// `[dst_start, dst_end)`), length `num_packets * b`.
-    pub x: Vec<VertexId>,
+    pub x: PodVec<VertexId>,
     /// Source coordinates (global vertex ids, unrestricted), same length.
-    pub y: Vec<VertexId>,
+    pub y: PodVec<VertexId>,
     /// Edge values (f64 master copy; quantize per datapath), same length.
-    pub val: Vec<f64>,
+    pub val: PodVec<f64>,
     /// Dangling vertices inside `[dst_start, dst_end)`, ascending — the
     /// shard's slice of the dangling scan (Alg. 1 line 6).
-    pub dangling_idx: Vec<VertexId>,
+    pub dangling_idx: PodVec<VertexId>,
 }
 
 impl ShardStream {
@@ -179,7 +185,7 @@ impl ShardedSchedule {
                 let hi = prefix[r.end];
                 let (x, y, val) =
                     align_stream(b, &coo.x[lo..hi], &coo.y[lo..hi], &coo.val[lo..hi]);
-                let dangling_idx = (r.start..r.end)
+                let dangling_idx: Vec<VertexId> = (r.start..r.end)
                     .filter(|&v| coo.dangling[v])
                     .map(|v| v as VertexId)
                     .collect();
@@ -187,10 +193,10 @@ impl ShardedSchedule {
                     dst_start: r.start,
                     dst_end: r.end,
                     num_edges: hi - lo,
-                    x,
-                    y,
-                    val,
-                    dangling_idx,
+                    x: x.into(),
+                    y: y.into(),
+                    val: val.into(),
+                    dangling_idx: dangling_idx.into(),
                 }
             })
             .collect();
@@ -202,7 +208,7 @@ impl ShardedSchedule {
     /// single-stream schedule), but without a second alignment pass. Used
     /// by `PreparedGraph` for the common single-shard preparation.
     pub fn from_packet_schedule(sched: &PacketSchedule) -> Self {
-        let dangling_idx = (0..sched.num_vertices as VertexId)
+        let dangling_idx: Vec<VertexId> = (0..sched.num_vertices as VertexId)
             .filter(|&v| sched.dangling[v as usize])
             .collect();
         Self {
@@ -213,10 +219,10 @@ impl ShardedSchedule {
                 dst_start: 0,
                 dst_end: sched.num_vertices,
                 num_edges: sched.num_edges,
-                x: sched.x.clone(),
-                y: sched.y.clone(),
-                val: sched.val.clone(),
-                dangling_idx,
+                x: sched.x.clone().into(),
+                y: sched.y.clone().into(),
+                val: sched.val.clone().into(),
+                dangling_idx: dangling_idx.into(),
             }],
         }
     }
@@ -232,8 +238,11 @@ impl ShardedSchedule {
     /// sequence is exactly the one `BatchedPpr::new` produced inline
     /// before streams became shareable, so engines built over shared
     /// streams stay bit-identical.
-    pub fn quantize_values_for<D: Datapath>(&self, d: &D) -> Vec<Vec<D::Word>> {
-        self.shards.iter().map(|s| s.val.iter().map(|&v| d.quantize(v)).collect()).collect()
+    pub fn quantize_values_for<D: Datapath>(&self, d: &D) -> Vec<PodVec<D::Word>> {
+        self.shards
+            .iter()
+            .map(|s| s.val.iter().map(|&v| d.quantize(v)).collect::<Vec<_>>().into())
+            .collect()
     }
 
     /// Total slots (edges + padding) across all shards.
@@ -327,10 +336,14 @@ impl ShardedSchedule {
 /// on the single-stream schedule for **every** datapath — see the
 /// saturating-add argument in [`super::fast`] and the cross-shard property
 /// tests.
-pub fn fast_spmv_sharded<D: Datapath>(
+///
+/// Generic over the per-shard value-stream container `V` (anything that
+/// views as `&[D::Word]`): owned `Vec`s and mapped
+/// [`PodVec`]s take the same code path.
+pub fn fast_spmv_sharded<D: Datapath, V: AsRef<[D::Word]> + Sync>(
     d: &D,
     sched: &ShardedSchedule,
-    vals: &[Vec<D::Word>],
+    vals: &[V],
     kappa: usize,
     p: &[D::Word],
     out: &mut [D::Word],
@@ -341,10 +354,10 @@ pub fn fast_spmv_sharded<D: Datapath>(
 /// [`fast_spmv_sharded`] with the fan-out strategy explicit: `scoped ==
 /// true` takes the legacy scoped-spawn path (the `fusion_speedup` bench
 /// baseline; see [`fan_out_mode`]), `false` the persistent pool.
-pub(crate) fn sharded_edge_sweep<D: Datapath>(
+pub(crate) fn sharded_edge_sweep<D: Datapath, V: AsRef<[D::Word]> + Sync>(
     d: &D,
     sched: &ShardedSchedule,
-    vals: &[Vec<D::Word>],
+    vals: &[V],
     kappa: usize,
     p: &[D::Word],
     out: &mut [D::Word],
@@ -355,12 +368,12 @@ pub(crate) fn sharded_edge_sweep<D: Datapath>(
     assert_eq!(p.len(), n * kappa);
     assert_eq!(out.len(), n * kappa);
     for (s, v) in sched.shards.iter().zip(vals) {
-        assert_eq!(v.len(), s.num_slots(), "value stream length of a shard");
+        assert_eq!(v.as_ref().len(), s.num_slots(), "value stream length of a shard");
     }
 
     if sched.shards.len() == 1 {
         // single CU: run inline — no thread overhead, identical to fast_spmv
-        run_shard(d, &sched.shards[0], &vals[0], kappa, p, out);
+        run_shard(d, &sched.shards[0], vals[0].as_ref(), kappa, p, out);
         return;
     }
 
@@ -379,7 +392,7 @@ pub(crate) fn sharded_edge_sweep<D: Datapath>(
     let serial = sched.num_edges * kappa < PARALLEL_WORK_PER_SHARD * sched.shards.len();
     let work: Vec<_> = sched.shards.iter().zip(vals).zip(slices).collect();
     fan_out_mode(work, serial, scoped, |((shard, svals), slice)| {
-        run_shard(d, shard, svals, kappa, p, slice)
+        run_shard(d, shard, svals.as_ref(), kappa, p, slice)
     });
 }
 

@@ -1,0 +1,433 @@
+//! Read-only file mappings and [`PodVec`] — the zero-copy slice container
+//! behind out-of-core schedule artifacts (DESIGN.md §11).
+//!
+//! The build vendors no external crates (DESIGN.md §1), so [`Mmap`] is a
+//! thin FFI shim over the platform's `mmap`/`munmap`/`madvise` (plus a
+//! `posix_fadvise(SEQUENTIAL)` hint on Linux) rather than a `memmap2`
+//! dependency. On non-unix targets — or when the mapping call fails — it
+//! degrades to reading the whole file into an owned, 8-byte-aligned
+//! buffer, so callers never observe the difference beyond RSS.
+//!
+//! [`PodVec<T>`] is the unification layer: every packet-stream field of a
+//! [`ShardStream`](crate::spmv::ShardStream) is either an owned `Vec<T>`
+//! (RAM-prepared) or a typed window into a shared [`Mmap`]
+//! (artifact-loaded). It derefs to `&[T]`, so the sweep kernels consume
+//! both representations through one code path with no copies on the hot
+//! path.
+
+use anyhow::{ensure, Context, Result};
+use std::fmt;
+use std::fs::File;
+use std::path::Path;
+use std::sync::Arc;
+
+/// A read-only view of a file's bytes: a real memory mapping where the
+/// platform provides one, an owned 8-byte-aligned buffer otherwise. The
+/// base address is always at least 8-byte aligned (page-aligned for real
+/// mappings), so sections laid out on 8-byte boundaries can be viewed as
+/// typed slices of `u32`/`u64`/`f32`/`f64`.
+pub struct Mmap {
+    repr: MapRepr,
+}
+
+enum MapRepr {
+    #[cfg(unix)]
+    Mapped {
+        ptr: *mut u8,
+        len: usize,
+    },
+    /// Fallback storage: `u64` elements guarantee 8-byte alignment; `len`
+    /// is the file's byte length (the tail of the last word is padding).
+    Owned {
+        buf: Vec<u64>,
+        len: usize,
+    },
+}
+
+// Safety: the mapping is created PROT_READ and never written through; the
+// owned fallback is plain memory. Either way the bytes are immutable for
+// the lifetime of the value, so shared references from any thread are fine.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only, falling back to an owned in-memory copy when
+    /// the platform call is unavailable or fails.
+    pub fn open(path: &Path) -> Result<Mmap> {
+        let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let meta = file.metadata().with_context(|| format!("stat {}", path.display()))?;
+        let len = usize::try_from(meta.len()).context("file too large to map")?;
+        #[cfg(unix)]
+        if len > 0 {
+            if let Some(ptr) = unsafe { sys::map_readonly(&file, len) } {
+                return Ok(Mmap { repr: MapRepr::Mapped { ptr, len } });
+            }
+        }
+        Self::read_owned(file, len, path)
+    }
+
+    /// Fallback: read the whole file into an 8-byte-aligned owned buffer.
+    fn read_owned(mut file: File, len: usize, path: &Path) -> Result<Mmap> {
+        use std::io::Read;
+        let mut buf = vec![0u64; len.div_ceil(8)];
+        if len > 0 {
+            // Safety: u64 storage reinterpreted as bytes for the read;
+            // every bit pattern is a valid u64.
+            let bytes =
+                unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len) };
+            file.read_exact(bytes).with_context(|| format!("read {}", path.display()))?;
+        }
+        Ok(Mmap { repr: MapRepr::Owned { buf, len } })
+    }
+
+    /// The file's bytes.
+    pub fn as_bytes(&self) -> &[u8] {
+        match &self.repr {
+            #[cfg(unix)]
+            MapRepr::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+            MapRepr::Owned { buf, len } => unsafe {
+                std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len)
+            },
+        }
+    }
+
+    /// Byte length of the view.
+    pub fn len(&self) -> usize {
+        match &self.repr {
+            #[cfg(unix)]
+            MapRepr::Mapped { len, .. } => *len,
+            MapRepr::Owned { len, .. } => *len,
+        }
+    }
+
+    /// Whether the file is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when backed by a real memory mapping (diagnostics: the owned
+    /// fallback is correct but pays full-file RSS up front).
+    pub fn is_mapped(&self) -> bool {
+        match &self.repr {
+            #[cfg(unix)]
+            MapRepr::Mapped { .. } => true,
+            MapRepr::Owned { .. } => false,
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let MapRepr::Mapped { ptr, len } = &self.repr {
+            unsafe { sys::unmap(*ptr, *len) };
+        }
+    }
+}
+
+impl fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Mmap")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    //! Direct FFI onto the C library's mapping calls. std links libc on
+    //! every unix target, so these symbols resolve without a `libc` crate.
+    use std::ffi::{c_int, c_void};
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+        #[cfg(target_os = "linux")]
+        fn posix_fadvise(fd: c_int, offset: i64, len: i64, advice: c_int) -> c_int;
+    }
+
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+    /// Same value on Linux and the BSDs (macOS included).
+    const MADV_SEQUENTIAL: c_int = 2;
+    #[cfg(target_os = "linux")]
+    const POSIX_FADV_SEQUENTIAL: c_int = 2;
+
+    /// Map `len` bytes of `file` read-only; `None` when the platform call
+    /// fails (caller falls back to an owned read). Advice failures are
+    /// ignored — hints only.
+    pub(super) unsafe fn map_readonly(file: &File, len: usize) -> Option<*mut u8> {
+        let fd = file.as_raw_fd();
+        #[cfg(target_os = "linux")]
+        {
+            // tell the page cache the upcoming scan is sequential
+            posix_fadvise(fd, 0, len as i64, POSIX_FADV_SEQUENTIAL);
+        }
+        let ptr = mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, fd, 0);
+        if ptr.is_null() || ptr as isize == -1 {
+            return None;
+        }
+        // packet streams are consumed front-to-back: prime readahead
+        madvise(ptr, len, MADV_SEQUENTIAL);
+        Some(ptr as *mut u8)
+    }
+
+    pub(super) unsafe fn unmap(ptr: *mut u8, len: usize) {
+        munmap(ptr as *mut c_void, len);
+    }
+}
+
+/// Marker for plain-old-data element types a [`PodVec`] may hold.
+///
+/// # Safety
+///
+/// Implementors must be `Copy` types for which **every** bit pattern is a
+/// valid value and which contain no padding or pointers — raw file bytes
+/// are reinterpreted as `&[T]`.
+pub unsafe trait Pod: Copy + Send + Sync + 'static {}
+
+unsafe impl Pod for u8 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+
+/// A read-only slice of POD elements: either an owned `Vec<T>` or a typed
+/// zero-copy window into a shared [`Mmap`]. Derefs to `&[T]`, so the sweep
+/// kernels are agnostic to where the packet stream lives.
+pub struct PodVec<T: Pod> {
+    repr: VecRepr<T>,
+}
+
+enum VecRepr<T: Pod> {
+    Owned(Vec<T>),
+    Mapped { map: Arc<Mmap>, offset: usize, len: usize },
+}
+
+impl<T: Pod> PodVec<T> {
+    /// An owned, empty vector.
+    pub fn new() -> Self {
+        PodVec { repr: VecRepr::Owned(Vec::new()) }
+    }
+
+    /// A zero-copy view of `len` elements starting `offset` bytes into
+    /// `map`. Rejects out-of-range and misaligned windows — the artifact
+    /// writer lays every section on an 8-byte boundary precisely so this
+    /// check always passes for well-formed files.
+    pub fn from_mapped(map: Arc<Mmap>, offset: usize, len: usize) -> Result<PodVec<T>> {
+        let size = std::mem::size_of::<T>();
+        let bytes = len.checked_mul(size).context("section length overflows")?;
+        let end = offset.checked_add(bytes).context("section range overflows")?;
+        ensure!(
+            end <= map.len(),
+            "section [{offset}, {end}) exceeds file length {}",
+            map.len()
+        );
+        let align = std::mem::align_of::<T>();
+        ensure!(offset % align == 0, "section offset {offset} misaligned for {size}-byte items");
+        ensure!(
+            (map.as_bytes().as_ptr() as usize) % align == 0,
+            "mapping base misaligned for {size}-byte items"
+        );
+        Ok(PodVec { repr: VecRepr::Mapped { map, offset, len } })
+    }
+
+    /// The elements as a slice.
+    pub fn as_slice(&self) -> &[T] {
+        match &self.repr {
+            VecRepr::Owned(v) => v.as_slice(),
+            VecRepr::Mapped { map, offset, len } => unsafe {
+                // Safety: bounds and alignment were validated by
+                // `from_mapped`, the mapping is immutable and outlives
+                // `self` via the `Arc`, and `T: Pod` admits any bytes.
+                let base = map.as_bytes().as_ptr().add(*offset) as *const T;
+                std::slice::from_raw_parts(base, *len)
+            },
+        }
+    }
+
+    /// Materialize an owned copy of the elements.
+    pub fn to_vec(&self) -> Vec<T> {
+        self.as_slice().to_vec()
+    }
+
+    /// True when this is a zero-copy window into a mapping.
+    pub fn is_mapped(&self) -> bool {
+        matches!(&self.repr, VecRepr::Mapped { .. })
+    }
+}
+
+impl<T: Pod> Default for PodVec<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for PodVec<T> {
+    fn from(v: Vec<T>) -> Self {
+        PodVec { repr: VecRepr::Owned(v) }
+    }
+}
+
+impl<T: Pod> std::ops::Deref for PodVec<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> AsRef<[T]> for PodVec<T> {
+    fn as_ref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> Clone for PodVec<T> {
+    fn clone(&self) -> Self {
+        match &self.repr {
+            VecRepr::Owned(v) => PodVec { repr: VecRepr::Owned(v.clone()) },
+            VecRepr::Mapped { map, offset, len } => PodVec {
+                repr: VecRepr::Mapped { map: map.clone(), offset: *offset, len: *len },
+            },
+        }
+    }
+}
+
+impl<T: Pod + fmt::Debug> fmt::Debug for PodVec<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_list().entries(self.as_slice()).finish()
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for PodVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq<Vec<T>> for PodVec<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq<PodVec<T>> for Vec<T> {
+    fn eq(&self, other: &PodVec<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<'a, T: Pod> IntoIterator for &'a PodVec<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp_file(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ppr-mmap-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{name}-{}", std::process::id()));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn mmap_round_trips_bytes() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        let path = tmp_file("roundtrip", &data);
+        let m = Mmap::open(&path).unwrap();
+        assert_eq!(m.len(), 256);
+        assert_eq!(m.as_bytes(), &data[..]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mmap_empty_file_is_empty() {
+        let path = tmp_file("empty", &[]);
+        let m = Mmap::open(&path).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.as_bytes(), &[] as &[u8]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mmap_missing_file_errors() {
+        assert!(Mmap::open(Path::new("/nonexistent/ppr-no-such-file")).is_err());
+    }
+
+    #[test]
+    fn owned_fallback_is_aligned_and_identical() {
+        let data: Vec<u8> = (0..100u8).collect();
+        let path = tmp_file("fallback", &data);
+        let file = File::open(&path).unwrap();
+        let m = Mmap::read_owned(file, data.len(), &path).unwrap();
+        assert!(!m.is_mapped());
+        assert_eq!(m.as_bytes(), &data[..]);
+        assert_eq!(m.as_bytes().as_ptr() as usize % 8, 0, "owned base is 8-aligned");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn podvec_owned_and_mapped_views_agree() {
+        let vals: Vec<u64> = (0..32u64).map(|i| i.wrapping_mul(0x9E3779B97F4A7C15)).collect();
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let path = tmp_file("podvec", &bytes);
+        let map = Arc::new(Mmap::open(&path).unwrap());
+
+        let owned: PodVec<u64> = vals.clone().into();
+        let mapped: PodVec<u64> = PodVec::from_mapped(map.clone(), 0, vals.len()).unwrap();
+        assert!(!owned.is_mapped());
+        assert!(mapped.is_mapped() == map.is_mapped());
+        assert_eq!(owned, mapped);
+        assert_eq!(mapped, vals);
+        assert_eq!(vals, mapped);
+        assert_eq!(mapped.to_vec(), vals);
+        assert_eq!(mapped.iter().copied().sum::<u64>(), vals.iter().copied().sum::<u64>());
+
+        // a window into the middle, and clones sharing the same mapping
+        let tail: PodVec<u64> = PodVec::from_mapped(map.clone(), 8 * 8, vals.len() - 8).unwrap();
+        assert_eq!(tail.as_slice(), &vals[8..]);
+        let c = tail.clone();
+        assert_eq!(c, tail);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn podvec_rejects_bad_windows() {
+        let path = tmp_file("badwin", &[0u8; 64]);
+        let map = Arc::new(Mmap::open(&path).unwrap());
+        // out of range
+        assert!(PodVec::<u64>::from_mapped(map.clone(), 0, 9).is_err());
+        // misaligned offset
+        assert!(PodVec::<u64>::from_mapped(map.clone(), 4, 1).is_err());
+        // in-range u32 window is fine
+        assert!(PodVec::<u32>::from_mapped(map.clone(), 4, 15).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -7,10 +7,12 @@
 //! explicitly, making every table and figure bit-reproducible.
 
 pub mod json;
+pub mod mmap;
 pub mod report;
 pub mod rng;
 pub mod timing;
 
 pub use json::Json;
+pub use mmap::{Mmap, Pod, PodVec};
 pub use rng::Xoshiro256;
 pub use timing::Stopwatch;

@@ -375,6 +375,72 @@ fn hot_swap_reload_under_sustained_load_drains_cleanly() {
     server.shutdown();
 }
 
+/// Acceptance property (DESIGN.md §11): two graphs whose combined
+/// schedule footprint exceeds a capacity-1 registry's RAM residency cap
+/// are still served correctly — every alternation demotes one entry to
+/// its on-disk artifact and promotes the other back via an mmap, never a
+/// re-preparation, and the promoted entry's scores stay bit-identical.
+#[test]
+fn serves_beyond_residency_cap_from_disk_artifacts() {
+    let dir = std::env::temp_dir()
+        .join(format!("ppr-serve-cap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = RunConfig {
+        precision: Precision::Fixed(26),
+        kappa: 2,
+        iterations: 15,
+        batch_timeout_ms: 2,
+        num_shards: 1,
+        ..Default::default()
+    };
+    let (ga, gb) = two_graphs();
+    let registry = Arc::new(GraphRegistry::new(1).with_artifact_dir(&dir));
+    registry.register_graph("a", ga).unwrap();
+    registry.register_graph("b", gb).unwrap();
+    let server = EngineBuilder::native()
+        .config(cfg)
+        .serve_registry(registry.clone(), 1)
+        .expect("registry server");
+
+    // first touch of "a": RAM-prepared epoch
+    let baseline = server.query_graph("a", 17, 8).expect("initial query");
+    assert_eq!(baseline.ranking[0].vertex, 17);
+
+    // alternate graphs: each switch evicts the cap-1 slot, demoting the
+    // outgoing entry to disk and promoting the incoming one from its
+    // artifact
+    for round in 0..4u32 {
+        let resp = server.query_graph("b", (round * 31) % 256, 5).expect("graph b serves");
+        assert_eq!(resp.ranking[0].vertex, (round * 31) % 256);
+        let resp = server.query_graph("a", (round * 53) % 384, 5).expect("graph a serves");
+        assert_eq!(resp.ranking[0].vertex, (round * 53) % 384);
+    }
+
+    // the artifact-promoted entry scores bit-identically to the
+    // RAM-prepared first epoch
+    let after = server.query_graph("a", 17, 8).expect("post-churn query");
+    assert_eq!(after.ranking.len(), baseline.ranking.len());
+    for (g, w) in after.ranking.iter().zip(&baseline.ranking) {
+        assert_eq!(g.vertex, w.vertex);
+        assert_eq!(g.score.to_bits(), w.score.to_bits(), "vertex {}", g.vertex);
+    }
+
+    // each graph was fully prepared exactly once; all churn after that
+    // was served out of the on-disk artifacts
+    assert_eq!(registry.preparations(), 2, "no re-preparation under the cap");
+    assert!(registry.resident() <= 1, "RAM residency respects the cap");
+    assert!(registry.resident_disk() >= 1, "the displaced entry lives on disk");
+    assert!(
+        registry.artifact_hits_for("a") + registry.artifact_hits_for("b") >= 4,
+        "alternations promote from artifacts: a={} b={}",
+        registry.artifact_hits_for("a"),
+        registry.artifact_hits_for("b")
+    );
+    assert_eq!(server.stats().snapshot().errors, 0);
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Satellite: a request that expires while queued behind *another*
 /// graph's flush is failed fast without consuming a lane — its graph's
 /// ledger records a deadline miss and no batch.

@@ -1,0 +1,15 @@
+//! `cargo bench --bench dispatch [-- --full | --scale N]`
+//! Heterogeneous-dispatch benchmark: runs the same mixed-class workload
+//! statically on each backend and cost-routed across all of them, checks
+//! every dispatched response for bit-identity against the serving
+//! backend's static reference, and gates on zero lost requests, every
+//! backend exercised, and throughput at least 0.95× the best static arm.
+//! Emits `BENCH_dispatch.json`. See `bench_harness::dispatch`.
+
+use ppr_spmv::bench_harness::{dispatch, ExpOptions};
+
+fn main() {
+    let opts = ExpOptions::from_args();
+    println!("# heterogeneous dispatch [{}]\n", opts.descriptor());
+    dispatch::run(&opts);
+}

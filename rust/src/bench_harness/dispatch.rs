@@ -1,0 +1,399 @@
+//! Heterogeneous-dispatch benchmark — cost-routed serving vs each backend
+//! running statically (DESIGN.md §12).
+//!
+//! All arms share one two-graph registry (HK-100k and WS-200k at the
+//! configured scale — two ⌈log₂|V|⌉ buckets, so the EWMA model's
+//! per-bucket rates both get exercised) and one mixed-class workload:
+//! static-class requests may route to any backend, exact-class requests
+//! are confined to native lanes by the class-capability cut.
+//!
+//! - **static arms** (native, cpu-baseline): the pre-dispatch behaviour,
+//!   one backend serving everything. Their responses are the bit-identity
+//!   references; the faster arm is the throughput bar.
+//! - **cost arm**: `--dispatch cost` across both backends with
+//!   work-stealing. Every response is compared bit-for-bit against the
+//!   reference of the backend that actually served it (per the ticket's
+//!   attribution stamp).
+//!
+//! Gates (enforced by the release CI job on `BENCH_dispatch.json`):
+//!
+//! - `"lost": 0` — every dispatched request came back served;
+//! - `"bit_identical": true` — routing never changed a single score;
+//! - `"all_backends_exercised": true` — the cost policy put real batches
+//!   on every available backend;
+//! - `"dispatch_ge_best_static": true` — cost-routed throughput is at
+//!   least 0.95× the best static arm (routing overhead stays in noise).
+
+use super::ExpOptions;
+use crate::config::{DispatchConfig, RunConfig};
+use crate::coordinator::dispatch::BackendStat;
+use crate::coordinator::{
+    DispatchPolicy, EngineBuilder, EngineKind, GraphRegistry, PprResponse, RankedVertex, Server,
+};
+use crate::fixed::AccuracyClass;
+use crate::graph::DatasetSpec;
+use crate::util::report::Table;
+use crate::util::Stopwatch;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Requested ranking length.
+const TOP_N: usize = 8;
+/// Worker threads per backend group (and for each static arm, so the
+/// throughput comparison is worker-for-worker fair).
+const WORKERS: usize = 2;
+
+/// One request of the benchmark workload.
+type Work = (String, u32, AccuracyClass);
+
+/// The dispatch measurement.
+#[derive(Debug, Clone)]
+pub struct DispatchReport {
+    /// Registered graphs (name, |V|).
+    pub graphs: Vec<(String, usize)>,
+    /// Workload size per arm.
+    pub requests: usize,
+    /// Per-backend static throughput, req/s.
+    pub static_rps: Vec<(EngineKind, f64)>,
+    /// Cost-routed throughput, req/s.
+    pub dispatch_rps: f64,
+    /// The fastest static arm's throughput, req/s.
+    pub best_static_rps: f64,
+    /// Dispatched requests that came back with an error or timed out.
+    pub lost: usize,
+    /// Dispatched responses whose ranking differed from their serving
+    /// backend's static reference.
+    pub mismatches: usize,
+    /// Gate: `mismatches == 0` — routing never changed a score.
+    pub bit_identical: bool,
+    /// Gate: under the cost policy every available backend served ≥ 1
+    /// batch (routed or stolen).
+    pub all_backends_exercised: bool,
+    /// Gate: `dispatch_rps >= 0.95 * best_static_rps`.
+    pub dispatch_ge_best_static: bool,
+    /// Per-backend routing counters from the cost arm, lane order.
+    pub backends: Vec<BackendStat>,
+}
+
+/// The outcome of one arm: wall-clock plus every served response tagged
+/// with its workload index and the backend that stamped the ticket.
+struct ArmOutcome {
+    elapsed_s: f64,
+    served: Vec<(usize, PprResponse, Option<EngineKind>)>,
+    lost: usize,
+}
+
+/// Submit the whole workload as one burst (so queues build and the
+/// dispatcher prices real depth), then drain every ticket. Tickets are
+/// polled rather than waited so the backend stamp stays readable.
+fn run_arm(server: &Server, workload: &[Work]) -> ArmOutcome {
+    let sw = Stopwatch::start();
+    let tickets: Vec<_> = workload
+        .iter()
+        .map(|(g, v, c)| server.submit_to_class(g, *v, TOP_N, None, *c))
+        .collect();
+    let mut served = Vec::with_capacity(tickets.len());
+    let mut lost = 0usize;
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            if let Some(res) = ticket.poll() {
+                match res {
+                    Ok(resp) => served.push((i, resp, ticket.served_by())),
+                    Err(_) => lost += 1,
+                }
+                break;
+            }
+            if Instant::now() >= deadline {
+                lost += 1;
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+    ArmOutcome { elapsed_s: sw.elapsed().as_secs_f64(), served, lost }
+}
+
+/// Run all three arms over the same registry and workload.
+pub fn measure(opts: &ExpOptions) -> DispatchReport {
+    let cfg = RunConfig {
+        kappa: 4,
+        iterations: opts.iterations.clamp(1, 20),
+        batch_timeout_ms: 2,
+        ..Default::default()
+    };
+    let registry = Arc::new(GraphRegistry::new(4));
+    let mut graphs = Vec::new();
+    for spec in DatasetSpec::table1_suite(opts.scale)
+        .into_iter()
+        .filter(|s| s.name == "HK-100k" || s.name == "WS-200k")
+    {
+        let g = spec.build().graph;
+        graphs.push((spec.name.to_string(), g.num_vertices));
+        registry.register_graph(spec.name, g).expect("register bench graph");
+    }
+    assert_eq!(graphs.len(), 2, "HK-100k and WS-200k are Table 1 rows");
+
+    // mixed-class workload: every 4th request is exact (native-only by
+    // the class-capability cut), the rest static (routable anywhere)
+    let mut rng = crate::util::rng::Xoshiro256::seeded(opts.seed ^ 0xD15);
+    let total = graphs.len() * opts.requests.max(8);
+    let workload: Vec<Work> = (0..total)
+        .map(|i| {
+            let (name, nv) = &graphs[i % graphs.len()];
+            let class =
+                if i % 4 == 3 { AccuracyClass::Exact } else { AccuracyClass::Static };
+            (name.clone(), rng.next_index(*nv) as u32, class)
+        })
+        .collect();
+
+    // static arms: one backend each, and the bit-identity references
+    let kinds = [EngineKind::Native, EngineKind::CpuBaseline];
+    let mut static_rps = Vec::new();
+    let mut reference: HashMap<(EngineKind, usize), Vec<RankedVertex>> = HashMap::new();
+    for kind in kinds {
+        let server = EngineBuilder::new(kind)
+            .config(cfg.clone())
+            .serve_registry(registry.clone(), WORKERS)
+            .expect("static server");
+        let out = run_arm(&server, &workload);
+        server.shutdown();
+        assert_eq!(out.lost, 0, "static {} arm lost requests", kind.label());
+        for (i, resp, _) in out.served {
+            reference.insert((kind, i), resp.ranking);
+        }
+        static_rps.push((kind, total as f64 / out.elapsed_s.max(1e-9)));
+    }
+    let best_static_rps =
+        static_rps.iter().map(|&(_, rps)| rps).fold(f64::NEG_INFINITY, f64::max);
+
+    // cost arm: both backends behind the dispatcher, stealing on
+    let dispatch_cfg =
+        DispatchConfig { policy: DispatchPolicy::Cost, ..Default::default() };
+    let server = EngineBuilder::native()
+        .config(cfg)
+        .serve_registry_dispatch(registry, WORKERS, &dispatch_cfg)
+        .expect("dispatch server");
+    let available = server.backends().to_vec();
+    let out = run_arm(&server, &workload);
+    let stats = server.dispatch_stats().expect("dispatch server exposes stats");
+    server.shutdown();
+
+    let mut mismatches = 0usize;
+    let mut exercised: Vec<EngineKind> = Vec::new();
+    for (i, resp, backend) in out.served {
+        let backend = backend.expect("serving worker stamped a backend");
+        if !exercised.contains(&backend) {
+            exercised.push(backend);
+        }
+        match reference.get(&(backend, i)) {
+            Some(want) if *want == resp.ranking => {}
+            _ => mismatches += 1,
+        }
+    }
+    let dispatch_rps = total as f64 / out.elapsed_s.max(1e-9);
+
+    DispatchReport {
+        graphs,
+        requests: total,
+        static_rps,
+        dispatch_rps,
+        best_static_rps,
+        lost: out.lost,
+        mismatches,
+        bit_identical: mismatches == 0,
+        all_backends_exercised: available.iter().all(|k| exercised.contains(k)),
+        dispatch_ge_best_static: dispatch_rps >= 0.95 * best_static_rps,
+        backends: stats.backends,
+    }
+}
+
+/// Serialize as the machine-readable `BENCH_dispatch.json` consumed by
+/// CI (hand-rolled: no serde in the vendored crate set).
+pub fn to_json(report: &DispatchReport, descriptor: &str) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"bench\": \"dispatch\",\n  \"config\": \"{descriptor}\",\n"));
+    let graphs: Vec<String> = report
+        .graphs
+        .iter()
+        .map(|(n, v)| format!("{{\"name\": \"{n}\", \"num_vertices\": {v}}}"))
+        .collect();
+    s.push_str(&format!("  \"graphs\": [{}],\n", graphs.join(", ")));
+    s.push_str(&format!("  \"requests\": {},\n", report.requests));
+    for (kind, rps) in &report.static_rps {
+        s.push_str(&format!("  \"static_{}_rps\": {:.2},\n", kind.label(), rps));
+    }
+    s.push_str(&format!(
+        "  \"best_static_rps\": {:.2},\n  \"dispatch_rps\": {:.2},\n",
+        report.best_static_rps, report.dispatch_rps,
+    ));
+    let backends: Vec<String> = report
+        .backends
+        .iter()
+        .map(|b| {
+            format!(
+                "{{\"backend\": \"{}\", \"workers\": {}, \"routed\": {}, \"stolen\": {}}}",
+                b.kind.label(),
+                b.workers,
+                b.routed,
+                b.stolen,
+            )
+        })
+        .collect();
+    s.push_str(&format!("  \"backends\": [{}],\n", backends.join(", ")));
+    s.push_str(&format!(
+        "  \"lost\": {},\n  \"mismatches\": {},\n",
+        report.lost, report.mismatches,
+    ));
+    s.push_str(&format!(
+        "  \"bit_identical\": {},\n  \"all_backends_exercised\": {},\n  \
+         \"dispatch_ge_best_static\": {}\n}}\n",
+        report.bit_identical, report.all_backends_exercised, report.dispatch_ge_best_static,
+    ));
+    s
+}
+
+/// Write `BENCH_dispatch.json` into `dir`; returns the path written.
+pub fn emit_json(
+    report: &DispatchReport,
+    descriptor: &str,
+    dir: &Path,
+) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_dispatch.json");
+    std::fs::write(&path, to_json(report, descriptor))?;
+    Ok(path)
+}
+
+/// The full dispatch experiment at the configured scale.
+pub fn run(opts: &ExpOptions) -> Table {
+    let report = measure(opts);
+
+    let mut t = Table::new(
+        &format!(
+            "dispatch — {} requests over {} graphs ({})",
+            report.requests,
+            report.graphs.len(),
+            opts.descriptor()
+        ),
+        &["arm", "req/s", "note"],
+    );
+    for (kind, rps) in &report.static_rps {
+        t.row(&[
+            format!("static {}", kind.label()),
+            format!("{rps:.1}"),
+            format!("{WORKERS} workers"),
+        ]);
+    }
+    let routed: Vec<String> = report
+        .backends
+        .iter()
+        .map(|b| format!("{}:{}+{}", b.kind.label(), b.routed, b.stolen))
+        .collect();
+    t.row(&[
+        "cost".to_string(),
+        format!("{:.1}", report.dispatch_rps),
+        format!("routed+stolen {}", routed.join(" ")),
+    ]);
+    t.emit(opts.csv_path("dispatch").as_deref());
+    println!(
+        "lost: {} | bit_identical: {} | all_backends_exercised: {} | \
+         dispatch_ge_best_static: {} ({:.1} vs best static {:.1} req/s)",
+        report.lost,
+        report.bit_identical,
+        report.all_backends_exercised,
+        report.dispatch_ge_best_static,
+        report.dispatch_rps,
+        report.best_static_rps,
+    );
+    if let Some(dir) = &opts.csv_dir {
+        match emit_json(&report, &opts.descriptor(), dir) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("could not write BENCH_dispatch.json: {e}"),
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_measure_gates_hold_at_tiny_scale() {
+        let opts = ExpOptions {
+            scale: 800,
+            requests: 8,
+            iterations: 5,
+            csv_dir: None,
+            seed: 0xD15,
+        };
+        let report = measure(&opts);
+        assert_eq!(report.graphs.len(), 2);
+        assert_eq!(report.requests, 16);
+        assert_eq!(report.lost, 0, "no dispatched request may be dropped");
+        assert!(
+            report.bit_identical,
+            "routing changed scores: {} mismatches",
+            report.mismatches
+        );
+        assert!(
+            report.all_backends_exercised,
+            "cost policy must feed every backend: {:?}",
+            report.backends
+        );
+        let routed: u64 = report.backends.iter().map(|b| b.routed).sum();
+        assert!(routed >= 1, "routed counters must move");
+        // the throughput gate is asserted by the release-mode CI run; a
+        // tiny debug build only has to compute it
+        let _ = report.dispatch_ge_best_static;
+    }
+
+    #[test]
+    fn json_shape() {
+        let report = DispatchReport {
+            graphs: vec![("HK-100k".to_string(), 125), ("WS-200k".to_string(), 250)],
+            requests: 16,
+            static_rps: vec![
+                (EngineKind::Native, 120.0),
+                (EngineKind::CpuBaseline, 80.0),
+            ],
+            dispatch_rps: 150.0,
+            best_static_rps: 120.0,
+            lost: 0,
+            mismatches: 0,
+            bit_identical: true,
+            all_backends_exercised: true,
+            dispatch_ge_best_static: true,
+            backends: vec![
+                BackendStat {
+                    kind: EngineKind::Native,
+                    workers: 2,
+                    routed: 9,
+                    stolen: 1,
+                    depth: 0,
+                },
+                BackendStat {
+                    kind: EngineKind::CpuBaseline,
+                    workers: 2,
+                    routed: 4,
+                    stolen: 2,
+                    depth: 0,
+                },
+            ],
+        };
+        let json = to_json(&report, "test");
+        assert!(json.contains("\"bench\": \"dispatch\""));
+        assert!(json.contains("\"lost\": 0"));
+        assert!(json.contains("\"bit_identical\": true"));
+        assert!(json.contains("\"all_backends_exercised\": true"));
+        assert!(json.contains("\"dispatch_ge_best_static\": true"));
+        assert!(json.contains("\"static_native_rps\": 120.00"));
+        assert!(json.contains("\"static_cpu-baseline_rps\": 80.00"));
+        assert!(json.contains("\"backend\": \"native\""));
+        assert!(!json.contains(",\n}"), "no trailing commas");
+        crate::util::Json::parse(&json).expect("valid JSON document");
+    }
+}

@@ -11,6 +11,7 @@
 
 pub mod chaos;
 pub mod coldstart;
+pub mod dispatch;
 pub mod energy;
 pub mod fig3_speedup;
 pub mod fusion;

@@ -5,15 +5,19 @@
 //!   fig3..fig7, energy, all)
 //! - `serve` — start the serving engine on a dataset and drive a demo
 //!   workload, printing latency/throughput stats; with `--listen` it
-//!   exposes the HTTP front door (DESIGN.md §8) instead
+//!   exposes the HTTP front door (DESIGN.md §8) instead; `--dispatch
+//!   cost|roundrobin` routes batches across heterogeneous backends
+//!   (DESIGN.md §12)
+//! - `describe` — stand the configured stack up and report the dispatch
+//!   policy, per-backend availability, candidate sets and cost models
 //! - `query` — one-shot PPR query
 //! - `generate` — materialize a Table 1 dataset to an edge-list file
 //! - `artifacts` — inspect the AOT artifact manifest
 //! - `synthesize` — print the simulated synthesis report for a design
 
 use crate::bench_harness as bh;
-use crate::config::{ConfigDoc, RegistryConfig, RunConfig};
-use crate::coordinator::{EngineBuilder, EngineKind, GraphRegistry, GraphSource};
+use crate::config::{ConfigDoc, DispatchConfig, RegistryConfig, RunConfig};
+use crate::coordinator::{DispatchPolicy, EngineBuilder, EngineKind, GraphRegistry, GraphSource};
 use crate::fault::{FaultConfig, FaultPlan};
 use crate::fixed::{AccuracyClass, Precision};
 use crate::graph::{loader, DatasetSpec};
@@ -144,6 +148,7 @@ pub fn fault_plan(args: &Args) -> Result<Option<Arc<FaultPlan>>> {
         "fault-slow-ms",
         "fault-kill-rate",
         "fault-reload-rate",
+        "fault-reload-backend",
         "fault-active-from",
         "fault-active-ticks",
     ];
@@ -166,6 +171,12 @@ pub fn fault_plan(args: &Args) -> Result<Option<Arc<FaultPlan>>> {
         if let Some(s) = args.options.get("fault-slow-ms") {
             cfg.slow_ms = s.parse().map_err(|_| anyhow!("bad --fault-slow-ms {s}"))?;
         }
+        if let Some(s) = args.options.get("fault-reload-backend") {
+            cfg.reload_backend = Some(
+                EngineKind::parse(s)
+                    .ok_or_else(|| anyhow!("bad --fault-reload-backend {s} (native|pjrt|cpu)"))?,
+            );
+        }
         let from = args.get::<u64>("fault-active-from");
         let ticks = args.get::<u64>("fault-active-ticks");
         if from.is_some() || ticks.is_some() {
@@ -176,6 +187,26 @@ pub fn fault_plan(args: &Args) -> Result<Option<Arc<FaultPlan>>> {
         cfg.validate()?;
     }
     Ok(cfg.map(FaultPlan::new))
+}
+
+/// Assemble the dispatch configuration (DESIGN.md §12): the `[dispatch]`
+/// section of `--config` seeds it, `--dispatch static|cost|roundrobin`
+/// and `--ewma-alpha A` override it. The default is `static` — the
+/// pre-dispatch single-backend behaviour.
+pub fn dispatch_config(args: &Args) -> Result<DispatchConfig> {
+    let mut cfg = match args.options.get("config") {
+        Some(path) => DispatchConfig::from_doc(&ConfigDoc::load(std::path::Path::new(path))?)?,
+        None => DispatchConfig::default(),
+    };
+    if let Some(s) = args.options.get("dispatch") {
+        cfg.policy = DispatchPolicy::parse(s)
+            .ok_or_else(|| anyhow!("bad --dispatch {s} (static|cost|roundrobin)"))?;
+    }
+    if let Some(a) = args.get::<f64>("ewma-alpha") {
+        cfg.ewma_alpha = a;
+    }
+    cfg.validate()?;
+    Ok(cfg)
 }
 
 /// Load a graph: `--graph <table1-name>` (generated) or `--graph-file
@@ -219,6 +250,7 @@ pub fn dispatch(args: Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("experiment") => cmd_experiment(&args),
         Some("serve") => cmd_serve(&args),
+        Some("describe") => cmd_describe(&args),
         Some("prepare") => cmd_prepare(&args),
         Some("query") => cmd_query(&args),
         Some("generate") => cmd_generate(&args),
@@ -236,7 +268,7 @@ const USAGE: &str = "\
 ppr-spmv — reduced-precision streaming SpMV for Personalized PageRank
 USAGE:
   ppr-spmv experiment <table1|table2|fig3|fig4|fig5|fig6|fig7|energy|shards|fusion|
-            multigraph|ladder|serving|topk|chaos|coldstart|all>
+            multigraph|ladder|serving|topk|chaos|coldstart|dispatch|all>
             [--full] [--scale N] [--requests N] [--iterations N] [--no-csv]
   ppr-spmv serve  [--graph NAME|--graph-file PATH] [--precision 26b]
             [--class static|fast|balanced|exact]
@@ -253,11 +285,18 @@ USAGE:
             workload (POST /v1/graphs/NAME/query|submit, GET /v1/tickets/ID,
             GET /v1/graphs|/healthz|/metrics); the [serve] config section
             seeds it; [--http-workers N] [--queue-cap N] [--serve-seconds N]
+          heterogeneous dispatch (DESIGN.md §12): the [dispatch] config
+            section or [--dispatch static|cost|roundrobin] [--ewma-alpha A]
+            route each batch across native/ladder/CPU backends by
+            predicted completion time (registry or --listen mode)
           fault injection (DESIGN.md §10): the [fault] config section or
             [--fault-seed N] [--fault-panic-rate P] [--fault-error-rate P]
             [--fault-slow-rate P] [--fault-slow-ms N] [--fault-kill-rate P]
-            [--fault-reload-rate P] [--fault-active-from N]
-            [--fault-active-ticks N] arm a deterministic fault plan
+            [--fault-reload-rate P] [--fault-reload-backend native|pjrt|cpu]
+            [--fault-active-from N] [--fault-active-ticks N] arm a
+            deterministic fault plan
+  ppr-spmv describe [--graph NAME|--graph NAME=SOURCE ...] [--dispatch P]
+            (report dispatch policy, backend availability, candidate sets)
   ppr-spmv prepare --graph NAME=SOURCE [--graph ...] --artifact-dir DIR
             [--shards N] (pre-build schedule artifacts for fast cold start)
   ppr-spmv query  --vertex V [--graph NAME|--graph-file PATH] [--top 10]
@@ -321,6 +360,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "coldstart" => {
             bh::coldstart::run(&opts);
         }
+        "dispatch" => {
+            bh::dispatch::run(&opts);
+        }
         "all" => {
             bh::table1_datasets::run(&opts);
             bh::table2_resources::run(&opts);
@@ -340,6 +382,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             bh::topk::run(&opts);
             bh::chaos::run(&opts);
             bh::coldstart::run(&opts);
+            bh::dispatch::run(&opts);
         }
         other => bail!("unknown experiment {other}"),
     }
@@ -490,16 +533,23 @@ fn cmd_serve_registry(args: &Args, cfg: &RunConfig, reg_cfg: RegistryConfig) -> 
         println!("fault injection armed: {:?}", plan.config());
     }
     let builder = engine_builder(args, cfg)?.fault(fault);
+    let dispatch = dispatch_config(args)?;
     println!(
-        "serving {} graphs (default {}) with {} × {}/{} workers, registry capacity {}",
+        "serving {} graphs (default {}) with {} × {}/{} workers, registry capacity {}, \
+         dispatch {}",
         registry.len(),
         registry.default_graph().as_deref().unwrap_or("-"),
         workers,
         builder.kind(),
         cfg.precision,
         registry.capacity(),
+        dispatch.policy,
     );
-    let server = builder.serve_registry(registry.clone(), workers)?;
+    let server = if dispatch.policy == DispatchPolicy::Static {
+        builder.serve_registry(registry.clone(), workers)?
+    } else {
+        builder.serve_registry_dispatch(registry.clone(), workers, &dispatch)?
+    };
     // demo workload: round-robin across graphs, random vertices
     let names = registry.names();
     let mut rng = crate::util::rng::Xoshiro256::seeded(1);
@@ -535,6 +585,17 @@ fn cmd_serve_registry(args: &Args, cfg: &RunConfig, reg_cfg: RegistryConfig) -> 
             );
         }
     }
+    if let Some(stats) = server.dispatch_stats() {
+        for b in &stats.backends {
+            println!(
+                "  backend {}: routed={} stolen={} workers={}",
+                b.kind.label(),
+                b.routed,
+                b.stolen,
+                b.workers
+            );
+        }
+    }
     server.shutdown();
     Ok(())
 }
@@ -566,6 +627,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(reg_cfg) = reg_cfg {
         return cmd_serve_registry(args, &cfg, reg_cfg);
     }
+    // the in-process demo path serves one graph on one statically-chosen
+    // backend; heterogeneous dispatch needs the registry (or --listen)
+    // stack — reject rather than silently ignore the flag
+    let dispatch = dispatch_config(args)?;
+    anyhow::ensure!(
+        dispatch.policy == DispatchPolicy::Static,
+        "--dispatch {} needs multi-graph serving or --listen (the in-process demo \
+         path is single-backend)",
+        dispatch.policy.label()
+    );
     let graph = load_graph(args)?;
     let workers = args.get_or::<usize>("workers", 2);
     let demo_requests = args.get_or::<usize>("demo-requests", 64);
@@ -669,14 +740,20 @@ fn cmd_serve_front(
         println!("fault injection armed: {:?}", plan.config());
     }
     let builder = engine_builder(args, cfg)?.fault(fault);
-    let server = Arc::new(builder.serve_registry(registry.clone(), workers)?);
+    let dispatch = dispatch_config(args)?;
+    let server = if dispatch.policy == DispatchPolicy::Static {
+        Arc::new(builder.serve_registry(registry.clone(), workers)?)
+    } else {
+        Arc::new(builder.serve_registry_dispatch(registry.clone(), workers, &dispatch)?)
+    };
     let state = crate::serve::ServeState::new(server.clone(), registry.clone(), serve_cfg);
     let front = crate::serve::FrontDoor::serve(state)?;
     println!(
-        "front door on http://{} ({} graphs, {} core workers)",
+        "front door on http://{} ({} graphs, {} core workers, dispatch {})",
         front.addr(),
         registry.len(),
-        workers
+        workers,
+        server.dispatch_policy().label(),
     );
     for name in registry.names() {
         println!("  POST /v1/graphs/{name}/query    {{\"vertex\": 0, \"top_n\": 10}}");
@@ -692,6 +769,64 @@ fn cmd_serve_front(
         },
     }
     crate::serve::shutdown_stack(front, server);
+    Ok(())
+}
+
+/// `describe`: stand the configured stack up (no traffic) and report the
+/// dispatch surface — policy, per-backend availability, the per-class
+/// candidate sets a batch may route across, cost models and registered
+/// graphs. Useful for verifying a `[dispatch]` configuration before
+/// exposing it; `GET /v1/graphs` reports the same facts over the wire.
+fn cmd_describe(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let reg_cfg = registry_config(args)?;
+    let registry = match &reg_cfg {
+        Some(reg) => build_registry(reg)?,
+        None => {
+            let name = if args.options.contains_key("graph-file") {
+                "default".to_string()
+            } else {
+                args.options.get("graph").cloned().unwrap_or_else(|| "ER-100k".to_string())
+            };
+            let graph = load_graph(args)?;
+            let registry = Arc::new(GraphRegistry::new(2));
+            registry.register_graph(&name, graph)?;
+            registry
+        }
+    };
+    let workers = args.get_or::<usize>("workers", 1);
+    let builder = engine_builder(args, &cfg)?;
+    let dispatch = dispatch_config(args)?;
+    let server = if dispatch.policy == DispatchPolicy::Static {
+        builder.serve_registry(registry.clone(), workers)?
+    } else {
+        builder.serve_registry_dispatch(registry.clone(), workers, &dispatch)?
+    };
+    println!("policy: {}", server.dispatch_policy().label());
+    println!("backends:");
+    let available = server.backends();
+    for kind in EngineKind::all() {
+        let state = if available.contains(&kind) { "available" } else { "unavailable" };
+        println!("  {:<12} {state}", kind.label());
+    }
+    println!("candidates (class -> backends a batch may route to):");
+    for class in AccuracyClass::all() {
+        let names: Vec<&str> =
+            server.candidate_backends(class).iter().map(|k| k.label()).collect();
+        println!("  {:<8} -> {}", class.label(), names.join(", "));
+    }
+    let models = server.describe_dispatch_models();
+    if !models.is_empty() {
+        println!("cost models:");
+        for (kind, desc) in &models {
+            println!("  {:<12} {desc}", kind.label());
+        }
+    }
+    println!("graphs:");
+    for name in registry.names() {
+        println!("  {name} (|V|={})", registry.num_vertices(&name).unwrap_or(0));
+    }
+    server.shutdown();
     Ok(())
 }
 
@@ -985,6 +1120,44 @@ mod tests {
         assert_eq!(cfg.panic_rate, 0.25);
         assert_eq!(cfg.active, Some((4, 16)));
         assert!(fault_plan(&args("serve --fault-panic-rate 1.5")).is_err(), "rates validated");
+    }
+
+    #[test]
+    fn dispatch_flag_selects_policy() {
+        let cfg = dispatch_config(&args("serve")).unwrap();
+        assert_eq!(cfg.policy, DispatchPolicy::Static, "static is the default");
+        let cfg = dispatch_config(&args("serve --dispatch cost")).unwrap();
+        assert_eq!(cfg.policy, DispatchPolicy::Cost);
+        let cfg =
+            dispatch_config(&args("serve --dispatch round-robin --ewma-alpha 0.5")).unwrap();
+        assert_eq!(cfg.policy, DispatchPolicy::RoundRobin);
+        assert_eq!(cfg.ewma_alpha, 0.5);
+        assert!(dispatch_config(&args("serve --dispatch warp")).is_err());
+        assert!(dispatch_config(&args("serve --ewma-alpha 0")).is_err(), "alpha validated");
+        // the in-process single-graph demo path rejects non-static
+        // dispatch rather than silently ignoring the flag
+        let err = dispatch(args("serve --graph AMZN --scale 400 --dispatch cost"));
+        assert!(err.is_err(), "demo path is single-backend");
+    }
+
+    #[test]
+    fn fault_reload_backend_flag_scopes_the_plan() {
+        let plan =
+            fault_plan(&args("serve --fault-reload-rate 0.5 --fault-reload-backend cpu"))
+                .unwrap()
+                .expect("flags arm the plan");
+        assert_eq!(plan.config().reload_backend, Some(EngineKind::CpuBaseline));
+        assert!(fault_plan(&args("serve --fault-reload-backend tpu")).is_err());
+    }
+
+    #[test]
+    fn describe_reports_dispatch_surface() {
+        // static single-graph and cost-routed variants both stand the
+        // stack up, print the surface, and shut down cleanly
+        dispatch(args("describe --graph AMZN --scale 400 --workers 1")).unwrap();
+        dispatch(args("describe --graph AMZN --scale 400 --dispatch cost --workers 1"))
+            .unwrap();
+        assert!(dispatch(args("describe --graph AMZN --scale 400 --dispatch warp")).is_err());
     }
 
     #[test]

@@ -400,6 +400,55 @@ impl RegistryConfig {
     }
 }
 
+/// Typed `[dispatch]` section: the cost-model-driven heterogeneous
+/// dispatch layer (DESIGN.md §12).
+///
+/// ```toml
+/// [dispatch]
+/// policy = "cost"       # static | cost | roundrobin
+/// ewma_alpha = 0.3      # smoothing of the measured-throughput models
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchConfig {
+    /// How batches are assigned to backends. `Static` (the default)
+    /// keeps the single configured backend — the pre-dispatch behaviour.
+    pub policy: crate::coordinator::dispatch::DispatchPolicy,
+    /// EWMA smoothing factor, in (0, 1], shared by the CPU-path
+    /// measured-throughput models and the native model's calibration.
+    pub ewma_alpha: f64,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        Self { policy: Default::default(), ewma_alpha: 0.3 }
+    }
+}
+
+impl DispatchConfig {
+    /// Build from a parsed document (section `[dispatch]`), falling back
+    /// to defaults for missing keys.
+    pub fn from_doc(doc: &ConfigDoc) -> Result<Self> {
+        let mut cfg = DispatchConfig::default();
+        if let Some(v) = doc.get("dispatch", "policy") {
+            cfg.policy = crate::coordinator::dispatch::DispatchPolicy::parse(v.as_str()?)
+                .ok_or_else(|| anyhow!("bad dispatch.policy {v:?}"))?;
+        }
+        if let Some(v) = doc.get("dispatch", "ewma_alpha") {
+            cfg.ewma_alpha = v.as_float()?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Check parameter sanity.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            bail!("dispatch.ewma_alpha must be in (0,1], got {}", self.ewma_alpha);
+        }
+        Ok(())
+    }
+}
+
 /// Typed `[serve]` section: knobs of the HTTP front door
 /// (`serve::FrontDoor`; DESIGN.md §8).
 ///
@@ -726,6 +775,27 @@ mod tests {
         assert_eq!(reg.artifact_dir, None, "artifact tier is opt-in");
         let doc = ConfigDoc::parse("[registry]\nartifact_dir = \"  \"\n").unwrap();
         assert!(RegistryConfig::from_doc(&doc).is_err(), "blank artifact_dir rejected");
+    }
+
+    #[test]
+    fn dispatch_section_parses_and_defaults() {
+        use crate::coordinator::dispatch::DispatchPolicy;
+        let cfg =
+            DispatchConfig::from_doc(&ConfigDoc::parse("[engine]\nkappa = 4\n").unwrap()).unwrap();
+        assert_eq!(cfg, DispatchConfig::default(), "absent section yields defaults");
+        assert_eq!(cfg.policy, DispatchPolicy::Static, "dispatch is opt-in");
+        let doc = ConfigDoc::parse("[dispatch]\npolicy = \"cost\"\newma_alpha = 0.5\n").unwrap();
+        let cfg = DispatchConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.policy, DispatchPolicy::Cost);
+        assert_eq!(cfg.ewma_alpha, 0.5);
+        for bad in [
+            "[dispatch]\npolicy = \"greedy\"\n",
+            "[dispatch]\newma_alpha = 0.0\n",
+            "[dispatch]\newma_alpha = 1.5\n",
+        ] {
+            let doc = ConfigDoc::parse(bad).unwrap();
+            assert!(DispatchConfig::from_doc(&doc).is_err(), "{bad:?} should be rejected");
+        }
     }
 
     #[test]

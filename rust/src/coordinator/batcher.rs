@@ -20,6 +20,7 @@
 //! timeout (worst-case queue wait ≤ one flush timeout plus batch
 //! execution, pinned by regression tests).
 
+use super::dispatch::BatchFeatures;
 use super::request::PprRequest;
 use crate::fixed::AccuracyClass;
 use std::collections::{HashMap, VecDeque};
@@ -247,6 +248,139 @@ impl DynamicBatcher {
     /// The κ this batcher fills toward.
     pub fn kappa(&self) -> usize {
         self.kappa
+    }
+}
+
+/// A batch the dispatcher has priced and routed: the flushed
+/// [`GraphBatch`] plus the features it was scored on and the predicted
+/// solve time carried on its lane's pending ledger.
+#[derive(Debug)]
+pub struct RoutedBatch {
+    /// The flushed batch.
+    pub batch: GraphBatch,
+    /// The workload shape the cost models scored.
+    pub features: BatchFeatures,
+    /// Predicted solve nanoseconds on the lane it was routed to — added
+    /// to that lane's pending ledger on push, removed on pop/steal.
+    pub predicted_solve_nanos: u64,
+}
+
+/// Steal-safe per-backend batch queues with per-lane pending-time
+/// ledgers — the hand-off between the dispatch pump and the per-backend
+/// worker groups (DESIGN.md §12).
+///
+/// A worker pops the **front** of its own lane; an idle worker may steal
+/// the **back** of another lane (the batch that would otherwise wait
+/// longest) when the caller-supplied predicate — the dispatcher's
+/// [`steal_allowed`](super::dispatch::Dispatcher::steal_allowed) — says
+/// the thief finishes it sooner. Pop and steal both run under one mutex,
+/// so a batch is claimed by exactly one worker: never duplicated, never
+/// dropped (property-tested below). After [`LaneSet::close`] the
+/// predicate is bypassed so stragglers drain onto whichever worker asks
+/// first.
+pub struct LaneSet {
+    inner: Mutex<LaneInner>,
+    cv: Condvar,
+}
+
+struct LaneInner {
+    lanes: Vec<VecDeque<RoutedBatch>>,
+    pending_nanos: Vec<u64>,
+    closed: bool,
+}
+
+/// How long an idle worker sleeps between steal re-evaluations: steal
+/// eligibility drifts as other lanes drain, so waiters re-check on a
+/// short timer as well as on push/close wake-ups.
+const STEAL_RECHECK: Duration = Duration::from_millis(10);
+
+impl LaneSet {
+    /// New set with `num_lanes` empty queues.
+    pub fn new(num_lanes: usize) -> Self {
+        assert!(num_lanes >= 1);
+        Self {
+            inner: Mutex::new(LaneInner {
+                lanes: (0..num_lanes).map(|_| VecDeque::new()).collect(),
+                pending_nanos: vec![0; num_lanes],
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Number of lanes.
+    pub fn num_lanes(&self) -> usize {
+        self.inner.lock().unwrap().lanes.len()
+    }
+
+    /// Enqueue a routed batch on its lane and grow the lane's pending
+    /// ledger by the predicted solve time. Returns `false` when closed.
+    pub fn push(&self, lane: usize, rb: RoutedBatch) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return false;
+        }
+        inner.pending_nanos[lane] =
+            inner.pending_nanos[lane].saturating_add(rb.predicted_solve_nanos);
+        inner.lanes[lane].push_back(rb);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Blocking: pop the front of `lane`, or — when it is empty — steal
+    /// the back of another lane for which `can_steal(owner,
+    /// owner_pending_nanos, batch)` approves (bypassed once closed, so
+    /// the set always drains). Returns the batch and `Some(owner)` when
+    /// it was stolen, `None` when the set is closed and fully drained.
+    pub fn pop_or_steal(
+        &self,
+        lane: usize,
+        can_steal: &dyn Fn(usize, u64, &RoutedBatch) -> bool,
+    ) -> Option<(RoutedBatch, Option<usize>)> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(rb) = inner.lanes[lane].pop_front() {
+                inner.pending_nanos[lane] =
+                    inner.pending_nanos[lane].saturating_sub(rb.predicted_solve_nanos);
+                return Some((rb, None));
+            }
+            let closed = inner.closed;
+            let n = inner.lanes.len();
+            for owner in (0..n).filter(|&o| o != lane) {
+                let approved = match inner.lanes[owner].back() {
+                    Some(rb) => closed || can_steal(owner, inner.pending_nanos[owner], rb),
+                    None => false,
+                };
+                if approved {
+                    let rb = inner.lanes[owner].pop_back().expect("checked non-empty");
+                    inner.pending_nanos[owner] =
+                        inner.pending_nanos[owner].saturating_sub(rb.predicted_solve_nanos);
+                    return Some((rb, Some(owner)));
+                }
+            }
+            if closed && inner.lanes.iter().all(|q| q.is_empty()) {
+                return None;
+            }
+            let (guard, _res) = self.cv.wait_timeout(inner, STEAL_RECHECK).unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Each lane's pending ledger (predicted solve nanoseconds queued).
+    pub fn pending_nanos(&self) -> Vec<u64> {
+        self.inner.lock().unwrap().pending_nanos.clone()
+    }
+
+    /// Each lane's queue depth in batches.
+    pub fn depths(&self) -> Vec<usize> {
+        self.inner.lock().unwrap().lanes.iter().map(|q| q.len()).collect()
+    }
+
+    /// Close the set: queued batches still drain (steal predicate
+    /// bypassed), new pushes are rejected, idle workers wake up.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
     }
 }
 
@@ -541,5 +675,111 @@ mod tests {
         }
         assert_eq!(served.load(Ordering::SeqCst), 90, "every request served exactly once");
         assert_eq!(mixed.load(Ordering::SeqCst), 0, "no batch ever mixes graphs");
+    }
+
+    fn routed(id: u64, nanos: u64) -> RoutedBatch {
+        RoutedBatch {
+            batch: GraphBatch {
+                graph: Arc::from("g"),
+                class: AccuracyClass::Static,
+                requests: vec![req(id)],
+            },
+            features: BatchFeatures {
+                num_vertices: 100,
+                num_edges: 400,
+                num_packets: 50,
+                lanes: 1,
+                iterations: 10,
+                class: AccuracyClass::Static,
+                shards: 1,
+            },
+            predicted_solve_nanos: nanos,
+        }
+    }
+
+    #[test]
+    fn lane_set_tracks_pending_ledger_and_gates_steals() {
+        let set = LaneSet::new(2);
+        assert!(set.push(0, routed(1, 500)));
+        assert!(set.push(0, routed(2, 700)));
+        assert_eq!(set.pending_nanos(), vec![1200, 0]);
+        assert_eq!(set.depths(), vec![2, 0]);
+        // own-lane pop comes from the FRONT and shrinks the ledger
+        let (rb, stolen_from) = set.pop_or_steal(0, &|_, _, _| false).unwrap();
+        assert_eq!(rb.batch.requests[0].id, 1);
+        assert_eq!(stolen_from, None);
+        assert_eq!(set.pending_nanos(), vec![700, 0]);
+        // a steal takes the BACK of the owner's lane and reports the owner
+        let (rb, stolen_from) = set.pop_or_steal(1, &|owner, pending, _| {
+            assert_eq!(owner, 0);
+            assert_eq!(pending, 700);
+            true
+        })
+        .unwrap();
+        assert_eq!(rb.batch.requests[0].id, 2);
+        assert_eq!(stolen_from, Some(0));
+        assert_eq!(set.pending_nanos(), vec![0, 0]);
+        // closed + drained → None; closed set rejects pushes
+        set.close();
+        assert!(set.pop_or_steal(0, &|_, _, _| false).is_none());
+        assert!(!set.push(0, routed(3, 1)));
+    }
+
+    #[test]
+    fn lane_set_close_bypasses_steal_predicate_to_drain() {
+        let set = LaneSet::new(2);
+        set.push(0, routed(9, 100));
+        set.close();
+        // the predicate always refuses, but a closed set must still drain
+        let (rb, stolen_from) = set.pop_or_steal(1, &|_, _, _| false).unwrap();
+        assert_eq!(rb.batch.requests[0].id, 9);
+        assert_eq!(stolen_from, Some(0));
+        assert!(set.pop_or_steal(1, &|_, _, _| false).is_none());
+    }
+
+    #[test]
+    fn lane_set_concurrent_flush_and_steal_never_duplicates_never_drops() {
+        use std::collections::HashSet;
+        use std::sync::atomic::{AtomicU64, Ordering};
+        const BATCHES: u64 = 400;
+        let set = Arc::new(LaneSet::new(2));
+        let stolen = Arc::new(AtomicU64::new(0));
+        // two workers per lane; lane-1 workers steal greedily, so lane-0
+        // pops race lane-1 back-steals on the same queue throughout
+        let workers: Vec<_> = (0..4)
+            .map(|w| {
+                let set = set.clone();
+                let stolen = stolen.clone();
+                std::thread::spawn(move || {
+                    let lane = w % 2;
+                    let mut seen = Vec::new();
+                    while let Some((rb, from)) = set.pop_or_steal(lane, &|_, _, _| true) {
+                        if from.is_some() {
+                            stolen.fetch_add(1, Ordering::Relaxed);
+                        }
+                        seen.push(rb.batch.requests[0].id);
+                    }
+                    seen
+                })
+            })
+            .collect();
+        // the producer routes everything to lane 0: lane 1 can only eat
+        // by stealing
+        for id in 0..BATCHES {
+            assert!(set.push(0, routed(id, 1_000)));
+            if id % 37 == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        set.close();
+        let mut all: Vec<u64> = Vec::new();
+        for w in workers {
+            all.extend(w.join().unwrap());
+        }
+        assert_eq!(all.len() as u64, BATCHES, "no batch dropped");
+        let unique: HashSet<u64> = all.iter().copied().collect();
+        assert_eq!(unique.len() as u64, BATCHES, "no batch served twice");
+        assert!(stolen.load(Ordering::Relaxed) > 0, "lane 1 exercised the steal path");
+        assert_eq!(set.pending_nanos(), vec![0, 0], "ledgers return to zero");
     }
 }

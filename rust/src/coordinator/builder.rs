@@ -26,7 +26,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 /// Which backend an engine runs on.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum EngineKind {
     /// Native Rust engine (bit-accurate model of the FPGA datapath).
     Native,
@@ -55,11 +55,62 @@ impl EngineKind {
             EngineKind::CpuBaseline => "cpu-baseline",
         }
     }
+
+    /// Every backend, native first.
+    pub fn all() -> [EngineKind; 3] {
+        [EngineKind::Native, EngineKind::Pjrt, EngineKind::CpuBaseline]
+    }
+
+    /// Compact wire encoding (for [`BackendCell`]; 0 means "unset").
+    pub fn as_u8(&self) -> u8 {
+        match self {
+            EngineKind::Native => 1,
+            EngineKind::Pjrt => 2,
+            EngineKind::CpuBaseline => 3,
+        }
+    }
+
+    /// Decode [`Self::as_u8`]; 0 (and anything unknown) is `None`.
+    pub fn from_u8(v: u8) -> Option<EngineKind> {
+        match v {
+            1 => Some(EngineKind::Native),
+            2 => Some(EngineKind::Pjrt),
+            3 => Some(EngineKind::CpuBaseline),
+            _ => None,
+        }
+    }
 }
 
 impl std::fmt::Display for EngineKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.label())
+    }
+}
+
+/// A shared write-once-per-serve slot recording which backend actually
+/// served a request — stamped by the worker just before the solve,
+/// readable from the request's [`Ticket`](super::server::Ticket) after
+/// the response lands. Under dispatch the serving backend is a runtime
+/// decision (routing, stealing, degrade), so attribution can't ride the
+/// request by value.
+#[derive(Debug, Clone, Default)]
+pub struct BackendCell(Arc<std::sync::atomic::AtomicU8>);
+
+impl BackendCell {
+    /// New unset cell.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the serving backend (last write wins — a degraded retry
+    /// overwrites the failed attempt's stamp).
+    pub fn set(&self, kind: EngineKind) {
+        self.0.store(kind.as_u8(), std::sync::atomic::Ordering::Release);
+    }
+
+    /// The recorded backend, if any solve ran.
+    pub fn get(&self) -> Option<EngineKind> {
+        EngineKind::from_u8(self.0.load(std::sync::atomic::Ordering::Acquire))
     }
 }
 
@@ -118,6 +169,13 @@ impl EngineBuilder {
     /// The backend this builder targets.
     pub fn kind(&self) -> EngineKind {
         self.kind
+    }
+
+    /// The same builder retargeted at another backend — how dispatch
+    /// worker groups derive their per-backend builders from the one
+    /// configured builder (config, faults and artifact label carry over).
+    pub fn with_kind(&self, kind: EngineKind) -> Self {
+        Self { kind, ..self.clone() }
     }
 
     /// The configuration this builder applies.
@@ -260,6 +318,7 @@ impl EngineBuilder {
         let engines = self.build_pool(graph, workers)?;
         let mut cfg = ServerConfig::from_run(&self.cfg);
         cfg.fault = self.fault.clone();
+        cfg.backend = self.kind;
         Server::start(engines, cfg)
     }
 
@@ -273,7 +332,26 @@ impl EngineBuilder {
     ) -> Result<Server> {
         let mut cfg = ServerConfig::from_run(&self.cfg);
         cfg.fault = self.fault.clone();
+        cfg.backend = self.kind;
         Server::start_registry(registry, self.clone(), workers, cfg)
+    }
+
+    /// Stand up a multi-graph [`Server`] with cost-model-driven
+    /// heterogeneous dispatch (DESIGN.md §12): one worker group of
+    /// `workers_per_backend` threads per *available* backend (this
+    /// builder's kind first; backends whose probe build fails — PJRT
+    /// without artifacts — are excluded), batches routed per `dispatch`
+    /// (see [`Server::start_dispatch`]).
+    pub fn serve_registry_dispatch(
+        &self,
+        registry: Arc<GraphRegistry>,
+        workers_per_backend: usize,
+        dispatch: &crate::config::DispatchConfig,
+    ) -> Result<Server> {
+        let mut cfg = ServerConfig::from_run(&self.cfg);
+        cfg.fault = self.fault.clone();
+        cfg.backend = self.kind;
+        Server::start_dispatch(registry, self.clone(), workers_per_backend, dispatch, cfg)
     }
 
     fn spawn_pjrt(&self, prepared: Arc<PreparedGraph>) -> Result<Box<dyn PprEngine + Send>> {
@@ -311,6 +389,39 @@ mod tests {
         }
         assert_eq!(EngineKind::parse("CPU"), Some(EngineKind::CpuBaseline));
         assert_eq!(EngineKind::parse("fpga"), None);
+    }
+
+    #[test]
+    fn kind_u8_codec_round_trips_and_zero_is_unset() {
+        for kind in EngineKind::all() {
+            assert_eq!(EngineKind::from_u8(kind.as_u8()), Some(kind));
+            assert_ne!(kind.as_u8(), 0);
+        }
+        assert_eq!(EngineKind::from_u8(0), None);
+        assert_eq!(EngineKind::from_u8(200), None);
+    }
+
+    #[test]
+    fn backend_cell_shares_one_slot_across_clones() {
+        let cell = BackendCell::new();
+        let clone = cell.clone();
+        assert_eq!(cell.get(), None);
+        clone.set(EngineKind::CpuBaseline);
+        assert_eq!(cell.get(), Some(EngineKind::CpuBaseline));
+        // last write wins (degraded retry overwrites the failed stamp)
+        cell.set(EngineKind::Native);
+        assert_eq!(clone.get(), Some(EngineKind::Native));
+    }
+
+    #[test]
+    fn with_kind_retargets_but_keeps_config() {
+        let cfg = RunConfig { kappa: 3, iterations: 7, ..Default::default() };
+        let b = EngineBuilder::native().config(cfg);
+        let cpu = b.with_kind(EngineKind::CpuBaseline);
+        assert_eq!(cpu.kind(), EngineKind::CpuBaseline);
+        assert_eq!(cpu.run_config().kappa, 3);
+        assert_eq!(cpu.run_config().iterations, 7);
+        assert_eq!(b.kind(), EngineKind::Native, "original untouched");
     }
 
     #[test]

@@ -1,0 +1,682 @@
+//! Cost-model-driven heterogeneous dispatch (DESIGN.md §12).
+//!
+//! The three backends (native fixed-point, f32 CPU baseline, PJRT) used to
+//! sit behind one static config-time choice. This module turns that choice
+//! into a per-batch routing decision, following *Synergistic CPU-FPGA
+//! Acceleration of Sparse Linear Algebra* (PAPERS.md): score each flushed
+//! `GraphBatch` on every candidate backend by **predicted completion time
+//! = queue-drain estimate + solve estimate** and route it to the argmin.
+//!
+//! Two cost models price the backends:
+//!
+//! - [`PipelineCostModel`] — the existing `fpga::pipeline` cycle model
+//!   prices fused/sharded/ladder runs on the native backend, scaled onto
+//!   wall-clock by the online [`Calibration`] ratio (the software engine
+//!   standing in for the FPGA runs orders of magnitude slower per modeled
+//!   cycle; the EWMA of measured/modeled puts both backends on one clock).
+//! - [`EwmaCostModel`] — an online measured-throughput model for the CPU
+//!   paths: per-graph-size-bucket EWMA of seconds-per-operation, seeded
+//!   from an optimistic prior so cold backends attract probe traffic.
+//!
+//! The [`Dispatcher`] owns only the *decision* logic — candidate sets,
+//! scoring, round-robin state, routed/stolen counters — so it unit-tests
+//! without threads. The steal-safe per-backend queues live in
+//! `batcher::LaneSet`; the worker groups in `server::start_dispatch`.
+//!
+//! Routing never changes results: a batch served by backend `k` produces
+//! exactly the scores `k` would produce statically (property-tested in
+//! `server`), and classes a backend cannot serve natively (the precision
+//! ladder on CPU/PJRT) are excluded from its candidate set whenever a
+//! native lane exists.
+
+use super::builder::EngineKind;
+use crate::config::RunConfig;
+use crate::fixed::{AccuracyClass, Precision};
+use crate::fpga::pipeline::{Calibration, Workload};
+use crate::fpga::{FpgaConfig, PipelineModel};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// How the server assigns flushed batches to backends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchPolicy {
+    /// One backend, chosen at config time — the pre-dispatch behaviour.
+    #[default]
+    Static,
+    /// Argmin of predicted completion time across candidate backends,
+    /// with work-stealing onto idle backends.
+    Cost,
+    /// Rotate through candidate backends (a fairness baseline; no cost
+    /// model consulted).
+    RoundRobin,
+}
+
+impl DispatchPolicy {
+    /// Canonical label ("static"/"cost"/"roundrobin").
+    pub fn label(&self) -> &'static str {
+        match self {
+            DispatchPolicy::Static => "static",
+            DispatchPolicy::Cost => "cost",
+            DispatchPolicy::RoundRobin => "roundrobin",
+        }
+    }
+
+    /// Parse a CLI/config label.
+    pub fn parse(s: &str) -> Option<DispatchPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "static" => Some(DispatchPolicy::Static),
+            "cost" => Some(DispatchPolicy::Cost),
+            "roundrobin" | "round-robin" | "rr" => Some(DispatchPolicy::RoundRobin),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for DispatchPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// The workload shape of one flushed batch, as the cost models see it.
+#[derive(Debug, Clone)]
+pub struct BatchFeatures {
+    /// |V| of the batch's graph.
+    pub num_vertices: usize,
+    /// |E| of the batch's graph.
+    pub num_edges: usize,
+    /// Edge packets in the graph's aligned schedule (incl. padding).
+    pub num_packets: usize,
+    /// Personalization lanes occupied (≤ κ).
+    pub lanes: usize,
+    /// Iteration budget the solve will run.
+    pub iterations: usize,
+    /// Requested accuracy class (decides ladder vs static pricing and
+    /// backend candidacy).
+    pub class: AccuracyClass,
+    /// Destination shards the schedule was built with.
+    pub shards: usize,
+}
+
+/// Prices a batch on one backend and learns from its measured solves.
+pub trait CostModel: Send + Sync {
+    /// Predicted wall-clock seconds to solve `f` on this backend, queue
+    /// excluded.
+    fn solve_secs(&self, f: &BatchFeatures) -> f64;
+    /// Fold one measured batch solve into the model.
+    fn observe(&self, f: &BatchFeatures, measured_secs: f64);
+    /// One-line description of the model and its learned state.
+    fn describe(&self) -> String;
+}
+
+/// Native-backend pricing: the `fpga::pipeline` cycle model (fused
+/// multi-CU sweeps; per-rung design points for ladder classes), scaled to
+/// wall-clock by the online measured/modeled [`Calibration`] ratio.
+pub struct PipelineCostModel {
+    cfg: RunConfig,
+    calibration: Calibration,
+}
+
+impl PipelineCostModel {
+    /// Default calibration smoothing (stable but responsive within one
+    /// bench phase).
+    pub const DEFAULT_ALPHA: f64 = 0.3;
+
+    /// New model pricing design points derived from `cfg` (κ, B, static
+    /// precision).
+    pub fn new(cfg: RunConfig, alpha: f64) -> Self {
+        Self { cfg, calibration: Calibration::new(alpha) }
+    }
+
+    /// The learned calibration (measured/modeled EWMA).
+    pub fn calibration(&self) -> &Calibration {
+        &self.calibration
+    }
+
+    /// The rung split a class runs: ladder classes spread the iteration
+    /// budget evenly across their rungs, static runs keep the configured
+    /// precision.
+    fn rungs(&self, f: &BatchFeatures) -> Vec<(Precision, usize)> {
+        match f.class.ladder() {
+            Some(spec) => {
+                let n = spec.rungs.len().max(1);
+                let base = f.iterations / n;
+                let rem = f.iterations % n;
+                spec.rungs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &p)| (p, base + usize::from(i < rem)))
+                    .filter(|&(_, iters)| iters > 0)
+                    .collect()
+            }
+            None => vec![(self.cfg.precision, f.iterations)],
+        }
+    }
+
+    /// Raw modeled seconds (uncalibrated): per-rung fused multi-CU
+    /// compute + one PCIe result transfer. Falls back to a crude
+    /// edges×iterations estimate if a design point fails synthesis.
+    fn modeled_secs(&self, f: &BatchFeatures) -> f64 {
+        let shards = f.shards.max(1);
+        let per_shard = Workload {
+            requests: f.lanes.max(1),
+            iterations: 1,
+            num_vertices: f.num_vertices.div_ceil(shards).max(1),
+            num_packets: f.num_packets.div_ceil(shards),
+        };
+        let mut compute = 0.0f64;
+        for (precision, iterations) in self.rungs(f) {
+            let cfg = FpgaConfig {
+                precision,
+                kappa: self.cfg.kappa,
+                b: self.cfg.b,
+                max_vertices: f.num_vertices.max(1),
+            };
+            match PipelineModel::new(cfg) {
+                Ok(model) => {
+                    let cycles = model.cycles_per_iteration_fused(&per_shard);
+                    compute +=
+                        cycles as f64 * iterations as f64 / (model.synth.clock_mhz * 1e6);
+                }
+                Err(_) => {
+                    compute += (f.num_edges + f.num_vertices).max(1) as f64
+                        * iterations as f64
+                        * 1e-9;
+                }
+            }
+        }
+        let transfer =
+            (f.lanes.max(1) * f.num_vertices * 4) as f64 / crate::fpga::U200.pcie_bandwidth;
+        compute + transfer
+    }
+}
+
+impl CostModel for PipelineCostModel {
+    fn solve_secs(&self, f: &BatchFeatures) -> f64 {
+        self.calibration.scale(self.modeled_secs(f))
+    }
+
+    fn observe(&self, f: &BatchFeatures, measured_secs: f64) {
+        self.calibration.observe(self.modeled_secs(f), measured_secs);
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "pipeline cycle model (calibration ×{:.3e}, {} samples)",
+            self.calibration.factor(),
+            self.calibration.samples()
+        )
+    }
+}
+
+/// Measured-throughput pricing for backends without a cycle model: an
+/// EWMA of seconds-per-operation, bucketed by graph size (⌈log₂|V|⌉), so
+/// cache effects on small graphs don't pollute large-graph predictions.
+/// Before a bucket has samples it prices at an optimistic prior, which
+/// deliberately attracts early traffic to cold backends — one real solve
+/// replaces the prior outright.
+pub struct EwmaCostModel {
+    alpha: f64,
+    prior_secs_per_op: f64,
+    /// bucket → (seconds-per-op EWMA, samples folded in)
+    buckets: Mutex<HashMap<u32, (f64, u64)>>,
+}
+
+impl EwmaCostModel {
+    /// Optimistic cold-start prior: 1 ns/op flatters any real backend, so
+    /// unmeasured backends win ties and get measured.
+    pub const DEFAULT_PRIOR_SECS_PER_OP: f64 = 1e-9;
+
+    /// New model with no samples.
+    pub fn new(alpha: f64, prior_secs_per_op: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA alpha must be in (0, 1]");
+        assert!(prior_secs_per_op > 0.0, "prior must be positive");
+        Self { alpha, prior_secs_per_op, buckets: Mutex::new(HashMap::new()) }
+    }
+
+    fn bucket(f: &BatchFeatures) -> u32 {
+        (f.num_vertices.max(2) as u64).next_power_of_two().trailing_zeros()
+    }
+
+    /// The operation count a batch solve performs: one edge traversal plus
+    /// one vertex update per iteration, per lane.
+    fn ops(f: &BatchFeatures) -> f64 {
+        (f.num_edges + f.num_vertices).max(1) as f64
+            * f.iterations.max(1) as f64
+            * f.lanes.max(1) as f64
+    }
+
+    /// Total samples folded in across all buckets.
+    pub fn samples(&self) -> u64 {
+        self.buckets.lock().unwrap().values().map(|&(_, n)| n).sum()
+    }
+}
+
+impl CostModel for EwmaCostModel {
+    fn solve_secs(&self, f: &BatchFeatures) -> f64 {
+        let rate = match self.buckets.lock().unwrap().get(&Self::bucket(f)) {
+            Some(&(rate, n)) if n > 0 => rate,
+            _ => self.prior_secs_per_op,
+        };
+        Self::ops(f) * rate
+    }
+
+    fn observe(&self, f: &BatchFeatures, measured_secs: f64) {
+        if !(measured_secs.is_finite() && measured_secs > 0.0) {
+            return;
+        }
+        let rate = measured_secs / Self::ops(f);
+        let mut buckets = self.buckets.lock().unwrap();
+        let entry = buckets.entry(Self::bucket(f)).or_insert((0.0, 0));
+        // first sample replaces the prior outright; later ones smooth
+        entry.0 = if entry.1 == 0 { rate } else { entry.0 + self.alpha * (rate - entry.0) };
+        entry.1 += 1;
+    }
+
+    fn describe(&self) -> String {
+        let buckets = self.buckets.lock().unwrap();
+        let samples: u64 = buckets.values().map(|&(_, n)| n).sum();
+        format!("measured-throughput EWMA ({} buckets, {} samples)", buckets.len(), samples)
+    }
+}
+
+/// One backend's worker group as the dispatcher sees it: identity, how
+/// many workers drain its queue, and the model pricing its solves.
+pub struct BackendLane {
+    kind: EngineKind,
+    workers: usize,
+    model: Box<dyn CostModel>,
+}
+
+impl BackendLane {
+    /// New lane; `workers` is the group size draining this lane's queue.
+    pub fn new(kind: EngineKind, workers: usize, model: Box<dyn CostModel>) -> Self {
+        Self { kind, workers: workers.max(1), model }
+    }
+}
+
+/// One routing decision.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteDecision {
+    /// Destination lane index.
+    pub lane: usize,
+    /// The chosen backend's predicted solve time for this batch, in
+    /// nanoseconds — the amount added to the lane's pending ledger.
+    pub predicted_solve_nanos: u64,
+}
+
+/// Per-backend routing statistics, as exposed on `/metrics` and in
+/// `BENCH_dispatch.json`.
+#[derive(Debug, Clone)]
+pub struct BackendStat {
+    /// Backend identity.
+    pub kind: EngineKind,
+    /// Workers draining this backend's queue.
+    pub workers: usize,
+    /// Batches routed here by the dispatcher.
+    pub routed: u64,
+    /// Batches this backend stole from another's queue.
+    pub stolen: u64,
+    /// Current queue depth (batches).
+    pub depth: usize,
+}
+
+/// A snapshot of the dispatcher's state.
+#[derive(Debug, Clone)]
+pub struct DispatchStats {
+    /// Active policy.
+    pub policy: DispatchPolicy,
+    /// Per-backend counters, in lane order.
+    pub backends: Vec<BackendStat>,
+}
+
+/// The routing brain: pure decision logic over a fixed set of backend
+/// lanes. Queue state is passed in (`pending_nanos`, depths), so this
+/// type owns no locks beyond its models and unit-tests without threads.
+pub struct Dispatcher {
+    policy: DispatchPolicy,
+    lanes: Vec<BackendLane>,
+    rr: AtomicUsize,
+    routed: Vec<AtomicU64>,
+    stolen: Vec<AtomicU64>,
+}
+
+impl Dispatcher {
+    /// New dispatcher over the given lanes (at least one; lane 0 is the
+    /// statically-configured backend and the `Static` policy's target).
+    pub fn new(policy: DispatchPolicy, lanes: Vec<BackendLane>) -> Self {
+        assert!(!lanes.is_empty(), "dispatcher needs at least one backend lane");
+        let n = lanes.len();
+        Self {
+            policy,
+            lanes,
+            rr: AtomicUsize::new(0),
+            routed: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            stolen: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Active policy.
+    pub fn policy(&self) -> DispatchPolicy {
+        self.policy
+    }
+
+    /// Number of backend lanes.
+    pub fn num_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The backend behind a lane index.
+    pub fn kind_of(&self, lane: usize) -> EngineKind {
+        self.lanes[lane].kind
+    }
+
+    /// Worker-group size of a lane.
+    pub fn workers_of(&self, lane: usize) -> usize {
+        self.lanes[lane].workers
+    }
+
+    /// All lane backends, in lane order.
+    pub fn lane_kinds(&self) -> Vec<EngineKind> {
+        self.lanes.iter().map(|l| l.kind).collect()
+    }
+
+    /// Lane indices allowed to serve a class. Ladder classes require the
+    /// native engine's precision-switching datapath, so whenever a native
+    /// lane exists they are confined to native lanes; with no native lane
+    /// every backend serves its own (static-precision) interpretation and
+    /// pricing reflects the run it would actually do.
+    pub fn candidates(&self, class: AccuracyClass) -> Vec<usize> {
+        if class.ladder().is_some() {
+            let native: Vec<usize> = self
+                .lanes
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.kind == EngineKind::Native)
+                .map(|(i, _)| i)
+                .collect();
+            if !native.is_empty() {
+                return native;
+            }
+        }
+        (0..self.lanes.len()).collect()
+    }
+
+    /// Backends allowed to serve a class, in lane order.
+    pub fn candidate_kinds(&self, class: AccuracyClass) -> Vec<EngineKind> {
+        self.candidates(class).into_iter().map(|i| self.lanes[i].kind).collect()
+    }
+
+    /// The lane's predicted solve seconds for a batch.
+    pub fn solve_secs(&self, lane: usize, f: &BatchFeatures) -> f64 {
+        self.lanes[lane].model.solve_secs(f)
+    }
+
+    /// Route one flushed batch. `pending_nanos` is each lane's current
+    /// queue ledger (predicted solve nanoseconds of everything queued);
+    /// the queue-drain estimate divides it by the lane's worker count.
+    pub fn route(&self, f: &BatchFeatures, pending_nanos: &[u64]) -> RouteDecision {
+        debug_assert_eq!(pending_nanos.len(), self.lanes.len());
+        let candidates = self.candidates(f.class);
+        let lane = match self.policy {
+            DispatchPolicy::Static => candidates.first().copied().unwrap_or(0),
+            DispatchPolicy::RoundRobin => {
+                let turn = self.rr.fetch_add(1, Ordering::Relaxed);
+                candidates[turn % candidates.len()]
+            }
+            DispatchPolicy::Cost => candidates
+                .iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    let score = |l: usize| {
+                        pending_nanos.get(l).copied().unwrap_or(0) as f64
+                            / 1e9
+                            / self.lanes[l].workers as f64
+                            + self.lanes[l].model.solve_secs(f)
+                    };
+                    score(a).total_cmp(&score(b))
+                })
+                .unwrap_or(0),
+        };
+        self.routed[lane].fetch_add(1, Ordering::Relaxed);
+        let predicted = self.lanes[lane].model.solve_secs(f);
+        RouteDecision { lane, predicted_solve_nanos: secs_to_nanos(predicted) }
+    }
+
+    /// Whether an idle `thief` lane may steal a batch queued on `owner`:
+    /// the thief must be a candidate for the batch's class and its
+    /// predicted solve time must beat the owner's queue-drain estimate
+    /// (the owner's pending ledger including this batch, spread over its
+    /// workers) — i.e. the steal finishes the batch sooner than waiting.
+    pub fn steal_allowed(
+        &self,
+        thief: usize,
+        owner: usize,
+        owner_pending_nanos: u64,
+        f: &BatchFeatures,
+    ) -> bool {
+        if thief == owner || !self.candidates(f.class).contains(&thief) {
+            return false;
+        }
+        let thief_secs = self.lanes[thief].model.solve_secs(f);
+        let owner_secs =
+            owner_pending_nanos as f64 / 1e9 / self.lanes[owner].workers as f64;
+        thief_secs < owner_secs
+    }
+
+    /// Fold a measured batch solve into the serving lane's model.
+    pub fn observe(&self, lane: usize, f: &BatchFeatures, measured_secs: f64) {
+        self.lanes[lane].model.observe(f, measured_secs);
+    }
+
+    /// Count a successful steal onto `lane`.
+    pub fn record_steal(&self, lane: usize) {
+        self.stolen[lane].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One-line cost-model description per lane, in lane order.
+    pub fn describe_models(&self) -> Vec<(EngineKind, String)> {
+        self.lanes.iter().map(|l| (l.kind, l.model.describe())).collect()
+    }
+
+    /// Snapshot the routing counters; `depths` is each lane's current
+    /// queue depth from the `LaneSet`.
+    pub fn stats(&self, depths: &[usize]) -> DispatchStats {
+        DispatchStats {
+            policy: self.policy,
+            backends: self
+                .lanes
+                .iter()
+                .enumerate()
+                .map(|(i, l)| BackendStat {
+                    kind: l.kind,
+                    workers: l.workers,
+                    routed: self.routed[i].load(Ordering::Relaxed),
+                    stolen: self.stolen[i].load(Ordering::Relaxed),
+                    depth: depths.get(i).copied().unwrap_or(0),
+                })
+                .collect(),
+        }
+    }
+}
+
+fn secs_to_nanos(secs: f64) -> u64 {
+    if !secs.is_finite() || secs <= 0.0 {
+        return 1;
+    }
+    (secs * 1e9).clamp(1.0, 1e18) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn features(v: usize, e: usize, class: AccuracyClass) -> BatchFeatures {
+        BatchFeatures {
+            num_vertices: v,
+            num_edges: e,
+            num_packets: e.div_ceil(8),
+            lanes: 8,
+            iterations: 10,
+            class,
+            shards: 1,
+        }
+    }
+
+    /// A test-only model with a constant price.
+    struct Flat(f64);
+    impl CostModel for Flat {
+        fn solve_secs(&self, _f: &BatchFeatures) -> f64 {
+            self.0
+        }
+        fn observe(&self, _f: &BatchFeatures, _measured: f64) {}
+        fn describe(&self) -> String {
+            format!("flat {}s", self.0)
+        }
+    }
+
+    fn two_lane(policy: DispatchPolicy, fast: f64, slow: f64) -> Dispatcher {
+        Dispatcher::new(
+            policy,
+            vec![
+                BackendLane::new(EngineKind::Native, 1, Box::new(Flat(fast))),
+                BackendLane::new(EngineKind::CpuBaseline, 1, Box::new(Flat(slow))),
+            ],
+        )
+    }
+
+    #[test]
+    fn policy_labels_round_trip() {
+        for p in [DispatchPolicy::Static, DispatchPolicy::Cost, DispatchPolicy::RoundRobin] {
+            assert_eq!(DispatchPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(DispatchPolicy::parse("round-robin"), Some(DispatchPolicy::RoundRobin));
+        assert_eq!(DispatchPolicy::parse("rr"), Some(DispatchPolicy::RoundRobin));
+        assert_eq!(DispatchPolicy::parse("greedy"), None);
+        assert_eq!(DispatchPolicy::default(), DispatchPolicy::Static);
+    }
+
+    #[test]
+    fn ewma_cold_start_converges_to_measured_rate() {
+        let model = EwmaCostModel::new(0.5, EwmaCostModel::DEFAULT_PRIOR_SECS_PER_OP);
+        let f = features(4096, 40_000, AccuracyClass::Static);
+        // prior-only: optimistic price, no samples
+        let prior = model.solve_secs(&f);
+        assert!((prior - EwmaCostModel::ops(&f) * 1e-9).abs() < 1e-12);
+        assert_eq!(model.samples(), 0);
+        // first observation replaces the prior outright
+        model.observe(&f, 0.25);
+        assert!((model.solve_secs(&f) - 0.25).abs() < 1e-9, "{}", model.solve_secs(&f));
+        // repeated observations converge the EWMA onto the measured time
+        for _ in 0..32 {
+            model.observe(&f, 0.1);
+        }
+        assert!((model.solve_secs(&f) - 0.1).abs() < 1e-6, "{}", model.solve_secs(&f));
+        assert_eq!(model.samples(), 33);
+        // a different size bucket is still at the prior
+        let small = features(64, 500, AccuracyClass::Static);
+        assert!((model.solve_secs(&small) - EwmaCostModel::ops(&small) * 1e-9).abs() < 1e-12);
+        // junk observations ignored
+        model.observe(&f, f64::NAN);
+        model.observe(&f, -1.0);
+        assert_eq!(model.samples(), 33);
+    }
+
+    #[test]
+    fn pipeline_model_prices_and_calibrates() {
+        let model = PipelineCostModel::new(RunConfig::default(), 0.5);
+        let f = features(8192, 80_000, AccuracyClass::Static);
+        let raw = model.solve_secs(&f);
+        assert!(raw.is_finite() && raw > 0.0);
+        // ladder classes price their per-rung design points — still finite
+        let exact = model.solve_secs(&features(8192, 80_000, AccuracyClass::Exact));
+        assert!(exact.is_finite() && exact > 0.0);
+        // an observation 100× the model scales future predictions up
+        model.observe(&f, raw * 100.0);
+        let scaled = model.solve_secs(&f);
+        assert!(scaled > raw * 50.0, "{scaled} vs {raw}");
+    }
+
+    #[test]
+    fn ladder_classes_confined_to_native_lanes() {
+        let d = two_lane(DispatchPolicy::Cost, 1.0, 1.0);
+        assert_eq!(d.candidates(AccuracyClass::Static), vec![0, 1]);
+        for class in [AccuracyClass::Fast, AccuracyClass::Balanced, AccuracyClass::Exact] {
+            assert_eq!(d.candidates(class), vec![0], "{class}");
+            assert_eq!(d.candidate_kinds(class), vec![EngineKind::Native]);
+        }
+        // with no native lane every backend serves (its own interpretation)
+        let cpu_only = Dispatcher::new(
+            DispatchPolicy::Cost,
+            vec![BackendLane::new(EngineKind::CpuBaseline, 1, Box::new(Flat(1.0)))],
+        );
+        assert_eq!(cpu_only.candidates(AccuracyClass::Exact), vec![0]);
+    }
+
+    #[test]
+    fn cost_policy_routes_to_argmin_completion() {
+        let d = two_lane(DispatchPolicy::Cost, 0.010, 0.050);
+        let f = features(1024, 10_000, AccuracyClass::Static);
+        // empty queues: the cheaper backend wins
+        let dec = d.route(&f, &[0, 0]);
+        assert_eq!(dec.lane, 0);
+        assert!(dec.predicted_solve_nanos >= 9_000_000);
+        // a deep queue on the cheap backend flips the decision
+        let dec = d.route(&f, &[100_000_000, 0]);
+        assert_eq!(dec.lane, 1);
+        let stats = d.stats(&[0, 0]);
+        assert_eq!(stats.backends[0].routed, 1);
+        assert_eq!(stats.backends[1].routed, 1);
+    }
+
+    #[test]
+    fn static_policy_pins_lane_zero_and_rr_rotates() {
+        let f = features(1024, 10_000, AccuracyClass::Static);
+        let d = two_lane(DispatchPolicy::Static, 10.0, 0.001);
+        for _ in 0..4 {
+            assert_eq!(d.route(&f, &[0, 0]).lane, 0, "static ignores cost");
+        }
+        let d = two_lane(DispatchPolicy::RoundRobin, 10.0, 0.001);
+        let lanes: Vec<usize> = (0..4).map(|_| d.route(&f, &[0, 0]).lane).collect();
+        assert_eq!(lanes, vec![0, 1, 0, 1]);
+        // ladder traffic only rotates through its candidates
+        let exact = features(1024, 10_000, AccuracyClass::Exact);
+        for _ in 0..3 {
+            assert_eq!(d.route(&exact, &[0, 0]).lane, 0);
+        }
+    }
+
+    #[test]
+    fn steal_gated_on_candidacy_and_predicted_win() {
+        let d = two_lane(DispatchPolicy::Cost, 0.010, 0.020);
+        let f = features(1024, 10_000, AccuracyClass::Static);
+        // owner 0 has 100 ms queued; the 20 ms thief wins
+        assert!(d.steal_allowed(1, 0, 100_000_000, &f));
+        // 5 ms queued: waiting beats stealing
+        assert!(!d.steal_allowed(1, 0, 5_000_000, &f));
+        // never steal from yourself
+        assert!(!d.steal_allowed(0, 0, 100_000_000, &f));
+        // ladder batches cannot be stolen by a non-candidate backend
+        let exact = features(1024, 10_000, AccuracyClass::Exact);
+        assert!(!d.steal_allowed(1, 0, u64::MAX / 2, &exact));
+        d.record_steal(1);
+        assert_eq!(d.stats(&[0, 0]).backends[1].stolen, 1);
+    }
+
+    #[test]
+    fn stats_snapshot_carries_depths_and_kinds() {
+        let d = two_lane(DispatchPolicy::Cost, 1.0, 2.0);
+        let stats = d.stats(&[3, 7]);
+        assert_eq!(stats.policy, DispatchPolicy::Cost);
+        assert_eq!(stats.backends.len(), 2);
+        assert_eq!(stats.backends[0].kind, EngineKind::Native);
+        assert_eq!(stats.backends[0].depth, 3);
+        assert_eq!(stats.backends[1].kind, EngineKind::CpuBaseline);
+        assert_eq!(stats.backends[1].depth, 7);
+        assert_eq!(d.lane_kinds(), vec![EngineKind::Native, EngineKind::CpuBaseline]);
+        assert_eq!(d.num_lanes(), 2);
+        assert_eq!(d.workers_of(0), 1);
+        assert!(d.describe_models()[0].1.contains("flat"));
+    }
+}

@@ -23,6 +23,11 @@
 //! - [`batcher`] — the graph-keyed dynamic batcher: fill the
 //!   accelerator's κ lanes or flush on timeout, per graph, round-robin
 //!   across graphs — one personalization space per batch;
+//! - [`dispatch`] — cost-model-driven heterogeneous routing: a
+//!   [`Dispatcher`] scores each flushed batch on every candidate backend
+//!   (FPGA cycle model for native, measured-throughput EWMA for the CPU
+//!   paths) and routes it to the argmin predicted completion time, with
+//!   work-stealing between per-backend worker groups (DESIGN.md §12);
 //! - [`server`] — worker threads (single-graph engine ownership or
 //!   per-batch registry resolution with an engine cache), the
 //!   non-blocking [`Ticket`] submission API with [`Server::submit_to`]
@@ -36,6 +41,7 @@
 
 pub mod batcher;
 pub mod builder;
+pub mod dispatch;
 pub mod engine;
 pub mod registry;
 pub mod request;
@@ -43,8 +49,12 @@ pub mod score_block;
 pub mod server;
 pub mod stats;
 
-pub use batcher::{DynamicBatcher, GraphBatch};
-pub use builder::{EngineBuilder, EngineKind};
+pub use batcher::{DynamicBatcher, GraphBatch, LaneSet, RoutedBatch};
+pub use builder::{BackendCell, EngineBuilder, EngineKind};
+pub use dispatch::{
+    BackendLane, BatchFeatures, CostModel, DispatchPolicy, DispatchStats, Dispatcher,
+    EwmaCostModel, PipelineCostModel,
+};
 pub use engine::{
     CpuBaselineEngine, LadderEngine, NativeEngine, PjrtEngineAdapter, PprEngine,
     ThreadBoundEngine,

@@ -1,5 +1,6 @@
 //! Request/response types of the serving API.
 
+use super::builder::BackendCell;
 use crate::fixed::AccuracyClass;
 use crate::graph::VertexId;
 use std::sync::Arc;
@@ -40,6 +41,11 @@ pub struct PprRequest {
     pub deadline: Option<Instant>,
     /// Submission timestamp (set by the server on enqueue).
     pub enqueued_at: Instant,
+    /// The backend that actually solved this request, stamped by the
+    /// serving worker (shared with the submitter's `Ticket` — under
+    /// dispatch the backend is a runtime routing decision, DESIGN.md
+    /// §12).
+    pub served_by: BackendCell,
 }
 
 impl PprRequest {
@@ -54,6 +60,7 @@ impl PprRequest {
             top_n,
             deadline: None,
             enqueued_at: Instant::now(),
+            served_by: BackendCell::new(),
         }
     }
 

@@ -27,13 +27,18 @@
 //! per-request deadline; requests that expire in the queue are failed
 //! fast without burning a lane.
 
-use super::batcher::{DynamicBatcher, GraphBatch};
-use super::builder::{EngineBuilder, EngineKind};
+use super::batcher::{DynamicBatcher, GraphBatch, LaneSet, RoutedBatch};
+use super::builder::{BackendCell, EngineBuilder, EngineKind};
+use super::dispatch::{
+    BackendLane, BatchFeatures, CostModel, DispatchPolicy, DispatchStats, Dispatcher,
+    EwmaCostModel, PipelineCostModel,
+};
 use super::engine::PprEngine;
 use super::registry::{GraphEntry, GraphRegistry};
 use super::request::{default_graph_key, PprRequest, PprResponse, ServeError};
 use super::score_block::ScoreBlock;
 use super::stats::{ServerStats, StatsSnapshot};
+use crate::config::DispatchConfig;
 use crate::fault::FaultPlan;
 use crate::fixed::AccuracyClass;
 use crate::graph::VertexId;
@@ -65,6 +70,10 @@ pub struct ServerConfig {
     /// production default — costs one `Option` check per batch on the hot
     /// path.
     pub fault: Option<Arc<FaultPlan>>,
+    /// The statically-configured backend: what single-backend workers
+    /// stamp on [`Ticket::served_by`], and lane 0 (the static fallback)
+    /// under heterogeneous dispatch (DESIGN.md §12).
+    pub backend: EngineKind,
 }
 
 impl Default for ServerConfig {
@@ -75,6 +84,7 @@ impl Default for ServerConfig {
             default_class: AccuracyClass::Static,
             top_k: None,
             fault: None,
+            backend: EngineKind::Native,
         }
     }
 }
@@ -88,6 +98,7 @@ impl ServerConfig {
             default_class: cfg.accuracy_class,
             top_k: cfg.top_k,
             fault: None,
+            backend: EngineKind::Native,
         }
     }
 }
@@ -277,6 +288,7 @@ pub struct Ticket {
     class: AccuracyClass,
     vertex: VertexId,
     deadline: Option<Instant>,
+    served_by: BackendCell,
     rx: mpsc::Receiver<Result<PprResponse, ServeError>>,
 }
 
@@ -310,6 +322,23 @@ impl Ticket {
     /// The absolute deadline, if one was requested.
     pub fn deadline(&self) -> Option<Instant> {
         self.deadline
+    }
+
+    /// Which backend actually ran (or is running) this request's solve.
+    /// `None` until a worker claims the batch; under heterogeneous
+    /// dispatch this is a runtime routing decision, and a degraded retry
+    /// on another backend overwrites the failed attempt's stamp — the
+    /// final value is who produced the response (DESIGN.md §12). The stamp
+    /// survives [`Ticket::poll`] and can be read after the response.
+    pub fn served_by(&self) -> Option<EngineKind> {
+        self.served_by.get()
+    }
+
+    /// A handle on the backend stamp that outlives the ticket — callers
+    /// that consume the ticket with [`Ticket::wait`] can keep the cell and
+    /// read who served after the response (or error) comes back.
+    pub fn served_by_cell(&self) -> BackendCell {
+        self.served_by.clone()
     }
 
     /// Block until the response arrives. With a deadline set, waits at
@@ -373,6 +402,18 @@ pub struct Server {
     /// hands them to the watchdog (which joins them at shutdown).
     workers: Vec<std::thread::JoinHandle<()>>,
     watchdog: Option<Watchdog>,
+    /// Heterogeneous-dispatch routing state (DESIGN.md §12); `None` for
+    /// static single-backend servers.
+    dispatcher: Option<Arc<Dispatcher>>,
+    /// Per-backend steal-safe queues between the pump and the worker
+    /// groups (dispatch mode only).
+    lane_set: Option<Arc<LaneSet>>,
+    /// The routing pump thread draining the batcher into the lane set
+    /// (dispatch mode only).
+    pump: Option<std::thread::JoinHandle<()>>,
+    /// Backends this server can serve on, in lane order; a single entry
+    /// for static servers.
+    backends: Vec<EngineKind>,
     health: Arc<HealthBoard>,
     next_id: std::sync::atomic::AtomicU64,
     routing: Routing,
@@ -486,6 +527,24 @@ struct RegistryWorkerSpec {
     top_k: Option<usize>,
     fault: Option<Arc<FaultPlan>>,
     health: Arc<HealthBoard>,
+    source: WorkSource,
+}
+
+/// Where a registry worker's batches come from.
+#[derive(Clone)]
+enum WorkSource {
+    /// The shared batcher queue — every worker is equal and serves the
+    /// builder's own backend.
+    Shared,
+    /// Heterogeneous dispatch (DESIGN.md §12): worker `slot` drains lane
+    /// `slot / per_backend` of the lane set, pinned to that lane's
+    /// backend, and may steal queued batches from other lanes when the
+    /// dispatcher's cost comparison approves.
+    Dispatch {
+        lanes: Arc<LaneSet>,
+        dispatcher: Arc<Dispatcher>,
+        per_backend: usize,
+    },
 }
 
 /// Spawn one registry worker on `slot`. Spawn failure is propagated, not
@@ -502,8 +561,16 @@ fn spawn_registry_worker(
             // (drain-out or unwind) — never left stale-alive for the
             // watchdog's tick to correct
             let _alive = AliveGuard::new(&wspec.health, slot);
+            // dispatch mode pins each worker group to its lane's backend;
+            // shared mode serves the builder's own
+            let builder = match &wspec.source {
+                WorkSource::Shared => wspec.builder.clone(),
+                WorkSource::Dispatch { dispatcher, per_backend, .. } => {
+                    wspec.builder.with_kind(dispatcher.kind_of(slot / per_backend))
+                }
+            };
             let mut cache = EngineCache {
-                builder: wspec.builder.clone(),
+                builder,
                 registry: wspec.registry.clone(),
                 shards: wspec.shards,
                 engines: Vec::new(),
@@ -511,7 +578,7 @@ fn spawn_registry_worker(
                 fault: wspec.fault.clone(),
             };
             let mut block = ScoreBlock::new();
-            while let Some(batch) = wspec.batcher.next_batch() {
+            let serve_one = |cache: &mut EngineCache, block: &mut ScoreBlock, batch: GraphBatch| {
                 // containment boundary: if anything below unwinds past the
                 // engine-level catch_unwind, the guard fails the batch's
                 // pending tickets promptly and the watchdog respawns us
@@ -522,8 +589,8 @@ fn spawn_registry_worker(
                 }
                 let gstats = Server::stats_for(&wspec.per_graph, &batch.graph);
                 Server::serve_registry_batch(
-                    &mut cache,
-                    &mut block,
+                    cache,
+                    block,
                     batch,
                     wspec.top_k,
                     &wspec.pending,
@@ -532,13 +599,43 @@ fn spawn_registry_worker(
                     wspec.fault.as_deref(),
                 );
                 drop(guard);
+            };
+            match &wspec.source {
+                WorkSource::Shared => {
+                    while let Some(batch) = wspec.batcher.next_batch() {
+                        serve_one(&mut cache, &mut block, batch);
+                    }
+                }
+                WorkSource::Dispatch { lanes, dispatcher, per_backend } => {
+                    let lane = slot / per_backend;
+                    // steal gate: the dispatcher approves only when this
+                    // lane's model predicts a faster finish than the
+                    // owner's remaining queue drain (the ledger already
+                    // includes the candidate batch)
+                    let can_steal = |owner: usize, owner_pending: u64, rb: &RoutedBatch| {
+                        dispatcher.steal_allowed(lane, owner, owner_pending, &rb.features)
+                    };
+                    while let Some((rb, stolen_from)) = lanes.pop_or_steal(lane, &can_steal) {
+                        let RoutedBatch { batch, features, .. } = rb;
+                        if stolen_from.is_some() {
+                            dispatcher.record_steal(lane);
+                        }
+                        let solve_start = Instant::now();
+                        serve_one(&mut cache, &mut block, batch);
+                        // feed the measured wall time (including any
+                        // cache-miss engine build) back into this lane's
+                        // cost model
+                        dispatcher.observe(lane, &features, solve_start.elapsed().as_secs_f64());
+                    }
+                }
             }
         },
     )?;
     Ok(handle)
 }
 
-/// Per-worker cache of built engines, keyed by `(graph, epoch, class)`.
+/// Per-worker cache of built engines, keyed by
+/// `(graph, epoch, class, backend)`.
 /// A reload bumps the epoch, so the stale engine is dropped and rebuilt
 /// from the new entry on the next batch of that graph; steady-state
 /// batches reuse the cached engine (zero construction on the hot path).
@@ -558,27 +655,35 @@ struct EngineCache {
     fault: Option<Arc<FaultPlan>>,
 }
 
-/// One cached engine: `(graph, epoch, class, engine)`.
-type CachedEngine = (Arc<str>, u64, AccuracyClass, Box<dyn PprEngine + Send>);
+/// One cached engine: `(graph, epoch, class, backend, engine)`. The
+/// backend key matters under dispatch: a worker's cache only ever holds
+/// its own lane's kind, but the key keeps a respawned or retargeted
+/// worker from ever serving another backend's engine.
+type CachedEngine = (Arc<str>, u64, AccuracyClass, EngineKind, Box<dyn PprEngine + Send>);
 
 impl EngineCache {
-    /// Resolve the engine + registry entry for `(graph, class)`; returns
-    /// the index into `self.engines` (valid until the next call).
+    /// The backend every engine in this cache is built on.
+    fn kind(&self) -> EngineKind {
+        self.builder.kind()
+    }
+
+    /// Resolve the engine + registry entry for `(graph, class)` on this
+    /// cache's backend; returns the index into `self.engines` (valid
+    /// until the next call).
     fn resolve(
         &mut self,
         graph: &Arc<str>,
         class: AccuracyClass,
     ) -> anyhow::Result<(usize, Arc<GraphEntry>)> {
+        let kind = self.kind();
         if let Some(f) = &self.fault {
-            f.on_build().map_err(|e| anyhow::anyhow!("{e}"))?;
+            f.on_build(kind).map_err(|e| anyhow::anyhow!("{e}"))?;
         }
         let cfg = self.builder.run_config();
         let entry = self.registry.resolve(graph, cfg.b, self.shards)?;
-        if let Some(pos) = self
-            .engines
-            .iter()
-            .position(|(g, epoch, c, _)| g == graph && *epoch == entry.epoch && *c == class)
-        {
+        if let Some(pos) = self.engines.iter().position(|(g, epoch, c, k, _)| {
+            g == graph && *epoch == entry.epoch && *c == class && *k == kind
+        }) {
             let hit = self.engines.remove(pos);
             self.engines.push(hit);
         } else {
@@ -586,9 +691,9 @@ impl EngineCache {
             // reload invalidated them, and keeping them would pin the old
             // snapshot's schedule and value streams in worker memory —
             // then build against the entry
-            self.engines.retain(|(g, epoch, _, _)| !(g == graph && *epoch != entry.epoch));
+            self.engines.retain(|(g, epoch, _, _, _)| !(g == graph && *epoch != entry.epoch));
             let engine = self.builder.build_entry_class(&entry, class)?;
-            self.engines.push((graph.clone(), entry.epoch, class, engine));
+            self.engines.push((graph.clone(), entry.epoch, class, kind, engine));
             while self.engines.len() > self.capacity {
                 self.engines.remove(0);
             }
@@ -624,6 +729,7 @@ impl Server {
 
         let top_k = cfg.top_k;
         let fault = cfg.fault.clone();
+        let backend = cfg.backend;
         let mut workers = Vec::with_capacity(engines.len());
         for (widx, mut engine) in engines.into_iter().enumerate() {
             let batcher = batcher.clone();
@@ -659,6 +765,7 @@ impl Server {
                             &sts,
                             fault.as_deref(),
                             false,
+                            backend,
                         );
                         // single-graph mode has no narrower class or
                         // baseline backend to degrade onto: a failed solve
@@ -693,6 +800,10 @@ impl Server {
             per_graph,
             workers,
             watchdog: None,
+            dispatcher: None,
+            lane_set: None,
+            pump: None,
+            backends: vec![backend],
             health,
             next_id: std::sync::atomic::AtomicU64::new(1),
             routing: Routing::Single { graph, num_vertices },
@@ -724,6 +835,7 @@ impl Server {
         // capacity scales with the class dimension of the cache key, so
         // graphs × classes under steady traffic don't churn through
         // eviction/rebuild on the hot path
+        let backend = builder.kind();
         let spec = RegistryWorkerSpec {
             batcher: batcher.clone(),
             pending: pending.clone(),
@@ -736,6 +848,7 @@ impl Server {
             top_k: cfg.top_k,
             fault: cfg.fault.clone(),
             health: health.clone(),
+            source: WorkSource::Shared,
         };
 
         let mut handles = Vec::with_capacity(workers);
@@ -772,12 +885,225 @@ impl Server {
             per_graph,
             workers: Vec::new(),
             watchdog: Some(watchdog),
+            dispatcher: None,
+            lane_set: None,
+            pump: None,
+            backends: vec![backend],
             health,
             next_id: std::sync::atomic::AtomicU64::new(1),
             routing: Routing::Registry { registry },
             default_top_n: cfg.default_top_n,
             default_class: cfg.default_class,
         })
+    }
+
+    /// Start a registry-backed server with cost-model-driven heterogeneous
+    /// dispatch (DESIGN.md §12): one group of `workers_per_backend`
+    /// threads per *available* backend, a routing pump that prices every
+    /// flushed batch on each candidate backend (FPGA cycle model for
+    /// native, measured-throughput EWMA for the CPU paths) and pushes it
+    /// onto the argmin-completion-time lane, and dispatcher-gated work
+    /// stealing between the groups. Lane 0 is the builder's own backend —
+    /// the static fallback every policy degenerates to when it is the only
+    /// lane. Prefer
+    /// [`super::builder::EngineBuilder::serve_registry_dispatch`].
+    pub fn start_dispatch(
+        registry: Arc<GraphRegistry>,
+        builder: EngineBuilder,
+        workers_per_backend: usize,
+        dispatch: &DispatchConfig,
+        cfg: ServerConfig,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(workers_per_backend >= 1, "need at least one worker per backend");
+        builder.run_config().validate()?;
+        dispatch.validate()?;
+        let kappa = builder.run_config().kappa;
+        let shards = builder.prep_shards(workers_per_backend);
+
+        // probe backend availability with a tiny throwaway build: the
+        // builder's own kind leads (lane 0), and a backend that cannot
+        // build here (PJRT without a device) is excluded from the lane set
+        // rather than priced — the cost model never routes to a backend
+        // that would fail structurally
+        let mut kinds = vec![builder.kind()];
+        kinds.extend(EngineKind::all().into_iter().filter(|k| *k != builder.kind()));
+        let probe = crate::graph::generators::watts_strogatz(16, 2, 0.0, 1);
+        let mut lanes = Vec::new();
+        for kind in kinds {
+            if builder.with_kind(kind).build(&probe).is_err() {
+                continue;
+            }
+            let model: Box<dyn CostModel> = if kind == EngineKind::Native {
+                Box::new(PipelineCostModel::new(
+                    builder.run_config().clone(),
+                    dispatch.ewma_alpha,
+                ))
+            } else {
+                Box::new(EwmaCostModel::new(
+                    dispatch.ewma_alpha,
+                    EwmaCostModel::DEFAULT_PRIOR_SECS_PER_OP,
+                ))
+            };
+            lanes.push(BackendLane::new(kind, workers_per_backend, model));
+        }
+        anyhow::ensure!(!lanes.is_empty(), "no backend available for dispatch");
+        let dispatcher = Arc::new(Dispatcher::new(dispatch.policy, lanes));
+        let lane_set = Arc::new(LaneSet::new(dispatcher.num_lanes()));
+        let backends = dispatcher.lane_kinds();
+        let num_workers = dispatcher.num_lanes() * workers_per_backend;
+
+        let batcher = Arc::new(DynamicBatcher::new(kappa, cfg.batch_timeout));
+        let pending: Arc<PendingMap> = Arc::new(Mutex::new(HashMap::new()));
+        let stats = Arc::new(ServerStats::new());
+        let per_graph: Arc<PerGraphStats> = Arc::new(Mutex::new(HashMap::new()));
+        let health = Arc::new(HealthBoard::new(num_workers));
+        let spec = RegistryWorkerSpec {
+            batcher: batcher.clone(),
+            pending: pending.clone(),
+            stats: stats.clone(),
+            per_graph: per_graph.clone(),
+            builder: builder.clone(),
+            registry: registry.clone(),
+            shards,
+            cache_capacity: registry.capacity().max(1) * AccuracyClass::all().len(),
+            top_k: cfg.top_k,
+            fault: cfg.fault.clone(),
+            health: health.clone(),
+            source: WorkSource::Dispatch {
+                lanes: lane_set.clone(),
+                dispatcher: dispatcher.clone(),
+                per_backend: workers_per_backend,
+            },
+        };
+
+        let mut handles = Vec::with_capacity(num_workers);
+        for widx in 0..num_workers {
+            match spawn_registry_worker(&spec, widx) {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    batcher.close();
+                    lane_set.close();
+                    for h in handles.drain(..) {
+                        let _ = h.join();
+                    }
+                    anyhow::bail!("spawn worker {widx}: {e}");
+                }
+            }
+        }
+
+        // the routing pump: drain flushed batches, derive their cost
+        // features, route to the argmin lane. Runs until the batcher
+        // closes, then closes the lane set so the worker groups drain out.
+        let pump = {
+            let batcher = batcher.clone();
+            let lanes = lane_set.clone();
+            let dispatcher = dispatcher.clone();
+            let registry = registry.clone();
+            let pending = pending.clone();
+            let stats = stats.clone();
+            let b = builder.run_config().b;
+            let iterations = builder.run_config().iterations;
+            let spawned = std::thread::Builder::new().name("ppr-dispatch".into()).spawn(
+                move || {
+                    while let Some(batch) = batcher.next_batch() {
+                        let features =
+                            Self::batch_features(&registry, &batch, b, shards, iterations);
+                        let decision = dispatcher.route(&features, &lanes.pending_nanos());
+                        let lane = decision.lane;
+                        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+                        let rb = RoutedBatch {
+                            batch,
+                            features,
+                            predicted_solve_nanos: decision.predicted_solve_nanos,
+                        };
+                        if !lanes.push(lane, rb) {
+                            // the lane set closed under us (shutdown race):
+                            // fail the batch's requests, never drop them
+                            // silently — then stop pumping
+                            for id in ids {
+                                stats.record_error();
+                                Self::respond(&pending, id, Err(ServeError::ShuttingDown));
+                            }
+                            break;
+                        }
+                    }
+                    lanes.close();
+                },
+            );
+            match spawned {
+                Ok(h) => h,
+                Err(e) => {
+                    batcher.close();
+                    lane_set.close();
+                    for h in handles.drain(..) {
+                        let _ = h.join();
+                    }
+                    anyhow::bail!("spawn dispatch pump: {e}");
+                }
+            }
+        };
+
+        let watchdog = match Watchdog::start(spec, handles, stats.clone()) {
+            Ok(w) => w,
+            Err(e) => {
+                // close the batcher; the pump drains it, closes the lane
+                // set, and the (now detached) workers drain out and exit
+                batcher.close();
+                let _ = pump.join();
+                return Err(e);
+            }
+        };
+
+        Ok(Self {
+            batcher,
+            pending,
+            stats,
+            per_graph,
+            workers: Vec::new(),
+            watchdog: Some(watchdog),
+            dispatcher: Some(dispatcher),
+            lane_set: Some(lane_set),
+            pump: Some(pump),
+            backends,
+            health,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+            routing: Routing::Registry { registry },
+            default_top_n: cfg.default_top_n,
+            default_class: cfg.default_class,
+        })
+    }
+
+    /// Derive the cost-model features of one flushed batch from its
+    /// graph's registry entry (same `(b, shards)` key the workers resolve
+    /// with, so this never prepares anything the workers won't reuse).
+    /// Resolution failure falls back to minimal features and still routes
+    /// — the serving worker reports the real `GraphUnavailable` with full
+    /// context.
+    fn batch_features(
+        registry: &GraphRegistry,
+        batch: &GraphBatch,
+        b: usize,
+        shards: usize,
+        iterations: usize,
+    ) -> BatchFeatures {
+        let (num_vertices, num_edges, num_packets) =
+            match registry.resolve(&batch.graph, b, shards) {
+                Ok(entry) => (
+                    entry.num_vertices(),
+                    entry.graph.num_edges(),
+                    entry.prepared.sharded.num_slots() / b.max(1),
+                ),
+                Err(_) => (1, 1, 1),
+            };
+        BatchFeatures {
+            num_vertices,
+            num_edges,
+            num_packets,
+            lanes: batch.len(),
+            iterations,
+            class: batch.class,
+            shards,
+        }
     }
 
     fn stats_for(per_graph: &PerGraphStats, graph: &Arc<str>) -> Arc<ServerStats> {
@@ -838,10 +1164,11 @@ impl Server {
     ) {
         let graph = batch.graph.clone();
         let class = batch.class;
+        let backend = cache.kind();
         let sts = [stats, gstats];
         let (entry, outcome) = match cache.resolve(&graph, class) {
             Ok((idx, entry)) => {
-                let engine = &mut *cache.engines[idx].3;
+                let engine = &mut *cache.engines[idx].4;
                 let outcome = Self::serve_batch(
                     engine,
                     block,
@@ -851,6 +1178,7 @@ impl Server {
                     &sts,
                     fault,
                     false,
+                    backend,
                 );
                 (entry, outcome)
             }
@@ -909,8 +1237,18 @@ impl Server {
         let retry = match narrower {
             Some(nc) => match cache.resolve(&graph, nc) {
                 Ok((idx, _)) => {
-                    let engine = &mut *cache.engines[idx].3;
-                    Self::serve_batch(engine, block, live, top_k, pending, stats, fault, true)
+                    let engine = &mut *cache.engines[idx].4;
+                    Self::serve_batch(
+                        engine,
+                        block,
+                        live,
+                        top_k,
+                        pending,
+                        stats,
+                        fault,
+                        true,
+                        cache.kind(),
+                    )
                 }
                 Err(e) => BatchOutcome::Failed {
                     live,
@@ -921,7 +1259,9 @@ impl Server {
                 // already at the narrowest rung: fall back to the plain
                 // CPU-baseline backend on the same class — slower, but
                 // structurally independent of the accelerated engine that
-                // just failed
+                // just failed. Built fresh, outside the cache (and outside
+                // the build-fault hook: this is the last resort, not a
+                // reload)
                 let baseline = EngineBuilder::new(EngineKind::CpuBaseline)
                     .config(cache.builder.run_config().clone())
                     .build_entry_class(entry, class);
@@ -935,6 +1275,7 @@ impl Server {
                         stats,
                         fault,
                         true,
+                        EngineKind::CpuBaseline,
                     ),
                     Err(e) => BatchOutcome::Failed {
                         live,
@@ -961,7 +1302,9 @@ impl Server {
     /// contained and reported as a [`BatchOutcome::Failed`] carrying the
     /// still-live requests, so the caller can degrade or fail them.
     /// `degraded` marks every response produced here as a
-    /// degraded-ladder result.
+    /// degraded-ladder result; `backend` is stamped on each live
+    /// request's shared [`BackendCell`] (read through
+    /// [`Ticket::served_by`]) before the solve.
     #[allow(clippy::too_many_arguments)]
     fn serve_batch(
         engine: &mut dyn PprEngine,
@@ -972,6 +1315,7 @@ impl Server {
         stats: &[&ServerStats],
         fault: Option<&FaultPlan>,
         degraded: bool,
+        backend: EngineKind,
     ) -> BatchOutcome {
         let batch_start = Instant::now();
         let num_vertices = engine.num_vertices();
@@ -1004,6 +1348,12 @@ impl Server {
         }
         if live.is_empty() {
             return BatchOutcome::Idle;
+        }
+        // attribute before the solve: under dispatch the serving backend
+        // is a runtime decision; a later degraded retry re-stamps, so the
+        // final value is whoever produced the response
+        for req in &live {
+            req.served_by.set(backend);
         }
 
         // variable-lane batch: exactly the requests in hand, no padding
@@ -1203,7 +1553,7 @@ impl Server {
         let deadline = timeout.map(|t| Instant::now() + t);
         let (tx, rx) = mpsc::channel();
         let _ = tx.send(Err(error));
-        Ticket { id, graph, class, vertex, deadline, rx }
+        Ticket { id, graph, class, vertex, deadline, served_by: BackendCell::new(), rx }
     }
 
     /// Enqueue a validated route: `graph` is the interned key and
@@ -1236,13 +1586,23 @@ impl Server {
         let deadline = timeout.map(|t| Instant::now() + t);
         let top_n = if top_n == 0 { self.default_top_n } else { top_n };
         let (tx, rx) = mpsc::channel();
-        let ticket = Ticket { id, graph: graph.clone(), class, vertex, deadline, rx };
-
-        self.pending.lock().unwrap().insert(id, tx);
         let req = PprRequest::new(id, vertex, top_n)
-            .with_graph(graph)
+            .with_graph(graph.clone())
             .with_class(class)
             .with_deadline(deadline);
+        // the ticket shares the request's attribution cell: the serving
+        // worker stamps it, Ticket::served_by reads it
+        let ticket = Ticket {
+            id,
+            graph,
+            class,
+            vertex,
+            deadline,
+            served_by: req.served_by.clone(),
+            rx,
+        };
+
+        self.pending.lock().unwrap().insert(id, tx);
         if !self.batcher.submit(req) {
             Self::respond(&self.pending, id, Err(ServeError::ShuttingDown));
         }
@@ -1278,6 +1638,42 @@ impl Server {
     /// batch age (exported on `/metrics`).
     pub fn worker_health(&self) -> WorkerHealth {
         self.health.snapshot()
+    }
+
+    /// The active dispatch policy; `Static` for servers started without a
+    /// dispatcher.
+    pub fn dispatch_policy(&self) -> DispatchPolicy {
+        self.dispatcher.as_ref().map_or(DispatchPolicy::Static, |d| d.policy())
+    }
+
+    /// The backends this server can serve on, in lane order (a single
+    /// entry for static servers).
+    pub fn backends(&self) -> &[EngineKind] {
+        &self.backends
+    }
+
+    /// The backends eligible to serve `class` — the dispatcher's
+    /// class-capability cut (ladder classes stay on native lanes), or the
+    /// static backend when there is no dispatcher.
+    pub fn candidate_backends(&self, class: AccuracyClass) -> Vec<EngineKind> {
+        match &self.dispatcher {
+            Some(d) => d.candidate_kinds(class),
+            None => self.backends.clone(),
+        }
+    }
+
+    /// Per-backend routing counters and live queue depths; `None` for
+    /// servers without a dispatcher.
+    pub fn dispatch_stats(&self) -> Option<DispatchStats> {
+        let d = self.dispatcher.as_ref()?;
+        let depths = self.lane_set.as_ref().map_or_else(Vec::new, |l| l.depths());
+        Some(d.stats(&depths))
+    }
+
+    /// One-line cost-model description per backend lane (empty without a
+    /// dispatcher) — surfaced by `describe` and `GET /v1/graphs`.
+    pub fn describe_dispatch_models(&self) -> Vec<(EngineKind, String)> {
+        self.dispatcher.as_ref().map_or_else(Vec::new, |d| d.describe_models())
     }
 
     /// The accuracy class applied to submissions that don't pick one.
@@ -1325,16 +1721,32 @@ impl Server {
     fn shutdown_impl(&mut self) {
         // order matters: quiesce the watchdog *before* closing the
         // batcher so workers draining out of a closed queue aren't
-        // mistaken for casualties and respawned
+        // mistaken for casualties and respawned. Dispatch mode adds the
+        // pump between the batcher and the workers: close the batcher,
+        // join the pump (it drains the batcher and closes the lane set),
+        // then join the worker groups draining the lanes.
         if let Some(w) = self.watchdog.take() {
             w.stop.store(true, Ordering::Release);
             self.batcher.close();
+            self.join_pump();
             w.stop_and_join();
         } else {
             self.batcher.close();
+            self.join_pump();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+
+    fn join_pump(&mut self) {
+        if let Some(p) = self.pump.take() {
+            let _ = p.join();
+            // defensive: if the pump died without running its epilogue,
+            // close the lane set here so the worker groups still drain
+            if let Some(l) = &self.lane_set {
+                l.close();
+            }
         }
     }
 }
@@ -1652,6 +2064,7 @@ mod tests {
             class: AccuracyClass::Static,
             vertex: 0,
             deadline: Some(Instant::now() - Duration::from_secs(1)),
+            served_by: BackendCell::new(),
             rx,
         };
         let sw = crate::util::Stopwatch::start();
@@ -1668,6 +2081,7 @@ mod tests {
             class: AccuracyClass::Static,
             vertex: 0,
             deadline: Some(Instant::now() - Duration::from_secs(1)),
+            served_by: BackendCell::new(),
             rx,
         };
         let err = ticket.wait().unwrap_err();
@@ -1686,6 +2100,7 @@ mod tests {
             class: AccuracyClass::Static,
             vertex: 0,
             deadline: None,
+            served_by: BackendCell::new(),
             rx,
         };
         assert_eq!(ticket.wait().unwrap_err(), ServeError::ChannelClosed);
@@ -1699,6 +2114,7 @@ mod tests {
             class: AccuracyClass::Static,
             vertex: 0,
             deadline: None,
+            served_by: BackendCell::new(),
             rx,
         };
         assert_eq!(ticket.poll(), Some(Err(ServeError::ChannelClosed)));
@@ -1966,6 +2382,177 @@ mod tests {
             .register_graph("late", crate::graph::generators::watts_strogatz(64, 4, 0.2, 3))
             .unwrap();
         assert_eq!(server.query_graph("late", 9, 2).unwrap().ranking[0].vertex, 9);
+        server.shutdown();
+    }
+
+    // ---- heterogeneous dispatch (DESIGN.md §12) ----
+
+    fn dispatch_registry() -> Arc<GraphRegistry> {
+        let registry = Arc::new(GraphRegistry::new(4));
+        registry
+            .register_graph("ws", crate::graph::generators::watts_strogatz(256, 8, 0.2, 42))
+            .unwrap();
+        registry
+            .register_graph("er", crate::graph::generators::erdos_renyi(128, 0.06, 7))
+            .unwrap();
+        registry
+    }
+
+    fn dispatch_config(policy: DispatchPolicy) -> DispatchConfig {
+        DispatchConfig { policy, ewma_alpha: 0.3 }
+    }
+
+    fn wait_with_backend(ticket: Ticket) -> (PprResponse, EngineKind) {
+        // poll (not wait) so the ticket survives to read the stamp
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if let Some(res) = ticket.poll() {
+                let resp = res.expect("query served");
+                let backend = ticket.served_by().expect("serving worker stamped a backend");
+                return (resp, backend);
+            }
+            assert!(Instant::now() < deadline, "dispatch query timed out");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Satellite property: routing must never change results. For every
+    /// response the dispatcher produces, the backend that actually served
+    /// it (per the ticket's attribution stamp) must produce a bit-identical
+    /// ranking when running statically.
+    fn assert_dispatch_bit_identity(precision: Precision, num_shards: usize) {
+        let cfg = RunConfig {
+            precision,
+            kappa: 4,
+            iterations: 20,
+            batch_timeout_ms: 2,
+            num_shards,
+            ..Default::default()
+        };
+        let native_ref = EngineBuilder::native()
+            .config(cfg.clone())
+            .serve_registry(dispatch_registry(), 1)
+            .unwrap();
+        let cpu_ref = EngineBuilder::cpu_baseline()
+            .config(cfg.clone())
+            .serve_registry(dispatch_registry(), 1)
+            .unwrap();
+        // round-robin guarantees every candidate backend sees traffic
+        let dispatch = EngineBuilder::native()
+            .config(cfg)
+            .serve_registry_dispatch(
+                dispatch_registry(),
+                1,
+                &dispatch_config(DispatchPolicy::RoundRobin),
+            )
+            .unwrap();
+
+        let mut served = std::collections::HashSet::new();
+        for (graph, v) in [
+            ("ws", 7u32),
+            ("er", 5),
+            ("ws", 31),
+            ("er", 64),
+            ("ws", 99),
+            ("er", 17),
+            ("ws", 200),
+            ("er", 101),
+        ] {
+            let ticket = dispatch.submit_to(graph, v, 8, None);
+            let (resp, backend) = wait_with_backend(ticket);
+            served.insert(backend);
+            let reference = match backend {
+                EngineKind::Native => native_ref.query_graph(graph, v, 8).unwrap(),
+                EngineKind::CpuBaseline => cpu_ref.query_graph(graph, v, 8).unwrap(),
+                EngineKind::Pjrt => panic!("stubbed PJRT must fail its probe build"),
+            };
+            assert_eq!(
+                resp.ranking, reference.ranking,
+                "{graph}/{v} on {} must be bit-identical to that backend run statically",
+                backend.label()
+            );
+        }
+        assert!(
+            served.len() >= 2,
+            "round-robin over both lanes must exercise both backends, saw {served:?}"
+        );
+
+        // ladder classes are confined to native lanes — and still match
+        // the static native server bit-for-bit
+        let ticket =
+            dispatch.submit_to_class("ws", 12, 8, None, AccuracyClass::Exact);
+        let (resp, backend) = wait_with_backend(ticket);
+        assert_eq!(backend, EngineKind::Native, "ladder classes stay on native");
+        let reference = native_ref
+            .submit_to_class("ws", 12, 8, None, AccuracyClass::Exact)
+            .wait()
+            .unwrap();
+        assert_eq!(resp.ranking, reference.ranking);
+
+        dispatch.shutdown();
+        native_ref.shutdown();
+        cpu_ref.shutdown();
+    }
+
+    #[test]
+    fn dispatch_bit_identity_fixed_datapath() {
+        assert_dispatch_bit_identity(Precision::Fixed(26), 1);
+        assert_dispatch_bit_identity(Precision::Fixed(26), 4);
+    }
+
+    #[test]
+    fn dispatch_bit_identity_float_datapath() {
+        assert_dispatch_bit_identity(Precision::Float32, 1);
+        assert_dispatch_bit_identity(Precision::Float32, 4);
+    }
+
+    #[test]
+    fn dispatch_server_round_trips_and_reports_backends() {
+        let server = EngineBuilder::native()
+            .config(test_config(4))
+            .serve_registry_dispatch(dispatch_registry(), 2, &dispatch_config(DispatchPolicy::Cost))
+            .unwrap();
+        assert_eq!(server.dispatch_policy(), DispatchPolicy::Cost);
+        assert_eq!(server.backends()[0], EngineKind::Native, "lane 0 is the builder's kind");
+        assert!(server.backends().contains(&EngineKind::CpuBaseline));
+        assert!(
+            !server.backends().contains(&EngineKind::Pjrt),
+            "stubbed PJRT fails its probe build and must be excluded"
+        );
+        // class-capability matrix: ladder classes only route to native
+        assert_eq!(server.candidate_backends(AccuracyClass::Exact), vec![EngineKind::Native]);
+        assert_eq!(
+            server.candidate_backends(AccuracyClass::Static),
+            vec![EngineKind::Native, EngineKind::CpuBaseline]
+        );
+
+        for i in 0..12u32 {
+            let resp = server.query_graph("ws", (i * 19) % 256, 4).unwrap();
+            assert_eq!(resp.ranking[0].vertex, (i * 19) % 256);
+        }
+        let stats = server.dispatch_stats().expect("dispatch server exposes routing stats");
+        assert_eq!(stats.policy, DispatchPolicy::Cost);
+        let routed: u64 = stats.backends.iter().map(|b| b.routed).sum();
+        assert!(routed >= 12, "every batch shows up in a routed counter, got {routed}");
+        assert_eq!(server.worker_health().total, 4, "2 backends x 2 workers");
+        assert!(!server.describe_dispatch_models().is_empty());
+        server.shutdown();
+    }
+
+    #[test]
+    fn static_server_reports_single_backend_surface() {
+        let (server, _registry) = start_registry_server(1, 4);
+        assert_eq!(server.dispatch_policy(), DispatchPolicy::Static);
+        assert_eq!(server.backends(), &[EngineKind::Native]);
+        assert_eq!(
+            server.candidate_backends(AccuracyClass::Exact),
+            vec![EngineKind::Native]
+        );
+        assert!(server.dispatch_stats().is_none());
+        // the static worker stamps its backend on tickets too
+        let ticket = server.submit_to("ws", 3, 2, None);
+        let (_resp, backend) = wait_with_backend(ticket);
+        assert_eq!(backend, EngineKind::Native);
         server.shutdown();
     }
 }

@@ -12,7 +12,10 @@
 //!   the worker thread itself — only the batch guard and the watchdog can
 //!   save the in-flight requests and the pool's capacity;
 //! - [`FaultPlan::on_build`] fails engine resolution/rebuild, modelling a
-//!   reload that lands a graph the builder cannot prepare.
+//!   reload that lands a graph the builder cannot prepare. The hook is
+//!   backend-aware: `reload_backend` scopes build failures to one
+//!   [`EngineKind`], so a sick CPU baseline does not poison the native
+//!   datapath under heterogeneous dispatch (DESIGN.md §12).
 //!
 //! Determinism: all randomness flows through one seeded
 //! [`Xoshiro256`](crate::util::Xoshiro256) behind a mutex, and each hook
@@ -27,6 +30,7 @@
 //! frame fault bursts between clean phases.
 
 use crate::config::ConfigDoc;
+use crate::coordinator::EngineKind;
 use crate::util::Xoshiro256;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -44,6 +48,7 @@ use std::time::Duration;
 /// slow_ms = 20             # stall duration
 /// worker_kill_rate = 0.0   # P(worker-thread kill) per batch claim
 /// reload_fail_rate = 0.0   # P(build failure) per engine resolve
+/// reload_backend = "cpu"   # optional: only builds on this backend fail
 /// active_from = 0          # optional window: first affected tick...
 /// active_ticks = 100       # ...and how many ticks it spans
 /// ```
@@ -63,6 +68,11 @@ pub struct FaultConfig {
     pub worker_kill_rate: f64,
     /// Probability an engine resolve/build fails.
     pub reload_fail_rate: f64,
+    /// Scope build failures to one backend. `None` — every backend's
+    /// builds roll against `reload_fail_rate`; `Some(kind)` — only that
+    /// backend's builds can fail (other backends never consume a tick, so
+    /// their schedules stay deterministic regardless of routing).
+    pub reload_backend: Option<EngineKind>,
     /// Optional `(start, count)` window, in per-hook ticks: faults fire
     /// only on ticks in `[start, start + count)`. `None` — always armed.
     pub active: Option<(u64, u64)>,
@@ -78,6 +88,7 @@ impl Default for FaultConfig {
             slow_ms: 20,
             worker_kill_rate: 0.0,
             reload_fail_rate: 0.0,
+            reload_backend: None,
             active: None,
         }
     }
@@ -96,6 +107,7 @@ impl FaultConfig {
             "slow_ms",
             "worker_kill_rate",
             "reload_fail_rate",
+            "reload_backend",
             "active_from",
             "active_ticks",
         ];
@@ -123,6 +135,13 @@ impl FaultConfig {
         }
         if let Some(v) = doc.get("fault", "reload_fail_rate") {
             cfg.reload_fail_rate = v.as_float()?;
+        }
+        if let Some(v) = doc.get("fault", "reload_backend") {
+            let s = v.as_str()?;
+            cfg.reload_backend = Some(
+                EngineKind::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown fault.reload_backend {s:?}"))?,
+            );
         }
         let from = doc.get("fault", "active_from").map(|v| v.as_int()).transpose()?;
         let ticks = doc.get("fault", "active_ticks").map(|v| v.as_int()).transpose()?;
@@ -300,9 +319,15 @@ impl FaultPlan {
     }
 
     /// Engine-resolution hook: a fired failure models a reload/build that
-    /// cannot be prepared.
-    pub fn on_build(&self) -> std::result::Result<(), String> {
+    /// cannot be prepared. `backend` is the kind the resolving worker is
+    /// about to build on; a plan scoped by `reload_backend` ignores (and
+    /// does not tick for) every other backend, so under heterogeneous
+    /// dispatch a failing CPU baseline leaves native builds untouched.
+    pub fn on_build(&self, backend: EngineKind) -> std::result::Result<(), String> {
         if !self.enabled() || self.cfg.reload_fail_rate <= 0.0 {
+            return Ok(());
+        }
+        if self.cfg.reload_backend.is_some_and(|only| only != backend) {
             return Ok(());
         }
         let tick = self.build_ticks.fetch_add(1, Ordering::Relaxed);
@@ -341,7 +366,7 @@ mod tests {
         for _ in 0..32 {
             assert!(plan.before_solve().is_ok());
             plan.before_claim();
-            assert!(plan.on_build().is_ok());
+            assert!(plan.on_build(EngineKind::Native).is_ok());
         }
         assert_eq!(plan.counters(), FaultCounters::default());
     }
@@ -410,5 +435,36 @@ mod tests {
     fn panic_rate_panics() {
         let plan = FaultPlan::new(FaultConfig { panic_rate: 1.0, ..Default::default() });
         let _ = plan.before_solve();
+    }
+
+    #[test]
+    fn reload_backend_scopes_build_failures() {
+        // regression (DESIGN.md §12): under dispatch, a build-fault plan
+        // aimed at the CPU baseline must never fail native builds — and
+        // must not consume schedule ticks for them either
+        let plan = FaultPlan::new(FaultConfig {
+            reload_fail_rate: 1.0,
+            reload_backend: Some(EngineKind::CpuBaseline),
+            ..Default::default()
+        });
+        for _ in 0..8 {
+            assert!(plan.on_build(EngineKind::Native).is_ok());
+            assert!(plan.on_build(EngineKind::Pjrt).is_ok());
+        }
+        assert_eq!(plan.counters().build_failures, 0);
+        assert!(plan.on_build(EngineKind::CpuBaseline).is_err());
+        assert_eq!(plan.counters().build_failures, 1);
+    }
+
+    #[test]
+    fn from_doc_parses_reload_backend() {
+        let doc =
+            ConfigDoc::parse("[fault]\nreload_fail_rate = 0.5\nreload_backend = \"cpu\"\n")
+                .unwrap();
+        let cfg = FaultConfig::from_doc(&doc).unwrap().unwrap();
+        assert_eq!(cfg.reload_backend, Some(EngineKind::CpuBaseline));
+
+        let bad = ConfigDoc::parse("[fault]\nreload_backend = \"tpu\"\n").unwrap();
+        assert!(FaultConfig::from_doc(&bad).is_err());
     }
 }

@@ -40,6 +40,7 @@
 
 use super::{FpgaConfig, SynthesisReport};
 use crate::spmv::ShardedSchedule;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Dataflow pipeline fill/drain latency (cycles), one per sweep.
 const PIPELINE_DEPTH: u64 = 64;
@@ -58,6 +59,76 @@ const FLOAT_EDGE_II: u64 = 10;
 
 /// Dangling bitmap block size in bits (§4.1: P_SIZE).
 const P_SIZE_BITS: u64 = 256;
+
+/// Online calibration of the cycle model against measured wall-clock.
+///
+/// The model prices *device* seconds; the software engines that stand in
+/// for the FPGA run orders of magnitude slower per modeled cycle. A
+/// dispatcher comparing modeled native seconds against measured CPU
+/// seconds needs both on the same clock, so `Calibration` keeps an EWMA
+/// of the `measured / modeled` ratio and [`Calibration::scale`]s model
+/// output by it. Thread-safe (f64 bits in an atomic word) and cheap
+/// enough to update once per solved batch.
+#[derive(Debug)]
+pub struct Calibration {
+    /// EWMA smoothing factor in (0, 1]; higher tracks faster.
+    alpha: f64,
+    /// Current measured/modeled ratio as f64 bits (0 ⇒ no samples yet).
+    factor_bits: AtomicU64,
+    /// Number of observations folded in.
+    samples: AtomicU64,
+}
+
+impl Calibration {
+    /// New calibration with no samples; `scale` is identity until the
+    /// first observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA alpha must be in (0, 1]");
+        Self { alpha, factor_bits: AtomicU64::new(0), samples: AtomicU64::new(0) }
+    }
+
+    /// Fold one `(modeled, measured)` pair into the ratio EWMA.
+    /// Non-positive or non-finite inputs are ignored.
+    pub fn observe(&self, modeled_secs: f64, measured_secs: f64) {
+        let usable = |x: f64| x.is_finite() && x > 0.0;
+        if !usable(modeled_secs) || !usable(measured_secs) {
+            return;
+        }
+        let ratio = measured_secs / modeled_secs;
+        let mut cur = self.factor_bits.load(Ordering::Acquire);
+        loop {
+            let prev = f64::from_bits(cur);
+            let next = if cur == 0 { ratio } else { prev + self.alpha * (ratio - prev) };
+            match self.factor_bits.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        self.samples.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Scale a modeled duration by the learned ratio (identity when no
+    /// samples have been observed yet).
+    pub fn scale(&self, modeled_secs: f64) -> f64 {
+        modeled_secs * self.factor()
+    }
+
+    /// The current measured/modeled ratio (1.0 before any samples).
+    pub fn factor(&self) -> f64 {
+        let bits = self.factor_bits.load(Ordering::Acquire);
+        if bits == 0 { 1.0 } else { f64::from_bits(bits) }
+    }
+
+    /// How many observations have been folded in.
+    pub fn samples(&self) -> u64 {
+        self.samples.load(Ordering::Relaxed)
+    }
+}
 
 /// Cycle/time estimate for a PPR workload on a synthesized design.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -411,6 +482,36 @@ mod tests {
 
     fn paper_workload(v: usize, e: usize) -> Workload {
         Workload { requests: 100, iterations: 10, num_vertices: v, num_packets: e.div_ceil(8) }
+    }
+
+    #[test]
+    fn calibration_identity_until_observed_then_tracks_ratio() {
+        let cal = Calibration::new(0.5);
+        assert_eq!(cal.factor(), 1.0);
+        assert_eq!(cal.scale(2.0), 2.0);
+        assert_eq!(cal.samples(), 0);
+        // first sample seeds the ratio outright
+        cal.observe(0.001, 0.1);
+        assert!((cal.factor() - 100.0).abs() < 1e-9, "{}", cal.factor());
+        assert_eq!(cal.samples(), 1);
+        // EWMA halves the gap at alpha = 0.5
+        cal.observe(0.001, 0.2);
+        assert!((cal.factor() - 150.0).abs() < 1e-9, "{}", cal.factor());
+        assert!((cal.scale(0.001) - 0.15).abs() < 1e-12);
+        // junk observations are dropped
+        cal.observe(0.0, 1.0);
+        cal.observe(1.0, f64::NAN);
+        cal.observe(-1.0, 1.0);
+        assert_eq!(cal.samples(), 2);
+    }
+
+    #[test]
+    fn calibration_converges_to_stable_ratio() {
+        let cal = Calibration::new(0.25);
+        for _ in 0..64 {
+            cal.observe(0.01, 0.5);
+        }
+        assert!((cal.factor() - 50.0).abs() < 1e-6, "{}", cal.factor());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Per-`(graph, class)` circuit breaker (DESIGN.md §10).
+//! Per-`(graph, class, backend)` circuit breaker (DESIGN.md §10, §12).
 //!
 //! Classic three-state machine over a sliding window of solve outcomes:
 //!
@@ -22,10 +22,17 @@
 //! [`ServeError::is_fault`](crate::coordinator::ServeError::is_fault))
 //! trip the breaker; deadline misses and validation rejections are the
 //! client's problem, not the backend's. The keyed granularity means a
-//! graph whose engine is melting down fast-fails alone — other graphs
-//! (and other accuracy classes of the same graph, which run on different
-//! engines) keep serving.
+//! graph whose engine is melting down fast-fails alone — other graphs,
+//! other accuracy classes, and **other backends** of the same graph keep
+//! serving. The backend dimension matters under heterogeneous dispatch
+//! (DESIGN.md §12): admission takes the request's *candidate* backend
+//! set, and fast-fails only when every candidate's breaker holds the
+//! request back — a breaker opened by CPU-baseline failures never
+//! fast-fails traffic the dispatcher would route to the healthy native
+//! lane. Outcomes are recorded against the backend that actually served
+//! (the ticket's attribution stamp).
 
+use crate::coordinator::EngineKind;
 use crate::fixed::AccuracyClass;
 use std::collections::HashMap;
 use std::collections::VecDeque;
@@ -115,11 +122,29 @@ impl Entry {
     }
 }
 
-/// The breaker table: one entry per `(graph, class)` seen.
+/// A successful admission from [`CircuitBreaker::check`]: remembers
+/// whether a half-open probe slot was reserved (and on which backend), so
+/// the eventual [`record`](CircuitBreaker::record) or
+/// [`release`](CircuitBreaker::release) settles exactly that slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Admission {
+    /// The backend whose half-open entry reserved a probe slot for this
+    /// request; `None` when admission was free (closed / no history).
+    pub probe: Option<EngineKind>,
+}
+
+impl Admission {
+    /// A free admission (no probe slot held).
+    pub fn none() -> Self {
+        Self::default()
+    }
+}
+
+/// The breaker table: one entry per `(graph, class, backend)` seen.
 #[derive(Debug)]
 pub struct CircuitBreaker {
     cfg: BreakerConfig,
-    inner: Mutex<HashMap<(Arc<str>, AccuracyClass), Entry>>,
+    inner: Mutex<HashMap<(Arc<str>, AccuracyClass, EngineKind), Entry>>,
     /// Closed → open trips.
     opens: AtomicU64,
     /// Completed open → half-open → closed cycles.
@@ -137,59 +162,120 @@ impl CircuitBreaker {
         }
     }
 
-    /// Admission check for one request. `Ok(())` admits (and, in
-    /// half-open, reserves a probe slot); `Err(retry_after)` fast-fails
-    /// with the remaining hold time. Every admitted request must settle
-    /// with exactly one [`record`](Self::record) — or return its slot via
+    /// Admission check for one request against every backend that could
+    /// serve it (the server's candidate set for the request's class; a
+    /// static server passes its single backend). Admits when **any**
+    /// candidate's breaker lets the request through:
+    ///
+    /// - a candidate with no history, or closed → free admission;
+    /// - otherwise a candidate whose open hold expired (→ half-open) or
+    ///   with a free half-open probe slot → admission carrying that
+    ///   reserved probe;
+    /// - only when *every* candidate holds the request back →
+    ///   `Err(min retry_after)`.
+    ///
+    /// Every admitted request must settle with exactly one
+    /// [`record`](Self::record) — or return its slot via
     /// [`release`](Self::release) if it is dropped before any solve runs
     /// — so half-open probe slots are never leaked.
-    pub fn check(&self, graph: &Arc<str>, class: AccuracyClass) -> Result<(), Duration> {
+    pub fn check(
+        &self,
+        graph: &Arc<str>,
+        class: AccuracyClass,
+        candidates: &[EngineKind],
+    ) -> Result<Admission, Duration> {
+        if candidates.is_empty() {
+            return Ok(Admission::none());
+        }
         let mut map = self.inner.lock().unwrap();
-        let Some(entry) = map.get_mut(&(graph.clone(), class)) else {
-            return Ok(()); // no history → closed
-        };
-        match &mut entry.state {
-            EntryState::Closed => Ok(()),
-            EntryState::Open { until } => {
-                let now = Instant::now();
-                if now < *until {
-                    Err(*until - now)
-                } else {
-                    entry.state = EntryState::HalfOpen {
-                        in_flight: 1,
-                        successes: 0,
-                        last_admit: now,
-                    };
-                    Ok(())
+        // pass 1: any candidate closed (or never seen) admits for free
+        for &kind in candidates {
+            match map.get(&(graph.clone(), class, kind)) {
+                None => return Ok(Admission::none()),
+                Some(entry) if matches!(entry.state, EntryState::Closed) => {
+                    return Ok(Admission::none());
                 }
+                Some(_) => {}
             }
-            EntryState::HalfOpen { in_flight, last_admit, .. } => {
-                let now = Instant::now();
-                if *in_flight < self.cfg.half_open_probes {
-                    *in_flight += 1;
-                    *last_admit = now;
-                    Ok(())
-                } else if now.duration_since(*last_admit) >= self.cfg.open_for {
-                    // every probe slot has been reserved for a full hold
-                    // interval with no outcome: the slots leaked (request
-                    // shed downstream, ticket abandoned). Hand one to this
-                    // request so the breaker can still recover instead of
-                    // fast-failing forever.
-                    *last_admit = now;
-                    Ok(())
-                } else {
-                    // probes are out; hold the rest back briefly
-                    Err(self.cfg.open_for)
+        }
+        // pass 2: reserve a probe on the first candidate that offers one
+        let mut min_retry: Option<Duration> = None;
+        for &kind in candidates {
+            let entry = map
+                .get_mut(&(graph.clone(), class, kind))
+                .expect("pass 1 saw every candidate");
+            match &mut entry.state {
+                EntryState::Closed => unreachable!("closed admitted in pass 1"),
+                EntryState::Open { until } => {
+                    let now = Instant::now();
+                    if now < *until {
+                        let retry = *until - now;
+                        min_retry = Some(min_retry.map_or(retry, |m| m.min(retry)));
+                    } else {
+                        entry.state = EntryState::HalfOpen {
+                            in_flight: 1,
+                            successes: 0,
+                            last_admit: now,
+                        };
+                        return Ok(Admission { probe: Some(kind) });
+                    }
+                }
+                EntryState::HalfOpen { in_flight, last_admit, .. } => {
+                    let now = Instant::now();
+                    if *in_flight < self.cfg.half_open_probes {
+                        *in_flight += 1;
+                        *last_admit = now;
+                        return Ok(Admission { probe: Some(kind) });
+                    } else if now.duration_since(*last_admit) >= self.cfg.open_for {
+                        // every probe slot has been reserved for a full
+                        // hold interval with no outcome: the slots leaked
+                        // (request shed downstream, ticket abandoned).
+                        // Hand one to this request so the breaker can
+                        // still recover instead of fast-failing forever.
+                        *last_admit = now;
+                        return Ok(Admission { probe: Some(kind) });
+                    } else {
+                        // probes are out; hold the rest back briefly
+                        let retry = self.cfg.open_for;
+                        min_retry = Some(min_retry.map_or(retry, |m| m.min(retry)));
+                    }
                 }
             }
         }
+        Err(min_retry.unwrap_or(self.cfg.open_for))
     }
 
     /// Record the outcome of an admitted request (`failure` = a backend
-    /// fault, not a client error).
-    pub fn record(&self, graph: &Arc<str>, class: AccuracyClass, failure: bool) {
+    /// fault, not a client error). `backend` is who actually served —
+    /// the ticket's attribution stamp — falling back to the admission's
+    /// probe backend when no solve ever stamped one. If the request was
+    /// admitted as a probe on one backend but served by another (the
+    /// dispatcher rerouted it), the unused probe slot is returned first
+    /// so it is never leaked.
+    pub fn record(
+        &self,
+        graph: &Arc<str>,
+        class: AccuracyClass,
+        backend: Option<EngineKind>,
+        admission: Admission,
+        failure: bool,
+    ) {
+        let Some(target) = backend.or(admission.probe) else {
+            // freely-admitted request that never reached a solve: nothing
+            // to attribute the outcome to
+            return;
+        };
         let mut map = self.inner.lock().unwrap();
-        let entry = map.entry((graph.clone(), class)).or_insert_with(Entry::new);
+        if let Some(probe) = admission.probe {
+            if probe != target {
+                if let Some(entry) = map.get_mut(&(graph.clone(), class, probe)) {
+                    if let EntryState::HalfOpen { in_flight, .. } = &mut entry.state {
+                        *in_flight = in_flight.saturating_sub(1);
+                    }
+                }
+            }
+        }
+        let entry = map.entry((graph.clone(), class, target)).or_insert_with(Entry::new);
         match &mut entry.state {
             EntryState::Closed => {
                 entry.window.push_back(failure);
@@ -229,11 +315,12 @@ impl CircuitBreaker {
     /// Return an admission reserved by [`check`](Self::check) without
     /// recording an outcome: the request was shed or abandoned before any
     /// solve ran, so it says nothing about backend health. Only a
-    /// half-open probe slot holds state to return; in every other state
-    /// this is a no-op.
-    pub fn release(&self, graph: &Arc<str>, class: AccuracyClass) {
+    /// half-open probe slot holds state to return; a free admission is a
+    /// no-op.
+    pub fn release(&self, graph: &Arc<str>, class: AccuracyClass, admission: Admission) {
+        let Some(probe) = admission.probe else { return };
         let mut map = self.inner.lock().unwrap();
-        if let Some(entry) = map.get_mut(&(graph.clone(), class)) {
+        if let Some(entry) = map.get_mut(&(graph.clone(), class, probe)) {
             if let EntryState::HalfOpen { in_flight, .. } = &mut entry.state {
                 *in_flight = in_flight.saturating_sub(1);
             }
@@ -250,12 +337,13 @@ impl CircuitBreaker {
         self.cycles.load(Ordering::Relaxed)
     }
 
-    /// Current state per `(graph, class)`, for the metrics exposition.
-    pub fn states(&self) -> Vec<(Arc<str>, AccuracyClass, BreakerState)> {
+    /// Current state per `(graph, class, backend)`, for the metrics
+    /// exposition.
+    pub fn states(&self) -> Vec<(Arc<str>, AccuracyClass, EngineKind, BreakerState)> {
         let map = self.inner.lock().unwrap();
         let mut out: Vec<_> = map
             .iter()
-            .map(|((g, c), e)| {
+            .map(|((g, c, k), e)| {
                 let state = match e.state {
                     EntryState::Closed => BreakerState::Closed,
                     EntryState::Open { until } => {
@@ -269,10 +357,12 @@ impl CircuitBreaker {
                     }
                     EntryState::HalfOpen { .. } => BreakerState::HalfOpen,
                 };
-                (g.clone(), *c, state)
+                (g.clone(), *c, *k, state)
             })
             .collect();
-        out.sort_by(|a, b| (a.0.as_ref(), a.1.label()).cmp(&(b.0.as_ref(), b.1.label())));
+        out.sort_by(|a, b| {
+            (a.0.as_ref(), a.1.label(), a.2.label()).cmp(&(b.0.as_ref(), b.1.label(), b.2.label()))
+        });
         out
     }
 }
@@ -280,6 +370,8 @@ impl CircuitBreaker {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const NATIVE: &[EngineKind] = &[EngineKind::Native];
 
     fn key() -> Arc<str> {
         Arc::from("g")
@@ -295,16 +387,22 @@ mod tests {
         }
     }
 
+    /// Record an outcome against the native backend with no probe held —
+    /// the shape of a freely-admitted request on a static server.
+    fn record_native(b: &CircuitBreaker, g: &Arc<str>, failure: bool) {
+        b.record(g, AccuracyClass::Exact, Some(EngineKind::Native), Admission::none(), failure);
+    }
+
     #[test]
     fn stays_closed_under_healthy_traffic() {
         let b = CircuitBreaker::new(quick_cfg());
         let g = key();
         for _ in 0..64 {
-            assert!(b.check(&g, AccuracyClass::Exact).is_ok());
-            b.record(&g, AccuracyClass::Exact, false);
+            assert!(b.check(&g, AccuracyClass::Exact, NATIVE).is_ok());
+            record_native(&b, &g, false);
         }
         assert_eq!(b.opens(), 0);
-        assert_eq!(b.states()[0].2, BreakerState::Closed);
+        assert_eq!(b.states()[0].3, BreakerState::Closed);
     }
 
     #[test]
@@ -312,14 +410,14 @@ mod tests {
         let b = CircuitBreaker::new(quick_cfg());
         let g = key();
         for _ in 0..4 {
-            b.record(&g, AccuracyClass::Exact, true);
+            record_native(&b, &g, true);
         }
         assert_eq!(b.opens(), 1);
-        let err = b.check(&g, AccuracyClass::Exact).unwrap_err();
+        let err = b.check(&g, AccuracyClass::Exact, NATIVE).unwrap_err();
         assert!(err <= Duration::from_millis(30));
         // other classes and graphs are unaffected
-        assert!(b.check(&g, AccuracyClass::Fast).is_ok());
-        assert!(b.check(&Arc::from("other"), AccuracyClass::Exact).is_ok());
+        assert!(b.check(&g, AccuracyClass::Fast, NATIVE).is_ok());
+        assert!(b.check(&Arc::from("other"), AccuracyClass::Exact, NATIVE).is_ok());
     }
 
     #[test]
@@ -327,19 +425,20 @@ mod tests {
         let b = CircuitBreaker::new(quick_cfg());
         let g = key();
         for _ in 0..4 {
-            b.record(&g, AccuracyClass::Exact, true);
+            record_native(&b, &g, true);
         }
-        assert!(b.check(&g, AccuracyClass::Exact).is_err(), "open fast-fails");
+        assert!(b.check(&g, AccuracyClass::Exact, NATIVE).is_err(), "open fast-fails");
         std::thread::sleep(Duration::from_millis(35));
         // hold expired: probes are admitted, up to the configured count
-        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
-        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
-        assert!(b.check(&g, AccuracyClass::Exact).is_err(), "probe budget spent");
-        b.record(&g, AccuracyClass::Exact, false);
-        b.record(&g, AccuracyClass::Exact, false);
+        let p1 = b.check(&g, AccuracyClass::Exact, NATIVE).unwrap();
+        assert_eq!(p1.probe, Some(EngineKind::Native), "probe admission is stamped");
+        let p2 = b.check(&g, AccuracyClass::Exact, NATIVE).unwrap();
+        assert!(b.check(&g, AccuracyClass::Exact, NATIVE).is_err(), "probe budget spent");
+        b.record(&g, AccuracyClass::Exact, Some(EngineKind::Native), p1, false);
+        b.record(&g, AccuracyClass::Exact, Some(EngineKind::Native), p2, false);
         assert_eq!(b.cycles(), 1, "two probe successes close the breaker");
-        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
-        assert_eq!(b.states()[0].2, BreakerState::Closed);
+        assert!(b.check(&g, AccuracyClass::Exact, NATIVE).is_ok());
+        assert_eq!(b.states()[0].3, BreakerState::Closed);
     }
 
     #[test]
@@ -347,13 +446,13 @@ mod tests {
         let b = CircuitBreaker::new(quick_cfg());
         let g = key();
         for _ in 0..4 {
-            b.record(&g, AccuracyClass::Exact, true);
+            record_native(&b, &g, true);
         }
         std::thread::sleep(Duration::from_millis(35));
-        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
-        b.record(&g, AccuracyClass::Exact, true);
+        let probe = b.check(&g, AccuracyClass::Exact, NATIVE).unwrap();
+        b.record(&g, AccuracyClass::Exact, Some(EngineKind::Native), probe, true);
         assert_eq!(b.opens(), 2, "probe failure re-opens");
-        assert!(b.check(&g, AccuracyClass::Exact).is_err());
+        assert!(b.check(&g, AccuracyClass::Exact, NATIVE).is_err());
         assert_eq!(b.cycles(), 0);
     }
 
@@ -362,22 +461,22 @@ mod tests {
         let b = CircuitBreaker::new(quick_cfg());
         let g = key();
         for _ in 0..4 {
-            b.record(&g, AccuracyClass::Exact, true);
+            record_native(&b, &g, true);
         }
         std::thread::sleep(Duration::from_millis(35));
         // both probe slots reserved, then one request is shed downstream
-        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
-        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
-        assert!(b.check(&g, AccuracyClass::Exact).is_err(), "budget spent");
-        b.release(&g, AccuracyClass::Exact);
+        let shed = b.check(&g, AccuracyClass::Exact, NATIVE).unwrap();
+        assert!(b.check(&g, AccuracyClass::Exact, NATIVE).is_ok());
+        assert!(b.check(&g, AccuracyClass::Exact, NATIVE).is_err(), "budget spent");
+        b.release(&g, AccuracyClass::Exact, shed);
         // the returned slot admits the next probe immediately
-        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
+        assert!(b.check(&g, AccuracyClass::Exact, NATIVE).is_ok());
         // releasing never counts as a probe outcome
         assert_eq!(b.cycles(), 0);
-        assert_eq!(b.states()[0].2, BreakerState::HalfOpen);
-        // a closed entry ignores release entirely
-        b.release(&Arc::from("other"), AccuracyClass::Exact);
-        assert!(b.check(&Arc::from("other"), AccuracyClass::Exact).is_ok());
+        assert_eq!(b.states()[0].3, BreakerState::HalfOpen);
+        // a free admission ignores release entirely
+        b.release(&Arc::from("other"), AccuracyClass::Exact, Admission::none());
+        assert!(b.check(&Arc::from("other"), AccuracyClass::Exact, NATIVE).is_ok());
     }
 
     #[test]
@@ -389,22 +488,24 @@ mod tests {
         let b = CircuitBreaker::new(quick_cfg());
         let g = key();
         for _ in 0..4 {
-            b.record(&g, AccuracyClass::Exact, true);
+            record_native(&b, &g, true);
         }
         std::thread::sleep(Duration::from_millis(35));
         // reserve the full probe budget and leak it (no record, no release)
-        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
-        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
-        assert!(b.check(&g, AccuracyClass::Exact).is_err(), "budget spent");
+        assert!(b.check(&g, AccuracyClass::Exact, NATIVE).is_ok());
+        assert!(b.check(&g, AccuracyClass::Exact, NATIVE).is_ok());
+        assert!(b.check(&g, AccuracyClass::Exact, NATIVE).is_err(), "budget spent");
         // after a full hold interval with no outcome a slot is reclaimed
         std::thread::sleep(Duration::from_millis(35));
-        assert!(b.check(&g, AccuracyClass::Exact).is_ok(), "leaked slot reclaimed");
+        let p1 = b
+            .check(&g, AccuracyClass::Exact, NATIVE)
+            .expect("leaked slot reclaimed");
         // two recorded successes still close the breaker normally
-        b.record(&g, AccuracyClass::Exact, false);
-        b.record(&g, AccuracyClass::Exact, false);
+        b.record(&g, AccuracyClass::Exact, Some(EngineKind::Native), p1, false);
+        record_native(&b, &g, false);
         assert_eq!(b.cycles(), 1);
-        assert!(b.check(&g, AccuracyClass::Exact).is_ok());
-        assert_eq!(b.states()[0].2, BreakerState::Closed);
+        assert!(b.check(&g, AccuracyClass::Exact, NATIVE).is_ok());
+        assert_eq!(b.states()[0].3, BreakerState::Closed);
     }
 
     #[test]
@@ -415,11 +516,89 @@ mod tests {
         // out of the 8-deep window before min_samples worth of rate can
         // trip anything
         for _ in 0..3 {
-            b.record(&g, AccuracyClass::Exact, true);
+            record_native(&b, &g, true);
         }
         for _ in 0..16 {
-            b.record(&g, AccuracyClass::Exact, false);
+            record_native(&b, &g, false);
         }
         assert_eq!(b.opens(), 0);
+    }
+
+    #[test]
+    fn open_backend_never_blocks_healthy_candidates() {
+        // regression (DESIGN.md §12): a breaker tripped by CPU-baseline
+        // failures must not fast-fail requests the dispatcher can route to
+        // the healthy native lane — admission checks the whole candidate
+        // set, and fast-fails only when every candidate holds back
+        let b = CircuitBreaker::new(quick_cfg());
+        let g = key();
+        for _ in 0..4 {
+            b.record(
+                &g,
+                AccuracyClass::Exact,
+                Some(EngineKind::CpuBaseline),
+                Admission::none(),
+                true,
+            );
+        }
+        assert_eq!(b.opens(), 1);
+        // CPU alone is held back...
+        assert!(b.check(&g, AccuracyClass::Exact, &[EngineKind::CpuBaseline]).is_err());
+        // ...but the heterogeneous candidate set still admits for free
+        let admission = b
+            .check(&g, AccuracyClass::Exact, &[EngineKind::CpuBaseline, EngineKind::Native])
+            .expect("healthy native candidate admits");
+        assert_eq!(admission.probe, None, "no probe slot consumed on the open entry");
+        // the served outcome lands on the backend that actually ran
+        b.record(&g, AccuracyClass::Exact, Some(EngineKind::Native), admission, false);
+        let states = b.states();
+        assert!(states
+            .iter()
+            .any(|(_, _, k, s)| *k == EngineKind::Native && *s == BreakerState::Closed));
+        assert!(states
+            .iter()
+            .any(|(_, _, k, s)| *k == EngineKind::CpuBaseline && *s == BreakerState::Open));
+    }
+
+    #[test]
+    fn rerouted_probe_slot_is_returned() {
+        // a probe reserved on one backend but served by another must give
+        // the slot back so the probing entry can keep recovering
+        let b = CircuitBreaker::new(quick_cfg());
+        let g = key();
+        for _ in 0..4 {
+            b.record(
+                &g,
+                AccuracyClass::Exact,
+                Some(EngineKind::CpuBaseline),
+                Admission::none(),
+                true,
+            );
+        }
+        // trip native too, so pass 1 can't admit for free
+        for _ in 0..4 {
+            record_native(&b, &g, true);
+        }
+        std::thread::sleep(Duration::from_millis(35));
+        let both = &[EngineKind::CpuBaseline, EngineKind::Native];
+        let p1 = b.check(&g, AccuracyClass::Exact, both).unwrap();
+        assert_eq!(p1.probe, Some(EngineKind::CpuBaseline), "first candidate probes first");
+        let p2 = b.check(&g, AccuracyClass::Exact, both).unwrap();
+        assert_eq!(p2.probe, Some(EngineKind::CpuBaseline));
+        // CPU budget spent: the next admission probes the native entry
+        let p3 = b.check(&g, AccuracyClass::Exact, both).unwrap();
+        assert_eq!(p3.probe, Some(EngineKind::Native));
+        // p1 reroutes to native: its CPU slot comes back, outcome lands on
+        // native's window-less half-open entry
+        b.record(&g, AccuracyClass::Exact, Some(EngineKind::Native), p1, false);
+        let p4 = b.check(&g, AccuracyClass::Exact, &[EngineKind::CpuBaseline]).unwrap();
+        assert_eq!(p4.probe, Some(EngineKind::CpuBaseline), "returned slot admits again");
+    }
+
+    #[test]
+    fn empty_candidate_set_admits_freely() {
+        let b = CircuitBreaker::new(quick_cfg());
+        let g = key();
+        assert_eq!(b.check(&g, AccuracyClass::Exact, &[]), Ok(Admission::none()));
     }
 }

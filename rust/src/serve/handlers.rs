@@ -23,6 +23,7 @@ use super::prom::CoreHealth;
 use super::state::{PollOutcome, ServeState};
 use crate::coordinator::request::{validate_query, PprResponse, ServeError};
 use crate::coordinator::server::Ticket;
+use crate::coordinator::EngineKind;
 use crate::graph::VertexId;
 use crate::util::json::{self, Json};
 use crate::util::Stopwatch;
@@ -79,6 +80,8 @@ fn metrics(state: &ServeState) -> Response {
         registry_resident_disk: state.registry.resident_disk() as u64,
         registry_capacity: state.registry.capacity() as u64,
         artifact_hits: state.registry.artifact_hits(),
+        backends: state.server.backends().to_vec(),
+        dispatch: state.server.dispatch_stats(),
     };
     let text = state.metrics.render_with(&depths, &core);
     Response::text(200, "text/plain; version=0.0.4", text)
@@ -101,9 +104,30 @@ fn list_graphs(state: &ServeState) -> Response {
         Some(name) => json::str(name.as_ref()),
         None => Json::Null,
     };
+    // dispatch surface: the routing policy plus which backends this server
+    // actually stood up (a lane that failed its probe build is reported
+    // unavailable, not omitted — clients can tell "off" from "broken")
+    let available = state.server.backends();
+    let backends: Vec<Json> = EngineKind::all()
+        .iter()
+        .map(|k| {
+            json::obj(vec![
+                ("backend", json::str(k.label())),
+                ("available", Json::Bool(available.contains(k))),
+            ])
+        })
+        .collect();
+    let dispatch = json::obj(vec![
+        ("policy", json::str(state.server.dispatch_policy().label())),
+        ("backends", Json::Arr(backends)),
+    ]);
     Response::json(
         200,
-        &json::obj(vec![("graphs", Json::Arr(graphs)), ("default", default)]),
+        &json::obj(vec![
+            ("graphs", Json::Arr(graphs)),
+            ("default", default),
+            ("dispatch", dispatch),
+        ]),
     )
 }
 
@@ -231,15 +255,20 @@ fn query(state: &ServeState, graph: &str, req: &Request, is_submit: bool) -> Res
         return finish(label, 0, Response::error(400, msg));
     }
 
-    // circuit breaker: an open breaker fast-fails before a queue slot or
-    // engine lane is spent on a backend that is known to be failing
-    if let Err(retry) = state.breaker.check(&key, class) {
-        let retry_ms = retry.as_millis() as u64;
-        let err = ServeError::BreakerOpen { retry_after_ms: retry_ms };
-        let resp = Response::error(err.status(), &err.to_string())
-            .with_header("retry-after", format_retry_after(retry_ms));
-        return finish(label, 0, resp);
-    }
+    // circuit breaker: fast-fail only when every backend that could serve
+    // this class is held back — a breaker opened by CPU-baseline failures
+    // never blocks traffic the dispatcher routes to healthy native lanes
+    let candidates = state.server.candidate_backends(class);
+    let admission = match state.breaker.check(&key, class, &candidates) {
+        Ok(a) => a,
+        Err(retry) => {
+            let retry_ms = retry.as_millis() as u64;
+            let err = ServeError::BreakerOpen { retry_after_ms: retry_ms };
+            let resp = Response::error(err.status(), &err.to_string())
+                .with_header("retry-after", format_retry_after(retry_ms));
+            return finish(label, 0, resp);
+        }
+    };
 
     // admission: one slot per HTTP request, released when the guard drops
     let guard = match state.admission.try_admit(graph, class) {
@@ -248,7 +277,7 @@ fn query(state: &ServeState, graph: &str, req: &Request, is_submit: bool) -> Res
             // the breaker admitted this request (possibly reserving a
             // half-open probe slot) but no solve will run: return the
             // admission so the probe budget is never leaked
-            state.breaker.release(&key, class);
+            state.breaker.release(&key, class, admission);
             let resp = Response::error(429, "overloaded, request shed")
                 .with_header("retry-after", format_retry_after(shed.retry_after_ms));
             return finish(label, 0, resp);
@@ -262,7 +291,7 @@ fn query(state: &ServeState, graph: &str, req: &Request, is_submit: bool) -> Res
 
     if is_submit {
         let ticket = submit_one(body.vertices[0]);
-        let id = state.tickets.insert(ticket, guard);
+        let id = state.tickets.insert(ticket, guard, admission);
         let body = json::obj(vec![
             ("ticket", json::num(id as f64)),
             ("graph", json::str(graph)),
@@ -279,22 +308,28 @@ fn query(state: &ServeState, graph: &str, req: &Request, is_submit: bool) -> Res
     let tickets: Vec<Ticket> = body.vertices.iter().map(|&v| submit_one(v)).collect();
     let mut results = Vec::with_capacity(tickets.len());
     let mut escalations = 0u64;
+    // the stamp cell outlives wait(): the outcome is recorded against the
+    // backend that actually served, not the one the breaker probed
+    let mut served: Option<EngineKind> = None;
     for ticket in tickets {
+        let stamp = ticket.served_by_cell();
         match ticket.wait() {
             Ok(resp) => {
+                served = stamp.get().or(served);
                 escalations += resp.escalations as u64;
                 results.push(render_result(&resp));
             }
             Err(err) => {
                 // only backend faults feed the breaker; deadline misses
                 // and validation rejections are the client's problem
-                state.breaker.record(&key, class, err.is_fault());
+                let backend = stamp.get().or(served);
+                state.breaker.record(&key, class, backend, admission, err.is_fault());
                 drop(guard);
                 return finish(label, escalations, Response::error(err.status(), &err.to_string()));
             }
         }
     }
-    state.breaker.record(&key, class, false);
+    state.breaker.record(&key, class, served, admission, false);
     drop(guard);
     let body = json::obj(vec![
         ("graph", json::str(graph)),
@@ -323,8 +358,8 @@ fn poll_ticket(state: &ServeState, id: &str) -> Response {
                 ("ticket", json::num(id as f64)),
             ]),
         ),
-        PollOutcome::Done { graph, class, result: Ok(resp) } => {
-            state.breaker.record(&graph, class, false);
+        PollOutcome::Done { graph, class, backend, admission, result: Ok(resp) } => {
+            state.breaker.record(&graph, class, backend, admission, false);
             state.metrics.record(
                 graph.as_ref(),
                 class.label(),
@@ -340,12 +375,12 @@ fn poll_ticket(state: &ServeState, id: &str) -> Response {
                 ]),
             )
         }
-        PollOutcome::Done { graph, class, result: Err(err) } => {
+        PollOutcome::Done { graph, class, backend, admission, result: Err(err) } => {
             let status = err.status();
             // the consumed entry carries its breaker key, so async-only
             // traffic feeds the breaker on failure exactly like sync
             // traffic does (a faulting probe must re-open, not leak)
-            state.breaker.record(&graph, class, err.is_fault());
+            state.breaker.record(&graph, class, backend, admission, err.is_fault());
             state.metrics.record(graph.as_ref(), class.label(), status, 0.0, 0);
             Response::error(status, &err.to_string())
         }

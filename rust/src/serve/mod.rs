@@ -293,6 +293,18 @@ mod tests {
         assert_eq!(graphs[0].get("name").and_then(Json::as_str), Some("ws"));
         assert_eq!(graphs[0].get("num_vertices").and_then(Json::as_u64), Some(128));
 
+        // dispatch surface round-trips: a statically-routed server reports
+        // its policy and exactly one available backend
+        let dispatch = doc.get("dispatch").expect("dispatch object present");
+        assert_eq!(dispatch.get("policy").and_then(Json::as_str), Some("static"));
+        let backends = dispatch.get("backends").and_then(Json::as_array).unwrap();
+        assert_eq!(backends.len(), 3, "every known backend is listed");
+        for b in backends {
+            let name = b.get("backend").and_then(Json::as_str).unwrap();
+            let up = b.get("available").and_then(Json::as_bool).unwrap();
+            assert_eq!(up, name == "native", "static native server: only native is up ({name})");
+        }
+
         shutdown_stack(front, server);
     }
 

@@ -19,12 +19,22 @@
 //! | `ppr_engine_panics_total` | counter | — |
 //! | `ppr_degraded_responses_total` | counter | — |
 //! | `ppr_pool_caught_panics_total` | counter | — |
-//! | `ppr_breaker_state` | gauge | `graph`, `class` (0/1/2) |
+//! | `ppr_breaker_state` | gauge | `graph`, `class`, `backend` (0/1/2) |
 //! | `ppr_breaker_open_total` / `ppr_breaker_cycles_total` | counter | — |
 //! | `ppr_registry_resident_ram` | gauge | — |
 //! | `ppr_registry_resident_disk` | gauge | — |
 //! | `ppr_registry_capacity` | gauge | — |
 //! | `ppr_registry_artifact_hits_total` | counter | `graph` |
+//! | `ppr_backend_available` | gauge | `backend` |
+//! | `ppr_dispatch_policy` | gauge | `policy` (1 = active) |
+//! | `ppr_dispatch_routed_total` | counter | `backend` |
+//! | `ppr_dispatch_stolen_total` | counter | `backend` |
+//! | `ppr_backend_workers` | gauge | `backend` |
+//! | `ppr_backend_queue_depth` | gauge | `backend` |
+//!
+//! The dispatch families (DESIGN.md §12) appear only on servers started
+//! under heterogeneous dispatch; `ppr_backend_available` is always
+//! emitted, covering every known backend with a 0/1 gauge.
 //!
 //! The serving-core health families (workers, breaker, degradation —
 //! DESIGN.md §10) are sampled by the caller at scrape time and passed
@@ -40,6 +50,7 @@
 //! the request that caused it).
 
 use super::breaker::BreakerState;
+use crate::coordinator::{DispatchStats, EngineKind};
 use crate::fixed::AccuracyClass;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -102,8 +113,8 @@ pub struct CoreHealth {
     pub degraded_responses: u64,
     /// Panics swallowed by detached runtime-pool tasks.
     pub pool_caught_panics: u64,
-    /// Current breaker state per `(graph, class)`.
-    pub breaker_states: Vec<(Arc<str>, AccuracyClass, BreakerState)>,
+    /// Current breaker state per `(graph, class, backend)`.
+    pub breaker_states: Vec<(Arc<str>, AccuracyClass, EngineKind, BreakerState)>,
     /// Closed → open breaker trips.
     pub breaker_opens: u64,
     /// Completed open → half-open → closed recovery cycles.
@@ -117,6 +128,12 @@ pub struct CoreHealth {
     /// Artifact cold-start hits per graph (promotions and cross-process
     /// cold starts served from an on-disk artifact instead of a re-prep).
     pub artifact_hits: Vec<(Arc<str>, u64)>,
+    /// Backends this server stood up (lanes that survived the probe
+    /// build), rendered as the `ppr_backend_available` 0/1 gauge.
+    pub backends: Vec<EngineKind>,
+    /// Dispatcher routing counters; `None` on statically-routed servers
+    /// (the dispatch families are then omitted entirely).
+    pub dispatch: Option<DispatchStats>,
 }
 
 /// Thread-safe metric registry of the front door.
@@ -277,10 +294,11 @@ impl HttpMetrics {
 
         out.push_str("# HELP ppr_breaker_state Circuit breaker state (0=closed, 1=open, 2=half-open).\n");
         out.push_str("# TYPE ppr_breaker_state gauge\n");
-        for (graph, class, st) in &core.breaker_states {
+        for (graph, class, backend, st) in &core.breaker_states {
             out.push_str(&format!(
-                "ppr_breaker_state{{graph=\"{graph}\",class=\"{}\"}} {}\n",
+                "ppr_breaker_state{{graph=\"{graph}\",class=\"{}\",backend=\"{}\"}} {}\n",
                 class.label(),
+                backend.label(),
                 st.as_gauge()
             ));
         }
@@ -311,6 +329,59 @@ impl HttpMetrics {
             out.push_str(&format!(
                 "ppr_registry_artifact_hits_total{{graph=\"{graph}\"}} {n}\n"
             ));
+        }
+
+        out.push_str("# HELP ppr_backend_available Whether the server stood this backend up (1) or not (0).\n");
+        out.push_str("# TYPE ppr_backend_available gauge\n");
+        for kind in EngineKind::all() {
+            let up = u64::from(core.backends.contains(&kind));
+            out.push_str(&format!("ppr_backend_available{{backend=\"{}\"}} {up}\n", kind.label()));
+        }
+
+        if let Some(d) = &core.dispatch {
+            out.push_str("# HELP ppr_dispatch_policy Active dispatch policy (1 = the labeled policy).\n");
+            out.push_str("# TYPE ppr_dispatch_policy gauge\n");
+            out.push_str(&format!("ppr_dispatch_policy{{policy=\"{}\"}} 1\n", d.policy.label()));
+
+            out.push_str("# HELP ppr_dispatch_routed_total Batches routed to each backend by the dispatcher.\n");
+            out.push_str("# TYPE ppr_dispatch_routed_total counter\n");
+            for b in &d.backends {
+                out.push_str(&format!(
+                    "ppr_dispatch_routed_total{{backend=\"{}\"}} {}\n",
+                    b.kind.label(),
+                    b.routed
+                ));
+            }
+
+            out.push_str("# HELP ppr_dispatch_stolen_total Batches each backend stole from another backend's queue.\n");
+            out.push_str("# TYPE ppr_dispatch_stolen_total counter\n");
+            for b in &d.backends {
+                out.push_str(&format!(
+                    "ppr_dispatch_stolen_total{{backend=\"{}\"}} {}\n",
+                    b.kind.label(),
+                    b.stolen
+                ));
+            }
+
+            out.push_str("# HELP ppr_backend_workers Workers draining each backend's queue.\n");
+            out.push_str("# TYPE ppr_backend_workers gauge\n");
+            for b in &d.backends {
+                out.push_str(&format!(
+                    "ppr_backend_workers{{backend=\"{}\"}} {}\n",
+                    b.kind.label(),
+                    b.workers
+                ));
+            }
+
+            out.push_str("# HELP ppr_backend_queue_depth Batches queued per backend lane.\n");
+            out.push_str("# TYPE ppr_backend_queue_depth gauge\n");
+            for b in &d.backends {
+                out.push_str(&format!(
+                    "ppr_backend_queue_depth{{backend=\"{}\"}} {}\n",
+                    b.kind.label(),
+                    b.depth
+                ));
+            }
         }
 
         out
@@ -444,8 +515,13 @@ mod tests {
             degraded_responses: 5,
             pool_caught_panics: 1,
             breaker_states: vec![
-                (Arc::from("ws"), AccuracyClass::Exact, BreakerState::Open),
-                (Arc::from("er"), AccuracyClass::Fast, BreakerState::Closed),
+                (Arc::from("ws"), AccuracyClass::Exact, EngineKind::Native, BreakerState::Open),
+                (
+                    Arc::from("er"),
+                    AccuracyClass::Fast,
+                    EngineKind::CpuBaseline,
+                    BreakerState::Closed,
+                ),
             ],
             breaker_opens: 3,
             breaker_cycles: 1,
@@ -453,6 +529,8 @@ mod tests {
             registry_resident_disk: 4,
             registry_capacity: 2,
             artifact_hits: vec![(Arc::from("ws"), 6), (Arc::from("er"), 0)],
+            backends: vec![EngineKind::Native, EngineKind::CpuBaseline],
+            dispatch: None,
         };
         let text = m.render_with(&[], &core);
         validate_exposition(&text).expect("core families must validate");
@@ -463,8 +541,10 @@ mod tests {
         assert!(text.contains("ppr_engine_panics_total 7\n"));
         assert!(text.contains("ppr_degraded_responses_total 5\n"));
         assert!(text.contains("ppr_pool_caught_panics_total 1\n"));
-        assert!(text.contains("ppr_breaker_state{graph=\"ws\",class=\"exact\"} 1\n"));
-        assert!(text.contains("ppr_breaker_state{graph=\"er\",class=\"fast\"} 0\n"));
+        assert!(text.contains("ppr_breaker_state{graph=\"ws\",class=\"exact\",backend=\"native\"} 1\n"));
+        assert!(
+            text.contains("ppr_breaker_state{graph=\"er\",class=\"fast\",backend=\"cpu-baseline\"} 0\n")
+        );
         assert!(text.contains("ppr_breaker_open_total 3\n"));
         assert!(text.contains("ppr_breaker_cycles_total 1\n"));
         assert!(text.contains("ppr_registry_resident_ram 2\n"));
@@ -472,6 +552,52 @@ mod tests {
         assert!(text.contains("ppr_registry_capacity 2\n"));
         assert!(text.contains("ppr_registry_artifact_hits_total{graph=\"ws\"} 6\n"));
         assert!(text.contains("ppr_registry_artifact_hits_total{graph=\"er\"} 0\n"));
+        // availability covers every known backend, 0/1
+        assert!(text.contains("ppr_backend_available{backend=\"native\"} 1\n"));
+        assert!(text.contains("ppr_backend_available{backend=\"cpu-baseline\"} 1\n"));
+        assert!(text.contains("ppr_backend_available{backend=\"pjrt\"} 0\n"));
+        // static server: no dispatch families at all
+        assert!(!text.contains("ppr_dispatch_policy"), "{text}");
+    }
+
+    #[test]
+    fn render_with_emits_dispatch_families() {
+        use crate::coordinator::dispatch::BackendStat;
+        use crate::coordinator::DispatchPolicy;
+        let m = HttpMetrics::new();
+        let core = CoreHealth {
+            backends: vec![EngineKind::Native, EngineKind::CpuBaseline],
+            dispatch: Some(DispatchStats {
+                policy: DispatchPolicy::Cost,
+                backends: vec![
+                    BackendStat {
+                        kind: EngineKind::Native,
+                        workers: 2,
+                        routed: 9,
+                        stolen: 1,
+                        depth: 3,
+                    },
+                    BackendStat {
+                        kind: EngineKind::CpuBaseline,
+                        workers: 2,
+                        routed: 4,
+                        stolen: 2,
+                        depth: 0,
+                    },
+                ],
+            }),
+            ..Default::default()
+        };
+        let text = m.render_with(&[], &core);
+        validate_exposition(&text).expect("dispatch families must validate");
+        assert!(text.contains("ppr_dispatch_policy{policy=\"cost\"} 1\n"), "{text}");
+        assert!(text.contains("ppr_dispatch_routed_total{backend=\"native\"} 9\n"));
+        assert!(text.contains("ppr_dispatch_routed_total{backend=\"cpu-baseline\"} 4\n"));
+        assert!(text.contains("ppr_dispatch_stolen_total{backend=\"native\"} 1\n"));
+        assert!(text.contains("ppr_dispatch_stolen_total{backend=\"cpu-baseline\"} 2\n"));
+        assert!(text.contains("ppr_backend_workers{backend=\"native\"} 2\n"));
+        assert!(text.contains("ppr_backend_queue_depth{backend=\"native\"} 3\n"));
+        assert!(text.contains("ppr_backend_queue_depth{backend=\"cpu-baseline\"} 0\n"));
     }
 
     #[test]

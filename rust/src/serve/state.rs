@@ -3,12 +3,13 @@
 //! asynchronous tickets awaiting `GET /v1/tickets/{id}` polls.
 
 use super::admission::{Admission, AdmitGuard};
-use super::breaker::{BreakerConfig, CircuitBreaker};
+use super::breaker::{Admission as BreakerAdmission, BreakerConfig, CircuitBreaker};
 use super::prom::HttpMetrics;
 use crate::config::ServeConfig;
 use crate::coordinator::registry::GraphRegistry;
 use crate::coordinator::request::{PprResponse, ServeError};
 use crate::coordinator::server::{Server, Ticket};
+use crate::coordinator::EngineKind;
 use crate::fixed::AccuracyClass;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -51,16 +52,19 @@ impl ServeState {
 }
 
 /// One stored async submission: the ticket, its admission slot (released
-/// when the entry is removed), its `(graph, class)` breaker key, and its
-/// creation time for TTL expiry.
+/// when the entry is removed), its breaker key and admission (possibly a
+/// half-open probe slot to settle), and its creation time for TTL expiry.
 struct Stored {
     ticket: Ticket,
     /// Held for the entry's lifetime; dropping it releases admission.
     _guard: AdmitGuard,
     /// Interned graph key, kept so the final poll (or TTL expiry) can
-    /// still feed the `(graph, class)` circuit breaker.
+    /// still feed the `(graph, class, backend)` circuit breaker.
     graph: Arc<str>,
     class: AccuracyClass,
+    /// The breaker admission this submission rode in on; a reserved probe
+    /// slot is settled by the final poll or returned on TTL expiry.
+    admission: BreakerAdmission,
     created: Instant,
 }
 
@@ -72,14 +76,19 @@ pub enum PollOutcome {
     /// Still in flight.
     Pending,
     /// Finished: the entry has been removed from the store. Carries the
-    /// entry's `(graph, class)` so the caller can attribute the verdict —
+    /// entry's `(graph, class)`, the backend that served it, and its
+    /// breaker admission so the caller can attribute the verdict —
     /// breaker outcome, metrics — even when the result is an error that
-    /// names neither.
+    /// names none of them.
     Done {
         /// Interned graph key of the consumed entry.
         graph: Arc<str>,
         /// Accuracy class the query ran under.
         class: AccuracyClass,
+        /// The backend whose engine served the ticket, if any solve ran.
+        backend: Option<EngineKind>,
+        /// The breaker admission the submission rode in on.
+        admission: BreakerAdmission,
         /// The final verdict of the async request.
         result: Result<PprResponse, ServeError>,
     },
@@ -113,14 +122,14 @@ impl TicketStore {
             if now.duration_since(s.created) < self.ttl {
                 return true;
             }
-            self.breaker.release(&s.graph, s.class);
+            self.breaker.release(&s.graph, s.class, s.admission);
             false
         });
     }
 
-    /// Store a submitted ticket with its admission slot; returns the
-    /// ticket id the client polls with.
-    pub fn insert(&self, ticket: Ticket, guard: AdmitGuard) -> u64 {
+    /// Store a submitted ticket with its admission slot and breaker
+    /// admission; returns the ticket id the client polls with.
+    pub fn insert(&self, ticket: Ticket, guard: AdmitGuard, admission: BreakerAdmission) -> u64 {
         let id = ticket.id();
         let graph = ticket.graph_key().clone();
         let class = ticket.class();
@@ -128,7 +137,7 @@ impl TicketStore {
         self.purge_expired(&mut entries);
         entries.insert(
             id,
-            Stored { ticket, _guard: guard, graph, class, created: Instant::now() },
+            Stored { ticket, _guard: guard, graph, class, admission, created: Instant::now() },
         );
         id
     }
@@ -145,7 +154,14 @@ impl TicketStore {
             None => PollOutcome::Pending,
             Some(result) => {
                 let stored = entries.remove(&id).expect("entry present");
-                PollOutcome::Done { graph: stored.graph, class: stored.class, result }
+                let backend = stored.ticket.served_by();
+                PollOutcome::Done {
+                    graph: stored.graph,
+                    class: stored.class,
+                    backend,
+                    admission: stored.admission,
+                    result,
+                }
             }
         }
     }
@@ -196,19 +212,19 @@ mod tests {
         let store = TicketStore::new(Duration::from_secs(60), test_breaker());
 
         let guard = adm.try_admit("default", AccuracyClass::Static).unwrap();
-        let id = store.insert(server.submit(5, 3), guard);
+        let id = store.insert(server.submit(5, 3), guard, BreakerAdmission::none());
         assert_eq!(store.len(), 1);
         assert_eq!(adm.depth("default", AccuracyClass::Static), 1);
 
         let deadline = Instant::now() + Duration::from_secs(10);
-        let (resp, graph, class) = loop {
+        let (resp, graph, class, backend) = loop {
             match store.poll(id) {
                 PollOutcome::Pending => {
                     assert!(Instant::now() < deadline, "never resolved");
                     std::thread::sleep(Duration::from_millis(2));
                 }
-                PollOutcome::Done { graph, class, result } => {
-                    break (result.expect("query succeeds"), graph, class)
+                PollOutcome::Done { graph, class, backend, result, .. } => {
+                    break (result.expect("query succeeds"), graph, class, backend)
                 }
                 PollOutcome::NotFound => panic!("ticket vanished while pending"),
             }
@@ -219,6 +235,7 @@ mod tests {
         // result, so even error verdicts stay attributable
         assert_eq!(graph.as_ref(), "default");
         assert_eq!(class, AccuracyClass::Static);
+        assert_eq!(backend, Some(EngineKind::Native), "served ticket carries its backend");
         // consumed: the entry and its admission slot are gone
         assert!(matches!(store.poll(id), PollOutcome::NotFound));
         assert!(store.is_empty());
@@ -232,7 +249,7 @@ mod tests {
         let adm = Admission::new(&serve_cfg());
         let store = TicketStore::new(Duration::from_millis(30), test_breaker());
         let guard = adm.try_admit("default", AccuracyClass::Static).unwrap();
-        let id = store.insert(server.submit(1, 2), guard);
+        let id = store.insert(server.submit(1, 2), guard, BreakerAdmission::none());
         std::thread::sleep(Duration::from_millis(50));
         // the TTL purge runs on poll: the entry is gone and its slot free
         assert!(matches!(store.poll(id), PollOutcome::NotFound));
@@ -259,20 +276,27 @@ mod tests {
         }));
         let store = TicketStore::new(Duration::from_millis(40), breaker.clone());
         let g: Arc<str> = Arc::from("default");
+        let native = &[EngineKind::Native];
         for _ in 0..4 {
-            breaker.record(&g, AccuracyClass::Static, true);
+            breaker.record(
+                &g,
+                AccuracyClass::Static,
+                Some(EngineKind::Native),
+                BreakerAdmission::none(),
+                true,
+            );
         }
         std::thread::sleep(Duration::from_millis(210));
         // the single probe slot goes to an async submission…
-        breaker.check(&g, AccuracyClass::Static).expect("probe admitted");
-        assert!(breaker.check(&g, AccuracyClass::Static).is_err(), "budget spent");
+        let admission = breaker.check(&g, AccuracyClass::Static, native).expect("probe admitted");
+        assert!(breaker.check(&g, AccuracyClass::Static, native).is_err(), "budget spent");
         let guard = adm.try_admit("default", AccuracyClass::Static).unwrap();
-        let id = store.insert(server.submit(1, 2), guard);
+        let id = store.insert(server.submit(1, 2), guard, admission);
         // …which its client never polls: the TTL purge must return the slot
         std::thread::sleep(Duration::from_millis(60));
         assert!(matches!(store.poll(id), PollOutcome::NotFound));
         assert!(
-            breaker.check(&g, AccuracyClass::Static).is_ok(),
+            breaker.check(&g, AccuracyClass::Static, native).is_ok(),
             "expired entry must release its probe slot"
         );
         server.shutdown();
